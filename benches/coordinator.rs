@@ -1,0 +1,54 @@
+//! Bench: coordinator throughput/latency — request batching over the
+//! native backend, single worker (the serving-path hot loop).
+//!
+//!     cargo bench --bench coordinator
+
+use ntangent::coordinator::{BatcherConfig, NativeBackend, Service};
+use ntangent::nn::Mlp;
+use ntangent::util::prng::Prng;
+use std::time::Instant;
+
+fn main() {
+    let mut rng = Prng::seeded(31);
+    let mlp = Mlp::uniform(1, 24, 3, 1, &mut rng);
+    println!("# coordinator: n=3 channels, native backend, batch cap 256");
+    println!(
+        "{:>8} {:>10} {:>14} {:>14} {:>12} {:>10}",
+        "clients", "pts/req", "req/s", "points/s", "mean lat µs", "fill"
+    );
+
+    for (clients, pts) in [(1usize, 1usize), (4, 16), (16, 16), (8, 64), (32, 8)] {
+        let backend_mlp = mlp.clone();
+        let service = Service::start(
+            move || Ok(Box::new(NativeBackend::new(backend_mlp, 3, 256)) as _),
+            BatcherConfig::default(),
+        );
+        let handle = service.handle();
+        let reqs_per_client = 200usize;
+        let start = Instant::now();
+        let mut threads = Vec::new();
+        for c in 0..clients {
+            let handle = handle.clone();
+            threads.push(std::thread::spawn(move || {
+                let points: Vec<f64> = (0..pts).map(|i| (c * pts + i) as f64 * 1e-3).collect();
+                for _ in 0..reqs_per_client {
+                    let out = handle.eval(&points).unwrap();
+                    std::hint::black_box(&out);
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        let secs = start.elapsed().as_secs_f64();
+        let m = handle.metrics();
+        println!(
+            "{clients:>8} {pts:>10} {:>14.0} {:>14.0} {:>12.0} {:>10.2}",
+            m.requests as f64 / secs,
+            m.points as f64 / secs,
+            m.mean_latency_us,
+            m.mean_batch_fill
+        );
+        service.shutdown();
+    }
+}

@@ -1,0 +1,59 @@
+//! Bench: micro-kernels of the n-TangentProp hot path — tanh tower,
+//! Faà di Bruno combine, channel matmul — the targets of the §Perf pass.
+//!
+//!     cargo bench --bench ntp_kernels
+
+use ntangent::nn::Mlp;
+use ntangent::ntp::{NtpEngine, SmoothActivation, Tanh};
+use ntangent::tensor::Tensor;
+use ntangent::util::prng::Prng;
+use ntangent::util::stats::Summary;
+use ntangent::util::timer::time_trials;
+
+fn bench(name: &str, trials: usize, mut f: impl FnMut()) {
+    let ts = time_trials(3, trials, || f());
+    let s = Summary::of(&ts);
+    println!(
+        "{name:<44} mean {:>9.1} µs   p95 {:>9.1} µs",
+        s.mean * 1e6,
+        s.p95 * 1e6
+    );
+}
+
+fn main() {
+    let mut rng = Prng::seeded(3);
+    println!("# ntp micro-kernels (batch 256, width 24)");
+
+    let z = Tensor::rand_normal(&[256, 24], 0.0, 1.0, &mut rng);
+    for n in [3usize, 6, 9] {
+        let act = Tanh::new(n);
+        bench(&format!("tanh tower n={n} [256x24]"), 30, || {
+            std::hint::black_box(act.tower(&z, n));
+        });
+    }
+
+    for n in [3usize, 6, 9] {
+        let engine = NtpEngine::new(n);
+        let mlp = Mlp::uniform(1, 24, 3, 1, &mut Prng::seeded(5));
+        let x = Tensor::rand_uniform(&[256, 1], -1.0, 1.0, &mut Prng::seeded(6));
+        bench(&format!("ntp full forward n={n} (3x24, B=256)"), 20, || {
+            std::hint::black_box(engine.forward(&mlp, &x));
+        });
+    }
+
+    // Raw matmul roofline of the substrate.
+    for size in [24usize, 64, 128] {
+        let a = Tensor::rand_normal(&[256, size], 0.0, 1.0, &mut rng);
+        let w = Tensor::rand_normal(&[size, size], 0.0, 1.0, &mut rng);
+        let flops = 2.0 * 256.0 * (size * size) as f64;
+        let ts = time_trials(3, 20, || {
+            std::hint::black_box(a.matmul_nt(&w));
+        });
+        let s = Summary::of(&ts);
+        println!(
+            "matmul_nt [256x{size}]x[{size}x{size}]          mean {:>9.1} µs   {:>7.2} GFLOP/s",
+            s.mean * 1e6,
+            flops / s.mean / 1e9
+        );
+    }
+}

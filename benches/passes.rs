@@ -1,0 +1,45 @@
+//! Bench: forward/backward pass times, autodiff vs n-TangentProp
+//! (the hot-path measurement behind Figs 1-3), hand-rolled harness
+//! (criterion is unavailable offline).
+//!
+//!     cargo bench --bench passes
+
+use ntangent::bench::{standard_mlp, time_pass_avg, Engine};
+use ntangent::util::stats::Summary;
+use ntangent::util::timer::time_trials;
+
+fn main() {
+    let (mlp, x) = standard_mlp(7);
+    println!("# passes: 3x24 tanh net, batch 256 (M = {} params)", mlp.n_params());
+    println!(
+        "{:<16} {:>3} {:>12} {:>12} {:>12} {:>9}",
+        "engine", "n", "fwd (ms)", "bwd (ms)", "total (ms)", "ratio"
+    );
+    for n in [1usize, 2, 3, 4, 5, 6] {
+        let ntp = time_pass_avg(Engine::Ntp, &mlp, &x, n, 1, 5);
+        // Cap autodiff effort at n=6; it is already >100x slower there.
+        let ad = time_pass_avg(Engine::Autodiff, &mlp, &x, n, if n < 5 { 1 } else { 0 }, if n < 5 { 5 } else { 2 });
+        for (name, t) in [("ntangentprop", ntp), ("autodiff", ad)] {
+            println!(
+                "{name:<16} {n:>3} {:>12.3} {:>12.3} {:>12.3} {:>9.2}",
+                t.fwd * 1e3,
+                t.bwd * 1e3,
+                t.total() * 1e3,
+                ad.total() / ntp.total()
+            );
+        }
+    }
+
+    // Stability: repeated ntp-forward timing spread at n=4.
+    let engine = ntangent::ntp::NtpEngine::new(4);
+    let ts = time_trials(3, 15, || {
+        std::hint::black_box(engine.forward(&mlp, &x));
+    });
+    let s = Summary::of(&ts);
+    println!(
+        "\nntp pure forward n=4: mean {:.3} ms  p5 {:.3}  p95 {:.3}  (15 trials)",
+        s.mean * 1e3,
+        s.p5 * 1e3,
+        s.p95 * 1e3
+    );
+}

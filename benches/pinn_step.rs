@@ -1,0 +1,45 @@
+//! Bench: one PINN training step (value+grad) per engine and profile —
+//! the quantity that multiplies into the Fig 6-10 end-to-end times.
+//!
+//!     cargo bench --bench pinn_step
+
+use ntangent::nn::Mlp;
+use ntangent::opt::Objective;
+use ntangent::pinn::{BurgersLossSpec, DerivEngine, PinnObjective};
+use ntangent::util::prng::Prng;
+use ntangent::util::stats::Summary;
+use ntangent::util::timer::time_trials;
+
+fn main() {
+    println!("# pinn training step (3x24 net, 128 residual + 32 origin pts)");
+    println!(
+        "{:<12} {:<10} {:>14} {:>14} {:>12}",
+        "profile", "engine", "value (ms)", "value+grad(ms)", "graph nodes"
+    );
+    for k in [1usize, 2] {
+        for engine in [DerivEngine::Ntp, DerivEngine::Autodiff] {
+            // Autodiff at k=2 needs 5 derivatives — already slow; trim trials.
+            let trials = if engine == DerivEngine::Autodiff && k >= 2 { 3 } else { 10 };
+            let mut rng = Prng::seeded(17);
+            let mlp = Mlp::uniform(1, 24, 3, 1, &mut rng);
+            let spec = BurgersLossSpec::for_profile(k);
+            let mut obj = PinnObjective::build(spec, &mlp, engine, &mut rng);
+            let theta = obj.theta_init(&mlp);
+
+            let tv = time_trials(1, trials, || {
+                std::hint::black_box(obj.value(&theta));
+            });
+            let tg = time_trials(1, trials, || {
+                std::hint::black_box(obj.value_grad(&theta));
+            });
+            println!(
+                "k={k:<10} {:<10} {:>14.2} {:>14.2} {:>12}",
+                format!("{engine:?}"),
+                Summary::of(&tv).mean * 1e3,
+                Summary::of(&tg).mean * 1e3,
+                obj.graph_len()
+            );
+        }
+    }
+    println!("\n(value-only is the L-BFGS line-search cost — the Fig 6 mechanism)");
+}

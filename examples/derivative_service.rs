@@ -1,0 +1,97 @@
+//! The serving path: run the coordinator over the AOT-compiled PJRT
+//! artifact (python never in the loop), hit it over TCP with concurrent
+//! clients, and compare against the native engine.
+//!
+//! Requires `make artifacts`. Falls back to the native backend with a
+//! notice when the bundle is missing.
+//!
+//!     cargo run --release --example derivative_service
+
+use ntangent::coordinator::service::TcpClient;
+use ntangent::coordinator::{BatcherConfig, NativeBackend, PjrtBackend, Service};
+use ntangent::nn::{params, Mlp};
+use ntangent::ntp::NtpEngine;
+use ntangent::runtime::{ArtifactManifest, Runtime};
+use ntangent::tensor::Tensor;
+use ntangent::util::prng::Prng;
+use std::net::TcpListener;
+use std::path::Path;
+
+fn main() {
+    let mut rng = Prng::seeded(2024);
+    let mlp = Mlp::uniform(1, 24, 3, 1, &mut rng);
+    let theta = params::flatten(&mlp);
+    let n = 3;
+
+    let artifacts = Path::new("artifacts");
+    let have_artifacts = ArtifactManifest::load(artifacts).is_ok();
+    let backend_name = if have_artifacts { "pjrt" } else { "native" };
+    println!("starting derivative-evaluation service ({backend_name} backend, n = {n})");
+
+    let mlp_for_backend = mlp.clone();
+    let theta_for_backend = theta.clone();
+    let service = Service::start(
+        move || {
+            if have_artifacts {
+                let manifest = ArtifactManifest::load(Path::new("artifacts"))?;
+                let spec = manifest.get("ntp_fwd_d3")?.clone();
+                let rt = Runtime::cpu()?;
+                let exe = rt.load_hlo_text(&manifest.path_of(&spec))?;
+                println!("  compiled {} on {}", spec.file, rt.platform());
+                Ok(Box::new(PjrtBackend::new(
+                    exe,
+                    theta_for_backend,
+                    spec.batch.unwrap_or(256),
+                    spec.n_derivs.unwrap_or(3),
+                )) as _)
+            } else {
+                println!("  (artifacts missing; using the native Rust engine)");
+                Ok(Box::new(NativeBackend::new(mlp_for_backend, 3, 256)) as _)
+            }
+        },
+        BatcherConfig::default(),
+    );
+
+    // TCP front on an ephemeral port.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    println!("  listening on {addr}");
+    let handle = service.handle();
+    std::thread::spawn(move || ntangent::coordinator::service::serve_tcp(listener, handle));
+
+    // Concurrent TCP clients.
+    let mut threads = Vec::new();
+    for c in 0..8 {
+        let addr = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut client = TcpClient::connect(&addr).unwrap();
+            let pts: Vec<f64> = (0..32).map(|i| -1.0 + (c * 32 + i) as f64 / 128.0).collect();
+            let channels = client.eval(&pts).unwrap();
+            (pts, channels)
+        }));
+    }
+
+    // Verify every response against the native engine.
+    let engine = NtpEngine::new(n);
+    let mut checked = 0usize;
+    for th in threads {
+        let (pts, channels) = th.join().unwrap();
+        let x = Tensor::from_vec(pts.clone(), &[pts.len(), 1]);
+        let native = engine.forward(&mlp, &x);
+        for order in 0..=n {
+            for (a, b) in channels[order].iter().zip(native[order].data()) {
+                assert!(
+                    (a - b).abs() < 1e-7 * b.abs().max(1.0),
+                    "service/native mismatch at order {order}"
+                );
+                checked += 1;
+            }
+        }
+    }
+
+    let mut client = TcpClient::connect(&addr).unwrap();
+    println!("  verified {checked} values against the native engine");
+    println!("  server stats: {}", client.stats().unwrap());
+    service.shutdown();
+    println!("ok");
+}

@@ -1,0 +1,137 @@
+//! Sobolev training (paper eq. (2)): supervising derivatives, not just
+//! values, improves convergence — and n-TangentProp makes high Sobolev
+//! orders affordable (the paper hopes future work trains with m >= 4).
+//!
+//! We fit u(x) = sin(3x)·exp(-x²/2) with plain L2 loss vs Sobolev losses
+//! of increasing order m, all via n-TangentProp channels, and report the
+//! error in u and u' on a held-out grid.
+//!
+//!     cargo run --release --example sobolev_training [epochs]
+
+use ntangent::autodiff::Graph;
+use ntangent::nn::{params, Mlp};
+use ntangent::ntp::NtpEngine;
+use ntangent::opt::{Adam, Objective};
+use ntangent::pinn::grid_points;
+use ntangent::tensor::Tensor;
+use ntangent::util::prng::Prng;
+
+fn target(x: f64, order: usize) -> f64 {
+    // Derivatives of sin(3x)·exp(-x²/2) via a small finite tower (exact
+    // enough for supervision targets; computed by nested closed forms).
+    match order {
+        0 => (3.0 * x).sin() * (-x * x / 2.0).exp(),
+        1 => {
+            let e = (-x * x / 2.0).exp();
+            e * (3.0 * (3.0 * x).cos() - x * (3.0 * x).sin())
+        }
+        2 => {
+            let e = (-x * x / 2.0).exp();
+            let s = (3.0 * x).sin();
+            let c = (3.0 * x).cos();
+            e * ((x * x - 10.0) * s - 6.0 * x * c)
+        }
+        _ => panic!("order > 2 targets not needed here"),
+    }
+}
+
+/// Sobolev-m regression objective over ntp channels.
+struct SobolevFit {
+    graph: Graph,
+    loss: usize,
+    grads: Vec<usize>,
+    template: Mlp,
+}
+
+impl SobolevFit {
+    fn build(mlp: &Mlp, xs: &Tensor, m: usize) -> SobolevFit {
+        let engine = NtpEngine::new(m);
+        let mut g = Graph::new();
+        let pn = mlp.input_param_nodes(&mut g);
+        let xn = g.constant(xs.clone());
+        let channels = engine.forward_graph(&mut g, mlp, xn, &pn, m);
+        let mut loss = None;
+        for (order, &c) in channels.iter().enumerate() {
+            let targets: Vec<f64> = xs.data().iter().map(|&x| target(x, order)).collect();
+            let tn = g.constant(Tensor::from_vec(targets, &[xs.shape()[0], 1]));
+            let d = g.sub(c, tn);
+            let ms = g.mean_square(d);
+            // Down-weight higher orders (they have larger magnitudes).
+            let w = g.scale(ms, 1.0 / (1 + order * order) as f64);
+            loss = Some(match loss {
+                None => w,
+                Some(acc) => g.add(acc, w),
+            });
+        }
+        let loss = loss.unwrap();
+        let grads = g.backward(loss, &pn);
+        SobolevFit {
+            graph: g,
+            loss,
+            grads,
+            template: mlp.clone(),
+        }
+    }
+}
+
+impl Objective for SobolevFit {
+    fn value_grad(&mut self, theta: &Tensor) -> (f64, Tensor) {
+        let inputs = params::split_like(&self.template, theta);
+        let mut targets = self.grads.clone();
+        targets.push(self.loss);
+        let vals = self.graph.eval(&inputs, &targets);
+        let loss = vals.get(self.loss).item();
+        let grads: Vec<Tensor> = self.grads.iter().map(|&id| vals.get(id).clone()).collect();
+        (loss, params::flatten_tensors(&grads))
+    }
+
+    fn dim(&self) -> usize {
+        self.template.n_params()
+    }
+}
+
+fn main() {
+    let epochs: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1500);
+    let xs = grid_points(-2.0, 2.0, 64);
+    let holdout = grid_points(-1.9, 1.9, 97);
+
+    println!("fitting sin(3x)·exp(-x²/2), {epochs} Adam epochs, 2x24 tanh net");
+    println!(
+        "{:>10} {:>14} {:>14} {:>12}",
+        "Sobolev m", "RMS(u)", "RMS(u')", "final loss"
+    );
+    for m in 0..=2usize {
+        let mut rng = Prng::seeded(100);
+        let mlp = Mlp::uniform(1, 24, 2, 1, &mut rng);
+        let mut obj = SobolevFit::build(&mlp, &xs, m);
+        let mut theta = params::flatten(&mlp);
+        let mut adam = Adam::new(theta.numel(), 3e-3);
+        let mut final_loss = 0.0;
+        for _ in 0..epochs {
+            final_loss = adam.step(&mut obj, &mut theta);
+        }
+        // Held-out error in u and u'.
+        let mut fitted = mlp.clone();
+        params::unflatten_into(&mut fitted, &theta);
+        let engine = NtpEngine::new(1);
+        let out = engine.forward(&fitted, &holdout);
+        let mut rms = [0.0f64; 2];
+        for (i, &x) in holdout.data().iter().enumerate() {
+            for order in 0..2 {
+                let d = out[order].data()[i] - target(x, order);
+                rms[order] += d * d;
+            }
+        }
+        let npts = holdout.shape()[0] as f64;
+        println!(
+            "{m:>10} {:>14.4e} {:>14.4e} {final_loss:>12.3e}",
+            (rms[0] / npts).sqrt(),
+            (rms[1] / npts).sqrt()
+        );
+    }
+    println!("\nhigher m supervises derivatives directly: u' error drops sharply");
+    println!("while n-TangentProp keeps the extra channels cheap (quasilinear in m).");
+}

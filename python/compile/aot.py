@@ -1,0 +1,114 @@
+"""AOT lowering: JAX/Pallas model -> HLO text artifacts + manifest.json.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and executes via PJRT.
+
+HLO *text* is the interchange format — NOT ``lowered.compile().serialize()``
+— because jax >= 0.5 emits protos with 64-bit instruction ids that the
+pinned xla_extension 0.5.1 rejects; the text parser reassigns ids.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+SIZES = [1, 24, 24, 24, 1]  # the paper's standard PINN architecture
+BATCH = 256                 # compiled batch of the forward artifacts
+PINN_RES = 256              # residual collocation batch of the vg artifact
+PINN_ORG = 32               # near-origin batch
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_ntp_fwd(n: int, use_pallas: bool = True):
+    m = model.param_count(SIZES)
+    fn = functools.partial(model.ntp_forward, n=n, sizes=SIZES, use_pallas=use_pallas)
+    theta = jax.ShapeDtypeStruct((m,), jnp.float64)
+    x = jax.ShapeDtypeStruct((BATCH, 1), jnp.float64)
+    return jax.jit(fn).lower(theta, x)
+
+
+def lower_autodiff_fwd(n: int):
+    m = model.param_count(SIZES)
+    fn = functools.partial(model.autodiff_forward, n=n, sizes=SIZES)
+    theta = jax.ShapeDtypeStruct((m,), jnp.float64)
+    x = jax.ShapeDtypeStruct((BATCH, 1), jnp.float64)
+    return jax.jit(fn).lower(theta, x)
+
+
+def lower_pinn_vg(k: int):
+    m = model.param_count(SIZES)
+    # use_pallas=False: interpret-mode pallas_call does not support
+    # reverse-mode linearization, so the differentiated (training)
+    # artifact lowers through the pure-jnp layer step. The forward
+    # artifacts keep the Pallas kernel.
+    fn = functools.partial(model.pinn_value_grad, k=k, sizes=SIZES, use_pallas=False)
+    theta = jax.ShapeDtypeStruct((m,), jnp.float64)
+    lam = jax.ShapeDtypeStruct((), jnp.float64)
+    x_res = jax.ShapeDtypeStruct((PINN_RES, 1), jnp.float64)
+    x_org = jax.ShapeDtypeStruct((PINN_ORG, 1), jnp.float64)
+    return jax.jit(fn).lower(theta, lam, x_res, x_org)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick", action="store_true", help="only lower the d3 forward artifact (CI smoke)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    m = model.param_count(SIZES)
+    jobs = [
+        ("ntp_fwd_d3", lambda: lower_ntp_fwd(3), {"n_derivs": 3}),
+    ]
+    if not args.quick:
+        jobs += [
+            ("ntp_fwd_d7", lambda: lower_ntp_fwd(7), {"n_derivs": 7}),
+            ("autodiff_fwd_d3", lambda: lower_autodiff_fwd(3), {"n_derivs": 3}),
+            ("pinn_vg_k1", lambda: lower_pinn_vg(1), {"k": 1}),
+        ]
+
+    manifest = {"artifacts": []}
+    for name, build, extra in jobs:
+        print(f"lowering {name} ...", flush=True)
+        text = to_hlo_text(build())
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "batch": PINN_RES if name.startswith("pinn") else BATCH,
+            "n_params": m,
+            "sizes": SIZES,
+        }
+        entry.update(extra)
+        manifest["artifacts"].append(entry)
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Faà di Bruno / Bell coefficient tables and tanh derivative towers.
+
+Build-time mirror of ``rust/src/ntp/{partitions,bell,activation}.rs`` —
+the Python tests cross-check the two implementations through the lowered
+artifacts, and the Pallas kernel unrolls these tables at trace time.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+
+def partitions(n: int) -> list[list[tuple[int, int]]]:
+    """All integer partitions of ``n`` in multiplicity form.
+
+    Each partition is a list of ``(part_size j, count p_j)`` with ascending
+    ``j`` and ``sum(j * p_j) == n``.
+    """
+    out: list[list[tuple[int, int]]] = []
+
+    def rec(remaining: int, max_part: int, current: list[int]) -> None:
+        if remaining == 0:
+            mult: dict[int, int] = {}
+            for p in current:
+                mult[p] = mult.get(p, 0) + 1
+            out.append(sorted(mult.items()))
+            return
+        for part in range(min(remaining, max_part), 0, -1):
+            current.append(part)
+            rec(remaining - part, part, current)
+            current.pop()
+
+    rec(n, max(n, 1), [])
+    return out
+
+
+def faa_di_bruno_coeff(n: int, parts: list[tuple[int, int]]) -> int:
+    """C_p = n! / prod_j (p_j! * (j!)^p_j)  (exact integer)."""
+    denom = 1
+    for j, c in parts:
+        denom *= math.factorial(c) * math.factorial(j) ** c
+    return math.factorial(n) // denom
+
+
+@lru_cache(maxsize=None)
+def fdb_terms(n: int) -> tuple[tuple[float, int, tuple[tuple[int, int], ...]], ...]:
+    """Terms ``(coeff, outer_order, factors)`` of the order-n FdB sum."""
+    return tuple(
+        (
+            float(faa_di_bruno_coeff(n, parts)),
+            sum(c for _, c in parts),
+            tuple(parts),
+        )
+        for parts in partitions(n)
+    )
+
+
+@lru_cache(maxsize=None)
+def tanh_tower_coeffs(n_max: int) -> tuple[tuple[float, ...], ...]:
+    """Coefficients of P_k with tanh^{(k)}(x) = P_k(tanh x), k = 0..n_max.
+
+    P_0 = t;  P_{k+1} = P_k'(t) * (1 - t^2).
+    """
+    coeffs: list[list[float]] = [[0.0, 1.0]]
+    for _ in range(n_max):
+        pk = coeffs[-1]
+        dp = [pk[m] * m for m in range(1, len(pk))]
+        nxt = [0.0] * (len(dp) + 2)
+        for m, c in enumerate(dp):
+            nxt[m] += c
+            nxt[m + 2] -= c
+        coeffs.append(nxt)
+    return tuple(tuple(c) for c in coeffs)
+
+
+def bell_number(n: int) -> int:
+    """Bell numbers via the Bell triangle (sanity invariant for C_p)."""
+    row = [1]
+    for _ in range(n):
+        nxt = [row[-1]]
+        for v in row:
+            nxt.append(nxt[-1] + v)
+        row = nxt
+    return row[0]

@@ -1,0 +1,108 @@
+"""L1: the n-TangentProp layer as a Pallas kernel.
+
+The per-layer hot spot of the algorithm: the tanh derivative tower, the
+Faà di Bruno channel combine (eq. 5b) and the layer matmul (eq. 5a), fused
+into one kernel invocation per batch tile.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the whole channel block
+``[n+1, Bt, F_in]`` lives in VMEM; the tower + combine are straight-line
+VPU code (the partition structure is *static* — tables unroll at trace
+time, no gathers); the channel matmul batches into a single
+``[(n+1)·Bt, F_in] × [F_in, F_out]`` MXU contraction.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is estimated in DESIGN.md from the
+VMEM footprint and MXU utilization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import fdb
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _kernel(y_ref, w_ref, b_ref, o_ref, *, n: int):
+    """One batch tile: channels [n+1, Bt, Fin] -> [n+1, Bt, Fout]."""
+    y = y_ref[...]  # [n+1, Bt, Fin], resident in VMEM
+    w = w_ref[...]  # [Fout, Fin]
+    b = b_ref[...]  # [Fout]
+
+    # --- tanh derivative tower, shared powers of t (VPU) ---------------
+    coeffs = fdb.tanh_tower_coeffs(n)
+    t = jnp.tanh(y[0])
+    towers = []
+    for k in range(n + 1):
+        c = coeffs[k]
+        acc = jnp.full_like(t, c[-1])
+        for m in range(len(c) - 2, -1, -1):
+            acc = acc * t + c[m]
+        towers.append(acc)
+
+    # --- Faà di Bruno combine, statically unrolled (VPU) ---------------
+    xi = [towers[0]]
+    for i in range(1, n + 1):
+        z = jnp.zeros_like(t)
+        for coeff, outer, factors in fdb.fdb_terms(i):
+            prod = coeff * towers[outer]
+            for j, c in factors:
+                prod = prod * y[j] ** c
+            z = z + prod
+        xi.append(z)
+    stacked = jnp.stack(xi)  # [n+1, Bt, Fin]
+
+    # --- layer matmul for all channels at once (MXU) -------------------
+    flat = stacked.reshape(-1, stacked.shape[-1])  # [(n+1)*Bt, Fin]
+    out = jnp.dot(flat, w.T).reshape(n + 1, y.shape[1], w.shape[0])
+    out = out.at[0].add(b)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch",))
+def _noop(x, block_batch=0):  # pragma: no cover - placeholder for jit cache
+    return x
+
+
+def ntp_layer(
+    y: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *, block_batch: int | None = None
+) -> jnp.ndarray:
+    """Pallas-accelerated n-TangentProp layer step.
+
+    y: [n+1, B, F_in] channels; w: [F_out, F_in]; b: [F_out].
+    Returns [n+1, B, F_out]. The batch axis is tiled with BlockSpec.
+    """
+    n = y.shape[0] - 1
+    batch = y.shape[1]
+    f_in = y.shape[2]
+    f_out = w.shape[0]
+    bt = block_batch or min(batch, 128)
+    assert batch % bt == 0, f"batch {batch} not divisible by tile {bt}"
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n),
+        grid=(batch // bt,),
+        in_specs=[
+            pl.BlockSpec((n + 1, bt, f_in), lambda i: (0, i, 0)),
+            pl.BlockSpec((f_out, f_in), lambda i: (0, 0)),
+            pl.BlockSpec((f_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n + 1, bt, f_out), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + 1, batch, f_out), y.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(y, w, b)
+
+
+def vmem_footprint_bytes(n: int, bt: int, f_in: int, f_out: int, dtype_bytes: int = 8) -> int:
+    """Estimated VMEM residency of one kernel invocation — used by the
+    DESIGN.md roofline discussion (must stay well under ~16 MB/core)."""
+    channels_in = (n + 1) * bt * f_in
+    channels_out = (n + 1) * bt * f_out
+    towers = (n + 1) * bt * f_in
+    weights = f_out * f_in + f_out
+    return dtype_bytes * (channels_in + channels_out + towers + weights)

@@ -1,0 +1,105 @@
+"""Pure-jnp oracle for the n-TangentProp layer and full forward pass.
+
+This is the correctness reference the Pallas kernel is tested against
+(L1 vs ref), and itself is validated against nested-``jax.grad``
+autodifferentiation (the exactness property of the paper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import fdb
+
+jax.config.update("jax_enable_x64", True)
+
+
+def tanh_towers(y0: jnp.ndarray, n: int) -> list[jnp.ndarray]:
+    """[sigma^(s)(y0) for s in 0..n] via the polynomial tower in t=tanh."""
+    coeffs = fdb.tanh_tower_coeffs(n)
+    t = jnp.tanh(y0)
+    towers = []
+    for k in range(n + 1):
+        c = coeffs[k]
+        acc = jnp.zeros_like(t) + c[-1]
+        for m in range(len(c) - 2, -1, -1):
+            acc = acc * t + c[m]
+        towers.append(acc)
+    return towers
+
+
+def fdb_combine(towers: list[jnp.ndarray], y: list[jnp.ndarray], i: int) -> jnp.ndarray:
+    """xi_i = sum_p C_p sigma^(|p|)(y0) prod_j y_j^{p_j}   (eq. 5b)."""
+    z = jnp.zeros_like(y[0])
+    for coeff, outer, factors in fdb.fdb_terms(i):
+        prod = coeff * towers[outer]
+        for j, c in factors:
+            prod = prod * y[j] ** c
+        z = z + prod
+    return z
+
+
+def ntp_layer_ref(y: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """One hidden-layer step of n-TangentProp.
+
+    ``y``: [n+1, B, F_in] channels of the previous layer's pre-activation;
+    returns [n+1, B, F_out] channels of this layer's pre-activation.
+    """
+    n = y.shape[0] - 1
+    chans = [y[i] for i in range(n + 1)]
+    towers = tanh_towers(chans[0], n)
+    xi = [towers[0]] + [fdb_combine(towers, chans, i) for i in range(1, n + 1)]
+    out = [xi[0] @ w.T + b] + [x @ w.T for x in xi[1:]]
+    return jnp.stack(out)
+
+
+def seed_channels(x: jnp.ndarray, w0: jnp.ndarray, b0: jnp.ndarray, n: int) -> jnp.ndarray:
+    """First affine layer: y0 = xW^T+b, y1 = 1·W^T, y_i = 0 (i >= 2)."""
+    batch = x.shape[0]
+    y0 = x @ w0.T + b0
+    chans = [y0]
+    if n >= 1:
+        chans.append(jnp.ones((batch, 1), dtype=x.dtype) @ w0.T)
+    for _ in range(2, n + 1):
+        chans.append(jnp.zeros_like(y0))
+    return jnp.stack(chans)
+
+
+def ntp_forward_ref(
+    params: list[tuple[jnp.ndarray, jnp.ndarray]], x: jnp.ndarray, n: int
+) -> jnp.ndarray:
+    """Full n-TangentProp forward: returns [n+1, B] (output dim squeezed)."""
+    w0, b0 = params[0]
+    y = seed_channels(x, w0, b0, n)
+    for w, b in params[1:]:
+        y = ntp_layer_ref(y, w, b)
+    return y[:, :, 0]
+
+
+def mlp_forward(params: list[tuple[jnp.ndarray, jnp.ndarray]], x: jnp.ndarray) -> jnp.ndarray:
+    """Plain tanh MLP forward (linear head), x: [B,1] -> [B,1]."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = h @ w.T + b
+        if i != len(params) - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+def autodiff_stack(
+    params: list[tuple[jnp.ndarray, jnp.ndarray]], x: jnp.ndarray, n: int
+) -> jnp.ndarray:
+    """Baseline: [u, u', ..., u^(n)] via repeated reverse-mode autodiff
+    (the exponential path the paper measures against)."""
+
+    def u_sum(xx):
+        return mlp_forward(params, xx).sum()
+
+    stacks = [mlp_forward(params, x)[:, 0]]
+    fn = u_sum
+    for _ in range(n):
+        g = jax.grad(fn)
+        stacks.append(g(x)[:, 0])
+        fn = (lambda gg: lambda xx: gg(xx).sum())(g)
+    return jnp.stack(stacks)

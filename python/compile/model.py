@@ -1,0 +1,170 @@
+"""L2: the JAX model — n-TangentProp forward (calling the L1 Pallas
+kernel), the repeated-autodiff baseline, and the Burgers PINN value+grad
+used for training from Rust.
+
+Everything here is *build-time only*: ``aot.py`` lowers these functions to
+HLO text once; the Rust runtime executes the artifacts thereafter.
+
+Parameter layout matches ``rust/src/nn/params.rs`` exactly:
+flat theta = concat(W0.ravel(), b0, W1.ravel(), b1, ...) with W: [out, in]
+row-major, so a vector trained in Rust is directly loadable here.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.ntp_layer import ntp_layer
+
+jax.config.update("jax_enable_x64", True)
+
+
+# --------------------------------------------------------------- params
+
+def param_count(sizes: list[int]) -> int:
+    return sum(o * i + o for i, o in zip(sizes[:-1], sizes[1:]))
+
+
+def unflatten(theta: jnp.ndarray, sizes: list[int]) -> list[tuple[jnp.ndarray, jnp.ndarray]]:
+    """Split a flat theta into [(W, b), ...] (Rust slot order)."""
+    params = []
+    off = 0
+    for fan_in, fan_out in zip(sizes[:-1], sizes[1:]):
+        w = theta[off : off + fan_out * fan_in].reshape(fan_out, fan_in)
+        off += fan_out * fan_in
+        b = theta[off : off + fan_out]
+        off += fan_out
+        params.append((w, b))
+    return params
+
+
+# --------------------------------------------------------------- models
+
+def ntp_forward(
+    theta: jnp.ndarray, x: jnp.ndarray, *, n: int, sizes: list[int], use_pallas: bool = True
+) -> jnp.ndarray:
+    """n-TangentProp forward: [u, u', ..., u^(n)] stacked as [n+1, B].
+
+    ``use_pallas`` switches the per-layer step between the L1 kernel and
+    the pure-jnp reference (both lower into the same HLO artifact shape).
+    """
+    params = unflatten(theta, sizes)
+    w0, b0 = params[0]
+    y = ref.seed_channels(x, w0, b0, n)
+    step = ntp_layer if use_pallas else ref.ntp_layer_ref
+    for w, b in params[1:]:
+        y = step(y, w, b)
+    return y[:, :, 0]
+
+
+def autodiff_forward(
+    theta: jnp.ndarray, x: jnp.ndarray, *, n: int, sizes: list[int]
+) -> jnp.ndarray:
+    """Baseline artifact: repeated reverse-mode autodiff stack [n+1, B]."""
+    params = unflatten(theta, sizes)
+    return ref.autodiff_stack(params, x, n)
+
+
+# ------------------------------------------------------- Burgers PINN
+
+def _binom(j: int, i: int) -> float:
+    return float(math.comb(j, i))
+
+
+def residual_derivatives(
+    u: jnp.ndarray, x: jnp.ndarray, lam: jnp.ndarray, j_max: int
+) -> list[jnp.ndarray]:
+    """Leibniz expansion of ∂_x^j R for the profile ODE
+    R = -λU + ((1+λ)x + U) U', given channels u: [n+1, B]."""
+    out = []
+    xb = x[:, 0]
+    for j in range(j_max + 1):
+        t1 = -lam * u[j]
+        inner = xb * u[j + 1] + (j * u[j] if j > 0 else 0.0)
+        t2 = (1.0 + lam) * inner
+        t3 = sum(_binom(j, i) * u[i] * u[j + 1 - i] for i in range(j + 1))
+        out.append(t1 + t2 + t3)
+    return out
+
+
+def burgers_true_u(x: float, k: int, c: float = 1.0) -> float:
+    """Ground truth via Newton on X = -U - C·U^(2k+1) (python float math,
+    used only to bake anchor targets into the artifact at trace time)."""
+    if x == 0.0:
+        return 0.0
+    deg = 2 * k + 1
+    u = -x / (1.0 + c)
+    lo, hi = (-(abs(x) + 1.0), abs(x) + 1.0)
+    for _ in range(200):
+        f = -u - c * u**deg - x
+        if abs(f) < 1e-15 * (1.0 + abs(x)):
+            break
+        df = -1.0 - c * deg * u ** (deg - 1)
+        nxt = u - f / df
+        u = nxt if lo < nxt < hi else 0.5 * (lo + hi)
+        # maintain bracket (X(U) decreasing)
+        if -u - c * u**deg - x > 0.0:
+            lo = u
+        else:
+            hi = u
+    return u
+
+
+def burgers_true_du(x: float, k: int, c: float = 1.0) -> float:
+    u = burgers_true_u(x, k, c)
+    deg = 2 * k + 1
+    return -1.0 / (1.0 + c * deg * u ** (deg - 1))
+
+
+def pinn_loss(
+    theta: jnp.ndarray,
+    lam_raw: jnp.ndarray,
+    x_res: jnp.ndarray,
+    x_org: jnp.ndarray,
+    *,
+    k: int,
+    sizes: list[int],
+    x_max: float = 2.0,
+    m_sobolev: int = 1,
+    q_weights: tuple[float, ...] = (1.0, 0.1),
+    w_high: float = 0.05,
+    w_bc: float = 10.0,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """The Burgers profile loss (same structure as rust/src/pinn/loss.rs)."""
+    n = 2 * k + 1
+    lo, hi = 1.0 / (2 * k + 1), 1.0 / (2 * k - 1)
+    lam = lo + (hi - lo) * jax.nn.sigmoid(lam_raw)
+
+    # Sobolev residual terms over the domain cloud.
+    u_res = ntp_forward(theta, x_res, n=m_sobolev + 1, sizes=sizes, use_pallas=use_pallas)
+    r = residual_derivatives(u_res, x_res, lam, m_sobolev)
+    loss = sum(q * jnp.mean(rj**2) for q, rj in zip(q_weights, r))
+
+    # High-order smoothness near the origin (L*).
+    k2 = 2 * k
+    u_org = ntp_forward(theta, x_org, n=n, sizes=sizes, use_pallas=use_pallas)
+    r_org = residual_derivatives(u_org, x_org, lam, k2)
+    fact = float(math.factorial(k2 + 1))
+    loss = loss + w_high / (fact * fact) * jnp.mean(r_org[k2] ** 2)
+
+    # Anchors at {0, ±x_max} on u and u' (targets baked at trace time).
+    bc_x = [0.0, -x_max, x_max]
+    bc_u = jnp.array([burgers_true_u(x, k) for x in bc_x])
+    bc_du = jnp.array([burgers_true_du(x, k) for x in bc_x])
+    u_bc = ntp_forward(theta, jnp.array(bc_x).reshape(-1, 1), n=1, sizes=sizes, use_pallas=use_pallas)
+    bc_term = jnp.mean((u_bc[0] - bc_u) ** 2) + jnp.mean((u_bc[1] - bc_du) ** 2)
+    return loss + w_bc * bc_term
+
+
+def pinn_value_grad(theta, lam_raw, x_res, x_org, *, k: int, sizes: list[int], **kw):
+    """(loss, dloss/dtheta, dloss/dlam_raw) — the training-step artifact."""
+    loss, (g_theta, g_lam) = jax.value_and_grad(
+        lambda th, lr: pinn_loss(th, lr, x_res, x_org, k=k, sizes=sizes, **kw),
+        argnums=(0, 1),
+    )(theta, lam_raw)
+    return loss, g_theta, g_lam

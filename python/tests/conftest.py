@@ -1,0 +1,9 @@
+import os
+import sys
+
+import jax
+
+# The compile package is imported as `compile.*` relative to python/.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+jax.config.update("jax_enable_x64", True)

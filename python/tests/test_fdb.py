@@ -1,0 +1,72 @@
+"""Tables: partitions, Faà di Bruno coefficients, tanh towers."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import fdb
+
+# OEIS A000041
+PARTITION_COUNTS = [1, 1, 2, 3, 5, 7, 11, 15, 22, 30, 42, 56, 77]
+# OEIS A000110
+BELL = [1, 1, 2, 5, 15, 52, 203, 877, 4140]
+
+
+@pytest.mark.parametrize("n", range(13))
+def test_partition_counts(n):
+    assert len(fdb.partitions(n)) == PARTITION_COUNTS[n]
+
+
+@given(st.integers(min_value=1, max_value=12))
+def test_partitions_weights(n):
+    for parts in fdb.partitions(n):
+        assert sum(j * c for j, c in parts) == n
+        assert all(c >= 1 for _, c in parts)
+        js = [j for j, _ in parts]
+        assert js == sorted(js)
+
+
+@pytest.mark.parametrize("n", range(1, 9))
+def test_coefficients_sum_to_bell(n):
+    total = sum(c for c, _, _ in fdb.fdb_terms(n))
+    assert total == BELL[n]
+
+
+def test_order3_textbook_terms():
+    # (f∘g)''' = f'''(g')^3 + 3 f'' g' g'' + f' g'''
+    terms = {outer: coeff for coeff, outer, _ in fdb.fdb_terms(3)}
+    assert terms == {3: 1.0, 2: 3.0, 1: 1.0}
+
+
+def test_tanh_tower_low_orders():
+    c = fdb.tanh_tower_coeffs(3)
+    assert list(c[0]) == [0.0, 1.0]
+    assert list(c[1]) == [1.0, 0.0, -1.0]
+    assert list(c[2]) == [0.0, -2.0, 0.0, 2.0]
+    assert list(c[3]) == [-2.0, 0.0, 8.0, 0.0, -6.0]
+
+
+@given(st.floats(min_value=-2.0, max_value=2.0), st.integers(min_value=1, max_value=5))
+@settings(max_examples=40)
+def test_tanh_tower_matches_finite_difference(x, k):
+    coeffs = fdb.tanh_tower_coeffs(k)
+
+    def eval_poly(kk, t):
+        acc = 0.0
+        for c in reversed(coeffs[kk]):
+            acc = acc * t + c
+        return acc
+
+    eps = 1e-6
+    up = eval_poly(k - 1, math.tanh(x + eps))
+    dn = eval_poly(k - 1, math.tanh(x - eps))
+    fd = (up - dn) / (2 * eps)
+    got = eval_poly(k, math.tanh(x))
+    assert abs(got - fd) < 2e-4 * max(1.0, abs(got))
+
+
+def test_bell_numbers():
+    for n, b in enumerate(BELL):
+        assert fdb.bell_number(n) == b

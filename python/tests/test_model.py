@@ -1,0 +1,133 @@
+"""L2 correctness: flat-theta plumbing, the model functions and the
+Burgers PINN loss/gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def flat_theta(key, sizes):
+    m = model.param_count(sizes)
+    return jax.random.normal(key, (m,), jnp.float64) * 0.3
+
+
+def test_param_count_standard_pinn():
+    assert model.param_count([1, 24, 24, 24, 1]) == 1273
+
+
+@given(
+    width=st.integers(min_value=1, max_value=12),
+    depth=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_unflatten_layout(width, depth, seed):
+    """Flat layout must match rust/src/nn/params.rs: W row-major, then b."""
+    sizes = [1] + [width] * depth + [1]
+    theta = flat_theta(jax.random.PRNGKey(seed), sizes)
+    params = model.unflatten(theta, sizes)
+    # Reassemble manually and compare.
+    back = jnp.concatenate([jnp.concatenate([w.ravel(), b]) for w, b in params])
+    np.testing.assert_array_equal(back, theta)
+    assert params[0][0].shape == (width, 1)
+    assert params[-1][0].shape == (1, width)
+
+
+def test_ntp_forward_matches_autodiff_forward():
+    sizes = [1, 12, 12, 1]
+    theta = flat_theta(jax.random.PRNGKey(3), sizes)
+    x = jnp.linspace(-1.0, 1.0, 16).reshape(-1, 1)
+    for n in (1, 3, 5):
+        a = model.ntp_forward(theta, x, n=n, sizes=sizes, use_pallas=False)
+        b = model.autodiff_forward(theta, x, n=n, sizes=sizes)
+        np.testing.assert_allclose(a, b, rtol=1e-8, atol=1e-9)
+
+
+def test_pallas_and_ref_paths_agree():
+    sizes = [1, 8, 8, 1]
+    theta = flat_theta(jax.random.PRNGKey(5), sizes)
+    x = jnp.linspace(-1.0, 1.0, 8).reshape(-1, 1)
+    a = model.ntp_forward(theta, x, n=4, sizes=sizes, use_pallas=True)
+    b = model.ntp_forward(theta, x, n=4, sizes=sizes, use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=1e-11, atol=1e-11)
+
+
+def test_burgers_true_solution_properties():
+    for k in (1, 2, 3):
+        deg = 2 * k + 1
+        for x in (-2.0, -0.5, 0.3, 1.7):
+            u = model.burgers_true_u(x, k)
+            assert abs(-u - u**deg - x) < 1e-9 * (1 + abs(x))
+        assert model.burgers_true_u(0.0, k) == 0.0
+        assert abs(model.burgers_true_du(0.0, k) + 1.0) < 1e-12
+
+
+def test_residual_derivatives_leibniz_vs_autodiff():
+    """Leibniz expansion == jax.grad of the residual wrt x."""
+    sizes = [1, 8, 1]
+    theta = flat_theta(jax.random.PRNGKey(11), sizes)
+    lam = jnp.float64(0.4)
+    xs = jnp.array([-0.7, 0.2, 1.1]).reshape(-1, 1)
+    params = model.unflatten(theta, sizes)
+
+    def r_scalar(x):
+        def u_fn(xx):
+            return ref.mlp_forward(params, xx.reshape(1, 1))[0, 0]
+
+        u = u_fn(x)
+        du = jax.grad(u_fn)(x)
+        return -lam * u + ((1 + lam) * x + u) * du
+
+    u = model.ntp_forward(theta, xs, n=3, sizes=sizes, use_pallas=False)
+    got = model.residual_derivatives(u, xs, lam, 2)
+
+    for j in range(3):
+        fn = r_scalar
+        for _ in range(j):
+            fn = jax.grad(fn)
+        expect = jnp.array([fn(x) for x in xs[:, 0]])
+        np.testing.assert_allclose(got[j], expect, rtol=1e-8, atol=1e-9)
+
+
+def test_pinn_value_grad_matches_fd():
+    sizes = [1, 6, 1]
+    theta = flat_theta(jax.random.PRNGKey(13), sizes)
+    lam_raw = jnp.float64(0.1)
+    x_res = jnp.linspace(-1.5, 1.5, 16).reshape(-1, 1)
+    x_org = jnp.linspace(-0.1, 0.1, 8).reshape(-1, 1)
+
+    loss, g_theta, g_lam = model.pinn_value_grad(
+        theta, lam_raw, x_res, x_org, k=1, sizes=sizes, use_pallas=False
+    )
+    assert jnp.isfinite(loss) and loss > 0
+
+    def loss_of(th, lr):
+        return model.pinn_loss(th, lr, x_res, x_org, k=1, sizes=sizes, use_pallas=False)
+
+    eps = 1e-6
+    # λ_raw finite difference.
+    fd_lam = (loss_of(theta, lam_raw + eps) - loss_of(theta, lam_raw - eps)) / (2 * eps)
+    np.testing.assert_allclose(g_lam, fd_lam, rtol=1e-5, atol=1e-8)
+    # Spot-check two theta coordinates.
+    for i in (0, 7):
+        e = jnp.zeros_like(theta).at[i].set(eps)
+        fd = (loss_of(theta + e, lam_raw) - loss_of(theta - e, lam_raw)) / (2 * eps)
+        np.testing.assert_allclose(g_theta[i], fd, rtol=1e-4, atol=1e-7)
+
+
+def test_lambda_reparam_stays_in_bracket():
+    sizes = [1, 4, 1]
+    theta = flat_theta(jax.random.PRNGKey(17), sizes)
+    x_res = jnp.zeros((4, 1))
+    x_org = jnp.zeros((4, 1))
+    # Extreme raw values must not blow up the loss (λ clamped by sigmoid).
+    for lr in (-100.0, 0.0, 100.0):
+        loss = model.pinn_loss(
+            theta, jnp.float64(lr), x_res, x_org, k=2, sizes=sizes, use_pallas=False
+        )
+        assert jnp.isfinite(loss)

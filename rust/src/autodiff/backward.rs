@@ -1,0 +1,360 @@
+//! Create-graph reverse-mode differentiation.
+//!
+//! `Graph::backward` appends the gradient computation of a (scalar) output
+//! with respect to chosen nodes *as new graph nodes*, so gradients are
+//! themselves differentiable — the mechanism PyTorch exposes as
+//! `create_graph=True` and the reason repeated differentiation grows the
+//! graph (and runtime) exponentially in the derivative order.
+
+use super::{Graph, NodeId, Op};
+
+impl Graph {
+    /// Differentiate `y` with respect to each node in `wrt`, appending the
+    /// gradient computation to the graph. `y` must be scalar-shaped `[1]`.
+    ///
+    /// Returns one gradient node per `wrt` entry (a zero constant when `y`
+    /// does not depend on it). The graph can be differentiated again by
+    /// calling `backward` on (functions of) the returned nodes.
+    pub fn backward(&mut self, y: NodeId, wrt: &[NodeId]) -> Vec<NodeId> {
+        assert_eq!(self.shape(y), &[1], "backward expects scalar output [1]");
+
+        // Mark the subgraph that reaches y (only those need adjoints).
+        let mut reachable = vec![false; self.len()];
+        let mut stack = vec![y];
+        while let Some(id) = stack.pop() {
+            if reachable[id] {
+                continue;
+            }
+            reachable[id] = true;
+            for op in self.operands(id) {
+                stack.push(op);
+            }
+        }
+
+        let mut adjoint: Vec<Option<NodeId>> = vec![None; self.len()];
+        let seed = self.constant(crate::tensor::Tensor::ones(&[1]));
+        adjoint[y] = Some(seed);
+
+        // Reverse topological sweep. New nodes appended during the sweep
+        // have ids >= original length and are never revisited (they belong
+        // to the *gradient* computation, differentiated on a later call).
+        let upper = y + 1;
+        for id in (0..upper).rev() {
+            if !reachable[id] {
+                continue;
+            }
+            let Some(g) = adjoint[id] else { continue };
+            self.propagate(id, g, &mut adjoint);
+        }
+
+        wrt.iter()
+            .map(|&w| adjoint[w].unwrap_or_else(|| self.zeros_like(w)))
+            .collect()
+    }
+
+    /// Accumulate `delta` into `adjoint[target]`.
+    fn accumulate(&mut self, adjoint: &mut [Option<NodeId>], target: NodeId, delta: NodeId) {
+        adjoint[target] = Some(match adjoint[target] {
+            None => delta,
+            Some(existing) => self.add(existing, delta),
+        });
+    }
+
+    /// Push the adjoint `g` of node `id` to its operands.
+    fn propagate(&mut self, id: NodeId, g: NodeId, adjoint: &mut Vec<Option<NodeId>>) {
+        // Clone the op descriptor to appease the borrow checker; it's tiny.
+        let op = self.node(id).op.clone();
+        match op {
+            Op::Input(_) | Op::Const(_) => {}
+            Op::Add(a, b) => {
+                self.accumulate(adjoint, a, g);
+                self.accumulate(adjoint, b, g);
+            }
+            Op::Sub(a, b) => {
+                self.accumulate(adjoint, a, g);
+                let ng = self.neg(g);
+                self.accumulate(adjoint, b, ng);
+            }
+            Op::Mul(a, b) => {
+                let ga = self.mul(g, b);
+                self.accumulate(adjoint, a, ga);
+                let gb = self.mul(g, a);
+                self.accumulate(adjoint, b, gb);
+            }
+            Op::Div(a, b) => {
+                // d(a/b)/da = 1/b ; d(a/b)/db = -a/b^2
+                let ga = self.div(g, b);
+                self.accumulate(adjoint, a, ga);
+                let bb = self.mul(b, b);
+                let gnum = self.mul(g, a);
+                let frac = self.div(gnum, bb);
+                let gb = self.neg(frac);
+                self.accumulate(adjoint, b, gb);
+            }
+            Op::Neg(a) => {
+                let ga = self.neg(g);
+                self.accumulate(adjoint, a, ga);
+            }
+            Op::Scale(a, c) => {
+                let ga = self.scale(g, c);
+                self.accumulate(adjoint, a, ga);
+            }
+            Op::AddScalar(a, _) => {
+                self.accumulate(adjoint, a, g);
+            }
+            Op::MatMul(a, b) => {
+                // y = A B : gA = g B^T, gB = A^T g
+                let ga = self.matmul_nt(g, b);
+                self.accumulate(adjoint, a, ga);
+                let gb = self.matmul_tn(a, g);
+                self.accumulate(adjoint, b, gb);
+            }
+            Op::MatMulTN(a, b) => {
+                // y = A^T B : gA = B g^T = matmul_nt(B, g), gB = A g
+                let ga = self.matmul_nt(b, g);
+                self.accumulate(adjoint, a, ga);
+                let gb = self.matmul(a, g);
+                self.accumulate(adjoint, b, gb);
+            }
+            Op::MatMulNT(a, b) => {
+                // y = A B^T : gA = g B, gB = g^T A = matmul_tn(g, A)
+                let ga = self.matmul(g, b);
+                self.accumulate(adjoint, a, ga);
+                let gb = self.matmul_tn(g, a);
+                self.accumulate(adjoint, b, gb);
+            }
+            Op::Transpose(a) => {
+                let ga = self.transpose(g);
+                self.accumulate(adjoint, a, ga);
+            }
+            Op::Tanh(a) => {
+                // d tanh / da = 1 - tanh^2, expressed through the output
+                // node `id` itself so the derivative stays differentiable.
+                let sq = self.mul(id, id);
+                let neg_sq = self.neg(sq);
+                let sech2 = self.add_scalar(neg_sq, 1.0);
+                let ga = self.mul(g, sech2);
+                self.accumulate(adjoint, a, ga);
+            }
+            Op::PowI(a, k) => {
+                // d a^k / da = k a^{k-1}
+                let pow = self.powi(a, k - 1);
+                let scaled = self.scale(pow, k as f64);
+                let ga = self.mul(g, scaled);
+                self.accumulate(adjoint, a, ga);
+            }
+            Op::AddBias(x, bias) => {
+                self.accumulate(adjoint, x, g);
+                let gb = self.sum_axis0(g);
+                self.accumulate(adjoint, bias, gb);
+            }
+            Op::SumAll(a) => {
+                let shape = self.shape(a).to_vec();
+                let ga = self.broadcast_scalar(g, &shape);
+                self.accumulate(adjoint, a, ga);
+            }
+            Op::SumAxis0(a) => {
+                let b = self.shape(a)[0];
+                let ga = self.broadcast_rows(g, b);
+                self.accumulate(adjoint, a, ga);
+            }
+            Op::BroadcastRows(a, _) => {
+                let ga = self.sum_axis0(g);
+                self.accumulate(adjoint, a, ga);
+            }
+            Op::BroadcastScalar(a, _) => {
+                let ga = self.sum_all(g);
+                self.accumulate(adjoint, a, ga);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::prng::Prng;
+    use crate::util::{allclose_slice, ptest};
+
+    /// Central finite-difference gradient of a scalar graph output wrt one
+    /// input slot.
+    fn fd_grad(
+        g: &Graph,
+        y: NodeId,
+        inputs: &[Tensor],
+        slot: usize,
+        eps: f64,
+    ) -> Vec<f64> {
+        let mut grad = vec![0.0; inputs[slot].numel()];
+        for i in 0..grad.len() {
+            let mut plus = inputs.to_vec();
+            plus[slot].data_mut()[i] += eps;
+            let mut minus = inputs.to_vec();
+            minus[slot].data_mut()[i] -= eps;
+            let fp = g.eval(&plus, &[y]).get(y).item();
+            let fm = g.eval(&minus, &[y]).get(y).item();
+            grad[i] = (fp - fm) / (2.0 * eps);
+        }
+        grad
+    }
+
+    #[test]
+    fn grad_of_square_sum() {
+        // y = sum(x*x) => dy/dx = 2x
+        let mut g = Graph::new();
+        let x = g.input(&[3]);
+        let sq = g.mul(x, x);
+        let y = g.sum_all(sq);
+        let grads = g.backward(y, &[x]);
+        let xv = Tensor::from_vec(vec![1.0, -2.0, 0.5], &[3]);
+        let vals = g.eval(&[xv], &[grads[0]]);
+        assert_eq!(vals.get(grads[0]).data(), &[2.0, -4.0, 1.0]);
+    }
+
+    #[test]
+    fn grad_zero_when_disconnected() {
+        let mut g = Graph::new();
+        let x = g.input(&[2]);
+        let z = g.input(&[2]);
+        let y = g.sum_all(x);
+        let grads = g.backward(y, &[z]);
+        let vals = g.eval(&[Tensor::ones(&[2]), Tensor::ones(&[2])], &[grads[0]]);
+        assert_eq!(vals.get(grads[0]).data(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn all_ops_match_finite_differences() {
+        ptest::check(
+            ptest::Config { cases: 24, seed: 0xBEEF },
+            |rng: &mut Prng| {
+                let b = 1 + rng.below(3) as usize;
+                let f = 1 + rng.below(3) as usize;
+                let x = Tensor::rand_normal(&[b, f], 0.0, 0.8, rng);
+                let w = Tensor::rand_normal(&[f, f], 0.0, 0.8, rng);
+                let bias = Tensor::rand_normal(&[f], 0.0, 0.5, rng);
+                (x, w, bias)
+            },
+            |(x, w, bias)| {
+                // A scalar function that exercises most ops.
+                let mut g = Graph::new();
+                let xn = g.input(x.shape());
+                let wn = g.input(w.shape());
+                let bn = g.input(bias.shape());
+                let h = g.matmul(xn, wn);
+                let hb = g.add_bias(h, bn);
+                let t = g.tanh(hb);
+                let p = g.powi(t, 3);
+                let tr = g.transpose(p);
+                let tt = g.matmul_nt(tr, tr);
+                let s1 = g.sum_all(tt);
+                let diff = g.sub(t, hb);
+                let sc = g.scale(diff, 0.3);
+                let ms = g.mean_square(sc);
+                let y = g.add(s1, ms);
+
+                let inputs = vec![x.clone(), w.clone(), bias.clone()];
+                let grads = g.backward(y, &[xn, wn, bn]);
+                let vals = g.eval(&inputs, &grads);
+                for (slot, gid) in grads.iter().enumerate() {
+                    let analytic = vals.get(*gid).data().to_vec();
+                    let numeric = fd_grad(&g, y, &inputs, slot, 1e-5);
+                    if !allclose_slice(&analytic, &numeric, 1e-5, 1e-6) {
+                        return Err(format!(
+                            "slot {slot}: analytic {analytic:?} vs fd {numeric:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn second_derivative_via_double_backward() {
+        // y = sum(x^3); dy/dx = 3x^2; d2y/dx2 (via backward of sum(dy/dx)) = 6x
+        let mut g = Graph::new();
+        let x = g.input(&[3]);
+        let cube = g.powi(x, 3);
+        let y = g.sum_all(cube);
+        let g1 = g.backward(y, &[x])[0];
+        let s1 = g.sum_all(g1);
+        let g2 = g.backward(s1, &[x])[0];
+        let xv = Tensor::from_vec(vec![1.0, 2.0, -1.5], &[3]);
+        let vals = g.eval(&[xv], &[g1, g2]);
+        assert_eq!(vals.get(g1).data(), &[3.0, 12.0, 6.75]);
+        assert_eq!(vals.get(g2).data(), &[6.0, 12.0, -9.0]);
+    }
+
+    #[test]
+    fn tanh_third_derivative_exact() {
+        // tanh''' = -2 sech^2 (sech^2 - 2 tanh^2)... check against the
+        // closed form evaluated directly.
+        let mut g = Graph::new();
+        let x = g.input(&[5]);
+        let t = g.tanh(x);
+        let y = g.sum_all(t);
+        let g1 = g.backward(y, &[x])[0];
+        let s1 = g.sum_all(g1);
+        let g2 = g.backward(s1, &[x])[0];
+        let s2 = g.sum_all(g2);
+        let g3 = g.backward(s2, &[x])[0];
+        let xv = Tensor::linspace(-1.5, 1.5, 5);
+        let vals = g.eval(&[xv.clone()], &[g3]);
+        let expect: Vec<f64> = xv
+            .data()
+            .iter()
+            .map(|&z| {
+                let t = z.tanh();
+                let s = 1.0 - t * t; // sech^2
+                // d3/dz3 tanh = -2 s (s - 2 t^2)  [standard identity]
+                -2.0 * s * (s - 2.0 * t * t)
+            })
+            .collect();
+        assert!(
+            allclose_slice(vals.get(g3).data(), &expect, 1e-10, 1e-12),
+            "{:?} vs {:?}",
+            vals.get(g3).data(),
+            expect
+        );
+    }
+
+    #[test]
+    fn backward_requires_scalar() {
+        let mut g = Graph::new();
+        let x = g.input(&[2, 2]);
+        let y = g.tanh(x);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g2 = Graph::new();
+            let x2 = g2.input(&[2, 2]);
+            let y2 = g2.tanh(x2);
+            g2.backward(y2, &[x2])
+        }));
+        assert!(result.is_err());
+        let _ = (x, y);
+    }
+
+    #[test]
+    fn graph_growth_is_exponential_in_derivative_order() {
+        // The headline pathology: graph size multiplies with each backward.
+        let mut g = Graph::new();
+        let x = g.input(&[4, 1]);
+        let w = g.constant(Tensor::ones(&[1, 8]));
+        let w2 = g.constant(Tensor::ones(&[8, 1]));
+        let h = g.matmul(x, w);
+        let t = g.tanh(h);
+        let u = g.matmul(t, w2);
+        let mut sizes = vec![g.len()];
+        let mut cur = u;
+        for _ in 0..4 {
+            let s = g.sum_all(cur);
+            cur = g.backward(s, &[x])[0];
+            sizes.push(g.len());
+        }
+        // Strictly growing and accelerating.
+        let deltas: Vec<usize> = sizes.windows(2).map(|w| w[1] - w[0]).collect();
+        for pair in deltas.windows(2) {
+            assert!(pair[1] > pair[0], "growth not accelerating: {sizes:?}");
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Higher-order input derivatives by *repeated* reverse-mode autodiff —
+//! the baseline the paper measures against (§III-A).
+//!
+//! For a network `u : [B,1] -> [B,1]` whose rows are independent samples,
+//! `d/dx sum_b u_b` equals the per-sample derivative `du/dx` stacked over
+//! the batch, so `n` applications of `backward(sum(·), x)` produce the
+//! derivative stack `[u, u', ..., u^(n)]`. Every pass appends the gradient
+//! graph of an already-grown graph: time and memory are exponential in `n`.
+
+use super::{Graph, NodeId};
+
+/// Build nodes for `[u, du/dx, ..., d^n u/dx^n]` by repeated backward.
+///
+/// `u` must have one output column and `x` one input column (per-sample
+/// scalar-to-scalar), the PINN setting of the paper.
+pub fn derivative_stack(g: &mut Graph, u: NodeId, x: NodeId, n: usize) -> Vec<NodeId> {
+    assert_eq!(g.shape(u).len(), 2, "u must be [B,1]");
+    assert_eq!(g.shape(u)[1], 1, "u must have a single output column");
+    assert_eq!(g.shape(x)[1], 1, "x must have a single input column");
+    let mut out = Vec::with_capacity(n + 1);
+    out.push(u);
+    let mut cur = u;
+    for _ in 0..n {
+        let s = g.sum_all(cur);
+        cur = g.backward(s, &[x])[0];
+        out.push(cur);
+    }
+    out
+}
+
+/// Graph sizes after each derivative order 0..=n — the memory-scaling
+/// metric used by the `mem` benchmark (backend-independent analogue of the
+/// paper's GPU OOM observation).
+pub fn graph_growth(g: &mut Graph, u: NodeId, x: NodeId, n: usize) -> Vec<usize> {
+    let mut sizes = Vec::with_capacity(n + 1);
+    sizes.push(g.len());
+    let mut cur = u;
+    for _ in 0..n {
+        let s = g.sum_all(cur);
+        cur = g.backward(s, &[x])[0];
+        sizes.push(g.len());
+    }
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::allclose_slice;
+
+    /// u(x) = tanh(x) elementwise through a [B,1] pipe.
+    fn tanh_graph() -> (Graph, NodeId, NodeId) {
+        let mut g = Graph::new();
+        let x = g.input(&[4, 1]);
+        let u = g.tanh(x);
+        (g, x, u)
+    }
+
+    #[test]
+    fn stack_matches_closed_forms() {
+        let (mut g, x, u) = tanh_graph();
+        let stack = derivative_stack(&mut g, u, x, 3);
+        let xv = Tensor::from_vec(vec![-1.0, -0.3, 0.4, 1.2], &[4, 1]);
+        let vals = g.eval(&[xv.clone()], &stack);
+        for (i, &z) in xv.data().iter().enumerate() {
+            let t = z.tanh();
+            let s = 1.0 - t * t;
+            let expect = [t, s, -2.0 * t * s, -2.0 * s * (s - 2.0 * t * t)];
+            for (order, e) in expect.iter().enumerate() {
+                let got = vals.get(stack[order]).data()[i];
+                assert!(
+                    (got - e).abs() < 1e-10,
+                    "order {order} sample {i}: {got} vs {e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn per_sample_independence() {
+        // Derivatives computed on a batch must equal the ones computed on
+        // each sample alone (the sum trick must not mix samples).
+        let (mut g, x, u) = tanh_graph();
+        let stack = derivative_stack(&mut g, u, x, 2);
+        let xv = Tensor::from_vec(vec![0.1, 0.2, 0.3, 0.4], &[4, 1]);
+        let batch = g.eval(&[xv.clone()], &stack);
+
+        for i in 0..4 {
+            let mut g1 = Graph::new();
+            let x1 = g1.input(&[1, 1]);
+            let u1 = g1.tanh(x1);
+            let stack1 = derivative_stack(&mut g1, u1, x1, 2);
+            let x1v = Tensor::from_vec(vec![xv.data()[i]], &[1, 1]);
+            let single = g1.eval(&[x1v], &stack1);
+            for order in 0..=2 {
+                let a = batch.get(stack[order]).data()[i];
+                let b = single.get(stack1[order]).data()[0];
+                assert!((a - b).abs() < 1e-12, "order {order} sample {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn polynomial_high_order_is_exact() {
+        // u = x^5 : u''''(x) = 120 x, u''''' = 120, u'''''' = 0.
+        let mut g = Graph::new();
+        let x = g.input(&[3, 1]);
+        let u = g.powi(x, 5);
+        let stack = derivative_stack(&mut g, u, x, 6);
+        let xv = Tensor::from_vec(vec![1.0, -2.0, 0.5], &[3, 1]);
+        let vals = g.eval(&[xv.clone()], &stack);
+        let d4: Vec<f64> = xv.data().iter().map(|z| 120.0 * z).collect();
+        assert!(allclose_slice(vals.get(stack[4]).data(), &d4, 1e-9, 1e-9));
+        assert!(allclose_slice(
+            vals.get(stack[5]).data(),
+            &[120.0, 120.0, 120.0],
+            1e-9,
+            1e-9
+        ));
+        assert!(allclose_slice(vals.get(stack[6]).data(), &[0.0, 0.0, 0.0], 0.0, 1e-9));
+    }
+
+    #[test]
+    fn growth_sizes_monotone() {
+        let (mut g, x, u) = tanh_graph();
+        let sizes = graph_growth(&mut g, u, x, 5);
+        assert_eq!(sizes.len(), 6);
+        assert!(sizes.windows(2).all(|w| w[1] > w[0]));
+    }
+}

@@ -1,0 +1,323 @@
+//! Tape-based reverse-mode automatic differentiation with *create-graph*
+//! double-backward.
+//!
+//! This is the paper's **baseline**: computing `d^n/dx^n f` by applying
+//! reverse-mode autodiff `n` times. Each `backward` pass appends the
+//! gradient computation as new nodes to the same graph, so the gradient is
+//! itself differentiable — exactly the mechanism behind
+//! `torch.autograd.grad(..., create_graph=True)`. Repeating it `n` times
+//! re-differentiates a graph that has already grown by a constant factor,
+//! giving the exponential `O(c^n)` time/memory the paper measures
+//! (Figs 1-5) and that n-TangentProp ([`crate::ntp`]) removes.
+//!
+//! Node ids are topological by construction (append-only arena), which the
+//! evaluator and backward pass rely on.
+
+pub mod backward;
+pub mod eval;
+pub mod higher;
+
+use crate::tensor::Tensor;
+
+/// Index of a node in a [`Graph`].
+pub type NodeId = usize;
+
+/// Primitive operations. Every op's vector-Jacobian product is expressible
+/// in terms of other ops in this set, which is what makes the tape
+/// arbitrarily re-differentiable.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Placeholder bound at evaluation time to `inputs[slot]`.
+    Input(usize),
+    /// Embedded constant (not differentiated).
+    Const(Tensor),
+    Add(NodeId, NodeId),
+    Sub(NodeId, NodeId),
+    Mul(NodeId, NodeId),
+    Div(NodeId, NodeId),
+    Neg(NodeId),
+    Scale(NodeId, f64),
+    AddScalar(NodeId, f64),
+    /// `A @ B`.
+    MatMul(NodeId, NodeId),
+    /// `A^T @ B` (fused; avoids materializing the transpose on backward).
+    MatMulTN(NodeId, NodeId),
+    /// `A @ B^T` (fused).
+    MatMulNT(NodeId, NodeId),
+    Transpose(NodeId),
+    Tanh(NodeId),
+    /// Elementwise integer power.
+    PowI(NodeId, i32),
+    /// `[B,F] + [F]` broadcast.
+    AddBias(NodeId, NodeId),
+    /// Total sum, result shape `[1]`.
+    SumAll(NodeId),
+    /// Column sums `[B,F] -> [F]`.
+    SumAxis0(NodeId),
+    /// Replicate `[F] -> [B,F]`.
+    BroadcastRows(NodeId, usize),
+    /// Fill `shape` with a `[1]` scalar.
+    BroadcastScalar(NodeId, Vec<usize>),
+}
+
+/// A node: operation plus statically-known result shape.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub shape: Vec<usize>,
+}
+
+/// An append-only computation graph ("tape").
+#[derive(Default, Debug)]
+pub struct Graph {
+    nodes: Vec<Node>,
+    n_inputs: usize,
+}
+
+impl Graph {
+    pub fn new() -> Graph {
+        Graph::default()
+    }
+
+    /// Number of nodes — the backend-independent size metric reported by
+    /// the memory benchmarks.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn shape(&self, id: NodeId) -> &[usize] {
+        &self.nodes[id].shape
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    fn push(&mut self, op: Op, shape: Vec<usize>) -> NodeId {
+        self.nodes.push(Node { op, shape });
+        self.nodes.len() - 1
+    }
+
+    // ----------------------------------------------------------- builders
+
+    /// Declare the next input slot with the given shape.
+    pub fn input(&mut self, shape: &[usize]) -> NodeId {
+        let slot = self.n_inputs;
+        self.n_inputs += 1;
+        self.push(Op::Input(slot), shape.to_vec())
+    }
+
+    pub fn constant(&mut self, t: Tensor) -> NodeId {
+        let shape = t.shape().to_vec();
+        self.push(Op::Const(t), shape)
+    }
+
+    pub fn zeros_like(&mut self, id: NodeId) -> NodeId {
+        let shape = self.shape(id).to_vec();
+        self.constant(Tensor::zeros(&shape))
+    }
+
+    fn binary_same_shape(&mut self, op: fn(NodeId, NodeId) -> Op, a: NodeId, b: NodeId) -> NodeId {
+        assert_eq!(
+            self.shape(a),
+            self.shape(b),
+            "shape mismatch: {:?} vs {:?}",
+            self.shape(a),
+            self.shape(b)
+        );
+        let shape = self.shape(a).to_vec();
+        self.push(op(a, b), shape)
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary_same_shape(Op::Add, a, b)
+    }
+
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary_same_shape(Op::Sub, a, b)
+    }
+
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary_same_shape(Op::Mul, a, b)
+    }
+
+    pub fn div(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary_same_shape(Op::Div, a, b)
+    }
+
+    pub fn neg(&mut self, a: NodeId) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.push(Op::Neg(a), shape)
+    }
+
+    pub fn scale(&mut self, a: NodeId, c: f64) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.push(Op::Scale(a, c), shape)
+    }
+
+    pub fn add_scalar(&mut self, a: NodeId, c: f64) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.push(Op::AddScalar(a, c), shape)
+    }
+
+    pub fn matmul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
+        assert_eq!(sa.len(), 2);
+        assert_eq!(sb.len(), 2);
+        assert_eq!(sa[1], sb[0], "matmul inner dims");
+        self.push(Op::MatMul(a, b), vec![sa[0], sb[1]])
+    }
+
+    pub fn matmul_tn(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
+        assert_eq!(sa[0], sb[0], "matmul_tn inner dims");
+        self.push(Op::MatMulTN(a, b), vec![sa[1], sb[1]])
+    }
+
+    pub fn matmul_nt(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
+        assert_eq!(sa[1], sb[1], "matmul_nt inner dims");
+        self.push(Op::MatMulNT(a, b), vec![sa[0], sb[0]])
+    }
+
+    pub fn transpose(&mut self, a: NodeId) -> NodeId {
+        let s = self.shape(a).to_vec();
+        assert_eq!(s.len(), 2);
+        self.push(Op::Transpose(a), vec![s[1], s[0]])
+    }
+
+    pub fn tanh(&mut self, a: NodeId) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.push(Op::Tanh(a), shape)
+    }
+
+    pub fn powi(&mut self, a: NodeId, k: i32) -> NodeId {
+        let shape = self.shape(a).to_vec();
+        self.push(Op::PowI(a, k), shape)
+    }
+
+    pub fn add_bias(&mut self, x: NodeId, bias: NodeId) -> NodeId {
+        let (sx, sb) = (self.shape(x).to_vec(), self.shape(bias).to_vec());
+        assert_eq!(sx.len(), 2);
+        assert_eq!(sb.len(), 1);
+        assert_eq!(sx[1], sb[0], "add_bias width");
+        self.push(Op::AddBias(x, bias), sx)
+    }
+
+    pub fn sum_all(&mut self, a: NodeId) -> NodeId {
+        self.push(Op::SumAll(a), vec![1])
+    }
+
+    pub fn sum_axis0(&mut self, a: NodeId) -> NodeId {
+        let s = self.shape(a).to_vec();
+        assert_eq!(s.len(), 2);
+        self.push(Op::SumAxis0(a), vec![s[1]])
+    }
+
+    pub fn broadcast_rows(&mut self, a: NodeId, b: usize) -> NodeId {
+        let s = self.shape(a).to_vec();
+        assert_eq!(s.len(), 1);
+        self.push(Op::BroadcastRows(a, b), vec![b, s[0]])
+    }
+
+    pub fn broadcast_scalar(&mut self, a: NodeId, shape: &[usize]) -> NodeId {
+        assert_eq!(self.shape(a), &[1], "broadcast_scalar expects [1]");
+        self.push(Op::BroadcastScalar(a, shape.to_vec()), shape.to_vec())
+    }
+
+    /// Mean over all elements as `[1]`: `sum / numel`.
+    pub fn mean_all(&mut self, a: NodeId) -> NodeId {
+        let numel: usize = self.shape(a).iter().product();
+        let s = self.sum_all(a);
+        self.scale(s, 1.0 / numel as f64)
+    }
+
+    /// Mean of squares as `[1]` — the MSE building block of PINN losses.
+    pub fn mean_square(&mut self, a: NodeId) -> NodeId {
+        let sq = self.mul(a, a);
+        self.mean_all(sq)
+    }
+
+    /// Operand ids of a node, in order.
+    pub fn operands(&self, id: NodeId) -> Vec<NodeId> {
+        match &self.nodes[id].op {
+            Op::Input(_) | Op::Const(_) => vec![],
+            Op::Neg(a)
+            | Op::Scale(a, _)
+            | Op::AddScalar(a, _)
+            | Op::Transpose(a)
+            | Op::Tanh(a)
+            | Op::PowI(a, _)
+            | Op::SumAll(a)
+            | Op::SumAxis0(a)
+            | Op::BroadcastRows(a, _)
+            | Op::BroadcastScalar(a, _) => vec![*a],
+            Op::Add(a, b)
+            | Op::Sub(a, b)
+            | Op::Mul(a, b)
+            | Op::Div(a, b)
+            | Op::MatMul(a, b)
+            | Op::MatMulTN(a, b)
+            | Op::MatMulNT(a, b)
+            | Op::AddBias(a, b) => vec![*a, *b],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_topological() {
+        let mut g = Graph::new();
+        let x = g.input(&[2, 2]);
+        let y = g.tanh(x);
+        let z = g.add(x, y);
+        assert!(x < y && y < z);
+        assert_eq!(g.operands(z), vec![x, y]);
+        assert_eq!(g.len(), 3);
+    }
+
+    #[test]
+    fn shapes_propagate() {
+        let mut g = Graph::new();
+        let a = g.input(&[3, 4]);
+        let b = g.input(&[4, 5]);
+        let c = g.matmul(a, b);
+        assert_eq!(g.shape(c), &[3, 5]);
+        let t = g.transpose(c);
+        assert_eq!(g.shape(t), &[5, 3]);
+        let s = g.sum_all(t);
+        assert_eq!(g.shape(s), &[1]);
+        let m = g.mean_square(a);
+        assert_eq!(g.shape(m), &[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul inner dims")]
+    fn matmul_shape_check() {
+        let mut g = Graph::new();
+        let a = g.input(&[3, 4]);
+        let b = g.input(&[5, 6]);
+        g.matmul(a, b);
+    }
+
+    #[test]
+    fn input_slots_increment() {
+        let mut g = Graph::new();
+        let a = g.input(&[1]);
+        let b = g.input(&[2]);
+        assert!(matches!(g.node(a).op, Op::Input(0)));
+        assert!(matches!(g.node(b).op, Op::Input(1)));
+        assert_eq!(g.n_inputs(), 2);
+    }
+}

@@ -1,0 +1,153 @@
+//! Figs 4-5: the ratio of autodiff to n-TangentProp pass times over a
+//! grid of widths × depths × batch sizes × derivative orders.
+
+use super::{sweep_orders, Engine, Measurement};
+use crate::nn::Mlp;
+use crate::tensor::Tensor;
+use crate::util::csv::Table;
+use crate::util::prng::Prng;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct GridConfig {
+    pub widths: Vec<usize>,
+    pub depths: Vec<usize>,
+    pub batches: Vec<usize>,
+    pub n_max: usize,
+    pub warmup: usize,
+    pub trials: usize,
+    pub cap_seconds: f64,
+    pub seed: u64,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        GridConfig {
+            // Paper grid: widths {16,24,64,128} × depths {2,3,4,8} ×
+            // batches {2^6..2^12}; CPU defaults cover the interesting
+            // region, expandable from the CLI.
+            widths: vec![16, 24, 64],
+            depths: vec![2, 3, 4],
+            batches: vec![64, 256],
+            n_max: 6,
+            warmup: 0,
+            trials: 3,
+            cap_seconds: 1.5,
+            seed: 11,
+        }
+    }
+}
+
+/// All measurements over the grid (both engines).
+pub fn run(cfg: &GridConfig, progress: impl Fn(&str)) -> Vec<Measurement> {
+    let mut out = Vec::new();
+    for &width in &cfg.widths {
+        for &depth in &cfg.depths {
+            for &batch in &cfg.batches {
+                progress(&format!("grid cell width={width} depth={depth} batch={batch}"));
+                let mut rng = Prng::seeded(cfg.seed ^ (width * 31 + depth * 7 + batch) as u64);
+                let mlp = Mlp::uniform(1, width, depth, 1, &mut rng);
+                let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, &mut rng);
+                for engine in [Engine::Ntp, Engine::Autodiff] {
+                    out.extend(sweep_orders(
+                        engine,
+                        &mlp,
+                        &x,
+                        cfg.n_max,
+                        cfg.warmup,
+                        cfg.trials,
+                        cfg.cap_seconds,
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Ratio rows: one per (width, depth, batch, n) cell.
+/// `which` selects forward (Fig 4) or total (Fig 5).
+pub fn ratio_table(measurements: &[Measurement], forward_only: bool) -> Table {
+    let mut t = Table::new(&[
+        "width", "depth", "batch", "n", "autodiff_s", "ntp_s", "ratio", "measured",
+    ]);
+    for m in measurements.iter().filter(|m| m.engine == Engine::Autodiff) {
+        if let Some(ntp) = measurements.iter().find(|o| {
+            o.engine == Engine::Ntp
+                && o.n == m.n
+                && o.width == m.width
+                && o.depth == m.depth
+                && o.batch == m.batch
+        }) {
+            let (a, b) = if forward_only {
+                (m.times.fwd, ntp.times.fwd)
+            } else {
+                (m.times.total(), ntp.times.total())
+            };
+            t.push(vec![
+                m.width.to_string(),
+                m.depth.to_string(),
+                m.batch.to_string(),
+                m.n.to_string(),
+                format!("{a:.6e}"),
+                format!("{b:.6e}"),
+                format!("{:.4}", a / b),
+                (m.measured && ntp.measured).to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Write `fig4_forward_ratio.csv` and `fig5_total_ratio.csv`.
+pub fn save(measurements: &[Measurement], dir: &Path) -> std::io::Result<()> {
+    ratio_table(measurements, true).save(&dir.join("fig4_forward_ratio.csv"))?;
+    ratio_table(measurements, false).save(&dir.join("fig5_total_ratio.csv"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> GridConfig {
+        GridConfig {
+            widths: vec![8],
+            depths: vec![2],
+            batches: vec![16],
+            n_max: 3,
+            warmup: 0,
+            trials: 1,
+            cap_seconds: 5.0,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn grid_produces_full_cartesian_product() {
+        let ms = run(&tiny_cfg(), |_| {});
+        // 1 cell × 2 engines × 3 orders
+        assert_eq!(ms.len(), 6);
+        let t = ratio_table(&ms, true);
+        assert_eq!(t.rows.len(), 3);
+        let ratios = t.col_f64("ratio").unwrap();
+        assert!(ratios.iter().all(|r| *r > 0.0));
+    }
+
+    #[test]
+    fn ratio_grows_with_n() {
+        // The paper's central shape: the autodiff/ntp ratio increases with
+        // the number of derivatives. Use enough trials to de-noise.
+        let mut cfg = tiny_cfg();
+        cfg.n_max = 5;
+        cfg.trials = 3;
+        cfg.widths = vec![16];
+        cfg.batches = vec![32];
+        let ms = run(&cfg, |_| {});
+        let t = ratio_table(&ms, false);
+        let ratios = t.col_f64("ratio").unwrap();
+        let ns = t.col_f64("n").unwrap();
+        let hi = ratios[ns.iter().position(|&n| n == 5.0).unwrap()];
+        let lo = ratios[ns.iter().position(|&n| n == 1.0).unwrap()];
+        assert!(hi > lo, "ratio at n=5 ({hi}) should exceed n=1 ({lo})");
+    }
+}

@@ -1,0 +1,191 @@
+//! Memory scaling vs derivative order (§IV-B: autodiff exhausted the
+//! paper's 49 GB GPU beyond nine derivatives; n-TangentProp is `O(nM)`).
+//!
+//! Backend-independent metrics: tape node count and bytes allocated while
+//! building + evaluating the derivative channels, per engine and order.
+
+use super::{Engine, standard_mlp};
+use crate::autodiff::{higher, Graph};
+use crate::nn::Mlp;
+use crate::ntp::NtpEngine;
+use crate::tensor::{alloc, Tensor};
+use crate::util::csv::Table;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct MemoryConfig {
+    pub n_max: usize,
+    /// Skip autodiff cells whose predicted allocation exceeds this many
+    /// bytes (the "OOM" point on this host).
+    pub byte_cap: u64,
+    pub seed: u64,
+    pub batch: usize,
+}
+
+impl Default for MemoryConfig {
+    fn default() -> Self {
+        MemoryConfig {
+            n_max: 10,
+            byte_cap: 4 << 30, // 4 GiB
+            seed: 13,
+            batch: 256,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MemoryCell {
+    pub engine: Engine,
+    pub n: usize,
+    pub graph_nodes: usize,
+    pub bytes: u64,
+    pub measured: bool,
+}
+
+fn measure_cell(engine: Engine, mlp: &Mlp, x: &Tensor, n: usize) -> MemoryCell {
+    alloc::reset();
+    let mut g = Graph::new();
+    let (channels, inputs) = match engine {
+        Engine::Ntp => {
+            let xn = g.constant(x.clone());
+            let pn = mlp.const_param_nodes(&mut g);
+            let eng = NtpEngine::new(n);
+            (eng.forward_graph(&mut g, mlp, xn, &pn, n), vec![])
+        }
+        Engine::Autodiff => {
+            let xi = g.input(x.shape());
+            let pn = mlp.const_param_nodes(&mut g);
+            let u = mlp.forward_graph(&mut g, xi, &pn);
+            (higher::derivative_stack(&mut g, u, xi, n), vec![x.clone()])
+        }
+    };
+    let vals = g.eval(&inputs, &channels);
+    std::hint::black_box(vals.get(channels[n]).data());
+    MemoryCell {
+        engine,
+        n,
+        graph_nodes: g.len(),
+        bytes: alloc::stats().total,
+        measured: true,
+    }
+}
+
+pub fn run(cfg: &MemoryConfig) -> Vec<MemoryCell> {
+    let (mlp, _) = standard_mlp(cfg.seed);
+    let mut rng = crate::util::prng::Prng::seeded(cfg.seed + 1);
+    let x = Tensor::rand_uniform(&[cfg.batch, 1], -1.0, 1.0, &mut rng);
+    let mut out = Vec::new();
+    for engine in [Engine::Ntp, Engine::Autodiff] {
+        let mut last_bytes = 0u64;
+        let mut growth = 2.0f64;
+        for n in 1..=cfg.n_max {
+            let projected = (last_bytes as f64 * growth) as u64;
+            if engine == Engine::Autodiff && last_bytes > 0 && projected > cfg.byte_cap {
+                // Project instead of measuring: this is the OOM region.
+                out.push(MemoryCell {
+                    engine,
+                    n,
+                    graph_nodes: 0,
+                    bytes: projected,
+                    measured: false,
+                });
+                last_bytes = projected;
+                continue;
+            }
+            let cell = measure_cell(engine, &mlp, &x, n);
+            if last_bytes > 0 {
+                growth = cell.bytes as f64 / last_bytes as f64;
+            }
+            last_bytes = cell.bytes;
+            out.push(cell);
+        }
+    }
+    out
+}
+
+pub fn save(cells: &[MemoryCell], path: &Path) -> std::io::Result<()> {
+    let mut t = Table::new(&["n", "engine", "graph_nodes", "bytes", "measured"]);
+    for c in cells {
+        t.push(vec![
+            c.n.to_string(),
+            c.engine.name().to_string(),
+            c.graph_nodes.to_string(),
+            c.bytes.to_string(),
+            c.measured.to_string(),
+        ]);
+    }
+    t.save(path)
+}
+
+pub fn summarize(cells: &[MemoryCell]) -> String {
+    let mut t = Table::new(&["n", "ntp bytes", "autodiff bytes", "ratio", "note"]);
+    let n_max = cells.iter().map(|c| c.n).max().unwrap_or(0);
+    for n in 1..=n_max {
+        let ntp = cells.iter().find(|c| c.engine == Engine::Ntp && c.n == n);
+        let ad = cells.iter().find(|c| c.engine == Engine::Autodiff && c.n == n);
+        if let (Some(a), Some(b)) = (ntp, ad) {
+            t.push(vec![
+                n.to_string(),
+                a.bytes.to_string(),
+                b.bytes.to_string(),
+                format!("{:.1}", b.bytes as f64 / a.bytes as f64),
+                if b.measured { String::new() } else { "projected (OOM region)".into() },
+            ]);
+        }
+    }
+    t.to_markdown()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ntp_memory_is_subexponential_autodiff_is_not() {
+        let cfg = MemoryConfig {
+            n_max: 6,
+            byte_cap: 1 << 30,
+            seed: 1,
+            batch: 32,
+        };
+        let cells = run(&cfg);
+        let pick = |e: Engine| -> Vec<f64> {
+            (1..=6)
+                .map(|n| {
+                    cells
+                        .iter()
+                        .find(|c| c.engine == e && c.n == n)
+                        .unwrap()
+                        .bytes as f64
+                })
+                .collect()
+        };
+        let ntp = pick(Engine::Ntp);
+        let ad = pick(Engine::Autodiff);
+        let ntp_ratio = ntp[5] / ntp[4];
+        let ad_ratio = ad[5] / ad[4];
+        assert!(
+            ntp_ratio < 1.8 && ad_ratio > 1.9,
+            "ntp {ntp:?} (r={ntp_ratio}), ad {ad:?} (r={ad_ratio})"
+        );
+    }
+
+    #[test]
+    fn byte_cap_triggers_projection() {
+        let cfg = MemoryConfig {
+            n_max: 8,
+            byte_cap: 1 << 20, // 1 MiB: autodiff blows through this fast
+            seed: 1,
+            batch: 64,
+        };
+        let cells = run(&cfg);
+        assert!(cells
+            .iter()
+            .any(|c| c.engine == Engine::Autodiff && !c.measured));
+        // Projections keep growing.
+        let ad: Vec<&MemoryCell> = cells.iter().filter(|c| c.engine == Engine::Autodiff).collect();
+        for w in ad.windows(2) {
+            assert!(w[1].bytes >= w[0].bytes);
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Figs 1-3: forward/backward/total pass times vs derivative order for
+//! the standard 3×24 PINN network at batch 256, autodiff vs n-TangentProp.
+
+use super::{standard_mlp, sweep_orders, Engine, Measurement};
+use crate::util::csv::Table;
+use std::path::Path;
+
+/// Configuration (paper: n up to 9-10, 100 trials; CPU defaults smaller,
+/// overridable from the CLI).
+#[derive(Clone, Debug)]
+pub struct PassesConfig {
+    pub n_max: usize,
+    pub warmup: usize,
+    pub trials: usize,
+    /// Once an engine's measured total exceeds this, project the rest.
+    pub cap_seconds: f64,
+    pub seed: u64,
+}
+
+impl Default for PassesConfig {
+    fn default() -> Self {
+        PassesConfig {
+            n_max: 9,
+            warmup: 1,
+            trials: 5,
+            cap_seconds: 3.0,
+            seed: 7,
+        }
+    }
+}
+
+/// Run the sweep for both engines.
+pub fn run(cfg: &PassesConfig) -> Vec<Measurement> {
+    let (mlp, x) = standard_mlp(cfg.seed);
+    let mut out = sweep_orders(
+        Engine::Ntp,
+        &mlp,
+        &x,
+        cfg.n_max,
+        cfg.warmup,
+        cfg.trials,
+        cfg.cap_seconds,
+    );
+    out.extend(sweep_orders(
+        Engine::Autodiff,
+        &mlp,
+        &x,
+        cfg.n_max,
+        cfg.warmup,
+        cfg.trials,
+        cfg.cap_seconds,
+    ));
+    out
+}
+
+/// Write `fig1_total.csv`, `fig2_forward.csv`, `fig3_backward.csv`.
+pub fn save(measurements: &[Measurement], dir: &Path) -> std::io::Result<()> {
+    for (fname, pick) in [
+        ("fig1_total.csv", 0usize),
+        ("fig2_forward.csv", 1),
+        ("fig3_backward.csv", 2),
+    ] {
+        let mut t = Table::new(&["n", "engine", "seconds", "measured"]);
+        for m in measurements {
+            let secs = match pick {
+                0 => m.times.total(),
+                1 => m.times.fwd,
+                _ => m.times.bwd,
+            };
+            t.push(vec![
+                m.n.to_string(),
+                m.engine.name().to_string(),
+                format!("{secs:.6e}"),
+                m.measured.to_string(),
+            ]);
+        }
+        t.save(&dir.join(fname))?;
+    }
+    Ok(())
+}
+
+/// Markdown summary with the paper-shape checks (printed by the CLI and
+/// quoted in EXPERIMENTS.md).
+pub fn summarize(measurements: &[Measurement]) -> String {
+    let mut t = Table::new(&["n", "ntp total (s)", "autodiff total (s)", "ratio ad/ntp", "note"]);
+    let n_max = measurements.iter().map(|m| m.n).max().unwrap_or(0);
+    for n in 1..=n_max {
+        let ntp = measurements
+            .iter()
+            .find(|m| m.engine == Engine::Ntp && m.n == n);
+        let ad = measurements
+            .iter()
+            .find(|m| m.engine == Engine::Autodiff && m.n == n);
+        if let (Some(a), Some(b)) = (ntp, ad) {
+            t.push(vec![
+                n.to_string(),
+                format!("{:.4e}", a.times.total()),
+                format!("{:.4e}", b.times.total()),
+                format!("{:.2}", b.times.total() / a.times.total()),
+                if a.measured && b.measured {
+                    String::new()
+                } else {
+                    "projected".into()
+                },
+            ]);
+        }
+    }
+    t.to_markdown()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_produces_both_engines() {
+        let cfg = PassesConfig {
+            n_max: 3,
+            warmup: 0,
+            trials: 1,
+            cap_seconds: 10.0,
+            seed: 1,
+        };
+        let ms = run(&cfg);
+        assert_eq!(ms.len(), 6);
+        assert!(ms.iter().any(|m| m.engine == Engine::Ntp));
+        assert!(ms.iter().any(|m| m.engine == Engine::Autodiff));
+        let md = summarize(&ms);
+        assert!(md.contains("ratio"));
+    }
+
+    #[test]
+    fn save_writes_three_csvs() {
+        let cfg = PassesConfig {
+            n_max: 2,
+            warmup: 0,
+            trials: 1,
+            cap_seconds: 10.0,
+            seed: 1,
+        };
+        let ms = run(&cfg);
+        let dir = std::env::temp_dir().join("ntangent_test_passes");
+        save(&ms, &dir).unwrap();
+        for f in ["fig1_total.csv", "fig2_forward.csv", "fig3_backward.csv"] {
+            let text = std::fs::read_to_string(dir.join(f)).unwrap();
+            assert!(text.lines().count() >= 5, "{f}");
+        }
+    }
+}

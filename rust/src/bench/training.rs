@@ -1,0 +1,155 @@
+//! Fig 6: end-to-end PINN training for the first Burgers profile with
+//! both engines — loss, λ and the cumulative-runtime ratio per epoch.
+
+use crate::pinn::{train_burgers, BurgersLossSpec, DerivEngine, TrainConfig, TrainResult};
+use crate::util::csv::Table;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct TrainingBenchConfig {
+    pub profile_k: usize,
+    pub train: TrainConfig,
+    pub spec_overrides: Option<BurgersLossSpec>,
+    /// Skip the autodiff leg when its projected cost is prohibitive
+    /// (profiles ≥ 3, as in the paper).
+    pub run_autodiff: bool,
+}
+
+impl Default for TrainingBenchConfig {
+    fn default() -> Self {
+        TrainingBenchConfig {
+            profile_k: 1,
+            train: TrainConfig::default(),
+            spec_overrides: None,
+            run_autodiff: true,
+        }
+    }
+}
+
+pub struct TrainingBenchResult {
+    pub ntp: TrainResult,
+    pub autodiff: Option<TrainResult>,
+}
+
+impl TrainingBenchResult {
+    /// End-to-end speedup (autodiff seconds / ntp seconds).
+    pub fn speedup(&self) -> Option<f64> {
+        self.autodiff.as_ref().map(|ad| ad.seconds / self.ntp.seconds)
+    }
+}
+
+pub fn run(cfg: &TrainingBenchConfig) -> TrainingBenchResult {
+    let spec = cfg
+        .spec_overrides
+        .clone()
+        .unwrap_or_else(|| BurgersLossSpec::for_profile(cfg.profile_k));
+    let ntp = train_burgers(spec.clone(), &cfg.train, DerivEngine::Ntp);
+    let autodiff = if cfg.run_autodiff {
+        Some(train_burgers(spec, &cfg.train, DerivEngine::Autodiff))
+    } else {
+        None
+    };
+    TrainingBenchResult { ntp, autodiff }
+}
+
+/// Per-epoch CSV: epoch, phase, loss/λ/elapsed for each engine and the
+/// cumulative runtime ratio (the bottom panel of Fig 6).
+pub fn save(result: &TrainingBenchResult, path: &Path) -> std::io::Result<()> {
+    let mut t = Table::new(&[
+        "epoch",
+        "phase",
+        "loss_ntp",
+        "lambda_ntp",
+        "elapsed_ntp",
+        "loss_autodiff",
+        "lambda_autodiff",
+        "elapsed_autodiff",
+        "runtime_ratio",
+    ]);
+    for (i, log) in result.ntp.logs.iter().enumerate() {
+        let ad = result.autodiff.as_ref().and_then(|r| r.logs.get(i));
+        let (la, lm, el, ratio) = match ad {
+            Some(a) => (
+                format!("{:.6e}", a.loss),
+                format!("{:.8}", a.lambda),
+                format!("{:.4}", a.elapsed),
+                format!("{:.4}", a.elapsed / log.elapsed.max(1e-12)),
+            ),
+            None => (String::new(), String::new(), String::new(), String::new()),
+        };
+        t.push(vec![
+            log.epoch.to_string(),
+            log.phase.to_string(),
+            format!("{:.6e}", log.loss),
+            format!("{:.8}", log.lambda),
+            format!("{:.4}", log.elapsed),
+            la,
+            lm,
+            el,
+            ratio,
+        ]);
+    }
+    t.save(path)
+}
+
+/// Headline numbers for EXPERIMENTS.md.
+pub fn summarize(result: &TrainingBenchResult) -> String {
+    let mut out = String::new();
+    let k = result.ntp.profile.k;
+    out.push_str(&format!(
+        "profile k={k} (λ* = {:.6}): ntp {:.2}s, λ = {:.6} (err {:.2e}), loss {:.3e}, fwd/bwd = {}/{}\n",
+        result.ntp.profile.lambda_smooth(),
+        result.ntp.seconds,
+        result.ntp.lambda,
+        result.ntp.lambda_error(),
+        result.ntp.final_loss,
+        result.ntp.n_forward,
+        result.ntp.n_backward,
+    ));
+    if let Some(ad) = &result.autodiff {
+        out.push_str(&format!(
+            "autodiff {:.2}s, λ = {:.6} (err {:.2e}), loss {:.3e} → end-to-end speedup {:.2}x\n",
+            ad.seconds,
+            ad.lambda,
+            ad.lambda_error(),
+            ad.final_loss,
+            result.speedup().unwrap()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_benchmark_produces_ratio() {
+        let mut spec = BurgersLossSpec::for_profile(1);
+        spec.n_res = 32;
+        spec.n_org = 8;
+        let cfg = TrainingBenchConfig {
+            profile_k: 1,
+            train: TrainConfig {
+                width: 10,
+                depth: 2,
+                adam_epochs: 20,
+                lbfgs_epochs: 10,
+                adam_lr: 1e-3,
+                seed: 2,
+                log_every: 5,
+            },
+            spec_overrides: Some(spec),
+            run_autodiff: true,
+        };
+        let result = run(&cfg);
+        let speedup = result.speedup().unwrap();
+        assert!(speedup > 0.0);
+        let dir = std::env::temp_dir().join("ntangent_test_training");
+        std::fs::create_dir_all(&dir).unwrap();
+        save(&result, &dir.join("fig6.csv")).unwrap();
+        let text = std::fs::read_to_string(dir.join("fig6.csv")).unwrap();
+        assert!(text.contains("runtime_ratio"));
+        assert!(summarize(&result).contains("speedup"));
+    }
+}

@@ -1,0 +1,166 @@
+//! Evaluation backends for the coordinator: the native Rust n-TangentProp
+//! engine and the AOT-compiled PJRT executable.
+
+use crate::nn::{params, Mlp};
+use crate::ntp::NtpEngine;
+use crate::runtime::Executable;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Something that evaluates the derivative stack for a batch of points.
+///
+/// Not `Send`: PJRT executables hold thread-local handles, so the service
+/// constructs its backend *inside* the worker thread (see
+/// [`crate::coordinator::Service::start`]'s factory argument).
+pub trait EvalBackend {
+    /// Largest batch a single `eval_batch` call accepts (compiled shape
+    /// for PJRT; a soft cap for the native engine).
+    fn max_batch(&self) -> usize;
+
+    /// Number of output channels (n + 1).
+    fn n_channels(&self) -> usize;
+
+    /// Evaluate `xs` (length ≤ `max_batch`); returns `n_channels` vectors
+    /// of length `xs.len()`.
+    fn eval_batch(&mut self, xs: &[f64]) -> Result<Vec<Vec<f64>>>;
+}
+
+/// Native backend: the pure-Rust n-TangentProp engine (no artifacts
+/// required).
+pub struct NativeBackend {
+    engine: NtpEngine,
+    mlp: Mlp,
+    n: usize,
+    cap: usize,
+}
+
+impl NativeBackend {
+    pub fn new(mlp: Mlp, n: usize, cap: usize) -> NativeBackend {
+        NativeBackend {
+            engine: NtpEngine::new(n),
+            mlp,
+            n,
+            cap,
+        }
+    }
+}
+
+impl EvalBackend for NativeBackend {
+    fn max_batch(&self) -> usize {
+        self.cap
+    }
+
+    fn n_channels(&self) -> usize {
+        self.n + 1
+    }
+
+    fn eval_batch(&mut self, xs: &[f64]) -> Result<Vec<Vec<f64>>> {
+        ensure!(!xs.is_empty() && xs.len() <= self.cap, "bad batch size {}", xs.len());
+        let x = Tensor::from_vec(xs.to_vec(), &[xs.len(), 1]);
+        let channels = self.engine.forward(&self.mlp, &x);
+        Ok(channels.into_iter().map(Tensor::into_vec).collect())
+    }
+}
+
+/// PJRT backend: a compiled `ntp_fwd_*` artifact with a fixed batch shape.
+/// Short batches are padded to the compiled size and trimmed on the way
+/// out (padding never leaks across requests — asserted by the tests).
+pub struct PjrtBackend {
+    exe: Executable,
+    theta: Tensor,
+    batch: usize,
+    n_channels: usize,
+}
+
+impl PjrtBackend {
+    /// `theta` is the flat parameter vector baked per-call (slot 0);
+    /// `batch` must match the artifact's compiled shape.
+    pub fn new(exe: Executable, theta: Tensor, batch: usize, n_derivs: usize) -> PjrtBackend {
+        PjrtBackend {
+            exe,
+            theta,
+            batch,
+            n_channels: n_derivs + 1,
+        }
+    }
+
+    /// Swap in new parameters (e.g. after further training).
+    pub fn set_theta(&mut self, theta: Tensor) {
+        self.theta = theta;
+    }
+}
+
+impl EvalBackend for PjrtBackend {
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn n_channels(&self) -> usize {
+        self.n_channels
+    }
+
+    fn eval_batch(&mut self, xs: &[f64]) -> Result<Vec<Vec<f64>>> {
+        ensure!(!xs.is_empty() && xs.len() <= self.batch, "bad batch size {}", xs.len());
+        // Pad to the compiled shape.
+        let mut padded = xs.to_vec();
+        padded.resize(self.batch, 0.0);
+        let x = Tensor::from_vec(padded, &[self.batch, 1]);
+        let outputs = self.exe.run(&[self.theta.clone(), x])?;
+        ensure!(
+            outputs.len() == 1,
+            "ntp_fwd artifact should return one stacked tensor, got {}",
+            outputs.len()
+        );
+        let stacked = &outputs[0]; // [n+1, batch]
+        ensure!(
+            stacked.shape() == [self.n_channels, self.batch],
+            "unexpected artifact output shape {:?}",
+            stacked.shape()
+        );
+        let mut channels = Vec::with_capacity(self.n_channels);
+        for c in 0..self.n_channels {
+            let row = &stacked.data()[c * self.batch..c * self.batch + xs.len()];
+            channels.push(row.to_vec());
+        }
+        Ok(channels)
+    }
+}
+
+/// Convenience: build a [`NativeBackend`] whose parameters come from a
+/// flat theta (as produced by training / stored in checkpoints).
+pub fn native_from_flat(template: &Mlp, theta: &Tensor, n: usize, cap: usize) -> NativeBackend {
+    let mut mlp = template.clone();
+    params::unflatten_into(&mut mlp, theta);
+    NativeBackend::new(mlp, n, cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn native_backend_matches_engine() {
+        let mut rng = Prng::seeded(9);
+        let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+        let mut backend = NativeBackend::new(mlp.clone(), 3, 64);
+        assert_eq!(backend.n_channels(), 4);
+        let xs = [0.1, -0.4, 0.8];
+        let channels = backend.eval_batch(&xs).unwrap();
+        assert_eq!(channels.len(), 4);
+        assert_eq!(channels[0].len(), 3);
+        let direct = NtpEngine::new(3).forward(&mlp, &Tensor::from_vec(xs.to_vec(), &[3, 1]));
+        for (c, d) in channels.iter().zip(&direct) {
+            assert_eq!(c.as_slice(), d.data());
+        }
+    }
+
+    #[test]
+    fn native_backend_rejects_oversize() {
+        let mut rng = Prng::seeded(10);
+        let mlp = Mlp::uniform(1, 4, 1, 1, &mut rng);
+        let mut backend = NativeBackend::new(mlp, 2, 4);
+        assert!(backend.eval_batch(&[0.0; 5]).is_err());
+        assert!(backend.eval_batch(&[]).is_err());
+    }
+}

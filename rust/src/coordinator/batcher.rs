@@ -1,0 +1,265 @@
+//! Dynamic batcher: coalesce queued requests into backend-sized batches.
+//!
+//! Policy (vLLM-router-style continuous batching, single worker):
+//! take the oldest request, then greedily drain the queue — waiting up to
+//! `max_wait` for stragglers — until the batch capacity is filled, run the
+//! backend once, and scatter slices back to each caller. Requests larger
+//! than the capacity are split across consecutive backend calls.
+
+use super::backend::EvalBackend;
+use super::metrics::Metrics;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// How long to wait for additional requests once one is pending.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_wait: Duration::from_micros(200),
+        }
+    }
+}
+
+/// One queued evaluation request.
+pub struct Request {
+    pub points: Vec<f64>,
+    pub enqueued: Instant,
+    /// Channel the response is sent on.
+    pub resp: Sender<Response>,
+}
+
+/// Queue message: work or an explicit stop (the handle is cloneable, so
+/// channel-closure alone cannot signal shutdown).
+pub enum Msg {
+    Eval(Request),
+    Shutdown,
+}
+
+/// The response: `channels[k][i]` = `u^(k)` at `points[i]`, or an error
+/// message.
+pub type Response = Result<Vec<Vec<f64>>, String>;
+
+/// Run the batching loop until the channel closes or [`Msg::Shutdown`]
+/// arrives.
+pub fn run_loop(
+    mut backend: Box<dyn EvalBackend>,
+    rx: Receiver<Msg>,
+    cfg: BatcherConfig,
+    metrics: Arc<Metrics>,
+) {
+    let cap = backend.max_batch();
+    loop {
+        // Block for the first request.
+        let first = match rx.recv() {
+            Ok(Msg::Eval(r)) => r,
+            Ok(Msg::Shutdown) | Err(_) => return,
+        };
+        let mut pending = vec![first];
+        let mut total: usize = pending[0].points.len();
+        let mut stop = false;
+
+        // Greedily coalesce more requests up to capacity.
+        let deadline = Instant::now() + cfg.max_wait;
+        while total < cap {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Eval(r)) => {
+                    total += r.points.len();
+                    pending.push(r);
+                }
+                Ok(Msg::Shutdown) => {
+                    stop = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    stop = true;
+                    break;
+                }
+            }
+        }
+
+        serve_batch(backend.as_mut(), &pending, cap, &metrics);
+        if stop {
+            return;
+        }
+    }
+}
+
+/// Evaluate a group of requests against the backend and scatter results.
+fn serve_batch(
+    backend: &mut dyn EvalBackend,
+    pending: &[Request],
+    cap: usize,
+    metrics: &Metrics,
+) {
+    // Flatten all points, tracking (request, offset, len).
+    let mut flat: Vec<f64> = Vec::new();
+    let mut spans = Vec::with_capacity(pending.len());
+    for req in pending {
+        spans.push((flat.len(), req.points.len()));
+        flat.extend_from_slice(&req.points);
+    }
+
+    // Evaluate in capacity-sized chunks, concatenating channel outputs.
+    let n_channels = backend.n_channels();
+    let mut channels: Vec<Vec<f64>> = vec![Vec::with_capacity(flat.len()); n_channels];
+    let mut error: Option<String> = None;
+    for chunk in flat.chunks(cap) {
+        match backend.eval_batch(chunk) {
+            Ok(out) => {
+                metrics.record_batch(chunk.len());
+                for (k, col) in out.into_iter().enumerate() {
+                    channels[k].extend(col);
+                }
+            }
+            Err(e) => {
+                error = Some(e.to_string());
+                break;
+            }
+        }
+    }
+
+    for (req, &(off, len)) in pending.iter().zip(&spans) {
+        let result = match &error {
+            Some(msg) => {
+                metrics.record_error();
+                Err(msg.clone())
+            }
+            None => Ok(channels
+                .iter()
+                .map(|c| c[off..off + len].to_vec())
+                .collect()),
+        };
+        metrics.record_request(len);
+        metrics.record_latency(req.enqueued.elapsed().as_nanos() as u64);
+        // Receiver may have hung up; that's fine.
+        let _ = req.resp.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::EvalBackend;
+    use anyhow::Result;
+    use std::sync::mpsc;
+
+    /// Backend that records batch sizes and returns x and 2x as channels.
+    struct Probe {
+        cap: usize,
+        batches: Vec<usize>,
+        fail: bool,
+    }
+
+    impl EvalBackend for Probe {
+        fn max_batch(&self) -> usize {
+            self.cap
+        }
+        fn n_channels(&self) -> usize {
+            2
+        }
+        fn eval_batch(&mut self, xs: &[f64]) -> Result<Vec<Vec<f64>>> {
+            if self.fail {
+                anyhow::bail!("backend down");
+            }
+            self.batches.push(xs.len());
+            Ok(vec![xs.to_vec(), xs.iter().map(|x| 2.0 * x).collect()])
+        }
+    }
+
+    fn request(points: Vec<f64>) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                points,
+                enqueued: Instant::now(),
+                resp: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn coalesces_and_preserves_per_request_values() {
+        let metrics = Metrics::default();
+        let mut backend = Probe { cap: 8, batches: vec![], fail: false };
+        let (r1, rx1) = request(vec![1.0, 2.0]);
+        let (r2, rx2) = request(vec![3.0]);
+        serve_batch(&mut backend, &[r1, r2], 8, &metrics);
+        let a = rx1.recv().unwrap().unwrap();
+        let b = rx2.recv().unwrap().unwrap();
+        assert_eq!(a[0], vec![1.0, 2.0]);
+        assert_eq!(a[1], vec![2.0, 4.0]);
+        assert_eq!(b[0], vec![3.0]);
+        assert_eq!(b[1], vec![6.0]);
+        assert_eq!(backend.batches, vec![3]); // one coalesced call
+        let s = metrics.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 1);
+    }
+
+    #[test]
+    fn splits_oversize_requests() {
+        let metrics = Metrics::default();
+        let mut backend = Probe { cap: 4, batches: vec![], fail: false };
+        let pts: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let (r, rx) = request(pts.clone());
+        serve_batch(&mut backend, &[r], 4, &metrics);
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out[0], pts);
+        assert_eq!(backend.batches, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn backend_errors_propagate() {
+        let metrics = Metrics::default();
+        let mut backend = Probe { cap: 4, batches: vec![], fail: true };
+        let (r, rx) = request(vec![1.0]);
+        serve_batch(&mut backend, &[r], 4, &metrics);
+        let out = rx.recv().unwrap();
+        assert!(out.is_err());
+        assert_eq!(metrics.snapshot().errors, 1);
+    }
+
+    #[test]
+    fn run_loop_shuts_down_when_senders_drop() {
+        let metrics = Arc::new(Metrics::default());
+        let backend = Probe { cap: 4, batches: vec![], fail: false };
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = std::thread::spawn({
+            let metrics = metrics.clone();
+            move || run_loop(Box::new(backend), rx, BatcherConfig::default(), metrics)
+        });
+        let (r, resp_rx) = request(vec![0.5]);
+        tx.send(Msg::Eval(r)).unwrap();
+        let out = resp_rx.recv().unwrap().unwrap();
+        assert_eq!(out[0], vec![0.5]);
+        drop(tx);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn run_loop_stops_on_shutdown_message() {
+        let metrics = Arc::new(Metrics::default());
+        let backend = Probe { cap: 4, batches: vec![], fail: false };
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = std::thread::spawn({
+            let metrics = metrics.clone();
+            move || run_loop(Box::new(backend), rx, BatcherConfig::default(), metrics)
+        });
+        tx.send(Msg::Shutdown).unwrap();
+        worker.join().unwrap(); // must return even though tx is alive
+        drop(tx);
+    }
+}

@@ -1,0 +1,105 @@
+//! Lock-free service metrics (atomic counters, snapshot-on-read).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared counters updated by the batcher loop and connection threads.
+#[derive(Default, Debug)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub points: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_points: AtomicU64,
+    pub errors: AtomicU64,
+    /// Total request latency in nanoseconds (enqueue → response).
+    pub latency_ns: AtomicU64,
+    /// Max single-request latency in nanoseconds.
+    pub latency_max_ns: AtomicU64,
+}
+
+/// A point-in-time copy of the counters with derived ratios.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub points: u64,
+    pub batches: u64,
+    pub batched_points: u64,
+    pub errors: u64,
+    pub mean_latency_us: f64,
+    pub max_latency_us: f64,
+    /// Average number of requests coalesced per backend call.
+    pub mean_batch_fill: f64,
+}
+
+impl Metrics {
+    pub fn record_request(&self, n_points: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.points.fetch_add(n_points as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, n_points: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_points.fetch_add(n_points as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, ns: u64) {
+        self.latency_ns.fetch_add(ns, Ordering::Relaxed);
+        self.latency_max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests,
+            points: self.points.load(Ordering::Relaxed),
+            batches,
+            batched_points: self.batched_points.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_latency_us: if requests > 0 {
+                self.latency_ns.load(Ordering::Relaxed) as f64 / requests as f64 / 1e3
+            } else {
+                0.0
+            },
+            max_latency_us: self.latency_max_ns.load(Ordering::Relaxed) as f64 / 1e3,
+            mean_batch_fill: if batches > 0 {
+                requests as f64 / batches as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let m = Metrics::default();
+        m.record_request(10);
+        m.record_request(5);
+        m.record_batch(15);
+        m.record_latency(2_000);
+        m.record_latency(4_000);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.points, 15);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.mean_batch_fill, 2.0);
+        assert_eq!(s.mean_latency_us, 3.0);
+        assert_eq!(s.max_latency_us, 4.0);
+        assert_eq!(s.errors, 0);
+    }
+
+    #[test]
+    fn empty_snapshot_has_no_nans() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.mean_latency_us, 0.0);
+        assert_eq!(s.mean_batch_fill, 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 coordinator: a batching derivative-evaluation service.
+//!
+//! After a PINN is trained, downstream consumers (ODE post-processing,
+//! plotting, UQ sweeps) need `u, u', ..., u^(n)` at arbitrary points. The
+//! coordinator serves those queries over compiled artifacts: requests
+//! arrive (in-process or via the TCP JSON-lines front), a dynamic batcher
+//! packs them into the executable's fixed batch shape, one worker thread
+//! owns the backend, and responses are scattered back per request.
+//!
+//! Built on std threads + channels (tokio is not available offline); the
+//! structure mirrors a vLLM-style router: front → queue → batcher →
+//! backend → scatter, with metrics at each stage.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod service;
+
+pub use backend::{EvalBackend, NativeBackend, PjrtBackend};
+pub use batcher::BatcherConfig;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use service::{Service, ServiceHandle};

@@ -1,0 +1,133 @@
+//! Wire protocol for the TCP front: one JSON object per line.
+//!
+//! Request:  `{"points": [0.1, 0.2, ...]}`
+//!           `{"cmd": "stats"}`
+//! Response: `{"channels": [[u...], [u'...], ...]}`
+//!           `{"error": "..."}`
+//!           `{"stats": {...}}`
+
+use super::metrics::MetricsSnapshot;
+use crate::util::json::Json;
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireRequest {
+    Eval { points: Vec<f64> },
+    Stats,
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<WireRequest, String> {
+    let v = Json::parse(line).map_err(|e| e.to_string())?;
+    if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "stats" => Ok(WireRequest::Stats),
+            other => Err(format!("unknown cmd '{other}'")),
+        };
+    }
+    let points = v
+        .get("points")
+        .and_then(Json::as_f64_vec)
+        .ok_or_else(|| "request must have numeric 'points' array".to_string())?;
+    if points.is_empty() {
+        return Err("'points' must be non-empty".to_string());
+    }
+    Ok(WireRequest::Eval { points })
+}
+
+/// Encode an evaluation response.
+pub fn encode_channels(channels: &[Vec<f64>]) -> String {
+    let arr = Json::Arr(channels.iter().map(|c| Json::num_arr(c)).collect());
+    Json::obj(vec![("channels", arr)]).dump()
+}
+
+/// Encode an error response.
+pub fn encode_error(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).dump()
+}
+
+/// Encode a stats response.
+pub fn encode_stats(s: &MetricsSnapshot) -> String {
+    Json::obj(vec![(
+        "stats",
+        Json::obj(vec![
+            ("requests", Json::Num(s.requests as f64)),
+            ("points", Json::Num(s.points as f64)),
+            ("batches", Json::Num(s.batches as f64)),
+            ("errors", Json::Num(s.errors as f64)),
+            ("mean_latency_us", Json::Num(s.mean_latency_us)),
+            ("max_latency_us", Json::Num(s.max_latency_us)),
+            ("mean_batch_fill", Json::Num(s.mean_batch_fill)),
+        ]),
+    )])
+    .dump()
+}
+
+/// Decode an evaluation response (client side).
+pub fn parse_channels(line: &str) -> Result<Vec<Vec<f64>>, String> {
+    let v = Json::parse(line).map_err(|e| e.to_string())?;
+    if let Some(err) = v.get("error").and_then(Json::as_str) {
+        return Err(err.to_string());
+    }
+    v.get("channels")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing 'channels'".to_string())?
+        .iter()
+        .map(|c| c.as_f64_vec().ok_or_else(|| "bad channel".to_string()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_eval_request() {
+        let r = parse_request(r#"{"points": [0.5, -1.0]}"#).unwrap();
+        assert_eq!(r, WireRequest::Eval { points: vec![0.5, -1.0] });
+    }
+
+    #[test]
+    fn parses_stats_request() {
+        assert_eq!(parse_request(r#"{"cmd": "stats"}"#).unwrap(), WireRequest::Stats);
+        assert!(parse_request(r#"{"cmd": "bogus"}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"points": []}"#).is_err());
+        assert!(parse_request(r#"{"points": ["a"]}"#).is_err());
+        assert!(parse_request(r#"{}"#).is_err());
+    }
+
+    #[test]
+    fn channels_roundtrip() {
+        let channels = vec![vec![1.0, 2.0], vec![-0.5, 0.25]];
+        let line = encode_channels(&channels);
+        assert_eq!(parse_channels(&line).unwrap(), channels);
+    }
+
+    #[test]
+    fn error_roundtrip() {
+        let line = encode_error("boom");
+        assert_eq!(parse_channels(&line).unwrap_err(), "boom");
+    }
+
+    #[test]
+    fn stats_encode_mentions_fields() {
+        let s = MetricsSnapshot {
+            requests: 3,
+            points: 10,
+            batches: 2,
+            batched_points: 10,
+            errors: 0,
+            mean_latency_us: 12.5,
+            max_latency_us: 20.0,
+            mean_batch_fill: 1.5,
+        };
+        let line = encode_stats(&s);
+        assert!(line.contains("\"requests\":3"));
+        assert!(line.contains("mean_batch_fill"));
+    }
+}

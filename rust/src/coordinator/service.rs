@@ -1,0 +1,263 @@
+//! Service assembly: request queue + batcher worker + optional TCP front.
+
+use super::backend::EvalBackend;
+use super::batcher::{run_loop, BatcherConfig, Msg, Request, Response};
+use super::metrics::Metrics;
+use super::protocol;
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A running evaluation service (single batcher worker).
+pub struct Service {
+    handle: ServiceHandle,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// Cheap cloneable handle for submitting requests.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: Sender<Msg>,
+    metrics: Arc<Metrics>,
+}
+
+impl Service {
+    /// Spawn the batcher worker. The backend is built *inside* the worker
+    /// thread by `factory` (PJRT executables are not `Send`); a factory
+    /// error shuts the service down and surfaces on the first `eval`.
+    pub fn start<F>(factory: F, cfg: BatcherConfig) -> Service
+    where
+        F: FnOnce() -> Result<Box<dyn EvalBackend>> + Send + 'static,
+    {
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = channel::<Msg>();
+        let worker = std::thread::Builder::new()
+            .name("ntangent-batcher".into())
+            .spawn({
+                let metrics = metrics.clone();
+                move || match factory() {
+                    Ok(backend) => run_loop(backend, rx, cfg, metrics),
+                    Err(e) => {
+                        eprintln!("ntangent service: backend init failed: {e:#}");
+                        drop(rx); // closes the queue; evals error out
+                    }
+                }
+            })
+            .expect("spawning batcher thread");
+        Service {
+            handle: ServiceHandle { tx, metrics },
+            worker: Some(worker),
+        }
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    /// Shut down: signal the worker (handle clones may still exist — their
+    /// subsequent `eval` calls error out) and join it.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let _ = self.handle.tx.send(Msg::Shutdown);
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+impl ServiceHandle {
+    /// Evaluate points (blocking): returns `channels[k][i]`.
+    pub fn eval(&self, points: &[f64]) -> Result<Vec<Vec<f64>>> {
+        let (tx, rx) = channel::<Response>();
+        self.tx
+            .send(Msg::Eval(Request {
+                points: points.to_vec(),
+                enqueued: Instant::now(),
+                resp: tx,
+            }))
+            .map_err(|_| anyhow!("service is shut down"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("service is shut down"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+}
+
+/// Serve the JSON-lines protocol on `listener`, one thread per connection,
+/// until the process exits. Returns only on accept errors.
+pub fn serve_tcp(listener: TcpListener, handle: ServiceHandle) -> Result<()> {
+    for stream in listener.incoming() {
+        let stream = stream.context("accept failed")?;
+        let handle = handle.clone();
+        std::thread::spawn(move || {
+            let _ = serve_connection(stream, handle);
+        });
+    }
+    Ok(())
+}
+
+/// One connection: read request lines, write response lines.
+pub fn serve_connection(stream: TcpStream, handle: ServiceHandle) -> Result<()> {
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line.context("reading request line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match protocol::parse_request(&line) {
+            Ok(protocol::WireRequest::Eval { points }) => match handle.eval(&points) {
+                Ok(channels) => protocol::encode_channels(&channels),
+                Err(e) => protocol::encode_error(&e.to_string()),
+            },
+            Ok(protocol::WireRequest::Stats) => protocol::encode_stats(&handle.metrics()),
+            Err(e) => protocol::encode_error(&e),
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+/// A minimal blocking TCP client for the JSON-lines protocol (used by the
+/// examples, tests and the benchmark harness).
+pub struct TcpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TcpClient {
+    pub fn connect(addr: &str) -> Result<TcpClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        let writer = stream.try_clone()?;
+        Ok(TcpClient {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    pub fn eval(&mut self, points: &[f64]) -> Result<Vec<Vec<f64>>> {
+        let req = crate::util::json::Json::obj(vec![(
+            "points",
+            crate::util::json::Json::num_arr(points),
+        )])
+        .dump();
+        self.writer.write_all(req.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        protocol::parse_channels(line.trim()).map_err(|e| anyhow!(e))
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        self.writer.write_all(b"{\"cmd\":\"stats\"}\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::nn::Mlp;
+    use crate::ntp::NtpEngine;
+    use crate::tensor::Tensor;
+    use crate::util::prng::Prng;
+
+    fn test_service() -> (Service, Mlp) {
+        let mut rng = Prng::seeded(123);
+        let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+        let backend_mlp = mlp.clone();
+        let service = Service::start(
+            move || Ok(Box::new(NativeBackend::new(backend_mlp, 2, 16)) as Box<dyn EvalBackend>),
+            BatcherConfig::default(),
+        );
+        (service, mlp)
+    }
+
+    #[test]
+    fn in_process_roundtrip_matches_direct() {
+        let (service, mlp) = test_service();
+        let handle = service.handle();
+        let points = [0.3, -0.7, 1.1];
+        let channels = handle.eval(&points).unwrap();
+        let direct = NtpEngine::new(2).forward(&mlp, &Tensor::from_vec(points.to_vec(), &[3, 1]));
+        for k in 0..3 {
+            assert_eq!(channels[k].as_slice(), direct[k].data(), "channel {k}");
+        }
+        assert_eq!(handle.metrics().requests, 1);
+        service.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_each_get_their_answer() {
+        let (service, mlp) = test_service();
+        let mut threads = Vec::new();
+        for t in 0..8 {
+            let handle = service.handle();
+            threads.push(std::thread::spawn(move || {
+                let pt = t as f64 * 0.1;
+                let channels = handle.eval(&[pt]).unwrap();
+                (pt, channels[0][0])
+            }));
+        }
+        let engine = NtpEngine::new(2);
+        for th in threads {
+            let (pt, got) = th.join().unwrap();
+            let expect = engine.forward(&mlp, &Tensor::from_vec(vec![pt], &[1, 1]))[0].data()[0];
+            assert_eq!(got, expect);
+        }
+        let m = service.handle().metrics();
+        assert_eq!(m.requests, 8);
+        assert!(m.batches <= 8); // some coalescing may or may not happen
+        service.shutdown();
+    }
+
+    #[test]
+    fn tcp_front_roundtrip() {
+        let (service, mlp) = test_service();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = service.handle();
+        std::thread::spawn(move || serve_tcp(listener, handle));
+
+        let mut client = TcpClient::connect(&addr).unwrap();
+        let channels = client.eval(&[0.25, 0.5]).unwrap();
+        let direct =
+            NtpEngine::new(2).forward(&mlp, &Tensor::from_vec(vec![0.25, 0.5], &[2, 1]));
+        for k in 0..3 {
+            for (a, b) in channels[k].iter().zip(direct[k].data()) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+        let stats = client.stats().unwrap();
+        assert!(stats.contains("\"requests\""));
+        service.shutdown();
+    }
+
+    #[test]
+    fn eval_after_shutdown_errors() {
+        let (service, _) = test_service();
+        let handle = service.handle();
+        service.shutdown();
+        assert!(handle.eval(&[0.0]).is_err());
+    }
+}

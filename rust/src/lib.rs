@@ -1,0 +1,62 @@
+//! # `ntangent` — n-TangentProp for deep feed-forward networks
+//!
+//! A reproduction of *"A Quasilinear Algorithm for Computing Higher-Order
+//! Derivatives of Deep Feed-Forward Neural Networks"* (Chickering, 2024).
+//!
+//! The library computes the exact input-derivatives `d^n/dx^n f(x)` of a
+//! densely-connected feed-forward network `f` with a smooth activation in
+//! quasilinear `O(e^√n · M)` time by propagating derivative *channels*
+//! through the network with Faà di Bruno's formula (n-TangentProp), instead
+//! of the exponential `O(M^n)` cost of repeatedly applying reverse-mode
+//! autodifferentiation.
+//!
+//! ## Crate layout
+//!
+//! - [`tensor`] — a small dense `f64` tensor engine (the compute substrate).
+//! - [`autodiff`] — a tape-based reverse-mode engine with *create-graph*
+//!   double-backward; repeated application of it is the paper's baseline.
+//! - [`ntp`] — the paper's contribution: integer partitions, Faà di Bruno /
+//!   Bell coefficient tables, activation derivative towers, and the
+//!   n-TangentProp forward pass (both a pure fast path and a tape-recorded
+//!   path that supports backprop-through-derivatives for training).
+//! - [`nn`] — dense MLPs and parameter (un)flattening.
+//! - [`opt`] — Adam, SGD and L-BFGS with a strong-Wolfe line search.
+//! - [`pinn`] — a physics-informed-network training framework (collocation
+//!   sampling, Sobolev losses, Leibniz residual derivatives, boundary
+//!   conditions, inverse parameters) plus the paper's self-similar Burgers
+//!   benchmark problem with a ground-truth solver.
+//! - [`runtime`] — a PJRT runtime that loads AOT-compiled HLO artifacts
+//!   produced by the build-time JAX/Pallas layers and executes them from
+//!   Rust (Python is never on the hot path).
+//! - [`coordinator`] — a batching derivative-evaluation service on top of
+//!   the runtime (dynamic batcher, TCP JSON-lines protocol, metrics).
+//! - [`bench`] — the harness that regenerates every figure of the paper.
+//! - [`util`] — substrates built from scratch for offline use: PRNG, JSON,
+//!   CLI parsing, stats, timers and a mini property-testing helper.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use ntangent::nn::Mlp;
+//! use ntangent::ntp::NtpEngine;
+//! use ntangent::tensor::Tensor;
+//! use ntangent::util::prng::Prng;
+//!
+//! let mut rng = Prng::seeded(7);
+//! let mlp = Mlp::new(&[1, 24, 24, 24, 1], &mut rng);
+//! let x = Tensor::linspace(-1.0, 1.0, 8).reshape(&[8, 1]);
+//! let engine = NtpEngine::new(4); // up to 4 derivatives
+//! let channels = engine.forward(&mlp, &x); // [u, u', u'', u''', u'''']
+//! assert_eq!(channels.len(), 5);
+//! ```
+
+pub mod autodiff;
+pub mod bench;
+pub mod coordinator;
+pub mod nn;
+pub mod ntp;
+pub mod opt;
+pub mod pinn;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,471 @@
+//! `ntangent` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   bench <fig1..fig10|mem|all>   regenerate the paper's figures (CSV + summary)
+//!   train                         train a Burgers-profile PINN, save a checkpoint
+//!   eval                          evaluate a checkpoint's derivative stack at points
+//!   serve                         run the batching derivative-evaluation service
+//!   info                          tables, op counts and environment info
+
+use ntangent::bench::{grid, memory, passes, profiles, training};
+use ntangent::coordinator::{BatcherConfig, NativeBackend, PjrtBackend, Service};
+use ntangent::nn::Checkpoint;
+use ntangent::ntp::{hardy_ramanujan, partition_count, NtpEngine};
+use ntangent::pinn::{BurgersLossSpec, DerivEngine, TrainConfig};
+use ntangent::runtime::{ArtifactManifest, Runtime};
+use ntangent::tensor::Tensor;
+use ntangent::util::cli::{usage, Args, OptSpec};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, rest)) => (c.as_str(), rest.to_vec()),
+        None => {
+            eprintln!("{}", top_usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd {
+        "bench" => cmd_bench(&rest),
+        "train" => cmd_train(&rest),
+        "eval" => cmd_eval(&rest),
+        "validate" => cmd_validate(&rest),
+        "serve" => cmd_serve(&rest),
+        "info" => cmd_info(&rest),
+        "help" | "--help" | "-h" => {
+            println!("{}", top_usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n\n{}", top_usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn top_usage() -> String {
+    "ntangent — n-TangentProp reproduction (quasilinear higher-order derivatives)\n\
+     \nUSAGE: ntangent <COMMAND> [OPTIONS]\n\
+     \nCOMMANDS:\n\
+     \x20 bench <target>   fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|mem|all\n\
+     \x20 train            train a Burgers-profile PINN\n\
+     \x20 eval             evaluate a checkpoint at points\n\
+     \x20 validate         check a Burgers checkpoint against the analytic profile\n\
+     \x20 serve            run the derivative-evaluation service (TCP JSON lines)\n\
+     \x20 info             show tables / op-count / environment info\n\
+     \nRun `ntangent <COMMAND> --help` for options."
+        .to_string()
+}
+
+// ------------------------------------------------------------------ bench
+
+fn bench_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "out-dir", help: "output directory for CSVs", takes_value: true, default: Some("results") },
+        OptSpec { name: "trials", help: "timed trials per cell", takes_value: true, default: None },
+        OptSpec { name: "n-max", help: "max derivative order", takes_value: true, default: None },
+        OptSpec { name: "cap", help: "seconds before projecting autodiff", takes_value: true, default: None },
+        OptSpec { name: "widths", help: "comma list (fig4/fig5)", takes_value: true, default: None },
+        OptSpec { name: "depths", help: "comma list (fig4/fig5)", takes_value: true, default: None },
+        OptSpec { name: "batches", help: "comma list (fig4/fig5)", takes_value: true, default: None },
+        OptSpec { name: "adam-epochs", help: "training figs", takes_value: true, default: None },
+        OptSpec { name: "lbfgs-epochs", help: "training figs", takes_value: true, default: None },
+        OptSpec { name: "width", help: "network width (training figs)", takes_value: true, default: None },
+        OptSpec { name: "depth", help: "hidden layers (training figs)", takes_value: true, default: None },
+        OptSpec { name: "seed", help: "rng seed", takes_value: true, default: None },
+        OptSpec { name: "profile", help: "Burgers profile k (fig6)", takes_value: true, default: None },
+        OptSpec { name: "no-autodiff", help: "skip the autodiff leg (fig6)", takes_value: false, default: None },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ]
+}
+
+fn cmd_bench(raw: &[String]) -> Result<(), String> {
+    let specs = bench_specs();
+    let args = Args::parse(raw, &specs)?;
+    if args.flag("help") {
+        println!("{}", usage("bench <target>", "Regenerate the paper's figures", &specs));
+        return Ok(());
+    }
+    let target = args
+        .positional()
+        .first()
+        .ok_or("bench needs a target (fig1..fig10, mem, all)")?
+        .clone();
+    let out_dir = PathBuf::from(args.get("out-dir").unwrap());
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+
+    let targets: Vec<String> = if target == "all" {
+        ["fig1", "fig4", "fig6", "fig8", "fig9", "fig7", "fig10", "mem"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    } else {
+        vec![target]
+    };
+
+    for t in targets {
+        run_bench_target(&t, &args, &out_dir)?;
+    }
+    Ok(())
+}
+
+fn train_cfg_from(args: &Args, default_epochs: (usize, usize)) -> Result<TrainConfig, String> {
+    let mut cfg = TrainConfig {
+        adam_epochs: default_epochs.0,
+        lbfgs_epochs: default_epochs.1,
+        ..TrainConfig::default()
+    };
+    if let Some(v) = args.get_usize("adam-epochs")? {
+        cfg.adam_epochs = v;
+    }
+    if let Some(v) = args.get_usize("lbfgs-epochs")? {
+        cfg.lbfgs_epochs = v;
+    }
+    if let Some(v) = args.get_usize("width")? {
+        cfg.width = v;
+    }
+    if let Some(v) = args.get_usize("depth")? {
+        cfg.depth = v;
+    }
+    if let Some(v) = args.get_usize("seed")? {
+        cfg.seed = v as u64;
+    }
+    Ok(cfg)
+}
+
+fn run_bench_target(target: &str, args: &Args, out_dir: &Path) -> Result<(), String> {
+    match target {
+        "fig1" | "fig2" | "fig3" => {
+            let mut cfg = passes::PassesConfig::default();
+            if let Some(v) = args.get_usize("trials")? {
+                cfg.trials = v;
+            }
+            if let Some(v) = args.get_usize("n-max")? {
+                cfg.n_max = v;
+            }
+            if let Some(v) = args.get_f64("cap")? {
+                cfg.cap_seconds = v;
+            }
+            eprintln!(
+                "[bench] figs 1-3: pass times, 3x24 net, batch 256, n <= {}",
+                cfg.n_max
+            );
+            let ms = passes::run(&cfg);
+            passes::save(&ms, out_dir).map_err(|e| e.to_string())?;
+            println!("{}", passes::summarize(&ms));
+        }
+        "fig4" | "fig5" => {
+            let mut cfg = grid::GridConfig::default();
+            if let Some(v) = args.get_usize_list("widths")? {
+                cfg.widths = v;
+            }
+            if let Some(v) = args.get_usize_list("depths")? {
+                cfg.depths = v;
+            }
+            if let Some(v) = args.get_usize_list("batches")? {
+                cfg.batches = v;
+            }
+            if let Some(v) = args.get_usize("trials")? {
+                cfg.trials = v;
+            }
+            if let Some(v) = args.get_usize("n-max")? {
+                cfg.n_max = v;
+            }
+            if let Some(v) = args.get_f64("cap")? {
+                cfg.cap_seconds = v;
+            }
+            let ms = grid::run(&cfg, |msg| eprintln!("[bench] {msg}"));
+            grid::save(&ms, out_dir).map_err(|e| e.to_string())?;
+            println!(
+                "wrote fig4_forward_ratio.csv / fig5_total_ratio.csv ({} measurements)",
+                ms.len()
+            );
+        }
+        "fig6" => {
+            let k = args.get_usize("profile")?.unwrap_or(1);
+            let cfg = training::TrainingBenchConfig {
+                profile_k: k,
+                train: train_cfg_from(args, (300, 300))?,
+                spec_overrides: None,
+                run_autodiff: !args.flag("no-autodiff"),
+            };
+            eprintln!("[bench] fig6: profile-{k} training, both engines");
+            let result = training::run(&cfg);
+            let fname = if k == 1 {
+                "fig6_training.csv".to_string()
+            } else {
+                format!("fig6_training_k{k}.csv")
+            };
+            training::save(&result, &out_dir.join(fname)).map_err(|e| e.to_string())?;
+            println!("{}", training::summarize(&result));
+        }
+        "fig7" | "fig8" | "fig9" | "fig10" => {
+            let k = match target {
+                "fig8" => 1,
+                "fig9" => 2,
+                "fig7" => 3,
+                _ => 4,
+            };
+            let mut cfg = profiles::ProfilesConfig::for_profile(k);
+            cfg.train = train_cfg_from(args, (300, 300))?;
+            eprintln!(
+                "[bench] {target}: Burgers profile k={k} ({} derivatives)",
+                2 * k + 1
+            );
+            let run = profiles::run(&cfg);
+            profiles::save(&run, k, out_dir).map_err(|e| e.to_string())?;
+            println!("{}", profiles::summarize(&run));
+        }
+        "mem" => {
+            let mut cfg = memory::MemoryConfig::default();
+            if let Some(v) = args.get_usize("n-max")? {
+                cfg.n_max = v;
+            }
+            let cells = memory::run(&cfg);
+            memory::save(&cells, &out_dir.join("mem_scaling.csv")).map_err(|e| e.to_string())?;
+            println!("{}", memory::summarize(&cells));
+        }
+        other => return Err(format!("unknown bench target '{other}'")),
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ train
+
+fn cmd_train(raw: &[String]) -> Result<(), String> {
+    let specs = vec![
+        OptSpec { name: "profile", help: "Burgers profile k (1..4)", takes_value: true, default: Some("1") },
+        OptSpec { name: "adam-epochs", help: "Adam epochs", takes_value: true, default: Some("300") },
+        OptSpec { name: "lbfgs-epochs", help: "L-BFGS epochs", takes_value: true, default: Some("300") },
+        OptSpec { name: "width", help: "network width", takes_value: true, default: Some("24") },
+        OptSpec { name: "depth", help: "hidden layers", takes_value: true, default: Some("3") },
+        OptSpec { name: "engine", help: "ntp | autodiff", takes_value: true, default: Some("ntp") },
+        OptSpec { name: "seed", help: "rng seed", takes_value: true, default: Some("0") },
+        OptSpec { name: "out", help: "checkpoint path", takes_value: true, default: Some("results/checkpoint.json") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &specs)?;
+    if args.flag("help") {
+        println!("{}", usage("train", "Train a Burgers-profile PINN", &specs));
+        return Ok(());
+    }
+    let k = args.get_usize("profile")?.unwrap();
+    let engine = match args.get("engine").unwrap() {
+        "ntp" => DerivEngine::Ntp,
+        "autodiff" => DerivEngine::Autodiff,
+        other => return Err(format!("unknown engine '{other}'")),
+    };
+    let cfg = train_cfg_from(&args, (300, 300))?;
+    let spec = BurgersLossSpec::for_profile(k);
+    eprintln!(
+        "training profile k={k} (λ* = {:.6}, {} derivatives) with {engine:?}, {}x{} net",
+        spec.profile.lambda_smooth(),
+        spec.profile.n_derivs(),
+        cfg.depth,
+        cfg.width
+    );
+    let result = ntangent::pinn::train_burgers(spec, &cfg, engine);
+    println!(
+        "done in {:.1}s: λ = {:.6} (err {:.2e}), loss = {:.3e}, L2(u) = {:.3e}",
+        result.seconds,
+        result.lambda,
+        result.lambda_error(),
+        result.final_loss,
+        result.solution_l2_error(101),
+    );
+    let mut ck = Checkpoint::from_mlp(&result.mlp);
+    ck.lambda = Some(result.lambda);
+    ck.profile_k = Some(k);
+    ck.final_loss = Some(result.final_loss);
+    let out = PathBuf::from(args.get("out").unwrap());
+    ck.save(&out).map_err(|e| e.to_string())?;
+    println!("checkpoint -> {}", out.display());
+    Ok(())
+}
+
+// ------------------------------------------------------------------- eval
+
+fn cmd_eval(raw: &[String]) -> Result<(), String> {
+    let specs = vec![
+        OptSpec { name: "checkpoint", help: "checkpoint JSON", takes_value: true, default: Some("results/checkpoint.json") },
+        OptSpec { name: "points", help: "comma list of x values", takes_value: true, default: Some("-1.0,-0.5,0.0,0.5,1.0") },
+        OptSpec { name: "n", help: "derivative order", takes_value: true, default: Some("3") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &specs)?;
+    if args.flag("help") {
+        println!("{}", usage("eval", "Evaluate a checkpoint's derivative stack", &specs));
+        return Ok(());
+    }
+    let ck = Checkpoint::load(Path::new(args.get("checkpoint").unwrap()))
+        .map_err(|e| e.to_string())?;
+    let mlp = ck.to_mlp().map_err(|e| e.to_string())?;
+    let n = args.get_usize("n")?.unwrap();
+    let points: Vec<f64> = args
+        .get("points")
+        .unwrap()
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|_| format!("bad point '{s}'")))
+        .collect::<Result<_, _>>()?;
+    let engine = NtpEngine::new(n);
+    let x = Tensor::from_vec(points.clone(), &[points.len(), 1]);
+    let channels = engine.forward(&mlp, &x);
+    print!("{:>12}", "x");
+    for j in 0..=n {
+        print!("{:>16}", format!("u^({j})"));
+    }
+    println!();
+    for (i, &p) in points.iter().enumerate() {
+        print!("{p:>12.6}");
+        for chan in &channels {
+            print!("{:>16.8}", chan.data()[i]);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- validate
+
+fn cmd_validate(raw: &[String]) -> Result<(), String> {
+    let specs = vec![
+        OptSpec { name: "checkpoint", help: "checkpoint JSON (needs profile_k)", takes_value: true, default: Some("results/checkpoint.json") },
+        OptSpec { name: "points", help: "grid size", takes_value: true, default: Some("201") },
+        OptSpec { name: "x-max", help: "half-width of the validation domain", takes_value: true, default: Some("1.5") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &specs)?;
+    if args.flag("help") {
+        println!("{}", usage("validate", "Validate a Burgers checkpoint", &specs));
+        return Ok(());
+    }
+    let ck = Checkpoint::load(Path::new(args.get("checkpoint").unwrap()))
+        .map_err(|e| e.to_string())?;
+    let k = ck
+        .profile_k
+        .ok_or("checkpoint has no profile_k; was it trained with `ntangent train`?")?;
+    let mlp = ck.to_mlp().map_err(|e| e.to_string())?;
+    let profile = ntangent::pinn::BurgersProfile::new(k);
+    let n_pts = args.get_usize("points")?.unwrap();
+    let x_max = args.get_f64("x-max")?.unwrap();
+    let order_max = k; // the orders the paper plots
+    let xs = ntangent::pinn::grid_points(-x_max, x_max, n_pts);
+    let channels = NtpEngine::new(order_max).forward(&mlp, &xs);
+    println!(
+        "profile k={k}: λ* = {:.6}, checkpoint λ = {}",
+        profile.lambda_smooth(),
+        ck.lambda.map(|l| format!("{l:.6} (err {:.2e})", (l - profile.lambda_smooth()).abs()))
+            .unwrap_or_else(|| "—".into())
+    );
+    println!("{:>8} {:>14} {:>14}", "order", "RMS error", "max |error|");
+    for (order, chan) in channels.iter().enumerate() {
+        let mut sq = 0.0;
+        let mut worst = 0.0f64;
+        for (i, &x) in xs.data().iter().enumerate() {
+            let truth = profile.derivatives_true(x, order_max)[order];
+            let d = chan.data()[i] - truth;
+            sq += d * d;
+            worst = worst.max(d.abs());
+        }
+        println!(
+            "{order:>8} {:>14.4e} {:>14.4e}",
+            (sq / n_pts as f64).sqrt(),
+            worst
+        );
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ serve
+
+fn cmd_serve(raw: &[String]) -> Result<(), String> {
+    let specs = vec![
+        OptSpec { name: "checkpoint", help: "checkpoint JSON", takes_value: true, default: Some("results/checkpoint.json") },
+        OptSpec { name: "port", help: "TCP port", takes_value: true, default: Some("7474") },
+        OptSpec { name: "n", help: "derivative order served", takes_value: true, default: Some("3") },
+        OptSpec { name: "backend", help: "native | pjrt", takes_value: true, default: Some("native") },
+        OptSpec { name: "artifacts", help: "artifacts dir (pjrt backend)", takes_value: true, default: Some("artifacts") },
+        OptSpec { name: "artifact", help: "artifact name (pjrt backend)", takes_value: true, default: Some("ntp_fwd_d3") },
+        OptSpec { name: "batch-cap", help: "native backend batch cap", takes_value: true, default: Some("256") },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &specs)?;
+    if args.flag("help") {
+        println!("{}", usage("serve", "Run the derivative-evaluation service", &specs));
+        return Ok(());
+    }
+    let ck = Checkpoint::load(Path::new(args.get("checkpoint").unwrap()))
+        .map_err(|e| e.to_string())?;
+    let n = args.get_usize("n")?.unwrap();
+    let cap = args.get_usize("batch-cap")?.unwrap();
+    let backend_kind = args.get("backend").unwrap().to_string();
+    let artifacts_dir = PathBuf::from(args.get("artifacts").unwrap());
+    let artifact_name = args.get("artifact").unwrap().to_string();
+
+    let theta = Tensor::from_vec(ck.theta.clone(), &[ck.theta.len()]);
+    let mlp = ck.to_mlp().map_err(|e| e.to_string())?;
+
+    let service = match backend_kind.as_str() {
+        "native" => Service::start(
+            move || Ok(Box::new(NativeBackend::new(mlp, n, cap)) as _),
+            BatcherConfig::default(),
+        ),
+        "pjrt" => Service::start(
+            move || {
+                let manifest = ArtifactManifest::load(&artifacts_dir)?;
+                let spec = manifest.get(&artifact_name)?.clone();
+                let rt = Runtime::cpu()?;
+                let exe = rt.load_hlo_text(&manifest.path_of(&spec))?;
+                let batch = spec.batch.unwrap_or(256);
+                let nd = spec.n_derivs.unwrap_or(n);
+                Ok(Box::new(PjrtBackend::new(exe, theta, batch, nd)) as _)
+            },
+            BatcherConfig::default(),
+        ),
+        other => return Err(format!("unknown backend '{other}'")),
+    };
+
+    let port = args.get_usize("port")?.unwrap();
+    let listener =
+        std::net::TcpListener::bind(("127.0.0.1", port as u16)).map_err(|e| e.to_string())?;
+    eprintln!(
+        "serving {backend_kind} backend on 127.0.0.1:{port} \
+         (one JSON object per line; {{\"points\":[..]}} or {{\"cmd\":\"stats\"}})"
+    );
+    ntangent::coordinator::service::serve_tcp(listener, service.handle())
+        .map_err(|e| e.to_string())
+}
+
+// ------------------------------------------------------------------- info
+
+fn cmd_info(_raw: &[String]) -> Result<(), String> {
+    println!("n-TangentProp tables");
+    println!(
+        "{:>4} {:>10} {:>14} {:>12}",
+        "n", "p(n)", "Hardy-Raman.", "ops/layer"
+    );
+    let engine = NtpEngine::new(12);
+    for n in 1..=12 {
+        println!(
+            "{n:>4} {:>10} {:>14.1} {:>12}",
+            partition_count(n),
+            hardy_ramanujan(n),
+            engine.op_count(n, 1)
+        );
+    }
+    match Runtime::cpu() {
+        Ok(rt) => println!(
+            "\nPJRT: platform={} devices={}",
+            rt.platform(),
+            rt.device_count()
+        ),
+        Err(e) => println!("\nPJRT unavailable: {e:#}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,151 @@
+//! Checkpoints: JSON serialization of trained networks (+ metadata such
+//! as the inferred λ), shared by the CLI trainer, the serving coordinator
+//! and the examples.
+
+use super::{params, Mlp};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A saved model: architecture, flat parameters and training metadata.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub sizes: Vec<usize>,
+    pub theta: Vec<f64>,
+    pub lambda: Option<f64>,
+    pub profile_k: Option<usize>,
+    pub final_loss: Option<f64>,
+}
+
+impl Checkpoint {
+    pub fn from_mlp(mlp: &Mlp) -> Checkpoint {
+        Checkpoint {
+            sizes: mlp.sizes(),
+            theta: params::flatten(mlp).into_vec(),
+            lambda: None,
+            profile_k: None,
+            final_loss: None,
+        }
+    }
+
+    /// Rebuild the network.
+    pub fn to_mlp(&self) -> Result<Mlp> {
+        let mut rng = Prng::seeded(0);
+        let mut mlp = Mlp::new(&self.sizes, &mut rng);
+        anyhow::ensure!(
+            self.theta.len() == mlp.n_params(),
+            "checkpoint has {} params, architecture {:?} wants {}",
+            self.theta.len(),
+            self.sizes,
+            mlp.n_params()
+        );
+        params::unflatten_into(
+            &mut mlp,
+            &Tensor::from_vec(self.theta.clone(), &[self.theta.len()]),
+        );
+        Ok(mlp)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            (
+                "sizes",
+                Json::Arr(self.sizes.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+            ("theta", Json::num_arr(&self.theta)),
+        ];
+        if let Some(l) = self.lambda {
+            fields.push(("lambda", Json::Num(l)));
+        }
+        if let Some(k) = self.profile_k {
+            fields.push(("profile_k", Json::Num(k as f64)));
+        }
+        if let Some(f) = self.final_loss {
+            fields.push(("final_loss", Json::Num(f)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Checkpoint> {
+        let sizes = v
+            .get("sizes")
+            .and_then(Json::as_arr)
+            .context("checkpoint missing sizes")?
+            .iter()
+            .map(|s| s.as_usize().context("bad size"))
+            .collect::<Result<Vec<_>>>()?;
+        let theta = v
+            .get("theta")
+            .and_then(Json::as_f64_vec)
+            .context("checkpoint missing theta")?;
+        Ok(Checkpoint {
+            sizes,
+            theta,
+            lambda: v.get("lambda").and_then(Json::as_f64),
+            profile_k: v.get("profile_k").and_then(Json::as_usize),
+            final_loss: v.get("final_loss").and_then(Json::as_f64),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().dump())
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let v = Json::parse(&text).context("checkpoint is not valid JSON")?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_json() {
+        let mut rng = Prng::seeded(4);
+        let mlp = Mlp::uniform(1, 6, 2, 1, &mut rng);
+        let mut ck = Checkpoint::from_mlp(&mlp);
+        ck.lambda = Some(0.5);
+        ck.profile_k = Some(1);
+        ck.final_loss = Some(1e-6);
+        let parsed = Checkpoint::from_json(&Json::parse(&ck.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(parsed.sizes, ck.sizes);
+        assert_eq!(parsed.lambda, Some(0.5));
+        assert_eq!(parsed.profile_k, Some(1));
+        let back = parsed.to_mlp().unwrap();
+        let x = Tensor::linspace(-1.0, 1.0, 4).reshape(&[4, 1]);
+        assert_eq!(back.forward(&x), mlp.forward(&x));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut rng = Prng::seeded(5);
+        let mlp = Mlp::uniform(1, 4, 1, 1, &mut rng);
+        let ck = Checkpoint::from_mlp(&mlp);
+        let path = std::env::temp_dir().join("ntangent_ck_test.json");
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.theta, ck.theta);
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let ck = Checkpoint {
+            sizes: vec![1, 4, 1],
+            theta: vec![0.0; 3], // wrong
+            lambda: None,
+            profile_k: None,
+            final_loss: None,
+        };
+        assert!(ck.to_mlp().is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Densely-connected feed-forward networks (the paper's model family) and
+//! parameter (un)flattening for the optimizers and the PJRT artifacts.
+
+pub mod checkpoint;
+pub mod params;
+
+pub use checkpoint::Checkpoint;
+
+use crate::autodiff::{Graph, NodeId};
+use crate::tensor::Tensor;
+use crate::util::prng::Prng;
+
+/// A dense layer `y = x W^T + b` with `W: [out, in]`, `b: [out]`.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    pub w: Tensor,
+    pub b: Tensor,
+}
+
+impl Dense {
+    /// Xavier/Glorot-uniform initialization (the PINN default).
+    pub fn xavier(input: usize, output: usize, rng: &mut Prng) -> Dense {
+        let bound = (6.0 / (input + output) as f64).sqrt();
+        Dense {
+            w: Tensor::rand_uniform(&[output, input], -bound, bound, rng),
+            b: Tensor::zeros(&[output]),
+        }
+    }
+
+    pub fn fan_in(&self) -> usize {
+        self.w.shape()[1]
+    }
+
+    pub fn fan_out(&self) -> usize {
+        self.w.shape()[0]
+    }
+
+    /// `x: [B, in] -> [B, out]`.
+    pub fn apply(&self, x: &Tensor) -> Tensor {
+        x.matmul_nt(&self.w).add_bias(&self.b)
+    }
+
+    /// Linear part only (no bias) — derivative channels are affine-free.
+    pub fn apply_linear(&self, x: &Tensor) -> Tensor {
+        x.matmul_nt(&self.w)
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.w.numel() + self.b.numel()
+    }
+}
+
+/// A feed-forward network with tanh hidden activations and a linear head —
+/// the architecture of the paper's experiments (e.g. 3 hidden layers of 24
+/// neurons for the standard PINN).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Dense>,
+}
+
+impl Mlp {
+    /// Build from a size spec like `[1, 24, 24, 24, 1]`.
+    pub fn new(sizes: &[usize], rng: &mut Prng) -> Mlp {
+        assert!(sizes.len() >= 2, "need at least input and output sizes");
+        let layers = sizes
+            .windows(2)
+            .map(|w| Dense::xavier(w[0], w[1], rng))
+            .collect();
+        Mlp { layers }
+    }
+
+    /// Convenience: `input -> width x depth -> output`.
+    pub fn uniform(input: usize, width: usize, depth: usize, output: usize, rng: &mut Prng) -> Mlp {
+        let mut sizes = vec![input];
+        sizes.extend(std::iter::repeat(width).take(depth));
+        sizes.push(output);
+        Mlp::new(&sizes, rng)
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].fan_in()
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().unwrap().fan_out()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(Dense::n_params).sum()
+    }
+
+    /// Layer widths, e.g. `[1, 24, 24, 24, 1]`.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut out = vec![self.input_dim()];
+        out.extend(self.layers.iter().map(Dense::fan_out));
+        out
+    }
+
+    /// Plain forward pass `x: [B, in] -> [B, out]` (tanh hidden, linear head).
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let last = self.layers.len() - 1;
+        let mut h = x.clone();
+        for (i, layer) in self.layers.iter().enumerate() {
+            h = layer.apply(&h);
+            if i != last {
+                h = h.tanh();
+            }
+        }
+        h
+    }
+
+    /// Record the forward pass on an autodiff [`Graph`].
+    ///
+    /// Parameters enter as graph nodes (`param_nodes`, two per layer:
+    /// `W` then `b`) so the caller decides whether they are constants
+    /// (input-derivative benchmarks) or inputs (training).
+    pub fn forward_graph(&self, g: &mut Graph, x: NodeId, param_nodes: &[NodeId]) -> NodeId {
+        assert_eq!(param_nodes.len(), 2 * self.layers.len());
+        let last = self.layers.len() - 1;
+        let mut h = x;
+        for (i, _) in self.layers.iter().enumerate() {
+            let w = param_nodes[2 * i];
+            let b = param_nodes[2 * i + 1];
+            let lin = g.matmul_nt(h, w);
+            h = g.add_bias(lin, b);
+            if i != last {
+                h = g.tanh(h);
+            }
+        }
+        h
+    }
+
+    /// Embed all parameters as constants; returns the node list expected by
+    /// [`Mlp::forward_graph`].
+    pub fn const_param_nodes(&self, g: &mut Graph) -> Vec<NodeId> {
+        let mut nodes = Vec::with_capacity(2 * self.layers.len());
+        for layer in &self.layers {
+            nodes.push(g.constant(layer.w.clone()));
+            nodes.push(g.constant(layer.b.clone()));
+        }
+        nodes
+    }
+
+    /// Declare all parameters as graph inputs; returns the node list.
+    /// Evaluation order of the slots matches [`params::flatten_tensors`].
+    pub fn input_param_nodes(&self, g: &mut Graph) -> Vec<NodeId> {
+        let mut nodes = Vec::with_capacity(2 * self.layers.len());
+        for layer in &self.layers {
+            nodes.push(g.input(layer.w.shape()));
+            nodes.push(g.input(layer.b.shape()));
+        }
+        nodes
+    }
+
+    /// Parameter tensors in slot order (`W0, b0, W1, b1, ...`).
+    pub fn param_tensors(&self) -> Vec<Tensor> {
+        let mut out = Vec::with_capacity(2 * self.layers.len());
+        for layer in &self.layers {
+            out.push(layer.w.clone());
+            out.push(layer.b.clone());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::allclose_slice;
+
+    #[test]
+    fn shapes_and_counts() {
+        let mut rng = Prng::seeded(3);
+        let mlp = Mlp::uniform(1, 24, 3, 1, &mut rng);
+        assert_eq!(mlp.sizes(), vec![1, 24, 24, 24, 1]);
+        // M = 24*1+24 + 24*24+24 + 24*24+24 + 1*24+1 = 48 + 600 + 600 + 25
+        assert_eq!(mlp.n_params(), 1273);
+        let x = Tensor::zeros(&[7, 1]);
+        assert_eq!(mlp.forward(&x).shape(), &[7, 1]);
+    }
+
+    #[test]
+    fn xavier_bounds() {
+        let mut rng = Prng::seeded(4);
+        let d = Dense::xavier(24, 24, &mut rng);
+        let bound = (6.0 / 48.0f64).sqrt();
+        assert!(d.w.data().iter().all(|x| x.abs() <= bound));
+        assert!(d.b.data().iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn graph_forward_matches_tensor_forward() {
+        let mut rng = Prng::seeded(5);
+        let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+        let x = Tensor::linspace(-1.0, 1.0, 6).reshape(&[6, 1]);
+
+        let direct = mlp.forward(&x);
+
+        let mut g = Graph::new();
+        let xn = g.input(&[6, 1]);
+        let pn = mlp.const_param_nodes(&mut g);
+        let out = mlp.forward_graph(&mut g, xn, &pn);
+        let vals = g.eval(&[x.clone()], &[out]);
+        assert!(allclose_slice(vals.get(out).data(), direct.data(), 1e-14, 1e-14));
+
+        // Params-as-inputs path must agree too.
+        let mut g2 = Graph::new();
+        let xn2 = g2.input(&[6, 1]);
+        let pn2 = mlp.input_param_nodes(&mut g2);
+        let out2 = mlp.forward_graph(&mut g2, xn2, &pn2);
+        let mut inputs = vec![x];
+        inputs.extend(mlp.param_tensors());
+        let vals2 = g2.eval(&inputs, &[out2]);
+        assert!(allclose_slice(vals2.get(out2).data(), direct.data(), 1e-14, 1e-14));
+    }
+
+    #[test]
+    fn deterministic_init_given_seed() {
+        let a = Mlp::uniform(1, 4, 2, 1, &mut Prng::seeded(9));
+        let b = Mlp::uniform(1, 4, 2, 1, &mut Prng::seeded(9));
+        assert_eq!(a.layers[0].w, b.layers[0].w);
+    }
+}

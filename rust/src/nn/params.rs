@@ -1,0 +1,144 @@
+//! Parameter flattening — the bridge between [`crate::nn::Mlp`] structure,
+//! the flat vectors the optimizers work on, and the single `theta` input
+//! of the AOT-compiled PJRT artifacts.
+//!
+//! Order: `W0 (row-major), b0, W1, b1, ...` — the Python side
+//! (`python/compile/model.py::unflatten`) uses the same order so a flat
+//! vector trained in Rust is directly loadable there and vice versa.
+
+use super::Mlp;
+use crate::tensor::Tensor;
+
+/// Flatten all parameters of an MLP into one `[M]` tensor.
+pub fn flatten(mlp: &Mlp) -> Tensor {
+    let mut data = Vec::with_capacity(mlp.n_params());
+    for layer in &mlp.layers {
+        data.extend_from_slice(layer.w.data());
+        data.extend_from_slice(layer.b.data());
+    }
+    Tensor::from_vec(data, &[mlp.n_params()])
+}
+
+/// Flatten a list of tensors (e.g. per-parameter gradients in slot order)
+/// into one `[sum numel]` tensor.
+pub fn flatten_tensors(tensors: &[Tensor]) -> Tensor {
+    let total: usize = tensors.iter().map(Tensor::numel).sum();
+    let mut data = Vec::with_capacity(total);
+    for t in tensors {
+        data.extend_from_slice(t.data());
+    }
+    Tensor::from_vec(data, &[total])
+}
+
+/// Write a flat `[M]` vector back into the MLP's layers.
+pub fn unflatten_into(mlp: &mut Mlp, flat: &Tensor) {
+    assert_eq!(flat.numel(), mlp.n_params(), "flat vector length mismatch");
+    let mut off = 0;
+    for layer in &mut mlp.layers {
+        let wn = layer.w.numel();
+        layer
+            .w
+            .data_mut()
+            .copy_from_slice(&flat.data()[off..off + wn]);
+        off += wn;
+        let bn = layer.b.numel();
+        layer
+            .b
+            .data_mut()
+            .copy_from_slice(&flat.data()[off..off + bn]);
+        off += bn;
+    }
+}
+
+/// Split a flat `[M]` vector into per-parameter tensors in slot order
+/// (`W0, b0, W1, b1, ...`), using `mlp` for the shapes.
+pub fn split_like(mlp: &Mlp, flat: &Tensor) -> Vec<Tensor> {
+    assert_eq!(flat.numel(), mlp.n_params());
+    let mut out = Vec::with_capacity(2 * mlp.layers.len());
+    let mut off = 0;
+    for layer in &mlp.layers {
+        for shape in [layer.w.shape(), layer.b.shape()] {
+            let n: usize = shape.iter().product();
+            out.push(Tensor::from_vec(
+                flat.data()[off..off + n].to_vec(),
+                shape,
+            ));
+            off += n;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::ptest;
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        ptest::quickcheck(
+            |rng| {
+                let width = 1 + rng.below(6) as usize;
+                let depth = 1 + rng.below(3) as usize;
+                let mut mlp = Mlp::uniform(1, width, depth, 1, rng);
+                // Randomize biases too (xavier zeroes them).
+                for layer in &mut mlp.layers {
+                    let n = layer.b.numel();
+                    layer.b = Tensor::from_vec(rng.normal_vec(n, 0.0, 1.0), &[n]);
+                }
+                mlp
+            },
+            |mlp| {
+                let flat = flatten(mlp);
+                if flat.numel() != mlp.n_params() {
+                    return Err("flatten length".into());
+                }
+                let mut rng2 = Prng::seeded(0);
+                let mut other = Mlp::uniform(
+                    1,
+                    mlp.layers[0].fan_out(),
+                    mlp.layers.len() - 1,
+                    1,
+                    &mut rng2,
+                );
+                unflatten_into(&mut other, &flat);
+                let flat2 = flatten(&other);
+                if flat.data() == flat2.data() {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn split_matches_param_tensors() {
+        let mut rng = Prng::seeded(8);
+        let mlp = Mlp::uniform(1, 5, 2, 1, &mut rng);
+        let flat = flatten(&mlp);
+        let split = split_like(&mlp, &flat);
+        let direct = mlp.param_tensors();
+        assert_eq!(split.len(), direct.len());
+        for (a, b) in split.iter().zip(&direct) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn flatten_tensors_concatenates() {
+        let a = Tensor::from_vec(vec![1.0, 2.0], &[2]);
+        let b = Tensor::from_vec(vec![3.0], &[1]);
+        let f = flatten_tensors(&[a, b]);
+        assert_eq!(f.data(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn unflatten_length_checked() {
+        let mut rng = Prng::seeded(1);
+        let mut mlp = Mlp::uniform(1, 4, 1, 1, &mut rng);
+        unflatten_into(&mut mlp, &Tensor::zeros(&[3]));
+    }
+}

@@ -1,0 +1,260 @@
+//! Smooth activation functions with derivative *towers*: all of
+//! `σ, σ', ..., σ^(n)` evaluated at once, which is what n-TangentProp
+//! consumes at every layer (eq. (5b)).
+//!
+//! For tanh the tower is generated from the polynomial recurrence
+//! `σ^(0) = t`, `σ^(k+1) = P_k'(t)·(1 - t²)` where `t = tanh(x)` — each
+//! `σ^(k)` is a degree-`k+1` polynomial in `t`, so the whole tower costs
+//! one `tanh` plus `O(n²)` multiply-adds per element.
+
+use crate::tensor::Tensor;
+
+/// A smooth (C^∞), parameter-free activation with computable derivative
+/// towers — the class of activations the paper's theorem covers.
+pub trait SmoothActivation: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// σ(x) for a scalar.
+    fn eval(&self, x: f64) -> f64;
+
+    /// `[σ(x), σ'(x), ..., σ^(n)(x)]` for a scalar.
+    fn tower_scalar(&self, x: f64, n: usize) -> Vec<f64>;
+
+    /// Tower for every element of a tensor: returns `n+1` tensors shaped
+    /// like `x`. Implementations should share work across orders.
+    fn tower(&self, x: &Tensor, n: usize) -> Vec<Tensor> {
+        // Generic fallback: scalar tower per element.
+        let mut outs: Vec<Tensor> = (0..=n).map(|_| Tensor::zeros(x.shape())).collect();
+        for (i, &v) in x.data().iter().enumerate() {
+            let t = self.tower_scalar(v, n);
+            for (k, out) in outs.iter_mut().enumerate() {
+                out.data_mut()[i] = t[k];
+            }
+        }
+        outs
+    }
+}
+
+/// Coefficient table for the tanh derivative polynomials:
+/// `σ^(k)(x) = P_k(tanh x)` with `P_0(t) = t`,
+/// `P_{k+1}(t) = P_k'(t) · (1 - t²)`.
+///
+/// `coeffs[k][m]` is the coefficient of `t^m` in `P_k` (degree k+1).
+#[derive(Clone, Debug)]
+pub struct TanhTower {
+    coeffs: Vec<Vec<f64>>,
+}
+
+impl TanhTower {
+    pub fn new(n_max: usize) -> TanhTower {
+        let mut coeffs: Vec<Vec<f64>> = Vec::with_capacity(n_max + 1);
+        coeffs.push(vec![0.0, 1.0]); // P_0 = t
+        for k in 0..n_max {
+            let pk = &coeffs[k];
+            // dP = P_k'(t)
+            let mut dp = vec![0.0; pk.len().max(2) - 1];
+            for (m, &c) in pk.iter().enumerate().skip(1) {
+                dp[m - 1] = c * m as f64;
+            }
+            // P_{k+1} = dp * (1 - t^2)
+            let mut next = vec![0.0; dp.len() + 2];
+            for (m, &c) in dp.iter().enumerate() {
+                next[m] += c;
+                next[m + 2] -= c;
+            }
+            coeffs.push(next);
+        }
+        TanhTower { coeffs }
+    }
+
+    pub fn n_max(&self) -> usize {
+        self.coeffs.len() - 1
+    }
+
+    /// Coefficients of `P_k` (low-to-high degree).
+    pub fn poly(&self, k: usize) -> &[f64] {
+        &self.coeffs[k]
+    }
+
+    /// Evaluate `P_k` at a scalar `t` (Horner).
+    pub fn eval_poly(&self, k: usize, t: f64) -> f64 {
+        let c = &self.coeffs[k];
+        let mut acc = 0.0;
+        for &ci in c.iter().rev() {
+            acc = acc * t + ci;
+        }
+        acc
+    }
+}
+
+/// tanh with a precomputed polynomial tower (the paper's activation).
+#[derive(Clone, Debug)]
+pub struct Tanh {
+    table: TanhTower,
+}
+
+impl Tanh {
+    pub fn new(n_max: usize) -> Tanh {
+        Tanh { table: TanhTower::new(n_max) }
+    }
+
+    pub fn table(&self) -> &TanhTower {
+        &self.table
+    }
+}
+
+impl SmoothActivation for Tanh {
+    fn name(&self) -> &'static str {
+        "tanh"
+    }
+
+    fn eval(&self, x: f64) -> f64 {
+        x.tanh()
+    }
+
+    fn tower_scalar(&self, x: f64, n: usize) -> Vec<f64> {
+        assert!(n <= self.table.n_max(), "tower order {n} > table n_max");
+        let t = x.tanh();
+        (0..=n).map(|k| self.table.eval_poly(k, t)).collect()
+    }
+
+    /// Vectorized tower: compute `tanh` once, then one contiguous Horner
+    /// sweep per order (hot path of the n-TP forward — §Perf: the
+    /// order-outer/element-inner layout lets the compiler vectorize the
+    /// Horner recurrence across elements).
+    fn tower(&self, x: &Tensor, n: usize) -> Vec<Tensor> {
+        assert!(n <= self.table.n_max(), "tower order {n} > table n_max");
+        let t = x.tanh();
+        let td = t.data();
+        (0..=n)
+            .map(|k| {
+                let coeffs = self.table.poly(k);
+                let mut out = Tensor::zeros(x.shape());
+                let od = out.data_mut();
+                match coeffs.len() {
+                    0 => {}
+                    1 => od.fill(coeffs[0]),
+                    _ => {
+                        let top = coeffs[coeffs.len() - 1];
+                        for (o, &ti) in od.iter_mut().zip(td) {
+                            let mut acc = top;
+                            for &ci in coeffs[..coeffs.len() - 1].iter().rev() {
+                                acc = acc * ti + ci;
+                            }
+                            *o = acc;
+                        }
+                    }
+                }
+                out
+            })
+            .collect()
+    }
+}
+
+/// sin activation: `σ^(k)(x) = sin(x + kπ/2)`. Exact and cheap — used by
+/// the test-suite as an independent oracle and useful for spectral-bias
+/// experiments (SIREN-style PINNs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Sine;
+
+impl SmoothActivation for Sine {
+    fn name(&self) -> &'static str {
+        "sin"
+    }
+
+    fn eval(&self, x: f64) -> f64 {
+        x.sin()
+    }
+
+    fn tower_scalar(&self, x: f64, n: usize) -> Vec<f64> {
+        (0..=n)
+            .map(|k| (x + k as f64 * std::f64::consts::FRAC_PI_2).sin())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest;
+
+    #[test]
+    fn tanh_polynomials_low_orders() {
+        let tt = TanhTower::new(3);
+        assert_eq!(tt.poly(0), &[0.0, 1.0]); // t
+        assert_eq!(tt.poly(1), &[1.0, 0.0, -1.0]); // 1 - t²
+        assert_eq!(tt.poly(2), &[0.0, -2.0, 0.0, 2.0]); // -2t + 2t³
+        assert_eq!(tt.poly(3), &[-2.0, 0.0, 8.0, 0.0, -6.0]); // -2 + 8t² - 6t⁴
+    }
+
+    #[test]
+    fn tanh_tower_matches_finite_differences() {
+        let act = Tanh::new(6);
+        ptest::quickcheck(
+            |rng| rng.uniform_in(-2.0, 2.0),
+            |&x| {
+                let tower = act.tower_scalar(x, 4);
+                // FD each order from the previous one.
+                let eps = 1e-6;
+                for k in 1..=4 {
+                    let up = act.tower_scalar(x + eps, k - 1)[k - 1];
+                    let dn = act.tower_scalar(x - eps, k - 1)[k - 1];
+                    let fd = (up - dn) / (2.0 * eps);
+                    let scale = tower[k].abs().max(1.0);
+                    if (tower[k] - fd).abs() > 2e-4 * scale {
+                        return Err(format!("order {k} at x={x}: {} vs fd {fd}", tower[k]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn vectorized_tower_matches_scalar() {
+        let act = Tanh::new(8);
+        let x = Tensor::linspace(-2.5, 2.5, 11);
+        let towers = act.tower(&x, 8);
+        assert_eq!(towers.len(), 9);
+        for (i, &xi) in x.data().iter().enumerate() {
+            let scalar = act.tower_scalar(xi, 8);
+            for k in 0..=8 {
+                assert!(
+                    (towers[k].data()[i] - scalar[k]).abs() < 1e-12,
+                    "k={k} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sine_tower_rotates() {
+        let s = Sine;
+        let x = 0.3;
+        let tower = s.tower_scalar(x, 4);
+        assert!((tower[0] - x.sin()).abs() < 1e-15);
+        assert!((tower[1] - x.cos()).abs() < 1e-15);
+        assert!((tower[2] + x.sin()).abs() < 1e-15);
+        assert!((tower[3] + x.cos()).abs() < 1e-15);
+        assert!((tower[4] - x.sin()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn generic_tensor_tower_fallback_matches() {
+        let s = Sine;
+        let x = Tensor::linspace(-1.0, 1.0, 5);
+        let towers = s.tower(&x, 3);
+        for (i, &xi) in x.data().iter().enumerate() {
+            let sc = s.tower_scalar(xi, 3);
+            for k in 0..=3 {
+                assert_eq!(towers[k].data()[i], sc[k]);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "tower order")]
+    fn tower_bounds_checked() {
+        Tanh::new(2).tower_scalar(0.0, 3);
+    }
+}

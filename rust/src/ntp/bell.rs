@@ -1,0 +1,222 @@
+//! Faà di Bruno coefficients (partial Bell polynomial coefficients of the
+//! second kind) — the constants `C_p` of eq. (4)/(5b).
+//!
+//! For a partition `p` of `n`,
+//! `C_p = n! / ( Π_j p_j! · (j!)^{p_j} )`.
+//! The paper recommends precomputing and caching these tables; that is
+//! exactly what [`FaaDiBruno`] does (once per engine, up to `n_max`).
+
+use super::partitions::{partitions, Partition};
+#[cfg(test)]
+use super::partitions::partition_count;
+
+/// One term of the Faà di Bruno sum for a fixed derivative order.
+#[derive(Clone, Debug)]
+pub struct Term {
+    /// Integer coefficient `C_p` (exact in u128, exposed as f64).
+    pub coeff: f64,
+    /// `|p|` — which derivative of the outer function this term multiplies.
+    pub outer_order: usize,
+    /// Non-zero `(j, p_j)` pairs: the product `Π_j (g^{(j)})^{p_j}`.
+    pub factors: Vec<(usize, usize)>,
+}
+
+/// Precomputed Faà di Bruno tables for derivative orders `1..=n_max`.
+#[derive(Clone, Debug)]
+pub struct FaaDiBruno {
+    pub n_max: usize,
+    /// `terms[i]` holds the sum for derivative order `i` (index 0 unused).
+    terms: Vec<Vec<Term>>,
+}
+
+fn factorial_u128(n: usize) -> u128 {
+    (1..=n as u128).product()
+}
+
+/// Exact `C_p` as u128 (panics on overflow — fine for n ≤ 25).
+fn coeff_u128(p: &Partition) -> u128 {
+    let mut denom: u128 = 1;
+    for &(j, c) in &p.parts {
+        denom = denom
+            .checked_mul(factorial_u128(c))
+            .and_then(|d| d.checked_mul(factorial_u128(j).checked_pow(c as u32).unwrap()))
+            .expect("Faà di Bruno coefficient overflow");
+    }
+    factorial_u128(p.n) / denom
+}
+
+impl FaaDiBruno {
+    /// Build tables up to `n_max` derivatives.
+    pub fn new(n_max: usize) -> FaaDiBruno {
+        let mut terms = vec![Vec::new()];
+        for n in 1..=n_max {
+            let mut row = Vec::new();
+            for p in partitions(n) {
+                row.push(Term {
+                    coeff: coeff_u128(&p) as f64,
+                    outer_order: p.order(),
+                    factors: p.parts.clone(),
+                });
+            }
+            terms.push(row);
+        }
+        FaaDiBruno { n_max, terms }
+    }
+
+    /// Terms of the order-`n` Faà di Bruno sum.
+    pub fn terms(&self, n: usize) -> &[Term] {
+        assert!(n >= 1 && n <= self.n_max, "order {n} outside table (n_max={})", self.n_max);
+        &self.terms[n]
+    }
+
+    /// Total number of table terms `Σ_{i<=n} p(i)` — the per-layer work
+    /// factor of the quasilinear bound.
+    pub fn total_terms(&self, n: usize) -> usize {
+        (1..=n).map(|i| self.terms[i].len()).sum()
+    }
+
+    /// Evaluate `d^n/dx^n f(g(x))` for scalar towers:
+    /// `f_derivs[k] = f^{(k)}(g(x))` (k = 0..=n) and
+    /// `g_derivs[j] = g^{(j)}(x)` (j = 0..=n).
+    ///
+    /// The reference implementation of the formula; the tensor/tape
+    /// variants in [`crate::ntp::forward`] and [`crate::ntp::tape`] must
+    /// agree with this exactly, and the scalar form is also what the
+    /// ground-truth Burgers solver uses.
+    pub fn compose_scalar(&self, n: usize, f_derivs: &[f64], g_derivs: &[f64]) -> f64 {
+        assert!(f_derivs.len() > n && g_derivs.len() > n);
+        if n == 0 {
+            return f_derivs[0];
+        }
+        let mut acc = 0.0;
+        for term in self.terms(n) {
+            let mut prod = term.coeff * f_derivs[term.outer_order];
+            for &(j, c) in &term.factors {
+                prod *= g_derivs[j].powi(c as i32);
+            }
+            acc += prod;
+        }
+        acc
+    }
+}
+
+/// Bell numbers B_n (OEIS A000110) — the value of the complete Bell
+/// polynomial at all-ones, used as a table sanity invariant:
+/// `Σ_p C_p = B_n`.
+pub fn bell_number(n: usize) -> u128 {
+    // Bell triangle.
+    let mut row = vec![1u128];
+    for _ in 0..n {
+        let mut next = Vec::with_capacity(row.len() + 1);
+        next.push(*row.last().unwrap());
+        for v in &row {
+            let last = *next.last().unwrap();
+            next.push(last + v);
+        }
+        row = next;
+    }
+    row[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coefficients_sum_to_bell_numbers() {
+        // Σ_{p ∈ P(n)} C_p = B_n: 1, 2, 5, 15, 52, 203, 877, 4140, ...
+        let fdb = FaaDiBruno::new(12);
+        for n in 1..=12 {
+            let total: f64 = fdb.terms(n).iter().map(|t| t.coeff).sum();
+            assert_eq!(total as u128, bell_number(n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn order3_terms_are_the_textbook_ones() {
+        // (f∘g)''' = f'''·(g')³ + 3 f''·g'·g'' + f'·g'''
+        let fdb = FaaDiBruno::new(3);
+        let terms = fdb.terms(3);
+        assert_eq!(terms.len(), 3);
+        let find = |outer: usize| terms.iter().find(|t| t.outer_order == outer).unwrap();
+        assert_eq!(find(3).coeff, 1.0);
+        assert_eq!(find(3).factors, vec![(1, 3)]);
+        assert_eq!(find(2).coeff, 3.0);
+        assert_eq!(find(2).factors, vec![(1, 1), (2, 1)]);
+        assert_eq!(find(1).coeff, 1.0);
+        assert_eq!(find(1).factors, vec![(3, 1)]);
+    }
+
+    #[test]
+    fn order4_coefficients() {
+        // (f∘g)'''' : 1·f''''(g')⁴ + 6·f'''(g')²g'' + 3·f''(g'')² + 4·f''g'g''' + 1·f'g''''
+        let fdb = FaaDiBruno::new(4);
+        let mut coeffs: Vec<f64> = fdb.terms(4).iter().map(|t| t.coeff).collect();
+        coeffs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(coeffs, vec![1.0, 1.0, 3.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn compose_scalar_chain_rule_order1() {
+        let fdb = FaaDiBruno::new(4);
+        // f(g) with f'(g)=2, g'(x)=3 → (f∘g)' = 6
+        let f = [0.0, 2.0, 0.0, 0.0, 0.0];
+        let g = [0.0, 3.0, 0.0, 0.0, 0.0];
+        assert_eq!(fdb.compose_scalar(1, &f, &g), 6.0);
+    }
+
+    #[test]
+    fn compose_scalar_matches_analytic_example() {
+        // h(x) = exp(sin x): h^{(n)} computable since f=exp has all derivs
+        // equal to exp(g), g=sin has the rotating tower.
+        let fdb = FaaDiBruno::new(6);
+        let x: f64 = 0.7;
+        let e = x.sin().exp();
+        let f: Vec<f64> = (0..=6).map(|_| e).collect();
+        let g: Vec<f64> = (0..=6)
+            .map(|k| match k % 4 {
+                0 => x.sin(),
+                1 => x.cos(),
+                2 => -x.sin(),
+                _ => -x.cos(),
+            })
+            .collect();
+        // Analytic derivatives of exp(sin x) at x (via symbolic expansion):
+        let s = x.sin();
+        let c = x.cos();
+        let h1 = e * c;
+        let h2 = e * (c * c - s);
+        let h3 = e * (c * c * c - 3.0 * s * c - c);
+        let h4 = e * (c.powi(4) - 6.0 * s * c * c - 4.0 * c * c + 3.0 * s * s + s);
+        for (n, expect) in [(1, h1), (2, h2), (3, h3), (4, h4)] {
+            let got = fdb.compose_scalar(n, &f, &g);
+            assert!(
+                (got - expect).abs() < 1e-10 * expect.abs().max(1.0),
+                "n={n}: {got} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn term_counts_follow_partition_function() {
+        let fdb = FaaDiBruno::new(10);
+        for n in 1..=10 {
+            assert_eq!(fdb.terms(n).len() as u64, partition_count(n));
+        }
+        assert_eq!(fdb.total_terms(3), (1 + 2 + 3) as usize);
+    }
+
+    #[test]
+    fn bell_numbers_oeis() {
+        let expect: [u128; 9] = [1, 1, 2, 5, 15, 52, 203, 877, 4140];
+        for (n, &e) in expect.iter().enumerate() {
+            assert_eq!(bell_number(n), e, "B_{n}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside table")]
+    fn out_of_range_order_panics() {
+        FaaDiBruno::new(3).terms(4);
+    }
+}

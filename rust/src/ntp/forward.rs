@@ -1,0 +1,313 @@
+//! The n-TangentProp forward pass (Algorithm 1 of the paper), pure tensor
+//! version — the inference/benchmark hot path.
+//!
+//! Channel state per layer: `y[i] = d^i z^ℓ / dx^i`, shape `[B, width]`.
+//! Crossing an activation applies Faà di Bruno (eq. 5b) using the
+//! activation's derivative tower; crossing the affine layer is linear in
+//! every channel (eq. 5a), with the bias entering channel 0 only.
+
+use super::activation::{SmoothActivation, Tanh};
+use super::bell::FaaDiBruno;
+use crate::nn::Mlp;
+use crate::tensor::Tensor;
+
+/// Engine with precomputed Faà di Bruno + activation-tower tables for up
+/// to `n_max` derivatives.
+pub struct NtpEngine {
+    n_max: usize,
+    fdb: FaaDiBruno,
+    act: Tanh,
+}
+
+impl NtpEngine {
+    /// Build tables for up to `n_max` derivatives.
+    pub fn new(n_max: usize) -> NtpEngine {
+        NtpEngine {
+            n_max,
+            fdb: FaaDiBruno::new(n_max),
+            act: Tanh::new(n_max),
+        }
+    }
+
+    pub fn n_max(&self) -> usize {
+        self.n_max
+    }
+
+    pub fn tables(&self) -> &FaaDiBruno {
+        &self.fdb
+    }
+
+    pub fn activation(&self) -> &Tanh {
+        &self.act
+    }
+
+    /// Compute `[u, u', ..., u^(n_max)]` for `x: [B, 1]`.
+    pub fn forward(&self, mlp: &Mlp, x: &Tensor) -> Vec<Tensor> {
+        self.forward_n(mlp, x, self.n_max)
+    }
+
+    /// Compute `[u, u', ..., u^(n)]` for `n <= n_max`.
+    ///
+    /// Single forward pass; all channels advance together (the paper's
+    /// headline algorithm).
+    pub fn forward_n(&self, mlp: &Mlp, x: &Tensor, n: usize) -> Vec<Tensor> {
+        assert!(n <= self.n_max, "n={n} exceeds engine n_max={}", self.n_max);
+        assert_eq!(x.rank(), 2, "x must be [B, 1]");
+        assert_eq!(x.shape()[1], 1, "n-TangentProp propagates d/dx of a scalar input");
+        assert_eq!(mlp.input_dim(), 1, "network input dim must be 1");
+        let batch = x.shape()[0];
+
+        // First affine layer seeds the channels:
+        //   y0 = x W^T + b, y1 = 1 W^T (d x/dx = 1), y_i = 0 for i >= 2.
+        let l0 = &mlp.layers[0];
+        let mut y: Vec<Tensor> = Vec::with_capacity(n + 1);
+        y.push(l0.apply(x));
+        if n >= 1 {
+            y.push(Tensor::ones(&[batch, 1]).matmul_nt(&l0.w));
+        }
+        for _ in 2..=n {
+            y.push(Tensor::zeros(y[0].shape()));
+        }
+
+        for layer in &mlp.layers[1..] {
+            // Activation tower σ^(s)(y0), s = 0..=n, one tanh per element.
+            let towers = self.act.tower(&y[0], n);
+            // §Perf: precompute the channel powers y_j^c every partition
+            // term needs (c ≤ n/j), once per layer, so the combine loops
+            // are pure fused multiply-adds with no powi in the hot loop.
+            // All ξ_i consume *pre-update* channels (j ≤ i is untouched
+            // by the downward loop), so one snapshot is valid throughout.
+            let powers = self.channel_powers(&y, n);
+            // Faà di Bruno combine, channels high-to-low so y_j (j < i)
+            // stay untouched while computing ξ_i.
+            for i in (1..=n).rev() {
+                y[i] = self.combine_channel(i, &towers, &powers);
+            }
+            // Affine layer: channel 0 gets the bias, others are linear.
+            let h0 = layer.apply(&towers[0]);
+            for item in y.iter_mut().skip(1) {
+                *item = layer.apply_linear(item);
+            }
+            y[0] = h0;
+        }
+        y
+    }
+
+    /// `powers[j][c-1] = y_j^c` for every multiplicity any partition term
+    /// of order ≤ n can request (`c ≤ n/j`), built incrementally.
+    fn channel_powers(&self, y: &[Tensor], n: usize) -> Vec<Vec<Tensor>> {
+        let mut powers: Vec<Vec<Tensor>> = Vec::with_capacity(n + 1);
+        powers.push(Vec::new()); // j = 0 unused
+        for (j, yj) in y.iter().enumerate().skip(1) {
+            let c_max = if j <= n { n / j } else { 0 };
+            let mut row = Vec::with_capacity(c_max);
+            if c_max >= 1 {
+                row.push(yj.clone());
+                for _ in 2..=c_max {
+                    let next = row.last().unwrap().mul(yj);
+                    row.push(next);
+                }
+            }
+            powers.push(row);
+        }
+        powers
+    }
+
+    /// ξ_i = Σ_{p∈P(i)} C_p σ^{(|p|)}(y0) Π_j y_j^{p_j}   (eq. 5b)
+    ///
+    /// §Perf: fused per-element accumulation over precomputed powers —
+    /// one output buffer, no temporaries or `powi` per term (the naive
+    /// version churned ~15 MB of temporaries per layer at n = 9).
+    fn combine_channel(&self, i: usize, towers: &[Tensor], powers: &[Vec<Tensor>]) -> Tensor {
+        let len = towers[0].numel();
+        let mut z = Tensor::zeros(towers[0].shape());
+        let zd = z.data_mut();
+        for term in self.fdb.terms(i) {
+            let tower = towers[term.outer_order].data();
+            let coeff = term.coeff;
+            match term.factors.as_slice() {
+                [(j, c)] => {
+                    let a = powers[*j][*c - 1].data();
+                    for e in 0..len {
+                        zd[e] += coeff * tower[e] * a[e];
+                    }
+                }
+                [(j1, c1), (j2, c2)] => {
+                    let a = powers[*j1][*c1 - 1].data();
+                    let b = powers[*j2][*c2 - 1].data();
+                    for e in 0..len {
+                        zd[e] += coeff * tower[e] * a[e] * b[e];
+                    }
+                }
+                factors => {
+                    let slices: Vec<&[f64]> = factors
+                        .iter()
+                        .map(|&(j, c)| powers[j][c - 1].data())
+                        .collect();
+                    for e in 0..len {
+                        let mut prod = coeff * tower[e];
+                        for s in &slices {
+                            prod *= s[e];
+                        }
+                        zd[e] += prod;
+                    }
+                }
+            }
+        }
+        z
+    }
+
+    /// Number of *tensor ops* the forward pass executes for order `n` and
+    /// `depth` hidden layers — the quasilinear `O(n·p(n)·L)` work factor
+    /// the benchmark reports annotate.
+    pub fn op_count(&self, n: usize, depth: usize) -> usize {
+        let combine: usize = (1..=n)
+            .map(|i| {
+                self.fdb
+                    .terms(i)
+                    .iter()
+                    .map(|t| 1 + t.factors.len())
+                    .sum::<usize>()
+            })
+            .sum();
+        depth * (combine + (n + 1) /* tower + matmuls */ + (n + 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::{higher, Graph};
+    use crate::util::prng::Prng;
+    use crate::util::{allclose_slice, ptest};
+
+    /// The paper's central claim, as a property: n-TangentProp equals the
+    /// repeated-autodiff derivative stack *exactly* (both are exact
+    /// methods), across random architectures and batches.
+    #[test]
+    fn matches_repeated_autodiff_exactly() {
+        ptest::check(
+            ptest::Config { cases: 20, seed: 0x5EED },
+            |rng: &mut Prng| {
+                let width = 2 + rng.below(12) as usize;
+                let depth = 1 + rng.below(3) as usize;
+                let batch = 1 + rng.below(5) as usize;
+                let n = 1 + rng.below(5) as usize;
+                let mlp = Mlp::uniform(1, width, depth, 1, rng);
+                let x = Tensor::rand_uniform(&[batch, 1], -1.5, 1.5, rng);
+                (mlp, x, n)
+            },
+            |(mlp, x, n)| {
+                let engine = NtpEngine::new(*n);
+                let ntp = engine.forward(mlp, x);
+
+                let mut g = Graph::new();
+                let xn = g.input(x.shape());
+                let pn = mlp.const_param_nodes(&mut g);
+                let u = mlp.forward_graph(&mut g, xn, &pn);
+                let stack = higher::derivative_stack(&mut g, u, xn, *n);
+                let vals = g.eval(&[x.clone()], &stack);
+
+                for order in 0..=*n {
+                    let a = ntp[order].data();
+                    let b = vals.get(stack[order]).data();
+                    if !allclose_slice(a, b, 1e-9, 1e-9) {
+                        return Err(format!(
+                            "order {order}: ntp {:?} vs autodiff {:?}",
+                            &a[..a.len().min(4)],
+                            &b[..b.len().min(4)]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn standard_pinn_architecture_order9() {
+        // The paper's 3x24 network at the highest order it benchmarks.
+        let mut rng = Prng::seeded(77);
+        let mlp = Mlp::uniform(1, 24, 3, 1, &mut rng);
+        let x = Tensor::linspace(-1.0, 1.0, 4).reshape(&[4, 1]);
+        let engine = NtpEngine::new(9);
+        let ntp = engine.forward(&mlp, &x);
+        assert_eq!(ntp.len(), 10);
+
+        let mut g = Graph::new();
+        let xn = g.input(x.shape());
+        let pn = mlp.const_param_nodes(&mut g);
+        let u = mlp.forward_graph(&mut g, xn, &pn);
+        let stack = higher::derivative_stack(&mut g, u, xn, 9);
+        let vals = g.eval(&[x], &stack);
+        for order in 0..=9 {
+            // Higher orders blow up in magnitude; compare relatively.
+            assert!(
+                allclose_slice(ntp[order].data(), vals.get(stack[order]).data(), 1e-7, 1e-8),
+                "order {order}"
+            );
+        }
+    }
+
+    #[test]
+    fn order_zero_matches_plain_forward() {
+        let mut rng = Prng::seeded(21);
+        let mlp = Mlp::uniform(1, 16, 2, 1, &mut rng);
+        let x = Tensor::linspace(-2.0, 2.0, 9).reshape(&[9, 1]);
+        let engine = NtpEngine::new(0);
+        let channels = engine.forward(&mlp, &x);
+        assert_eq!(channels.len(), 1);
+        assert!(allclose_slice(
+            channels[0].data(),
+            mlp.forward(&x).data(),
+            1e-14,
+            1e-14
+        ));
+    }
+
+    #[test]
+    fn channels_shapes() {
+        let mut rng = Prng::seeded(31);
+        let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+        let engine = NtpEngine::new(4);
+        let x = Tensor::zeros(&[6, 1]);
+        let channels = engine.forward(&mlp, &x);
+        for c in &channels {
+            assert_eq!(c.shape(), &[6, 1]);
+        }
+    }
+
+    #[test]
+    fn forward_n_truncates() {
+        let mut rng = Prng::seeded(32);
+        let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+        let engine = NtpEngine::new(6);
+        let x = Tensor::linspace(-1.0, 1.0, 3).reshape(&[3, 1]);
+        let full = engine.forward(&mlp, &x);
+        let trunc = engine.forward_n(&mlp, &x, 2);
+        assert_eq!(trunc.len(), 3);
+        for k in 0..=2 {
+            assert!(allclose_slice(trunc[k].data(), full[k].data(), 1e-12, 1e-12));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds engine")]
+    fn n_bounds_checked() {
+        let mut rng = Prng::seeded(33);
+        let mlp = Mlp::uniform(1, 4, 1, 1, &mut rng);
+        NtpEngine::new(2).forward_n(&mlp, &Tensor::zeros(&[1, 1]), 3);
+    }
+
+    #[test]
+    fn op_count_is_quasilinear_not_exponential() {
+        let engine = NtpEngine::new(12);
+        let ops: Vec<usize> = (1..=12).map(|n| engine.op_count(n, 3)).collect();
+        // Growth ratio should shrink toward 1 (subexponential), unlike the
+        // autodiff graph whose growth ratio stays >= some c > 1.
+        let r_early = ops[3] as f64 / ops[2] as f64;
+        let r_late = ops[11] as f64 / ops[10] as f64;
+        assert!(r_late < r_early, "{ops:?}");
+        assert!(r_late < 1.6, "late growth ratio {r_late}");
+    }
+}

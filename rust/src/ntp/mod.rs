@@ -1,0 +1,20 @@
+//! n-TangentProp: exact higher-order input derivatives of feed-forward
+//! networks in quasilinear time (the paper's contribution).
+//!
+//! Instead of re-differentiating the computational graph `n` times
+//! (exponential — see [`crate::autodiff::higher`]), n-TangentProp carries
+//! the derivative *channels* `y_i = d^i z/dx^i` through the network and
+//! advances them across each activation with Faà di Bruno's formula
+//! (eq. (5) of the paper), at a per-layer cost of `O(n·p(n))` tensor ops —
+//! quasilinear in the derivative order by Hardy-Ramanujan.
+
+pub mod activation;
+pub mod bell;
+pub mod forward;
+pub mod partitions;
+pub mod tape;
+
+pub use activation::{Sine, SmoothActivation, Tanh, TanhTower};
+pub use bell::{bell_number, FaaDiBruno, Term};
+pub use forward::NtpEngine;
+pub use partitions::{hardy_ramanujan, partition_count, partitions, Partition};

@@ -1,0 +1,162 @@
+//! Integer partitions in the multiplicity representation used by
+//! Faà di Bruno's formula (eq. (4) of the paper).
+//!
+//! A partition of `n` is a tuple `p = (p_1, ..., p_n)` with
+//! `Σ_j j·p_j = n`; `p_j` counts the parts of size `j` and
+//! `|p| = Σ_j p_j` is the number of parts. The number of partitions is the
+//! partition function `p(n)`, which by Hardy-Ramanujan grows as
+//! `O(e^√n / n)` — the source of the paper's quasilinear bound.
+
+/// One partition of `n` in multiplicity form.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    /// Non-zero multiplicities as `(part_size j, count p_j)`, ascending `j`.
+    pub parts: Vec<(usize, usize)>,
+    /// `n = Σ j·p_j`.
+    pub n: usize,
+}
+
+impl Partition {
+    /// Number of parts `|p| = Σ p_j`.
+    pub fn order(&self) -> usize {
+        self.parts.iter().map(|(_, c)| c).sum()
+    }
+
+    /// Weighted sum `Σ j·p_j` (must equal `self.n`).
+    pub fn weight(&self) -> usize {
+        self.parts.iter().map(|(j, c)| j * c).sum()
+    }
+}
+
+/// All partitions of `n` (multiplicity form). `partitions(0)` is the empty
+/// partition; order of results is deterministic (lexicographic by largest
+/// part descending).
+pub fn partitions(n: usize) -> Vec<Partition> {
+    let mut out = Vec::new();
+    let mut current: Vec<usize> = Vec::new(); // part sizes, non-increasing
+    fn rec(remaining: usize, max_part: usize, current: &mut Vec<usize>, out: &mut Vec<Partition>) {
+        if remaining == 0 {
+            // Convert part list to multiplicity form.
+            let mut parts: Vec<(usize, usize)> = Vec::new();
+            for &p in current.iter() {
+                match parts.iter_mut().find(|(j, _)| *j == p) {
+                    Some((_, c)) => *c += 1,
+                    None => parts.push((p, 1)),
+                }
+            }
+            parts.sort_by_key(|(j, _)| *j);
+            let n = parts.iter().map(|(j, c)| j * c).sum();
+            out.push(Partition { parts, n });
+            return;
+        }
+        let cap = remaining.min(max_part);
+        for part in (1..=cap).rev() {
+            current.push(part);
+            rec(remaining - part, part, current, out);
+            current.pop();
+        }
+    }
+    rec(n, n.max(1), &mut current, &mut out);
+    out
+}
+
+/// The partition function `p(n) = |partitions(n)|`, computed by Euler's
+/// pentagonal-number recurrence (cheap, exact for the `n` we use).
+pub fn partition_count(n: usize) -> u64 {
+    let mut p = vec![0u64; n + 1];
+    p[0] = 1;
+    for m in 1..=n {
+        let mut acc: i128 = 0;
+        let mut k: i64 = 1;
+        loop {
+            let g1 = (k * (3 * k - 1) / 2) as usize;
+            let g2 = (k * (3 * k + 1) / 2) as usize;
+            if g1 > m && g2 > m {
+                break;
+            }
+            let sign: i128 = if k % 2 == 0 { -1 } else { 1 };
+            if g1 <= m {
+                acc += sign * p[m - g1] as i128;
+            }
+            if g2 <= m {
+                acc += sign * p[m - g2] as i128;
+            }
+            k += 1;
+        }
+        p[m] = acc as u64;
+    }
+    p[n]
+}
+
+/// Hardy-Ramanujan asymptotic `p(n) ~ e^{π√(2n/3)} / (4n√3)` — used by the
+/// benchmark reports to annotate the theoretical scaling curves.
+pub fn hardy_ramanujan(n: usize) -> f64 {
+    let nf = n as f64;
+    (std::f64::consts::PI * (2.0 * nf / 3.0).sqrt()).exp() / (4.0 * nf * 3.0f64.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// OEIS A000041.
+    const P: [u64; 21] = [
+        1, 1, 2, 3, 5, 7, 11, 15, 22, 30, 42, 56, 77, 101, 135, 176, 231, 297, 385, 490, 627,
+    ];
+
+    #[test]
+    fn partition_counts_match_oeis() {
+        for (n, &expect) in P.iter().enumerate() {
+            assert_eq!(partition_count(n), expect, "p({n})");
+            assert_eq!(partitions(n).len() as u64, expect, "|partitions({n})|");
+        }
+    }
+
+    #[test]
+    fn partitions_have_correct_weight_and_are_unique() {
+        for n in 1..=12 {
+            let parts = partitions(n);
+            for p in &parts {
+                assert_eq!(p.weight(), n, "weight of {p:?}");
+                assert_eq!(p.n, n);
+                assert!(p.order() >= 1 && p.order() <= n);
+                // multiplicity form: strictly ascending part sizes
+                for w in p.parts.windows(2) {
+                    assert!(w[0].0 < w[1].0);
+                }
+            }
+            let mut keys: Vec<String> = parts.iter().map(|p| format!("{:?}", p.parts)).collect();
+            keys.sort();
+            keys.dedup();
+            assert_eq!(keys.len(), parts.len(), "duplicates for n={n}");
+        }
+    }
+
+    #[test]
+    fn partitions_of_four_explicit() {
+        // 4 = 4 = 3+1 = 2+2 = 2+1+1 = 1+1+1+1
+        let parts = partitions(4);
+        assert_eq!(parts.len(), 5);
+        let orders: Vec<usize> = parts.iter().map(Partition::order).collect();
+        let mut sorted = orders.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![1, 2, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_partition_of_zero() {
+        let parts = partitions(0);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].order(), 0);
+    }
+
+    #[test]
+    fn hardy_ramanujan_is_same_order() {
+        for n in [10usize, 16, 20] {
+            let exact = partition_count(n) as f64;
+            let approx = hardy_ramanujan(n);
+            let ratio = approx / exact;
+            assert!((0.5..2.0).contains(&ratio), "n={n} ratio={ratio}");
+        }
+    }
+}

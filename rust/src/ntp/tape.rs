@@ -1,0 +1,287 @@
+//! n-TangentProp recorded on the autodiff tape — the *training* path.
+//!
+//! For PINN training we need `∂L/∂θ` where the loss `L` depends on the
+//! derivative channels `u^(i)`. The paper implements n-TangentProp as a
+//! custom PyTorch `forward` and lets the standard backward run over it;
+//! we do the same: record the channel propagation as tape ops (tanh once
+//! per layer, then polynomial towers and partition products), so a
+//! *single* `backward` yields parameter gradients at tape-size cost
+//! `O(n·p(n)·M)` — no repeated differentiation anywhere.
+
+use super::forward::NtpEngine;
+use crate::autodiff::{Graph, NodeId};
+use crate::nn::Mlp;
+
+impl NtpEngine {
+    /// Record `[u, u', ..., u^(n)]` on `g`.
+    ///
+    /// `param_nodes` is the `W0, b0, W1, b1, ...` node list (constants for
+    /// inference benchmarks, inputs for training — see
+    /// [`Mlp::const_param_nodes`] / [`Mlp::input_param_nodes`]).
+    pub fn forward_graph(
+        &self,
+        g: &mut Graph,
+        mlp: &Mlp,
+        x: NodeId,
+        param_nodes: &[NodeId],
+        n: usize,
+    ) -> Vec<NodeId> {
+        assert!(n <= self.n_max(), "n={n} exceeds engine n_max={}", self.n_max());
+        assert_eq!(g.shape(x)[1], 1, "x must be [B, 1]");
+        assert_eq!(param_nodes.len(), 2 * mlp.layers.len());
+        let batch = g.shape(x)[0];
+
+        // Seed channels from the first affine layer.
+        let w0 = param_nodes[0];
+        let b0 = param_nodes[1];
+        let mut y: Vec<NodeId> = Vec::with_capacity(n + 1);
+        let lin0 = g.matmul_nt(x, w0);
+        y.push(g.add_bias(lin0, b0));
+        if n >= 1 {
+            let ones = g.constant(crate::tensor::Tensor::ones(&[batch, 1]));
+            y.push(g.matmul_nt(ones, w0));
+        }
+        for _ in 2..=n {
+            let z = g.zeros_like(y[0]);
+            y.push(z);
+        }
+
+        for li in 1..mlp.layers.len() {
+            let w = param_nodes[2 * li];
+            let b = param_nodes[2 * li + 1];
+
+            // tanh once; towers are polynomials in t evaluated by Horner.
+            let t = g.tanh(y[0]);
+            let towers = self.tower_nodes(g, t, n);
+
+            // §Perf: share the channel-power nodes y_j^c across all the
+            // partition terms of this layer (mirrors the pure-forward
+            // powers cache; shrinks both tape size and backward work).
+            let powers = self.channel_power_nodes(g, &y, n);
+            for i in (1..=n).rev() {
+                y[i] = self.combine_channel_nodes(g, i, &towers, &powers);
+            }
+            let lin = g.matmul_nt(towers[0], w);
+            let h0 = g.add_bias(lin, b);
+            for item in y.iter_mut().skip(1) {
+                *item = g.matmul_nt(*item, w);
+            }
+            y[0] = h0;
+        }
+        y
+    }
+
+    /// σ^(s)(·) for s = 0..=n as tape nodes, given `t = tanh(y0)`.
+    /// Shares the powers `t^m` across all orders.
+    fn tower_nodes(&self, g: &mut Graph, t: NodeId, n: usize) -> Vec<NodeId> {
+        let table = self.activation().table();
+        let max_deg = (0..=n).map(|k| table.poly(k).len() - 1).max().unwrap_or(1);
+        // powers[m] = t^m (powers[0] = None, handled via constants).
+        let mut powers: Vec<Option<NodeId>> = vec![None; max_deg + 1];
+        if max_deg >= 1 {
+            powers[1] = Some(t);
+        }
+        for m in 2..=max_deg {
+            let prev = powers[m - 1].unwrap();
+            powers[m] = Some(g.mul(prev, t));
+        }
+        (0..=n)
+            .map(|k| {
+                let coeffs = table.poly(k);
+                let mut acc: Option<NodeId> = None;
+                for (m, &c) in coeffs.iter().enumerate() {
+                    if c == 0.0 {
+                        continue;
+                    }
+                    let term = if m == 0 {
+                        let shape = g.shape(t).to_vec();
+                        g.constant(crate::tensor::Tensor::full(&shape, c))
+                    } else {
+                        g.scale(powers[m].unwrap(), c)
+                    };
+                    acc = Some(match acc {
+                        None => term,
+                        Some(a) => g.add(a, term),
+                    });
+                }
+                acc.unwrap_or_else(|| {
+                    let shape = g.shape(t).to_vec();
+                    g.constant(crate::tensor::Tensor::zeros(&shape))
+                })
+            })
+            .collect()
+    }
+
+    /// `powers[j][c-1] = y_j^c` as shared tape nodes (c ≤ n/j).
+    fn channel_power_nodes(&self, g: &mut Graph, y: &[NodeId], n: usize) -> Vec<Vec<NodeId>> {
+        let mut powers: Vec<Vec<NodeId>> = Vec::with_capacity(y.len());
+        powers.push(Vec::new()); // j = 0 unused
+        for (j, &yj) in y.iter().enumerate().skip(1) {
+            let c_max = if j <= n { n / j } else { 0 };
+            let mut row = Vec::with_capacity(c_max);
+            if c_max >= 1 {
+                row.push(yj);
+                for _ in 2..=c_max {
+                    let prev = *row.last().unwrap();
+                    row.push(g.mul(prev, yj));
+                }
+            }
+            powers.push(row);
+        }
+        powers
+    }
+
+    /// ξ_i = Σ_p C_p σ^{(|p|)} Π_j y_j^{p_j} as tape nodes.
+    fn combine_channel_nodes(
+        &self,
+        g: &mut Graph,
+        i: usize,
+        towers: &[NodeId],
+        powers: &[Vec<NodeId>],
+    ) -> NodeId {
+        let mut acc: Option<NodeId> = None;
+        for term in self.tables().terms(i) {
+            let mut prod = g.scale(towers[term.outer_order], term.coeff);
+            for &(j, c) in &term.factors {
+                prod = g.mul(prod, powers[j][c - 1]);
+            }
+            acc = Some(match acc {
+                None => prod,
+                Some(a) => g.add(a, prod),
+            });
+        }
+        acc.expect("order >= 1 always has partitions")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::params;
+    use crate::tensor::Tensor;
+    use crate::util::prng::Prng;
+    use crate::util::{allclose_slice, ptest};
+
+    #[test]
+    fn tape_forward_matches_pure_forward() {
+        ptest::check(
+            ptest::Config { cases: 12, seed: 0xF00D },
+            |rng: &mut Prng| {
+                let width = 2 + rng.below(10) as usize;
+                let depth = 1 + rng.below(3) as usize;
+                let batch = 1 + rng.below(4) as usize;
+                let n = 1 + rng.below(4) as usize;
+                let mlp = Mlp::uniform(1, width, depth, 1, rng);
+                let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, rng);
+                (mlp, x, n)
+            },
+            |(mlp, x, n)| {
+                let engine = NtpEngine::new(*n);
+                let pure = engine.forward(mlp, x);
+
+                let mut g = Graph::new();
+                let xn = g.input(x.shape());
+                let pn = mlp.const_param_nodes(&mut g);
+                let nodes = engine.forward_graph(&mut g, mlp, xn, &pn, *n);
+                let vals = g.eval(&[x.clone()], &nodes);
+                for order in 0..=*n {
+                    if !allclose_slice(
+                        pure[order].data(),
+                        vals.get(nodes[order]).data(),
+                        1e-11,
+                        1e-11,
+                    ) {
+                        return Err(format!("order {order} mismatch"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Backprop through the recorded channels must match backprop through
+    /// the repeated-autodiff stack: same loss, same parameter gradients.
+    #[test]
+    fn param_gradients_match_autodiff_baseline() {
+        let mut rng = Prng::seeded(0xAB);
+        let mlp = Mlp::uniform(1, 6, 2, 1, &mut rng);
+        let x = Tensor::linspace(-1.0, 1.0, 5).reshape(&[5, 1]);
+        let n = 3;
+
+        // n-TangentProp path: single backward over the recorded channels.
+        let engine = NtpEngine::new(n);
+        let mut g1 = Graph::new();
+        let xn1 = g1.input(x.shape());
+        let pn1 = mlp.input_param_nodes(&mut g1);
+        let ch = engine.forward_graph(&mut g1, &mlp, xn1, &pn1, n);
+        // Loss = mean(u''^2) + mean(u'''^2) (a derivative-heavy loss).
+        let a = g1.mean_square(ch[2]);
+        let b = g1.mean_square(ch[3]);
+        let loss1 = g1.add(a, b);
+        let grads1 = g1.backward(loss1, &pn1);
+        let mut inputs1 = vec![x.clone()];
+        inputs1.extend(mlp.param_tensors());
+        let vals1 = g1.eval(&inputs1, &grads1);
+        let flat1 = params::flatten_tensors(
+            &grads1.iter().map(|&id| vals1.get(id).clone()).collect::<Vec<_>>(),
+        );
+        let l1 = g1.eval(&inputs1, &[loss1]).get(loss1).item();
+
+        // Baseline: repeated autodiff for the channels, then backward.
+        let mut g2 = Graph::new();
+        let xn2 = g2.input(x.shape());
+        let pn2 = mlp.input_param_nodes(&mut g2);
+        let u = mlp.forward_graph(&mut g2, xn2, &pn2);
+        let stack = crate::autodiff::higher::derivative_stack(&mut g2, u, xn2, n);
+        let a2 = g2.mean_square(stack[2]);
+        let b2 = g2.mean_square(stack[3]);
+        let loss2 = g2.add(a2, b2);
+        let grads2 = g2.backward(loss2, &pn2);
+        let vals2 = g2.eval(&inputs1, &grads2);
+        let flat2 = params::flatten_tensors(
+            &grads2.iter().map(|&id| vals2.get(id).clone()).collect::<Vec<_>>(),
+        );
+        let l2 = g2.eval(&inputs1, &[loss2]).get(loss2).item();
+
+        assert!((l1 - l2).abs() <= 1e-10 * l2.abs().max(1.0), "loss {l1} vs {l2}");
+        assert!(
+            allclose_slice(flat1.data(), flat2.data(), 1e-7, 1e-9),
+            "max diff {}",
+            crate::util::max_abs_diff(flat1.data(), flat2.data())
+        );
+    }
+
+    /// Tape size must grow quasilinearly with n (vs exponential for the
+    /// repeated-backward baseline) — the memory half of the paper's claim.
+    #[test]
+    fn tape_growth_quasilinear_vs_autodiff_exponential() {
+        let mut rng = Prng::seeded(0xCD);
+        let mlp = Mlp::uniform(1, 8, 3, 1, &mut rng);
+        let x_shape = [4usize, 1usize];
+
+        let mut ntp_sizes = Vec::new();
+        let mut ad_sizes = Vec::new();
+        for n in 1..=6 {
+            let engine = NtpEngine::new(n);
+            let mut g = Graph::new();
+            let xn = g.input(&x_shape);
+            let pn = mlp.const_param_nodes(&mut g);
+            engine.forward_graph(&mut g, &mlp, xn, &pn, n);
+            ntp_sizes.push(g.len() as f64);
+
+            let mut g2 = Graph::new();
+            let xn2 = g2.input(&x_shape);
+            let pn2 = mlp.const_param_nodes(&mut g2);
+            let u = mlp.forward_graph(&mut g2, xn2, &pn2);
+            crate::autodiff::higher::derivative_stack(&mut g2, u, xn2, n);
+            ad_sizes.push(g2.len() as f64);
+        }
+        // Compare growth ratios at the top end.
+        let ntp_ratio = ntp_sizes[5] / ntp_sizes[4];
+        let ad_ratio = ad_sizes[5] / ad_sizes[4];
+        assert!(
+            ntp_ratio < 1.8 && ad_ratio > 2.0,
+            "ntp {ntp_sizes:?} ad {ad_sizes:?}"
+        );
+    }
+}

@@ -1,0 +1,119 @@
+//! Adam (Kingma & Ba, 2015) with bias correction — the paper's
+//! exploration-phase optimizer.
+
+use super::Objective;
+use crate::tensor::Tensor;
+
+/// Adam state over a flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Tensor,
+    v: Tensor,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(dim: usize, lr: f64) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: Tensor::zeros(&[dim]),
+            v: Tensor::zeros(&[dim]),
+            t: 0,
+        }
+    }
+
+    /// One update in place; returns the step's loss.
+    pub fn step(&mut self, obj: &mut dyn Objective, theta: &mut Tensor) -> f64 {
+        let (loss, grad) = obj.value_grad(theta);
+        self.apply(theta, &grad);
+        loss
+    }
+
+    /// Apply a raw gradient (used when the caller already has it).
+    pub fn apply(&mut self, theta: &mut Tensor, grad: &Tensor) {
+        assert_eq!(theta.numel(), grad.numel());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let lr_t = self.lr * b2t.sqrt() / b1t;
+        let (m, v) = (self.m.data_mut(), self.v.data_mut());
+        let g = grad.data();
+        let th = theta.data_mut();
+        for i in 0..g.len() {
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g[i];
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
+            th[i] -= lr_t * m[i] / (v[i].sqrt() + self.eps);
+        }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+
+    /// Reset moments (used when switching phases).
+    pub fn reset(&mut self) {
+        self.m = Tensor::zeros(self.m.shape());
+        self.v = Tensor::zeros(self.v.shape());
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::{Quadratic, Rosenbrock};
+
+    #[test]
+    fn converges_on_quadratic() {
+        let center = Tensor::from_vec(vec![1.0, -2.0, 3.0], &[3]);
+        let mut obj = Quadratic { center: center.clone() };
+        let mut theta = Tensor::zeros(&[3]);
+        let mut adam = Adam::new(3, 0.05);
+        for _ in 0..2000 {
+            adam.step(&mut obj, &mut theta);
+        }
+        let err = theta.sub(&center).norm();
+        assert!(err < 1e-4, "err {err}");
+    }
+
+    #[test]
+    fn makes_progress_on_rosenbrock() {
+        let mut obj = Rosenbrock;
+        let mut theta = Tensor::from_vec(vec![-1.2, 1.0], &[2]);
+        let mut adam = Adam::new(2, 0.01);
+        let first = adam.step(&mut obj, &mut theta);
+        let mut last = first;
+        for _ in 0..5000 {
+            last = adam.step(&mut obj, &mut theta);
+        }
+        assert!(last < first * 0.01, "first {first} last {last}");
+    }
+
+    #[test]
+    fn first_step_magnitude_is_lr() {
+        // With bias correction, the first Adam step is ≈ lr in magnitude.
+        let mut obj = Quadratic { center: Tensor::from_vec(vec![10.0], &[1]) };
+        let mut theta = Tensor::zeros(&[1]);
+        let mut adam = Adam::new(1, 0.1);
+        adam.step(&mut obj, &mut theta);
+        assert!((theta.data()[0].abs() - 0.1).abs() < 1e-6, "{:?}", theta.data());
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut adam = Adam::new(2, 0.1);
+        let mut theta = Tensor::zeros(&[2]);
+        adam.apply(&mut theta, &Tensor::ones(&[2]));
+        assert_eq!(adam.steps_taken(), 1);
+        adam.reset();
+        assert_eq!(adam.steps_taken(), 0);
+        assert_eq!(adam.m.data(), &[0.0, 0.0]);
+    }
+}

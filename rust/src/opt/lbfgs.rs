@@ -1,0 +1,424 @@
+//! L-BFGS with line search (Nocedal & Wright, Algorithms 7.4/7.5 + 3.5/3.6).
+//!
+//! Two line searches are provided:
+//!
+//! - [`LineSearch::Backtracking`] — Armijo backtracking using **function
+//!   values only**. This mirrors the open-source PyTorch-LBFGS the paper
+//!   uses: each trial point costs one *forward* pass and the step costs a
+//!   single backward pass, which is exactly why the paper's forward-pass
+//!   speedups compound during the L-BFGS phase (Fig. 6).
+//! - [`LineSearch::StrongWolfe`] — bracketing + zoom enforcing the strong
+//!   Wolfe conditions (needs gradients at trial points; more robust).
+//!
+//! The optimizer counts value and gradient evaluations so the benchmark
+//! harness can report the forward/backward mix.
+
+use super::Objective;
+use crate::tensor::Tensor;
+
+/// Line-search strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LineSearch {
+    Backtracking,
+    StrongWolfe,
+}
+
+/// Step outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LbfgsStatus {
+    /// Gradient norm below tolerance before stepping.
+    Converged,
+    /// A step satisfying the line-search conditions was taken.
+    StepTaken,
+    /// No acceptable step found; parameters unchanged.
+    LineSearchFailed,
+}
+
+/// L-BFGS state.
+pub struct Lbfgs {
+    /// History size (pairs kept for the two-loop recursion).
+    pub m: usize,
+    /// Armijo constant.
+    pub c1: f64,
+    /// Curvature constant (strong Wolfe).
+    pub c2: f64,
+    /// Gradient-norm convergence tolerance.
+    pub tol_grad: f64,
+    /// Max line-search trials per step.
+    pub max_ls: usize,
+    pub line_search: LineSearch,
+    history: Vec<(Tensor, Tensor)>, // (s, y) pairs, newest last
+    last_grad: Option<Tensor>,
+    /// Count of `value`-only evaluations (forward passes).
+    pub n_value_evals: u64,
+    /// Count of `value_grad` evaluations (forward+backward passes).
+    pub n_grad_evals: u64,
+}
+
+impl Lbfgs {
+    pub fn new(_dim: usize) -> Lbfgs {
+        Lbfgs {
+            m: 10,
+            c1: 1e-4,
+            c2: 0.9,
+            tol_grad: 1e-12,
+            max_ls: 25,
+            line_search: LineSearch::Backtracking,
+            history: Vec::new(),
+            last_grad: None,
+            n_value_evals: 0,
+            n_grad_evals: 0,
+        }
+    }
+
+    pub fn with_line_search(mut self, ls: LineSearch) -> Lbfgs {
+        self.line_search = ls;
+        self
+    }
+
+    fn value(&mut self, obj: &mut dyn Objective, theta: &Tensor) -> f64 {
+        self.n_value_evals += 1;
+        obj.value(theta)
+    }
+
+    fn value_grad(&mut self, obj: &mut dyn Objective, theta: &Tensor) -> (f64, Tensor) {
+        self.n_grad_evals += 1;
+        obj.value_grad(theta)
+    }
+
+    /// Two-loop recursion: approximate `H·g` (descent direction is `-H·g`).
+    fn direction(&self, grad: &Tensor) -> Tensor {
+        let mut q = grad.clone();
+        let k = self.history.len();
+        let mut alphas = vec![0.0; k];
+        let mut rhos = vec![0.0; k];
+        for i in (0..k).rev() {
+            let (s, y) = &self.history[i];
+            rhos[i] = 1.0 / y.dot(s);
+            alphas[i] = rhos[i] * s.dot(&q);
+            q.axpy_inplace(-alphas[i], y);
+        }
+        // Initial Hessian scaling gamma = s·y / y·y (N&W eq. 7.20).
+        if let Some((s, y)) = self.history.last() {
+            let gamma = s.dot(y) / y.dot(y);
+            q = q.scale(gamma);
+        }
+        for i in 0..k {
+            let (s, y) = &self.history[i];
+            let beta = rhos[i] * y.dot(&q);
+            q.axpy_inplace(alphas[i] - beta, s);
+        }
+        q.neg()
+    }
+
+    /// One L-BFGS iteration; updates `theta` in place on success.
+    /// Returns `(loss at the start of the step, status)`.
+    pub fn step(&mut self, obj: &mut dyn Objective, theta: &mut Tensor) -> (f64, LbfgsStatus) {
+        let (f0, g0) = match self.last_grad.take() {
+            // Reuse the gradient computed at the end of the previous step.
+            Some(g) => {
+                let f = self.value(obj, theta);
+                (f, g)
+            }
+            None => self.value_grad(obj, theta),
+        };
+        if g0.norm() < self.tol_grad {
+            self.last_grad = Some(g0);
+            return (f0, LbfgsStatus::Converged);
+        }
+
+        let mut dir = self.direction(&g0);
+        let mut dg0 = dir.dot(&g0);
+        if dg0 >= 0.0 {
+            // Not a descent direction (stale curvature) — reset to steepest.
+            self.history.clear();
+            dir = g0.neg();
+            dg0 = dir.dot(&g0);
+        }
+
+        let result = match self.line_search {
+            LineSearch::Backtracking => self.backtracking(obj, theta, &dir, f0, dg0),
+            LineSearch::StrongWolfe => self.strong_wolfe(obj, theta, &dir, f0, dg0, &g0),
+        };
+
+        match result {
+            Some((alpha, f_new, g_new)) => {
+                let step = dir.scale(alpha);
+                let s = step.clone();
+                let new_theta = theta.add(&step);
+                let g_new = match g_new {
+                    Some(g) => g,
+                    None => self.value_grad(obj, &new_theta).1,
+                };
+                let y = g_new.sub(&g0);
+                let sy = s.dot(&y);
+                if sy > 1e-10 * s.norm() * y.norm() {
+                    self.history.push((s, y));
+                    if self.history.len() > self.m {
+                        self.history.remove(0);
+                    }
+                }
+                *theta = new_theta;
+                self.last_grad = Some(g_new);
+                let _ = f_new;
+                (f0, LbfgsStatus::StepTaken)
+            }
+            None => {
+                // Drop stale curvature so the next step falls back to
+                // (scaled) steepest descent instead of retrying the same
+                // direction forever.
+                self.history.clear();
+                self.last_grad = Some(g0);
+                (f0, LbfgsStatus::LineSearchFailed)
+            }
+        }
+    }
+
+    /// Armijo backtracking: values only, gradient deferred to the accepted
+    /// point. Returns `(alpha, f(alpha), None)`.
+    fn backtracking(
+        &mut self,
+        obj: &mut dyn Objective,
+        theta: &Tensor,
+        dir: &Tensor,
+        f0: f64,
+        dg0: f64,
+    ) -> Option<(f64, f64, Option<Tensor>)> {
+        let mut alpha = 1.0;
+        for _ in 0..self.max_ls {
+            let trial = theta.axpy(alpha, dir);
+            let f = self.value(obj, &trial);
+            if f.is_finite() && f <= f0 + self.c1 * alpha * dg0 {
+                return Some((alpha, f, None));
+            }
+            // Quadratic interpolation on φ(α) using φ(0)=f0, φ'(0)=dg0,
+            // φ(α)=f; fall back to halving when the model is degenerate.
+            let denom = 2.0 * (f - f0 - dg0 * alpha);
+            let quad = if f.is_finite() && denom > 0.0 {
+                -dg0 * alpha * alpha / denom
+            } else {
+                0.5 * alpha
+            };
+            alpha = quad.clamp(0.1 * alpha, 0.5 * alpha);
+        }
+        None
+    }
+
+    /// Strong-Wolfe bracketing + zoom (N&W alg. 3.5/3.6). Returns the
+    /// accepted `(alpha, f, grad)` with the gradient already computed.
+    fn strong_wolfe(
+        &mut self,
+        obj: &mut dyn Objective,
+        theta: &Tensor,
+        dir: &Tensor,
+        f0: f64,
+        dg0: f64,
+        _g0: &Tensor,
+    ) -> Option<(f64, f64, Option<Tensor>)> {
+        let phi = |this: &mut Self, obj: &mut dyn Objective, a: f64| {
+            let trial = theta.axpy(a, dir);
+            let (f, g) = this.value_grad(obj, &trial);
+            let dphi = g.dot(dir);
+            (f, dphi, g)
+        };
+
+        let mut alpha_prev = 0.0;
+        let mut f_prev = f0;
+        let mut alpha = 1.0;
+        let alpha_max = 20.0;
+        for i in 0..self.max_ls {
+            let (f, dphi, g) = phi(self, obj, alpha);
+            if !f.is_finite() || f > f0 + self.c1 * alpha * dg0 || (i > 0 && f >= f_prev) {
+                return self.zoom(obj, theta, dir, f0, dg0, alpha_prev, f_prev, alpha);
+            }
+            if dphi.abs() <= -self.c2 * dg0 {
+                return Some((alpha, f, Some(g)));
+            }
+            if dphi >= 0.0 {
+                return self.zoom(obj, theta, dir, f0, dg0, alpha, f, alpha_prev);
+            }
+            alpha_prev = alpha;
+            f_prev = f;
+            alpha = (alpha * 2.0).min(alpha_max);
+        }
+        None
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn zoom(
+        &mut self,
+        obj: &mut dyn Objective,
+        theta: &Tensor,
+        dir: &Tensor,
+        f0: f64,
+        dg0: f64,
+        mut lo: f64,
+        mut f_lo: f64,
+        mut hi: f64,
+    ) -> Option<(f64, f64, Option<Tensor>)> {
+        // Bisection needs ~50 halvings to localize a narrow Armijo window
+        // (e.g. deep inside the Rosenbrock valley); give it more budget
+        // than the bracketing phase.
+        for _ in 0..(3 * self.max_ls) {
+            let alpha = 0.5 * (lo + hi);
+            let trial = theta.axpy(alpha, dir);
+            let (f, g) = self.value_grad(obj, &trial);
+            let dphi = g.dot(dir);
+            if !f.is_finite() || f > f0 + self.c1 * alpha * dg0 || f >= f_lo {
+                hi = alpha;
+            } else {
+                if dphi.abs() <= -self.c2 * dg0 {
+                    return Some((alpha, f, Some(g)));
+                }
+                if dphi * (hi - lo) >= 0.0 {
+                    hi = lo;
+                }
+                lo = alpha;
+                f_lo = f;
+            }
+            if (hi - lo).abs() < 1e-16 {
+                break;
+            }
+        }
+        None
+    }
+
+    /// Clear curvature history (e.g. when the objective changes).
+    pub fn reset(&mut self) {
+        self.history.clear();
+        self.last_grad = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::{Objective, Quadratic, Rosenbrock};
+
+    fn minimize(
+        obj: &mut dyn Objective,
+        theta: &mut Tensor,
+        ls: LineSearch,
+        iters: usize,
+    ) -> (f64, Lbfgs) {
+        let mut opt = Lbfgs::new(theta.numel()).with_line_search(ls);
+        let mut last = f64::INFINITY;
+        for _ in 0..iters {
+            let (f, status) = opt.step(obj, theta);
+            last = f;
+            if status == LbfgsStatus::Converged {
+                break;
+            }
+        }
+        (last, opt)
+    }
+
+    #[test]
+    fn solves_quadratic_in_few_steps() {
+        for ls in [LineSearch::Backtracking, LineSearch::StrongWolfe] {
+            let center = Tensor::from_vec(vec![3.0, -1.0, 0.5, 2.0], &[4]);
+            let mut obj = Quadratic { center: center.clone() };
+            let mut theta = Tensor::zeros(&[4]);
+            minimize(&mut obj, &mut theta, ls, 25);
+            assert!(theta.sub(&center).norm() < 1e-8, "{ls:?}");
+        }
+    }
+
+    #[test]
+    fn solves_rosenbrock() {
+        for ls in [LineSearch::Backtracking, LineSearch::StrongWolfe] {
+            let mut obj = Rosenbrock;
+            let mut theta = Tensor::from_vec(vec![-1.2, 1.0], &[2]);
+            // Armijo-only backtracking traverses the valley slowly; give it
+            // the budget the paper's L-BFGS phase would get.
+            minimize(&mut obj, &mut theta, ls, 1500);
+            let err = theta.sub(&Tensor::from_vec(vec![1.0, 1.0], &[2])).norm();
+            assert!(err < 1e-5, "{ls:?}: theta {:?}", theta.data());
+        }
+    }
+
+    #[test]
+    fn backtracking_uses_more_values_than_grads() {
+        // The Fig. 6 mechanism: line-search L-BFGS is forward-pass heavy.
+        let mut obj = Rosenbrock;
+        let mut theta = Tensor::from_vec(vec![-1.2, 1.0], &[2]);
+        let (_, opt) = minimize(&mut obj, &mut theta, LineSearch::Backtracking, 100);
+        assert!(
+            opt.n_value_evals > opt.n_grad_evals,
+            "values {} grads {}",
+            opt.n_value_evals,
+            opt.n_grad_evals
+        );
+    }
+
+    #[test]
+    fn accepted_steps_satisfy_armijo() {
+        struct Wrapped {
+            inner: Rosenbrock,
+            trace: Vec<(Tensor, f64)>,
+        }
+        impl Objective for Wrapped {
+            fn value_grad(&mut self, t: &Tensor) -> (f64, Tensor) {
+                let (f, g) = self.inner.value_grad(t);
+                self.trace.push((t.clone(), f));
+                (f, g)
+            }
+            fn value(&mut self, t: &Tensor) -> f64 {
+                let f = self.inner.value_grad(t).0;
+                self.trace.push((t.clone(), f));
+                f
+            }
+            fn dim(&self) -> usize {
+                2
+            }
+        }
+        let mut obj = Wrapped { inner: Rosenbrock, trace: vec![] };
+        let mut theta = Tensor::from_vec(vec![-0.5, 0.8], &[2]);
+        let mut opt = Lbfgs::new(2);
+        let mut prev_f = f64::INFINITY;
+        for _ in 0..50 {
+            let (f, status) = opt.step(&mut obj, &mut theta);
+            if status == LbfgsStatus::StepTaken {
+                assert!(f <= prev_f + 1e-12, "loss increased: {prev_f} -> {f}");
+                prev_f = f;
+            }
+        }
+        // End loss must be well below start.
+        let final_f = Rosenbrock.value_grad(&theta).0;
+        assert!(final_f < 1e-3, "final {final_f}");
+    }
+
+    #[test]
+    fn line_search_failure_leaves_theta_unchanged() {
+        // An objective whose value is always +inf away from start forces
+        // line-search failure.
+        struct Wall;
+        impl Objective for Wall {
+            fn value_grad(&mut self, t: &Tensor) -> (f64, Tensor) {
+                if t.norm() == 0.0 {
+                    (1.0, Tensor::ones(&[2]))
+                } else {
+                    (f64::INFINITY, Tensor::ones(&[2]))
+                }
+            }
+            fn dim(&self) -> usize {
+                2
+            }
+        }
+        let mut theta = Tensor::zeros(&[2]);
+        let mut opt = Lbfgs::new(2);
+        let (_, status) = opt.step(&mut Wall, &mut theta);
+        assert_eq!(status, LbfgsStatus::LineSearchFailed);
+        assert_eq!(theta.data(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn converged_status_near_optimum() {
+        let center = Tensor::from_vec(vec![1.0], &[1]);
+        let mut obj = Quadratic { center: center.clone() };
+        let mut theta = center.clone();
+        let mut opt = Lbfgs::new(1);
+        let (_, status) = opt.step(&mut obj, &mut theta);
+        assert_eq!(status, LbfgsStatus::Converged);
+    }
+}

@@ -1,0 +1,66 @@
+//! First- and quasi-second-order optimizers over flat parameter vectors.
+//!
+//! The paper's training schedule is Adam (exploration) followed by L-BFGS
+//! with a line search (refinement) — the L-BFGS line search performs
+//! multiple *forward* passes per step, which is where n-TangentProp's
+//! forward-pass advantage compounds (paper §IV-C, Fig. 6).
+
+pub mod adam;
+pub mod lbfgs;
+pub mod sgd;
+
+pub use adam::Adam;
+pub use lbfgs::{Lbfgs, LbfgsStatus};
+pub use sgd::Sgd;
+
+use crate::tensor::Tensor;
+
+/// A differentiable objective over a flat parameter vector.
+///
+/// `value_grad` returns `(loss, dloss/dtheta)`; `value` alone may be
+/// cheaper (L-BFGS line searches exploit that — the paper's Fig. 6
+/// mechanism).
+pub trait Objective {
+    fn value_grad(&mut self, theta: &Tensor) -> (f64, Tensor);
+
+    /// Loss only; default delegates to `value_grad`.
+    fn value(&mut self, theta: &Tensor) -> f64 {
+        self.value_grad(theta).0
+    }
+
+    /// Number of parameters.
+    fn dim(&self) -> usize;
+}
+
+/// A quadratic bowl objective for optimizer tests: `0.5·||x - c||²`.
+pub struct Quadratic {
+    pub center: Tensor,
+}
+
+impl Objective for Quadratic {
+    fn value_grad(&mut self, theta: &Tensor) -> (f64, Tensor) {
+        let d = theta.sub(&self.center);
+        (0.5 * d.dot(&d), d)
+    }
+
+    fn dim(&self) -> usize {
+        self.center.numel()
+    }
+}
+
+/// The 2-D Rosenbrock function — the classic L-BFGS acceptance test.
+pub struct Rosenbrock;
+
+impl Objective for Rosenbrock {
+    fn value_grad(&mut self, theta: &Tensor) -> (f64, Tensor) {
+        let (x, y) = (theta.data()[0], theta.data()[1]);
+        let f = (1.0 - x).powi(2) + 100.0 * (y - x * x).powi(2);
+        let gx = -2.0 * (1.0 - x) - 400.0 * x * (y - x * x);
+        let gy = 200.0 * (y - x * x);
+        (f, Tensor::from_vec(vec![gx, gy], &[2]))
+    }
+
+    fn dim(&self) -> usize {
+        2
+    }
+}

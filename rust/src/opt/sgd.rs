@@ -1,0 +1,70 @@
+//! Plain SGD with optional momentum — baseline optimizer and ablation.
+
+use super::Objective;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub lr: f64,
+    pub momentum: f64,
+    velocity: Tensor,
+}
+
+impl Sgd {
+    pub fn new(dim: usize, lr: f64, momentum: f64) -> Sgd {
+        Sgd {
+            lr,
+            momentum,
+            velocity: Tensor::zeros(&[dim]),
+        }
+    }
+
+    pub fn step(&mut self, obj: &mut dyn Objective, theta: &mut Tensor) -> f64 {
+        let (loss, grad) = obj.value_grad(theta);
+        self.apply(theta, &grad);
+        loss
+    }
+
+    pub fn apply(&mut self, theta: &mut Tensor, grad: &Tensor) {
+        let v = self.velocity.data_mut();
+        let g = grad.data();
+        let th = theta.data_mut();
+        for i in 0..g.len() {
+            v[i] = self.momentum * v[i] - self.lr * g[i];
+            th[i] += v[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::Quadratic;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let center = Tensor::from_vec(vec![2.0, -1.0], &[2]);
+        let mut obj = Quadratic { center: center.clone() };
+        let mut theta = Tensor::zeros(&[2]);
+        let mut sgd = Sgd::new(2, 0.1, 0.0);
+        for _ in 0..500 {
+            sgd.step(&mut obj, &mut theta);
+        }
+        assert!(theta.sub(&center).norm() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let center = Tensor::from_vec(vec![5.0], &[1]);
+        let run = |momentum: f64| {
+            let mut obj = Quadratic { center: center.clone() };
+            let mut theta = Tensor::zeros(&[1]);
+            let mut sgd = Sgd::new(1, 0.01, momentum);
+            for _ in 0..100 {
+                sgd.step(&mut obj, &mut theta);
+            }
+            (theta.sub(&center)).norm()
+        };
+        assert!(run(0.9) < run(0.0));
+    }
+}

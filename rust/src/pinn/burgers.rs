@@ -1,0 +1,277 @@
+//! The self-similar Burgers profile problem (paper §IV-C1).
+//!
+//! Under `u(x,t) = (1-t)^λ U(x(1-t)^{-1-λ})` Burgers' equation becomes the
+//! profile ODE
+//!
+//! ```text
+//! -λ U + ((1+λ) X + U) U' = 0                                  (7)
+//! ```
+//!
+//! with implicit solution `X = -U - C·U^{1 + 1/λ}` (8). Smooth, odd
+//! (physically realizable) profiles exist exactly at `λ = 1/(2k)`:
+//! `X = -U - C·U^{2k+1}`. The k-th profile is found by a PINN constrained
+//! to `λ ∈ [1/(2k+1), 1/(2k-1)]` with a smoothness penalty on the
+//! `2k`-th derivative of the residual near the origin — requiring
+//! `2k+1` derivatives of the network, which is what makes this the
+//! paper's showcase for n-TangentProp (profiles 3 and 4 are infeasible
+//! with repeated autodiff).
+//!
+//! Ground truth: the implicit relation is solved by a safeguarded Newton
+//! iteration, and *exact* higher derivatives come from power-series
+//! reversion of the polynomial relation (see [`super::series`]) — no
+//! finite differences anywhere.
+
+use super::series;
+
+/// The k-th smooth self-similar Burgers profile (k = 1, 2, 3, 4, ...).
+#[derive(Clone, Copy, Debug)]
+pub struct BurgersProfile {
+    /// Profile index; the smooth exponent is `λ = 1/(2k)`.
+    pub k: usize,
+    /// Normalization constant `C > 0` of the family member (we pin C = 1;
+    /// the paper's normalization is equivalent up to rescaling).
+    pub c: f64,
+}
+
+impl BurgersProfile {
+    pub fn new(k: usize) -> BurgersProfile {
+        assert!(k >= 1, "profile index starts at 1");
+        BurgersProfile { k, c: 1.0 }
+    }
+
+    /// The smooth exponent `λ = 1/(2k)` this profile converges to.
+    pub fn lambda_smooth(&self) -> f64 {
+        1.0 / (2 * self.k) as f64
+    }
+
+    /// The λ search range `[1/(2k+1), 1/(2k-1)]` (paper §IV-C1).
+    pub fn lambda_range(&self) -> (f64, f64) {
+        (
+            1.0 / (2 * self.k + 1) as f64,
+            1.0 / (2 * self.k - 1) as f64,
+        )
+    }
+
+    /// Number of network derivatives the training loss needs: the
+    /// smoothness term penalizes `∂^{2k} R`, and `R` contains `U'`,
+    /// so `n = 2k + 1` (3, 5, 7, 9 for k = 1..4 — matching the paper).
+    pub fn n_derivs(&self) -> usize {
+        2 * self.k + 1
+    }
+
+    /// Degree of the implicit polynomial: `X = -U - C·U^{2k+1}`.
+    pub fn poly_degree(&self) -> usize {
+        2 * self.k + 1
+    }
+
+    /// `X(U) = -U - C·U^{2k+1}`.
+    pub fn x_of_u(&self, u: f64) -> f64 {
+        -u - self.c * u.powi(self.poly_degree() as i32)
+    }
+
+    /// `dX/dU = -1 - C·(2k+1)·U^{2k}` (always ≤ -1: X(U) strictly
+    /// decreasing, so U(X) is single-valued and strictly decreasing).
+    pub fn dx_du(&self, u: f64) -> f64 {
+        -1.0 - self.c * self.poly_degree() as f64 * u.powi((self.poly_degree() - 1) as i32)
+    }
+
+    /// Solve `X = -U - C·U^{2k+1}` for `U` (safeguarded Newton; exact to
+    /// ~1e-14). The profile is odd: `U(-X) = -U(X)`.
+    pub fn u_true(&self, x: f64) -> f64 {
+        if x == 0.0 {
+            return 0.0;
+        }
+        // U(X) has sign opposite to X; bracket accordingly.
+        let (mut lo, mut hi) = if x > 0.0 {
+            // U in [-(x+1), 0]: X(-(x+1)) = (x+1) + C(x+1)^(2k+1) >= x.
+            (-(x + 1.0), 0.0)
+        } else {
+            (0.0, -x + 1.0)
+        };
+        let mut u = -x / (1.0 + self.c); // decent initial guess near 0
+        if !(lo..=hi).contains(&u) {
+            u = 0.5 * (lo + hi);
+        }
+        for _ in 0..100 {
+            let f = self.x_of_u(u) - x;
+            if f.abs() < 1e-15 * (1.0 + x.abs()) {
+                break;
+            }
+            // Maintain the bracket: X(U) is decreasing in U.
+            if f > 0.0 {
+                lo = u;
+            } else {
+                hi = u;
+            }
+            let step = f / self.dx_du(u);
+            let next = u - step;
+            u = if next > lo && next < hi {
+                next
+            } else {
+                0.5 * (lo + hi)
+            };
+        }
+        u
+    }
+
+    /// Exact derivatives `[U, U', ..., U^(n)]` at `x`, via power-series
+    /// reversion of the implicit polynomial around the solution point.
+    pub fn derivatives_true(&self, x: f64, n: usize) -> Vec<f64> {
+        let u0 = self.u_true(x);
+        // Local series of X(U) around u0: X(u0 + v) = x + Σ_{m>=1} a_m v^m.
+        let deg = self.poly_degree();
+        let mut poly = vec![0.0; deg + 1];
+        poly[1] = -1.0;
+        poly[deg] = -self.c;
+        let shifted = series::shift_poly(&poly, u0, n + 2);
+        // Zero the constant term (it equals x) to get the series of X - x.
+        let mut a = shifted;
+        a[0] = 0.0;
+        if a.len() < 2 {
+            a.resize(2, 0.0);
+        }
+        // Revert: v(X - x) series, then derivatives are k!·b_k.
+        let b = series::revert(&a, n + 1);
+        let mut derivs = series::derivatives_from_taylor(&b[..=n.min(b.len() - 1)]);
+        derivs[0] = u0;
+        derivs.resize(n + 1, 0.0);
+        derivs
+    }
+
+    /// Residual of the profile ODE (7) given `U, U'` at `x` and `λ`.
+    pub fn residual(&self, lambda: f64, x: f64, u: f64, du: f64) -> f64 {
+        -lambda * u + ((1.0 + lambda) * x + u) * du
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest;
+
+    #[test]
+    fn lambda_values_match_paper() {
+        for (k, lam, range) in [
+            (1, 0.5, (1.0 / 3.0, 1.0)),
+            (2, 0.25, (0.2, 1.0 / 3.0)),
+            (3, 1.0 / 6.0, (1.0 / 7.0, 0.2)),
+            (4, 0.125, (1.0 / 9.0, 1.0 / 7.0)),
+        ] {
+            let p = BurgersProfile::new(k);
+            assert!((p.lambda_smooth() - lam).abs() < 1e-15);
+            let (lo, hi) = p.lambda_range();
+            assert!((lo - range.0).abs() < 1e-15 && (hi - range.1).abs() < 1e-15);
+        }
+        assert_eq!(BurgersProfile::new(1).n_derivs(), 3);
+        assert_eq!(BurgersProfile::new(4).n_derivs(), 9);
+    }
+
+    #[test]
+    fn u_true_satisfies_implicit_relation() {
+        ptest::quickcheck(
+            |rng| {
+                let k = 1 + rng.below(4) as usize;
+                let x = rng.uniform_in(-10.0, 10.0);
+                (k, x)
+            },
+            |&(k, x)| {
+                let p = BurgersProfile::new(k);
+                let u = p.u_true(x);
+                let back = p.x_of_u(u);
+                if (back - x).abs() < 1e-10 * (1.0 + x.abs()) {
+                    Ok(())
+                } else {
+                    Err(format!("X(U({x})) = {back}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn profile_is_odd_and_decreasing() {
+        let p = BurgersProfile::new(2);
+        for x in [0.1, 0.5, 1.0, 3.0] {
+            assert!((p.u_true(-x) + p.u_true(x)).abs() < 1e-12);
+        }
+        let mut prev = f64::INFINITY;
+        for i in 0..50 {
+            let x = -2.0 + 4.0 * i as f64 / 49.0;
+            let u = p.u_true(x);
+            assert!(u < prev + 1e-12);
+            prev = u;
+        }
+    }
+
+    #[test]
+    fn derivatives_satisfy_the_ode() {
+        // With λ = 1/(2k): -λU + ((1+λ)X + U)U' must vanish identically.
+        ptest::quickcheck(
+            |rng| {
+                let k = 1 + rng.below(3) as usize;
+                let x = rng.uniform_in(-2.0, 2.0);
+                (k, x)
+            },
+            |&(k, x)| {
+                let p = BurgersProfile::new(k);
+                let d = p.derivatives_true(x, 1);
+                let r = p.residual(p.lambda_smooth(), x, d[0], d[1]);
+                if r.abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("residual {r} at x={x}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn derivatives_at_origin_closed_form() {
+        // At X=0: U=0, U'(0) = -1 (from dX/dU = -1), and the first 2k
+        // higher derivatives vanish except U^{(2k+1)}(0) which comes from
+        // the C·U^{2k+1} term.
+        for k in 1..=3 {
+            let p = BurgersProfile::new(k);
+            let n = 2 * k + 1;
+            let d = p.derivatives_true(0.0, n);
+            assert!((d[0]).abs() < 1e-14);
+            assert!((d[1] + 1.0).abs() < 1e-12, "U'(0) = {}", d[1]);
+            for (order, item) in d.iter().enumerate().take(n).skip(2) {
+                assert!(item.abs() < 1e-9, "k={k} d{order} = {item}");
+            }
+            // Differentiating X = -U - C U^{2k+1} (2k+1) times at 0:
+            // 1 = -U^{(2k+1)}(0)·0! ... leading term gives
+            // U^{(2k+1)}(0) = -(2k+1)!·C·(U'(0))^{2k+1} - ... For C=1,
+            // U'(0)=-1: the value is +(2k+1)! (sign: odd power of -1 and
+            // the leading minus cancel).
+            let fact: f64 = (1..=n).map(|i| i as f64).product();
+            assert!(
+                (d[n] - fact).abs() < 1e-6 * fact,
+                "k={k}: U^{{({n})}}(0) = {} expected {fact}",
+                d[n]
+            );
+        }
+    }
+
+    #[test]
+    fn derivatives_match_finite_differences_low_order() {
+        let p = BurgersProfile::new(1);
+        for x in [-1.3, -0.4, 0.2, 0.9, 2.0] {
+            let d = p.derivatives_true(x, 2);
+            let h = 1e-5;
+            let fd1 = (p.u_true(x + h) - p.u_true(x - h)) / (2.0 * h);
+            let fd2 = (p.u_true(x + h) - 2.0 * p.u_true(x) + p.u_true(x - h)) / (h * h);
+            assert!((d[1] - fd1).abs() < 1e-8 * (1.0 + fd1.abs()), "x={x}");
+            assert!((d[2] - fd2).abs() < 1e-4 * (1.0 + fd2.abs()), "x={x}");
+        }
+    }
+
+    #[test]
+    fn far_field_amplitude_grows_sublinearly() {
+        // As |X| -> inf, U ~ -sign(X)(|X|/C)^{1/(2k+1)}.
+        let p = BurgersProfile::new(1);
+        let x = 1e6;
+        let u = p.u_true(x);
+        let expect = -(x).powf(1.0 / 3.0);
+        assert!((u / expect - 1.0).abs() < 1e-2, "u={u} expect~{expect}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Collocation-point samplers for PINN training.
+//!
+//! The Burgers experiments use (a) a grid or uniform-random cloud over the
+//! training domain for the residual loss, (b) a tight cluster around the
+//! origin for the high-order smoothness term L* (appendix A: "samples
+//! taken from a small subset of collocation points centered at the
+//! origin"), and (c) fixed boundary/normalization points.
+
+use crate::tensor::Tensor;
+use crate::util::prng::Prng;
+
+/// `n` evenly spaced points on `[lo, hi]`, shaped `[n, 1]`.
+pub fn grid_points(lo: f64, hi: f64, n: usize) -> Tensor {
+    Tensor::linspace(lo, hi, n).reshape(&[n, 1])
+}
+
+/// `n` uniform-random points on `[lo, hi)`, shaped `[n, 1]`.
+pub fn random_points(lo: f64, hi: f64, n: usize, rng: &mut Prng) -> Tensor {
+    Tensor::rand_uniform(&[n, 1], lo, hi, rng)
+}
+
+/// `n` points clustered around `center` with spread `radius` (uniform in
+/// the interval), shaped `[n, 1]` — the L* sampling near the origin.
+pub fn cluster_points(center: f64, radius: f64, n: usize, rng: &mut Prng) -> Tensor {
+    Tensor::rand_uniform(&[n, 1], center - radius, center + radius, rng)
+}
+
+/// Latin-hypercube-style stratified 1-D sample: one uniform draw per
+/// equal-width stratum, shuffled. Lower variance than iid uniform for the
+/// same budget — used by the Sobolev-training example.
+pub fn stratified_points(lo: f64, hi: f64, n: usize, rng: &mut Prng) -> Tensor {
+    let width = (hi - lo) / n as f64;
+    let mut xs: Vec<f64> = (0..n)
+        .map(|i| lo + width * (i as f64 + rng.uniform()))
+        .collect();
+    rng.shuffle(&mut xs);
+    Tensor::from_vec(xs, &[n, 1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_endpoints_and_shape() {
+        let g = grid_points(-2.0, 2.0, 9);
+        assert_eq!(g.shape(), &[9, 1]);
+        assert_eq!(g.data()[0], -2.0);
+        assert_eq!(g.data()[8], 2.0);
+    }
+
+    #[test]
+    fn random_points_in_range() {
+        let mut rng = Prng::seeded(5);
+        let pts = random_points(-1.0, 3.0, 200, &mut rng);
+        assert!(pts.data().iter().all(|x| (-1.0..3.0).contains(x)));
+    }
+
+    #[test]
+    fn cluster_is_tight() {
+        let mut rng = Prng::seeded(6);
+        let pts = cluster_points(0.0, 0.05, 100, &mut rng);
+        assert!(pts.data().iter().all(|x| x.abs() <= 0.05));
+    }
+
+    #[test]
+    fn stratified_covers_every_stratum() {
+        let mut rng = Prng::seeded(7);
+        let n = 50;
+        let pts = stratified_points(0.0, 1.0, n, &mut rng);
+        let mut hit = vec![false; n];
+        for &x in pts.data() {
+            hit[((x * n as f64) as usize).min(n - 1)] = true;
+        }
+        assert!(hit.iter().all(|&h| h));
+    }
+}

@@ -1,0 +1,20 @@
+//! Physics-informed neural network (PINN) training framework.
+//!
+//! Implements the paper's §II/§IV-C experimental setup: MSE residual
+//! losses with Sobolev terms (eq. 2), a high-order smoothness term near
+//! the origin (appendix A), boundary/normalization anchors, inverse
+//! parameters (the self-similar exponent λ), collocation samplers, and a
+//! two-phase Adam → L-BFGS trainer that can drive either derivative
+//! engine (n-TangentProp or repeated autodiff) for the timing comparisons
+//! of Figs 6-10.
+
+pub mod burgers;
+pub mod collocation;
+pub mod loss;
+pub mod series;
+pub mod trainer;
+
+pub use burgers::BurgersProfile;
+pub use collocation::{cluster_points, grid_points, random_points, stratified_points};
+pub use loss::{residual_derivative_nodes, BurgersLossSpec, DerivEngine, PinnObjective};
+pub use trainer::{train_burgers, EpochLog, TrainConfig, TrainResult};

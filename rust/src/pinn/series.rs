@@ -1,0 +1,182 @@
+//! Truncated power-series arithmetic and series reversion.
+//!
+//! Used by the Burgers ground-truth solver: the profile is defined
+//! *implicitly* by the polynomial relation `X = -U - C·U^(2k+1)`
+//! (eq. (8) of the paper), so around any point we know the Taylor series
+//! of `X(U)` exactly and obtain `U(X)`'s derivatives — to machine
+//! precision, at any order — by reverting the series. This avoids the
+//! noise floor of finite differences, which becomes unusable around the
+//! 5th derivative and would make the "learned vs true" curves of
+//! Figs 7-10 meaningless at high orders.
+
+/// Multiply truncated series `a(t)·b(t)` keeping terms below `len`.
+pub fn mul_trunc(a: &[f64], b: &[f64], len: usize) -> Vec<f64> {
+    let mut out = vec![0.0; len];
+    for (i, &ai) in a.iter().enumerate().take(len) {
+        if ai == 0.0 {
+            continue;
+        }
+        for (j, &bj) in b.iter().enumerate().take(len - i) {
+            out[i + j] += ai * bj;
+        }
+    }
+    out
+}
+
+/// Given `x(u) = Σ_{m>=1} a_m u^m` with `a_1 != 0` (series with zero
+/// constant term), return `b` with `u(x) = Σ_{m>=1} b_m x^m` truncated to
+/// `n_terms` coefficients (index 0 = constant term = 0).
+///
+/// Classical iterative reversion: match coefficients of `x(u(x)) = x`
+/// order by order; `b_n` appears linearly through the `a_1 u` term.
+pub fn revert(a: &[f64], n_terms: usize) -> Vec<f64> {
+    assert!(a.len() >= 2, "need at least the linear coefficient");
+    assert!(a[0] == 0.0, "series must have zero constant term");
+    assert!(a[1] != 0.0, "linear coefficient must be nonzero");
+    let len = n_terms.max(2);
+    let mut b = vec![0.0; len];
+    b[1] = 1.0 / a[1];
+
+    // powers[m] = (u(x))^m truncated, updated incrementally as b grows.
+    for n in 2..len {
+        // Compute coefficient of x^n in Σ_{m=2..n} a_m (u_{<n}(x))^m,
+        // where u_{<n} uses b_1..b_{n-1} (higher coefficients cannot
+        // contribute to x^n for m >= 2 since every term has >= 2 factors).
+        let u_partial = &b[..n]; // b[0..n-1] known, index < n
+        let mut pow = u_partial.to_vec(); // u^1
+        let mut residual = 0.0;
+        for m in 2..=n {
+            pow = mul_trunc(&pow, u_partial, n + 1);
+            if m < a.len() && a[m] != 0.0 && n < pow.len() {
+                residual += a[m] * pow[n];
+            }
+        }
+        b[n] = -residual / a[1];
+    }
+    b
+}
+
+/// Evaluate a series `Σ c_m t^m` at `t` (Horner).
+pub fn eval(coeffs: &[f64], t: f64) -> f64 {
+    let mut acc = 0.0;
+    for &c in coeffs.iter().rev() {
+        acc = acc * t + c;
+    }
+    acc
+}
+
+/// Derivative values `f^{(k)}(x0) = k! c_k` from Taylor coefficients.
+pub fn derivatives_from_taylor(coeffs: &[f64]) -> Vec<f64> {
+    let mut fact = 1.0;
+    coeffs
+        .iter()
+        .enumerate()
+        .map(|(k, &c)| {
+            if k > 0 {
+                fact *= k as f64;
+            }
+            c * fact
+        })
+        .collect()
+}
+
+/// Shift a polynomial: coefficients of `p(u0 + v)` in `v`, truncated.
+/// (Builds the local series of the implicit relation around the solution
+/// point.)
+pub fn shift_poly(coeffs: &[f64], u0: f64, len: usize) -> Vec<f64> {
+    // Horner-style synthetic division repeated: p(u0+v) coefficients are
+    // successive remainders of division by (u - u0).
+    let mut work = coeffs.to_vec();
+    let n = coeffs.len();
+    let mut out = vec![0.0; n.min(len)];
+    for item in out.iter_mut() {
+        // Evaluate and divide by (u - u0) via synthetic division.
+        let mut rem = 0.0;
+        for j in (0..work.len()).rev() {
+            let tmp = work[j];
+            work[j] = rem;
+            rem = rem * u0 + tmp;
+        }
+        *item = rem;
+        // The quotient sits in work[0..len-1]; drop the stale top slot.
+        work.pop();
+        if work.is_empty() {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::allclose_slice;
+
+    #[test]
+    fn mul_trunc_basic() {
+        // (1 + t)(1 - t) = 1 - t^2
+        let p = mul_trunc(&[1.0, 1.0], &[1.0, -1.0], 4);
+        assert_eq!(p, vec![1.0, 0.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn revert_geometric() {
+        // x = u/(1-u) = u + u² + u³ + ... ⇒ u = x/(1+x) = x - x² + x³ - ...
+        let a: Vec<f64> = std::iter::once(0.0).chain(std::iter::repeat(1.0)).take(10).collect();
+        let b = revert(&a, 8);
+        let expect: Vec<f64> = (0..8)
+            .map(|m| {
+                if m == 0 {
+                    0.0
+                } else if m % 2 == 1 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            })
+            .collect();
+        assert!(allclose_slice(&b, &expect, 1e-12, 1e-12), "{b:?}");
+    }
+
+    #[test]
+    fn revert_satisfies_composition() {
+        // Arbitrary series; check x(u(x)) = x through order 9.
+        let a = [0.0, 2.0, -0.5, 0.25, 1.5, 0.0, -0.75];
+        let b = revert(&a, 10);
+        // Compose: c = a(b(x)).
+        let mut pow = b.clone();
+        let mut comp = vec![0.0; 10];
+        for m in 1..a.len() {
+            if m > 1 {
+                pow = mul_trunc(&pow, &b, 10);
+            }
+            for i in 0..10 {
+                comp[i] += a[m] * pow[i];
+            }
+        }
+        let mut expect = vec![0.0; 10];
+        expect[1] = 1.0;
+        assert!(allclose_slice(&comp, &expect, 1e-10, 1e-10), "{comp:?}");
+    }
+
+    #[test]
+    fn eval_horner() {
+        assert_eq!(eval(&[1.0, 2.0, 3.0], 2.0), 17.0);
+    }
+
+    #[test]
+    fn derivatives_factorials() {
+        let d = derivatives_from_taylor(&[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(d, vec![1.0, 1.0, 2.0, 6.0]);
+    }
+
+    #[test]
+    fn shift_poly_matches_expansion() {
+        // p(u) = u² ; p(1 + v) = 1 + 2v + v²
+        let s = shift_poly(&[0.0, 0.0, 1.0], 1.0, 3);
+        assert!(allclose_slice(&s, &[1.0, 2.0, 1.0], 1e-14, 1e-14));
+        // p(u) = -u - u³ at u0 = 0.5: p = -0.625 - 1.75v - 1.5v² - v³
+        let s2 = shift_poly(&[0.0, -1.0, 0.0, -1.0], 0.5, 4);
+        assert!(allclose_slice(&s2, &[-0.625, -1.75, -1.5, -1.0], 1e-14, 1e-14), "{s2:?}");
+    }
+}

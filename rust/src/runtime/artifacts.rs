@@ -1,0 +1,137 @@
+//! Artifact registry: discover and describe the AOT bundle under
+//! `artifacts/`, validated against the `manifest.json` the AOT step emits.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata for one compiled artifact (one HLO text file).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// Derivative order this artifact computes (for `ntp_fwd_*`).
+    pub n_derivs: Option<usize>,
+    /// Compiled batch size (fixed shape).
+    pub batch: Option<usize>,
+    /// Flat parameter count expected in slot 0.
+    pub n_params: Option<usize>,
+    /// Network architecture, e.g. `[1, 24, 24, 24, 1]`.
+    pub sizes: Vec<usize>,
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<ArtifactManifest> {
+        let root = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let arr = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'artifacts' array")?;
+        let mut specs = Vec::new();
+        for item in arr {
+            let name = item
+                .get("name")
+                .and_then(Json::as_str)
+                .context("artifact missing name")?
+                .to_string();
+            let file = item
+                .get("file")
+                .and_then(Json::as_str)
+                .context("artifact missing file")?
+                .to_string();
+            let sizes = item
+                .get("sizes")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default();
+            specs.push(ArtifactSpec {
+                name,
+                file,
+                n_derivs: item.get("n_derivs").and_then(Json::as_usize),
+                batch: item.get("batch").and_then(Json::as_usize),
+                n_params: item.get("n_params").and_then(Json::as_usize),
+                sizes,
+            });
+        }
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), specs })
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        match self.specs.iter().find(|s| s.name == name) {
+            Some(s) => Ok(s),
+            None => bail!(
+                "artifact '{name}' not in manifest (have: {})",
+                self.specs
+                    .iter()
+                    .map(|s| s.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        }
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "artifacts": [
+            {"name": "ntp_fwd_d3", "file": "ntp_fwd_d3.hlo.txt",
+             "n_derivs": 3, "batch": 256, "n_params": 1273,
+             "sizes": [1, 24, 24, 24, 1]},
+            {"name": "pinn_vg_k1", "file": "pinn_vg_k1.hlo.txt"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = ArtifactManifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.specs.len(), 2);
+        let spec = m.get("ntp_fwd_d3").unwrap();
+        assert_eq!(spec.n_derivs, Some(3));
+        assert_eq!(spec.batch, Some(256));
+        assert_eq!(spec.sizes, vec![1, 24, 24, 24, 1]);
+        assert_eq!(
+            m.path_of(spec),
+            Path::new("/tmp/a").join("ntp_fwd_d3.hlo.txt")
+        );
+        // Optional fields absent → None.
+        assert_eq!(m.get("pinn_vg_k1").unwrap().n_derivs, None);
+    }
+
+    #[test]
+    fn unknown_artifact_is_an_error() {
+        let m = ArtifactManifest::parse(Path::new("."), SAMPLE).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("ntp_fwd_d3"), "{err}");
+    }
+
+    #[test]
+    fn bad_json_is_an_error() {
+        assert!(ArtifactManifest::parse(Path::new("."), "{").is_err());
+        assert!(ArtifactManifest::parse(Path::new("."), r#"{"x":1}"#).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts (produced once, at build
+//! time, by `python/compile/aot.py`) and execute them from Rust.
+//!
+//! Python never runs on this path. The interchange format is HLO *text*
+//! (not serialized `HloModuleProto`): jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids which the pinned `xla_extension` 0.5.1 rejects, while
+//! the text parser reassigns ids and round-trips cleanly (see
+//! `/opt/xla-example/README.md`).
+
+pub mod artifacts;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec};
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled computation. Inputs/outputs are `f64` tensors; the AOT side
+/// lowers everything with `jax_enable_x64` and `return_tuple=True`.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with `f64` tensor inputs; returns the tuple elements as
+    /// `f64` tensors (shape recovered from the result literals).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let elems = out.to_tuple().context("untupling result")?;
+        elems.iter().map(literal_to_tensor).collect()
+    }
+}
+
+/// Convert an `f64` [`Tensor`] into an XLA literal of the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let flat = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    flat.reshape(&dims).context("reshaping literal")
+}
+
+/// Convert an XLA literal back into an `f64` [`Tensor`].
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().context("reading literal shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = l.ty().context("reading literal dtype")?;
+    let data: Vec<f64> = match ty {
+        xla::ElementType::F64 => l.to_vec::<f64>().context("reading f64 data")?,
+        xla::ElementType::F32 => l
+            .to_vec::<f32>()
+            .context("reading f32 data")?
+            .into_iter()
+            .map(|x| x as f64)
+            .collect(),
+        other => bail!("unsupported artifact output dtype {other:?}"),
+    };
+    Ok(Tensor::from_vec(data, &dims))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::linspace(-1.0, 1.0, 6).reshape(&[2, 3]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back.shape(), t.shape());
+        assert_eq!(back.data(), t.data());
+    }
+
+    // PJRT execution itself is covered by rust/tests/runtime_integration.rs
+    // (requires `make artifacts`).
+}

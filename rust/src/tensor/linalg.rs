@@ -1,0 +1,221 @@
+//! Dense linear algebra: matmul (plus the transposed variants the autodiff
+//! vector-Jacobian products need) and 2-D transpose.
+//!
+//! The matmul kernel is a cache-friendly `i-k-j` loop over row-major data;
+//! the `_tn`/`_nt` variants fuse the transposes the backward pass needs so
+//! no explicit transposed copies are materialized on the training hot path.
+
+use super::Tensor;
+
+impl Tensor {
+    /// 2-D transpose.
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.rank(), 2, "transpose expects rank 2");
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// `C = A @ B` for `A:[m,k]`, `B:[k,n]`.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2, "matmul lhs rank");
+        assert_eq!(other.rank(), 2, "matmul rhs rank");
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        matmul_into(&self.data, &other.data, &mut out.data, m, k, n);
+        out
+    }
+
+    /// `C = A^T @ B` for `A:[k,m]`, `B:[k,n]` without materializing `A^T`.
+    pub fn matmul_tn(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (k, m) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul_tn inner dims {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        // out[i, j] += A[p, i] * B[p, j]: accumulate rank-1 updates row by row.
+        for p in 0..k {
+            let arow = &self.data[p * m..(p + 1) * m];
+            let brow = &other.data[p * n..(p + 1) * n];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `C = A @ B^T` for `A:[m,k]`, `B:[n,k]` without materializing `B^T`.
+    ///
+    /// §Perf: both operands are walked row-contiguously (ideal for this
+    /// layout), and the dot product uses four independent accumulators so
+    /// the compiler can vectorize despite FP-add ordering constraints.
+    pub fn matmul_nt(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (n, k2) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul_nt inner dims {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &other.data[j * k..(j + 1) * k];
+                *o = dot_unrolled(arow, brow);
+            }
+        }
+        out
+    }
+}
+
+/// Dot product with four independent accumulators (lets LLVM vectorize
+/// the reduction; a single serial accumulator cannot be reordered).
+#[inline]
+pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = 4 * c;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut tail = 0.0;
+    for i in 4 * chunks..a.len() {
+        tail += a[i] * b[i];
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// Row-major `i-k-j` matmul into a preallocated (zeroed) buffer.
+pub fn matmul_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::{allclose_slice, ptest};
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += a.at(i, p) * b.at(p, j);
+                }
+                out.set(i, j, acc);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = Tensor::ones(&[2, 2]);
+        assert_eq!(a.matmul(&b).data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Prng::seeded(11);
+        let a = Tensor::rand_normal(&[3, 5], 0.0, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().shape(), &[5, 3]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random() {
+        ptest::quickcheck(
+            |rng| {
+                let m = 1 + rng.below(6) as usize;
+                let k = 1 + rng.below(6) as usize;
+                let n = 1 + rng.below(6) as usize;
+                let a = Tensor::rand_normal(&[m, k], 0.0, 1.0, rng);
+                let b = Tensor::rand_normal(&[k, n], 0.0, 1.0, rng);
+                (a, b)
+            },
+            |(a, b)| {
+                let fast = a.matmul(b);
+                let slow = naive_matmul(a, b);
+                if allclose_slice(fast.data(), slow.data(), 1e-12, 1e-12) {
+                    Ok(())
+                } else {
+                    Err("matmul != naive".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn fused_transpose_variants_match_explicit() {
+        ptest::quickcheck(
+            |rng| {
+                let m = 1 + rng.below(5) as usize;
+                let k = 1 + rng.below(5) as usize;
+                let n = 1 + rng.below(5) as usize;
+                let a = Tensor::rand_normal(&[k, m], 0.0, 1.0, rng);
+                let b = Tensor::rand_normal(&[k, n], 0.0, 1.0, rng);
+                let c = Tensor::rand_normal(&[m, k], 0.0, 1.0, rng);
+                let d = Tensor::rand_normal(&[n, k], 0.0, 1.0, rng);
+                (a, b, c, d)
+            },
+            |(a, b, c, d)| {
+                let tn = a.matmul_tn(b);
+                let tn_ref = a.transpose().matmul(b);
+                let nt = c.matmul_nt(d);
+                let nt_ref = c.matmul(&d.transpose());
+                if allclose_slice(tn.data(), tn_ref.data(), 1e-12, 1e-12)
+                    && allclose_slice(nt.data(), nt_ref.data(), 1e-12, 1e-12)
+                {
+                    Ok(())
+                } else {
+                    Err("fused transpose matmul mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn inner_dim_mismatch_panics() {
+        Tensor::zeros(&[2, 3]).matmul(&Tensor::zeros(&[4, 2]));
+    }
+}

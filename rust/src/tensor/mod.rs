@@ -1,0 +1,205 @@
+//! A small dense `f64` tensor engine — the compute substrate for the
+//! autodiff tape and the n-TangentProp engine.
+//!
+//! Row-major, rank ≤ 2 in practice (PINN batches are `[B, F]`). Every
+//! allocation is accounted (see [`alloc`]) so the benchmark harness can
+//! report the memory-vs-derivative-order curves the paper discusses
+//! (autodiff OOMs beyond 9 derivatives on a 49 GB GPU; n-TangentProp is
+//! linear in `n`).
+
+pub mod alloc;
+pub mod linalg;
+pub mod ops;
+
+use crate::util::prng::Prng;
+
+/// A dense row-major `f64` tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl Tensor {
+    // ------------------------------------------------------------ creation
+
+    /// Build from raw data; panics if `data.len() != product(shape)`.
+    pub fn from_vec(data: Vec<f64>, shape: &[usize]) -> Tensor {
+        let numel: usize = shape.iter().product();
+        assert_eq!(
+            data.len(),
+            numel,
+            "from_vec: data length {} != shape {:?} numel {}",
+            data.len(),
+            shape,
+            numel
+        );
+        alloc::record(numel);
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(x: f64) -> Tensor {
+        Tensor::from_vec(vec![x], &[1])
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let numel: usize = shape.iter().product();
+        alloc::record(numel);
+        Tensor { shape: shape.to_vec(), data: vec![0.0; numel] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor::full(shape, 1.0)
+    }
+
+    pub fn full(shape: &[usize], value: f64) -> Tensor {
+        let numel: usize = shape.iter().product();
+        alloc::record(numel);
+        Tensor { shape: shape.to_vec(), data: vec![value; numel] }
+    }
+
+    /// `n` evenly spaced points including both endpoints; shape `[n]`.
+    pub fn linspace(lo: f64, hi: f64, n: usize) -> Tensor {
+        assert!(n >= 2, "linspace needs n >= 2");
+        let step = (hi - lo) / (n - 1) as f64;
+        Tensor::from_vec((0..n).map(|i| lo + step * i as f64).collect(), &[n])
+    }
+
+    pub fn rand_uniform(shape: &[usize], lo: f64, hi: f64, rng: &mut Prng) -> Tensor {
+        let numel: usize = shape.iter().product();
+        Tensor::from_vec(rng.uniform_vec(numel, lo, hi), shape)
+    }
+
+    pub fn rand_normal(shape: &[usize], mean: f64, std: f64, rng: &mut Prng) -> Tensor {
+        let numel: usize = shape.iter().product();
+        Tensor::from_vec(rng.normal_vec(numel, mean, std), shape)
+    }
+
+    // ------------------------------------------------------------- queries
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// The single element of a `[1]`/scalar tensor.
+    pub fn item(&self) -> f64 {
+        assert_eq!(self.numel(), 1, "item() on non-scalar of shape {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// 2-D element accessor.
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        assert_eq!(self.rank(), 2);
+        let cols = self.shape[1];
+        self.data[i * cols + j] = v;
+    }
+
+    // ------------------------------------------------------------ reshape
+
+    /// Reinterpret the data with a new shape of equal numel.
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        let numel: usize = shape.iter().product();
+        assert_eq!(self.numel(), numel, "reshape {:?} -> {:?}", self.shape, shape);
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// Row `i` of a 2-D tensor as a fresh `[cols]` tensor.
+    pub fn row(&self, i: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let cols = self.shape[1];
+        Tensor::from_vec(self.data[i * cols..(i + 1) * cols].to_vec(), &[cols])
+    }
+
+    /// Stack `[rows]`-shaped tensors into `[k, rows]`.
+    pub fn stack_rows(rows: &[&Tensor]) -> Tensor {
+        assert!(!rows.is_empty());
+        let cols = rows[0].numel();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.numel(), cols, "stack_rows: ragged input");
+            data.extend_from_slice(r.data());
+        }
+        Tensor::from_vec(data, &[rows.len(), cols])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creation_and_queries() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.at(1, 2), 6.0);
+        assert_eq!(t.row(1).data(), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "from_vec")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(vec![1.0], &[2, 2]);
+    }
+
+    #[test]
+    fn linspace_endpoints() {
+        let t = Tensor::linspace(-1.0, 1.0, 5);
+        assert_eq!(t.data(), &[-1.0, -0.5, 0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::linspace(0.0, 5.0, 6).reshape(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.reshape(&[6]).shape(), &[6]);
+    }
+
+    #[test]
+    fn set_and_at() {
+        let mut t = Tensor::zeros(&[2, 2]);
+        t.set(0, 1, 3.5);
+        assert_eq!(t.at(0, 1), 3.5);
+    }
+
+    #[test]
+    fn stack_rows_shapes() {
+        let a = Tensor::from_vec(vec![1.0, 2.0], &[2]);
+        let b = Tensor::from_vec(vec![3.0, 4.0], &[2]);
+        let s = Tensor::stack_rows(&[&a, &b]);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn random_tensors_in_bounds() {
+        let mut rng = Prng::seeded(1);
+        let t = Tensor::rand_uniform(&[100], -2.0, 2.0, &mut rng);
+        assert!(t.data().iter().all(|x| (-2.0..2.0).contains(x)));
+    }
+}

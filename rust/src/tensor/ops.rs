@@ -1,0 +1,225 @@
+//! Elementwise, broadcast and reduction operations.
+
+use super::Tensor;
+
+impl Tensor {
+    fn zip(&self, other: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
+        assert_eq!(
+            self.shape, other.shape,
+            "elementwise op on mismatched shapes {:?} vs {:?}",
+            self.shape, other.shape
+        );
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| f(*a, *b))
+            .collect();
+        Tensor::from_vec(data, &self.shape)
+    }
+
+    /// Apply `f` to every element.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
+        Tensor::from_vec(self.data.iter().map(|x| f(*x)).collect(), &self.shape)
+    }
+
+    /// In-place map (no allocation) — hot-path helper.
+    pub fn map_inplace(&mut self, f: impl Fn(f64) -> f64) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn div(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a / b)
+    }
+
+    /// Fused `self + alpha * other` (hot path: optimizer updates, combines).
+    pub fn axpy(&self, alpha: f64, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + alpha * b)
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy_inplace(&mut self, alpha: f64, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn neg(&self) -> Tensor {
+        self.map(|x| -x)
+    }
+
+    pub fn scale(&self, alpha: f64) -> Tensor {
+        self.map(|x| alpha * x)
+    }
+
+    pub fn add_scalar(&self, c: f64) -> Tensor {
+        self.map(|x| x + c)
+    }
+
+    pub fn tanh(&self) -> Tensor {
+        self.map(f64::tanh)
+    }
+
+    /// Integer power (exponentiation by squaring per element).
+    pub fn powi(&self, k: i32) -> Tensor {
+        self.map(|x| x.powi(k))
+    }
+
+    // ----------------------------------------------------------- broadcast
+
+    /// Add a `[F]` bias row to every row of a `[B, F]` tensor.
+    pub fn add_bias(&self, bias: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2, "add_bias expects rank-2 lhs");
+        assert_eq!(bias.rank(), 1, "add_bias expects rank-1 bias");
+        let (b, f) = (self.shape[0], self.shape[1]);
+        assert_eq!(bias.shape[0], f, "bias width mismatch");
+        let mut out = self.clone();
+        for i in 0..b {
+            for j in 0..f {
+                out.data[i * f + j] += bias.data[j];
+            }
+        }
+        out
+    }
+
+    /// Replicate a `[F]` row into `[B, F]`.
+    pub fn broadcast_rows(&self, b: usize) -> Tensor {
+        assert_eq!(self.rank(), 1, "broadcast_rows expects rank-1 input");
+        let f = self.shape[0];
+        let mut data = Vec::with_capacity(b * f);
+        for _ in 0..b {
+            data.extend_from_slice(&self.data);
+        }
+        Tensor::from_vec(data, &[b, f])
+    }
+
+    /// Fill a tensor of `shape` with the single element of `self`.
+    pub fn broadcast_scalar(&self, shape: &[usize]) -> Tensor {
+        Tensor::full(shape, self.item())
+    }
+
+    // ---------------------------------------------------------- reductions
+
+    /// Sum of all elements, as a `[1]` tensor.
+    pub fn sum_all(&self) -> Tensor {
+        Tensor::scalar(self.data.iter().sum())
+    }
+
+    /// Column sums of a `[B, F]` tensor → `[F]`.
+    pub fn sum_axis0(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (b, f) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0; f];
+        for i in 0..b {
+            for j in 0..f {
+                out[j] += self.data[i * f + j];
+            }
+        }
+        Tensor::from_vec(out, &[f])
+    }
+
+    /// Mean of all elements (scalar f64).
+    pub fn mean(&self) -> f64 {
+        self.data.iter().sum::<f64>() / self.numel() as f64
+    }
+
+    /// Dot product of two same-shaped tensors (flattened).
+    pub fn dot(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.numel(), other.numel(), "dot: length mismatch");
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    /// Euclidean norm.
+    pub fn norm(&self) -> f64 {
+        self.dot(self).sqrt()
+    }
+
+    /// Largest absolute element.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(data: &[f64]) -> Tensor {
+        Tensor::from_vec(data.to_vec(), &[2, 2])
+    }
+
+    #[test]
+    fn elementwise_basics() {
+        let a = t2(&[1.0, 2.0, 3.0, 4.0]);
+        let b = t2(&[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.add(&b).data(), &[6.0, 8.0, 10.0, 12.0]);
+        assert_eq!(b.sub(&a).data(), &[4.0, 4.0, 4.0, 4.0]);
+        assert_eq!(a.mul(&b).data(), &[5.0, 12.0, 21.0, 32.0]);
+        assert_eq!(b.div(&a).data(), &[5.0, 3.0, 7.0 / 3.0, 2.0]);
+        assert_eq!(a.neg().data(), &[-1.0, -2.0, -3.0, -4.0]);
+        assert_eq!(a.scale(2.0).data(), &[2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(a.axpy(2.0, &b).data(), &[11.0, 14.0, 17.0, 20.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched shapes")]
+    fn mismatched_shapes_panic() {
+        let a = Tensor::zeros(&[2, 2]);
+        let b = Tensor::zeros(&[2, 3]);
+        a.add(&b);
+    }
+
+    #[test]
+    fn bias_and_broadcast() {
+        let x = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let bias = Tensor::from_vec(vec![10.0, 20.0, 30.0], &[3]);
+        assert_eq!(x.add_bias(&bias).data(), &[11.0, 22.0, 33.0, 14.0, 25.0, 36.0]);
+        let r = bias.broadcast_rows(2);
+        assert_eq!(r.shape(), &[2, 3]);
+        assert_eq!(r.data(), &[10.0, 20.0, 30.0, 10.0, 20.0, 30.0]);
+        let s = Tensor::scalar(7.0).broadcast_scalar(&[2, 2]);
+        assert_eq!(s.data(), &[7.0; 4]);
+    }
+
+    #[test]
+    fn reductions() {
+        let x = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(x.sum_all().item(), 21.0);
+        assert_eq!(x.sum_axis0().data(), &[5.0, 7.0, 9.0]);
+        assert_eq!(x.mean(), 3.5);
+        assert_eq!(x.dot(&x), 91.0);
+        assert_eq!(x.max_abs(), 6.0);
+        assert!((x.norm() - 91.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn powi_matches_repeated_mul() {
+        let x = Tensor::from_vec(vec![2.0, -3.0], &[2]);
+        assert_eq!(x.powi(3).data(), &[8.0, -27.0]);
+        assert_eq!(x.powi(0).data(), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn axpy_inplace_matches_axpy() {
+        let mut a = t2(&[1.0, 2.0, 3.0, 4.0]);
+        let b = t2(&[1.0, 1.0, 1.0, 1.0]);
+        let expect = a.axpy(0.5, &b);
+        a.axpy_inplace(0.5, &b);
+        assert_eq!(a, expect);
+    }
+}

@@ -1,0 +1,178 @@
+//! A minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declarative option spec for usage rendering and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+impl Args {
+    /// Parse raw arguments. `specs` defines which `--name`s take a value;
+    /// unknown options are an error.
+    pub fn parse(raw: &[String], specs: &[OptSpec]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| format!("--{name} requires a value"))?,
+                    };
+                    args.opts.insert(name, val);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        // Fill defaults.
+        for spec in specs {
+            if let Some(d) = spec.default {
+                args.opts.entry(spec.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|_| format!("--{name}: expected integer, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|_| format!("--{name}: expected number, got '{v}'")))
+            .transpose()
+    }
+
+    /// Parse a comma-separated usize list, e.g. `--widths 16,24,64`.
+    pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| format!("--{name}: bad integer '{p}'"))
+                })
+                .collect::<Result<Vec<usize>, String>>()
+                .map(Some),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render a usage block from specs.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut out = format!("{about}\n\nUSAGE: ntangent {cmd} [OPTIONS]\n\nOPTIONS:\n");
+    for s in specs {
+        let head = if s.takes_value {
+            format!("--{} <value>", s.name)
+        } else {
+            format!("--{}", s.name)
+        };
+        let default = s.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        out.push_str(&format!("  {head:<26} {}{default}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "n", help: "derivatives", takes_value: true, default: Some("3") },
+            OptSpec { name: "out", help: "output", takes_value: true, default: None },
+            OptSpec { name: "verbose", help: "log more", takes_value: false, default: None },
+        ]
+    }
+
+    fn raw(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(&raw(&["--n", "5", "--verbose", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), Some(5));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = Args::parse(&raw(&["--out=x.csv"]), &specs()).unwrap();
+        assert_eq!(a.get("out"), Some("x.csv"));
+        assert_eq!(a.get_usize("n").unwrap(), Some(3)); // default
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(Args::parse(&raw(&["--bogus"]), &specs()).is_err());
+        assert!(Args::parse(&raw(&["--out"]), &specs()).is_err());
+        assert!(Args::parse(&raw(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let sp = vec![OptSpec { name: "widths", help: "", takes_value: true, default: None }];
+        let a = Args::parse(&raw(&["--widths", "16,24, 64"]), &sp).unwrap();
+        assert_eq!(a.get_usize_list("widths").unwrap(), Some(vec![16, 24, 64]));
+        let bad = Args::parse(&raw(&["--widths", "16,x"]), &sp).unwrap();
+        assert!(bad.get_usize_list("widths").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = usage("bench", "Run benchmarks", &specs());
+        assert!(u.contains("--n"));
+        assert!(u.contains("default: 3"));
+    }
+}

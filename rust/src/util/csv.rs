@@ -1,0 +1,182 @@
+//! CSV writing (and a small reader) for benchmark outputs under `results/`.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// An in-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Push a row of already-formatted cells; panics on arity mismatch.
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Push a row of f64 cells formatted with full precision.
+    pub fn push_nums(&mut self, row: &[f64]) {
+        self.push(row.iter().map(|x| format!("{x:.9e}")).collect());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&escape_row(&self.header));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&escape_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as a GitHub-flavored markdown table (for EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            self.header.iter().map(|_| "---|").collect::<String>()
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+
+    /// Write the CSV to `path`, creating parent directories.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    /// Parse a CSV produced by [`Table::to_csv`] (simple quoting rules).
+    pub fn load_str(text: &str) -> Option<Table> {
+        let mut lines = text.lines();
+        let header = parse_row(lines.next()?);
+        let rows = lines
+            .filter(|l| !l.is_empty())
+            .map(parse_row)
+            .collect::<Vec<_>>();
+        for r in &rows {
+            if r.len() != header.len() {
+                return None;
+            }
+        }
+        Some(Table { header, rows })
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// Numeric column extraction.
+    pub fn col_f64(&self, name: &str) -> Option<Vec<f64>> {
+        let idx = self.col(name)?;
+        self.rows.iter().map(|r| r[idx].parse().ok()).collect()
+    }
+}
+
+fn escape_cell(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+fn escape_row(row: &[String]) -> String {
+    row.iter().map(|c| escape_cell(c)).collect::<Vec<_>>().join(",")
+}
+
+fn parse_row(line: &str) -> Vec<String> {
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                cur.push(c);
+            }
+        } else if c == '"' {
+            in_quotes = true;
+        } else if c == ',' {
+            cells.push(std::mem::take(&mut cur));
+        } else {
+            cur.push(c);
+        }
+    }
+    cells.push(cur);
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec!["1".into(), "x,y".into()]);
+        t.push(vec!["2".into(), "q\"uote".into()]);
+        let parsed = Table::load_str(&t.to_csv()).unwrap();
+        assert_eq!(parsed.header, t.header);
+        assert_eq!(parsed.rows, t.rows);
+    }
+
+    #[test]
+    fn numeric_columns() {
+        let mut t = Table::new(&["n", "t"]);
+        t.push_nums(&[1.0, 0.5]);
+        t.push_nums(&[2.0, 0.25]);
+        let parsed = Table::load_str(&t.to_csv()).unwrap();
+        assert_eq!(parsed.col_f64("n").unwrap(), vec![1.0, 2.0]);
+        assert_eq!(parsed.col_f64("t").unwrap(), vec![0.5, 0.25]);
+        assert!(parsed.col("missing").is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn markdown_render() {
+        let mut t = Table::new(&["x"]);
+        t.push(vec!["1".into()]);
+        let md = t.to_markdown();
+        assert!(md.starts_with("| x |"));
+        assert!(md.contains("| 1 |"));
+    }
+}

@@ -1,0 +1,58 @@
+//! Substrates built from scratch: PRNG, statistics, timing, JSON, CSV,
+//! CLI parsing and a mini property-testing helper.
+//!
+//! The offline crate registry in this environment only carries the `xla`
+//! dependency closure, so the usual crates (`rand`, `serde`, `clap`,
+//! `criterion`, `proptest`) are re-implemented here at the scale this
+//! project needs.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prng;
+pub mod ptest;
+pub mod stats;
+pub mod timer;
+
+/// Relative/absolute closeness check used across tests.
+///
+/// Returns `true` when `|a - b| <= atol + rtol * max(|a|, |b|)`.
+pub fn allclose(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    if a.is_nan() || b.is_nan() {
+        return false;
+    }
+    (a - b).abs() <= atol + rtol * a.abs().max(b.abs())
+}
+
+/// Slice version of [`allclose`]; lengths must match.
+pub fn allclose_slice(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| allclose(*x, *y, rtol, atol))
+}
+
+/// Maximum absolute elementwise difference between two slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "max_abs_diff: length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allclose_basic() {
+        assert!(allclose(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(!allclose(1.0, 1.1, 1e-9, 0.0));
+        assert!(!allclose(f64::NAN, f64::NAN, 1.0, 1.0));
+        assert!(allclose(0.0, 1e-12, 0.0, 1e-9));
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}

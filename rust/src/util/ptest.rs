@@ -1,0 +1,93 @@
+//! A mini property-testing helper (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` randomly generated inputs; on
+//! failure it reports the seed and case index so the exact counterexample
+//! can be replayed deterministically.
+
+use super::prng::Prng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xA11CE }
+    }
+}
+
+/// Run `prop` on `cfg.cases` generated inputs. `gen` builds an input from
+/// the per-case RNG; `prop` returns `Err(msg)` to signal failure.
+pub fn check<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Prng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut master = Prng::seeded(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = master.split();
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={:#x}, case={case}): {msg}\ninput: {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Like [`check`] but with the default config.
+pub fn quickcheck<T: std::fmt::Debug>(
+    gen: impl FnMut(&mut Prng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(Config::default(), gen, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        quickcheck(
+            |rng| rng.uniform_in(-10.0, 10.0),
+            |x| {
+                if x * x >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("square negative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            Config { cases: 16, seed: 7 },
+            |rng| rng.uniform(),
+            |_| Err("always fails".into()),
+        );
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let mut inputs_a = Vec::new();
+        let mut inputs_b = Vec::new();
+        let cfg = Config { cases: 8, seed: 99 };
+        check(cfg, |rng| rng.next_u64(), |x| {
+            inputs_a.push(*x);
+            Ok(())
+        });
+        check(cfg, |rng| rng.next_u64(), |x| {
+            inputs_b.push(*x);
+            Ok(())
+        });
+        assert_eq!(inputs_a, inputs_b);
+    }
+}

@@ -1,0 +1,119 @@
+//! Wall-clock timing helpers for the benchmark harness.
+//!
+//! Mirrors the paper's methodology (§IV-B): use a monotonic performance
+//! counter, run a warmup, and report per-trial averages.
+
+use std::time::Instant;
+
+/// Time a closure once; returns (seconds, result).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let start = Instant::now();
+    let out = f();
+    (start.elapsed().as_secs_f64(), out)
+}
+
+/// Run `warmup` untimed iterations, then `trials` timed iterations of `f`.
+/// Returns the per-trial wall-clock seconds.
+pub fn time_trials(warmup: usize, trials: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let start = Instant::now();
+        f();
+        out.push(start.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// A stopwatch that accumulates named segments; used to split the
+/// forward / backward phases inside a single training step the way the
+/// paper reports them separately (Figs 2 and 3).
+#[derive(Default, Debug)]
+pub struct SegmentClock {
+    segments: Vec<(String, f64)>,
+}
+
+impl SegmentClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and record it under `name` (accumulating).
+    pub fn measure<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        let dt = start.elapsed().as_secs_f64();
+        self.add(name, dt);
+        out
+    }
+
+    /// Add `dt` seconds to segment `name`.
+    pub fn add(&mut self, name: &str, dt: f64) {
+        if let Some(seg) = self.segments.iter_mut().find(|(n, _)| n == name) {
+            seg.1 += dt;
+        } else {
+            self.segments.push((name.to_string(), dt));
+        }
+    }
+
+    /// Total seconds recorded under `name` (0 if absent).
+    pub fn get(&self, name: &str) -> f64 {
+        self.segments
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| *t)
+            .unwrap_or(0.0)
+    }
+
+    /// Sum of all segments.
+    pub fn total(&self) -> f64 {
+        self.segments.iter().map(|(_, t)| t).sum()
+    }
+
+    /// All `(name, seconds)` pairs in insertion order.
+    pub fn segments(&self) -> &[(String, f64)] {
+        &self.segments
+    }
+
+    pub fn reset(&mut self) {
+        self.segments.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trials_count() {
+        let ts = time_trials(2, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(ts.len(), 5);
+        assert!(ts.iter().all(|t| *t >= 0.0));
+    }
+
+    #[test]
+    fn segment_clock_accumulates() {
+        let mut clock = SegmentClock::new();
+        clock.add("fwd", 1.0);
+        clock.add("fwd", 0.5);
+        clock.add("bwd", 2.0);
+        assert_eq!(clock.get("fwd"), 1.5);
+        assert_eq!(clock.get("bwd"), 2.0);
+        assert_eq!(clock.get("missing"), 0.0);
+        assert_eq!(clock.total(), 3.5);
+        clock.reset();
+        assert_eq!(clock.total(), 0.0);
+    }
+
+    #[test]
+    fn measure_returns_value() {
+        let mut clock = SegmentClock::new();
+        let v = clock.measure("seg", || 42);
+        assert_eq!(v, 42);
+        assert!(clock.get("seg") >= 0.0);
+    }
+}

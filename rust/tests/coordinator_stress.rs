@@ -1,0 +1,179 @@
+//! Coordinator integration: correctness under concurrency, batching
+//! behaviour, failure injection, and (when artifacts are present) the
+//! PJRT backend through the full service stack.
+
+use ntangent::coordinator::service::TcpClient;
+use ntangent::coordinator::{
+    BatcherConfig, EvalBackend, NativeBackend, PjrtBackend, Service,
+};
+use ntangent::nn::{params, Mlp};
+use ntangent::ntp::NtpEngine;
+use ntangent::runtime::{ArtifactManifest, Runtime};
+use ntangent::tensor::Tensor;
+use ntangent::util::prng::Prng;
+use std::path::Path;
+use std::time::Duration;
+
+fn fixture() -> (Mlp, Service) {
+    let mut rng = Prng::seeded(0x51);
+    let mlp = Mlp::uniform(1, 12, 2, 1, &mut rng);
+    let backend_mlp = mlp.clone();
+    let service = Service::start(
+        move || Ok(Box::new(NativeBackend::new(backend_mlp, 3, 32)) as _),
+        BatcherConfig {
+            max_wait: Duration::from_micros(500),
+        },
+    );
+    (mlp, service)
+}
+
+#[test]
+fn heavy_concurrency_every_request_answered_once_correctly() {
+    let (mlp, service) = fixture();
+    let engine = NtpEngine::new(3);
+    let n_threads = 16;
+    let reqs_per_thread = 25;
+    let mut threads = Vec::new();
+    for t in 0..n_threads {
+        let handle = service.handle();
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Prng::seeded(t as u64);
+            let mut results = Vec::new();
+            for _ in 0..reqs_per_thread {
+                let len = 1 + rng.below(40) as usize; // some exceed the cap
+                let pts = rng.uniform_vec(len, -1.5, 1.5);
+                let channels = handle.eval(&pts).expect("eval failed");
+                results.push((pts, channels));
+            }
+            results
+        }));
+    }
+    let mut total = 0;
+    for th in threads {
+        for (pts, channels) in th.join().unwrap() {
+            let x = Tensor::from_vec(pts.clone(), &[pts.len(), 1]);
+            let direct = engine.forward(&mlp, &x);
+            assert_eq!(channels.len(), 4);
+            for order in 0..=3 {
+                assert_eq!(channels[order].len(), pts.len());
+                for (a, b) in channels[order].iter().zip(direct[order].data()) {
+                    assert!((a - b).abs() < 1e-10, "value corruption");
+                }
+            }
+            total += 1;
+        }
+    }
+    let m = service.handle().metrics();
+    assert_eq!(m.requests, total as u64);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.points, m.batched_points, "all points must flow through the batcher");
+    service.shutdown();
+}
+
+#[test]
+fn failing_backend_reports_errors_not_hangs() {
+    struct Flaky {
+        calls: usize,
+    }
+    impl EvalBackend for Flaky {
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn n_channels(&self) -> usize {
+            1
+        }
+        fn eval_batch(&mut self, xs: &[f64]) -> anyhow::Result<Vec<Vec<f64>>> {
+            self.calls += 1;
+            if self.calls % 2 == 0 {
+                anyhow::bail!("injected failure");
+            }
+            Ok(vec![xs.to_vec()])
+        }
+    }
+    let service = Service::start(
+        move || Ok(Box::new(Flaky { calls: 0 }) as _),
+        BatcherConfig::default(),
+    );
+    let handle = service.handle();
+    let mut ok = 0;
+    let mut err = 0;
+    for _ in 0..10 {
+        match handle.eval(&[1.0]) {
+            Ok(_) => ok += 1,
+            Err(_) => err += 1,
+        }
+    }
+    assert!(ok > 0 && err > 0, "ok={ok} err={err}");
+    assert_eq!(handle.metrics().errors as usize, err);
+    service.shutdown();
+}
+
+#[test]
+fn tcp_malformed_requests_get_error_replies() {
+    let (_, service) = fixture();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = service.handle();
+    std::thread::spawn(move || ntangent::coordinator::service::serve_tcp(listener, handle));
+
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    for bad in ["garbage", "{\"points\":[]}", "{\"cmd\":\"nope\"}"] {
+        writer.write_all(bad.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"error\""), "reply to {bad}: {line}");
+    }
+    // Connection still usable afterwards.
+    let mut client = TcpClient::connect(&addr).unwrap();
+    assert!(client.eval(&[0.5]).is_ok());
+    service.shutdown();
+}
+
+#[test]
+fn pjrt_backend_through_service_matches_native() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if ArtifactManifest::load(&dir).is_err() {
+        eprintln!("skipping pjrt service test: run `make artifacts`");
+        return;
+    }
+    // The artifact architecture is fixed (1,24,24,24,1); build a matching
+    // random parameter vector shared by both paths.
+    let mut rng = Prng::seeded(0x77);
+    let mlp = Mlp::uniform(1, 24, 3, 1, &mut rng);
+    let theta = params::flatten(&mlp);
+
+    let dir2 = dir.clone();
+    let theta2 = theta.clone();
+    let service = Service::start(
+        move || {
+            let manifest = ArtifactManifest::load(&dir2)?;
+            let spec = manifest.get("ntp_fwd_d3")?.clone();
+            let rt = Runtime::cpu()?;
+            let exe = rt.load_hlo_text(&manifest.path_of(&spec))?;
+            Ok(Box::new(PjrtBackend::new(
+                exe,
+                theta2,
+                spec.batch.unwrap(),
+                spec.n_derivs.unwrap(),
+            )) as _)
+        },
+        BatcherConfig::default(),
+    );
+    let handle = service.handle();
+    let pts: Vec<f64> = (0..40).map(|i| -1.0 + i as f64 * 0.05).collect();
+    let channels = handle.eval(&pts).expect("pjrt eval");
+    let native = NtpEngine::new(3).forward(&mlp, &Tensor::from_vec(pts.clone(), &[40, 1]));
+    for order in 0..=3 {
+        for (a, b) in channels[order].iter().zip(native[order].data()) {
+            assert!(
+                (a - b).abs() < 1e-8 * b.abs().max(1.0),
+                "order {order}: {a} vs {b}"
+            );
+        }
+    }
+    service.shutdown();
+}

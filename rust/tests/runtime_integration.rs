@@ -1,0 +1,170 @@
+//! Integration: the AOT bridge end to end.
+//!
+//! Loads the HLO artifacts produced by `make artifacts`, executes them on
+//! the PJRT CPU client, and checks the numerics against the native Rust
+//! n-TangentProp engine — the cross-language exactness guarantee.
+//!
+//! Requires `make artifacts`; tests are skipped (with a message) when the
+//! bundle is missing so `cargo test` still works on a fresh checkout.
+
+use ntangent::nn::{params, Mlp};
+use ntangent::ntp::NtpEngine;
+use ntangent::runtime::{ArtifactManifest, Runtime};
+use ntangent::tensor::Tensor;
+use ntangent::util::prng::Prng;
+use std::path::Path;
+
+fn manifest() -> Option<ArtifactManifest> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactManifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("skipping runtime integration test: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+/// Build an MLP matching the artifact spec and its flat theta.
+fn mlp_for(spec_sizes: &[usize], seed: u64) -> (Mlp, Tensor) {
+    let mut rng = Prng::seeded(seed);
+    let mlp = Mlp::new(spec_sizes, &mut rng);
+    let theta = params::flatten(&mlp);
+    (mlp, theta)
+}
+
+#[test]
+fn ntp_fwd_artifact_matches_native_engine() {
+    let Some(manifest) = manifest() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    for name in ["ntp_fwd_d3", "ntp_fwd_d7"] {
+        let spec = manifest.get(name).unwrap();
+        let n = spec.n_derivs.unwrap();
+        let batch = spec.batch.unwrap();
+        let exe = rt.load_hlo_text(&manifest.path_of(spec)).unwrap();
+
+        let (mlp, theta) = mlp_for(&spec.sizes, 0xA0 + n as u64);
+        let mut rng = Prng::seeded(7);
+        let x = Tensor::rand_uniform(&[batch, 1], -1.5, 1.5, &mut rng);
+
+        let out = exe.run(&[theta.clone(), x.clone()]).unwrap();
+        assert_eq!(out.len(), 1, "{name}");
+        let stacked = &out[0];
+        assert_eq!(stacked.shape(), &[n + 1, batch], "{name}");
+
+        let native = NtpEngine::new(n).forward(&mlp, &x);
+        for order in 0..=n {
+            let pjrt_row = &stacked.data()[order * batch..(order + 1) * batch];
+            let nat = native[order].data();
+            for (i, (a, b)) in pjrt_row.iter().zip(nat).enumerate() {
+                let tol = 1e-8 * b.abs().max(1.0);
+                assert!(
+                    (a - b).abs() < tol,
+                    "{name} order {order} sample {i}: pjrt {a} vs native {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn autodiff_artifact_matches_ntp_artifact() {
+    // The exactness claim across engines *and* languages: the JAX
+    // nested-grad artifact equals the JAX n-TangentProp artifact.
+    let Some(manifest) = manifest() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let ntp_spec = manifest.get("ntp_fwd_d3").unwrap();
+    let ad_spec = manifest.get("autodiff_fwd_d3").unwrap();
+    let batch = ntp_spec.batch.unwrap();
+
+    let (_, theta) = mlp_for(&ntp_spec.sizes, 0xB0);
+    let mut rng = Prng::seeded(9);
+    let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, &mut rng);
+
+    let ntp_exe = rt.load_hlo_text(&manifest.path_of(ntp_spec)).unwrap();
+    let ad_exe = rt.load_hlo_text(&manifest.path_of(ad_spec)).unwrap();
+    let a = ntp_exe.run(&[theta.clone(), x.clone()]).unwrap();
+    let b = ad_exe.run(&[theta, x]).unwrap();
+    let (a, b) = (&a[0], &b[0]);
+    assert_eq!(a.shape(), b.shape());
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert!(
+            (x - y).abs() < 1e-8 * y.abs().max(1.0),
+            "element {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn pinn_vg_artifact_returns_finite_loss_and_grads() {
+    let Some(manifest) = manifest() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let spec = manifest.get("pinn_vg_k1").unwrap();
+    let exe = rt.load_hlo_text(&manifest.path_of(spec)).unwrap();
+
+    let (_, theta) = mlp_for(&spec.sizes, 0xC0);
+    let m = theta.numel();
+    let mut rng = Prng::seeded(11);
+    let x_res = Tensor::rand_uniform(&[256, 1], -2.0, 2.0, &mut rng);
+    let x_org = Tensor::rand_uniform(&[32, 1], -0.1, 0.1, &mut rng);
+    let lam_raw = Tensor::from_vec(vec![0.0], &[]); // scalar
+
+    let out = exe.run(&[theta, lam_raw, x_res, x_org]).unwrap();
+    assert_eq!(out.len(), 3, "loss, g_theta, g_lam");
+    let loss = out[0].data()[0];
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    assert_eq!(out[1].numel(), m);
+    assert!(out[1].data().iter().all(|g| g.is_finite()));
+    assert!(out[2].data()[0].is_finite());
+    // λ gradient should be non-zero at init (the inverse signal exists).
+    assert!(out[2].data()[0].abs() > 0.0);
+}
+
+#[test]
+fn pjrt_training_step_loop_decreases_loss() {
+    // A miniature of the end-to-end story: Rust owns the optimizer, PJRT
+    // executes the compiled value+grad, python is nowhere in the loop.
+    let Some(manifest) = manifest() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let spec = manifest.get("pinn_vg_k1").unwrap();
+    let exe = rt.load_hlo_text(&manifest.path_of(spec)).unwrap();
+
+    let (_, theta0) = mlp_for(&spec.sizes, 0xD0);
+    let m = theta0.numel();
+    let mut rng = Prng::seeded(13);
+    let x_res = Tensor::rand_uniform(&[256, 1], -2.0, 2.0, &mut rng);
+    let x_org = Tensor::rand_uniform(&[32, 1], -0.1, 0.1, &mut rng);
+
+    let mut theta = theta0;
+    let mut lam_raw = 0.0f64;
+    let mut adam = ntangent::opt::Adam::new(m, 2e-3);
+    let mut lam_m = 0.0f64;
+    let mut lam_v = 0.0f64;
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 1..=30 {
+        let out = exe
+            .run(&[
+                theta.clone(),
+                Tensor::from_vec(vec![lam_raw], &[]),
+                x_res.clone(),
+                x_org.clone(),
+            ])
+            .unwrap();
+        last = out[0].data()[0];
+        first.get_or_insert(last);
+        adam.apply(&mut theta, &out[1]);
+        // Scalar Adam for λ_raw.
+        let g = out[2].data()[0];
+        lam_m = 0.9 * lam_m + 0.1 * g;
+        lam_v = 0.999 * lam_v + 0.001 * g * g;
+        let mh = lam_m / (1.0 - 0.9f64.powi(step));
+        let vh = lam_v / (1.0 - 0.999f64.powi(step));
+        lam_raw -= 2e-3 * mh / (vh.sqrt() + 1e-8);
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first,
+        "PJRT training loop did not reduce loss: {first} -> {last}"
+    );
+}
