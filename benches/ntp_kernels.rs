@@ -4,7 +4,7 @@
 //!     cargo bench --bench ntp_kernels
 
 use ntangent::nn::Mlp;
-use ntangent::ntp::{NtpEngine, SmoothActivation, Tanh};
+use ntangent::ntp::{ActivationKind, NtpEngine, SmoothActivation};
 use ntangent::tensor::Tensor;
 use ntangent::util::prng::Prng;
 use ntangent::util::stats::Summary;
@@ -25,20 +25,35 @@ fn main() {
     println!("# ntp micro-kernels (batch 256, width 24)");
 
     let z = Tensor::rand_normal(&[256, 24], 0.0, 1.0, &mut rng);
-    for n in [3usize, 6, 9] {
-        let act = Tanh::new(n);
-        bench(&format!("tanh tower n={n} [256x24]"), 30, || {
-            std::hint::black_box(act.tower(&z, n));
-        });
+
+    // Per-activation tower cost: tanh's polynomial recurrence vs the sine
+    // 4-cycle vs the logistic polynomials vs the GELU Hermite tower.
+    for kind in ActivationKind::ALL {
+        for n in [3usize, 6, 9] {
+            let act = kind.build_tower(n);
+            bench(
+                &format!("{} tower n={n} [256x24]", kind.name()),
+                30,
+                || {
+                    std::hint::black_box(act.tower(&z, n));
+                },
+            );
+        }
     }
 
-    for n in [3usize, 6, 9] {
-        let engine = NtpEngine::new(n);
-        let mlp = Mlp::uniform(1, 24, 3, 1, &mut Prng::seeded(5));
-        let x = Tensor::rand_uniform(&[256, 1], -1.0, 1.0, &mut Prng::seeded(6));
-        bench(&format!("ntp full forward n={n} (3x24, B=256)"), 20, || {
-            std::hint::black_box(engine.forward(&mlp, &x));
-        });
+    for kind in ActivationKind::ALL {
+        for n in [3usize, 6, 9] {
+            let engine = NtpEngine::new(n);
+            let mlp = Mlp::uniform_with(1, 24, 3, 1, kind, &mut Prng::seeded(5));
+            let x = Tensor::rand_uniform(&[256, 1], -1.0, 1.0, &mut Prng::seeded(6));
+            bench(
+                &format!("ntp full forward n={n} (3x24 {}, B=256)", kind.name()),
+                20,
+                || {
+                    std::hint::black_box(engine.forward(&mlp, &x));
+                },
+            );
+        }
     }
 
     // Raw matmul roofline of the substrate.

@@ -29,6 +29,7 @@ fn main() {
             adam_lr: 2e-3,
             seed: k as u64,
             log_every: 50,
+            ..TrainConfig::default()
         };
         let result = train_burgers(spec, &cfg, DerivEngine::Ntp);
         println!(

@@ -26,6 +26,7 @@ fn main() {
         adam_lr: 2e-3,
         seed: 0,
         log_every: 25,
+        ..TrainConfig::default()
     };
 
     println!("== phase 1: train profile k=1 (λ* = 0.5, 3 derivatives) ==");

@@ -5,7 +5,7 @@
 
 use ntangent::autodiff::{higher, Graph};
 use ntangent::nn::Mlp;
-use ntangent::ntp::NtpEngine;
+use ntangent::ntp::{ActivationKind, NtpEngine};
 use ntangent::tensor::Tensor;
 use ntangent::util::prng::Prng;
 use std::time::Instant;
@@ -55,4 +55,28 @@ fn main() {
         "n-TangentProp used {} Faà di Bruno terms (quasilinear).",
         engine.tables().total_terms(n)
     );
+
+    // --- Activation selection: the same engine serves every registered
+    // tower. A sine-activated (SIREN-style) network, checked against its
+    // own repeated-autodiff baseline:
+    let siren = Mlp::with_activation(&[1, 24, 24, 1], ActivationKind::Sine, &mut rng);
+    let sine_channels = engine.forward(&siren, &x);
+    let mut g2 = Graph::new();
+    let xn2 = g2.input(x.shape());
+    let pn2 = siren.const_param_nodes(&mut g2);
+    let u2 = siren.forward_graph(&mut g2, xn2, &pn2);
+    let stack2 = higher::derivative_stack(&mut g2, u2, xn2, n);
+    let vals2 = g2.eval(&[x], &stack2);
+    let worst = (0..=n)
+        .flat_map(|order| {
+            sine_channels[order]
+                .data()
+                .iter()
+                .zip(vals2.get(stack2[order]).data())
+                .map(|(a, b)| (a - b).abs())
+                .collect::<Vec<_>>()
+        })
+        .fold(0.0f64, f64::max);
+    println!("\nsine-activated network (SIREN-style): engines agree to {worst:.2e}");
+    assert!(worst < 1e-8, "sine engines disagree!");
 }

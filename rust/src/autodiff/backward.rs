@@ -127,13 +127,12 @@ impl Graph {
                 let ga = self.transpose(g);
                 self.accumulate(adjoint, a, ga);
             }
-            Op::Tanh(a) => {
-                // d tanh / da = 1 - tanh^2, expressed through the output
-                // node `id` itself so the derivative stays differentiable.
-                let sq = self.mul(id, id);
-                let neg_sq = self.neg(sq);
-                let sech2 = self.add_scalar(neg_sq, 1.0);
-                let ga = self.mul(g, sech2);
+            Op::Act(a, kind, k) => {
+                // d σ^{(k)}(a) / da = σ^{(k+1)}(a): the next tower order is
+                // itself an `Act` node, so the gradient stays exactly
+                // re-differentiable for every registered activation.
+                let next = self.act(a, kind, k + 1);
+                let ga = self.mul(g, next);
                 self.accumulate(adjoint, a, ga);
             }
             Op::PowI(a, k) => {

@@ -94,7 +94,7 @@ impl Graph {
             Op::MatMulTN(a, b) => val(*a).matmul_tn(val(*b)),
             Op::MatMulNT(a, b) => val(*a).matmul_nt(val(*b)),
             Op::Transpose(a) => val(*a).transpose(),
-            Op::Tanh(a) => val(*a).tanh(),
+            Op::Act(a, kind, k) => kind.deriv_tensor(val(*a), *k),
             Op::PowI(a, k) => val(*a).powi(*k),
             Op::AddBias(x, bias) => val(*x).add_bias(val(*bias)),
             Op::SumAll(a) => val(*a).sum_all(),

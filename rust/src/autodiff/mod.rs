@@ -17,6 +17,7 @@ pub mod backward;
 pub mod eval;
 pub mod higher;
 
+use crate::ntp::activation::ActivationKind;
 use crate::tensor::Tensor;
 
 /// Index of a node in a [`Graph`].
@@ -45,7 +46,12 @@ pub enum Op {
     /// `A @ B^T` (fused).
     MatMulNT(NodeId, NodeId),
     Transpose(NodeId),
-    Tanh(NodeId),
+    /// Elementwise activation derivative `σ^{(k)}(a)` for a registered
+    /// [`ActivationKind`] (`k = 0` is the activation itself). Its VJP is
+    /// `g · σ^{(k+1)}(a)`, which keeps the tape arbitrarily
+    /// re-differentiable for *every* registered activation — the
+    /// repeated-autodiff baseline is generic, not tanh-only.
+    Act(NodeId, ActivationKind, usize),
     /// Elementwise integer power.
     PowI(NodeId, i32),
     /// `[B,F] + [F]` broadcast.
@@ -194,9 +200,15 @@ impl Graph {
         self.push(Op::Transpose(a), vec![s[1], s[0]])
     }
 
-    pub fn tanh(&mut self, a: NodeId) -> NodeId {
+    /// `σ_kind^{(k)}(a)` elementwise (`k = 0` applies the activation).
+    pub fn act(&mut self, a: NodeId, kind: ActivationKind, k: usize) -> NodeId {
         let shape = self.shape(a).to_vec();
-        self.push(Op::Tanh(a), shape)
+        self.push(Op::Act(a, kind, k), shape)
+    }
+
+    /// Convenience: `tanh(a)` (the paper's default activation).
+    pub fn tanh(&mut self, a: NodeId) -> NodeId {
+        self.act(a, ActivationKind::Tanh, 0)
     }
 
     pub fn powi(&mut self, a: NodeId, k: i32) -> NodeId {
@@ -254,7 +266,7 @@ impl Graph {
             | Op::Scale(a, _)
             | Op::AddScalar(a, _)
             | Op::Transpose(a)
-            | Op::Tanh(a)
+            | Op::Act(a, _, _)
             | Op::PowI(a, _)
             | Op::SumAll(a)
             | Op::SumAxis0(a)

@@ -1,8 +1,11 @@
 //! Figs 4-5: the ratio of autodiff to n-TangentProp pass times over a
-//! grid of widths × depths × batch sizes × derivative orders.
+//! grid of activations × widths × depths × batch sizes × derivative
+//! orders — the activation axis sweeps the same way width/depth/order do,
+//! so tower-cost differences show up per cell.
 
 use super::{sweep_orders, Engine, Measurement};
 use crate::nn::Mlp;
+use crate::ntp::ActivationKind;
 use crate::tensor::Tensor;
 use crate::util::csv::Table;
 use crate::util::prng::Prng;
@@ -13,6 +16,8 @@ pub struct GridConfig {
     pub widths: Vec<usize>,
     pub depths: Vec<usize>,
     pub batches: Vec<usize>,
+    /// Hidden activations to sweep (default: tanh only, the paper grid).
+    pub activations: Vec<ActivationKind>,
     pub n_max: usize,
     pub warmup: usize,
     pub trials: usize,
@@ -29,6 +34,7 @@ impl Default for GridConfig {
             widths: vec![16, 24, 64],
             depths: vec![2, 3, 4],
             batches: vec![64, 256],
+            activations: vec![ActivationKind::Tanh],
             n_max: 6,
             warmup: 0,
             trials: 3,
@@ -41,23 +47,29 @@ impl Default for GridConfig {
 /// All measurements over the grid (both engines).
 pub fn run(cfg: &GridConfig, progress: impl Fn(&str)) -> Vec<Measurement> {
     let mut out = Vec::new();
-    for &width in &cfg.widths {
-        for &depth in &cfg.depths {
-            for &batch in &cfg.batches {
-                progress(&format!("grid cell width={width} depth={depth} batch={batch}"));
-                let mut rng = Prng::seeded(cfg.seed ^ (width * 31 + depth * 7 + batch) as u64);
-                let mlp = Mlp::uniform(1, width, depth, 1, &mut rng);
-                let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, &mut rng);
-                for engine in [Engine::Ntp, Engine::Autodiff] {
-                    out.extend(sweep_orders(
-                        engine,
-                        &mlp,
-                        &x,
-                        cfg.n_max,
-                        cfg.warmup,
-                        cfg.trials,
-                        cfg.cap_seconds,
+    for &activation in &cfg.activations {
+        for &width in &cfg.widths {
+            for &depth in &cfg.depths {
+                for &batch in &cfg.batches {
+                    progress(&format!(
+                        "grid cell act={} width={width} depth={depth} batch={batch}",
+                        activation.name()
                     ));
+                    let mut rng =
+                        Prng::seeded(cfg.seed ^ (width * 31 + depth * 7 + batch) as u64);
+                    let mlp = Mlp::uniform_with(1, width, depth, 1, activation, &mut rng);
+                    let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, &mut rng);
+                    for engine in [Engine::Ntp, Engine::Autodiff] {
+                        out.extend(sweep_orders(
+                            engine,
+                            &mlp,
+                            &x,
+                            cfg.n_max,
+                            cfg.warmup,
+                            cfg.trials,
+                            cfg.cap_seconds,
+                        ));
+                    }
                 }
             }
         }
@@ -65,11 +77,11 @@ pub fn run(cfg: &GridConfig, progress: impl Fn(&str)) -> Vec<Measurement> {
     out
 }
 
-/// Ratio rows: one per (width, depth, batch, n) cell.
+/// Ratio rows: one per (activation, width, depth, batch, n) cell.
 /// `which` selects forward (Fig 4) or total (Fig 5).
 pub fn ratio_table(measurements: &[Measurement], forward_only: bool) -> Table {
     let mut t = Table::new(&[
-        "width", "depth", "batch", "n", "autodiff_s", "ntp_s", "ratio", "measured",
+        "width", "depth", "batch", "n", "activation", "autodiff_s", "ntp_s", "ratio", "measured",
     ]);
     for m in measurements.iter().filter(|m| m.engine == Engine::Autodiff) {
         if let Some(ntp) = measurements.iter().find(|o| {
@@ -78,6 +90,7 @@ pub fn ratio_table(measurements: &[Measurement], forward_only: bool) -> Table {
                 && o.width == m.width
                 && o.depth == m.depth
                 && o.batch == m.batch
+                && o.activation == m.activation
         }) {
             let (a, b) = if forward_only {
                 (m.times.fwd, ntp.times.fwd)
@@ -89,6 +102,7 @@ pub fn ratio_table(measurements: &[Measurement], forward_only: bool) -> Table {
                 m.depth.to_string(),
                 m.batch.to_string(),
                 m.n.to_string(),
+                m.activation.name().to_string(),
                 format!("{a:.6e}"),
                 format!("{b:.6e}"),
                 format!("{:.4}", a / b),
@@ -114,6 +128,7 @@ mod tests {
             widths: vec![8],
             depths: vec![2],
             batches: vec![16],
+            activations: vec![ActivationKind::Tanh],
             n_max: 3,
             warmup: 0,
             trials: 1,
@@ -131,6 +146,21 @@ mod tests {
         assert_eq!(t.rows.len(), 3);
         let ratios = t.col_f64("ratio").unwrap();
         assert!(ratios.iter().all(|r| *r > 0.0));
+    }
+
+    #[test]
+    fn activation_axis_multiplies_cells() {
+        let mut cfg = tiny_cfg();
+        cfg.activations = vec![ActivationKind::Tanh, ActivationKind::Sine];
+        let ms = run(&cfg, |_| {});
+        // 2 activations × 1 cell × 2 engines × 3 orders
+        assert_eq!(ms.len(), 12);
+        let t = ratio_table(&ms, true);
+        assert_eq!(t.rows.len(), 6);
+        // Every row pairs measurements of the same activation.
+        let acts: Vec<&String> = t.rows.iter().map(|r| &r[4]).collect();
+        assert!(acts.iter().filter(|a| a.as_str() == "tanh").count() == 3);
+        assert!(acts.iter().filter(|a| a.as_str() == "sin").count() == 3);
     }
 
     #[test]

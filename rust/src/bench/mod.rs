@@ -24,7 +24,7 @@ pub mod training;
 
 use crate::autodiff::{higher, Graph};
 use crate::nn::Mlp;
-use crate::ntp::NtpEngine;
+use crate::ntp::{ActivationKind, NtpEngine};
 use crate::tensor::Tensor;
 use crate::util::prng::Prng;
 use std::time::Instant;
@@ -66,6 +66,8 @@ pub struct Measurement {
     pub width: usize,
     pub depth: usize,
     pub batch: usize,
+    /// Hidden activation of the measured network.
+    pub activation: ActivationKind,
     pub times: PassTimes,
     /// False when the value was *projected* from an exponential fit
     /// because the measured point exceeded the time cap (the paper does
@@ -173,6 +175,7 @@ pub fn sweep_orders(
     let width = mlp.layers[0].fan_out();
     let depth = mlp.layers.len() - 1;
     let batch = x.shape()[0];
+    let activation = mlp.activation;
     let mut capped = false;
     for n in 1..=n_max {
         if !capped {
@@ -188,6 +191,7 @@ pub fn sweep_orders(
                 width,
                 depth,
                 batch,
+                activation,
                 times,
                 measured: true,
             });
@@ -204,6 +208,7 @@ pub fn sweep_orders(
                 width,
                 depth,
                 batch,
+                activation,
                 times: PassTimes {
                     fwd: cf * rf.powf(n as f64),
                     bwd: cb * rb.powf(n as f64),

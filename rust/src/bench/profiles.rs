@@ -142,6 +142,7 @@ mod tests {
                 adam_lr: 2e-3,
                 seed: 5,
                 log_every: 10,
+                ..TrainConfig::default()
             },
             spec_overrides: Some(spec),
             n_plot: 21,

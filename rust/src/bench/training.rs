@@ -138,6 +138,7 @@ mod tests {
                 adam_lr: 1e-3,
                 seed: 2,
                 log_every: 5,
+                ..TrainConfig::default()
             },
             spec_overrides: Some(spec),
             run_autodiff: true,

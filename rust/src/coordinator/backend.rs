@@ -2,10 +2,10 @@
 //! engine and the AOT-compiled PJRT executable.
 
 use crate::nn::{params, Mlp};
-use crate::ntp::NtpEngine;
+use crate::ntp::{ActivationKind, NtpEngine};
 use crate::runtime::Executable;
 use crate::tensor::Tensor;
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 /// Something that evaluates the derivative stack for a batch of points.
 ///
@@ -23,6 +23,23 @@ pub trait EvalBackend {
     /// Evaluate `xs` (length ≤ `max_batch`); returns `n_channels` vectors
     /// of length `xs.len()`.
     fn eval_batch(&mut self, xs: &[f64]) -> Result<Vec<Vec<f64>>>;
+
+    /// Evaluate with an optional per-request activation override (`None`
+    /// = the served model's own activation). Backends that can't switch
+    /// towers reject the override; the native engine overrides this.
+    fn eval_batch_act(
+        &mut self,
+        xs: &[f64],
+        activation: Option<ActivationKind>,
+    ) -> Result<Vec<Vec<f64>>> {
+        match activation {
+            None => self.eval_batch(xs),
+            Some(kind) => bail!(
+                "backend does not support per-request activation '{}'",
+                kind.name()
+            ),
+        }
+    }
 }
 
 /// Native backend: the pure-Rust n-TangentProp engine (no artifacts
@@ -59,6 +76,22 @@ impl EvalBackend for NativeBackend {
         let x = Tensor::from_vec(xs.to_vec(), &[xs.len(), 1]);
         let channels = self.engine.forward(&self.mlp, &x);
         Ok(channels.into_iter().map(Tensor::into_vec).collect())
+    }
+
+    /// The native engine has towers for every registered activation, so a
+    /// per-request activation just retags the served weights.
+    fn eval_batch_act(
+        &mut self,
+        xs: &[f64],
+        activation: Option<ActivationKind>,
+    ) -> Result<Vec<Vec<f64>>> {
+        let original = self.mlp.activation;
+        if let Some(kind) = activation {
+            self.mlp.activation = kind;
+        }
+        let result = self.eval_batch(xs);
+        self.mlp.activation = original;
+        result
     }
 }
 
@@ -124,6 +157,22 @@ impl EvalBackend for PjrtBackend {
         }
         Ok(channels)
     }
+
+    /// Compiled artifacts bake their activation in; only an explicit tanh
+    /// request (the artifacts' activation) is accepted as an override.
+    fn eval_batch_act(
+        &mut self,
+        xs: &[f64],
+        activation: Option<ActivationKind>,
+    ) -> Result<Vec<Vec<f64>>> {
+        match activation {
+            None | Some(ActivationKind::Tanh) => self.eval_batch(xs),
+            Some(kind) => bail!(
+                "pjrt backend is compiled for tanh; cannot serve activation '{}'",
+                kind.name()
+            ),
+        }
+    }
 }
 
 /// Convenience: build a [`NativeBackend`] whose parameters come from a
@@ -153,6 +202,28 @@ mod tests {
         for (c, d) in channels.iter().zip(&direct) {
             assert_eq!(c.as_slice(), d.data());
         }
+    }
+
+    #[test]
+    fn native_backend_serves_activation_overrides() {
+        let mut rng = Prng::seeded(11);
+        let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+        let mut backend = NativeBackend::new(mlp.clone(), 2, 16);
+        let xs = [0.2, -0.9];
+        for kind in ActivationKind::ALL {
+            let channels = backend.eval_batch_act(&xs, Some(kind)).unwrap();
+            let mut retagged = mlp.clone();
+            retagged.activation = kind;
+            let direct =
+                NtpEngine::new(2).forward(&retagged, &Tensor::from_vec(xs.to_vec(), &[2, 1]));
+            for (c, d) in channels.iter().zip(&direct) {
+                assert_eq!(c.as_slice(), d.data(), "{}", kind.name());
+            }
+        }
+        // The override must not stick.
+        let plain = backend.eval_batch(&xs).unwrap();
+        let direct = NtpEngine::new(2).forward(&mlp, &Tensor::from_vec(xs.to_vec(), &[2, 1]));
+        assert_eq!(plain[0].as_slice(), direct[0].data());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use super::backend::EvalBackend;
 use super::metrics::Metrics;
+use crate::ntp::ActivationKind;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -30,6 +31,10 @@ impl Default for BatcherConfig {
 /// One queued evaluation request.
 pub struct Request {
     pub points: Vec<f64>,
+    /// Optional per-request activation override (`None` = the served
+    /// model's own activation). Requests are only coalesced with others
+    /// of the same activation — the backend runs one tower per batch.
+    pub activation: Option<ActivationKind>,
     pub enqueued: Instant,
     /// Channel the response is sent on.
     pub resp: Sender<Response>,
@@ -97,16 +102,41 @@ pub fn run_loop(
 }
 
 /// Evaluate a group of requests against the backend and scatter results.
+/// Requests are grouped by activation (arrival order preserved within a
+/// group); each group makes its own backend calls.
 fn serve_batch(
     backend: &mut dyn EvalBackend,
     pending: &[Request],
     cap: usize,
     metrics: &Metrics,
 ) {
+    let mut activations: Vec<Option<ActivationKind>> = Vec::new();
+    for req in pending {
+        if !activations.contains(&req.activation) {
+            activations.push(req.activation);
+        }
+    }
+    for activation in activations {
+        let group: Vec<&Request> = pending
+            .iter()
+            .filter(|r| r.activation == activation)
+            .collect();
+        serve_group(backend, &group, activation, cap, metrics);
+    }
+}
+
+/// Evaluate same-activation requests as coalesced backend batches.
+fn serve_group(
+    backend: &mut dyn EvalBackend,
+    group: &[&Request],
+    activation: Option<ActivationKind>,
+    cap: usize,
+    metrics: &Metrics,
+) {
     // Flatten all points, tracking (request, offset, len).
     let mut flat: Vec<f64> = Vec::new();
-    let mut spans = Vec::with_capacity(pending.len());
-    for req in pending {
+    let mut spans = Vec::with_capacity(group.len());
+    for req in group {
         spans.push((flat.len(), req.points.len()));
         flat.extend_from_slice(&req.points);
     }
@@ -116,7 +146,7 @@ fn serve_batch(
     let mut channels: Vec<Vec<f64>> = vec![Vec::with_capacity(flat.len()); n_channels];
     let mut error: Option<String> = None;
     for chunk in flat.chunks(cap) {
-        match backend.eval_batch(chunk) {
+        match backend.eval_batch_act(chunk, activation) {
             Ok(out) => {
                 metrics.record_batch(chunk.len());
                 for (k, col) in out.into_iter().enumerate() {
@@ -130,7 +160,7 @@ fn serve_batch(
         }
     }
 
-    for (req, &(off, len)) in pending.iter().zip(&spans) {
+    for (req, &(off, len)) in group.iter().zip(&spans) {
         let result = match &error {
             Some(msg) => {
                 metrics.record_error();
@@ -179,10 +209,18 @@ mod tests {
     }
 
     fn request(points: Vec<f64>) -> (Request, mpsc::Receiver<Response>) {
+        request_act(points, None)
+    }
+
+    fn request_act(
+        points: Vec<f64>,
+        activation: Option<ActivationKind>,
+    ) -> (Request, mpsc::Receiver<Response>) {
         let (tx, rx) = mpsc::channel();
         (
             Request {
                 points,
+                activation,
                 enqueued: Instant::now(),
                 resp: tx,
             },
@@ -207,6 +245,52 @@ mod tests {
         let s = metrics.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.batches, 1);
+    }
+
+    /// Backend that echoes points and records which activation each
+    /// batch ran under.
+    struct ActProbe {
+        seen: Vec<(Option<ActivationKind>, usize)>,
+    }
+
+    impl EvalBackend for ActProbe {
+        fn max_batch(&self) -> usize {
+            16
+        }
+        fn n_channels(&self) -> usize {
+            1
+        }
+        fn eval_batch(&mut self, xs: &[f64]) -> Result<Vec<Vec<f64>>> {
+            self.seen.push((None, xs.len()));
+            Ok(vec![xs.to_vec()])
+        }
+        fn eval_batch_act(
+            &mut self,
+            xs: &[f64],
+            activation: Option<ActivationKind>,
+        ) -> Result<Vec<Vec<f64>>> {
+            self.seen.push((activation, xs.len()));
+            Ok(vec![xs.to_vec()])
+        }
+    }
+
+    #[test]
+    fn mixed_activation_requests_batch_per_activation() {
+        let metrics = Metrics::default();
+        let mut backend = ActProbe { seen: vec![] };
+        let (r1, rx1) = request_act(vec![1.0], None);
+        let (r2, rx2) = request_act(vec![2.0, 3.0], Some(ActivationKind::Sine));
+        let (r3, rx3) = request_act(vec![4.0], None);
+        serve_batch(&mut backend, &[r1, r2, r3], 16, &metrics);
+        assert_eq!(rx1.recv().unwrap().unwrap()[0], vec![1.0]);
+        assert_eq!(rx2.recv().unwrap().unwrap()[0], vec![2.0, 3.0]);
+        assert_eq!(rx3.recv().unwrap().unwrap()[0], vec![4.0]);
+        // Two backend calls: the coalesced default group and the sine group.
+        assert_eq!(
+            backend.seen,
+            vec![(None, 2), (Some(ActivationKind::Sine), 2)]
+        );
+        assert_eq!(metrics.snapshot().requests, 3);
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //! Built on std threads + channels (tokio is not available offline); the
 //! structure mirrors a vLLM-style router: front → queue → batcher →
 //! backend → scatter, with metrics at each stage.
+//!
+//! Requests may carry an optional `"activation"` field (any registered
+//! [`crate::ntp::ActivationKind`] name) selecting the derivative tower
+//! applied to the served weights; the batcher coalesces per activation.
+//! Requests without the field behave exactly as before it existed (the
+//! served model's own activation), keeping the protocol wire-compatible.
 
 pub mod backend;
 pub mod batcher;

@@ -1,18 +1,32 @@
 //! Wire protocol for the TCP front: one JSON object per line.
 //!
 //! Request:  `{"points": [0.1, 0.2, ...]}`
+//!           `{"points": [...], "activation": "sin"}`
 //!           `{"cmd": "stats"}`
 //! Response: `{"channels": [[u...], [u'...], ...]}`
 //!           `{"error": "..."}`
 //!           `{"stats": {...}}`
+//!
+//! The `activation` field is optional and selects the derivative tower
+//! applied to the served weights (any registered
+//! [`ActivationKind`] name). Requests without it behave exactly as
+//! before the field existed: the backend evaluates with the served
+//! model's own activation (tanh for every pre-existing checkpoint), so
+//! the protocol stays wire-compatible.
 
 use super::metrics::MetricsSnapshot;
+use crate::ntp::ActivationKind;
 use crate::util::json::Json;
 
 /// A parsed client request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireRequest {
-    Eval { points: Vec<f64> },
+    Eval {
+        points: Vec<f64>,
+        /// `None` = the served model's own activation (wire-compatible
+        /// default).
+        activation: Option<ActivationKind>,
+    },
     Stats,
 }
 
@@ -32,7 +46,28 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
     if points.is_empty() {
         return Err("'points' must be non-empty".to_string());
     }
-    Ok(WireRequest::Eval { points })
+    let activation = match v.get("activation") {
+        None => None,
+        Some(a) => {
+            let name = a
+                .as_str()
+                .ok_or_else(|| "'activation' must be a string".to_string())?;
+            Some(
+                ActivationKind::from_name(name)
+                    .ok_or_else(|| format!("unknown activation '{name}'"))?,
+            )
+        }
+    };
+    Ok(WireRequest::Eval { points, activation })
+}
+
+/// Encode an evaluation request (client side).
+pub fn encode_request(points: &[f64], activation: Option<ActivationKind>) -> String {
+    let mut fields = vec![("points", Json::num_arr(points))];
+    if let Some(kind) = activation {
+        fields.push(("activation", Json::Str(kind.name().to_string())));
+    }
+    Json::obj(fields).dump()
 }
 
 /// Encode an evaluation response.
@@ -84,7 +119,38 @@ mod tests {
     #[test]
     fn parses_eval_request() {
         let r = parse_request(r#"{"points": [0.5, -1.0]}"#).unwrap();
-        assert_eq!(r, WireRequest::Eval { points: vec![0.5, -1.0] });
+        assert_eq!(
+            r,
+            WireRequest::Eval { points: vec![0.5, -1.0], activation: None }
+        );
+    }
+
+    #[test]
+    fn parses_activation_field() {
+        let r = parse_request(r#"{"points": [0.5], "activation": "sin"}"#).unwrap();
+        assert_eq!(
+            r,
+            WireRequest::Eval {
+                points: vec![0.5],
+                activation: Some(ActivationKind::Sine)
+            }
+        );
+        assert!(parse_request(r#"{"points": [0.5], "activation": "relu"}"#).is_err());
+        assert!(parse_request(r#"{"points": [0.5], "activation": 3}"#).is_err());
+    }
+
+    #[test]
+    fn encode_request_roundtrips() {
+        for activation in [None, Some(ActivationKind::Gelu)] {
+            let line = encode_request(&[0.25, -0.5], activation);
+            let parsed = parse_request(&line).unwrap();
+            assert_eq!(
+                parsed,
+                WireRequest::Eval { points: vec![0.25, -0.5], activation }
+            );
+        }
+        // Wire compatibility: no field at all unless requested.
+        assert!(!encode_request(&[1.0], None).contains("activation"));
     }
 
     #[test]

@@ -4,6 +4,7 @@ use super::backend::EvalBackend;
 use super::batcher::{run_loop, BatcherConfig, Msg, Request, Response};
 use super::metrics::Metrics;
 use super::protocol;
+use crate::ntp::ActivationKind;
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -81,10 +82,21 @@ impl Drop for Service {
 impl ServiceHandle {
     /// Evaluate points (blocking): returns `channels[k][i]`.
     pub fn eval(&self, points: &[f64]) -> Result<Vec<Vec<f64>>> {
+        self.eval_with(points, None)
+    }
+
+    /// Evaluate points with an optional per-request activation override
+    /// (`None` = the served model's own activation).
+    pub fn eval_with(
+        &self,
+        points: &[f64],
+        activation: Option<ActivationKind>,
+    ) -> Result<Vec<Vec<f64>>> {
         let (tx, rx) = channel::<Response>();
         self.tx
             .send(Msg::Eval(Request {
                 points: points.to_vec(),
+                activation,
                 enqueued: Instant::now(),
                 resp: tx,
             }))
@@ -122,10 +134,12 @@ pub fn serve_connection(stream: TcpStream, handle: ServiceHandle) -> Result<()> 
             continue;
         }
         let reply = match protocol::parse_request(&line) {
-            Ok(protocol::WireRequest::Eval { points }) => match handle.eval(&points) {
-                Ok(channels) => protocol::encode_channels(&channels),
-                Err(e) => protocol::encode_error(&e.to_string()),
-            },
+            Ok(protocol::WireRequest::Eval { points, activation }) => {
+                match handle.eval_with(&points, activation) {
+                    Ok(channels) => protocol::encode_channels(&channels),
+                    Err(e) => protocol::encode_error(&e.to_string()),
+                }
+            }
             Ok(protocol::WireRequest::Stats) => protocol::encode_stats(&handle.metrics()),
             Err(e) => protocol::encode_error(&e),
         };
@@ -153,11 +167,17 @@ impl TcpClient {
     }
 
     pub fn eval(&mut self, points: &[f64]) -> Result<Vec<Vec<f64>>> {
-        let req = crate::util::json::Json::obj(vec![(
-            "points",
-            crate::util::json::Json::num_arr(points),
-        )])
-        .dump();
+        self.eval_with(points, None)
+    }
+
+    /// Evaluate with an optional activation override; `None` sends a
+    /// field-free request (wire-compatible with old servers).
+    pub fn eval_with(
+        &mut self,
+        points: &[f64],
+        activation: Option<ActivationKind>,
+    ) -> Result<Vec<Vec<f64>>> {
+        let req = protocol::encode_request(points, activation);
         self.writer.write_all(req.as_bytes())?;
         self.writer.write_all(b"\n")?;
         let mut line = String::new();
@@ -259,5 +279,58 @@ mod tests {
         let handle = service.handle();
         service.shutdown();
         assert!(handle.eval(&[0.0]).is_err());
+    }
+
+    /// Wire compatibility: a raw request line *without* an `activation`
+    /// field must behave exactly as before the field existed — the served
+    /// (tanh) model answers.
+    #[test]
+    fn legacy_requests_without_activation_field_serve_tanh() {
+        let (service, mlp) = test_service();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = service.handle();
+        std::thread::spawn(move || serve_tcp(listener, handle));
+
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writer.write_all(b"{\"points\": [0.4, -0.2]}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let channels = protocol::parse_channels(line.trim()).unwrap();
+
+        let direct =
+            NtpEngine::new(2).forward(&mlp, &Tensor::from_vec(vec![0.4, -0.2], &[2, 1]));
+        assert_eq!(channels.len(), 3);
+        for k in 0..3 {
+            assert_eq!(channels[k].as_slice(), direct[k].data(), "channel {k}");
+        }
+        service.shutdown();
+    }
+
+    /// Per-request activation selection through the full service stack.
+    #[test]
+    fn activation_requests_select_towers() {
+        use crate::ntp::ActivationKind;
+        let (service, mlp) = test_service();
+        let handle = service.handle();
+        let points = [0.3, -0.7];
+        for kind in ActivationKind::ALL {
+            let channels = handle.eval_with(&points, Some(kind)).unwrap();
+            let mut retagged = mlp.clone();
+            retagged.activation = kind;
+            let direct = NtpEngine::new(2)
+                .forward(&retagged, &Tensor::from_vec(points.to_vec(), &[2, 1]));
+            for k in 0..3 {
+                assert_eq!(
+                    channels[k].as_slice(),
+                    direct[k].data(),
+                    "{} channel {k}",
+                    kind.name()
+                );
+            }
+        }
+        service.shutdown();
     }
 }

@@ -15,11 +15,16 @@
 //! - [`tensor`] — a small dense `f64` tensor engine (the compute substrate).
 //! - [`autodiff`] — a tape-based reverse-mode engine with *create-graph*
 //!   double-backward; repeated application of it is the paper's baseline.
+//!   The activation is a generic tape op tagged with an
+//!   [`ntp::ActivationKind`], so the baseline re-differentiates every
+//!   registered activation exactly.
 //! - [`ntp`] — the paper's contribution: integer partitions, Faà di Bruno /
-//!   Bell coefficient tables, activation derivative towers, and the
-//!   n-TangentProp forward pass (both a pure fast path and a tape-recorded
-//!   path that supports backprop-through-derivatives for training).
-//! - [`nn`] — dense MLPs and parameter (un)flattening.
+//!   Bell coefficient tables, pluggable activation derivative towers
+//!   (tanh, sine, softplus, GELU — each exact), and the n-TangentProp
+//!   forward pass (both a pure fast path and a tape-recorded path that
+//!   supports backprop-through-derivatives for training).
+//! - [`nn`] — dense MLPs (each carrying its [`ntp::ActivationKind`]) and
+//!   parameter (un)flattening.
 //! - [`opt`] — Adam, SGD and L-BFGS with a strong-Wolfe line search.
 //! - [`pinn`] — a physics-informed-network training framework (collocation
 //!   sampling, Sobolev losses, Leibniz residual derivatives, boundary
@@ -38,16 +43,22 @@
 //!
 //! ```
 //! use ntangent::nn::Mlp;
-//! use ntangent::ntp::NtpEngine;
+//! use ntangent::ntp::{ActivationKind, NtpEngine};
 //! use ntangent::tensor::Tensor;
 //! use ntangent::util::prng::Prng;
 //!
 //! let mut rng = Prng::seeded(7);
-//! let mlp = Mlp::new(&[1, 24, 24, 24, 1], &mut rng);
+//! let mlp = Mlp::new(&[1, 24, 24, 24, 1], &mut rng); // tanh by default
 //! let x = Tensor::linspace(-1.0, 1.0, 8).reshape(&[8, 1]);
-//! let engine = NtpEngine::new(4); // up to 4 derivatives
+//! let engine = NtpEngine::new(4); // up to 4 derivatives, any activation
 //! let channels = engine.forward(&mlp, &x); // [u, u', u'', u''', u'''']
 //! assert_eq!(channels.len(), 5);
+//!
+//! // The activation is a runtime-selectable axis: the same engine serves
+//! // e.g. a sine-activated (SIREN-style) network.
+//! let siren = Mlp::with_activation(&[1, 24, 24, 1], ActivationKind::Sine, &mut rng);
+//! let sine_channels = engine.forward(&siren, &x);
+//! assert_eq!(sine_channels.len(), 5);
 //! ```
 
 pub mod autodiff;

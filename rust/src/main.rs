@@ -10,7 +10,7 @@
 use ntangent::bench::{grid, memory, passes, profiles, training};
 use ntangent::coordinator::{BatcherConfig, NativeBackend, PjrtBackend, Service};
 use ntangent::nn::Checkpoint;
-use ntangent::ntp::{hardy_ramanujan, partition_count, NtpEngine};
+use ntangent::ntp::{hardy_ramanujan, partition_count, ActivationKind, NtpEngine};
 use ntangent::pinn::{BurgersLossSpec, DerivEngine, TrainConfig};
 use ntangent::runtime::{ArtifactManifest, Runtime};
 use ntangent::tensor::Tensor;
@@ -74,6 +74,8 @@ fn bench_specs() -> Vec<OptSpec> {
         OptSpec { name: "widths", help: "comma list (fig4/fig5)", takes_value: true, default: None },
         OptSpec { name: "depths", help: "comma list (fig4/fig5)", takes_value: true, default: None },
         OptSpec { name: "batches", help: "comma list (fig4/fig5)", takes_value: true, default: None },
+        OptSpec { name: "activations", help: "comma list of activations (fig4/fig5): tanh,sin,softplus,gelu", takes_value: true, default: None },
+        OptSpec { name: "activation", help: "hidden activation (training figs)", takes_value: true, default: None },
         OptSpec { name: "adam-epochs", help: "training figs", takes_value: true, default: None },
         OptSpec { name: "lbfgs-epochs", help: "training figs", takes_value: true, default: None },
         OptSpec { name: "width", help: "network width (training figs)", takes_value: true, default: None },
@@ -115,12 +117,34 @@ fn cmd_bench(raw: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// Parse one activation name, with the registry listed in the error.
+fn parse_activation(name: &str) -> Result<ActivationKind, String> {
+    ActivationKind::from_name(name).ok_or_else(|| {
+        format!(
+            "unknown activation '{name}' (registered: {})",
+            ActivationKind::ALL
+                .iter()
+                .map(|k| k.name())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    })
+}
+
+/// Parse a comma list of activation names.
+fn parse_activation_list(list: &str) -> Result<Vec<ActivationKind>, String> {
+    list.split(',').map(|p| parse_activation(p.trim())).collect()
+}
+
 fn train_cfg_from(args: &Args, default_epochs: (usize, usize)) -> Result<TrainConfig, String> {
     let mut cfg = TrainConfig {
         adam_epochs: default_epochs.0,
         lbfgs_epochs: default_epochs.1,
         ..TrainConfig::default()
     };
+    if let Some(v) = args.get("activation") {
+        cfg.activation = parse_activation(v)?;
+    }
     if let Some(v) = args.get_usize("adam-epochs")? {
         cfg.adam_epochs = v;
     }
@@ -170,6 +194,9 @@ fn run_bench_target(target: &str, args: &Args, out_dir: &Path) -> Result<(), Str
             }
             if let Some(v) = args.get_usize_list("batches")? {
                 cfg.batches = v;
+            }
+            if let Some(v) = args.get("activations") {
+                cfg.activations = parse_activation_list(v)?;
             }
             if let Some(v) = args.get_usize("trials")? {
                 cfg.trials = v;
@@ -245,6 +272,7 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "lbfgs-epochs", help: "L-BFGS epochs", takes_value: true, default: Some("300") },
         OptSpec { name: "width", help: "network width", takes_value: true, default: Some("24") },
         OptSpec { name: "depth", help: "hidden layers", takes_value: true, default: Some("3") },
+        OptSpec { name: "activation", help: "hidden activation: tanh | sin | softplus | gelu", takes_value: true, default: Some("tanh") },
         OptSpec { name: "engine", help: "ntp | autodiff", takes_value: true, default: Some("ntp") },
         OptSpec { name: "seed", help: "rng seed", takes_value: true, default: Some("0") },
         OptSpec { name: "out", help: "checkpoint path", takes_value: true, default: Some("results/checkpoint.json") },
@@ -264,11 +292,12 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
     let cfg = train_cfg_from(&args, (300, 300))?;
     let spec = BurgersLossSpec::for_profile(k);
     eprintln!(
-        "training profile k={k} (λ* = {:.6}, {} derivatives) with {engine:?}, {}x{} net",
+        "training profile k={k} (λ* = {:.6}, {} derivatives) with {engine:?}, {}x{} {} net",
         spec.profile.lambda_smooth(),
         spec.profile.n_derivs(),
         cfg.depth,
-        cfg.width
+        cfg.width,
+        cfg.activation.name()
     );
     let result = ntangent::pinn::train_burgers(spec, &cfg, engine);
     println!(

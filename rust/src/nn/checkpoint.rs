@@ -3,16 +3,21 @@
 //! and the examples.
 
 use super::{params, Mlp};
+use crate::ntp::activation::ActivationKind;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::prng::Prng;
 use anyhow::{Context, Result};
 use std::path::Path;
 
-/// A saved model: architecture, flat parameters and training metadata.
+/// A saved model: architecture, activation, flat parameters and training
+/// metadata. Checkpoints written before the activation field existed load
+/// as tanh (the only activation they could have been trained with).
 #[derive(Clone, Debug)]
 pub struct Checkpoint {
     pub sizes: Vec<usize>,
+    /// Hidden-layer activation; defaults to tanh for old artifacts.
+    pub activation: ActivationKind,
     pub theta: Vec<f64>,
     pub lambda: Option<f64>,
     pub profile_k: Option<usize>,
@@ -23,6 +28,7 @@ impl Checkpoint {
     pub fn from_mlp(mlp: &Mlp) -> Checkpoint {
         Checkpoint {
             sizes: mlp.sizes(),
+            activation: mlp.activation,
             theta: params::flatten(mlp).into_vec(),
             lambda: None,
             profile_k: None,
@@ -33,7 +39,7 @@ impl Checkpoint {
     /// Rebuild the network.
     pub fn to_mlp(&self) -> Result<Mlp> {
         let mut rng = Prng::seeded(0);
-        let mut mlp = Mlp::new(&self.sizes, &mut rng);
+        let mut mlp = Mlp::with_activation(&self.sizes, self.activation, &mut rng);
         anyhow::ensure!(
             self.theta.len() == mlp.n_params(),
             "checkpoint has {} params, architecture {:?} wants {}",
@@ -54,6 +60,7 @@ impl Checkpoint {
                 "sizes",
                 Json::Arr(self.sizes.iter().map(|&s| Json::Num(s as f64)).collect()),
             ),
+            ("activation", Json::Str(self.activation.name().to_string())),
             ("theta", Json::num_arr(&self.theta)),
         ];
         if let Some(l) = self.lambda {
@@ -80,8 +87,18 @@ impl Checkpoint {
             .get("theta")
             .and_then(Json::as_f64_vec)
             .context("checkpoint missing theta")?;
+        let activation = match v.get("activation") {
+            // Pre-activation-field checkpoints were all tanh.
+            None => ActivationKind::Tanh,
+            Some(a) => {
+                let name = a.as_str().context("checkpoint activation must be a string")?;
+                ActivationKind::from_name(name)
+                    .with_context(|| format!("unknown checkpoint activation '{name}'"))?
+            }
+        };
         Ok(Checkpoint {
             sizes,
+            activation,
             theta,
             lambda: v.get("lambda").and_then(Json::as_f64),
             profile_k: v.get("profile_k").and_then(Json::as_usize),
@@ -141,11 +158,58 @@ mod tests {
     fn arity_mismatch_rejected() {
         let ck = Checkpoint {
             sizes: vec![1, 4, 1],
+            activation: ActivationKind::Tanh,
             theta: vec![0.0; 3], // wrong
             lambda: None,
             profile_k: None,
             final_loss: None,
         };
         assert!(ck.to_mlp().is_err());
+    }
+
+    /// Acceptance: a checkpoint saved with any registered activation
+    /// reloads and reproduces *identical* derivative channels.
+    #[test]
+    fn roundtrip_preserves_activation_and_channels() {
+        use crate::ntp::NtpEngine;
+        for kind in ActivationKind::ALL {
+            let mut rng = Prng::seeded(40 + kind.index() as u64);
+            let mlp = Mlp::uniform_with(1, 6, 2, 1, kind, &mut rng);
+            let ck = Checkpoint::from_mlp(&mlp);
+            let parsed =
+                Checkpoint::from_json(&Json::parse(&ck.to_json().dump()).unwrap()).unwrap();
+            assert_eq!(parsed.activation, kind);
+            let back = parsed.to_mlp().unwrap();
+            assert_eq!(back.activation, kind);
+            let x = Tensor::linspace(-1.0, 1.0, 5).reshape(&[5, 1]);
+            let engine = NtpEngine::new(4);
+            let a = engine.forward(&mlp, &x);
+            let b = engine.forward(&back, &x);
+            for (ca, cb) in a.iter().zip(&b) {
+                assert_eq!(ca, cb, "{} channels changed across roundtrip", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_checkpoint_without_activation_defaults_to_tanh() {
+        let mut rng = Prng::seeded(50);
+        let mlp = Mlp::uniform(1, 4, 1, 1, &mut rng);
+        let ck = Checkpoint::from_mlp(&mlp);
+        // Simulate an old artifact: strip the activation field.
+        let dumped = ck.to_json().dump();
+        let parsed = Json::parse(&dumped).unwrap();
+        let stripped = match parsed {
+            Json::Obj(fields) => {
+                Json::Obj(fields.into_iter().filter(|(k, _)| k != "activation").collect())
+            }
+            other => other,
+        };
+        let loaded = Checkpoint::from_json(&stripped).unwrap();
+        assert_eq!(loaded.activation, ActivationKind::Tanh);
+        assert!(Checkpoint::from_json(
+            &Json::parse(&dumped.replace("\"tanh\"", "\"relu\"")).unwrap()
+        )
+        .is_err());
     }
 }

@@ -7,6 +7,7 @@ pub mod params;
 pub use checkpoint::Checkpoint;
 
 use crate::autodiff::{Graph, NodeId};
+use crate::ntp::activation::ActivationKind;
 use crate::tensor::Tensor;
 use crate::util::prng::Prng;
 
@@ -50,31 +51,55 @@ impl Dense {
     }
 }
 
-/// A feed-forward network with tanh hidden activations and a linear head —
-/// the architecture of the paper's experiments (e.g. 3 hidden layers of 24
-/// neurons for the standard PINN).
+/// A feed-forward network with smooth hidden activations and a linear
+/// head — the architecture of the paper's experiments (e.g. 3 hidden
+/// layers of 24 neurons for the standard PINN). The hidden activation is
+/// a runtime-selectable [`ActivationKind`] (tanh by default, the paper's
+/// choice) that every consumer — plain forward, the tape, the n-TP
+/// engine, checkpoints — dispatches on.
 #[derive(Clone, Debug)]
 pub struct Mlp {
     pub layers: Vec<Dense>,
+    /// Hidden-layer activation (the output head stays linear).
+    pub activation: ActivationKind,
 }
 
 impl Mlp {
-    /// Build from a size spec like `[1, 24, 24, 24, 1]`.
+    /// Build from a size spec like `[1, 24, 24, 24, 1]` (tanh hidden
+    /// activations, the paper's default).
     pub fn new(sizes: &[usize], rng: &mut Prng) -> Mlp {
+        Mlp::with_activation(sizes, ActivationKind::Tanh, rng)
+    }
+
+    /// Build from a size spec with an explicit hidden activation.
+    pub fn with_activation(sizes: &[usize], activation: ActivationKind, rng: &mut Prng) -> Mlp {
         assert!(sizes.len() >= 2, "need at least input and output sizes");
         let layers = sizes
             .windows(2)
             .map(|w| Dense::xavier(w[0], w[1], rng))
             .collect();
-        Mlp { layers }
+        Mlp { layers, activation }
     }
 
-    /// Convenience: `input -> width x depth -> output`.
+    /// Convenience: `input -> width x depth -> output` (tanh).
     pub fn uniform(input: usize, width: usize, depth: usize, output: usize, rng: &mut Prng) -> Mlp {
+        Mlp::uniform_with(input, width, depth, output, ActivationKind::Tanh, rng)
+    }
+
+    /// Convenience: `input -> width x depth -> output` with an explicit
+    /// hidden activation.
+    pub fn uniform_with(
+        input: usize,
+        width: usize,
+        depth: usize,
+        output: usize,
+        activation: ActivationKind,
+        rng: &mut Prng,
+    ) -> Mlp {
         let mut sizes = vec![input];
         sizes.extend(std::iter::repeat(width).take(depth));
         sizes.push(output);
-        Mlp::new(&sizes, rng)
+        Mlp::with_activation(&sizes, activation, rng)
     }
 
     pub fn input_dim(&self) -> usize {
@@ -96,14 +121,15 @@ impl Mlp {
         out
     }
 
-    /// Plain forward pass `x: [B, in] -> [B, out]` (tanh hidden, linear head).
+    /// Plain forward pass `x: [B, in] -> [B, out]` (smooth hidden
+    /// activation, linear head).
     pub fn forward(&self, x: &Tensor) -> Tensor {
         let last = self.layers.len() - 1;
         let mut h = x.clone();
         for (i, layer) in self.layers.iter().enumerate() {
             h = layer.apply(&h);
             if i != last {
-                h = h.tanh();
+                h = self.activation.eval_tensor(&h);
             }
         }
         h
@@ -124,7 +150,7 @@ impl Mlp {
             let lin = g.matmul_nt(h, w);
             h = g.add_bias(lin, b);
             if i != last {
-                h = g.tanh(h);
+                h = g.act(h, self.activation, 0);
             }
         }
         h
@@ -189,29 +215,39 @@ mod tests {
     }
 
     #[test]
-    fn graph_forward_matches_tensor_forward() {
-        let mut rng = Prng::seeded(5);
-        let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
-        let x = Tensor::linspace(-1.0, 1.0, 6).reshape(&[6, 1]);
+    fn graph_forward_matches_tensor_forward_for_all_activations() {
+        for kind in ActivationKind::ALL {
+            let mut rng = Prng::seeded(5 + kind.index() as u64);
+            let mlp = Mlp::uniform_with(1, 8, 2, 1, kind, &mut rng);
+            let x = Tensor::linspace(-1.0, 1.0, 6).reshape(&[6, 1]);
 
-        let direct = mlp.forward(&x);
+            let direct = mlp.forward(&x);
 
-        let mut g = Graph::new();
-        let xn = g.input(&[6, 1]);
-        let pn = mlp.const_param_nodes(&mut g);
-        let out = mlp.forward_graph(&mut g, xn, &pn);
-        let vals = g.eval(&[x.clone()], &[out]);
-        assert!(allclose_slice(vals.get(out).data(), direct.data(), 1e-14, 1e-14));
+            let mut g = Graph::new();
+            let xn = g.input(&[6, 1]);
+            let pn = mlp.const_param_nodes(&mut g);
+            let out = mlp.forward_graph(&mut g, xn, &pn);
+            let vals = g.eval(&[x.clone()], &[out]);
+            assert!(
+                allclose_slice(vals.get(out).data(), direct.data(), 1e-14, 1e-14),
+                "{}",
+                kind.name()
+            );
 
-        // Params-as-inputs path must agree too.
-        let mut g2 = Graph::new();
-        let xn2 = g2.input(&[6, 1]);
-        let pn2 = mlp.input_param_nodes(&mut g2);
-        let out2 = mlp.forward_graph(&mut g2, xn2, &pn2);
-        let mut inputs = vec![x];
-        inputs.extend(mlp.param_tensors());
-        let vals2 = g2.eval(&inputs, &[out2]);
-        assert!(allclose_slice(vals2.get(out2).data(), direct.data(), 1e-14, 1e-14));
+            // Params-as-inputs path must agree too.
+            let mut g2 = Graph::new();
+            let xn2 = g2.input(&[6, 1]);
+            let pn2 = mlp.input_param_nodes(&mut g2);
+            let out2 = mlp.forward_graph(&mut g2, xn2, &pn2);
+            let mut inputs = vec![x];
+            inputs.extend(mlp.param_tensors());
+            let vals2 = g2.eval(&inputs, &[out2]);
+            assert!(
+                allclose_slice(vals2.get(out2).data(), direct.data(), 1e-14, 1e-14),
+                "{}",
+                kind.name()
+            );
+        }
     }
 
     #[test]

@@ -2,10 +2,23 @@
 //! `σ, σ', ..., σ^(n)` evaluated at once, which is what n-TangentProp
 //! consumes at every layer (eq. (5b)).
 //!
-//! For tanh the tower is generated from the polynomial recurrence
-//! `σ^(0) = t`, `σ^(k+1) = P_k'(t)·(1 - t²)` where `t = tanh(x)` — each
-//! `σ^(k)` is a degree-`k+1` polynomial in `t`, so the whole tower costs
-//! one `tanh` plus `O(n²)` multiply-adds per element.
+//! The subsystem has two faces:
+//!
+//! - [`ActivationKind`] — a serializable, `Copy` identifier that travels
+//!   with models (checkpoints, the wire protocol, CLI flags) and tags the
+//!   generic activation op on the autodiff tape.
+//! - [`SmoothActivation`] — the tower evaluator the n-TP hot path uses.
+//!   [`ActivationKind::build_tower`] constructs one with tables
+//!   precomputed up to `n_max`.
+//!
+//! Registered activations and their exact towers:
+//!
+//! | kind | tower |
+//! |---|---|
+//! | `tanh` | polynomial recurrence `P_0 = t`, `P_{k+1} = P_k'·(1−t²)` in `t = tanh x` |
+//! | `sin`  | 4-cycle `σ^(k)(x) = sin(x + kπ/2)` |
+//! | `softplus` | logistic polynomials `Q_1 = s`, `Q_{k+1} = Q_k'·(s−s²)` in `s = σ_logistic(x)` |
+//! | `gelu` | Hermite tower from the Gaussian pdf: `gelu^{(k)} = (−1)^{k−1} φ(x)(He_k − He_{k−2})`, k ≥ 2 |
 
 use crate::tensor::Tensor;
 
@@ -35,6 +48,172 @@ pub trait SmoothActivation: Send + Sync {
     }
 }
 
+// ---------------------------------------------------------------- registry
+
+/// Serializable identifier of a registered activation. This is what
+/// models, checkpoints, the wire protocol and the generic autodiff op
+/// carry; towers are built from it on demand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ActivationKind {
+    Tanh,
+    Sine,
+    Softplus,
+    Gelu,
+}
+
+impl ActivationKind {
+    /// Every registered activation, in registry order (see
+    /// [`ActivationKind::index`]).
+    pub const ALL: [ActivationKind; 4] = [
+        ActivationKind::Tanh,
+        ActivationKind::Sine,
+        ActivationKind::Softplus,
+        ActivationKind::Gelu,
+    ];
+
+    /// Canonical serialized name (checkpoints, wire protocol, CLI).
+    pub fn name(self) -> &'static str {
+        match self {
+            ActivationKind::Tanh => "tanh",
+            ActivationKind::Sine => "sin",
+            ActivationKind::Softplus => "softplus",
+            ActivationKind::Gelu => "gelu",
+        }
+    }
+
+    /// Parse a serialized name (`"sine"` is accepted as an alias).
+    pub fn from_name(s: &str) -> Option<ActivationKind> {
+        match s {
+            "tanh" => Some(ActivationKind::Tanh),
+            "sin" | "sine" => Some(ActivationKind::Sine),
+            "softplus" => Some(ActivationKind::Softplus),
+            "gelu" => Some(ActivationKind::Gelu),
+            _ => None,
+        }
+    }
+
+    /// Stable position in [`ActivationKind::ALL`].
+    pub fn index(self) -> usize {
+        match self {
+            ActivationKind::Tanh => 0,
+            ActivationKind::Sine => 1,
+            ActivationKind::Softplus => 2,
+            ActivationKind::Gelu => 3,
+        }
+    }
+
+    /// Build the tower evaluator with tables precomputed up to `n_max`.
+    pub fn build_tower(self, n_max: usize) -> Box<dyn SmoothActivation> {
+        match self {
+            ActivationKind::Tanh => Box::new(Tanh::new(n_max)),
+            ActivationKind::Sine => Box::new(Sine),
+            ActivationKind::Softplus => Box::new(Softplus::new(n_max)),
+            ActivationKind::Gelu => Box::new(Gelu),
+        }
+    }
+
+    /// Elementwise σ(x) over a tensor.
+    pub fn eval_tensor(self, x: &Tensor) -> Tensor {
+        self.deriv_tensor(x, 0)
+    }
+
+    /// Elementwise σ^(k)(x) over a tensor — the evaluator behind the
+    /// generic `Op::Act` autodiff primitive. Polynomial coefficient
+    /// tables are memoized per thread (graphs evaluate the same orders
+    /// every step), so each call is one transcendental sweep plus one
+    /// vectorized Horner sweep.
+    pub fn deriv_tensor(self, x: &Tensor, k: usize) -> Tensor {
+        match self {
+            ActivationKind::Tanh => {
+                if k == 0 {
+                    x.tanh()
+                } else {
+                    let t = x.tanh();
+                    TANH_TABLE.with(|cell| {
+                        let mut table = cell.borrow_mut();
+                        if table.n_max() < k {
+                            *table = TanhTower::new(k);
+                        }
+                        horner_tensor(&t, table.poly(k))
+                    })
+                }
+            }
+            ActivationKind::Sine => {
+                let shift = k as f64 * std::f64::consts::FRAC_PI_2;
+                x.map(|v| (v + shift).sin())
+            }
+            ActivationKind::Softplus => {
+                if k == 0 {
+                    x.map(softplus)
+                } else {
+                    let s = x.map(sigmoid);
+                    SOFTPLUS_TABLE.with(|cell| {
+                        let mut table = cell.borrow_mut();
+                        if table.n_max() < k {
+                            *table = SoftplusTower::new(k);
+                        }
+                        horner_tensor(&s, table.poly(k))
+                    })
+                }
+            }
+            ActivationKind::Gelu => x.map(|v| gelu_deriv_scalar(v, k)),
+        }
+    }
+}
+
+thread_local! {
+    /// Per-thread memo of the tanh/softplus polynomial tables used by
+    /// [`ActivationKind::deriv_tensor`], grown on demand — rebuilding the
+    /// `O(k²)` tables on every `Op::Act` evaluation would dominate small
+    /// graphs.
+    static TANH_TABLE: std::cell::RefCell<TanhTower> =
+        std::cell::RefCell::new(TanhTower::new(0));
+    static SOFTPLUS_TABLE: std::cell::RefCell<SoftplusTower> =
+        std::cell::RefCell::new(SoftplusTower::new(1));
+}
+
+/// Evaluate a polynomial (low-to-high coefficients) elementwise (Horner).
+fn horner_tensor(t: &Tensor, coeffs: &[f64]) -> Tensor {
+    let mut out = Tensor::zeros(t.shape());
+    let od = out.data_mut();
+    match coeffs.len() {
+        0 => {}
+        1 => od.fill(coeffs[0]),
+        _ => {
+            let top = coeffs[coeffs.len() - 1];
+            for (o, &ti) in od.iter_mut().zip(t.data()) {
+                let mut acc = top;
+                for &ci in coeffs[..coeffs.len() - 1].iter().rev() {
+                    acc = acc * ti + ci;
+                }
+                *o = acc;
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------- polynomial towers
+
+/// `P' · chain`, the shared recurrence step of the tanh and logistic
+/// towers: differentiate `P` (in the substituted variable) and multiply by
+/// the chain polynomial (`1 − t²` for tanh, `s − s²` for the logistic).
+fn advance_poly(poly: &[f64], chain: &[f64]) -> Vec<f64> {
+    // dP
+    let mut dp = vec![0.0; poly.len().max(2) - 1];
+    for (m, &c) in poly.iter().enumerate().skip(1) {
+        dp[m - 1] = c * m as f64;
+    }
+    // dP * chain
+    let mut next = vec![0.0; dp.len() + chain.len() - 1];
+    for (i, &a) in dp.iter().enumerate() {
+        for (j, &b) in chain.iter().enumerate() {
+            next[i + j] += a * b;
+        }
+    }
+    next
+}
+
 /// Coefficient table for the tanh derivative polynomials:
 /// `σ^(k)(x) = P_k(tanh x)` with `P_0(t) = t`,
 /// `P_{k+1}(t) = P_k'(t) · (1 - t²)`.
@@ -50,19 +229,7 @@ impl TanhTower {
         let mut coeffs: Vec<Vec<f64>> = Vec::with_capacity(n_max + 1);
         coeffs.push(vec![0.0, 1.0]); // P_0 = t
         for k in 0..n_max {
-            let pk = &coeffs[k];
-            // dP = P_k'(t)
-            let mut dp = vec![0.0; pk.len().max(2) - 1];
-            for (m, &c) in pk.iter().enumerate().skip(1) {
-                dp[m - 1] = c * m as f64;
-            }
-            // P_{k+1} = dp * (1 - t^2)
-            let mut next = vec![0.0; dp.len() + 2];
-            for (m, &c) in dp.iter().enumerate() {
-                next[m] += c;
-                next[m + 2] -= c;
-            }
-            coeffs.push(next);
+            coeffs.push(advance_poly(&coeffs[k], &[1.0, 0.0, -1.0]));
         }
         TanhTower { coeffs }
     }
@@ -125,35 +292,13 @@ impl SmoothActivation for Tanh {
     fn tower(&self, x: &Tensor, n: usize) -> Vec<Tensor> {
         assert!(n <= self.table.n_max(), "tower order {n} > table n_max");
         let t = x.tanh();
-        let td = t.data();
-        (0..=n)
-            .map(|k| {
-                let coeffs = self.table.poly(k);
-                let mut out = Tensor::zeros(x.shape());
-                let od = out.data_mut();
-                match coeffs.len() {
-                    0 => {}
-                    1 => od.fill(coeffs[0]),
-                    _ => {
-                        let top = coeffs[coeffs.len() - 1];
-                        for (o, &ti) in od.iter_mut().zip(td) {
-                            let mut acc = top;
-                            for &ci in coeffs[..coeffs.len() - 1].iter().rev() {
-                                acc = acc * ti + ci;
-                            }
-                            *o = acc;
-                        }
-                    }
-                }
-                out
-            })
-            .collect()
+        (0..=n).map(|k| horner_tensor(&t, self.table.poly(k))).collect()
     }
 }
 
-/// sin activation: `σ^(k)(x) = sin(x + kπ/2)`. Exact and cheap — used by
-/// the test-suite as an independent oracle and useful for spectral-bias
-/// experiments (SIREN-style PINNs).
+/// sin activation: `σ^(k)(x) = sin(x + kπ/2)`. Exact and cheap — the
+/// trivial 4-cycle tower, useful for spectral-bias experiments
+/// (SIREN-style PINNs) and as an independent oracle in tests.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Sine;
 
@@ -170,6 +315,221 @@ impl SmoothActivation for Sine {
         (0..=n)
             .map(|k| (x + k as f64 * std::f64::consts::FRAC_PI_2).sin())
             .collect()
+    }
+
+    /// Vectorized 4-cycle: `sin` and `cos` once, then sign flips.
+    fn tower(&self, x: &Tensor, n: usize) -> Vec<Tensor> {
+        let sin = x.map(f64::sin);
+        let cos = x.map(f64::cos);
+        (0..=n)
+            .map(|k| match k % 4 {
+                0 => sin.clone(),
+                1 => cos.clone(),
+                2 => sin.map(|v| -v),
+                _ => cos.map(|v| -v),
+            })
+            .collect()
+    }
+}
+
+/// Numerically stable `ln(1 + e^x)`.
+fn softplus(x: f64) -> f64 {
+    x.max(0.0) + (-x.abs()).exp().ln_1p()
+}
+
+/// Logistic sigmoid `1 / (1 + e^{-x})`.
+fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Coefficient table for the softplus derivative polynomials:
+/// `softplus^(k)(x) = Q_k(s)` for `k ≥ 1` with `s = sigmoid(x)`,
+/// `Q_1(s) = s`, `Q_{k+1}(s) = Q_k'(s) · (s − s²)` — the same recurrence
+/// trick as [`TanhTower`], with the logistic chain polynomial.
+#[derive(Clone, Debug)]
+pub struct SoftplusTower {
+    /// `coeffs[k]` holds `Q_k` for `k ≥ 1`; index 0 is unused (order 0 is
+    /// softplus itself, which is not polynomial in `s`).
+    coeffs: Vec<Vec<f64>>,
+}
+
+impl SoftplusTower {
+    pub fn new(n_max: usize) -> SoftplusTower {
+        let mut coeffs: Vec<Vec<f64>> = Vec::with_capacity(n_max.max(1) + 1);
+        coeffs.push(Vec::new()); // order 0 unused
+        coeffs.push(vec![0.0, 1.0]); // Q_1 = s
+        for k in 1..n_max {
+            coeffs.push(advance_poly(&coeffs[k], &[0.0, 1.0, -1.0]));
+        }
+        SoftplusTower { coeffs }
+    }
+
+    pub fn n_max(&self) -> usize {
+        self.coeffs.len() - 1
+    }
+
+    /// Coefficients of `Q_k` for `k ≥ 1` (low-to-high degree).
+    pub fn poly(&self, k: usize) -> &[f64] {
+        assert!(k >= 1, "softplus order 0 is not polynomial in sigmoid");
+        &self.coeffs[k]
+    }
+
+    /// Evaluate `Q_k` (`k ≥ 1`) at a scalar `s` (Horner).
+    pub fn eval_poly(&self, k: usize, s: f64) -> f64 {
+        let c = self.poly(k);
+        let mut acc = 0.0;
+        for &ci in c.iter().rev() {
+            acc = acc * s + ci;
+        }
+        acc
+    }
+}
+
+/// softplus with a precomputed logistic-polynomial tower.
+#[derive(Clone, Debug)]
+pub struct Softplus {
+    table: SoftplusTower,
+}
+
+impl Softplus {
+    pub fn new(n_max: usize) -> Softplus {
+        Softplus { table: SoftplusTower::new(n_max.max(1)) }
+    }
+
+    pub fn table(&self) -> &SoftplusTower {
+        &self.table
+    }
+}
+
+impl SmoothActivation for Softplus {
+    fn name(&self) -> &'static str {
+        "softplus"
+    }
+
+    fn eval(&self, x: f64) -> f64 {
+        softplus(x)
+    }
+
+    fn tower_scalar(&self, x: f64, n: usize) -> Vec<f64> {
+        assert!(n <= self.table.n_max(), "tower order {n} > table n_max");
+        let s = sigmoid(x);
+        (0..=n)
+            .map(|k| if k == 0 { softplus(x) } else { self.table.eval_poly(k, s) })
+            .collect()
+    }
+
+    /// Vectorized tower: one sigmoid per element, then a Horner sweep per
+    /// order (order 0 gets the stable softplus directly).
+    fn tower(&self, x: &Tensor, n: usize) -> Vec<Tensor> {
+        assert!(n <= self.table.n_max(), "tower order {n} > table n_max");
+        let s = x.map(sigmoid);
+        (0..=n)
+            .map(|k| {
+                if k == 0 {
+                    x.map(softplus)
+                } else {
+                    horner_tensor(&s, self.table.poly(k))
+                }
+            })
+            .collect()
+    }
+}
+
+/// Near-machine-precision `erf` via the cancellation-free confluent
+/// hypergeometric series `erf(x) = (2x/√π) e^{−x²} Σ (2x²)^n / (2n+1)!!`
+/// (all terms positive); `erfc(6) < 2·10⁻¹⁷`, so `|x| ≥ 6` saturates.
+fn erf(x: f64) -> f64 {
+    if x < 0.0 {
+        return -erf(-x);
+    }
+    if x >= 6.0 {
+        return 1.0;
+    }
+    let t = 2.0 * x * x;
+    let mut term = 1.0;
+    let mut sum = 1.0;
+    let mut n = 1.0;
+    while n < 300.0 {
+        term *= t / (2.0 * n + 1.0);
+        sum += term;
+        if term < sum * 1e-17 {
+            break;
+        }
+        n += 1.0;
+    }
+    (2.0 / std::f64::consts::PI.sqrt()) * x * (-x * x).exp() * sum
+}
+
+/// `gelu^(k)(x)` for the exact (erf-based) GELU `x·Φ(x)`:
+/// `Φ^{(j)} = (−1)^{j−1} He_{j−1}(x) φ(x)` (probabilists' Hermite
+/// polynomials from the Gaussian pdf `φ`), and Leibniz on `x·Φ` gives
+/// `gelu^{(k)} = (−1)^{k−1} φ(x) (He_k(x) − He_{k−2}(x))` for `k ≥ 2`.
+fn gelu_deriv_scalar(x: f64, k: usize) -> f64 {
+    let sqrt_2 = std::f64::consts::SQRT_2;
+    let sqrt_2pi = (2.0 * std::f64::consts::PI).sqrt();
+    let cdf = 0.5 * (1.0 + erf(x / sqrt_2));
+    match k {
+        0 => x * cdf,
+        _ => {
+            let pdf = (-0.5 * x * x).exp() / sqrt_2pi;
+            if k == 1 {
+                cdf + x * pdf
+            } else {
+                // He_0..=He_k by the recurrence He_{m+1} = x·He_m − m·He_{m−1}.
+                let mut he = vec![0.0; k + 1];
+                he[0] = 1.0;
+                he[1] = x;
+                for m in 1..k {
+                    he[m + 1] = x * he[m] - m as f64 * he[m - 1];
+                }
+                let sign = if (k - 1) % 2 == 0 { 1.0 } else { -1.0 };
+                sign * pdf * (he[k] - he[k - 2])
+            }
+        }
+    }
+}
+
+/// Exact (erf-based) GELU `x·Φ(x)` with the Hermite-polynomial tower.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Gelu;
+
+impl SmoothActivation for Gelu {
+    fn name(&self) -> &'static str {
+        "gelu"
+    }
+
+    fn eval(&self, x: f64) -> f64 {
+        gelu_deriv_scalar(x, 0)
+    }
+
+    fn tower_scalar(&self, x: f64, n: usize) -> Vec<f64> {
+        let sqrt_2 = std::f64::consts::SQRT_2;
+        let sqrt_2pi = (2.0 * std::f64::consts::PI).sqrt();
+        let cdf = 0.5 * (1.0 + erf(x / sqrt_2));
+        let pdf = (-0.5 * x * x).exp() / sqrt_2pi;
+        let mut out = Vec::with_capacity(n + 1);
+        out.push(x * cdf);
+        if n >= 1 {
+            out.push(cdf + x * pdf);
+        }
+        if n >= 2 {
+            let mut he = vec![0.0; n + 1];
+            he[0] = 1.0;
+            he[1] = x;
+            for m in 1..n {
+                he[m + 1] = x * he[m] - m as f64 * he[m - 1];
+            }
+            for k in 2..=n {
+                let sign = if (k - 1) % 2 == 0 { 1.0 } else { -1.0 };
+                out.push(sign * pdf * (he[k] - he[k - 2]));
+            }
+        }
+        out
     }
 }
 
@@ -188,41 +548,79 @@ mod tests {
     }
 
     #[test]
-    fn tanh_tower_matches_finite_differences() {
-        let act = Tanh::new(6);
-        ptest::quickcheck(
-            |rng| rng.uniform_in(-2.0, 2.0),
-            |&x| {
-                let tower = act.tower_scalar(x, 4);
-                // FD each order from the previous one.
-                let eps = 1e-6;
-                for k in 1..=4 {
-                    let up = act.tower_scalar(x + eps, k - 1)[k - 1];
-                    let dn = act.tower_scalar(x - eps, k - 1)[k - 1];
-                    let fd = (up - dn) / (2.0 * eps);
-                    let scale = tower[k].abs().max(1.0);
-                    if (tower[k] - fd).abs() > 2e-4 * scale {
-                        return Err(format!("order {k} at x={x}: {} vs fd {fd}", tower[k]));
+    fn softplus_polynomials_low_orders() {
+        let st = SoftplusTower::new(3);
+        assert_eq!(st.poly(1), &[0.0, 1.0]); // s
+        assert_eq!(st.poly(2), &[0.0, 1.0, -1.0]); // s - s²
+        assert_eq!(st.poly(3), &[0.0, 1.0, -3.0, 2.0]); // s - 3s² + 2s³
+    }
+
+    /// Central finite differences against every registered tower, orders
+    /// 1..=6 — each order checked against an FD of the previous one.
+    #[test]
+    fn towers_match_finite_differences_for_all_kinds() {
+        for kind in ActivationKind::ALL {
+            let act = kind.build_tower(6);
+            ptest::check(
+                ptest::Config { cases: 48, seed: 0x70E5 + kind.index() as u64 },
+                |rng| rng.uniform_in(-2.0, 2.0),
+                |&x| {
+                    let tower = act.tower_scalar(x, 6);
+                    let eps = 1e-6;
+                    for k in 1..=6 {
+                        let up = act.tower_scalar(x + eps, k - 1)[k - 1];
+                        let dn = act.tower_scalar(x - eps, k - 1)[k - 1];
+                        let fd = (up - dn) / (2.0 * eps);
+                        let scale = tower[k].abs().max(1.0);
+                        if (tower[k] - fd).abs() > 5e-4 * scale {
+                            return Err(format!(
+                                "{} order {k} at x={x}: {} vs fd {fd}",
+                                kind.name(),
+                                tower[k]
+                            ));
+                        }
                     }
-                }
-                Ok(())
-            },
-        );
+                    Ok(())
+                },
+            );
+        }
     }
 
     #[test]
-    fn vectorized_tower_matches_scalar() {
-        let act = Tanh::new(8);
+    fn vectorized_towers_match_scalar_for_all_kinds() {
         let x = Tensor::linspace(-2.5, 2.5, 11);
-        let towers = act.tower(&x, 8);
-        assert_eq!(towers.len(), 9);
-        for (i, &xi) in x.data().iter().enumerate() {
-            let scalar = act.tower_scalar(xi, 8);
-            for k in 0..=8 {
-                assert!(
-                    (towers[k].data()[i] - scalar[k]).abs() < 1e-12,
-                    "k={k} i={i}"
-                );
+        for kind in ActivationKind::ALL {
+            let act = kind.build_tower(8);
+            let towers = act.tower(&x, 8);
+            assert_eq!(towers.len(), 9);
+            for (i, &xi) in x.data().iter().enumerate() {
+                let scalar = act.tower_scalar(xi, 8);
+                for k in 0..=8 {
+                    assert!(
+                        (towers[k].data()[i] - scalar[k]).abs() < 1e-12,
+                        "{} k={k} i={i}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deriv_tensor_matches_towers() {
+        let x = Tensor::linspace(-2.0, 2.0, 9);
+        for kind in ActivationKind::ALL {
+            let act = kind.build_tower(5);
+            for k in 0..=5 {
+                let d = kind.deriv_tensor(&x, k);
+                for (i, &xi) in x.data().iter().enumerate() {
+                    let expect = act.tower_scalar(xi, k)[k];
+                    assert!(
+                        (d.data()[i] - expect).abs() < 1e-12,
+                        "{} k={k} i={i}",
+                        kind.name()
+                    );
+                }
             }
         }
     }
@@ -240,12 +638,43 @@ mod tests {
     }
 
     #[test]
+    fn gelu_low_order_closed_forms() {
+        // gelu'' = φ(x)(2 − x²), gelu''' = φ(x)(x³ − 4x).
+        let sqrt_2pi = (2.0 * std::f64::consts::PI).sqrt();
+        for &x in &[-1.3, -0.2, 0.0, 0.7, 2.1] {
+            let pdf = (-0.5 * x * x).exp() / sqrt_2pi;
+            let t = Gelu.tower_scalar(x, 3);
+            assert!((t[2] - pdf * (2.0 - x * x)).abs() < 1e-12, "x={x}");
+            assert!((t[3] - pdf * (x * x * x - 4.0 * x)).abs() < 1e-12, "x={x}");
+        }
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // erf(1) and erf(2) to published 15-digit accuracy.
+        assert!((erf(1.0) - 0.842_700_792_949_715).abs() < 1e-14);
+        assert!((erf(2.0) - 0.995_322_265_018_953).abs() < 1e-14);
+        assert!((erf(-1.0) + erf(1.0)).abs() < 1e-16);
+        assert_eq!(erf(7.0), 1.0);
+    }
+
+    #[test]
+    fn registry_roundtrips_names() {
+        for kind in ActivationKind::ALL {
+            assert_eq!(ActivationKind::from_name(kind.name()), Some(kind));
+            assert_eq!(kind.build_tower(3).name(), kind.name());
+        }
+        assert_eq!(ActivationKind::from_name("sine"), Some(ActivationKind::Sine));
+        assert_eq!(ActivationKind::from_name("relu"), None);
+    }
+
+    #[test]
     fn generic_tensor_tower_fallback_matches() {
-        let s = Sine;
+        let g = Gelu;
         let x = Tensor::linspace(-1.0, 1.0, 5);
-        let towers = s.tower(&x, 3);
+        let towers = SmoothActivation::tower(&g, &x, 3);
         for (i, &xi) in x.data().iter().enumerate() {
-            let sc = s.tower_scalar(xi, 3);
+            let sc = g.tower_scalar(xi, 3);
             for k in 0..=3 {
                 assert_eq!(towers[k].data()[i], sc[k]);
             }

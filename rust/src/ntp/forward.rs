@@ -5,27 +5,75 @@
 //! Crossing an activation applies Faà di Bruno (eq. 5b) using the
 //! activation's derivative tower; crossing the affine layer is linear in
 //! every channel (eq. 5a), with the bias entering channel 0 only.
+//!
+//! The activation is not baked into the engine: towers for every
+//! registered [`ActivationKind`] are precomputed at construction and the
+//! forward pass dispatches on [`Mlp::activation`], so one engine serves
+//! tanh, sine, softplus and GELU models alike.
 
-use super::activation::{SmoothActivation, Tanh};
+use super::activation::{ActivationKind, SmoothActivation};
 use super::bell::FaaDiBruno;
 use crate::nn::Mlp;
 use crate::tensor::Tensor;
+use std::cell::RefCell;
 
 /// Engine with precomputed Faà di Bruno + activation-tower tables for up
 /// to `n_max` derivatives.
 pub struct NtpEngine {
     n_max: usize,
     fdb: FaaDiBruno,
-    act: Tanh,
+    /// One tower evaluator per registered activation, indexed by
+    /// [`ActivationKind::index`].
+    acts: Vec<Box<dyn SmoothActivation>>,
+    /// §Perf: reusable per-engine buffers for the hot loop (channel
+    /// powers and combine outputs), so repeated forward calls allocate
+    /// only the tensors they return. `RefCell` because `forward` takes
+    /// `&self`; the engine stays `Send` (single-threaded use per engine).
+    scratch: RefCell<Scratch>,
+}
+
+/// Reusable buffers for [`NtpEngine::forward_n`].
+#[derive(Default)]
+struct Scratch {
+    /// `powers[j][c-2] = y_j^c` for multiplicities `c ≥ 2` (the power-1
+    /// "entry" borrows `y_j` directly instead of cloning it).
+    powers: Vec<Vec<Tensor>>,
+    /// `xi[i]` accumulates the Faà di Bruno combine for channel `i`.
+    xi: Vec<Tensor>,
+}
+
+/// Make `buf` a zeroed tensor of `shape`, reusing its allocation when the
+/// shape already matches.
+fn ensure_zeroed(buf: &mut Tensor, shape: &[usize]) {
+    if buf.shape() == shape {
+        buf.data_mut().fill(0.0);
+    } else {
+        *buf = Tensor::zeros(shape);
+    }
+}
+
+/// The data slice for `y_j^c`: multiplicity 1 borrows the channel itself,
+/// higher multiplicities come from the scratch power cache.
+fn power_slice<'a>(y: &'a [Tensor], powers: &'a [Vec<Tensor>], j: usize, c: usize) -> &'a [f64] {
+    if c == 1 {
+        y[j].data()
+    } else {
+        powers[j][c - 2].data()
+    }
 }
 
 impl NtpEngine {
-    /// Build tables for up to `n_max` derivatives.
+    /// Build tables for up to `n_max` derivatives (all registered
+    /// activations).
     pub fn new(n_max: usize) -> NtpEngine {
         NtpEngine {
             n_max,
             fdb: FaaDiBruno::new(n_max),
-            act: Tanh::new(n_max),
+            acts: ActivationKind::ALL
+                .iter()
+                .map(|k| k.build_tower(n_max))
+                .collect(),
+            scratch: RefCell::new(Scratch::default()),
         }
     }
 
@@ -37,8 +85,9 @@ impl NtpEngine {
         &self.fdb
     }
 
-    pub fn activation(&self) -> &Tanh {
-        &self.act
+    /// The tower evaluator for a registered activation.
+    pub fn act_for(&self, kind: ActivationKind) -> &dyn SmoothActivation {
+        self.acts[kind.index()].as_ref()
     }
 
     /// Compute `[u, u', ..., u^(n_max)]` for `x: [B, 1]`.
@@ -56,6 +105,7 @@ impl NtpEngine {
         assert_eq!(x.shape()[1], 1, "n-TangentProp propagates d/dx of a scalar input");
         assert_eq!(mlp.input_dim(), 1, "network input dim must be 1");
         let batch = x.shape()[0];
+        let act = self.act_for(mlp.activation);
 
         // First affine layer seeds the channels:
         //   y0 = x W^T + b, y1 = 1 W^T (d x/dx = 1), y_i = 0 for i >= 2.
@@ -69,19 +119,30 @@ impl NtpEngine {
             y.push(Tensor::zeros(y[0].shape()));
         }
 
+        let mut scratch = self.scratch.borrow_mut();
         for layer in &mlp.layers[1..] {
-            // Activation tower σ^(s)(y0), s = 0..=n, one tanh per element.
-            let towers = self.act.tower(&y[0], n);
+            // Activation tower σ^(s)(y0), s = 0..=n, one transcendental
+            // evaluation per element.
+            let towers = act.tower(&y[0], n);
             // §Perf: precompute the channel powers y_j^c every partition
-            // term needs (c ≤ n/j), once per layer, so the combine loops
-            // are pure fused multiply-adds with no powi in the hot loop.
-            // All ξ_i consume *pre-update* channels (j ≤ i is untouched
-            // by the downward loop), so one snapshot is valid throughout.
-            let powers = self.channel_powers(&y, n);
-            // Faà di Bruno combine, channels high-to-low so y_j (j < i)
-            // stay untouched while computing ξ_i.
-            for i in (1..=n).rev() {
-                y[i] = self.combine_channel(i, &towers, &powers);
+            // term needs (2 ≤ c ≤ n/j) into the reusable scratch, once per
+            // layer, so the combine loops are pure fused multiply-adds
+            // with no powi and no allocation in the hot loop. Power 1 is
+            // read straight from `y` — no clone.
+            let sc = &mut *scratch;
+            Self::fill_powers(&mut sc.powers, &y, n);
+            // Faà di Bruno combine into the scratch outputs; every ξ_i
+            // consumes pre-update channels, so `y` stays untouched until
+            // the swap below.
+            if sc.xi.len() < n + 1 {
+                sc.xi.resize_with(n + 1, || Tensor::zeros(&[0]));
+            }
+            for i in 1..=n {
+                ensure_zeroed(&mut sc.xi[i], towers[0].shape());
+                Self::combine_channel(&self.fdb, i, &towers, &y, &sc.powers, &mut sc.xi[i]);
+            }
+            for i in 1..=n {
+                std::mem::swap(&mut y[i], &mut sc.xi[i]);
             }
             // Affine layer: channel 0 gets the bias, others are linear.
             let h0 = layer.apply(&towers[0]);
@@ -93,48 +154,67 @@ impl NtpEngine {
         y
     }
 
-    /// `powers[j][c-1] = y_j^c` for every multiplicity any partition term
-    /// of order ≤ n can request (`c ≤ n/j`), built incrementally.
-    fn channel_powers(&self, y: &[Tensor], n: usize) -> Vec<Vec<Tensor>> {
-        let mut powers: Vec<Vec<Tensor>> = Vec::with_capacity(n + 1);
-        powers.push(Vec::new()); // j = 0 unused
+    /// Fill `powers[j][c-2] = y_j^c` for every multiplicity `c ≥ 2` any
+    /// partition term of order ≤ n can request (`c ≤ n/j`), reusing the
+    /// scratch tensors across layers and calls.
+    fn fill_powers(powers: &mut Vec<Vec<Tensor>>, y: &[Tensor], n: usize) {
+        if powers.len() < n + 1 {
+            powers.resize_with(n + 1, Vec::new);
+        }
         for (j, yj) in y.iter().enumerate().skip(1) {
             let c_max = if j <= n { n / j } else { 0 };
-            let mut row = Vec::with_capacity(c_max);
-            if c_max >= 1 {
-                row.push(yj.clone());
-                for _ in 2..=c_max {
-                    let next = row.last().unwrap().mul(yj);
-                    row.push(next);
+            let row = &mut powers[j];
+            let needed = c_max.saturating_sub(1);
+            if row.len() < needed {
+                row.resize_with(needed, || Tensor::zeros(&[0]));
+            }
+            if needed == 0 {
+                continue;
+            }
+            for buf in row.iter_mut().take(needed) {
+                ensure_zeroed(buf, yj.shape());
+            }
+            let mut slices: Vec<&mut [f64]> =
+                row.iter_mut().take(needed).map(|t| t.data_mut()).collect();
+            for (e, &v) in yj.data().iter().enumerate() {
+                let mut acc = v;
+                for s in slices.iter_mut() {
+                    acc *= v;
+                    s[e] = acc;
                 }
             }
-            powers.push(row);
         }
-        powers
     }
 
-    /// ξ_i = Σ_{p∈P(i)} C_p σ^{(|p|)}(y0) Π_j y_j^{p_j}   (eq. 5b)
+    /// ξ_i = Σ_{p∈P(i)} C_p σ^{(|p|)}(y0) Π_j y_j^{p_j}   (eq. 5b),
+    /// accumulated into `out` (already zeroed).
     ///
     /// §Perf: fused per-element accumulation over precomputed powers —
-    /// one output buffer, no temporaries or `powi` per term (the naive
-    /// version churned ~15 MB of temporaries per layer at n = 9).
-    fn combine_channel(&self, i: usize, towers: &[Tensor], powers: &[Vec<Tensor>]) -> Tensor {
+    /// one reused output buffer, no temporaries or `powi` per term (the
+    /// naive version churned ~15 MB of temporaries per layer at n = 9).
+    fn combine_channel(
+        fdb: &FaaDiBruno,
+        i: usize,
+        towers: &[Tensor],
+        y: &[Tensor],
+        powers: &[Vec<Tensor>],
+        out: &mut Tensor,
+    ) {
         let len = towers[0].numel();
-        let mut z = Tensor::zeros(towers[0].shape());
-        let zd = z.data_mut();
-        for term in self.fdb.terms(i) {
+        let zd = out.data_mut();
+        for term in fdb.terms(i) {
             let tower = towers[term.outer_order].data();
             let coeff = term.coeff;
             match term.factors.as_slice() {
                 [(j, c)] => {
-                    let a = powers[*j][*c - 1].data();
+                    let a = power_slice(y, powers, *j, *c);
                     for e in 0..len {
                         zd[e] += coeff * tower[e] * a[e];
                     }
                 }
                 [(j1, c1), (j2, c2)] => {
-                    let a = powers[*j1][*c1 - 1].data();
-                    let b = powers[*j2][*c2 - 1].data();
+                    let a = power_slice(y, powers, *j1, *c1);
+                    let b = power_slice(y, powers, *j2, *c2);
                     for e in 0..len {
                         zd[e] += coeff * tower[e] * a[e] * b[e];
                     }
@@ -142,7 +222,7 @@ impl NtpEngine {
                 factors => {
                     let slices: Vec<&[f64]> = factors
                         .iter()
-                        .map(|&(j, c)| powers[j][c - 1].data())
+                        .map(|&(j, c)| power_slice(y, powers, j, c))
                         .collect();
                     for e in 0..len {
                         let mut prod = coeff * tower[e];
@@ -154,7 +234,6 @@ impl NtpEngine {
                 }
             }
         }
-        z
     }
 
     /// Number of *tensor ops* the forward pass executes for order `n` and
@@ -178,50 +257,55 @@ impl NtpEngine {
 mod tests {
     use super::*;
     use crate::autodiff::{higher, Graph};
+    use crate::tensor::alloc;
     use crate::util::prng::Prng;
     use crate::util::{allclose_slice, ptest};
 
     /// The paper's central claim, as a property: n-TangentProp equals the
     /// repeated-autodiff derivative stack *exactly* (both are exact
-    /// methods), across random architectures and batches.
+    /// methods), across random architectures and batches — for **every**
+    /// registered activation.
     #[test]
     fn matches_repeated_autodiff_exactly() {
-        ptest::check(
-            ptest::Config { cases: 20, seed: 0x5EED },
-            |rng: &mut Prng| {
-                let width = 2 + rng.below(12) as usize;
-                let depth = 1 + rng.below(3) as usize;
-                let batch = 1 + rng.below(5) as usize;
-                let n = 1 + rng.below(5) as usize;
-                let mlp = Mlp::uniform(1, width, depth, 1, rng);
-                let x = Tensor::rand_uniform(&[batch, 1], -1.5, 1.5, rng);
-                (mlp, x, n)
-            },
-            |(mlp, x, n)| {
-                let engine = NtpEngine::new(*n);
-                let ntp = engine.forward(mlp, x);
+        for kind in ActivationKind::ALL {
+            ptest::check(
+                ptest::Config { cases: 12, seed: 0x5EED ^ kind.index() as u64 },
+                |rng: &mut Prng| {
+                    let width = 2 + rng.below(12) as usize;
+                    let depth = 1 + rng.below(3) as usize;
+                    let batch = 1 + rng.below(5) as usize;
+                    let n = 1 + rng.below(5) as usize;
+                    let mlp = Mlp::uniform_with(1, width, depth, 1, kind, rng);
+                    let x = Tensor::rand_uniform(&[batch, 1], -1.5, 1.5, rng);
+                    (mlp, x, n)
+                },
+                |(mlp, x, n)| {
+                    let engine = NtpEngine::new(*n);
+                    let ntp = engine.forward(mlp, x);
 
-                let mut g = Graph::new();
-                let xn = g.input(x.shape());
-                let pn = mlp.const_param_nodes(&mut g);
-                let u = mlp.forward_graph(&mut g, xn, &pn);
-                let stack = higher::derivative_stack(&mut g, u, xn, *n);
-                let vals = g.eval(&[x.clone()], &stack);
+                    let mut g = Graph::new();
+                    let xn = g.input(x.shape());
+                    let pn = mlp.const_param_nodes(&mut g);
+                    let u = mlp.forward_graph(&mut g, xn, &pn);
+                    let stack = higher::derivative_stack(&mut g, u, xn, *n);
+                    let vals = g.eval(&[x.clone()], &stack);
 
-                for order in 0..=*n {
-                    let a = ntp[order].data();
-                    let b = vals.get(stack[order]).data();
-                    if !allclose_slice(a, b, 1e-9, 1e-9) {
-                        return Err(format!(
-                            "order {order}: ntp {:?} vs autodiff {:?}",
-                            &a[..a.len().min(4)],
-                            &b[..b.len().min(4)]
-                        ));
+                    for order in 0..=*n {
+                        let a = ntp[order].data();
+                        let b = vals.get(stack[order]).data();
+                        if !allclose_slice(a, b, 1e-9, 1e-9) {
+                            return Err(format!(
+                                "{} order {order}: ntp {:?} vs autodiff {:?}",
+                                mlp.activation.name(),
+                                &a[..a.len().min(4)],
+                                &b[..b.len().min(4)]
+                            ));
+                        }
                     }
-                }
-                Ok(())
-            },
-        );
+                    Ok(())
+                },
+            );
+        }
     }
 
     #[test]
@@ -250,19 +334,20 @@ mod tests {
     }
 
     #[test]
-    fn order_zero_matches_plain_forward() {
-        let mut rng = Prng::seeded(21);
-        let mlp = Mlp::uniform(1, 16, 2, 1, &mut rng);
+    fn order_zero_matches_plain_forward_all_kinds() {
         let x = Tensor::linspace(-2.0, 2.0, 9).reshape(&[9, 1]);
-        let engine = NtpEngine::new(0);
-        let channels = engine.forward(&mlp, &x);
-        assert_eq!(channels.len(), 1);
-        assert!(allclose_slice(
-            channels[0].data(),
-            mlp.forward(&x).data(),
-            1e-14,
-            1e-14
-        ));
+        for kind in ActivationKind::ALL {
+            let mut rng = Prng::seeded(21 + kind.index() as u64);
+            let mlp = Mlp::uniform_with(1, 16, 2, 1, kind, &mut rng);
+            let engine = NtpEngine::new(0);
+            let channels = engine.forward(&mlp, &x);
+            assert_eq!(channels.len(), 1);
+            assert!(
+                allclose_slice(channels[0].data(), mlp.forward(&x).data(), 1e-14, 1e-14),
+                "{}",
+                kind.name()
+            );
+        }
     }
 
     #[test]
@@ -297,6 +382,51 @@ mod tests {
         let mut rng = Prng::seeded(33);
         let mlp = Mlp::uniform(1, 4, 1, 1, &mut rng);
         NtpEngine::new(2).forward_n(&mlp, &Tensor::zeros(&[1, 1]), 3);
+    }
+
+    /// §Perf: the scratch workspace must make warm forward calls allocate
+    /// strictly less than the first (cold) call, and the warm allocation
+    /// budget is just the returned/tower tensors — no per-term clones.
+    #[test]
+    fn scratch_workspace_cuts_warm_allocations() {
+        let mut rng = Prng::seeded(44);
+        let (width, depth, batch, n) = (16usize, 3usize, 64usize, 6usize);
+        let mlp = Mlp::uniform(1, width, depth, 1, &mut rng);
+        let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, &mut rng);
+        let engine = NtpEngine::new(n);
+        let (cold_out, cold) = alloc::measure(|| engine.forward(&mlp, &x));
+        let (warm_out, warm) = alloc::measure(|| engine.forward(&mlp, &x));
+        for (a, b) in cold_out.iter().zip(&warm_out) {
+            assert_eq!(a, b, "scratch reuse changed results");
+        }
+        assert!(warm < cold, "warm {warm} >= cold {cold}");
+        // Warm budget: per hidden layer ~ (n+1) towers + (n+1) affine
+        // outputs + h0 intermediates, at [batch, width] each, plus the
+        // channel seeding — comfortably under 3·(n+1) tensors per layer.
+        let per_layer = 3 * (n + 1) * batch * width * 8;
+        let budget = (depth + 1) * per_layer;
+        assert!(
+            (warm as usize) < budget,
+            "warm path allocates {warm} bytes (budget {budget})"
+        );
+    }
+
+    #[test]
+    fn repeated_calls_with_different_shapes_stay_correct() {
+        // Scratch buffers are shape-checked; alternating batch sizes and
+        // widths must not leak state between calls.
+        let engine = NtpEngine::new(4);
+        for (seed, width, batch) in [(1u64, 6usize, 3usize), (2, 10, 7), (3, 6, 3), (4, 4, 1)] {
+            let mut rng = Prng::seeded(seed);
+            let mlp = Mlp::uniform(1, width, 2, 1, &mut rng);
+            let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, &mut rng);
+            let a = engine.forward(&mlp, &x);
+            let fresh = NtpEngine::new(4);
+            let b = fresh.forward(&mlp, &x);
+            for (ta, tb) in a.iter().zip(&b) {
+                assert_eq!(ta, tb, "scratch state leaked across calls");
+            }
+        }
     }
 
     #[test]

@@ -7,6 +7,10 @@
 //! advances them across each activation with Faà di Bruno's formula
 //! (eq. (5) of the paper), at a per-layer cost of `O(n·p(n))` tensor ops —
 //! quasilinear in the derivative order by Hardy-Ramanujan.
+//!
+//! The activation is a pluggable [`ActivationKind`] (tanh, sine,
+//! softplus, GELU) with an exact derivative tower each; every engine
+//! dispatches on the model's activation at runtime.
 
 pub mod activation;
 pub mod bell;
@@ -14,7 +18,9 @@ pub mod forward;
 pub mod partitions;
 pub mod tape;
 
-pub use activation::{Sine, SmoothActivation, Tanh, TanhTower};
+pub use activation::{
+    ActivationKind, Gelu, Sine, SmoothActivation, Softplus, SoftplusTower, Tanh, TanhTower,
+};
 pub use bell::{bell_number, FaaDiBruno, Term};
 pub use forward::NtpEngine;
 pub use partitions::{hardy_ramanujan, partition_count, partitions, Partition};

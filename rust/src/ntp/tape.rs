@@ -3,17 +3,27 @@
 //! For PINN training we need `∂L/∂θ` where the loss `L` depends on the
 //! derivative channels `u^(i)`. The paper implements n-TangentProp as a
 //! custom PyTorch `forward` and lets the standard backward run over it;
-//! we do the same: record the channel propagation as tape ops (tanh once
-//! per layer, then polynomial towers and partition products), so a
-//! *single* `backward` yields parameter gradients at tape-size cost
+//! we do the same: record the channel propagation as tape ops (the
+//! activation tower as generic `Act` nodes, then partition products), so
+//! a *single* `backward` yields parameter gradients at tape-size cost
 //! `O(n·p(n)·M)` — no repeated differentiation anywhere.
+//!
+//! The tower is recorded generically: `σ^(s)(y0)` is one `Act` node per
+//! order, whose VJP is the next tower order. That keeps
+//! backprop-through-derivatives exact for *every* registered
+//! [`crate::ntp::ActivationKind`], not just tanh. Known tradeoff: each
+//! `Act` node evaluates its own transcendental sweep, so one layer's
+//! tower costs `n+1` such sweeps where the old tanh-only tape shared
+//! one (and expanded polynomials in it); a shared-substitution tower op
+//! could reclaim that if the tape eval ever dominates training.
 
 use super::forward::NtpEngine;
 use crate::autodiff::{Graph, NodeId};
 use crate::nn::Mlp;
 
 impl NtpEngine {
-    /// Record `[u, u', ..., u^(n)]` on `g`.
+    /// Record `[u, u', ..., u^(n)]` on `g`, using `mlp.activation`'s
+    /// derivative tower.
     ///
     /// `param_nodes` is the `W0, b0, W1, b1, ...` node list (constants for
     /// inference benchmarks, inputs for training — see
@@ -30,6 +40,7 @@ impl NtpEngine {
         assert_eq!(g.shape(x)[1], 1, "x must be [B, 1]");
         assert_eq!(param_nodes.len(), 2 * mlp.layers.len());
         let batch = g.shape(x)[0];
+        let kind = mlp.activation;
 
         // Seed channels from the first affine layer.
         let w0 = param_nodes[0];
@@ -50,9 +61,8 @@ impl NtpEngine {
             let w = param_nodes[2 * li];
             let b = param_nodes[2 * li + 1];
 
-            // tanh once; towers are polynomials in t evaluated by Horner.
-            let t = g.tanh(y[0]);
-            let towers = self.tower_nodes(g, t, n);
+            // σ^(s)(y0), s = 0..=n: one generic activation node per order.
+            let towers: Vec<NodeId> = (0..=n).map(|s| g.act(y[0], kind, s)).collect();
 
             // §Perf: share the channel-power nodes y_j^c across all the
             // partition terms of this layer (mirrors the pure-forward
@@ -69,47 +79,6 @@ impl NtpEngine {
             y[0] = h0;
         }
         y
-    }
-
-    /// σ^(s)(·) for s = 0..=n as tape nodes, given `t = tanh(y0)`.
-    /// Shares the powers `t^m` across all orders.
-    fn tower_nodes(&self, g: &mut Graph, t: NodeId, n: usize) -> Vec<NodeId> {
-        let table = self.activation().table();
-        let max_deg = (0..=n).map(|k| table.poly(k).len() - 1).max().unwrap_or(1);
-        // powers[m] = t^m (powers[0] = None, handled via constants).
-        let mut powers: Vec<Option<NodeId>> = vec![None; max_deg + 1];
-        if max_deg >= 1 {
-            powers[1] = Some(t);
-        }
-        for m in 2..=max_deg {
-            let prev = powers[m - 1].unwrap();
-            powers[m] = Some(g.mul(prev, t));
-        }
-        (0..=n)
-            .map(|k| {
-                let coeffs = table.poly(k);
-                let mut acc: Option<NodeId> = None;
-                for (m, &c) in coeffs.iter().enumerate() {
-                    if c == 0.0 {
-                        continue;
-                    }
-                    let term = if m == 0 {
-                        let shape = g.shape(t).to_vec();
-                        g.constant(crate::tensor::Tensor::full(&shape, c))
-                    } else {
-                        g.scale(powers[m].unwrap(), c)
-                    };
-                    acc = Some(match acc {
-                        None => term,
-                        Some(a) => g.add(a, term),
-                    });
-                }
-                acc.unwrap_or_else(|| {
-                    let shape = g.shape(t).to_vec();
-                    g.constant(crate::tensor::Tensor::zeros(&shape))
-                })
-            })
-            .collect()
     }
 
     /// `powers[j][c-1] = y_j^c` as shared tape nodes (c ≤ n/j).
@@ -158,6 +127,7 @@ impl NtpEngine {
 mod tests {
     use super::*;
     use crate::nn::params;
+    use crate::ntp::ActivationKind;
     use crate::tensor::Tensor;
     use crate::util::prng::Prng;
     use crate::util::{allclose_slice, ptest};
@@ -165,13 +135,14 @@ mod tests {
     #[test]
     fn tape_forward_matches_pure_forward() {
         ptest::check(
-            ptest::Config { cases: 12, seed: 0xF00D },
+            ptest::Config { cases: 16, seed: 0xF00D },
             |rng: &mut Prng| {
                 let width = 2 + rng.below(10) as usize;
                 let depth = 1 + rng.below(3) as usize;
                 let batch = 1 + rng.below(4) as usize;
                 let n = 1 + rng.below(4) as usize;
-                let mlp = Mlp::uniform(1, width, depth, 1, rng);
+                let kind = ActivationKind::ALL[rng.below(4) as usize];
+                let mlp = Mlp::uniform_with(1, width, depth, 1, kind, rng);
                 let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, rng);
                 (mlp, x, n)
             },
@@ -191,7 +162,10 @@ mod tests {
                         1e-11,
                         1e-11,
                     ) {
-                        return Err(format!("order {order} mismatch"));
+                        return Err(format!(
+                            "{} order {order} mismatch",
+                            mlp.activation.name()
+                        ));
                     }
                 }
                 Ok(())
@@ -200,55 +174,63 @@ mod tests {
     }
 
     /// Backprop through the recorded channels must match backprop through
-    /// the repeated-autodiff stack: same loss, same parameter gradients.
+    /// the repeated-autodiff stack: same loss, same parameter gradients —
+    /// for every registered activation.
     #[test]
     fn param_gradients_match_autodiff_baseline() {
-        let mut rng = Prng::seeded(0xAB);
-        let mlp = Mlp::uniform(1, 6, 2, 1, &mut rng);
-        let x = Tensor::linspace(-1.0, 1.0, 5).reshape(&[5, 1]);
-        let n = 3;
+        for kind in ActivationKind::ALL {
+            let mut rng = Prng::seeded(0xAB ^ kind.index() as u64);
+            let mlp = Mlp::uniform_with(1, 6, 2, 1, kind, &mut rng);
+            let x = Tensor::linspace(-1.0, 1.0, 5).reshape(&[5, 1]);
+            let n = 3;
 
-        // n-TangentProp path: single backward over the recorded channels.
-        let engine = NtpEngine::new(n);
-        let mut g1 = Graph::new();
-        let xn1 = g1.input(x.shape());
-        let pn1 = mlp.input_param_nodes(&mut g1);
-        let ch = engine.forward_graph(&mut g1, &mlp, xn1, &pn1, n);
-        // Loss = mean(u''^2) + mean(u'''^2) (a derivative-heavy loss).
-        let a = g1.mean_square(ch[2]);
-        let b = g1.mean_square(ch[3]);
-        let loss1 = g1.add(a, b);
-        let grads1 = g1.backward(loss1, &pn1);
-        let mut inputs1 = vec![x.clone()];
-        inputs1.extend(mlp.param_tensors());
-        let vals1 = g1.eval(&inputs1, &grads1);
-        let flat1 = params::flatten_tensors(
-            &grads1.iter().map(|&id| vals1.get(id).clone()).collect::<Vec<_>>(),
-        );
-        let l1 = g1.eval(&inputs1, &[loss1]).get(loss1).item();
+            // n-TangentProp path: single backward over the recorded channels.
+            let engine = NtpEngine::new(n);
+            let mut g1 = Graph::new();
+            let xn1 = g1.input(x.shape());
+            let pn1 = mlp.input_param_nodes(&mut g1);
+            let ch = engine.forward_graph(&mut g1, &mlp, xn1, &pn1, n);
+            // Loss = mean(u''^2) + mean(u'''^2) (a derivative-heavy loss).
+            let a = g1.mean_square(ch[2]);
+            let b = g1.mean_square(ch[3]);
+            let loss1 = g1.add(a, b);
+            let grads1 = g1.backward(loss1, &pn1);
+            let mut inputs1 = vec![x.clone()];
+            inputs1.extend(mlp.param_tensors());
+            let vals1 = g1.eval(&inputs1, &grads1);
+            let flat1 = params::flatten_tensors(
+                &grads1.iter().map(|&id| vals1.get(id).clone()).collect::<Vec<_>>(),
+            );
+            let l1 = g1.eval(&inputs1, &[loss1]).get(loss1).item();
 
-        // Baseline: repeated autodiff for the channels, then backward.
-        let mut g2 = Graph::new();
-        let xn2 = g2.input(x.shape());
-        let pn2 = mlp.input_param_nodes(&mut g2);
-        let u = mlp.forward_graph(&mut g2, xn2, &pn2);
-        let stack = crate::autodiff::higher::derivative_stack(&mut g2, u, xn2, n);
-        let a2 = g2.mean_square(stack[2]);
-        let b2 = g2.mean_square(stack[3]);
-        let loss2 = g2.add(a2, b2);
-        let grads2 = g2.backward(loss2, &pn2);
-        let vals2 = g2.eval(&inputs1, &grads2);
-        let flat2 = params::flatten_tensors(
-            &grads2.iter().map(|&id| vals2.get(id).clone()).collect::<Vec<_>>(),
-        );
-        let l2 = g2.eval(&inputs1, &[loss2]).get(loss2).item();
+            // Baseline: repeated autodiff for the channels, then backward.
+            let mut g2 = Graph::new();
+            let xn2 = g2.input(x.shape());
+            let pn2 = mlp.input_param_nodes(&mut g2);
+            let u = mlp.forward_graph(&mut g2, xn2, &pn2);
+            let stack = crate::autodiff::higher::derivative_stack(&mut g2, u, xn2, n);
+            let a2 = g2.mean_square(stack[2]);
+            let b2 = g2.mean_square(stack[3]);
+            let loss2 = g2.add(a2, b2);
+            let grads2 = g2.backward(loss2, &pn2);
+            let vals2 = g2.eval(&inputs1, &grads2);
+            let flat2 = params::flatten_tensors(
+                &grads2.iter().map(|&id| vals2.get(id).clone()).collect::<Vec<_>>(),
+            );
+            let l2 = g2.eval(&inputs1, &[loss2]).get(loss2).item();
 
-        assert!((l1 - l2).abs() <= 1e-10 * l2.abs().max(1.0), "loss {l1} vs {l2}");
-        assert!(
-            allclose_slice(flat1.data(), flat2.data(), 1e-7, 1e-9),
-            "max diff {}",
-            crate::util::max_abs_diff(flat1.data(), flat2.data())
-        );
+            assert!(
+                (l1 - l2).abs() <= 1e-10 * l2.abs().max(1.0),
+                "{}: loss {l1} vs {l2}",
+                kind.name()
+            );
+            assert!(
+                allclose_slice(flat1.data(), flat2.data(), 1e-7, 1e-9),
+                "{}: max diff {}",
+                kind.name(),
+                crate::util::max_abs_diff(flat1.data(), flat2.data())
+            );
+        }
     }
 
     /// Tape size must grow quasilinearly with n (vs exponential for the

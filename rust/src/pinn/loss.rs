@@ -385,6 +385,38 @@ mod tests {
         assert!((g1.data()[m] - g2.data()[m]).abs() < 1e-8);
     }
 
+    /// The PINN objective must agree between derivative engines for every
+    /// registered activation (the tape records generic towers).
+    #[test]
+    fn engines_agree_on_loss_and_grad_for_every_activation() {
+        use crate::ntp::ActivationKind;
+        for kind in ActivationKind::ALL {
+            let mut rng = Prng::seeded(43 + kind.index() as u64);
+            let mlp = Mlp::uniform_with(1, 5, 2, 1, kind, &mut rng);
+            let spec = tiny_spec(1);
+            let mut rng_a = Prng::seeded(8);
+            let mut rng_b = Prng::seeded(8);
+            let mut obj_ntp =
+                PinnObjective::build(spec.clone(), &mlp, DerivEngine::Ntp, &mut rng_a);
+            let mut obj_ad = PinnObjective::build(spec, &mlp, DerivEngine::Autodiff, &mut rng_b);
+            let theta = obj_ntp.theta_init(&mlp);
+
+            let (l1, g1) = obj_ntp.value_grad(&theta);
+            let (l2, g2) = obj_ad.value_grad(&theta);
+            assert!(
+                (l1 - l2).abs() < 1e-9 * l2.abs().max(1.0),
+                "{}: {l1} vs {l2}",
+                kind.name()
+            );
+            assert!(
+                allclose_slice(g1.data(), g2.data(), 1e-6, 1e-9),
+                "{}: grad mismatch, max {}",
+                kind.name(),
+                crate::util::max_abs_diff(g1.data(), g2.data())
+            );
+        }
+    }
+
     #[test]
     fn loss_vanishes_on_true_solution_channels() {
         // Evaluate the residual nodes directly on exact channels: R^{(j)}

@@ -5,6 +5,7 @@
 use super::burgers::BurgersProfile;
 use super::loss::{BurgersLossSpec, DerivEngine, PinnObjective};
 use crate::nn::Mlp;
+use crate::ntp::ActivationKind;
 use crate::opt::{Adam, Lbfgs, LbfgsStatus, Objective};
 use crate::tensor::Tensor;
 use crate::util::prng::Prng;
@@ -15,6 +16,10 @@ use std::time::Instant;
 pub struct TrainConfig {
     pub width: usize,
     pub depth: usize,
+    /// Hidden activation of the PINN (tanh is the paper's choice; sine
+    /// gives SIREN-style spectral behaviour, softplus/GELU are the other
+    /// registered smooth towers).
+    pub activation: ActivationKind,
     pub adam_epochs: usize,
     pub lbfgs_epochs: usize,
     pub adam_lr: f64,
@@ -30,6 +35,7 @@ impl Default for TrainConfig {
         TrainConfig {
             width: 24,
             depth: 3,
+            activation: ActivationKind::Tanh,
             adam_epochs: 300,
             lbfgs_epochs: 300,
             adam_lr: 1e-3,
@@ -94,7 +100,7 @@ pub fn train_burgers(
 ) -> TrainResult {
     let profile = spec.profile;
     let mut rng = Prng::seeded(cfg.seed);
-    let mlp = Mlp::uniform(1, cfg.width, cfg.depth, 1, &mut rng);
+    let mlp = Mlp::uniform_with(1, cfg.width, cfg.depth, 1, cfg.activation, &mut rng);
     let mut obj = PinnObjective::build(spec, &mlp, engine, &mut rng);
     let mut theta = obj.theta_init(&mlp);
 
@@ -164,6 +170,7 @@ mod tests {
         TrainConfig {
             width: 12,
             depth: 2,
+            activation: ActivationKind::Tanh,
             adam_epochs: 150,
             lbfgs_epochs: 120,
             adam_lr: 2e-3,

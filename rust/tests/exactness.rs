@@ -6,23 +6,25 @@
 
 use ntangent::autodiff::{higher, Graph};
 use ntangent::nn::Mlp;
-use ntangent::ntp::{NtpEngine, SmoothActivation, Tanh};
+use ntangent::ntp::{ActivationKind, NtpEngine, SmoothActivation, Tanh};
 use ntangent::pinn::BurgersProfile;
 use ntangent::tensor::Tensor;
 use ntangent::util::prng::Prng;
 use ntangent::util::{allclose_slice, ptest};
 
 #[test]
-fn exactness_across_architectures_and_orders() {
-    // Wider sweep than the unit tests: deeper nets, higher orders.
+fn exactness_across_architectures_orders_and_activations() {
+    // Wider sweep than the unit tests: deeper nets, higher orders, and
+    // every registered activation.
     ptest::check(
-        ptest::Config { cases: 30, seed: 0xE0E0 },
+        ptest::Config { cases: 40, seed: 0xE0E0 },
         |rng: &mut Prng| {
             let width = 2 + rng.below(30) as usize;
             let depth = 1 + rng.below(4) as usize;
             let batch = 1 + rng.below(8) as usize;
             let n = 1 + rng.below(7) as usize;
-            let mlp = Mlp::uniform(1, width, depth, 1, rng);
+            let kind = ActivationKind::ALL[rng.below(ActivationKind::ALL.len() as u64) as usize];
+            let mlp = Mlp::uniform_with(1, width, depth, 1, kind, rng);
             let x = Tensor::rand_uniform(&[batch, 1], -2.0, 2.0, rng);
             (mlp, x, n)
         },
@@ -42,12 +44,57 @@ fn exactness_across_architectures_and_orders() {
                     1e-7,
                     1e-8,
                 ) {
-                    return Err(format!("order {order} mismatch (n={n})"));
+                    return Err(format!(
+                        "{} order {order} mismatch (n={n})",
+                        mlp.activation.name()
+                    ));
                 }
             }
             Ok(())
         },
     );
+}
+
+/// Acceptance criterion, spelled out per activation: the n-TP forward
+/// stack matches the repeated-autodiff stack to 1e-7 relative tolerance
+/// at orders 0..=6 on randomized architectures.
+#[test]
+fn every_activation_matches_autodiff_to_order_6() {
+    for kind in ActivationKind::ALL {
+        ptest::check(
+            ptest::Config { cases: 8, seed: 0xAC70 + kind.index() as u64 },
+            |rng: &mut Prng| {
+                let width = 2 + rng.below(16) as usize;
+                let depth = 1 + rng.below(3) as usize;
+                let batch = 1 + rng.below(4) as usize;
+                let mlp = Mlp::uniform_with(1, width, depth, 1, kind, rng);
+                let x = Tensor::rand_uniform(&[batch, 1], -1.5, 1.5, rng);
+                (mlp, x)
+            },
+            |(mlp, x)| {
+                let n = 6;
+                let engine = NtpEngine::new(n);
+                let ntp = engine.forward(mlp, x);
+                let mut g = Graph::new();
+                let xn = g.input(x.shape());
+                let pn = mlp.const_param_nodes(&mut g);
+                let u = mlp.forward_graph(&mut g, xn, &pn);
+                let stack = higher::derivative_stack(&mut g, u, xn, n);
+                let vals = g.eval(&[x.clone()], &stack);
+                for order in 0..=n {
+                    if !allclose_slice(
+                        ntp[order].data(),
+                        vals.get(stack[order]).data(),
+                        1e-7,
+                        1e-8,
+                    ) {
+                        return Err(format!("{} order {order} mismatch", kind.name()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,213 @@
+//! Offline stub of the `xla` (xla_extension) bindings.
+//!
+//! The offline build environment has no PJRT shared library, so this crate
+//! provides the small API surface `ntangent::runtime` uses: [`Literal`] is
+//! fully functional in memory (construction, reshape, dtype/shape queries,
+//! tuple access), while the PJRT client/executable entry points return
+//! [`Error`] so callers degrade gracefully (`ntangent info` prints
+//! "PJRT unavailable", the serve `pjrt` backend surfaces the error, and
+//! the integration tests skip themselves). Swapping a real PJRT-backed
+//! crate back in is a one-line change in the workspace `Cargo.toml`.
+
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error`, so it converts into
+/// `anyhow::Error` through the blanket impl).
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in this build (offline xla stub)"
+    ))
+}
+
+/// Element dtypes the runtime bridge recognizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+/// Scalar types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {
+    fn from_f64(x: f64) -> Self;
+}
+
+impl NativeType for f64 {
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+}
+
+impl NativeType for f32 {
+    fn from_f64(x: f64) -> f32 {
+        x as f32
+    }
+}
+
+/// Shape of a dense array literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// An in-memory literal: dense `f64` storage plus a declared dtype, or a
+/// tuple of literals.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f64>,
+    dims: Vec<i64>,
+    ty: ElementType,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// A rank-1 `f64` literal.
+    pub fn vec1(values: &[f64]) -> Literal {
+        Literal {
+            data: values.to_vec(),
+            dims: vec![values.len() as i64],
+            ty: ElementType::F64,
+            tuple: None,
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data.len()
+            )));
+        }
+        let mut out = self.clone();
+        out.dims = dims.to_vec();
+        Ok(out)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if self.tuple.is_some() {
+            return Err(Error("array_shape of a tuple literal".into()));
+        }
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.ty)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f64(x)).collect())
+    }
+
+    /// The elements of a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.tuple {
+            Some(elems) => Ok(elems.clone()),
+            None => Err(Error("to_tuple of a non-tuple literal".into())),
+        }
+    }
+}
+
+/// Stub PJRT client: construction always fails.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("creating CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling computation"))
+    }
+}
+
+/// Stub HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parsing HLO text {path}")))
+    }
+}
+
+/// Stub computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing"))
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("fetching literal"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_in_memory() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.ty().unwrap(), ElementType::F64);
+        assert_eq!(r.to_vec::<f64>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_entry_points_error_not_panic() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+    }
+}
