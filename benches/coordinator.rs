@@ -1,10 +1,14 @@
 //! Bench: coordinator throughput/latency — request batching over the
-//! native backend, single worker (the serving-path hot loop).
+//! native backend: the single-worker hot loop, then the sharded
+//! multi-worker pool under mixed-activation traffic (1 vs 2 vs 4 workers
+//! on the same load, so the speedup is read straight off the req/s
+//! column).
 //!
 //!     cargo bench --bench coordinator
 
 use ntangent::coordinator::{BatcherConfig, NativeBackend, Service};
 use ntangent::nn::Mlp;
+use ntangent::ntp::ActivationKind;
 use ntangent::util::prng::Prng;
 use std::time::Instant;
 
@@ -48,6 +52,51 @@ fn main() {
             m.points as f64 / secs,
             m.mean_latency_us,
             m.mean_batch_fill
+        );
+        service.shutdown();
+    }
+
+    // Sharded worker pool under mixed-activation traffic: 16 clients,
+    // each pinned to one of the four registered towers, against 1/2/4
+    // workers. More workers = more activation shards running concurrently.
+    println!("\n# worker pool, 16 mixed-activation clients, 16 pts/req");
+    println!(
+        "{:>8} {:>14} {:>14} {:>12} {:>14}",
+        "workers", "req/s", "points/s", "mean lat µs", "busy workers"
+    );
+    for workers in [1usize, 2, 4] {
+        let backend_mlp = mlp.clone();
+        let service = Service::start_pool(
+            move |_w| Ok(Box::new(NativeBackend::new(backend_mlp.clone(), 3, 256)) as _),
+            workers,
+            BatcherConfig::default(),
+        );
+        let handle = service.handle();
+        let reqs_per_client = 200usize;
+        let start = Instant::now();
+        let mut threads = Vec::new();
+        for c in 0..16usize {
+            let handle = handle.clone();
+            let kind = ActivationKind::ALL[c % ActivationKind::ALL.len()];
+            threads.push(std::thread::spawn(move || {
+                let points: Vec<f64> = (0..16).map(|i| (c * 16 + i) as f64 * 1e-3).collect();
+                for _ in 0..reqs_per_client {
+                    let out = handle.eval_with(&points, Some(kind)).unwrap();
+                    std::hint::black_box(&out);
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        let secs = start.elapsed().as_secs_f64();
+        let m = handle.metrics();
+        let busy = m.workers.iter().filter(|w| w.requests > 0).count();
+        println!(
+            "{workers:>8} {:>14.0} {:>14.0} {:>12.0} {busy:>14}",
+            m.requests as f64 / secs,
+            m.points as f64 / secs,
+            m.mean_latency_us,
         );
         service.shutdown();
     }

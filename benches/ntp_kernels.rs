@@ -3,6 +3,7 @@
 //!
 //!     cargo bench --bench ntp_kernels
 
+use ntangent::bench::parallel::{self as bench_parallel, ParallelBenchConfig};
 use ntangent::nn::Mlp;
 use ntangent::ntp::{ActivationKind, NtpEngine, SmoothActivation};
 use ntangent::tensor::Tensor;
@@ -55,6 +56,20 @@ fn main() {
             );
         }
     }
+
+    // Serial vs chunked-parallel forward at the serving shape (the
+    // acceptance point of the parallel-execution PR: B >= 4096, n = 4).
+    // Shares the measurement protocol (and the bitwise serial-equality
+    // check) with `ntangent bench par` via `bench::parallel`.
+    println!("# parallel forward: serial vs Fixed(t) (3x24 tanh, n=4)");
+    let par_cfg = ParallelBenchConfig {
+        batches: vec![1024, 4096],
+        threads: vec![2, 4, 8],
+        warmup: 3,
+        trials: 15,
+        ..ParallelBenchConfig::default()
+    };
+    print!("{}", bench_parallel::summarize(&bench_parallel::run(&par_cfg, |_| {})));
 
     // Raw matmul roofline of the substrate.
     for size in [24usize, 64, 128] {

@@ -10,6 +10,7 @@
 //! | Fig 6 (profile-1 training) | [`training::run`] | `results/fig6_training.csv` |
 //! | Figs 7-10 (profiles 1-4)   | [`profiles::run`] | `results/fig{7..10}_*.csv` |
 //! | §IV-B memory note          | [`memory::run`]   | `results/mem_scaling.csv` |
+//! | serial vs parallel forward | [`parallel::run`] | `results/parallel_speedup.csv` |
 //!
 //! Absolute times differ from the paper (single CPU host vs A6000 GPU);
 //! the *shapes* — exponential vs quasilinear in `n`, crossover at small
@@ -18,6 +19,7 @@
 
 pub mod grid;
 pub mod memory;
+pub mod parallel;
 pub mod passes;
 pub mod profiles;
 pub mod training;

@@ -1,0 +1,173 @@
+//! Serial-vs-parallel forward speedup grid: times `NtpEngine::forward_n`
+//! under [`ParallelPolicy::Serial`] against `Fixed(t)` over a batch ×
+//! thread-count grid (the CLI's `bench par` target, `parallel_speedup.csv`).
+//!
+//! The batch axis is the embarrassingly parallel one, so the interesting
+//! regime is large `B` at moderate `n` (the serving/collocation shape).
+//! Each parallel run is checked bitwise against the serial output before
+//! timing — a speedup measured on wrong numbers is worthless.
+
+use crate::nn::Mlp;
+use crate::ntp::{ActivationKind, NtpEngine, ParallelPolicy};
+use crate::tensor::Tensor;
+use crate::util::csv::Table;
+use crate::util::prng::Prng;
+use crate::util::timer::time_trials;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct ParallelBenchConfig {
+    pub width: usize,
+    pub depth: usize,
+    pub activation: ActivationKind,
+    /// Derivative order of the timed forward.
+    pub n: usize,
+    /// Batch sizes to sweep.
+    pub batches: Vec<usize>,
+    /// Worker-thread counts to compare against serial.
+    pub threads: Vec<usize>,
+    pub warmup: usize,
+    pub trials: usize,
+    pub seed: u64,
+}
+
+impl Default for ParallelBenchConfig {
+    fn default() -> Self {
+        ParallelBenchConfig {
+            width: 24,
+            depth: 3,
+            activation: ActivationKind::Tanh,
+            n: 4,
+            batches: vec![1024, 4096],
+            threads: vec![2, 4, 8],
+            warmup: 2,
+            trials: 10,
+            seed: 17,
+        }
+    }
+}
+
+/// One measured (batch, threads) cell.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelCell {
+    pub batch: usize,
+    pub threads: usize,
+    pub n: usize,
+    pub serial_s: f64,
+    pub parallel_s: f64,
+}
+
+impl ParallelCell {
+    pub fn speedup(&self) -> f64 {
+        self.serial_s / self.parallel_s
+    }
+}
+
+/// Mean seconds per forward over the configured trials.
+fn time_forward(
+    engine: &NtpEngine,
+    mlp: &Mlp,
+    x: &Tensor,
+    n: usize,
+    cfg: &ParallelBenchConfig,
+) -> f64 {
+    let ts = time_trials(cfg.warmup, cfg.trials, || {
+        std::hint::black_box(engine.forward_n(mlp, x, n));
+    });
+    ts.iter().sum::<f64>() / ts.len() as f64
+}
+
+pub fn run(cfg: &ParallelBenchConfig, progress: impl Fn(&str)) -> Vec<ParallelCell> {
+    let mut rng = Prng::seeded(cfg.seed);
+    let mlp = Mlp::uniform_with(1, cfg.width, cfg.depth, 1, cfg.activation, &mut rng);
+    let serial_engine = NtpEngine::new(cfg.n);
+    let mut out = Vec::new();
+    for &batch in &cfg.batches {
+        let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, &mut rng);
+        let want = serial_engine.forward_n(&mlp, &x, cfg.n);
+        let serial_s = time_forward(&serial_engine, &mlp, &x, cfg.n, cfg);
+        for &threads in &cfg.threads {
+            progress(&format!("parallel cell B={batch} threads={threads}"));
+            let engine = NtpEngine::with_policy(cfg.n, ParallelPolicy::Fixed(threads));
+            let got = engine.forward_n(&mlp, &x, cfg.n);
+            for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a, b, "parallel output diverged at channel {k}");
+            }
+            let parallel_s = time_forward(&engine, &mlp, &x, cfg.n, cfg);
+            out.push(ParallelCell {
+                batch,
+                threads,
+                n: cfg.n,
+                serial_s,
+                parallel_s,
+            });
+        }
+    }
+    out
+}
+
+/// One row per cell, with the speedup column the acceptance bar reads.
+pub fn table(cells: &[ParallelCell]) -> Table {
+    let mut t = Table::new(&["batch", "threads", "n", "serial_s", "parallel_s", "speedup"]);
+    for c in cells {
+        t.push(vec![
+            c.batch.to_string(),
+            c.threads.to_string(),
+            c.n.to_string(),
+            format!("{:.6e}", c.serial_s),
+            format!("{:.6e}", c.parallel_s),
+            format!("{:.4}", c.speedup()),
+        ]);
+    }
+    t
+}
+
+/// Write `parallel_speedup.csv`.
+pub fn save(cells: &[ParallelCell], dir: &Path) -> std::io::Result<()> {
+    table(cells).save(&dir.join("parallel_speedup.csv"))
+}
+
+pub fn summarize(cells: &[ParallelCell]) -> String {
+    let mut out = String::from("serial vs parallel forward (mean seconds)\n");
+    for c in cells {
+        out.push_str(&format!(
+            "  B={:<6} t={:<2} n={}  serial {:>10.1} µs  parallel {:>10.1} µs  speedup {:.2}x\n",
+            c.batch,
+            c.threads,
+            c.n,
+            c.serial_s * 1e6,
+            c.parallel_s * 1e6,
+            c.speedup()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_parallel_bench_produces_grid_and_csv() {
+        let cfg = ParallelBenchConfig {
+            width: 8,
+            depth: 2,
+            n: 3,
+            batches: vec![64],
+            threads: vec![2],
+            warmup: 0,
+            trials: 2,
+            ..ParallelBenchConfig::default()
+        };
+        let cells = run(&cfg, |_| {});
+        assert_eq!(cells.len(), 1);
+        assert!(cells[0].serial_s > 0.0 && cells[0].parallel_s > 0.0);
+        let t = table(&cells);
+        assert_eq!(t.rows.len(), 1);
+        assert!(summarize(&cells).contains("speedup"));
+        let dir = std::env::temp_dir().join("ntangent_test_parallel_bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        save(&cells, &dir).unwrap();
+        assert!(dir.join("parallel_speedup.csv").exists());
+    }
+}

@@ -5,8 +5,11 @@
 //! the learned `u^(j)` (j = 0..=k) against the truth plus the loss and λ
 //! histories. We emit one curves CSV and one history CSV per profile.
 
-use crate::ntp::NtpEngine;
-use crate::pinn::{grid_points, train_burgers, BurgersLossSpec, DerivEngine, TrainConfig, TrainResult};
+use crate::ntp::ParallelPolicy;
+use crate::pinn::{
+    eval_channels, grid_points, train_burgers, BurgersLossSpec, DerivEngine, TrainConfig,
+    TrainResult,
+};
 use crate::util::csv::Table;
 use std::path::Path;
 
@@ -19,6 +22,9 @@ pub struct ProfilesConfig {
     pub n_plot: usize,
     /// Highest derivative order to export (defaults to k, as plotted).
     pub order_max: Option<usize>,
+    /// Batch-parallelism for the post-training curve evaluation (the
+    /// plot grid is a dense collocation cloud; output is policy-invariant).
+    pub parallel: ParallelPolicy,
 }
 
 impl ProfilesConfig {
@@ -29,6 +35,7 @@ impl ProfilesConfig {
             spec_overrides: None,
             n_plot: 201,
             order_max: None,
+            parallel: ParallelPolicy::Serial,
         }
     }
 }
@@ -50,8 +57,7 @@ pub fn run(cfg: &ProfilesConfig) -> ProfileRun {
 
     let order_max = cfg.order_max.unwrap_or(cfg.k);
     let xs = grid_points(-x_max, x_max, cfg.n_plot);
-    let engine = NtpEngine::new(order_max);
-    let learned = engine.forward(&result.mlp, &xs);
+    let learned = eval_channels(&result.mlp, &xs, order_max, cfg.parallel);
 
     let mut header = vec!["x".to_string()];
     for j in 0..=order_max {
@@ -147,6 +153,7 @@ mod tests {
             spec_overrides: Some(spec),
             n_plot: 21,
             order_max: Some(1),
+            parallel: ParallelPolicy::Fixed(2),
         };
         let pr = run(&cfg);
         assert_eq!(pr.curves.rows.len(), 21);

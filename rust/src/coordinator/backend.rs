@@ -2,7 +2,7 @@
 //! engine and the AOT-compiled PJRT executable.
 
 use crate::nn::{params, Mlp};
-use crate::ntp::{ActivationKind, NtpEngine};
+use crate::ntp::{ActivationKind, NtpEngine, ParallelPolicy};
 use crate::runtime::Executable;
 use crate::tensor::Tensor;
 use anyhow::{bail, ensure, Result};
@@ -53,8 +53,14 @@ pub struct NativeBackend {
 
 impl NativeBackend {
     pub fn new(mlp: Mlp, n: usize, cap: usize) -> NativeBackend {
+        NativeBackend::new_parallel(mlp, n, cap, ParallelPolicy::Serial)
+    }
+
+    /// Native backend whose engine chunks each batch across threads
+    /// according to `policy` (bitwise identical to the serial engine).
+    pub fn new_parallel(mlp: Mlp, n: usize, cap: usize, policy: ParallelPolicy) -> NativeBackend {
         NativeBackend {
-            engine: NtpEngine::new(n),
+            engine: NtpEngine::with_policy(n, policy),
             mlp,
             n,
             cap,
@@ -224,6 +230,18 @@ mod tests {
         let plain = backend.eval_batch(&xs).unwrap();
         let direct = NtpEngine::new(2).forward(&mlp, &Tensor::from_vec(xs.to_vec(), &[2, 1]));
         assert_eq!(plain[0].as_slice(), direct[0].data());
+    }
+
+    #[test]
+    fn parallel_backend_matches_serial_backend() {
+        let mut rng = Prng::seeded(12);
+        let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+        let xs: Vec<f64> = (0..37).map(|i| -1.0 + i as f64 * 0.05).collect();
+        let serial = NativeBackend::new(mlp.clone(), 3, 64).eval_batch(&xs).unwrap();
+        let parallel = NativeBackend::new_parallel(mlp, 3, 64, ParallelPolicy::Fixed(4))
+            .eval_batch(&xs)
+            .unwrap();
+        assert_eq!(serial, parallel);
     }
 
     #[test]

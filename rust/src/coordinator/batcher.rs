@@ -1,10 +1,15 @@
 //! Dynamic batcher: coalesce queued requests into backend-sized batches.
 //!
-//! Policy (vLLM-router-style continuous batching, single worker):
+//! Policy (vLLM-router-style continuous batching, one loop per worker):
 //! take the oldest request, then greedily drain the queue — waiting up to
 //! `max_wait` for stragglers — until the batch capacity is filled, run the
 //! backend once, and scatter slices back to each caller. Requests larger
 //! than the capacity are split across consecutive backend calls.
+//!
+//! Each worker of a pool runs its own `run_loop` on its own queue (the
+//! [`crate::coordinator::ServiceHandle`] shards requests per activation),
+//! tagging its metrics with its worker id. On shutdown a worker first
+//! drains everything still queued, so no accepted request is dropped.
 
 use super::backend::EvalBackend;
 use super::metrics::Metrics;
@@ -51,20 +56,25 @@ pub enum Msg {
 /// message.
 pub type Response = Result<Vec<Vec<f64>>, String>;
 
-/// Run the batching loop until the channel closes or [`Msg::Shutdown`]
-/// arrives.
+/// Run one worker's batching loop (metrics tagged with `worker`) until
+/// the channel closes or [`Msg::Shutdown`] arrives; the queue is drained
+/// before returning so every accepted request gets an answer.
 pub fn run_loop(
     mut backend: Box<dyn EvalBackend>,
     rx: Receiver<Msg>,
     cfg: BatcherConfig,
     metrics: Arc<Metrics>,
+    worker: usize,
 ) {
     let cap = backend.max_batch();
     loop {
         // Block for the first request.
         let first = match rx.recv() {
             Ok(Msg::Eval(r)) => r,
-            Ok(Msg::Shutdown) | Err(_) => return,
+            Ok(Msg::Shutdown) | Err(_) => {
+                drain_queue(backend.as_mut(), &rx, cap, &metrics, worker);
+                return;
+            }
         };
         let mut pending = vec![first];
         let mut total: usize = pending[0].points.len();
@@ -94,10 +104,34 @@ pub fn run_loop(
             }
         }
 
-        serve_batch(backend.as_mut(), &pending, cap, &metrics);
+        serve_batch(backend.as_mut(), &pending, cap, &metrics, worker);
         if stop {
+            drain_queue(backend.as_mut(), &rx, cap, &metrics, worker);
             return;
         }
+    }
+}
+
+/// Serve whatever is still queued at shutdown: requests enqueued before
+/// the shutdown signal must not be dropped (asserted by the coordinator
+/// stress suite).
+fn drain_queue(
+    backend: &mut dyn EvalBackend,
+    rx: &Receiver<Msg>,
+    cap: usize,
+    metrics: &Metrics,
+    worker: usize,
+) {
+    let mut pending = Vec::new();
+    loop {
+        match rx.try_recv() {
+            Ok(Msg::Eval(r)) => pending.push(r),
+            Ok(Msg::Shutdown) => continue,
+            Err(_) => break,
+        }
+    }
+    if !pending.is_empty() {
+        serve_batch(backend, &pending, cap, metrics, worker);
     }
 }
 
@@ -109,6 +143,7 @@ fn serve_batch(
     pending: &[Request],
     cap: usize,
     metrics: &Metrics,
+    worker: usize,
 ) {
     let mut activations: Vec<Option<ActivationKind>> = Vec::new();
     for req in pending {
@@ -121,7 +156,7 @@ fn serve_batch(
             .iter()
             .filter(|r| r.activation == activation)
             .collect();
-        serve_group(backend, &group, activation, cap, metrics);
+        serve_group(backend, &group, activation, cap, metrics, worker);
     }
 }
 
@@ -132,6 +167,7 @@ fn serve_group(
     activation: Option<ActivationKind>,
     cap: usize,
     metrics: &Metrics,
+    worker: usize,
 ) {
     // Flatten all points, tracking (request, offset, len).
     let mut flat: Vec<f64> = Vec::new();
@@ -148,7 +184,7 @@ fn serve_group(
     for chunk in flat.chunks(cap) {
         match backend.eval_batch_act(chunk, activation) {
             Ok(out) => {
-                metrics.record_batch(chunk.len());
+                metrics.record_batch(worker, chunk.len());
                 for (k, col) in out.into_iter().enumerate() {
                     channels[k].extend(col);
                 }
@@ -163,7 +199,7 @@ fn serve_group(
     for (req, &(off, len)) in group.iter().zip(&spans) {
         let result = match &error {
             Some(msg) => {
-                metrics.record_error();
+                metrics.record_error(worker);
                 Err(msg.clone())
             }
             None => Ok(channels
@@ -171,7 +207,7 @@ fn serve_group(
                 .map(|c| c[off..off + len].to_vec())
                 .collect()),
         };
-        metrics.record_request(len);
+        metrics.record_request(worker, len);
         metrics.record_latency(req.enqueued.elapsed().as_nanos() as u64);
         // Receiver may have hung up; that's fine.
         let _ = req.resp.send(result);
@@ -234,7 +270,7 @@ mod tests {
         let mut backend = Probe { cap: 8, batches: vec![], fail: false };
         let (r1, rx1) = request(vec![1.0, 2.0]);
         let (r2, rx2) = request(vec![3.0]);
-        serve_batch(&mut backend, &[r1, r2], 8, &metrics);
+        serve_batch(&mut backend, &[r1, r2], 8, &metrics, 0);
         let a = rx1.recv().unwrap().unwrap();
         let b = rx2.recv().unwrap().unwrap();
         assert_eq!(a[0], vec![1.0, 2.0]);
@@ -281,7 +317,7 @@ mod tests {
         let (r1, rx1) = request_act(vec![1.0], None);
         let (r2, rx2) = request_act(vec![2.0, 3.0], Some(ActivationKind::Sine));
         let (r3, rx3) = request_act(vec![4.0], None);
-        serve_batch(&mut backend, &[r1, r2, r3], 16, &metrics);
+        serve_batch(&mut backend, &[r1, r2, r3], 16, &metrics, 0);
         assert_eq!(rx1.recv().unwrap().unwrap()[0], vec![1.0]);
         assert_eq!(rx2.recv().unwrap().unwrap()[0], vec![2.0, 3.0]);
         assert_eq!(rx3.recv().unwrap().unwrap()[0], vec![4.0]);
@@ -299,7 +335,7 @@ mod tests {
         let mut backend = Probe { cap: 4, batches: vec![], fail: false };
         let pts: Vec<f64> = (0..10).map(|i| i as f64).collect();
         let (r, rx) = request(pts.clone());
-        serve_batch(&mut backend, &[r], 4, &metrics);
+        serve_batch(&mut backend, &[r], 4, &metrics, 0);
         let out = rx.recv().unwrap().unwrap();
         assert_eq!(out[0], pts);
         assert_eq!(backend.batches, vec![4, 4, 2]);
@@ -310,7 +346,7 @@ mod tests {
         let metrics = Metrics::default();
         let mut backend = Probe { cap: 4, batches: vec![], fail: true };
         let (r, rx) = request(vec![1.0]);
-        serve_batch(&mut backend, &[r], 4, &metrics);
+        serve_batch(&mut backend, &[r], 4, &metrics, 0);
         let out = rx.recv().unwrap();
         assert!(out.is_err());
         assert_eq!(metrics.snapshot().errors, 1);
@@ -323,7 +359,7 @@ mod tests {
         let (tx, rx) = mpsc::channel::<Msg>();
         let handle = std::thread::spawn({
             let metrics = metrics.clone();
-            move || run_loop(Box::new(backend), rx, BatcherConfig::default(), metrics)
+            move || run_loop(Box::new(backend), rx, BatcherConfig::default(), metrics, 0)
         });
         let (r, resp_rx) = request(vec![0.5]);
         tx.send(Msg::Eval(r)).unwrap();
@@ -340,10 +376,41 @@ mod tests {
         let (tx, rx) = mpsc::channel::<Msg>();
         let worker = std::thread::spawn({
             let metrics = metrics.clone();
-            move || run_loop(Box::new(backend), rx, BatcherConfig::default(), metrics)
+            move || run_loop(Box::new(backend), rx, BatcherConfig::default(), metrics, 0)
         });
         tx.send(Msg::Shutdown).unwrap();
         worker.join().unwrap(); // must return even though tx is alive
         drop(tx);
+    }
+
+    /// Requests enqueued before the shutdown signal are still served —
+    /// the loop drains its queue on the way out instead of dropping work.
+    #[test]
+    fn shutdown_drains_already_queued_requests() {
+        let metrics = Arc::new(Metrics::with_workers(1));
+        let backend = Probe { cap: 8, batches: vec![], fail: false };
+        let (tx, rx) = mpsc::channel::<Msg>();
+        // Queue order: one request, the shutdown signal, then three more
+        // requests that are only reachable via the drain path.
+        let (r1, rx1) = request(vec![1.0]);
+        tx.send(Msg::Eval(r1)).unwrap();
+        tx.send(Msg::Shutdown).unwrap();
+        let mut waiting = vec![rx1];
+        let mut want = vec![vec![1.0]];
+        for i in 2..5 {
+            let pts = vec![i as f64];
+            let (r, rxr) = request(pts.clone());
+            tx.send(Msg::Eval(r)).unwrap();
+            waiting.push(rxr);
+            want.push(pts);
+        }
+        run_loop(Box::new(backend), rx, BatcherConfig::default(), metrics.clone(), 0);
+        for (rxr, pts) in waiting.iter().zip(&want) {
+            let out = rxr.recv().expect("request dropped at shutdown").unwrap();
+            assert_eq!(&out[0], pts);
+        }
+        let s = metrics.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.workers[0].requests, 4);
     }
 }

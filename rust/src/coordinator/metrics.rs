@@ -1,4 +1,8 @@
 //! Lock-free service metrics (atomic counters, snapshot-on-read).
+//!
+//! A service built with [`Metrics::with_workers`] additionally tracks one
+//! [`WorkerCounters`] row per batcher worker, so the sharded pool can
+//! report how traffic distributes across activation shards.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -14,10 +18,22 @@ pub struct Metrics {
     pub latency_ns: AtomicU64,
     /// Max single-request latency in nanoseconds.
     pub latency_max_ns: AtomicU64,
+    /// Per-worker counters (empty for metrics built with `default()`,
+    /// e.g. in unit tests that drive `serve_batch` directly).
+    workers: Vec<WorkerCounters>,
+}
+
+/// Counters attributed to one batcher worker of the pool.
+#[derive(Default, Debug)]
+pub struct WorkerCounters {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_points: AtomicU64,
+    pub errors: AtomicU64,
 }
 
 /// A point-in-time copy of the counters with derived ratios.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub points: u64,
@@ -28,21 +44,55 @@ pub struct MetricsSnapshot {
     pub max_latency_us: f64,
     /// Average number of requests coalesced per backend call.
     pub mean_batch_fill: f64,
+    /// Per-worker counter snapshots, indexed by worker id (empty when the
+    /// metrics were not built with [`Metrics::with_workers`]).
+    pub workers: Vec<WorkerSnapshot>,
+}
+
+/// Snapshot of one worker's counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub batched_points: u64,
+    pub errors: u64,
 }
 
 impl Metrics {
-    pub fn record_request(&self, n_points: usize) {
+    /// Metrics with `n` per-worker counter rows.
+    pub fn with_workers(n: usize) -> Metrics {
+        Metrics {
+            workers: (0..n).map(|_| WorkerCounters::default()).collect(),
+            ..Metrics::default()
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn record_request(&self, worker: usize, n_points: usize) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.points.fetch_add(n_points as u64, Ordering::Relaxed);
+        if let Some(w) = self.workers.get(worker) {
+            w.requests.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
-    pub fn record_batch(&self, n_points: usize) {
+    pub fn record_batch(&self, worker: usize, n_points: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_points.fetch_add(n_points as u64, Ordering::Relaxed);
+        if let Some(w) = self.workers.get(worker) {
+            w.batches.fetch_add(1, Ordering::Relaxed);
+            w.batched_points.fetch_add(n_points as u64, Ordering::Relaxed);
+        }
     }
 
-    pub fn record_error(&self) {
+    pub fn record_error(&self, worker: usize) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+        if let Some(w) = self.workers.get(worker) {
+            w.errors.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     pub fn record_latency(&self, ns: u64) {
@@ -70,6 +120,16 @@ impl Metrics {
             } else {
                 0.0
             },
+            workers: self
+                .workers
+                .iter()
+                .map(|w| WorkerSnapshot {
+                    requests: w.requests.load(Ordering::Relaxed),
+                    batches: w.batches.load(Ordering::Relaxed),
+                    batched_points: w.batched_points.load(Ordering::Relaxed),
+                    errors: w.errors.load(Ordering::Relaxed),
+                })
+                .collect(),
         }
     }
 }
@@ -81,9 +141,9 @@ mod tests {
     #[test]
     fn snapshot_reflects_counters() {
         let m = Metrics::default();
-        m.record_request(10);
-        m.record_request(5);
-        m.record_batch(15);
+        m.record_request(0, 10);
+        m.record_request(0, 5);
+        m.record_batch(0, 15);
         m.record_latency(2_000);
         m.record_latency(4_000);
         let s = m.snapshot();
@@ -94,6 +154,9 @@ mod tests {
         assert_eq!(s.mean_latency_us, 3.0);
         assert_eq!(s.max_latency_us, 4.0);
         assert_eq!(s.errors, 0);
+        // Default metrics track no per-worker rows; out-of-range worker
+        // ids are silently absorbed by the totals.
+        assert!(s.workers.is_empty());
     }
 
     #[test]
@@ -101,5 +164,31 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.mean_latency_us, 0.0);
         assert_eq!(s.mean_batch_fill, 0.0);
+    }
+
+    #[test]
+    fn per_worker_counters_attribute_to_the_right_row() {
+        let m = Metrics::with_workers(3);
+        assert_eq!(m.n_workers(), 3);
+        m.record_request(0, 2);
+        m.record_batch(0, 2);
+        m.record_request(2, 7);
+        m.record_batch(2, 4);
+        m.record_batch(2, 3);
+        m.record_error(2);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.workers.len(), 3);
+        assert_eq!(s.workers[0].requests, 1);
+        assert_eq!(s.workers[0].batches, 1);
+        assert_eq!(s.workers[1].requests, 0);
+        assert_eq!(s.workers[2].requests, 1);
+        assert_eq!(s.workers[2].batches, 2);
+        assert_eq!(s.workers[2].batched_points, 7);
+        assert_eq!(s.workers[2].errors, 1);
+        // The global rows are the sum of the per-worker rows.
+        let sum: u64 = s.workers.iter().map(|w| w.batches).sum();
+        assert_eq!(sum, s.batches);
     }
 }

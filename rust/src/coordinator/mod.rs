@@ -3,13 +3,17 @@
 //! After a PINN is trained, downstream consumers (ODE post-processing,
 //! plotting, UQ sweeps) need `u, u', ..., u^(n)` at arbitrary points. The
 //! coordinator serves those queries over compiled artifacts: requests
-//! arrive (in-process or via the TCP JSON-lines front), a dynamic batcher
-//! packs them into the executable's fixed batch shape, one worker thread
-//! owns the backend, and responses are scattered back per request.
+//! arrive (in-process or via the TCP JSON-lines front), the handle shards
+//! them per activation across a pool of batcher workers, each worker's
+//! dynamic batcher packs its shard into backend-sized batches, and
+//! responses are scattered back per request.
 //!
 //! Built on std threads + channels (tokio is not available offline); the
-//! structure mirrors a vLLM-style router: front → queue → batcher →
-//! backend → scatter, with metrics at each stage.
+//! structure mirrors a vLLM-style router: front → sharded queues →
+//! batcher pool → backends → scatter, with global and per-worker metrics.
+//! A pool of size 1 behaves exactly like the original single-worker
+//! service; native backends can additionally chunk each batch across
+//! threads via [`crate::ntp::ParallelPolicy`].
 //!
 //! Requests may carry an optional `"activation"` field (any registered
 //! [`crate::ntp::ActivationKind`] name) selecting the derivative tower
@@ -25,5 +29,5 @@ pub mod service;
 
 pub use backend::{EvalBackend, NativeBackend, PjrtBackend};
 pub use batcher::BatcherConfig;
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, WorkerSnapshot};
 pub use service::{Service, ServiceHandle};

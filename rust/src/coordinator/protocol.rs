@@ -81,8 +81,21 @@ pub fn encode_error(msg: &str) -> String {
     Json::obj(vec![("error", Json::Str(msg.to_string()))]).dump()
 }
 
-/// Encode a stats response.
+/// Encode a stats response (includes one object per batcher worker).
 pub fn encode_stats(s: &MetricsSnapshot) -> String {
+    let workers = Json::Arr(
+        s.workers
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("requests", Json::Num(w.requests as f64)),
+                    ("batches", Json::Num(w.batches as f64)),
+                    ("batched_points", Json::Num(w.batched_points as f64)),
+                    ("errors", Json::Num(w.errors as f64)),
+                ])
+            })
+            .collect(),
+    );
     Json::obj(vec![(
         "stats",
         Json::obj(vec![
@@ -93,6 +106,7 @@ pub fn encode_stats(s: &MetricsSnapshot) -> String {
             ("mean_latency_us", Json::Num(s.mean_latency_us)),
             ("max_latency_us", Json::Num(s.max_latency_us)),
             ("mean_batch_fill", Json::Num(s.mean_batch_fill)),
+            ("workers", workers),
         ]),
     )])
     .dump()
@@ -182,6 +196,7 @@ mod tests {
 
     #[test]
     fn stats_encode_mentions_fields() {
+        use super::super::metrics::WorkerSnapshot;
         let s = MetricsSnapshot {
             requests: 3,
             points: 10,
@@ -191,9 +206,17 @@ mod tests {
             mean_latency_us: 12.5,
             max_latency_us: 20.0,
             mean_batch_fill: 1.5,
+            workers: vec![WorkerSnapshot {
+                requests: 3,
+                batches: 2,
+                batched_points: 10,
+                errors: 0,
+            }],
         };
         let line = encode_stats(&s);
         assert!(line.contains("\"requests\":3"));
         assert!(line.contains("mean_batch_fill"));
+        assert!(line.contains("\"workers\""));
+        assert!(line.contains("\"batched_points\":10"));
     }
 }

@@ -1,4 +1,12 @@
-//! Service assembly: request queue + batcher worker + optional TCP front.
+//! Service assembly: sharded request queues + a batcher worker pool +
+//! optional TCP front.
+//!
+//! A service runs `W ≥ 1` batcher workers, each with its own backend and
+//! its own queue. The handle shards requests across the queues by their
+//! (optional) activation override — `kind.index() % W`, default traffic
+//! on shard 0 — so batches for different activation towers run
+//! concurrently while same-activation requests still coalesce into full
+//! backend batches on their shard.
 
 use super::backend::EvalBackend;
 use super::batcher::{run_loop, BatcherConfig, Msg, Request, Response};
@@ -9,49 +17,81 @@ use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// A running evaluation service (single batcher worker).
+/// A running evaluation service (a pool of batcher workers).
 pub struct Service {
     handle: ServiceHandle,
-    worker: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
-/// Cheap cloneable handle for submitting requests.
+/// Cheap cloneable handle for submitting requests; shards per activation
+/// across the worker queues.
 #[derive(Clone)]
 pub struct ServiceHandle {
-    tx: Sender<Msg>,
+    txs: Vec<Sender<Msg>>,
     metrics: Arc<Metrics>,
 }
 
 impl Service {
-    /// Spawn the batcher worker. The backend is built *inside* the worker
-    /// thread by `factory` (PJRT executables are not `Send`); a factory
-    /// error shuts the service down and surfaces on the first `eval`.
+    /// Spawn a single batcher worker. The backend is built *inside* the
+    /// worker thread by `factory` (PJRT executables are not `Send`); a
+    /// factory error shuts the shard down and surfaces on `eval`.
     pub fn start<F>(factory: F, cfg: BatcherConfig) -> Service
     where
         F: FnOnce() -> Result<Box<dyn EvalBackend>> + Send + 'static,
     {
-        let metrics = Arc::new(Metrics::default());
-        let (tx, rx) = channel::<Msg>();
-        let worker = std::thread::Builder::new()
-            .name("ntangent-batcher".into())
-            .spawn({
-                let metrics = metrics.clone();
-                move || match factory() {
-                    Ok(backend) => run_loop(backend, rx, cfg, metrics),
-                    Err(e) => {
-                        eprintln!("ntangent service: backend init failed: {e:#}");
-                        drop(rx); // closes the queue; evals error out
-                    }
-                }
-            })
-            .expect("spawning batcher thread");
+        let cell = Mutex::new(Some(factory));
+        Service::start_pool(
+            move |_| {
+                let f = cell
+                    .lock()
+                    .expect("factory cell poisoned")
+                    .take()
+                    .expect("single-worker factory runs once");
+                f()
+            },
+            1,
+            cfg,
+        )
+    }
+
+    /// Spawn a pool of `workers` batcher workers. `factory(w)` is called
+    /// inside worker `w`'s thread to build that shard's backend, so each
+    /// worker owns an independent backend (and native backends can carry
+    /// their own [`crate::ntp::ParallelPolicy`]).
+    pub fn start_pool<F>(factory: F, workers: usize, cfg: BatcherConfig) -> Service
+    where
+        F: Fn(usize) -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static,
+    {
+        let workers = workers.max(1);
+        let metrics = Arc::new(Metrics::with_workers(workers));
+        let factory = Arc::new(factory);
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<Msg>();
+            txs.push(tx);
+            let metrics = metrics.clone();
+            let factory = factory.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ntangent-batcher-{w}"))
+                    .spawn(move || match factory(w) {
+                        Ok(backend) => run_loop(backend, rx, cfg, metrics, w),
+                        Err(e) => {
+                            eprintln!("ntangent service: backend {w} init failed: {e:#}");
+                            drop(rx); // closes the shard queue; evals error out
+                        }
+                    })
+                    .expect("spawning batcher thread"),
+            );
+        }
         Service {
-            handle: ServiceHandle { tx, metrics },
-            worker: Some(worker),
+            handle: ServiceHandle { txs, metrics },
+            workers: handles,
         }
     }
 
@@ -59,15 +99,21 @@ impl Service {
         self.handle.clone()
     }
 
-    /// Shut down: signal the worker (handle clones may still exist — their
-    /// subsequent `eval` calls error out) and join it.
+    /// Shut down: signal every worker (handle clones may still exist —
+    /// their subsequent `eval` calls error out), let each drain its
+    /// queue, and join them all.
     pub fn shutdown(mut self) {
         self.stop();
     }
 
     fn stop(&mut self) {
-        if let Some(w) = self.worker.take() {
-            let _ = self.handle.tx.send(Msg::Shutdown);
+        if self.workers.is_empty() {
+            return;
+        }
+        for tx in &self.handle.txs {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -80,6 +126,19 @@ impl Drop for Service {
 }
 
 impl ServiceHandle {
+    /// Number of batcher workers behind this handle.
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// The shard a request with this activation routes to.
+    fn shard_of(&self, activation: Option<ActivationKind>) -> usize {
+        match activation {
+            Some(kind) => kind.index() % self.txs.len(),
+            None => 0,
+        }
+    }
+
     /// Evaluate points (blocking): returns `channels[k][i]`.
     pub fn eval(&self, points: &[f64]) -> Result<Vec<Vec<f64>>> {
         self.eval_with(points, None)
@@ -93,7 +152,7 @@ impl ServiceHandle {
         activation: Option<ActivationKind>,
     ) -> Result<Vec<Vec<f64>>> {
         let (tx, rx) = channel::<Response>();
-        self.tx
+        self.txs[self.shard_of(activation)]
             .send(Msg::Eval(Request {
                 points: points.to_vec(),
                 activation,
@@ -306,6 +365,71 @@ mod tests {
         for k in 0..3 {
             assert_eq!(channels[k].as_slice(), direct[k].data(), "channel {k}");
         }
+        service.shutdown();
+    }
+
+    /// A 4-worker pool: requests shard per activation, every shard
+    /// answers correctly, and the per-worker metrics show the spread.
+    #[test]
+    fn worker_pool_shards_by_activation() {
+        use crate::ntp::ActivationKind;
+        let mut rng = Prng::seeded(321);
+        let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+        let backend_mlp = mlp.clone();
+        let service = Service::start_pool(
+            move |_w| {
+                Ok(Box::new(NativeBackend::new(backend_mlp.clone(), 2, 16)) as Box<dyn EvalBackend>)
+            },
+            4,
+            BatcherConfig::default(),
+        );
+        let handle = service.handle();
+        assert_eq!(handle.workers(), 4);
+        let points = [0.2, -0.6];
+        for kind in ActivationKind::ALL {
+            let channels = handle.eval_with(&points, Some(kind)).unwrap();
+            let mut retagged = mlp.clone();
+            retagged.activation = kind;
+            let direct = NtpEngine::new(2)
+                .forward(&retagged, &Tensor::from_vec(points.to_vec(), &[2, 1]));
+            for k in 0..3 {
+                assert_eq!(channels[k].as_slice(), direct[k].data(), "{}", kind.name());
+            }
+        }
+        let m = handle.metrics();
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.workers.len(), 4);
+        // One activation per shard (4 kinds, 4 workers): every worker
+        // served exactly one request.
+        for (w, ws) in m.workers.iter().enumerate() {
+            assert_eq!(ws.requests, 1, "worker {w}");
+            assert!(ws.batches >= 1, "worker {w}");
+        }
+        service.shutdown();
+    }
+
+    /// Pool with fewer workers than activations: sharding wraps around
+    /// and default (no-override) traffic lands on shard 0.
+    #[test]
+    fn worker_pool_wraps_shards_and_routes_default_to_zero() {
+        use crate::ntp::ActivationKind;
+        let mut rng = Prng::seeded(322);
+        let mlp = Mlp::uniform(1, 6, 2, 1, &mut rng);
+        let backend_mlp = mlp.clone();
+        let service = Service::start_pool(
+            move |_w| {
+                Ok(Box::new(NativeBackend::new(backend_mlp.clone(), 2, 16)) as Box<dyn EvalBackend>)
+            },
+            2,
+            BatcherConfig::default(),
+        );
+        let handle = service.handle();
+        handle.eval(&[0.1]).unwrap(); // default → worker 0
+        handle.eval_with(&[0.2], Some(ActivationKind::Sine)).unwrap(); // index 1 → worker 1
+        handle.eval_with(&[0.3], Some(ActivationKind::Softplus)).unwrap(); // index 2 → worker 0
+        let m = handle.metrics();
+        assert_eq!(m.workers[0].requests, 2);
+        assert_eq!(m.workers[1].requests, 1);
         service.shutdown();
     }
 

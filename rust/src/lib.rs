@@ -22,7 +22,11 @@
 //!   Bell coefficient tables, pluggable activation derivative towers
 //!   (tanh, sine, softplus, GELU — each exact), and the n-TangentProp
 //!   forward pass (both a pure fast path and a tape-recorded path that
-//!   supports backprop-through-derivatives for training).
+//!   supports backprop-through-derivatives for training). The engine is
+//!   `Send + Sync` and carries a [`ntp::ParallelPolicy`]
+//!   (serial / fixed-threads / auto): the batch axis is embarrassingly
+//!   parallel, so `forward_n` chunks rows across scoped threads with
+//!   bitwise-identical output (see `rust/tests/parallel_determinism.rs`).
 //! - [`nn`] — dense MLPs (each carrying its [`ntp::ActivationKind`]) and
 //!   parameter (un)flattening.
 //! - [`opt`] — Adam, SGD and L-BFGS with a strong-Wolfe line search.
@@ -34,7 +38,12 @@
 //!   produced by the build-time JAX/Pallas layers and executes them from
 //!   Rust (Python is never on the hot path).
 //! - [`coordinator`] — a batching derivative-evaluation service on top of
-//!   the runtime (dynamic batcher, TCP JSON-lines protocol, metrics).
+//!   the runtime: a pool of batcher workers behind per-activation request
+//!   sharding (`Service::start_pool`), dynamic batching per shard, TCP
+//!   JSON-lines protocol, and global + per-worker metrics. Reproduce the
+//!   speedups with `cargo bench --bench ntp_kernels` (serial vs parallel
+//!   forward), `cargo bench --bench coordinator` (1/2/4-worker pool), or
+//!   `ntangent bench par` (writes `parallel_speedup.csv`).
 //! - [`bench`] — the harness that regenerates every figure of the paper.
 //! - [`util`] — substrates built from scratch for offline use: PRNG, JSON,
 //!   CLI parsing, stats, timers and a mini property-testing helper.

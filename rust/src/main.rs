@@ -7,10 +7,10 @@
 //!   serve                         run the batching derivative-evaluation service
 //!   info                          tables, op counts and environment info
 
-use ntangent::bench::{grid, memory, passes, profiles, training};
+use ntangent::bench::{grid, memory, parallel, passes, profiles, training};
 use ntangent::coordinator::{BatcherConfig, NativeBackend, PjrtBackend, Service};
 use ntangent::nn::Checkpoint;
-use ntangent::ntp::{hardy_ramanujan, partition_count, ActivationKind, NtpEngine};
+use ntangent::ntp::{hardy_ramanujan, partition_count, ActivationKind, NtpEngine, ParallelPolicy};
 use ntangent::pinn::{BurgersLossSpec, DerivEngine, TrainConfig};
 use ntangent::runtime::{ArtifactManifest, Runtime};
 use ntangent::tensor::Tensor;
@@ -53,7 +53,7 @@ fn top_usage() -> String {
     "ntangent — n-TangentProp reproduction (quasilinear higher-order derivatives)\n\
      \nUSAGE: ntangent <COMMAND> [OPTIONS]\n\
      \nCOMMANDS:\n\
-     \x20 bench <target>   fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|mem|all\n\
+     \x20 bench <target>   fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|mem|par|all\n\
      \x20 train            train a Burgers-profile PINN\n\
      \x20 eval             evaluate a checkpoint at points\n\
      \x20 validate         check a Burgers checkpoint against the analytic profile\n\
@@ -83,6 +83,8 @@ fn bench_specs() -> Vec<OptSpec> {
         OptSpec { name: "seed", help: "rng seed", takes_value: true, default: None },
         OptSpec { name: "profile", help: "Burgers profile k (fig6)", takes_value: true, default: None },
         OptSpec { name: "no-autodiff", help: "skip the autodiff leg (fig6)", takes_value: false, default: None },
+        OptSpec { name: "threads", help: "comma list of worker counts (par)", takes_value: true, default: None },
+        OptSpec { name: "n", help: "derivative order (par)", takes_value: true, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ]
 }
@@ -103,7 +105,7 @@ fn cmd_bench(raw: &[String]) -> Result<(), String> {
     std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
 
     let targets: Vec<String> = if target == "all" {
-        ["fig1", "fig4", "fig6", "fig8", "fig9", "fig7", "fig10", "mem"]
+        ["fig1", "fig4", "fig6", "fig8", "fig9", "fig7", "fig10", "mem", "par"]
             .iter()
             .map(|s| s.to_string())
             .collect()
@@ -115,6 +117,19 @@ fn cmd_bench(raw: &[String]) -> Result<(), String> {
         run_bench_target(&t, &args, &out_dir)?;
     }
     Ok(())
+}
+
+/// Parse a `--threads` value: `serial` | `auto` | a thread count.
+fn parse_policy(s: &str) -> Result<ParallelPolicy, String> {
+    match s {
+        "serial" => Ok(ParallelPolicy::Serial),
+        "auto" => Ok(ParallelPolicy::Auto),
+        other => match other.parse::<usize>() {
+            Ok(0) | Ok(1) => Ok(ParallelPolicy::Serial),
+            Ok(t) => Ok(ParallelPolicy::Fixed(t)),
+            Err(_) => Err(format!("bad --threads '{other}' (serial | auto | N)")),
+        },
+    }
 }
 
 /// Parse one activation name, with the registry listed in the error.
@@ -258,6 +273,31 @@ fn run_bench_target(target: &str, args: &Args, out_dir: &Path) -> Result<(), Str
             memory::save(&cells, &out_dir.join("mem_scaling.csv")).map_err(|e| e.to_string())?;
             println!("{}", memory::summarize(&cells));
         }
+        "par" | "parallel" => {
+            let mut cfg = parallel::ParallelBenchConfig::default();
+            if let Some(v) = args.get_usize_list("batches")? {
+                cfg.batches = v;
+            }
+            if let Some(v) = args.get_usize_list("threads")? {
+                cfg.threads = v;
+            }
+            if let Some(v) = args.get_usize("n")? {
+                cfg.n = v;
+            }
+            if let Some(v) = args.get_usize("trials")? {
+                cfg.trials = v;
+            }
+            if let Some(v) = args.get("activation") {
+                cfg.activation = parse_activation(v)?;
+            }
+            eprintln!(
+                "[bench] par: serial vs parallel forward, n={}, batches {:?}, threads {:?}",
+                cfg.n, cfg.batches, cfg.threads
+            );
+            let cells = parallel::run(&cfg, |msg| eprintln!("[bench] {msg}"));
+            parallel::save(&cells, out_dir).map_err(|e| e.to_string())?;
+            println!("{}", parallel::summarize(&cells));
+        }
         other => return Err(format!("unknown bench target '{other}'")),
     }
     Ok(())
@@ -325,6 +365,7 @@ fn cmd_eval(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "checkpoint", help: "checkpoint JSON", takes_value: true, default: Some("results/checkpoint.json") },
         OptSpec { name: "points", help: "comma list of x values", takes_value: true, default: Some("-1.0,-0.5,0.0,0.5,1.0") },
         OptSpec { name: "n", help: "derivative order", takes_value: true, default: Some("3") },
+        OptSpec { name: "threads", help: "batch parallelism: serial | auto | N", takes_value: true, default: Some("serial") },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &specs)?;
@@ -336,13 +377,14 @@ fn cmd_eval(raw: &[String]) -> Result<(), String> {
         .map_err(|e| e.to_string())?;
     let mlp = ck.to_mlp().map_err(|e| e.to_string())?;
     let n = args.get_usize("n")?.unwrap();
+    let policy = parse_policy(args.get("threads").unwrap())?;
     let points: Vec<f64> = args
         .get("points")
         .unwrap()
         .split(',')
         .map(|s| s.trim().parse().map_err(|_| format!("bad point '{s}'")))
         .collect::<Result<_, _>>()?;
-    let engine = NtpEngine::new(n);
+    let engine = NtpEngine::with_policy(n, policy);
     let x = Tensor::from_vec(points.clone(), &[points.len(), 1]);
     let channels = engine.forward(&mlp, &x);
     print!("{:>12}", "x");
@@ -367,6 +409,7 @@ fn cmd_validate(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "checkpoint", help: "checkpoint JSON (needs profile_k)", takes_value: true, default: Some("results/checkpoint.json") },
         OptSpec { name: "points", help: "grid size", takes_value: true, default: Some("201") },
         OptSpec { name: "x-max", help: "half-width of the validation domain", takes_value: true, default: Some("1.5") },
+        OptSpec { name: "threads", help: "batch parallelism: serial | auto | N", takes_value: true, default: Some("auto") },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &specs)?;
@@ -383,9 +426,10 @@ fn cmd_validate(raw: &[String]) -> Result<(), String> {
     let profile = ntangent::pinn::BurgersProfile::new(k);
     let n_pts = args.get_usize("points")?.unwrap();
     let x_max = args.get_f64("x-max")?.unwrap();
+    let policy = parse_policy(args.get("threads").unwrap())?;
     let order_max = k; // the orders the paper plots
     let xs = ntangent::pinn::grid_points(-x_max, x_max, n_pts);
-    let channels = NtpEngine::new(order_max).forward(&mlp, &xs);
+    let channels = ntangent::pinn::eval_channels(&mlp, &xs, order_max, policy);
     println!(
         "profile k={k}: λ* = {:.6}, checkpoint λ = {}",
         profile.lambda_smooth(),
@@ -422,6 +466,8 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "artifacts", help: "artifacts dir (pjrt backend)", takes_value: true, default: Some("artifacts") },
         OptSpec { name: "artifact", help: "artifact name (pjrt backend)", takes_value: true, default: Some("ntp_fwd_d3") },
         OptSpec { name: "batch-cap", help: "native backend batch cap", takes_value: true, default: Some("256") },
+        OptSpec { name: "workers", help: "batcher workers (activation shards)", takes_value: true, default: Some("1") },
+        OptSpec { name: "threads", help: "per-batch parallelism: serial | auto | N", takes_value: true, default: Some("serial") },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &specs)?;
@@ -433,6 +479,8 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         .map_err(|e| e.to_string())?;
     let n = args.get_usize("n")?.unwrap();
     let cap = args.get_usize("batch-cap")?.unwrap();
+    let workers = args.get_usize("workers")?.unwrap().max(1);
+    let policy = parse_policy(args.get("threads").unwrap())?;
     let backend_kind = args.get("backend").unwrap().to_string();
     let artifacts_dir = PathBuf::from(args.get("artifacts").unwrap());
     let artifact_name = args.get("artifact").unwrap().to_string();
@@ -441,22 +489,35 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
     let mlp = ck.to_mlp().map_err(|e| e.to_string())?;
 
     let service = match backend_kind.as_str() {
-        "native" => Service::start(
-            move || Ok(Box::new(NativeBackend::new(mlp, n, cap)) as _),
+        "native" => Service::start_pool(
+            move |_w| Ok(Box::new(NativeBackend::new_parallel(mlp.clone(), n, cap, policy)) as _),
+            workers,
             BatcherConfig::default(),
         ),
-        "pjrt" => Service::start(
-            move || {
-                let manifest = ArtifactManifest::load(&artifacts_dir)?;
-                let spec = manifest.get(&artifact_name)?.clone();
-                let rt = Runtime::cpu()?;
-                let exe = rt.load_hlo_text(&manifest.path_of(&spec))?;
-                let batch = spec.batch.unwrap_or(256);
-                let nd = spec.n_derivs.unwrap_or(n);
-                Ok(Box::new(PjrtBackend::new(exe, theta, batch, nd)) as _)
-            },
-            BatcherConfig::default(),
-        ),
+        "pjrt" => {
+            if workers > 1 {
+                return Err("pjrt backend serves a single compiled activation; \
+                            --workers > 1 needs the native backend"
+                    .into());
+            }
+            if policy != ParallelPolicy::Serial {
+                return Err("pjrt backend executes compiled fixed-shape batches; \
+                            --threads applies to the native backend"
+                    .into());
+            }
+            Service::start(
+                move || {
+                    let manifest = ArtifactManifest::load(&artifacts_dir)?;
+                    let spec = manifest.get(&artifact_name)?.clone();
+                    let rt = Runtime::cpu()?;
+                    let exe = rt.load_hlo_text(&manifest.path_of(&spec))?;
+                    let batch = spec.batch.unwrap_or(256);
+                    let nd = spec.n_derivs.unwrap_or(n);
+                    Ok(Box::new(PjrtBackend::new(exe, theta, batch, nd)) as _)
+                },
+                BatcherConfig::default(),
+            )
+        }
         other => return Err(format!("unknown backend '{other}'")),
     };
 
@@ -465,7 +526,8 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         std::net::TcpListener::bind(("127.0.0.1", port as u16)).map_err(|e| e.to_string())?;
     eprintln!(
         "serving {backend_kind} backend on 127.0.0.1:{port} \
-         (one JSON object per line; {{\"points\":[..]}} or {{\"cmd\":\"stats\"}})"
+         ({workers} worker(s), {policy:?} batch parallelism; \
+         one JSON object per line; {{\"points\":[..]}} or {{\"cmd\":\"stats\"}})"
     );
     ntangent::coordinator::service::serve_tcp(listener, service.handle())
         .map_err(|e| e.to_string())

@@ -10,26 +10,73 @@
 //! registered [`ActivationKind`] are precomputed at construction and the
 //! forward pass dispatches on [`Mlp::activation`], so one engine serves
 //! tanh, sine, softplus and GELU models alike.
+//!
+//! The batch dimension is embarrassingly parallel — every output row
+//! depends only on its input row, with no cross-row reductions — so
+//! [`NtpEngine::forward_n`] can split the batch into row chunks and run
+//! them on scoped worker threads under a [`ParallelPolicy`]. Chunked
+//! execution performs the exact same floating-point operations per row as
+//! the serial pass, so parallel output is *bitwise identical* to serial
+//! output (locked down by `rust/tests/parallel_determinism.rs`).
 
 use super::activation::{ActivationKind, SmoothActivation};
 use super::bell::FaaDiBruno;
 use crate::nn::Mlp;
 use crate::tensor::Tensor;
-use std::cell::RefCell;
+use std::sync::Mutex;
+
+/// How [`NtpEngine::forward_n`] distributes the batch across threads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ParallelPolicy {
+    /// One thread — the seed behaviour and the default.
+    #[default]
+    Serial,
+    /// Exactly this many worker threads (clamped to the batch size).
+    Fixed(usize),
+    /// Use `std::thread::available_parallelism()`, engaging only when
+    /// the batch is large enough to amortize thread-spawn cost.
+    Auto,
+}
+
+/// Batches smaller than this stay serial under [`ParallelPolicy::Auto`]
+/// (per-row work at moderate `n` is a few µs; spawning costs ~10 µs).
+const AUTO_MIN_ROWS_PER_WORKER: usize = 128;
+
+impl ParallelPolicy {
+    /// Worker count for a batch of `batch` rows (1 means "run serial").
+    pub fn workers_for(self, batch: usize) -> usize {
+        let cap = match self {
+            ParallelPolicy::Serial => 1,
+            ParallelPolicy::Fixed(t) => t.max(1),
+            ParallelPolicy::Auto => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(batch / AUTO_MIN_ROWS_PER_WORKER),
+        };
+        cap.max(1).min(batch.max(1))
+    }
+}
 
 /// Engine with precomputed Faà di Bruno + activation-tower tables for up
 /// to `n_max` derivatives.
+///
+/// The engine is `Send + Sync`: all tables are immutable after
+/// construction and the reusable workspaces live in a mutex-guarded pool
+/// (one scratch per concurrently active worker), so a single engine can
+/// be shared by reference across threads.
 pub struct NtpEngine {
     n_max: usize,
     fdb: FaaDiBruno,
     /// One tower evaluator per registered activation, indexed by
     /// [`ActivationKind::index`].
     acts: Vec<Box<dyn SmoothActivation>>,
-    /// §Perf: reusable per-engine buffers for the hot loop (channel
-    /// powers and combine outputs), so repeated forward calls allocate
-    /// only the tensors they return. `RefCell` because `forward` takes
-    /// `&self`; the engine stays `Send` (single-threaded use per engine).
-    scratch: RefCell<Scratch>,
+    /// How `forward_n` splits the batch across threads.
+    policy: ParallelPolicy,
+    /// §Perf: pool of reusable hot-loop buffers (channel powers and
+    /// combine outputs), so repeated forward calls allocate only the
+    /// tensors they return. Workers pop a scratch on entry and push it
+    /// back on exit; the pool grows to the peak concurrency ever used.
+    scratch_pool: Mutex<Vec<Scratch>>,
 }
 
 /// Reusable buffers for [`NtpEngine::forward_n`].
@@ -64,8 +111,14 @@ fn power_slice<'a>(y: &'a [Tensor], powers: &'a [Vec<Tensor>], j: usize, c: usiz
 
 impl NtpEngine {
     /// Build tables for up to `n_max` derivatives (all registered
-    /// activations).
+    /// activations), serial execution.
     pub fn new(n_max: usize) -> NtpEngine {
+        NtpEngine::with_policy(n_max, ParallelPolicy::Serial)
+    }
+
+    /// Build tables for up to `n_max` derivatives with an explicit
+    /// batch-parallelism policy.
+    pub fn with_policy(n_max: usize, policy: ParallelPolicy) -> NtpEngine {
         NtpEngine {
             n_max,
             fdb: FaaDiBruno::new(n_max),
@@ -73,12 +126,21 @@ impl NtpEngine {
                 .iter()
                 .map(|k| k.build_tower(n_max))
                 .collect(),
-            scratch: RefCell::new(Scratch::default()),
+            policy,
+            scratch_pool: Mutex::new(Vec::new()),
         }
     }
 
     pub fn n_max(&self) -> usize {
         self.n_max
+    }
+
+    pub fn policy(&self) -> ParallelPolicy {
+        self.policy
+    }
+
+    pub fn set_policy(&mut self, policy: ParallelPolicy) {
+        self.policy = policy;
     }
 
     pub fn tables(&self) -> &FaaDiBruno {
@@ -98,12 +160,94 @@ impl NtpEngine {
     /// Compute `[u, u', ..., u^(n)]` for `n <= n_max`.
     ///
     /// Single forward pass; all channels advance together (the paper's
-    /// headline algorithm).
+    /// headline algorithm). Under a non-serial [`ParallelPolicy`] the
+    /// batch is chunked row-wise across scoped worker threads; the result
+    /// is bitwise identical to the serial pass.
     pub fn forward_n(&self, mlp: &Mlp, x: &Tensor, n: usize) -> Vec<Tensor> {
         assert!(n <= self.n_max, "n={n} exceeds engine n_max={}", self.n_max);
         assert_eq!(x.rank(), 2, "x must be [B, 1]");
         assert_eq!(x.shape()[1], 1, "n-TangentProp propagates d/dx of a scalar input");
         assert_eq!(mlp.input_dim(), 1, "network input dim must be 1");
+        let workers = self.policy.workers_for(x.shape()[0]);
+        if workers <= 1 {
+            self.forward_chunk_pooled(mlp, x, n)
+        } else {
+            self.forward_parallel(mlp, x, n, workers)
+        }
+    }
+
+    /// Row-chunk the batch across `workers` scoped threads, each with its
+    /// own pooled scratch, and stitch the channel blocks back in order.
+    fn forward_parallel(&self, mlp: &Mlp, x: &Tensor, n: usize, workers: usize) -> Vec<Tensor> {
+        let batch = x.shape()[0];
+        let rows = batch.div_ceil(workers);
+        // `x` is [B, 1], so data indices are row indices.
+        let chunks: Vec<Tensor> = (0..workers)
+            .filter_map(|w| {
+                let lo = w * rows;
+                if lo >= batch {
+                    return None;
+                }
+                let hi = (lo + rows).min(batch);
+                Some(Tensor::from_vec(x.data()[lo..hi].to_vec(), &[hi - lo, 1]))
+            })
+            .collect();
+        // Chunk 0 runs inline on the calling thread (which would
+        // otherwise idle in join), so `Fixed(t)` spawns t-1 threads and
+        // uses exactly t cores.
+        let results: Vec<Vec<Tensor>> = std::thread::scope(|s| {
+            let handles: Vec<_> = chunks[1..]
+                .iter()
+                .map(|cx| s.spawn(move || self.forward_chunk_pooled(mlp, cx, n)))
+                .collect();
+            let mut results = Vec::with_capacity(chunks.len());
+            results.push(self.forward_chunk_pooled(mlp, &chunks[0], n));
+            for h in handles {
+                results.push(h.join().expect("ntp worker panicked"));
+            }
+            results
+        });
+        let od = mlp.output_dim();
+        (0..=n)
+            .map(|k| {
+                let mut out = Tensor::zeros(&[batch, od]);
+                let dst = out.data_mut();
+                let mut off = 0;
+                for r in &results {
+                    let src = r[k].data();
+                    dst[off..off + src.len()].copy_from_slice(src);
+                    off += src.len();
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// One chunk's forward with a scratch borrowed from the pool.
+    fn forward_chunk_pooled(&self, mlp: &Mlp, x: &Tensor, n: usize) -> Vec<Tensor> {
+        let mut scratch = self.take_scratch();
+        let out = self.forward_chunk(mlp, x, n, &mut scratch);
+        self.put_scratch(scratch);
+        out
+    }
+
+    fn take_scratch(&self) -> Scratch {
+        self.scratch_pool
+            .lock()
+            .expect("scratch pool poisoned")
+            .pop()
+            .unwrap_or_default()
+    }
+
+    fn put_scratch(&self, scratch: Scratch) {
+        self.scratch_pool
+            .lock()
+            .expect("scratch pool poisoned")
+            .push(scratch);
+    }
+
+    /// The serial pass over one (chunk of a) batch.
+    fn forward_chunk(&self, mlp: &Mlp, x: &Tensor, n: usize, scratch: &mut Scratch) -> Vec<Tensor> {
         let batch = x.shape()[0];
         let act = self.act_for(mlp.activation);
 
@@ -119,7 +263,6 @@ impl NtpEngine {
             y.push(Tensor::zeros(y[0].shape()));
         }
 
-        let mut scratch = self.scratch.borrow_mut();
         for layer in &mlp.layers[1..] {
             // Activation tower σ^(s)(y0), s = 0..=n, one transcendental
             // evaluation per element.
@@ -425,6 +568,81 @@ mod tests {
             let b = fresh.forward(&mlp, &x);
             for (ta, tb) in a.iter().zip(&b) {
                 assert_eq!(ta, tb, "scratch state leaked across calls");
+            }
+        }
+    }
+
+    /// The `Send`-but-not-`Sync` footgun is gone: the engine must be
+    /// shareable by reference across threads (compile-time assertion).
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_sync<T: Sync>() {}
+        fn assert_send<T: Send>() {}
+        assert_sync::<NtpEngine>();
+        assert_send::<NtpEngine>();
+        assert_sync::<ParallelPolicy>();
+    }
+
+    #[test]
+    fn policy_worker_counts_clamp_sensibly() {
+        assert_eq!(ParallelPolicy::Serial.workers_for(4096), 1);
+        assert_eq!(ParallelPolicy::Fixed(4).workers_for(4096), 4);
+        // Fixed counts clamp to the batch (and never hit zero).
+        assert_eq!(ParallelPolicy::Fixed(8).workers_for(3), 3);
+        assert_eq!(ParallelPolicy::Fixed(0).workers_for(16), 1);
+        assert_eq!(ParallelPolicy::Fixed(4).workers_for(0), 1);
+        // Auto stays serial on small batches regardless of core count.
+        assert_eq!(ParallelPolicy::Auto.workers_for(8), 1);
+        assert!(ParallelPolicy::Auto.workers_for(1 << 20) >= 1);
+    }
+
+    /// Chunked parallel execution is bitwise identical to serial — same
+    /// per-row float ops, only the scheduling differs. Includes batches
+    /// not divisible by the worker count (the off-by-one edge).
+    #[test]
+    fn parallel_forward_bitwise_matches_serial() {
+        let mut rng = Prng::seeded(55);
+        let mlp = Mlp::uniform(1, 10, 2, 1, &mut rng);
+        let serial = NtpEngine::new(4);
+        for batch in [1usize, 3, 5, 8, 17] {
+            let x = Tensor::rand_uniform(&[batch, 1], -1.2, 1.2, &mut rng);
+            let want = serial.forward(&mlp, &x);
+            for threads in [2usize, 3, 4, 8] {
+                let eng = NtpEngine::with_policy(4, ParallelPolicy::Fixed(threads));
+                let got = eng.forward(&mlp, &x);
+                for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(a, b, "B={batch} t={threads} channel {k}");
+                }
+            }
+        }
+    }
+
+    /// One engine shared by reference across threads: concurrent
+    /// `forward` calls must not corrupt each other's scratch.
+    #[test]
+    fn shared_engine_is_safe_under_concurrent_forward() {
+        let mut rng = Prng::seeded(56);
+        let mlp = Mlp::uniform(1, 12, 2, 1, &mut rng);
+        let engine = NtpEngine::with_policy(3, ParallelPolicy::Fixed(2));
+        let xs: Vec<Tensor> = (0..8)
+            .map(|i| Tensor::rand_uniform(&[5 + i, 1], -1.0, 1.0, &mut rng))
+            .collect();
+        let baseline: Vec<Vec<Tensor>> = xs
+            .iter()
+            .map(|x| NtpEngine::new(3).forward(&mlp, x))
+            .collect();
+        let results: Vec<Vec<Tensor>> = std::thread::scope(|s| {
+            let engine = &engine;
+            let mlp = &mlp;
+            let handles: Vec<_> = xs
+                .iter()
+                .map(|x| s.spawn(move || engine.forward(mlp, x)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (i, (want, got)) in baseline.iter().zip(&results).enumerate() {
+            for (k, (a, b)) in want.iter().zip(got).enumerate() {
+                assert_eq!(a, b, "caller {i} channel {k}");
             }
         }
     }

@@ -11,6 +11,10 @@
 //! The activation is a pluggable [`ActivationKind`] (tanh, sine,
 //! softplus, GELU) with an exact derivative tower each; every engine
 //! dispatches on the model's activation at runtime.
+//!
+//! The batch axis is embarrassingly parallel (the bound is per point), so
+//! [`NtpEngine`] carries a [`ParallelPolicy`] that chunks `forward_n`
+//! across scoped threads — bitwise identical to the serial pass.
 
 pub mod activation;
 pub mod bell;
@@ -22,5 +26,5 @@ pub use activation::{
     ActivationKind, Gelu, Sine, SmoothActivation, Softplus, SoftplusTower, Tanh, TanhTower,
 };
 pub use bell::{bell_number, FaaDiBruno, Term};
-pub use forward::NtpEngine;
+pub use forward::{NtpEngine, ParallelPolicy};
 pub use partitions::{hardy_ramanujan, partition_count, partitions, Partition};

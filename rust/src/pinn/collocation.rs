@@ -6,6 +6,8 @@
 //! taken from a small subset of collocation points centered at the
 //! origin"), and (c) fixed boundary/normalization points.
 
+use crate::nn::Mlp;
+use crate::ntp::{NtpEngine, ParallelPolicy};
 use crate::tensor::Tensor;
 use crate::util::prng::Prng;
 
@@ -23,6 +25,17 @@ pub fn random_points(lo: f64, hi: f64, n: usize, rng: &mut Prng) -> Tensor {
 /// the interval), shaped `[n, 1]` — the L* sampling near the origin.
 pub fn cluster_points(center: f64, radius: f64, n: usize, rng: &mut Prng) -> Tensor {
     Tensor::rand_uniform(&[n, 1], center - radius, center + radius, rng)
+}
+
+/// Evaluate the derivative channels `[u, u', ..., u^(n)]` of a trained
+/// network over a collocation tensor `xs: [B, 1]`, chunking the batch
+/// across threads per `policy`.
+///
+/// This is the post-training collocation hot path (validation grids,
+/// profile curves, residual audits over dense clouds): per-point work is
+/// independent, so the parallel result is bitwise identical to serial.
+pub fn eval_channels(mlp: &Mlp, xs: &Tensor, n: usize, policy: ParallelPolicy) -> Vec<Tensor> {
+    NtpEngine::with_policy(n, policy).forward(mlp, xs)
 }
 
 /// Latin-hypercube-style stratified 1-D sample: one uniform draw per
@@ -61,6 +74,24 @@ mod tests {
         let mut rng = Prng::seeded(6);
         let pts = cluster_points(0.0, 0.05, 100, &mut rng);
         assert!(pts.data().iter().all(|x| x.abs() <= 0.05));
+    }
+
+    #[test]
+    fn eval_channels_matches_direct_engine_bitwise() {
+        let mut rng = Prng::seeded(8);
+        let mlp = Mlp::uniform(1, 10, 2, 1, &mut rng);
+        let xs = grid_points(-1.5, 1.5, 41);
+        let direct = NtpEngine::new(3).forward(&mlp, &xs);
+        for policy in [
+            ParallelPolicy::Serial,
+            ParallelPolicy::Fixed(3),
+            ParallelPolicy::Auto,
+        ] {
+            let got = eval_channels(&mlp, &xs, 3, policy);
+            for (k, (a, b)) in direct.iter().zip(&got).enumerate() {
+                assert_eq!(a, b, "{policy:?} channel {k}");
+            }
+        }
     }
 
     #[test]

@@ -15,6 +15,8 @@ pub mod series;
 pub mod trainer;
 
 pub use burgers::BurgersProfile;
-pub use collocation::{cluster_points, grid_points, random_points, stratified_points};
+pub use collocation::{
+    cluster_points, eval_channels, grid_points, random_points, stratified_points,
+};
 pub use loss::{residual_derivative_nodes, BurgersLossSpec, DerivEngine, PinnObjective};
 pub use trainer::{train_burgers, EpochLog, TrainConfig, TrainResult};

@@ -1,13 +1,15 @@
 //! Coordinator integration: correctness under concurrency, batching
-//! behaviour, failure injection, and (when artifacts are present) the
-//! PJRT backend through the full service stack.
+//! behaviour, the sharded multi-worker pool under mixed-activation
+//! hammering, shutdown/drain semantics, failure injection, and (when
+//! artifacts are present) the PJRT backend through the full service
+//! stack.
 
 use ntangent::coordinator::service::TcpClient;
 use ntangent::coordinator::{
     BatcherConfig, EvalBackend, NativeBackend, PjrtBackend, Service,
 };
 use ntangent::nn::{params, Mlp};
-use ntangent::ntp::NtpEngine;
+use ntangent::ntp::{ActivationKind, NtpEngine, ParallelPolicy};
 use ntangent::runtime::{ArtifactManifest, Runtime};
 use ntangent::tensor::Tensor;
 use ntangent::util::prng::Prng;
@@ -68,6 +70,145 @@ fn heavy_concurrency_every_request_answered_once_correctly() {
     assert_eq!(m.errors, 0);
     assert_eq!(m.points, m.batched_points, "all points must flow through the batcher");
     service.shutdown();
+}
+
+/// Hammer a 4-worker sharded pool (parallel native backends) with
+/// mixed-activation requests from 16 client threads: every response must
+/// match a direct single-threaded `NtpEngine` evaluation of the
+/// retagged model, no errors, all shards busy.
+#[test]
+fn multi_worker_pool_survives_mixed_activation_hammering() {
+    let mut rng = Prng::seeded(0x52);
+    let mlp = Mlp::uniform(1, 12, 2, 1, &mut rng);
+    let backend_mlp = mlp.clone();
+    let service = Service::start_pool(
+        move |_w| {
+            Ok(Box::new(NativeBackend::new_parallel(
+                backend_mlp.clone(),
+                3,
+                32,
+                ParallelPolicy::Fixed(2),
+            )) as _)
+        },
+        4,
+        BatcherConfig {
+            max_wait: Duration::from_micros(500),
+        },
+    );
+    let engine = NtpEngine::new(3);
+    let n_threads = 16;
+    let reqs_per_thread = 20;
+    let mut threads = Vec::new();
+    for t in 0..n_threads {
+        let handle = service.handle();
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Prng::seeded(0x9000 + t as u64);
+            let mut results = Vec::new();
+            for _ in 0..reqs_per_thread {
+                let kind = ActivationKind::ALL[rng.below(4) as usize];
+                let len = 1 + rng.below(40) as usize; // some exceed the cap
+                let pts = rng.uniform_vec(len, -1.5, 1.5);
+                let channels = handle.eval_with(&pts, Some(kind)).expect("eval failed");
+                results.push((kind, pts, channels));
+            }
+            results
+        }));
+    }
+    let mut total = 0u64;
+    for th in threads {
+        for (kind, pts, channels) in th.join().unwrap() {
+            let mut retagged = mlp.clone();
+            retagged.activation = kind;
+            let x = Tensor::from_vec(pts.clone(), &[pts.len(), 1]);
+            let direct = engine.forward(&retagged, &x);
+            assert_eq!(channels.len(), 4);
+            for order in 0..=3 {
+                assert_eq!(channels[order].len(), pts.len());
+                for (a, b) in channels[order].iter().zip(direct[order].data()) {
+                    // The parallel backend is bitwise-equal to serial, so
+                    // the whole service stack must be exact.
+                    assert_eq!(a, b, "value corruption ({} order {order})", kind.name());
+                }
+            }
+            total += 1;
+        }
+    }
+    let m = service.handle().metrics();
+    assert_eq!(m.requests, total);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.points, m.batched_points, "all points must flow through a batcher");
+    assert_eq!(m.workers.len(), 4);
+    // One activation per shard; 16 threads × 20 random draws make every
+    // shard's traffic overwhelmingly likely (P[miss] < 1e-35 per shard).
+    for (w, ws) in m.workers.iter().enumerate() {
+        assert!(ws.requests > 0, "worker {w} never served");
+    }
+    let batch_sum: u64 = m.workers.iter().map(|w| w.batches).sum();
+    assert_eq!(batch_sum, m.batches, "per-worker batches must sum to the total");
+    service.shutdown();
+}
+
+/// Shutdown with traffic still in flight: clients racing `shutdown()`
+/// either get a correct answer or a clean "shut down" error — never a
+/// hang, never a corrupt value — and the workers all join (drain
+/// semantics; the deterministic drain ordering is covered by the batcher
+/// unit test `shutdown_drains_already_queued_requests`).
+#[test]
+fn shutdown_under_load_drains_without_deadlock_or_corruption() {
+    let mut rng = Prng::seeded(0x53);
+    let mlp = Mlp::uniform(1, 10, 2, 1, &mut rng);
+    for round in 0..3u64 {
+        let backend_mlp = mlp.clone();
+        let service = Service::start_pool(
+            move |_w| Ok(Box::new(NativeBackend::new(backend_mlp.clone(), 2, 16)) as _),
+            2,
+            BatcherConfig::default(),
+        );
+        let mut clients = Vec::new();
+        for t in 0..8u64 {
+            let handle = service.handle();
+            let mlp = mlp.clone();
+            clients.push(std::thread::spawn(move || {
+                let engine = NtpEngine::new(2);
+                let mut rng = Prng::seeded(round * 100 + t);
+                let mut answered = 0usize;
+                let mut rejected = 0usize;
+                for _ in 0..50 {
+                    let kind = ActivationKind::ALL[rng.below(4) as usize];
+                    let pt = rng.uniform_vec(1, -1.0, 1.0);
+                    match handle.eval_with(&pt, Some(kind)) {
+                        Ok(channels) => {
+                            let mut retagged = mlp.clone();
+                            retagged.activation = kind;
+                            let direct = engine
+                                .forward(&retagged, &Tensor::from_vec(pt.clone(), &[1, 1]));
+                            for order in 0..=2 {
+                                assert_eq!(
+                                    channels[order][0],
+                                    direct[order].data()[0],
+                                    "corrupt value during shutdown race"
+                                );
+                            }
+                            answered += 1;
+                        }
+                        Err(_) => rejected += 1, // clean rejection is fine
+                    }
+                }
+                (answered, rejected)
+            }));
+        }
+        // Guarantee the pool served at least one request this round, let
+        // the clients race a little, then pull the plug mid-flight.
+        assert!(service.handle().eval(&[0.1]).is_ok());
+        std::thread::sleep(Duration::from_millis(2));
+        service.shutdown(); // joins all workers; must not deadlock
+        let mut completed = 0;
+        for c in clients {
+            let (a, r) = c.join().unwrap();
+            completed += a + r;
+        }
+        assert_eq!(completed, 8 * 50, "round {round}: a client hung");
+    }
 }
 
 #[test]

@@ -1,0 +1,122 @@
+//! Determinism/exactness harness for the parallel execution subsystem:
+//! chunked multi-threaded `forward_n` must be *bitwise identical* to the
+//! serial pass — same per-row float ops, only the scheduling differs —
+//! across every registered activation, awkward batch/thread combinations
+//! (B not divisible by the chunk count), and repeated mixed-mode calls on
+//! one shared engine.
+
+use ntangent::nn::Mlp;
+use ntangent::ntp::{ActivationKind, NtpEngine, ParallelPolicy};
+use ntangent::tensor::Tensor;
+use ntangent::util::prng::Prng;
+
+fn assert_bitwise_eq(want: &[Tensor], got: &[Tensor], ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: channel count");
+    for (k, (a, b)) in want.iter().zip(got).enumerate() {
+        // Tensor equality is exact (shape + every f64 bit pattern short
+        // of NaN, which the smooth towers never produce).
+        assert_eq!(a, b, "{ctx}: channel {k} not bitwise identical");
+    }
+}
+
+/// 2/4/8 worker threads vs serial, for random batches across all
+/// activations, including batches not divisible by the chunk count.
+#[test]
+fn parallel_forward_is_bitwise_identical_to_serial() {
+    for kind in ActivationKind::ALL {
+        let mut rng = Prng::seeded(0xD00 + kind.index() as u64);
+        let mlp = Mlp::uniform_with(1, 16, 3, 1, kind, &mut rng);
+        let serial = NtpEngine::new(5);
+        for &batch in &[1usize, 2, 3, 5, 7, 8, 9, 17, 33, 64, 101] {
+            let x = Tensor::rand_uniform(&[batch, 1], -1.5, 1.5, &mut rng);
+            let want = serial.forward(&mlp, &x);
+            for &threads in &[2usize, 4, 8] {
+                let engine = NtpEngine::with_policy(5, ParallelPolicy::Fixed(threads));
+                let got = engine.forward(&mlp, &x);
+                assert_bitwise_eq(
+                    &want,
+                    &got,
+                    &format!("{} B={batch} t={threads}", kind.name()),
+                );
+            }
+        }
+    }
+}
+
+/// The Auto policy (whatever worker count it picks on this host, small
+/// and large batches) is also bitwise-stable.
+#[test]
+fn auto_policy_is_bitwise_identical_to_serial() {
+    let mut rng = Prng::seeded(0xA07);
+    for kind in ActivationKind::ALL {
+        let mlp = Mlp::uniform_with(1, 12, 2, 1, kind, &mut rng);
+        let serial = NtpEngine::new(4);
+        let auto = NtpEngine::with_policy(4, ParallelPolicy::Auto);
+        for &batch in &[3usize, 64, 700] {
+            let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, &mut rng);
+            assert_bitwise_eq(
+                &serial.forward(&mlp, &x),
+                &auto.forward(&mlp, &x),
+                &format!("{} auto B={batch}", kind.name()),
+            );
+        }
+    }
+}
+
+/// Truncated orders under parallelism: `forward_n` at n < n_max chunks
+/// the same way and stays bitwise equal to serial.
+#[test]
+fn truncated_orders_stay_bitwise_identical() {
+    let mut rng = Prng::seeded(0x77AB);
+    let mlp = Mlp::uniform(1, 10, 2, 1, &mut rng);
+    let serial = NtpEngine::new(6);
+    let parallel = NtpEngine::with_policy(6, ParallelPolicy::Fixed(3));
+    let x = Tensor::rand_uniform(&[25, 1], -1.2, 1.2, &mut rng);
+    for n in 0..=6 {
+        assert_bitwise_eq(
+            &serial.forward_n(&mlp, &x, n),
+            &parallel.forward_n(&mlp, &x, n),
+            &format!("n={n}"),
+        );
+    }
+}
+
+/// One engine, interleaved serial-sized and parallel-sized calls with
+/// changing shapes: the scratch pool must not leak state between calls
+/// (every call re-checked against a fresh serial engine).
+#[test]
+fn interleaved_shapes_do_not_leak_scratch_state() {
+    let engine = NtpEngine::with_policy(4, ParallelPolicy::Fixed(4));
+    for (seed, width, batch) in [
+        (1u64, 6usize, 2usize),
+        (2, 12, 61),
+        (3, 6, 2),
+        (4, 8, 33),
+        (5, 12, 4),
+    ] {
+        let mut rng = Prng::seeded(seed);
+        let mlp = Mlp::uniform(1, width, 2, 1, &mut rng);
+        let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, &mut rng);
+        let got = engine.forward(&mlp, &x);
+        let want = NtpEngine::new(4).forward(&mlp, &x);
+        assert_bitwise_eq(&want, &got, &format!("seed={seed} B={batch}"));
+    }
+}
+
+/// Thread counts exceeding the batch (more workers than rows) clamp
+/// instead of panicking, and still produce identical output.
+#[test]
+fn more_threads_than_rows_is_safe_and_identical() {
+    let mut rng = Prng::seeded(0xBEEF);
+    let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+    let serial = NtpEngine::new(3);
+    let parallel = NtpEngine::with_policy(3, ParallelPolicy::Fixed(64));
+    for batch in [1usize, 2, 5] {
+        let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, &mut rng);
+        assert_bitwise_eq(
+            &serial.forward(&mlp, &x),
+            &parallel.forward(&mlp, &x),
+            &format!("B={batch} t=64"),
+        );
+    }
+}
