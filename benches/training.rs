@@ -1,0 +1,93 @@
+//! Bench: serial vs data-parallel PINN training — the sharded objective's
+//! gradient accumulation under different worker policies, plus a short
+//! Adam phase end-to-end. Every parallel gradient is checked bitwise
+//! against serial before timing.
+//!
+//!     cargo bench --bench training
+
+use ntangent::nn::Mlp;
+use ntangent::ntp::ParallelPolicy;
+use ntangent::opt::{Adam, Objective};
+use ntangent::pinn::{BurgersLossSpec, DerivEngine, ParallelObjective};
+use ntangent::util::prng::Prng;
+use ntangent::util::stats::Summary;
+use ntangent::util::timer::time_trials;
+
+fn bench(name: &str, warmup: usize, trials: usize, mut f: impl FnMut()) -> f64 {
+    let ts = time_trials(warmup, trials, || f());
+    let s = Summary::of(&ts);
+    println!(
+        "{name:<52} mean {:>9.2} ms   p95 {:>9.2} ms",
+        s.mean * 1e3,
+        s.p95 * 1e3
+    );
+    s.mean
+}
+
+fn main() {
+    let mut spec = BurgersLossSpec::for_profile(1);
+    spec.n_res = 512;
+    spec.n_org = 64;
+    let chunk = 32;
+    println!(
+        "# pinn training, sharded objective (3x24 net, {} res + {} org pts, chunk {chunk})",
+        spec.n_res, spec.n_org
+    );
+
+    let mut rng = Prng::seeded(17);
+    let mlp = Mlp::uniform(1, 24, 3, 1, &mut rng);
+    let mut obj = ParallelObjective::build(
+        spec,
+        &mlp,
+        DerivEngine::Ntp,
+        ParallelPolicy::Serial,
+        chunk,
+        &mut rng,
+    );
+    let theta = obj.theta_init(&mlp);
+    println!(
+        "# {} shards, {} tape nodes total",
+        obj.n_shards(),
+        obj.graph_len()
+    );
+
+    // --- One gradient accumulation, serial vs Fixed(t) -----------------
+    let (_, want) = obj.value_grad(&theta);
+    let serial = bench("value+grad serial", 2, 10, || {
+        std::hint::black_box(obj.value_grad(&theta));
+    });
+    for threads in [2usize, 4, 8] {
+        obj.set_policy(ParallelPolicy::Fixed(threads));
+        let (_, got) = obj.value_grad(&theta);
+        assert_eq!(want, got, "t={threads}: gradient not bitwise serial-equal");
+        let par = bench(&format!("value+grad Fixed({threads})"), 2, 10, || {
+            std::hint::black_box(obj.value_grad(&theta));
+        });
+        println!("{:<52} speedup {:.2}x", format!("  -> vs serial (t={threads})"), serial / par);
+    }
+
+    // --- Forward-only (the L-BFGS line-search cost) ---------------------
+    obj.set_policy(ParallelPolicy::Serial);
+    let fwd_serial = bench("value-only serial", 2, 10, || {
+        std::hint::black_box(obj.value(&theta));
+    });
+    obj.set_policy(ParallelPolicy::Fixed(4));
+    let fwd_par = bench("value-only Fixed(4)", 2, 10, || {
+        std::hint::black_box(obj.value(&theta));
+    });
+    println!("{:<52} speedup {:.2}x", "  -> vs serial", fwd_serial / fwd_par);
+
+    // --- Short Adam phase end-to-end ------------------------------------
+    for policy in [ParallelPolicy::Serial, ParallelPolicy::Fixed(4)] {
+        obj.set_policy(policy);
+        bench(&format!("20 Adam epochs {policy:?}"), 0, 3, || {
+            let mut adam = Adam::new(obj.dim(), 1e-3).with_policy(policy);
+            let mut th = theta.clone();
+            for _ in 0..20 {
+                adam.step(&mut obj, &mut th);
+            }
+            std::hint::black_box(&th);
+        });
+    }
+    println!("\n(gradients checked bitwise serial==parallel before timing)");
+}

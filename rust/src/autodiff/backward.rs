@@ -5,6 +5,11 @@
 //! themselves differentiable — the mechanism PyTorch exposes as
 //! `create_graph=True` and the reason repeated differentiation grows the
 //! graph (and runtime) exponentially in the derivative order.
+//!
+//! Once appended, gradient nodes are ordinary tape nodes: the finished
+//! tape stays `Send + Sync`, so the data-parallel trainer builds one
+//! `backward`-augmented tape per collocation shard at construction time
+//! and evaluates them concurrently ever after.
 
 use super::{Graph, NodeId, Op};
 

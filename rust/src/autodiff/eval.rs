@@ -4,6 +4,12 @@
 //! several `backward` passes the graph contains many nodes that a given
 //! query does not need, and evaluating them would unfairly penalize the
 //! autodiff baseline in the benchmarks.
+//!
+//! Evaluation is `&self` and allocates all state locally, so one graph
+//! can be evaluated from many threads at once and the same `(inputs,
+//! targets)` always produce the same bits — the property the
+//! data-parallel trainer (one tape per collocation shard, evaluated on a
+//! worker pool) is built on.
 
 use super::{Graph, NodeId, Op};
 use crate::tensor::Tensor;
@@ -14,12 +20,14 @@ pub struct Values {
 }
 
 impl Values {
+    /// The computed value of node `id` (panics if it was unreachable).
     pub fn get(&self, id: NodeId) -> &Tensor {
         self.slots[id]
             .as_ref()
             .expect("node was not computed; was it in the reachable set?")
     }
 
+    /// Move node `id`'s value out of the store.
     pub fn take(&mut self, id: NodeId) -> Tensor {
         self.slots[id].take().expect("node was not computed")
     }
@@ -145,6 +153,39 @@ mod tests {
         let mut g = Graph::new();
         let x = g.input(&[2, 2]);
         g.eval(&[Tensor::ones(&[3])], &[x]);
+    }
+
+    /// The tape and its value store are plain data: shareable across
+    /// threads (compile-time assertion) with concurrent evaluations of
+    /// one graph agreeing bitwise with the serial result.
+    #[test]
+    fn graph_evaluates_concurrently_and_identically() {
+        fn assert_sync<T: Sync>() {}
+        fn assert_send<T: Send>() {}
+        assert_sync::<Graph>();
+        assert_send::<Graph>();
+        assert_send::<Values>();
+
+        let mut g = Graph::new();
+        let x = g.input(&[4, 1]);
+        let t = g.tanh(x);
+        let m = g.mul(t, x);
+        let y = g.sum_all(m);
+        let inputs: Vec<Vec<Tensor>> = (0..8)
+            .map(|i| vec![Tensor::linspace(-1.0, 1.0 + i as f64 * 0.1, 4).reshape(&[4, 1])])
+            .collect();
+        let want: Vec<f64> = inputs.iter().map(|inp| g.eval(inp, &[y]).get(y).item()).collect();
+        let got: Vec<f64> = std::thread::scope(|s| {
+            let g = &g;
+            let handles: Vec<_> = inputs
+                .iter()
+                .map(|inp| s.spawn(move || g.eval(inp, &[y]).get(y).item()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -32,12 +32,19 @@ pub enum Op {
     Input(usize),
     /// Embedded constant (not differentiated).
     Const(Tensor),
+    /// Elementwise `a + b`.
     Add(NodeId, NodeId),
+    /// Elementwise `a - b`.
     Sub(NodeId, NodeId),
+    /// Elementwise `a * b`.
     Mul(NodeId, NodeId),
+    /// Elementwise `a / b`.
     Div(NodeId, NodeId),
+    /// Elementwise `-a`.
     Neg(NodeId),
+    /// Elementwise `c · a`.
     Scale(NodeId, f64),
+    /// Elementwise `a + c`.
     AddScalar(NodeId, f64),
     /// `A @ B`.
     MatMul(NodeId, NodeId),
@@ -45,6 +52,7 @@ pub enum Op {
     MatMulTN(NodeId, NodeId),
     /// `A @ B^T` (fused).
     MatMulNT(NodeId, NodeId),
+    /// 2-D transpose.
     Transpose(NodeId),
     /// Elementwise activation derivative `σ^{(k)}(a)` for a registered
     /// [`ActivationKind`] (`k = 0` is the activation itself). Its VJP is
@@ -69,11 +77,18 @@ pub enum Op {
 /// A node: operation plus statically-known result shape.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// The operation producing this node's value.
     pub op: Op,
+    /// Statically-known result shape.
     pub shape: Vec<usize>,
 }
 
 /// An append-only computation graph ("tape").
+///
+/// The graph holds no interior mutability — building requires `&mut`,
+/// while evaluation ([`Graph::eval`]) is `&self` and pure — so a built
+/// graph is `Send + Sync` and can be evaluated concurrently from many
+/// threads (the property the data-parallel training path leans on).
 #[derive(Default, Debug)]
 pub struct Graph {
     nodes: Vec<Node>,
@@ -81,6 +96,7 @@ pub struct Graph {
 }
 
 impl Graph {
+    /// An empty graph.
     pub fn new() -> Graph {
         Graph::default()
     }
@@ -91,18 +107,22 @@ impl Graph {
         self.nodes.len()
     }
 
+    /// `true` when no nodes have been recorded.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
 
+    /// The node behind `id`.
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id]
     }
 
+    /// Result shape of node `id`.
     pub fn shape(&self, id: NodeId) -> &[usize] {
         &self.nodes[id].shape
     }
 
+    /// Number of declared input slots.
     pub fn n_inputs(&self) -> usize {
         self.n_inputs
     }
@@ -121,11 +141,13 @@ impl Graph {
         self.push(Op::Input(slot), shape.to_vec())
     }
 
+    /// Embed `t` as a constant node.
     pub fn constant(&mut self, t: Tensor) -> NodeId {
         let shape = t.shape().to_vec();
         self.push(Op::Const(t), shape)
     }
 
+    /// A zero constant shaped like node `id`.
     pub fn zeros_like(&mut self, id: NodeId) -> NodeId {
         let shape = self.shape(id).to_vec();
         self.constant(Tensor::zeros(&shape))
@@ -143,37 +165,45 @@ impl Graph {
         self.push(op(a, b), shape)
     }
 
+    /// Elementwise `a + b` (same shape).
     pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
         self.binary_same_shape(Op::Add, a, b)
     }
 
+    /// Elementwise `a - b` (same shape).
     pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
         self.binary_same_shape(Op::Sub, a, b)
     }
 
+    /// Elementwise `a * b` (same shape).
     pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
         self.binary_same_shape(Op::Mul, a, b)
     }
 
+    /// Elementwise `a / b` (same shape).
     pub fn div(&mut self, a: NodeId, b: NodeId) -> NodeId {
         self.binary_same_shape(Op::Div, a, b)
     }
 
+    /// Elementwise `-a`.
     pub fn neg(&mut self, a: NodeId) -> NodeId {
         let shape = self.shape(a).to_vec();
         self.push(Op::Neg(a), shape)
     }
 
+    /// Elementwise `c · a`.
     pub fn scale(&mut self, a: NodeId, c: f64) -> NodeId {
         let shape = self.shape(a).to_vec();
         self.push(Op::Scale(a, c), shape)
     }
 
+    /// Elementwise `a + c`.
     pub fn add_scalar(&mut self, a: NodeId, c: f64) -> NodeId {
         let shape = self.shape(a).to_vec();
         self.push(Op::AddScalar(a, c), shape)
     }
 
+    /// `A @ B` (`[m,k] x [k,n] -> [m,n]`).
     pub fn matmul(&mut self, a: NodeId, b: NodeId) -> NodeId {
         let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
         assert_eq!(sa.len(), 2);
@@ -182,18 +212,21 @@ impl Graph {
         self.push(Op::MatMul(a, b), vec![sa[0], sb[1]])
     }
 
+    /// `A^T @ B` without materializing the transpose.
     pub fn matmul_tn(&mut self, a: NodeId, b: NodeId) -> NodeId {
         let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
         assert_eq!(sa[0], sb[0], "matmul_tn inner dims");
         self.push(Op::MatMulTN(a, b), vec![sa[1], sb[1]])
     }
 
+    /// `A @ B^T` without materializing the transpose.
     pub fn matmul_nt(&mut self, a: NodeId, b: NodeId) -> NodeId {
         let (sa, sb) = (self.shape(a).to_vec(), self.shape(b).to_vec());
         assert_eq!(sa[1], sb[1], "matmul_nt inner dims");
         self.push(Op::MatMulNT(a, b), vec![sa[0], sb[0]])
     }
 
+    /// 2-D transpose.
     pub fn transpose(&mut self, a: NodeId) -> NodeId {
         let s = self.shape(a).to_vec();
         assert_eq!(s.len(), 2);
@@ -211,11 +244,13 @@ impl Graph {
         self.act(a, ActivationKind::Tanh, 0)
     }
 
+    /// Elementwise integer power `a^k`.
     pub fn powi(&mut self, a: NodeId, k: i32) -> NodeId {
         let shape = self.shape(a).to_vec();
         self.push(Op::PowI(a, k), shape)
     }
 
+    /// `[B,F] + [F]` row-broadcast bias add.
     pub fn add_bias(&mut self, x: NodeId, bias: NodeId) -> NodeId {
         let (sx, sb) = (self.shape(x).to_vec(), self.shape(bias).to_vec());
         assert_eq!(sx.len(), 2);
@@ -224,22 +259,26 @@ impl Graph {
         self.push(Op::AddBias(x, bias), sx)
     }
 
+    /// Total sum as `[1]`.
     pub fn sum_all(&mut self, a: NodeId) -> NodeId {
         self.push(Op::SumAll(a), vec![1])
     }
 
+    /// Column sums `[B,F] -> [F]`.
     pub fn sum_axis0(&mut self, a: NodeId) -> NodeId {
         let s = self.shape(a).to_vec();
         assert_eq!(s.len(), 2);
         self.push(Op::SumAxis0(a), vec![s[1]])
     }
 
+    /// Replicate `[F] -> [B,F]`.
     pub fn broadcast_rows(&mut self, a: NodeId, b: usize) -> NodeId {
         let s = self.shape(a).to_vec();
         assert_eq!(s.len(), 1);
         self.push(Op::BroadcastRows(a, b), vec![b, s[0]])
     }
 
+    /// Fill `shape` with a `[1]` scalar.
     pub fn broadcast_scalar(&mut self, a: NodeId, shape: &[usize]) -> NodeId {
         assert_eq!(self.shape(a), &[1], "broadcast_scalar expects [1]");
         self.push(Op::BroadcastScalar(a, shape.to_vec()), shape.to_vec())

@@ -11,17 +11,26 @@ use crate::util::csv::Table;
 use crate::util::prng::Prng;
 use std::path::Path;
 
+/// Architecture/batch grid for the fig 4/5 ratio sweeps.
 #[derive(Clone, Debug)]
 pub struct GridConfig {
+    /// Hidden widths to sweep.
     pub widths: Vec<usize>,
+    /// Hidden depths to sweep.
     pub depths: Vec<usize>,
+    /// Batch sizes to sweep.
     pub batches: Vec<usize>,
     /// Hidden activations to sweep (default: tanh only, the paper grid).
     pub activations: Vec<ActivationKind>,
+    /// Max derivative order.
     pub n_max: usize,
+    /// Untimed warmup trials per cell.
     pub warmup: usize,
+    /// Timed trials per cell.
     pub trials: usize,
+    /// Once an engine's measured total exceeds this, project the rest.
     pub cap_seconds: f64,
+    /// PRNG seed.
     pub seed: u64,
 }
 

@@ -12,13 +12,17 @@ use crate::tensor::{alloc, Tensor};
 use crate::util::csv::Table;
 use std::path::Path;
 
+/// Configuration of the memory-scaling sweep.
 #[derive(Clone, Debug)]
 pub struct MemoryConfig {
+    /// Max derivative order.
     pub n_max: usize,
     /// Skip autodiff cells whose predicted allocation exceeds this many
     /// bytes (the "OOM" point on this host).
     pub byte_cap: u64,
+    /// PRNG seed.
     pub seed: u64,
+    /// Batch size of the measured forward.
     pub batch: usize,
 }
 
@@ -33,12 +37,18 @@ impl Default for MemoryConfig {
     }
 }
 
+/// One engine × order memory measurement.
 #[derive(Clone, Debug)]
 pub struct MemoryCell {
+    /// Engine measured.
     pub engine: Engine,
+    /// Derivative order.
     pub n: usize,
+    /// Graph nodes built (tape-size metric).
     pub graph_nodes: usize,
+    /// Peak accounted allocation in bytes.
     pub bytes: u64,
+    /// False when the cell was projected past the byte cap.
     pub measured: bool,
 }
 
@@ -70,6 +80,7 @@ fn measure_cell(engine: Engine, mlp: &Mlp, x: &Tensor, n: usize) -> MemoryCell {
     }
 }
 
+/// Run the memory sweep for both engines.
 pub fn run(cfg: &MemoryConfig) -> Vec<MemoryCell> {
     let (mlp, _) = standard_mlp(cfg.seed);
     let mut rng = crate::util::prng::Prng::seeded(cfg.seed + 1);
@@ -103,6 +114,7 @@ pub fn run(cfg: &MemoryConfig) -> Vec<MemoryCell> {
     out
 }
 
+/// Write `mem_scaling.csv`.
 pub fn save(cells: &[MemoryCell], path: &Path) -> std::io::Result<()> {
     let mut t = Table::new(&["n", "engine", "graph_nodes", "bytes", "measured"]);
     for c in cells {
@@ -117,6 +129,7 @@ pub fn save(cells: &[MemoryCell], path: &Path) -> std::io::Result<()> {
     t.save(path)
 }
 
+/// Human-readable summary for the CLI.
 pub fn summarize(cells: &[MemoryCell]) -> String {
     let mut t = Table::new(&["n", "ntp bytes", "autodiff bytes", "ratio", "note"]);
     let n_max = cells.iter().map(|c| c.n).max().unwrap_or(0);

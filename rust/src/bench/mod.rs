@@ -11,6 +11,7 @@
 //! | Figs 7-10 (profiles 1-4)   | [`profiles::run`] | `results/fig{7..10}_*.csv` |
 //! | §IV-B memory note          | [`memory::run`]   | `results/mem_scaling.csv` |
 //! | serial vs parallel forward | [`parallel::run`] | `results/parallel_speedup.csv` |
+//! | serial vs parallel training | [`train_par::run`] | `results/training_speedup.csv` |
 //!
 //! Absolute times differ from the paper (single CPU host vs A6000 GPU);
 //! the *shapes* — exponential vs quasilinear in `n`, crossover at small
@@ -22,6 +23,7 @@ pub mod memory;
 pub mod parallel;
 pub mod passes;
 pub mod profiles;
+pub mod train_par;
 pub mod training;
 
 use crate::autodiff::{higher, Graph};
@@ -34,11 +36,14 @@ use std::time::Instant;
 /// Forward / backward wall-clock seconds for one configuration.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PassTimes {
+    /// Forward seconds.
     pub fwd: f64,
+    /// Backward seconds.
     pub bwd: f64,
 }
 
 impl PassTimes {
+    /// Forward + backward seconds.
     pub fn total(&self) -> f64 {
         self.fwd + self.bwd
     }
@@ -47,11 +52,14 @@ impl PassTimes {
 /// Which engine a measurement used.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
+    /// n-TangentProp (the paper's method).
     Ntp,
+    /// Repeated reverse-mode autodiff (the baseline).
     Autodiff,
 }
 
 impl Engine {
+    /// Name used in CSV output.
     pub fn name(&self) -> &'static str {
         match self {
             Engine::Ntp => "ntangentprop",
@@ -63,13 +71,19 @@ impl Engine {
 /// One timed measurement cell.
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// Engine measured.
     pub engine: Engine,
+    /// Derivative order.
     pub n: usize,
+    /// Hidden width.
     pub width: usize,
+    /// Hidden depth.
     pub depth: usize,
+    /// Batch size.
     pub batch: usize,
     /// Hidden activation of the measured network.
     pub activation: ActivationKind,
+    /// The measured (or projected) pass times.
     pub times: PassTimes,
     /// False when the value was *projected* from an exponential fit
     /// because the measured point exceeded the time cap (the paper does

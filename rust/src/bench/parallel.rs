@@ -15,10 +15,14 @@ use crate::util::prng::Prng;
 use crate::util::timer::time_trials;
 use std::path::Path;
 
+/// Configuration of the forward-speedup bench.
 #[derive(Clone, Debug)]
 pub struct ParallelBenchConfig {
+    /// Hidden width.
     pub width: usize,
+    /// Hidden depth.
     pub depth: usize,
+    /// Hidden activation.
     pub activation: ActivationKind,
     /// Derivative order of the timed forward.
     pub n: usize,
@@ -26,8 +30,11 @@ pub struct ParallelBenchConfig {
     pub batches: Vec<usize>,
     /// Worker-thread counts to compare against serial.
     pub threads: Vec<usize>,
+    /// Untimed warmup trials per cell.
     pub warmup: usize,
+    /// Timed trials per cell.
     pub trials: usize,
+    /// PRNG seed.
     pub seed: u64,
 }
 
@@ -50,14 +57,20 @@ impl Default for ParallelBenchConfig {
 /// One measured (batch, threads) cell.
 #[derive(Clone, Copy, Debug)]
 pub struct ParallelCell {
+    /// Batch size.
     pub batch: usize,
+    /// Worker threads of the parallel leg.
     pub threads: usize,
+    /// Derivative order.
     pub n: usize,
+    /// Mean serial seconds per forward.
     pub serial_s: f64,
+    /// Mean parallel seconds per forward.
     pub parallel_s: f64,
 }
 
 impl ParallelCell {
+    /// Serial time over parallel time.
     pub fn speedup(&self) -> f64 {
         self.serial_s / self.parallel_s
     }
@@ -77,6 +90,7 @@ fn time_forward(
     ts.iter().sum::<f64>() / ts.len() as f64
 }
 
+/// Run the batch × thread grid (bitwise-checking each parallel output).
 pub fn run(cfg: &ParallelBenchConfig, progress: impl Fn(&str)) -> Vec<ParallelCell> {
     let mut rng = Prng::seeded(cfg.seed);
     let mlp = Mlp::uniform_with(1, cfg.width, cfg.depth, 1, cfg.activation, &mut rng);
@@ -127,6 +141,7 @@ pub fn save(cells: &[ParallelCell], dir: &Path) -> std::io::Result<()> {
     table(cells).save(&dir.join("parallel_speedup.csv"))
 }
 
+/// Human-readable summary for the CLI.
 pub fn summarize(cells: &[ParallelCell]) -> String {
     let mut out = String::from("serial vs parallel forward (mean seconds)\n");
     for c in cells {

@@ -9,11 +9,15 @@ use std::path::Path;
 /// overridable from the CLI).
 #[derive(Clone, Debug)]
 pub struct PassesConfig {
+    /// Max derivative order.
     pub n_max: usize,
+    /// Untimed warmup trials per cell.
     pub warmup: usize,
+    /// Timed trials per cell.
     pub trials: usize,
     /// Once an engine's measured total exceeds this, project the rest.
     pub cap_seconds: f64,
+    /// PRNG seed.
     pub seed: u64,
 }
 

@@ -13,10 +13,14 @@ use crate::pinn::{
 use crate::util::csv::Table;
 use std::path::Path;
 
+/// Configuration of one Burgers-profile reproduction run (figs 7-10).
 #[derive(Clone, Debug)]
 pub struct ProfilesConfig {
+    /// Burgers profile index.
     pub k: usize,
+    /// Trainer configuration.
     pub train: TrainConfig,
+    /// Optional loss-spec override (defaults to the profile's spec).
     pub spec_overrides: Option<BurgersLossSpec>,
     /// Number of plot points for the curve comparison.
     pub n_plot: usize,
@@ -28,6 +32,7 @@ pub struct ProfilesConfig {
 }
 
 impl ProfilesConfig {
+    /// Paper-flavored defaults for profile `k`.
     pub fn for_profile(k: usize) -> ProfilesConfig {
         ProfilesConfig {
             k,
@@ -40,13 +45,17 @@ impl ProfilesConfig {
     }
 }
 
+/// A finished profile run: the training result plus exported curves.
 pub struct ProfileRun {
+    /// The training result.
     pub result: TrainResult,
+    /// Curve table (x, truth, prediction per order).
     pub curves: Table,
     /// RMS error per derivative order 0..=order_max.
     pub rms_errors: Vec<f64>,
 }
 
+/// Train the profile and export its comparison curves.
 pub fn run(cfg: &ProfilesConfig) -> ProfileRun {
     let spec = cfg
         .spec_overrides
@@ -113,6 +122,7 @@ pub fn save(run: &ProfileRun, k: usize, dir: &Path) -> std::io::Result<()> {
     hist.save(&dir.join(format!("fig{fig}_profile{k}_history.csv")))
 }
 
+/// Human-readable summary for the CLI.
 pub fn summarize(run: &ProfileRun) -> String {
     let k = run.result.profile.k;
     let mut out = format!(

@@ -1,0 +1,220 @@
+//! Serial-vs-parallel *training* speedup grid: times one full
+//! loss+gradient accumulation of the sharded PINN objective
+//! ([`ParallelObjective`]) under [`ParallelPolicy::Serial`] against
+//! `Fixed(t)` worker pools (the CLI's `bench train-par` target,
+//! `training_speedup.csv`).
+//!
+//! The timed quantity is `value_grad` — the per-epoch cost that both the
+//! Adam phase and the L-BFGS gradient evaluations multiply into. Each
+//! parallel gradient is checked **bitwise** against the serial one before
+//! timing (the deterministic tree reduction makes that an equality, not a
+//! tolerance, check).
+
+use crate::nn::Mlp;
+use crate::ntp::{ActivationKind, ParallelPolicy};
+use crate::opt::Objective;
+use crate::pinn::{BurgersLossSpec, DerivEngine, ParallelObjective};
+use crate::tensor::Tensor;
+use crate::util::csv::Table;
+use crate::util::prng::Prng;
+use crate::util::timer::time_trials;
+use std::path::Path;
+
+/// Configuration of the training-speedup bench.
+#[derive(Clone, Debug)]
+pub struct TrainParBenchConfig {
+    /// Burgers profile `k` (sets the derivative order 2k+1).
+    pub profile_k: usize,
+    /// Hidden-layer width.
+    pub width: usize,
+    /// Number of hidden layers.
+    pub depth: usize,
+    /// Hidden activation.
+    pub activation: ActivationKind,
+    /// Residual collocation points (denser than the training default so
+    /// the shard pool has enough work per thread).
+    pub n_res: usize,
+    /// Near-origin collocation points.
+    pub n_org: usize,
+    /// Collocation rows per shard.
+    pub chunk: usize,
+    /// Worker-thread counts to compare against serial.
+    pub threads: Vec<usize>,
+    /// Untimed warmup evaluations per cell.
+    pub warmup: usize,
+    /// Timed evaluations per cell.
+    pub trials: usize,
+    /// PRNG seed (network init + collocation sampling).
+    pub seed: u64,
+}
+
+impl Default for TrainParBenchConfig {
+    fn default() -> Self {
+        TrainParBenchConfig {
+            profile_k: 1,
+            width: 24,
+            depth: 3,
+            activation: ActivationKind::Tanh,
+            n_res: 512,
+            n_org: 64,
+            chunk: 32,
+            threads: vec![2, 4, 8],
+            warmup: 2,
+            trials: 10,
+            seed: 17,
+        }
+    }
+}
+
+/// One measured thread-count cell.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainParCell {
+    /// Total collocation points (residual + origin).
+    pub points: usize,
+    /// Shards the cloud was split into.
+    pub shards: usize,
+    /// Rows per shard.
+    pub chunk: usize,
+    /// Worker threads of the parallel leg.
+    pub threads: usize,
+    /// Mean seconds per serial `value_grad`.
+    pub serial_s: f64,
+    /// Mean seconds per parallel `value_grad`.
+    pub parallel_s: f64,
+}
+
+impl TrainParCell {
+    /// Serial time over parallel time.
+    pub fn speedup(&self) -> f64 {
+        self.serial_s / self.parallel_s
+    }
+}
+
+/// Mean seconds per `value_grad` over the configured trials.
+fn time_grad(obj: &mut ParallelObjective, theta: &Tensor, cfg: &TrainParBenchConfig) -> f64 {
+    let ts = time_trials(cfg.warmup, cfg.trials, || {
+        std::hint::black_box(obj.value_grad(theta));
+    });
+    ts.iter().sum::<f64>() / ts.len() as f64
+}
+
+/// Run the grid. The same objective is re-timed under each policy (the
+/// shard layout is fixed at build time, so `set_policy` is purely a
+/// scheduling change).
+pub fn run(cfg: &TrainParBenchConfig, progress: impl Fn(&str)) -> Vec<TrainParCell> {
+    let mut spec = BurgersLossSpec::for_profile(cfg.profile_k);
+    spec.n_res = cfg.n_res;
+    spec.n_org = cfg.n_org;
+    let points = spec.n_res + spec.n_org;
+
+    let mut rng = Prng::seeded(cfg.seed);
+    let mlp = Mlp::uniform_with(1, cfg.width, cfg.depth, 1, cfg.activation, &mut rng);
+    let mut obj = ParallelObjective::build(
+        spec,
+        &mlp,
+        DerivEngine::Ntp,
+        ParallelPolicy::Serial,
+        cfg.chunk,
+        &mut rng,
+    );
+    let theta = obj.theta_init(&mlp);
+    let (_, want_grad) = obj.value_grad(&theta);
+    let serial_s = time_grad(&mut obj, &theta, cfg);
+
+    let mut out = Vec::new();
+    for &threads in &cfg.threads {
+        progress(&format!(
+            "train-par cell shards={} threads={threads}",
+            obj.n_shards()
+        ));
+        obj.set_policy(ParallelPolicy::Fixed(threads));
+        let (_, got_grad) = obj.value_grad(&theta);
+        assert_eq!(
+            want_grad, got_grad,
+            "parallel gradient diverged at t={threads} — determinism broken"
+        );
+        let parallel_s = time_grad(&mut obj, &theta, cfg);
+        out.push(TrainParCell {
+            points,
+            shards: obj.n_shards(),
+            chunk: cfg.chunk,
+            threads,
+            serial_s,
+            parallel_s,
+        });
+    }
+    obj.set_policy(ParallelPolicy::Serial);
+    out
+}
+
+/// One row per cell, with the speedup column the acceptance bar reads.
+pub fn table(cells: &[TrainParCell]) -> Table {
+    let mut t = Table::new(&[
+        "points", "shards", "chunk", "threads", "serial_s", "parallel_s", "speedup",
+    ]);
+    for c in cells {
+        t.push(vec![
+            c.points.to_string(),
+            c.shards.to_string(),
+            c.chunk.to_string(),
+            c.threads.to_string(),
+            format!("{:.6e}", c.serial_s),
+            format!("{:.6e}", c.parallel_s),
+            format!("{:.4}", c.speedup()),
+        ]);
+    }
+    t
+}
+
+/// Write `training_speedup.csv`.
+pub fn save(cells: &[TrainParCell], dir: &Path) -> std::io::Result<()> {
+    table(cells).save(&dir.join("training_speedup.csv"))
+}
+
+/// Human-readable summary for the CLI.
+pub fn summarize(cells: &[TrainParCell]) -> String {
+    let mut out = String::from("serial vs parallel training step (mean seconds per value+grad)\n");
+    for c in cells {
+        out.push_str(&format!(
+            "  pts={:<5} shards={:<3} t={:<2}  serial {:>9.2} ms  parallel {:>9.2} ms  \
+             speedup {:.2}x\n",
+            c.points,
+            c.shards,
+            c.threads,
+            c.serial_s * 1e3,
+            c.parallel_s * 1e3,
+            c.speedup()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_train_par_bench_produces_grid_and_csv() {
+        let cfg = TrainParBenchConfig {
+            width: 8,
+            depth: 2,
+            n_res: 48,
+            n_org: 8,
+            chunk: 16,
+            threads: vec![2],
+            warmup: 0,
+            trials: 2,
+            ..TrainParBenchConfig::default()
+        };
+        let cells = run(&cfg, |_| {});
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].shards, 3);
+        assert!(cells[0].serial_s > 0.0 && cells[0].parallel_s > 0.0);
+        assert_eq!(table(&cells).rows.len(), 1);
+        assert!(summarize(&cells).contains("speedup"));
+        let dir = std::env::temp_dir().join("ntangent_test_train_par_bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        save(&cells, &dir).unwrap();
+        assert!(dir.join("training_speedup.csv").exists());
+    }
+}

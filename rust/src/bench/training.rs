@@ -5,10 +5,14 @@ use crate::pinn::{train_burgers, BurgersLossSpec, DerivEngine, TrainConfig, Trai
 use crate::util::csv::Table;
 use std::path::Path;
 
+/// Configuration of the fig 6 training comparison.
 #[derive(Clone, Debug)]
 pub struct TrainingBenchConfig {
+    /// Burgers profile index.
     pub profile_k: usize,
+    /// Trainer configuration (shared by both engines).
     pub train: TrainConfig,
+    /// Optional loss-spec override (defaults to the profile's spec).
     pub spec_overrides: Option<BurgersLossSpec>,
     /// Skip the autodiff leg when its projected cost is prohibitive
     /// (profiles ≥ 3, as in the paper).
@@ -26,8 +30,11 @@ impl Default for TrainingBenchConfig {
     }
 }
 
+/// Both engines' training results.
 pub struct TrainingBenchResult {
+    /// The n-TangentProp run.
     pub ntp: TrainResult,
+    /// The autodiff baseline run (when not skipped).
     pub autodiff: Option<TrainResult>,
 }
 
@@ -38,6 +45,7 @@ impl TrainingBenchResult {
     }
 }
 
+/// Train with n-TangentProp and (optionally) the autodiff baseline.
 pub fn run(cfg: &TrainingBenchConfig) -> TrainingBenchResult {
     let spec = cfg
         .spec_overrides

@@ -52,6 +52,7 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Serve `mlp`'s first `n` derivatives with batch cap `cap`.
     pub fn new(mlp: Mlp, n: usize, cap: usize) -> NativeBackend {
         NativeBackend::new_parallel(mlp, n, cap, ParallelPolicy::Serial)
     }

@@ -35,11 +35,13 @@ impl Default for BatcherConfig {
 
 /// One queued evaluation request.
 pub struct Request {
+    /// Points to evaluate the derivative stack at.
     pub points: Vec<f64>,
     /// Optional per-request activation override (`None` = the served
     /// model's own activation). Requests are only coalesced with others
     /// of the same activation — the backend runs one tower per batch.
     pub activation: Option<ActivationKind>,
+    /// When the request entered the queue (latency metric).
     pub enqueued: Instant,
     /// Channel the response is sent on.
     pub resp: Sender<Response>,
@@ -48,7 +50,9 @@ pub struct Request {
 /// Queue message: work or an explicit stop (the handle is cloneable, so
 /// channel-closure alone cannot signal shutdown).
 pub enum Msg {
+    /// An evaluation request.
     Eval(Request),
+    /// Drain the queue, then stop the worker.
     Shutdown,
 }
 

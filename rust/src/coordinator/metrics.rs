@@ -9,10 +9,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Shared counters updated by the batcher loop and connection threads.
 #[derive(Default, Debug)]
 pub struct Metrics {
+    /// Requests answered.
     pub requests: AtomicU64,
+    /// Points requested.
     pub points: AtomicU64,
+    /// Backend batches executed.
     pub batches: AtomicU64,
+    /// Points executed inside batches.
     pub batched_points: AtomicU64,
+    /// Requests answered with an error.
     pub errors: AtomicU64,
     /// Total request latency in nanoseconds (enqueue → response).
     pub latency_ns: AtomicU64,
@@ -26,21 +31,32 @@ pub struct Metrics {
 /// Counters attributed to one batcher worker of the pool.
 #[derive(Default, Debug)]
 pub struct WorkerCounters {
+    /// Requests answered by this worker.
     pub requests: AtomicU64,
+    /// Backend batches this worker executed.
     pub batches: AtomicU64,
+    /// Points this worker executed inside batches.
     pub batched_points: AtomicU64,
+    /// Requests this worker answered with an error.
     pub errors: AtomicU64,
 }
 
 /// A point-in-time copy of the counters with derived ratios.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Requests answered.
     pub requests: u64,
+    /// Points requested.
     pub points: u64,
+    /// Backend batches executed.
     pub batches: u64,
+    /// Points executed inside batches.
     pub batched_points: u64,
+    /// Requests answered with an error.
     pub errors: u64,
+    /// Mean enqueue-to-response latency in microseconds.
     pub mean_latency_us: f64,
+    /// Max enqueue-to-response latency in microseconds.
     pub max_latency_us: f64,
     /// Average number of requests coalesced per backend call.
     pub mean_batch_fill: f64,
@@ -52,9 +68,13 @@ pub struct MetricsSnapshot {
 /// Snapshot of one worker's counters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WorkerSnapshot {
+    /// Requests answered by this worker.
     pub requests: u64,
+    /// Backend batches this worker executed.
     pub batches: u64,
+    /// Points this worker executed inside batches.
     pub batched_points: u64,
+    /// Requests this worker answered with an error.
     pub errors: u64,
 }
 
@@ -67,10 +87,12 @@ impl Metrics {
         }
     }
 
+    /// Number of per-worker counter rows.
     pub fn n_workers(&self) -> usize {
         self.workers.len()
     }
 
+    /// Count one answered request of `n_points` from `worker`.
     pub fn record_request(&self, worker: usize, n_points: usize) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.points.fetch_add(n_points as u64, Ordering::Relaxed);
@@ -79,6 +101,7 @@ impl Metrics {
         }
     }
 
+    /// Count one executed backend batch of `n_points` on `worker`.
     pub fn record_batch(&self, worker: usize, n_points: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_points.fetch_add(n_points as u64, Ordering::Relaxed);
@@ -88,6 +111,7 @@ impl Metrics {
         }
     }
 
+    /// Count one errored request on `worker`.
     pub fn record_error(&self, worker: usize) {
         self.errors.fetch_add(1, Ordering::Relaxed);
         if let Some(w) = self.workers.get(worker) {
@@ -95,11 +119,13 @@ impl Metrics {
         }
     }
 
+    /// Record one request's enqueue-to-response latency.
     pub fn record_latency(&self, ns: u64) {
         self.latency_ns.fetch_add(ns, Ordering::Relaxed);
         self.latency_max_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
+    /// A point-in-time copy of all counters with derived ratios.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let requests = self.requests.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);

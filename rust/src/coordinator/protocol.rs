@@ -21,12 +21,15 @@ use crate::util::json::Json;
 /// A parsed client request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireRequest {
+    /// Evaluate the derivative stack at `points`.
     Eval {
+        /// Points to evaluate at.
         points: Vec<f64>,
         /// `None` = the served model's own activation (wire-compatible
         /// default).
         activation: Option<ActivationKind>,
     },
+    /// Return the service metrics snapshot.
     Stats,
 }
 

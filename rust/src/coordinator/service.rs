@@ -62,6 +62,25 @@ impl Service {
     /// inside worker `w`'s thread to build that shard's backend, so each
     /// worker owns an independent backend (and native backends can carry
     /// their own [`crate::ntp::ParallelPolicy`]).
+    ///
+    /// ```
+    /// use ntangent::coordinator::{BatcherConfig, NativeBackend, Service};
+    /// use ntangent::nn::Mlp;
+    /// use ntangent::util::prng::Prng;
+    ///
+    /// let mut rng = Prng::seeded(7);
+    /// let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+    /// let service = Service::start_pool(
+    ///     move |_worker| Ok(Box::new(NativeBackend::new(mlp.clone(), 3, 64)) as _),
+    ///     2, // two batcher workers (activation shards)
+    ///     BatcherConfig::default(),
+    /// );
+    /// let handle = service.handle();
+    /// let channels = handle.eval(&[0.0, 0.5]).unwrap();
+    /// assert_eq!(channels.len(), 4); // u, u', u'', u'''
+    /// assert_eq!(channels[0].len(), 2); // one value per requested point
+    /// service.shutdown(); // drains the queues before joining
+    /// ```
     pub fn start_pool<F>(factory: F, workers: usize, cfg: BatcherConfig) -> Service
     where
         F: Fn(usize) -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static,
@@ -95,6 +114,7 @@ impl Service {
         }
     }
 
+    /// A cheap cloneable handle for submitting requests.
     pub fn handle(&self) -> ServiceHandle {
         self.handle.clone()
     }
@@ -165,6 +185,7 @@ impl ServiceHandle {
             .map_err(|e| anyhow!(e))
     }
 
+    /// Snapshot of the global + per-worker metrics.
     pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
         self.metrics.snapshot()
     }
@@ -216,6 +237,7 @@ pub struct TcpClient {
 }
 
 impl TcpClient {
+    /// Connect to a serving `ntangent serve` endpoint.
     pub fn connect(addr: &str) -> Result<TcpClient> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         let writer = stream.try_clone()?;
@@ -225,6 +247,7 @@ impl TcpClient {
         })
     }
 
+    /// Evaluate points with the served model's own activation.
     pub fn eval(&mut self, points: &[f64]) -> Result<Vec<Vec<f64>>> {
         self.eval_with(points, None)
     }
@@ -244,6 +267,7 @@ impl TcpClient {
         protocol::parse_channels(line.trim()).map_err(|e| anyhow!(e))
     }
 
+    /// Fetch the stats response line (raw JSON).
     pub fn stats(&mut self) -> Result<String> {
         self.writer.write_all(b"{\"cmd\":\"stats\"}\n")?;
         let mut line = String::new();

@@ -29,11 +29,19 @@
 //!   bitwise-identical output (see `rust/tests/parallel_determinism.rs`).
 //! - [`nn`] — dense MLPs (each carrying its [`ntp::ActivationKind`]) and
 //!   parameter (un)flattening.
-//! - [`opt`] — Adam, SGD and L-BFGS with a strong-Wolfe line search.
+//! - [`opt`] — Adam, SGD and L-BFGS with a strong-Wolfe line search. All
+//!   three accept a [`ntp::ParallelPolicy`]; their updates/reductions are
+//!   bitwise thread-count-invariant (see [`util::par`]).
 //! - [`pinn`] — a physics-informed-network training framework (collocation
 //!   sampling, Sobolev losses, Leibniz residual derivatives, boundary
 //!   conditions, inverse parameters) plus the paper's self-similar Burgers
-//!   benchmark problem with a ground-truth solver.
+//!   benchmark problem with a ground-truth solver. Training is
+//!   data-parallel on demand: [`pinn::ParallelObjective`] shards the
+//!   collocation cloud into fixed row-chunks (one tape each) and combines
+//!   per-shard gradients with a deterministic pairwise tree reduction, so
+//!   `ntangent train --threads N` is bitwise reproducible for any `N`
+//!   (`rust/tests/training_determinism.rs`; `ntangent bench train-par`
+//!   writes `results/training_speedup.csv`).
 //! - [`runtime`] — a PJRT runtime that loads AOT-compiled HLO artifacts
 //!   produced by the build-time JAX/Pallas layers and executes them from
 //!   Rust (Python is never on the hot path).
@@ -69,6 +77,12 @@
 //! let sine_channels = engine.forward(&siren, &x);
 //! assert_eq!(sine_channels.len(), 5);
 //! ```
+//!
+//! A top-to-bottom architecture map (layers, the two parallelism models
+//! and their determinism guarantees) lives in `docs/ARCHITECTURE.md`; the
+//! coordinator's wire protocol is specified in `docs/PROTOCOL.md`.
+
+#![warn(missing_docs)]
 
 pub mod autodiff;
 pub mod bench;

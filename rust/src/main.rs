@@ -7,7 +7,7 @@
 //!   serve                         run the batching derivative-evaluation service
 //!   info                          tables, op counts and environment info
 
-use ntangent::bench::{grid, memory, parallel, passes, profiles, training};
+use ntangent::bench::{grid, memory, parallel, passes, profiles, train_par, training};
 use ntangent::coordinator::{BatcherConfig, NativeBackend, PjrtBackend, Service};
 use ntangent::nn::Checkpoint;
 use ntangent::ntp::{hardy_ramanujan, partition_count, ActivationKind, NtpEngine, ParallelPolicy};
@@ -53,7 +53,7 @@ fn top_usage() -> String {
     "ntangent — n-TangentProp reproduction (quasilinear higher-order derivatives)\n\
      \nUSAGE: ntangent <COMMAND> [OPTIONS]\n\
      \nCOMMANDS:\n\
-     \x20 bench <target>   fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|mem|par|all\n\
+     \x20 bench <target>   fig1..fig10|mem|par|train-par|all\n\
      \x20 train            train a Burgers-profile PINN\n\
      \x20 eval             evaluate a checkpoint at points\n\
      \x20 validate         check a Burgers checkpoint against the analytic profile\n\
@@ -83,8 +83,10 @@ fn bench_specs() -> Vec<OptSpec> {
         OptSpec { name: "seed", help: "rng seed", takes_value: true, default: None },
         OptSpec { name: "profile", help: "Burgers profile k (fig6)", takes_value: true, default: None },
         OptSpec { name: "no-autodiff", help: "skip the autodiff leg (fig6)", takes_value: false, default: None },
-        OptSpec { name: "threads", help: "comma list of worker counts (par)", takes_value: true, default: None },
+        OptSpec { name: "threads", help: "comma list of worker counts (par, train-par)", takes_value: true, default: None },
         OptSpec { name: "n", help: "derivative order (par)", takes_value: true, default: None },
+        OptSpec { name: "chunk", help: "collocation rows per shard (train-par)", takes_value: true, default: None },
+        OptSpec { name: "points", help: "residual collocation points (train-par)", takes_value: true, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ]
 }
@@ -105,7 +107,7 @@ fn cmd_bench(raw: &[String]) -> Result<(), String> {
     std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
 
     let targets: Vec<String> = if target == "all" {
-        ["fig1", "fig4", "fig6", "fig8", "fig9", "fig7", "fig10", "mem", "par"]
+        ["fig1", "fig4", "fig6", "fig8", "fig9", "fig7", "fig10", "mem", "par", "train-par"]
             .iter()
             .map(|s| s.to_string())
             .collect()
@@ -298,6 +300,44 @@ fn run_bench_target(target: &str, args: &Args, out_dir: &Path) -> Result<(), Str
             parallel::save(&cells, out_dir).map_err(|e| e.to_string())?;
             println!("{}", parallel::summarize(&cells));
         }
+        "train-par" | "train_par" => {
+            let mut cfg = train_par::TrainParBenchConfig::default();
+            if let Some(v) = args.get_usize("profile")? {
+                cfg.profile_k = v;
+            }
+            if let Some(v) = args.get_usize("width")? {
+                cfg.width = v;
+            }
+            if let Some(v) = args.get_usize("depth")? {
+                cfg.depth = v;
+            }
+            if let Some(v) = args.get("activation") {
+                cfg.activation = parse_activation(v)?;
+            }
+            if let Some(v) = args.get_usize("points")? {
+                cfg.n_res = v;
+            }
+            if let Some(v) = args.get_usize("chunk")? {
+                cfg.chunk = v.max(1);
+            }
+            if let Some(v) = args.get_usize_list("threads")? {
+                cfg.threads = v;
+            }
+            if let Some(v) = args.get_usize("trials")? {
+                cfg.trials = v;
+            }
+            if let Some(v) = args.get_usize("seed")? {
+                cfg.seed = v as u64;
+            }
+            eprintln!(
+                "[bench] train-par: serial vs data-parallel training step, \
+                 {} res + {} org pts, chunk {}, threads {:?}",
+                cfg.n_res, cfg.n_org, cfg.chunk, cfg.threads
+            );
+            let cells = train_par::run(&cfg, |msg| eprintln!("[bench] {msg}"));
+            train_par::save(&cells, out_dir).map_err(|e| e.to_string())?;
+            println!("{}", train_par::summarize(&cells));
+        }
         other => return Err(format!("unknown bench target '{other}'")),
     }
     Ok(())
@@ -315,6 +355,8 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "activation", help: "hidden activation: tanh | sin | softplus | gelu", takes_value: true, default: Some("tanh") },
         OptSpec { name: "engine", help: "ntp | autodiff", takes_value: true, default: Some("ntp") },
         OptSpec { name: "seed", help: "rng seed", takes_value: true, default: Some("0") },
+        OptSpec { name: "threads", help: "serial = monolithic tape; auto | N = sharded data-parallel", takes_value: true, default: Some("serial") },
+        OptSpec { name: "chunk", help: "collocation rows per shard (parallel training)", takes_value: true, default: Some("32") },
         OptSpec { name: "out", help: "checkpoint path", takes_value: true, default: Some("results/checkpoint.json") },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
@@ -329,17 +371,32 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
         "autodiff" => DerivEngine::Autodiff,
         other => return Err(format!("unknown engine '{other}'")),
     };
-    let cfg = train_cfg_from(&args, (300, 300))?;
+    let mut cfg = train_cfg_from(&args, (300, 300))?;
+    let threads_arg = args.get("threads").unwrap().to_string();
+    cfg.policy = parse_policy(&threads_arg)?;
+    if let Some(v) = args.get_usize("chunk")? {
+        cfg.chunk = v.max(1);
+    }
     let spec = BurgersLossSpec::for_profile(k);
     eprintln!(
-        "training profile k={k} (λ* = {:.6}, {} derivatives) with {engine:?}, {}x{} {} net",
+        "training profile k={k} (λ* = {:.6}, {} derivatives) with {engine:?}, {}x{} {} net, \
+         {:?} gradient accumulation",
         spec.profile.lambda_smooth(),
         spec.profile.n_derivs(),
         cfg.depth,
         cfg.width,
-        cfg.activation.name()
+        cfg.activation.name(),
+        cfg.policy
     );
-    let result = ntangent::pinn::train_burgers(spec, &cfg, engine);
+    // Any explicit thread count — including 1 — routes through the sharded
+    // data-parallel trainer, whose result is bitwise identical for every
+    // count (docs/ARCHITECTURE.md). Only the literal "serial" default keeps
+    // the monolithic single-tape path, which sums in a different order.
+    let result = if threads_arg == "serial" {
+        ntangent::pinn::train_burgers(spec, &cfg, engine)
+    } else {
+        ntangent::pinn::train_burgers_parallel(spec, &cfg, engine)
+    };
     println!(
         "done in {:.1}s: λ = {:.6} (err {:.2e}), loss = {:.3e}, L2(u) = {:.3e}",
         result.seconds,

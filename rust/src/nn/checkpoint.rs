@@ -15,16 +15,22 @@ use std::path::Path;
 /// as tanh (the only activation they could have been trained with).
 #[derive(Clone, Debug)]
 pub struct Checkpoint {
+    /// Layer widths, e.g. `[1, 24, 24, 24, 1]`.
     pub sizes: Vec<usize>,
     /// Hidden-layer activation; defaults to tanh for old artifacts.
     pub activation: ActivationKind,
+    /// Flat parameters in `params::flatten` order.
     pub theta: Vec<f64>,
+    /// Inferred inverse parameter λ (inverse-problem runs).
     pub lambda: Option<f64>,
+    /// Burgers profile the model was trained on.
     pub profile_k: Option<usize>,
+    /// Final training loss.
     pub final_loss: Option<f64>,
 }
 
 impl Checkpoint {
+    /// Snapshot a network (no training metadata).
     pub fn from_mlp(mlp: &Mlp) -> Checkpoint {
         Checkpoint {
             sizes: mlp.sizes(),
@@ -54,6 +60,7 @@ impl Checkpoint {
         Ok(mlp)
     }
 
+    /// Serialize to the checkpoint JSON object.
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
             (
@@ -75,6 +82,7 @@ impl Checkpoint {
         Json::obj(fields)
     }
 
+    /// Parse a checkpoint JSON object.
     pub fn from_json(v: &Json) -> Result<Checkpoint> {
         let sizes = v
             .get("sizes")
@@ -106,6 +114,7 @@ impl Checkpoint {
         })
     }
 
+    /// Write the checkpoint JSON to `path`.
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -114,6 +123,7 @@ impl Checkpoint {
             .with_context(|| format!("writing checkpoint {}", path.display()))
     }
 
+    /// Load a checkpoint JSON from `path`.
     pub fn load(path: &Path) -> Result<Checkpoint> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading checkpoint {}", path.display()))?;

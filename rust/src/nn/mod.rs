@@ -14,7 +14,9 @@ use crate::util::prng::Prng;
 /// A dense layer `y = x W^T + b` with `W: [out, in]`, `b: [out]`.
 #[derive(Clone, Debug)]
 pub struct Dense {
+    /// Weights `[out, in]`.
     pub w: Tensor,
+    /// Bias `[out]`.
     pub b: Tensor,
 }
 
@@ -28,10 +30,12 @@ impl Dense {
         }
     }
 
+    /// Input width.
     pub fn fan_in(&self) -> usize {
         self.w.shape()[1]
     }
 
+    /// Output width.
     pub fn fan_out(&self) -> usize {
         self.w.shape()[0]
     }
@@ -46,6 +50,7 @@ impl Dense {
         x.matmul_nt(&self.w)
     }
 
+    /// Parameter count (`w` + `b`).
     pub fn n_params(&self) -> usize {
         self.w.numel() + self.b.numel()
     }
@@ -59,6 +64,7 @@ impl Dense {
 /// engine, checkpoints — dispatches on.
 #[derive(Clone, Debug)]
 pub struct Mlp {
+    /// Dense layers, input to output.
     pub layers: Vec<Dense>,
     /// Hidden-layer activation (the output head stays linear).
     pub activation: ActivationKind,
@@ -102,14 +108,17 @@ impl Mlp {
         Mlp::with_activation(&sizes, activation, rng)
     }
 
+    /// Input dimension.
     pub fn input_dim(&self) -> usize {
         self.layers[0].fan_in()
     }
 
+    /// Output dimension.
     pub fn output_dim(&self) -> usize {
         self.layers.last().unwrap().fan_out()
     }
 
+    /// Total parameter count.
     pub fn n_params(&self) -> usize {
         self.layers.iter().map(Dense::n_params).sum()
     }

@@ -25,6 +25,7 @@ use crate::tensor::Tensor;
 /// A smooth (C^∞), parameter-free activation with computable derivative
 /// towers — the class of activations the paper's theorem covers.
 pub trait SmoothActivation: Send + Sync {
+    /// Canonical activation name (matches [`ActivationKind::name`]).
     fn name(&self) -> &'static str;
 
     /// σ(x) for a scalar.
@@ -55,9 +56,13 @@ pub trait SmoothActivation: Send + Sync {
 /// carry; towers are built from it on demand.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ActivationKind {
+    /// Hyperbolic tangent (the paper's activation).
     Tanh,
+    /// Sine (SIREN-style spectral activation).
     Sine,
+    /// Softplus `ln(1 + e^x)`.
     Softplus,
+    /// Exact (erf-based) GELU `x·Φ(x)`.
     Gelu,
 }
 
@@ -225,6 +230,7 @@ pub struct TanhTower {
 }
 
 impl TanhTower {
+    /// Coefficient tables for orders `0..=n_max`.
     pub fn new(n_max: usize) -> TanhTower {
         let mut coeffs: Vec<Vec<f64>> = Vec::with_capacity(n_max + 1);
         coeffs.push(vec![0.0, 1.0]); // P_0 = t
@@ -234,6 +240,7 @@ impl TanhTower {
         TanhTower { coeffs }
     }
 
+    /// Highest tabulated order.
     pub fn n_max(&self) -> usize {
         self.coeffs.len() - 1
     }
@@ -261,10 +268,12 @@ pub struct Tanh {
 }
 
 impl Tanh {
+    /// Tower evaluator with tables up to `n_max`.
     pub fn new(n_max: usize) -> Tanh {
         Tanh { table: TanhTower::new(n_max) }
     }
 
+    /// The underlying coefficient table.
     pub fn table(&self) -> &TanhTower {
         &self.table
     }
@@ -359,6 +368,7 @@ pub struct SoftplusTower {
 }
 
 impl SoftplusTower {
+    /// Coefficient tables for orders `1..=n_max`.
     pub fn new(n_max: usize) -> SoftplusTower {
         let mut coeffs: Vec<Vec<f64>> = Vec::with_capacity(n_max.max(1) + 1);
         coeffs.push(Vec::new()); // order 0 unused
@@ -369,6 +379,7 @@ impl SoftplusTower {
         SoftplusTower { coeffs }
     }
 
+    /// Highest tabulated order.
     pub fn n_max(&self) -> usize {
         self.coeffs.len() - 1
     }
@@ -397,10 +408,12 @@ pub struct Softplus {
 }
 
 impl Softplus {
+    /// Tower evaluator with tables up to `n_max`.
     pub fn new(n_max: usize) -> Softplus {
         Softplus { table: SoftplusTower::new(n_max.max(1)) }
     }
 
+    /// The underlying coefficient table.
     pub fn table(&self) -> &SoftplusTower {
         &self.table
     }

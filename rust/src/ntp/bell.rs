@@ -24,6 +24,7 @@ pub struct Term {
 /// Precomputed Faà di Bruno tables for derivative orders `1..=n_max`.
 #[derive(Clone, Debug)]
 pub struct FaaDiBruno {
+    /// Highest tabulated order.
     pub n_max: usize,
     /// `terms[i]` holds the sum for derivative order `i` (index 0 unused).
     terms: Vec<Vec<Term>>,

@@ -43,15 +43,27 @@ pub enum ParallelPolicy {
 const AUTO_MIN_ROWS_PER_WORKER: usize = 128;
 
 impl ParallelPolicy {
-    /// Worker count for a batch of `batch` rows (1 means "run serial").
-    pub fn workers_for(self, batch: usize) -> usize {
-        let cap = match self {
+    /// Upper bound on worker threads this policy allows (`Auto` = the
+    /// machine's available parallelism), before any per-call-site
+    /// clamping. Single source of the policy → thread-count decoding,
+    /// shared with the training path's [`crate::util::par`].
+    pub fn thread_cap(self) -> usize {
+        match self {
             ParallelPolicy::Serial => 1,
             ParallelPolicy::Fixed(t) => t.max(1),
             ParallelPolicy::Auto => std::thread::available_parallelism()
                 .map(|n| n.get())
-                .unwrap_or(1)
-                .min(batch / AUTO_MIN_ROWS_PER_WORKER),
+                .unwrap_or(1),
+        }
+    }
+
+    /// Worker count for a batch of `batch` rows (1 means "run serial").
+    pub fn workers_for(self, batch: usize) -> usize {
+        let cap = match self {
+            // Per-row work at moderate n is a few µs, so Auto only
+            // engages once every worker gets a meaty chunk of rows.
+            ParallelPolicy::Auto => self.thread_cap().min(batch / AUTO_MIN_ROWS_PER_WORKER),
+            _ => self.thread_cap(),
         };
         cap.max(1).min(batch.max(1))
     }
@@ -131,18 +143,23 @@ impl NtpEngine {
         }
     }
 
+    /// Highest derivative order the tables cover.
     pub fn n_max(&self) -> usize {
         self.n_max
     }
 
+    /// The batch-parallelism policy.
     pub fn policy(&self) -> ParallelPolicy {
         self.policy
     }
 
+    /// Change the batch-parallelism policy (output stays bitwise
+    /// identical — chunking only changes scheduling).
     pub fn set_policy(&mut self, policy: ParallelPolicy) {
         self.policy = policy;
     }
 
+    /// The precomputed Faà di Bruno tables.
     pub fn tables(&self) -> &FaaDiBruno {
         &self.fdb
     }
@@ -163,6 +180,23 @@ impl NtpEngine {
     /// headline algorithm). Under a non-serial [`ParallelPolicy`] the
     /// batch is chunked row-wise across scoped worker threads; the result
     /// is bitwise identical to the serial pass.
+    ///
+    /// ```
+    /// use ntangent::nn::Mlp;
+    /// use ntangent::ntp::{NtpEngine, ParallelPolicy};
+    /// use ntangent::tensor::Tensor;
+    /// use ntangent::util::prng::Prng;
+    ///
+    /// let mut rng = Prng::seeded(1);
+    /// let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+    /// let x = Tensor::linspace(-1.0, 1.0, 64).reshape(&[64, 1]);
+    /// let engine = NtpEngine::with_policy(4, ParallelPolicy::Fixed(2));
+    /// let channels = engine.forward_n(&mlp, &x, 3); // [u, u', u'', u''']
+    /// assert_eq!(channels.len(), 4);
+    /// assert_eq!(channels[0].shape(), &[64, 1]);
+    /// // Chunked execution is bitwise identical to the serial engine:
+    /// assert_eq!(channels, NtpEngine::new(3).forward_n(&mlp, &x, 3));
+    /// ```
     pub fn forward_n(&self, mlp: &Mlp, x: &Tensor, n: usize) -> Vec<Tensor> {
         assert!(n <= self.n_max, "n={n} exceeds engine n_max={}", self.n_max);
         assert_eq!(x.rank(), 2, "x must be [B, 1]");

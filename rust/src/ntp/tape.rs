@@ -16,6 +16,12 @@
 //! tower costs `n+1` such sweeps where the old tanh-only tape shared
 //! one (and expanded polynomials in it); a shared-substitution tower op
 //! could reclaim that if the tape eval ever dominates training.
+//!
+//! Recorded tapes are plain data (`Send + Sync`; the `Act` evaluator's
+//! polynomial tables are memoized per thread), so the data-parallel
+//! trainer records one such tape per collocation shard and evaluates
+//! them concurrently — with bitwise-identical results, since every
+//! thread runs the same recurrences.
 
 use super::forward::NtpEngine;
 use crate::autodiff::{Graph, NodeId};

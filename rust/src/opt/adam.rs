@@ -1,22 +1,39 @@
 //! Adam (Kingma & Ba, 2015) with bias correction — the paper's
 //! exploration-phase optimizer.
+//!
+//! The moment/parameter update is elementwise, so a [`ParallelPolicy`]
+//! can split it across contiguous blocks on scoped threads with results
+//! that are bitwise identical to the serial update for any worker count
+//! (no cross-element reductions anywhere).
 
 use super::Objective;
+use crate::ntp::ParallelPolicy;
 use crate::tensor::Tensor;
+use crate::util::par;
+
+/// Elements per update block when the policy parallelizes [`Adam::apply`]
+/// (the update is memory-bound; smaller blocks would be all overhead).
+const UPDATE_BLOCK: usize = 4096;
 
 /// Adam state over a flat parameter vector.
 #[derive(Clone, Debug)]
 pub struct Adam {
+    /// Learning rate.
     pub lr: f64,
+    /// First-moment decay.
     pub beta1: f64,
+    /// Second-moment decay.
     pub beta2: f64,
+    /// Denominator fuzz.
     pub eps: f64,
     m: Tensor,
     v: Tensor,
     t: u64,
+    policy: ParallelPolicy,
 }
 
 impl Adam {
+    /// Fresh state for `dim` parameters (serial updates).
     pub fn new(dim: usize, lr: f64) -> Adam {
         Adam {
             lr,
@@ -26,7 +43,20 @@ impl Adam {
             m: Tensor::zeros(&[dim]),
             v: Tensor::zeros(&[dim]),
             t: 0,
+            policy: ParallelPolicy::Serial,
         }
+    }
+
+    /// Split the elementwise update across threads per `policy` (bitwise
+    /// identical to serial for any worker count).
+    pub fn with_policy(mut self, policy: ParallelPolicy) -> Adam {
+        self.policy = policy;
+        self
+    }
+
+    /// The update-parallelism policy.
+    pub fn policy(&self) -> ParallelPolicy {
+        self.policy
     }
 
     /// One update in place; returns the step's loss.
@@ -43,16 +73,50 @@ impl Adam {
         let b1t = 1.0 - self.beta1.powi(self.t as i32);
         let b2t = 1.0 - self.beta2.powi(self.t as i32);
         let lr_t = self.lr * b2t.sqrt() / b1t;
-        let (m, v) = (self.m.data_mut(), self.v.data_mut());
-        let g = grad.data();
-        let th = theta.data_mut();
-        for i in 0..g.len() {
-            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g[i];
-            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
-            th[i] -= lr_t * m[i] / (v[i].sqrt() + self.eps);
+        let (beta1, beta2, eps) = (self.beta1, self.beta2, self.eps);
+        let update = |m: &mut [f64], v: &mut [f64], th: &mut [f64], g: &[f64]| {
+            for i in 0..g.len() {
+                m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+                v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+                th[i] -= lr_t * m[i] / (v[i].sqrt() + eps);
+            }
+        };
+
+        let len = grad.numel();
+        let workers = par::workers_for_tasks(self.policy, len.div_ceil(UPDATE_BLOCK));
+        if workers <= 1 {
+            update(
+                self.m.data_mut(),
+                self.v.data_mut(),
+                theta.data_mut(),
+                grad.data(),
+            );
+            return;
         }
+        let per = len.div_ceil(workers);
+        std::thread::scope(|s| {
+            let update = &update;
+            let mut m_rest = self.m.data_mut();
+            let mut v_rest = self.v.data_mut();
+            let mut t_rest = theta.data_mut();
+            let mut g_rest = grad.data();
+            while g_rest.len() > per {
+                let (m0, m1) = m_rest.split_at_mut(per);
+                let (v0, v1) = v_rest.split_at_mut(per);
+                let (t0, t1) = t_rest.split_at_mut(per);
+                let (g0, g1) = g_rest.split_at(per);
+                m_rest = m1;
+                v_rest = v1;
+                t_rest = t1;
+                g_rest = g1;
+                s.spawn(move || update(m0, v0, t0, g0));
+            }
+            // The remainder runs inline on the calling thread.
+            update(m_rest, v_rest, t_rest, g_rest);
+        });
     }
 
+    /// Number of updates applied so far.
     pub fn steps_taken(&self) -> u64 {
         self.t
     }
@@ -69,6 +133,7 @@ impl Adam {
 mod tests {
     use super::*;
     use crate::opt::{Quadratic, Rosenbrock};
+    use crate::util::prng::Prng;
 
     #[test]
     fn converges_on_quadratic() {
@@ -115,5 +180,24 @@ mod tests {
         adam.reset();
         assert_eq!(adam.steps_taken(), 0);
         assert_eq!(adam.m.data(), &[0.0, 0.0]);
+    }
+
+    /// Parallel updates are bitwise identical to serial ones, for sizes
+    /// around the block boundaries and repeated (stateful) steps.
+    #[test]
+    fn parallel_apply_is_bitwise_identical_to_serial() {
+        for dim in [3usize, UPDATE_BLOCK - 1, UPDATE_BLOCK + 1, 3 * UPDATE_BLOCK + 17] {
+            let mut rng = Prng::seeded(0xADA + dim as u64);
+            let mut serial = Adam::new(dim, 0.01);
+            let mut parallel = Adam::new(dim, 0.01).with_policy(ParallelPolicy::Fixed(3));
+            let mut ta = Tensor::rand_normal(&[dim], 0.0, 1.0, &mut rng);
+            let mut tb = ta.clone();
+            for _ in 0..3 {
+                let g = Tensor::rand_normal(&[dim], 0.0, 1.0, &mut rng);
+                serial.apply(&mut ta, &g);
+                parallel.apply(&mut tb, &g);
+                assert_eq!(ta, tb, "dim {dim}");
+            }
+        }
     }
 }

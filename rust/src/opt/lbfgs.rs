@@ -12,14 +12,25 @@
 //!
 //! The optimizer counts value and gradient evaluations so the benchmark
 //! harness can report the forward/backward mix.
+//!
+//! Every inner product (the two-loop recursion, curvature updates, line
+//! searches) goes through [`par::det_dot`]: partial sums over fixed
+//! element chunks combined with a deterministic pairwise tree, so the
+//! optimizer state trajectory is **bitwise identical for every
+//! [`ParallelPolicy`]** — the property the data-parallel trainer's
+//! determinism test leans on.
 
 use super::Objective;
+use crate::ntp::ParallelPolicy;
 use crate::tensor::Tensor;
+use crate::util::par;
 
 /// Line-search strategy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LineSearch {
+    /// Armijo backtracking on function values only (forward-pass cheap).
     Backtracking,
+    /// Bracketing + zoom enforcing the strong Wolfe conditions.
     StrongWolfe,
 }
 
@@ -46,9 +57,11 @@ pub struct Lbfgs {
     pub tol_grad: f64,
     /// Max line-search trials per step.
     pub max_ls: usize,
+    /// Line-search strategy.
     pub line_search: LineSearch,
     history: Vec<(Tensor, Tensor)>, // (s, y) pairs, newest last
     last_grad: Option<Tensor>,
+    policy: ParallelPolicy,
     /// Count of `value`-only evaluations (forward passes).
     pub n_value_evals: u64,
     /// Count of `value_grad` evaluations (forward+backward passes).
@@ -56,6 +69,7 @@ pub struct Lbfgs {
 }
 
 impl Lbfgs {
+    /// Fresh state (backtracking line search, serial reductions).
     pub fn new(_dim: usize) -> Lbfgs {
         Lbfgs {
             m: 10,
@@ -66,14 +80,34 @@ impl Lbfgs {
             line_search: LineSearch::Backtracking,
             history: Vec::new(),
             last_grad: None,
+            policy: ParallelPolicy::Serial,
             n_value_evals: 0,
             n_grad_evals: 0,
         }
     }
 
+    /// Select the line-search strategy.
     pub fn with_line_search(mut self, ls: LineSearch) -> Lbfgs {
         self.line_search = ls;
         self
+    }
+
+    /// Compute inner products on a `policy`-sized thread pool. Purely a
+    /// scheduling knob: [`par::det_dot`] returns the same bits for every
+    /// policy, so trajectories never depend on the worker count.
+    pub fn with_policy(mut self, policy: ParallelPolicy) -> Lbfgs {
+        self.policy = policy;
+        self
+    }
+
+    /// The reduction-parallelism policy.
+    pub fn policy(&self) -> ParallelPolicy {
+        self.policy
+    }
+
+    /// Thread-count-invariant inner product (see the module docs).
+    fn dot(&self, a: &Tensor, b: &Tensor) -> f64 {
+        par::det_dot(a.data(), b.data(), self.policy)
     }
 
     fn value(&mut self, obj: &mut dyn Objective, theta: &Tensor) -> f64 {
@@ -94,18 +128,18 @@ impl Lbfgs {
         let mut rhos = vec![0.0; k];
         for i in (0..k).rev() {
             let (s, y) = &self.history[i];
-            rhos[i] = 1.0 / y.dot(s);
-            alphas[i] = rhos[i] * s.dot(&q);
+            rhos[i] = 1.0 / self.dot(y, s);
+            alphas[i] = rhos[i] * self.dot(s, &q);
             q.axpy_inplace(-alphas[i], y);
         }
         // Initial Hessian scaling gamma = s·y / y·y (N&W eq. 7.20).
         if let Some((s, y)) = self.history.last() {
-            let gamma = s.dot(y) / y.dot(y);
+            let gamma = self.dot(s, y) / self.dot(y, y);
             q = q.scale(gamma);
         }
         for i in 0..k {
             let (s, y) = &self.history[i];
-            let beta = rhos[i] * y.dot(&q);
+            let beta = rhos[i] * self.dot(y, &q);
             q.axpy_inplace(alphas[i] - beta, s);
         }
         q.neg()
@@ -128,12 +162,12 @@ impl Lbfgs {
         }
 
         let mut dir = self.direction(&g0);
-        let mut dg0 = dir.dot(&g0);
+        let mut dg0 = self.dot(&dir, &g0);
         if dg0 >= 0.0 {
             // Not a descent direction (stale curvature) — reset to steepest.
             self.history.clear();
             dir = g0.neg();
-            dg0 = dir.dot(&g0);
+            dg0 = self.dot(&dir, &g0);
         }
 
         let result = match self.line_search {
@@ -151,7 +185,7 @@ impl Lbfgs {
                     None => self.value_grad(obj, &new_theta).1,
                 };
                 let y = g_new.sub(&g0);
-                let sy = s.dot(&y);
+                let sy = self.dot(&s, &y);
                 if sy > 1e-10 * s.norm() * y.norm() {
                     self.history.push((s, y));
                     if self.history.len() > self.m {
@@ -218,7 +252,7 @@ impl Lbfgs {
         let phi = |this: &mut Self, obj: &mut dyn Objective, a: f64| {
             let trial = theta.axpy(a, dir);
             let (f, g) = this.value_grad(obj, &trial);
-            let dphi = g.dot(dir);
+            let dphi = this.dot(&g, dir);
             (f, dphi, g)
         };
 
@@ -263,7 +297,7 @@ impl Lbfgs {
             let alpha = 0.5 * (lo + hi);
             let trial = theta.axpy(alpha, dir);
             let (f, g) = self.value_grad(obj, &trial);
-            let dphi = g.dot(dir);
+            let dphi = self.dot(&g, dir);
             if !f.is_finite() || f > f0 + self.c1 * alpha * dg0 || f >= f_lo {
                 hi = alpha;
             } else {
@@ -410,6 +444,37 @@ mod tests {
         let (_, status) = opt.step(&mut Wall, &mut theta);
         assert_eq!(status, LbfgsStatus::LineSearchFailed);
         assert_eq!(theta.data(), &[0.0, 0.0]);
+    }
+
+    /// The reduction policy is a pure scheduling knob: trajectories on a
+    /// high-dimensional objective (several reduction chunks) are bitwise
+    /// identical across policies.
+    #[test]
+    fn policy_does_not_change_trajectory_bitwise() {
+        let dim = 3000; // > 2 reduction chunks
+        let center = Tensor::linspace(-1.0, 1.0, dim);
+        let run = |policy: ParallelPolicy| {
+            let mut obj = Quadratic { center: center.clone() };
+            let mut theta = Tensor::zeros(&[dim]);
+            let mut opt = Lbfgs::new(dim).with_policy(policy);
+            let mut trace = Vec::new();
+            for _ in 0..10 {
+                opt.step(&mut obj, &mut theta);
+                trace.push(theta.clone());
+            }
+            trace
+        };
+        let want = run(ParallelPolicy::Serial);
+        for policy in [
+            ParallelPolicy::Fixed(2),
+            ParallelPolicy::Fixed(8),
+            ParallelPolicy::Auto,
+        ] {
+            let got = run(policy);
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a, b, "{policy:?} step {i}");
+            }
+        }
     }
 
     #[test]

@@ -4,6 +4,13 @@
 //! with a line search (refinement) — the L-BFGS line search performs
 //! multiple *forward* passes per step, which is where n-TangentProp's
 //! forward-pass advantage compounds (paper §IV-C, Fig. 6).
+//!
+//! All three optimizers accept a [`crate::ntp::ParallelPolicy`] via
+//! `with_policy`: Adam/SGD split their elementwise updates across scoped
+//! threads, L-BFGS computes its inner products with the deterministic
+//! chunked reduction of [`crate::util::par`]. In every case the policy is
+//! scheduling-only — results are bitwise identical to serial, which is
+//! what keeps multi-threaded training trajectories reproducible.
 
 pub mod adam;
 pub mod lbfgs;
@@ -21,6 +28,7 @@ use crate::tensor::Tensor;
 /// cheaper (L-BFGS line searches exploit that — the paper's Fig. 6
 /// mechanism).
 pub trait Objective {
+    /// `(loss, dloss/dtheta)` at `theta`.
     fn value_grad(&mut self, theta: &Tensor) -> (f64, Tensor);
 
     /// Loss only; default delegates to `value_grad`.
@@ -34,6 +42,7 @@ pub trait Objective {
 
 /// A quadratic bowl objective for optimizer tests: `0.5·||x - c||²`.
 pub struct Quadratic {
+    /// The minimum location `c`.
     pub center: Tensor,
 }
 

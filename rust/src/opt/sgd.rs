@@ -1,38 +1,92 @@
 //! Plain SGD with optional momentum — baseline optimizer and ablation.
+//!
+//! Like [`super::Adam`], the update is elementwise, so a
+//! [`ParallelPolicy`] splits it across contiguous blocks with bitwise
+//! serial-identical results.
 
 use super::Objective;
+use crate::ntp::ParallelPolicy;
 use crate::tensor::Tensor;
+use crate::util::par;
 
+/// Elements per update block when the policy parallelizes [`Sgd::apply`].
+const UPDATE_BLOCK: usize = 4096;
+
+/// SGD(+momentum) state over a flat parameter vector.
 #[derive(Clone, Debug)]
 pub struct Sgd {
+    /// Learning rate.
     pub lr: f64,
+    /// Momentum coefficient (0 disables).
     pub momentum: f64,
     velocity: Tensor,
+    policy: ParallelPolicy,
 }
 
 impl Sgd {
+    /// Fresh state for `dim` parameters (serial updates).
     pub fn new(dim: usize, lr: f64, momentum: f64) -> Sgd {
         Sgd {
             lr,
             momentum,
             velocity: Tensor::zeros(&[dim]),
+            policy: ParallelPolicy::Serial,
         }
     }
 
+    /// Split the elementwise update across threads per `policy` (bitwise
+    /// identical to serial for any worker count).
+    pub fn with_policy(mut self, policy: ParallelPolicy) -> Sgd {
+        self.policy = policy;
+        self
+    }
+
+    /// The update-parallelism policy.
+    pub fn policy(&self) -> ParallelPolicy {
+        self.policy
+    }
+
+    /// One update in place; returns the step's loss.
     pub fn step(&mut self, obj: &mut dyn Objective, theta: &mut Tensor) -> f64 {
         let (loss, grad) = obj.value_grad(theta);
         self.apply(theta, &grad);
         loss
     }
 
+    /// Apply a raw gradient (used when the caller already has it).
     pub fn apply(&mut self, theta: &mut Tensor, grad: &Tensor) {
-        let v = self.velocity.data_mut();
-        let g = grad.data();
-        let th = theta.data_mut();
-        for i in 0..g.len() {
-            v[i] = self.momentum * v[i] - self.lr * g[i];
-            th[i] += v[i];
+        assert_eq!(theta.numel(), grad.numel());
+        let (lr, momentum) = (self.lr, self.momentum);
+        let update = |v: &mut [f64], th: &mut [f64], g: &[f64]| {
+            for i in 0..g.len() {
+                v[i] = momentum * v[i] - lr * g[i];
+                th[i] += v[i];
+            }
+        };
+
+        let len = grad.numel();
+        let workers = par::workers_for_tasks(self.policy, len.div_ceil(UPDATE_BLOCK));
+        if workers <= 1 {
+            update(self.velocity.data_mut(), theta.data_mut(), grad.data());
+            return;
         }
+        let per = len.div_ceil(workers);
+        std::thread::scope(|s| {
+            let update = &update;
+            let mut v_rest = self.velocity.data_mut();
+            let mut t_rest = theta.data_mut();
+            let mut g_rest = grad.data();
+            while g_rest.len() > per {
+                let (v0, v1) = v_rest.split_at_mut(per);
+                let (t0, t1) = t_rest.split_at_mut(per);
+                let (g0, g1) = g_rest.split_at(per);
+                v_rest = v1;
+                t_rest = t1;
+                g_rest = g1;
+                s.spawn(move || update(v0, t0, g0));
+            }
+            update(v_rest, t_rest, g_rest);
+        });
     }
 }
 
@@ -40,6 +94,7 @@ impl Sgd {
 mod tests {
     use super::*;
     use crate::opt::Quadratic;
+    use crate::util::prng::Prng;
 
     #[test]
     fn converges_on_quadratic() {
@@ -66,5 +121,22 @@ mod tests {
             (theta.sub(&center)).norm()
         };
         assert!(run(0.9) < run(0.0));
+    }
+
+    /// Parallel updates are bitwise identical to serial ones.
+    #[test]
+    fn parallel_apply_is_bitwise_identical_to_serial() {
+        let dim = 2 * UPDATE_BLOCK + 13;
+        let mut rng = Prng::seeded(0x56D);
+        let mut serial = Sgd::new(dim, 0.05, 0.9);
+        let mut parallel = Sgd::new(dim, 0.05, 0.9).with_policy(ParallelPolicy::Fixed(4));
+        let mut ta = Tensor::rand_normal(&[dim], 0.0, 1.0, &mut rng);
+        let mut tb = ta.clone();
+        for _ in 0..3 {
+            let g = Tensor::rand_normal(&[dim], 0.0, 1.0, &mut rng);
+            serial.apply(&mut ta, &g);
+            parallel.apply(&mut tb, &g);
+            assert_eq!(ta, tb);
+        }
     }
 }

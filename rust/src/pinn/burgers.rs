@@ -34,6 +34,7 @@ pub struct BurgersProfile {
 }
 
 impl BurgersProfile {
+    /// The `k`-th self-similar profile (`k = 1..=4` in the paper).
     pub fn new(k: usize) -> BurgersProfile {
         assert!(k >= 1, "profile index starts at 1");
         BurgersProfile { k, c: 1.0 }

@@ -43,6 +43,7 @@ pub enum DerivEngine {
 /// Hyper-parameters of the Burgers PINN loss.
 #[derive(Clone, Debug)]
 pub struct BurgersLossSpec {
+    /// The profile being trained against.
     pub profile: BurgersProfile,
     /// Sobolev order `m` on the residual (paper trains with m = 1).
     pub m_sobolev: usize,
@@ -94,11 +95,15 @@ pub struct PinnObjective {
     template: Mlp,
     lambda_range: (f64, f64),
     n_params: usize,
+    /// The loss hyper-parameters this objective was built from.
     pub spec: BurgersLossSpec,
+    /// Which derivative engine computes the channels.
     pub engine: DerivEngine,
-    /// Collocation sets (kept for inspection/reporting).
+    /// Residual collocation set (kept for inspection/reporting).
     pub x_res: Tensor,
+    /// Near-origin collocation set.
     pub x_org: Tensor,
+    /// Anchor points.
     pub x_bc: Tensor,
     /// Count of graph evaluations (forward passes).
     pub n_forward: u64,
@@ -120,6 +125,22 @@ fn sigmoid_node(g: &mut Graph, x: NodeId) -> NodeId {
     let t = g.tanh(half);
     let shifted = g.add_scalar(t, 1.0);
     g.scale(shifted, 0.5)
+}
+
+/// Record the λ re-parameterization `λ = lo + (hi−lo)·σ(λ_raw)` on the
+/// tape (shared by the monolithic and the sharded objective so both train
+/// the exact same λ surface).
+pub fn lambda_node(g: &mut Graph, lambda_raw: NodeId, range: (f64, f64)) -> NodeId {
+    let sig = sigmoid_node(g, lambda_raw);
+    let (lo, hi) = range;
+    let scaled = g.scale(sig, hi - lo);
+    g.add_scalar(scaled, lo)
+}
+
+/// Scalar twin of [`lambda_node`]: λ from an unconstrained `λ_raw`.
+pub fn lambda_from_raw(raw: f64, range: (f64, f64)) -> f64 {
+    let s = 0.5 * ((0.5 * raw).tanh() + 1.0);
+    range.0 + (range.1 - range.0) * s
 }
 
 /// Build `∂_x^j R` for `j = 0..=j_max` from channels `u[i] = U^{(i)}`
@@ -204,10 +225,7 @@ impl PinnObjective {
         let mut g = Graph::new();
         let param_nodes = mlp.input_param_nodes(&mut g);
         let lambda_raw = g.input(&[1]);
-        let sig = sigmoid_node(&mut g, lambda_raw);
-        let (lo, hi) = lambda_range;
-        let scaled = g.scale(sig, hi - lo);
-        let lambda = g.add_scalar(scaled, lo);
+        let lambda = lambda_node(&mut g, lambda_raw, lambda_range);
 
         let ntp = NtpEngine::new(n);
         let channels_at = |g: &mut Graph, x_const: &Tensor, order: usize| -> Vec<NodeId> {
@@ -291,10 +309,7 @@ impl PinnObjective {
 
     /// Extract λ from the flat vector.
     pub fn lambda_of(&self, theta: &Tensor) -> f64 {
-        let raw = theta.data()[self.n_params];
-        let s = 0.5 * ((0.5 * raw).tanh() + 1.0);
-        let (lo, hi) = self.lambda_range;
-        lo + (hi - lo) * s
+        lambda_from_raw(theta.data()[self.n_params], self.lambda_range)
     }
 
     /// Write the network part of `theta` into an MLP for evaluation.

@@ -7,10 +7,23 @@
 //! two-phase Adam → L-BFGS trainer that can drive either derivative
 //! engine (n-TangentProp or repeated autodiff) for the timing comparisons
 //! of Figs 6-10.
+//!
+//! Training comes in two flavours sharing one schedule
+//! ([`trainer::TrainableObjective`]):
+//!
+//! - [`PinnObjective`] / [`train_burgers`] — one monolithic tape over the
+//!   full collocation cloud (the seed behaviour).
+//! - [`ParallelObjective`] / [`train_burgers_parallel`] — the cloud
+//!   sharded into fixed row-chunks, one tape per shard, per-shard
+//!   losses/gradients accumulated on a
+//!   [`crate::ntp::ParallelPolicy`]-sized worker pool and combined with a
+//!   deterministic pairwise tree reduction: **bitwise identical for every
+//!   thread count** (`rust/tests/training_determinism.rs`).
 
 pub mod burgers;
 pub mod collocation;
 pub mod loss;
+pub mod parallel;
 pub mod series;
 pub mod trainer;
 
@@ -19,4 +32,7 @@ pub use collocation::{
     cluster_points, eval_channels, grid_points, random_points, stratified_points,
 };
 pub use loss::{residual_derivative_nodes, BurgersLossSpec, DerivEngine, PinnObjective};
-pub use trainer::{train_burgers, EpochLog, TrainConfig, TrainResult};
+pub use parallel::{ParallelObjective, DEFAULT_CHUNK_ROWS};
+pub use trainer::{
+    train_burgers, train_burgers_parallel, EpochLog, TrainConfig, TrainableObjective, TrainResult,
+};

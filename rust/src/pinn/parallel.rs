@@ -1,0 +1,540 @@
+//! Data-parallel PINN training: the collocation cloud sharded into fixed
+//! row-chunks, one loss/gradient tape per shard, combined with a
+//! deterministic pairwise tree reduction.
+//!
+//! The Burgers loss is a weighted sum of *independent per-collocation-
+//! point* residual terms (plus three anchor points), so gradient
+//! accumulation is embarrassingly data-parallel — the same structure the
+//! inference path exploits row-wise in [`crate::ntp::NtpEngine::forward_n`].
+//! [`ParallelObjective`] builds one compiled graph ("tape") per shard
+//! with *sum*-of-squares terms pre-scaled by the **global** point counts,
+//! so the shard losses and gradients sum exactly to the full objective:
+//!
+//! ```text
+//! L = Σ_s L_s,   ∇L = Σ_s ∇L_s
+//! L_s = Σ_j (Q_j/N_res)·Σ_{x∈res_s}|∂^j R|²
+//!     + (w_high/((2k+1)!² N_org))·Σ_{x∈org_s}|∂^{2k}R|²
+//!     + [s = 0]·w_bc·(anchor terms)
+//! ```
+//!
+//! # Determinism
+//!
+//! The result is **bitwise identical** for every [`ParallelPolicy`]:
+//!
+//! - The shard layout depends only on the spec and the `chunk` size,
+//!   never on the thread count.
+//! - Each shard's tape is built once on the construction thread and
+//!   evaluated purely (`Graph::eval` is `&self`), so a shard performs
+//!   the exact same float operations wherever it runs.
+//! - Per-shard losses and gradients are combined with
+//!   [`par::tree_reduce`], whose shape is a pure function of the shard
+//!   count.
+//!
+//! `rust/tests/training_determinism.rs` locks this down (2/4/8 threads
+//! vs serial, including non-divisible collocation counts and 50-step
+//! optimizer trajectories).
+
+use super::loss::{
+    lambda_from_raw, lambda_node, residual_derivative_nodes, BurgersLossSpec, DerivEngine,
+};
+use crate::autodiff::{higher, Graph, NodeId};
+use crate::nn::{params, Mlp};
+use crate::ntp::{NtpEngine, ParallelPolicy};
+use crate::opt::Objective;
+use crate::tensor::Tensor;
+use crate::util::par;
+use crate::util::prng::Prng;
+
+/// Default collocation rows per shard (see [`ParallelObjective::build`]).
+///
+/// Small enough that the default Burgers cloud (128 + 32 points) splits
+/// into several shards per core, large enough that one shard's tape
+/// evaluation amortizes the scheduling overhead.
+pub const DEFAULT_CHUNK_ROWS: usize = 32;
+
+/// One shard: a compiled loss/gradient tape over its slice of the
+/// collocation sets. Evaluation is pure (`&self`), so shards are shared
+/// by reference across the worker threads.
+struct Shard {
+    graph: Graph,
+    loss: NodeId,
+    grads: Vec<NodeId>,
+}
+
+impl Shard {
+    /// `(loss_s, ∇loss_s)` — one forward + one backward over this tape.
+    fn eval_grad(&self, inputs: &[Tensor]) -> (f64, Tensor) {
+        let mut targets = self.grads.clone();
+        targets.push(self.loss);
+        let mut vals = self.graph.eval(inputs, &targets);
+        let loss = vals.get(self.loss).item();
+        // Move (don't clone) the gradients out of the value store; they
+        // are copied exactly once, into the flat vector.
+        let gts: Vec<Tensor> = self.grads.iter().map(|&id| vals.take(id)).collect();
+        (loss, params::flatten_tensors(&gts))
+    }
+
+    /// Loss only — the cheap forward-only path (L-BFGS line searches).
+    fn eval_value(&self, inputs: &[Tensor]) -> f64 {
+        self.graph.eval(inputs, &[self.loss]).get(self.loss).item()
+    }
+}
+
+/// The three anchor points and their target values (shard 0 only).
+struct BcData {
+    x: Tensor,
+    u: Vec<f64>,
+    du: Vec<f64>,
+}
+
+/// Slice a `[B, 1]` collocation tensor into `ceil(B/chunk)` row chunks.
+fn chunk_rows(x: &Tensor, chunk: usize) -> Vec<Tensor> {
+    let b = x.shape()[0];
+    (0..b.div_ceil(chunk))
+        .map(|c| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(b);
+            Tensor::from_vec(x.data()[lo..hi].to_vec(), &[hi - lo, 1])
+        })
+        .collect()
+}
+
+/// The sharded, data-parallel PINN objective.
+///
+/// Drop-in counterpart of [`super::PinnObjective`] (same flat parameter
+/// layout `[mlp params..., λ_raw]`, same λ re-parameterization, same loss
+/// up to floating-point summation order) whose `value`/`value_grad`
+/// evaluate the shards on a pool of scoped worker threads chosen by a
+/// [`ParallelPolicy`] and tree-reduce the partial results
+/// deterministically.
+///
+/// ```
+/// use ntangent::nn::Mlp;
+/// use ntangent::ntp::ParallelPolicy;
+/// use ntangent::opt::Objective;
+/// use ntangent::pinn::{BurgersLossSpec, DerivEngine, ParallelObjective};
+/// use ntangent::util::prng::Prng;
+///
+/// let mut spec = BurgersLossSpec::for_profile(1);
+/// spec.n_res = 24; // keep the doc-example quick
+/// spec.n_org = 8;
+/// let mut rng = Prng::seeded(7);
+/// let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+/// let mut obj = ParallelObjective::build(
+///     spec,
+///     &mlp,
+///     DerivEngine::Ntp,
+///     ParallelPolicy::Fixed(2),
+///     8, // collocation rows per shard
+///     &mut rng,
+/// );
+/// let theta = obj.theta_init(&mlp);
+/// let (loss, grad) = obj.value_grad(&theta);
+/// assert!(loss.is_finite());
+/// assert_eq!(grad.numel(), obj.dim());
+/// assert!(obj.n_shards() > 1);
+/// ```
+pub struct ParallelObjective {
+    shards: Vec<Shard>,
+    template: Mlp,
+    lambda_range: (f64, f64),
+    n_params: usize,
+    policy: ParallelPolicy,
+    chunk: usize,
+    /// The loss hyper-parameters this objective was built from.
+    pub spec: BurgersLossSpec,
+    /// Which engine computes the derivative channels on every shard tape.
+    pub engine: DerivEngine,
+    /// Full residual collocation set (kept for inspection/reporting).
+    pub x_res: Tensor,
+    /// Full near-origin collocation set.
+    pub x_org: Tensor,
+    /// Anchor points.
+    pub x_bc: Tensor,
+    /// Count of forward-only evaluations.
+    pub n_forward: u64,
+    /// Count of gradient evaluations (forward + backward per shard).
+    pub n_backward: u64,
+}
+
+impl ParallelObjective {
+    /// Build the sharded objective for a fresh problem instance.
+    ///
+    /// Collocation sets are sampled exactly as [`super::PinnObjective::build`]
+    /// does (same `rng` consumption order), then split into fixed
+    /// `chunk`-row shards: residual chunk `s` lands on shard `s`, the
+    /// origin chunks fill the trailing shards (load balance against the
+    /// anchor terms on shard 0). `policy` decides how many threads
+    /// evaluate the shards; the result is bitwise independent of that
+    /// choice.
+    pub fn build(
+        spec: BurgersLossSpec,
+        mlp: &Mlp,
+        engine: DerivEngine,
+        policy: ParallelPolicy,
+        chunk: usize,
+        rng: &mut Prng,
+    ) -> ParallelObjective {
+        assert!(chunk >= 1, "chunk must be >= 1");
+        let n = spec.profile.n_derivs();
+        let lambda_range = spec.profile.lambda_range();
+
+        // Collocation sets — identical sampling to the monolithic build.
+        let x_res = super::collocation::stratified_points(-spec.x_max, spec.x_max, spec.n_res, rng);
+        let x_org = super::collocation::cluster_points(0.0, spec.origin_radius, spec.n_org, rng);
+        let bc_xs = vec![0.0, -spec.x_max, spec.x_max];
+        let bc = BcData {
+            x: Tensor::from_vec(bc_xs.clone(), &[3, 1]),
+            u: bc_xs.iter().map(|&x| spec.profile.u_true(x)).collect(),
+            du: bc_xs
+                .iter()
+                .map(|&x| spec.profile.derivatives_true(x, 1)[1])
+                .collect(),
+        };
+
+        let res_chunks = chunk_rows(&x_res, chunk);
+        let org_chunks = chunk_rows(&x_org, chunk);
+        let n_shards = res_chunks.len().max(org_chunks.len()).max(1);
+        // Load balance: anchors sit on shard 0, so the (high-order,
+        // heavier) origin chunks go on the *trailing* shards. Still a
+        // pure function of (spec, chunk) — never of the thread count —
+        // so the determinism guarantee is untouched.
+        let org_offset = n_shards - org_chunks.len();
+
+        let ntp = NtpEngine::new(n);
+        let shards: Vec<Shard> = (0..n_shards)
+            .map(|s| {
+                build_shard(
+                    &spec,
+                    mlp,
+                    engine,
+                    &ntp,
+                    lambda_range,
+                    res_chunks.get(s),
+                    org_chunks.get(s.wrapping_sub(org_offset)),
+                    if s == 0 { Some(&bc) } else { None },
+                )
+            })
+            .collect();
+
+        ParallelObjective {
+            shards,
+            template: mlp.clone(),
+            lambda_range,
+            n_params: mlp.n_params(),
+            policy,
+            chunk,
+            spec,
+            engine,
+            x_res,
+            x_org,
+            x_bc: bc.x,
+            n_forward: 0,
+            n_backward: 0,
+        }
+    }
+
+    /// Number of shards (tapes) the collocation cloud was split into.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Collocation rows per shard this objective was built with.
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// The policy evaluating the shards.
+    pub fn policy(&self) -> ParallelPolicy {
+        self.policy
+    }
+
+    /// Change the evaluation policy. Purely a scheduling knob: results
+    /// stay bitwise identical (the shard layout is fixed at build time).
+    pub fn set_policy(&mut self, policy: ParallelPolicy) {
+        self.policy = policy;
+    }
+
+    /// Total node count across all shard tapes — the size metric the
+    /// training benchmarks report.
+    pub fn graph_len(&self) -> usize {
+        self.shards.iter().map(|s| s.graph.len()).sum()
+    }
+
+    /// Initial flat parameter vector: current MLP weights + `λ_raw = 0`
+    /// (λ starts mid-bracket).
+    pub fn theta_init(&self, mlp: &Mlp) -> Tensor {
+        let flat = params::flatten(mlp);
+        let mut data = flat.into_vec();
+        data.push(0.0);
+        Tensor::from_vec(data, &[self.n_params + 1])
+    }
+
+    /// Extract λ from the flat vector.
+    pub fn lambda_of(&self, theta: &Tensor) -> f64 {
+        lambda_from_raw(theta.data()[self.n_params], self.lambda_range)
+    }
+
+    /// Write the network part of `theta` into an MLP for evaluation.
+    pub fn mlp_of(&self, theta: &Tensor) -> Mlp {
+        let mut mlp = self.template.clone();
+        let flat = Tensor::from_vec(theta.data()[..self.n_params].to_vec(), &[self.n_params]);
+        params::unflatten_into(&mut mlp, &flat);
+        mlp
+    }
+
+    /// Per-slot input tensors (every shard declares the same slot layout:
+    /// `W0, b0, W1, b1, ..., λ_raw`).
+    fn inputs_of(&self, theta: &Tensor) -> Vec<Tensor> {
+        assert_eq!(theta.numel(), self.n_params + 1, "theta length");
+        let flat = Tensor::from_vec(theta.data()[..self.n_params].to_vec(), &[self.n_params]);
+        let mut inputs = params::split_like(&self.template, &flat);
+        inputs.push(Tensor::from_vec(vec![theta.data()[self.n_params]], &[1]));
+        inputs
+    }
+}
+
+impl Objective for ParallelObjective {
+    fn value_grad(&mut self, theta: &Tensor) -> (f64, Tensor) {
+        self.n_backward += 1;
+        let inputs = self.inputs_of(theta);
+        let shards = &self.shards;
+        let workers = par::workers_for_tasks(self.policy, shards.len());
+        let results = par::run_indexed(shards.len(), workers, |s| shards[s].eval_grad(&inputs));
+        let loss = par::tree_reduce(results.iter().map(|(l, _)| *l).collect(), |a, b| a + b)
+            .expect("objective has at least one shard");
+        let grad = par::tree_reduce(
+            results.into_iter().map(|(_, g)| g).collect::<Vec<_>>(),
+            |mut a, b| {
+                for (x, &y) in a.data_mut().iter_mut().zip(b.data()) {
+                    *x += y;
+                }
+                a
+            },
+        )
+        .expect("objective has at least one shard");
+        (loss, grad)
+    }
+
+    fn value(&mut self, theta: &Tensor) -> f64 {
+        self.n_forward += 1;
+        let inputs = self.inputs_of(theta);
+        let shards = &self.shards;
+        let workers = par::workers_for_tasks(self.policy, shards.len());
+        let losses = par::run_indexed(shards.len(), workers, |s| shards[s].eval_value(&inputs));
+        par::tree_reduce(losses, |a, b| a + b).expect("objective has at least one shard")
+    }
+
+    fn dim(&self) -> usize {
+        self.n_params + 1
+    }
+}
+
+/// Build one shard's tape: sum-of-squares residual terms over its slices,
+/// pre-scaled by the global point counts (see the module docs), plus the
+/// anchor terms on shard 0, then a single `backward`.
+#[allow(clippy::too_many_arguments)]
+fn build_shard(
+    spec: &BurgersLossSpec,
+    mlp: &Mlp,
+    engine: DerivEngine,
+    ntp: &NtpEngine,
+    lambda_range: (f64, f64),
+    res: Option<&Tensor>,
+    org: Option<&Tensor>,
+    bc: Option<&BcData>,
+) -> Shard {
+    let n = spec.profile.n_derivs();
+    let k2 = 2 * spec.profile.k;
+
+    let mut g = Graph::new();
+    let param_nodes = mlp.input_param_nodes(&mut g);
+    let lambda_raw = g.input(&[1]);
+    let lambda = lambda_node(&mut g, lambda_raw, lambda_range);
+
+    let channels_at = |g: &mut Graph, x_const: &Tensor, order: usize| -> Vec<NodeId> {
+        let xn = g.constant(x_const.clone());
+        match engine {
+            DerivEngine::Ntp => ntp.forward_graph(g, mlp, xn, &param_nodes, order),
+            DerivEngine::Autodiff => {
+                let u = mlp.forward_graph(g, xn, &param_nodes);
+                higher::derivative_stack(g, u, xn, order)
+            }
+        }
+    };
+    // Scaled sum of squares: `coeff · Σ r²` (the sharded counterpart of
+    // the monolithic mean-square terms).
+    let sum_sq = |g: &mut Graph, r: NodeId, coeff: f64| -> NodeId {
+        let sq = g.mul(r, r);
+        let sum = g.sum_all(sq);
+        g.scale(sum, coeff)
+    };
+
+    let mut loss: Option<NodeId> = None;
+    let push = |g: &mut Graph, term: NodeId, loss: &mut Option<NodeId>| {
+        *loss = Some(match *loss {
+            None => term,
+            Some(acc) => g.add(acc, term),
+        });
+    };
+
+    // --- Sobolev residual terms over this shard's domain slice ---------
+    if let Some(x) = res {
+        let u = channels_at(&mut g, x, spec.m_sobolev + 1);
+        let xn = g.constant(x.clone());
+        let r_nodes = residual_derivative_nodes(&mut g, &u, xn, lambda, spec.m_sobolev);
+        for (j, &r) in r_nodes.iter().enumerate() {
+            let term = sum_sq(&mut g, r, spec.q_weights[j] / spec.n_res as f64);
+            push(&mut g, term, &mut loss);
+        }
+    }
+
+    // --- High-order smoothness near the origin (L*) --------------------
+    if let Some(x) = org {
+        let u = channels_at(&mut g, x, n);
+        let xn = g.constant(x.clone());
+        let r_org = residual_derivative_nodes(&mut g, &u, xn, lambda, k2);
+        let fact: f64 = (1..=(k2 + 1)).map(|i| i as f64).product();
+        let term = sum_sq(
+            &mut g,
+            r_org[k2],
+            spec.w_high / (fact * fact * spec.n_org as f64),
+        );
+        push(&mut g, term, &mut loss);
+    }
+
+    // --- Anchor terms (shard 0 only) ------------------------------------
+    if let Some(bc) = bc {
+        let u_bc = channels_at(&mut g, &bc.x, 1);
+        let target_u = g.constant(Tensor::from_vec(bc.u.clone(), &[3, 1]));
+        let target_du = g.constant(Tensor::from_vec(bc.du.clone(), &[3, 1]));
+        let du0 = g.sub(u_bc[0], target_u);
+        let ms_u = g.mean_square(du0);
+        let du1 = g.sub(u_bc[1], target_du);
+        let ms_du = g.mean_square(du1);
+        let bc_sum = g.add(ms_u, ms_du);
+        let term = g.scale(bc_sum, spec.w_bc);
+        push(&mut g, term, &mut loss);
+    }
+
+    let loss = loss.expect("shard has at least one loss term");
+    let mut wrt = param_nodes.clone();
+    wrt.push(lambda_raw);
+    let grads = g.backward(loss, &wrt);
+
+    Shard { graph: g, loss, grads }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pinn::PinnObjective;
+    use crate::util::allclose_slice;
+
+    fn tiny_spec() -> BurgersLossSpec {
+        let mut spec = BurgersLossSpec::for_profile(1);
+        spec.n_res = 20;
+        spec.n_org = 6;
+        spec
+    }
+
+    /// Shards must be shareable by reference across scoped threads.
+    #[test]
+    fn objective_is_send_and_sync() {
+        fn assert_sync<T: Sync>() {}
+        fn assert_send<T: Send>() {}
+        assert_sync::<ParallelObjective>();
+        assert_send::<ParallelObjective>();
+        assert_sync::<Shard>();
+    }
+
+    #[test]
+    fn sharded_loss_and_grad_match_monolithic() {
+        for engine in [DerivEngine::Ntp, DerivEngine::Autodiff] {
+            let mut rng = Prng::seeded(42);
+            let mlp = Mlp::uniform(1, 6, 2, 1, &mut rng);
+            let mut rng_a = Prng::seeded(7);
+            let mut rng_b = Prng::seeded(7);
+            let mut mono = PinnObjective::build(tiny_spec(), &mlp, engine, &mut rng_a);
+            let mut shd = ParallelObjective::build(
+                tiny_spec(),
+                &mlp,
+                engine,
+                ParallelPolicy::Serial,
+                8,
+                &mut rng_b,
+            );
+            assert_eq!(shd.n_shards(), 3); // ceil(20/8) residual chunks
+            // Identical rng consumption ⇒ identical collocation clouds.
+            assert_eq!(mono.x_res, shd.x_res);
+            assert_eq!(mono.x_org, shd.x_org);
+
+            let theta = mono.theta_init(&mlp);
+            let (l1, g1) = mono.value_grad(&theta);
+            let (l2, g2) = shd.value_grad(&theta);
+            assert!(
+                (l1 - l2).abs() <= 1e-10 * l1.abs().max(1.0),
+                "{engine:?}: {l1} vs {l2}"
+            );
+            assert!(
+                allclose_slice(g1.data(), g2.data(), 1e-8, 1e-10),
+                "{engine:?}: grad max diff {}",
+                crate::util::max_abs_diff(g1.data(), g2.data())
+            );
+            assert_eq!(shd.value(&theta), l2, "value() must match value_grad()");
+            assert_eq!(shd.lambda_of(&theta), mono.lambda_of(&theta));
+        }
+    }
+
+    #[test]
+    fn policy_change_is_bitwise_invisible() {
+        let mut rng_a = Prng::seeded(9);
+        let mut rng_b = Prng::seeded(9);
+        let mut rng_m = Prng::seeded(1);
+        let mlp = Mlp::uniform(1, 6, 2, 1, &mut rng_m);
+        let mut serial = ParallelObjective::build(
+            tiny_spec(),
+            &mlp,
+            DerivEngine::Ntp,
+            ParallelPolicy::Serial,
+            4,
+            &mut rng_a,
+        );
+        let mut fixed = ParallelObjective::build(
+            tiny_spec(),
+            &mlp,
+            DerivEngine::Ntp,
+            ParallelPolicy::Fixed(3),
+            4,
+            &mut rng_b,
+        );
+        let theta = serial.theta_init(&mlp);
+        let (l1, g1) = serial.value_grad(&theta);
+        let (l2, g2) = fixed.value_grad(&theta);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(g1, g2);
+        assert_eq!(serial.value(&theta).to_bits(), fixed.value(&theta).to_bits());
+    }
+
+    #[test]
+    fn counters_and_sizes_track() {
+        let mut rng = Prng::seeded(3);
+        let mlp = Mlp::uniform(1, 5, 2, 1, &mut rng);
+        let mut obj = ParallelObjective::build(
+            tiny_spec(),
+            &mlp,
+            DerivEngine::Ntp,
+            ParallelPolicy::Serial,
+            64, // chunk > n_res: everything lands on one shard
+            &mut rng,
+        );
+        assert_eq!(obj.n_shards(), 1);
+        assert!(obj.graph_len() > 0);
+        let theta = obj.theta_init(&mlp);
+        let v = obj.value(&theta);
+        let (vg, _) = obj.value_grad(&theta);
+        assert_eq!(v, vg);
+        assert_eq!(obj.n_forward, 1);
+        assert_eq!(obj.n_backward, 1);
+    }
+}

@@ -1,11 +1,21 @@
 //! Two-phase PINN trainer (Adam exploration → L-BFGS refinement), the
 //! paper's training schedule for the self-similar Burgers profiles, with
 //! per-epoch logging of loss, λ and wall-clock — everything Figs 6-10 need.
+//!
+//! Two entry points share the schedule:
+//!
+//! - [`train_burgers`] — the monolithic single-tape objective
+//!   ([`PinnObjective`]), the seed behaviour.
+//! - [`train_burgers_parallel`] — the sharded data-parallel objective
+//!   ([`ParallelObjective`]): gradient accumulation over fixed collocation
+//!   chunks on a [`ParallelPolicy`]-sized worker pool, bitwise
+//!   reproducible for every policy (CLI: `ntangent train --threads N`).
 
 use super::burgers::BurgersProfile;
 use super::loss::{BurgersLossSpec, DerivEngine, PinnObjective};
+use super::parallel::ParallelObjective;
 use crate::nn::Mlp;
-use crate::ntp::ActivationKind;
+use crate::ntp::{ActivationKind, ParallelPolicy};
 use crate::opt::{Adam, Lbfgs, LbfgsStatus, Objective};
 use crate::tensor::Tensor;
 use crate::util::prng::Prng;
@@ -14,18 +24,31 @@ use std::time::Instant;
 /// Training configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Hidden-layer width.
     pub width: usize,
+    /// Number of hidden layers.
     pub depth: usize,
     /// Hidden activation of the PINN (tanh is the paper's choice; sine
     /// gives SIREN-style spectral behaviour, softplus/GELU are the other
     /// registered smooth towers).
     pub activation: ActivationKind,
+    /// Adam (exploration) epochs.
     pub adam_epochs: usize,
+    /// L-BFGS (refinement) epochs.
     pub lbfgs_epochs: usize,
+    /// Adam learning rate.
     pub adam_lr: f64,
+    /// PRNG seed (network init + collocation sampling).
     pub seed: u64,
     /// Record a log entry every `log_every` epochs (and always the last).
     pub log_every: usize,
+    /// Worker-thread policy for the data-parallel training path (used by
+    /// [`train_burgers_parallel`] for shard evaluation and by the
+    /// optimizers for their deterministic reductions). Purely a
+    /// scheduling knob: any policy produces bitwise-identical results.
+    pub policy: ParallelPolicy,
+    /// Collocation rows per shard for [`train_burgers_parallel`].
+    pub chunk: usize,
 }
 
 impl Default for TrainConfig {
@@ -41,6 +64,8 @@ impl Default for TrainConfig {
             adam_lr: 1e-3,
             seed: 0,
             log_every: 10,
+            policy: ParallelPolicy::Serial,
+            chunk: super::parallel::DEFAULT_CHUNK_ROWS,
         }
     }
 }
@@ -48,10 +73,13 @@ impl Default for TrainConfig {
 /// One logged epoch.
 #[derive(Clone, Debug)]
 pub struct EpochLog {
+    /// Global epoch index (Adam epochs count from 0, L-BFGS continues).
     pub epoch: usize,
     /// "adam" or "lbfgs".
     pub phase: &'static str,
+    /// Loss at the start of the epoch.
     pub loss: f64,
+    /// Inverse parameter λ after the epoch.
     pub lambda: f64,
     /// Cumulative training wall-clock seconds at this epoch.
     pub elapsed: f64,
@@ -59,16 +87,23 @@ pub struct EpochLog {
 
 /// Result of a training run.
 pub struct TrainResult {
+    /// The trained network.
     pub mlp: Mlp,
+    /// Final inverse parameter λ.
     pub lambda: f64,
+    /// Final loss.
     pub final_loss: f64,
+    /// Per-epoch log entries.
     pub logs: Vec<EpochLog>,
     /// Total wall-clock seconds.
     pub seconds: f64,
-    /// Forward-only / forward+backward evaluation counts.
+    /// Forward-only evaluation count.
     pub n_forward: u64,
+    /// Forward+backward evaluation count.
     pub n_backward: u64,
+    /// The derivative engine that computed the channels.
     pub engine: DerivEngine,
+    /// The Burgers profile trained against.
     pub profile: BurgersProfile,
 }
 
@@ -91,8 +126,55 @@ impl TrainResult {
     }
 }
 
+/// An [`Objective`] plus the PINN accessors the two-phase schedule needs
+/// (λ extraction, network reconstruction, evaluation counters).
+///
+/// Implemented by the monolithic [`PinnObjective`] and the sharded
+/// [`ParallelObjective`], so both drive the identical schedule.
+pub trait TrainableObjective: Objective {
+    /// λ extracted from the flat parameter vector.
+    fn lambda_at(&self, theta: &Tensor) -> f64;
+    /// The network part of `theta` as an [`Mlp`].
+    fn network_at(&self, theta: &Tensor) -> Mlp;
+    /// Initial flat parameter vector for `mlp`.
+    fn init_theta(&self, mlp: &Mlp) -> Tensor;
+    /// `(n_forward, n_backward)` evaluation counts so far.
+    fn eval_counts(&self) -> (u64, u64);
+}
+
+impl TrainableObjective for PinnObjective {
+    fn lambda_at(&self, theta: &Tensor) -> f64 {
+        self.lambda_of(theta)
+    }
+    fn network_at(&self, theta: &Tensor) -> Mlp {
+        self.mlp_of(theta)
+    }
+    fn init_theta(&self, mlp: &Mlp) -> Tensor {
+        self.theta_init(mlp)
+    }
+    fn eval_counts(&self) -> (u64, u64) {
+        (self.n_forward, self.n_backward)
+    }
+}
+
+impl TrainableObjective for ParallelObjective {
+    fn lambda_at(&self, theta: &Tensor) -> f64 {
+        self.lambda_of(theta)
+    }
+    fn network_at(&self, theta: &Tensor) -> Mlp {
+        self.mlp_of(theta)
+    }
+    fn init_theta(&self, mlp: &Mlp) -> Tensor {
+        self.theta_init(mlp)
+    }
+    fn eval_counts(&self) -> (u64, u64) {
+        (self.n_forward, self.n_backward)
+    }
+}
+
 /// Train a PINN for the k-th Burgers profile with the chosen derivative
-/// engine. This is the end-to-end driver behind Figs 6-10.
+/// engine on the monolithic single-tape objective. This is the end-to-end
+/// driver behind Figs 6-10.
 pub fn train_burgers(
     spec: BurgersLossSpec,
     cfg: &TrainConfig,
@@ -101,32 +183,85 @@ pub fn train_burgers(
     let profile = spec.profile;
     let mut rng = Prng::seeded(cfg.seed);
     let mlp = Mlp::uniform_with(1, cfg.width, cfg.depth, 1, cfg.activation, &mut rng);
-    let mut obj = PinnObjective::build(spec, &mlp, engine, &mut rng);
-    let mut theta = obj.theta_init(&mlp);
+    let obj = PinnObjective::build(spec, &mlp, engine, &mut rng);
+    run_schedule(obj, &mlp, cfg, engine, profile)
+}
+
+/// Train a PINN on the **sharded data-parallel objective**: the
+/// collocation cloud is split into fixed `cfg.chunk`-row shards, each
+/// epoch evaluates shard losses/gradients on a `cfg.policy`-sized worker
+/// pool, and partial gradients are combined with a deterministic pairwise
+/// tree reduction — so the whole 50-step-and-beyond trajectory (Adam
+/// moments, L-BFGS curvature pairs, θ itself) is **bitwise identical**
+/// for every policy (`rust/tests/training_determinism.rs`).
+///
+/// ```
+/// use ntangent::ntp::ParallelPolicy;
+/// use ntangent::pinn::{train_burgers_parallel, BurgersLossSpec, DerivEngine, TrainConfig};
+///
+/// let mut spec = BurgersLossSpec::for_profile(1);
+/// spec.n_res = 16; // keep the doc-example quick
+/// spec.n_org = 4;
+/// let cfg = TrainConfig {
+///     width: 6,
+///     depth: 2,
+///     adam_epochs: 3,
+///     lbfgs_epochs: 2,
+///     policy: ParallelPolicy::Fixed(2),
+///     chunk: 8,
+///     ..TrainConfig::default()
+/// };
+/// let result = train_burgers_parallel(spec, &cfg, DerivEngine::Ntp);
+/// assert!(result.final_loss.is_finite());
+/// assert_eq!(result.logs.last().unwrap().phase, "lbfgs");
+/// ```
+pub fn train_burgers_parallel(
+    spec: BurgersLossSpec,
+    cfg: &TrainConfig,
+    engine: DerivEngine,
+) -> TrainResult {
+    let profile = spec.profile;
+    let mut rng = Prng::seeded(cfg.seed);
+    let mlp = Mlp::uniform_with(1, cfg.width, cfg.depth, 1, cfg.activation, &mut rng);
+    let obj = ParallelObjective::build(spec, &mlp, engine, cfg.policy, cfg.chunk, &mut rng);
+    run_schedule(obj, &mlp, cfg, engine, profile)
+}
+
+/// The shared two-phase schedule: Adam exploration, then L-BFGS with a
+/// forward-only backtracking line search. Both optimizers run with
+/// `cfg.policy` so their reductions/updates stay thread-count-invariant.
+fn run_schedule<O: TrainableObjective>(
+    mut obj: O,
+    mlp: &Mlp,
+    cfg: &TrainConfig,
+    engine: DerivEngine,
+    profile: BurgersProfile,
+) -> TrainResult {
+    let mut theta = obj.init_theta(mlp);
 
     let mut logs = Vec::new();
     let start = Instant::now();
-    let mut log = |obj: &PinnObjective, epoch, phase, loss, theta: &Tensor, force: bool| {
+    let mut log = |obj: &O, epoch, phase, loss, theta: &Tensor, force: bool| {
         if force || epoch % cfg.log_every == 0 {
             logs.push(EpochLog {
                 epoch,
                 phase,
                 loss,
-                lambda: obj.lambda_of(theta),
+                lambda: obj.lambda_at(theta),
                 elapsed: start.elapsed().as_secs_f64(),
             });
         }
     };
 
     // Phase 1: Adam.
-    let mut adam = Adam::new(obj.dim(), cfg.adam_lr);
+    let mut adam = Adam::new(obj.dim(), cfg.adam_lr).with_policy(cfg.policy);
     for epoch in 0..cfg.adam_epochs {
         let loss = adam.step(&mut obj, &mut theta);
         log(&obj, epoch, "adam", loss, &theta, epoch + 1 == cfg.adam_epochs);
     }
 
     // Phase 2: L-BFGS with (forward-only) backtracking line search.
-    let mut lbfgs = Lbfgs::new(obj.dim());
+    let mut lbfgs = Lbfgs::new(obj.dim()).with_policy(cfg.policy);
     let mut last_loss = f64::INFINITY;
     for epoch in 0..cfg.lbfgs_epochs {
         let (loss, status) = lbfgs.step(&mut obj, &mut theta);
@@ -145,9 +280,10 @@ pub fn train_burgers(
     }
 
     let seconds = start.elapsed().as_secs_f64();
+    let (n_forward, n_backward) = obj.eval_counts();
     TrainResult {
-        mlp: obj.mlp_of(&theta),
-        lambda: obj.lambda_of(&theta),
+        mlp: obj.network_at(&theta),
+        lambda: obj.lambda_at(&theta),
         final_loss: if last_loss.is_finite() {
             last_loss
         } else {
@@ -155,8 +291,8 @@ pub fn train_burgers(
         },
         logs,
         seconds,
-        n_forward: obj.n_forward,
-        n_backward: obj.n_backward,
+        n_forward,
+        n_backward,
         engine,
         profile,
     }
@@ -165,6 +301,7 @@ pub fn train_burgers(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::params;
 
     fn quick_cfg() -> TrainConfig {
         TrainConfig {
@@ -176,6 +313,7 @@ mod tests {
             adam_lr: 2e-3,
             seed: 3,
             log_every: 10,
+            ..TrainConfig::default()
         }
     }
 
@@ -236,5 +374,54 @@ mod tests {
             assert!(w[1].elapsed >= w[0].elapsed);
         }
         assert_eq!(result.logs.last().unwrap().phase, "lbfgs");
+    }
+
+    /// The sharded trainer follows (numerically) the same optimization as
+    /// the monolithic one: same seed ⇒ same init and collocation, and the
+    /// trajectories only differ by floating-point summation order, so the
+    /// short-run results must agree to tight tolerance.
+    #[test]
+    fn parallel_trainer_tracks_monolithic_trainer() {
+        let mut cfg = quick_cfg();
+        cfg.adam_epochs = 25;
+        cfg.lbfgs_epochs = 0;
+        let mono = train_burgers(quick_spec(), &cfg, DerivEngine::Ntp);
+        let shd = train_burgers_parallel(quick_spec(), &cfg, DerivEngine::Ntp);
+        assert!(
+            (mono.final_loss - shd.final_loss).abs()
+                < 1e-6 * mono.final_loss.abs().max(1e-9),
+            "{} vs {}",
+            mono.final_loss,
+            shd.final_loss
+        );
+        assert!((mono.lambda - shd.lambda).abs() < 1e-7);
+        let wa = params::flatten(&mono.mlp);
+        let wb = params::flatten(&shd.mlp);
+        assert!(
+            crate::util::allclose_slice(wa.data(), wb.data(), 1e-6, 1e-8),
+            "weights diverged: max {}",
+            crate::util::max_abs_diff(wa.data(), wb.data())
+        );
+    }
+
+    /// Short end-to-end parallel run: loss decreases and the logs carry
+    /// both phases, exactly as for the monolithic trainer.
+    #[test]
+    fn parallel_training_reduces_loss() {
+        let mut cfg = quick_cfg();
+        cfg.adam_epochs = 80;
+        cfg.lbfgs_epochs = 40;
+        cfg.policy = ParallelPolicy::Fixed(2);
+        cfg.chunk = 16;
+        let result = train_burgers_parallel(quick_spec(), &cfg, DerivEngine::Ntp);
+        let first = result.logs.first().unwrap();
+        let last = result.logs.last().unwrap();
+        assert!(
+            last.loss < first.loss * 0.5,
+            "loss {} -> {}",
+            first.loss,
+            last.loss
+        );
+        assert!(result.n_forward > 0 && result.n_backward > 0);
     }
 }

@@ -8,7 +8,9 @@ use std::path::{Path, PathBuf};
 /// Metadata for one compiled artifact (one HLO text file).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactSpec {
+    /// Artifact name (manifest key).
     pub name: String,
+    /// File name of the HLO text, relative to the artifacts dir.
     pub file: String,
     /// Derivative order this artifact computes (for `ntp_fwd_*`).
     pub n_derivs: Option<usize>,
@@ -23,7 +25,9 @@ pub struct ArtifactSpec {
 /// The parsed `artifacts/manifest.json`.
 #[derive(Clone, Debug)]
 pub struct ArtifactManifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Artifact entries.
     pub specs: Vec<ArtifactSpec>,
 }
 

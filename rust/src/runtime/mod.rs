@@ -27,10 +27,12 @@ impl Runtime {
         Ok(Runtime { client })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Number of PJRT devices.
     pub fn device_count(&self) -> usize {
         self.client.device_count()
     }
@@ -62,6 +64,7 @@ pub struct Executable {
 }
 
 impl Executable {
+    /// The loaded artifact's name.
     pub fn name(&self) -> &str {
         &self.name
     }

@@ -47,6 +47,7 @@ pub struct AllocStats {
     pub peak: u64,
 }
 
+/// Current thread's allocation counters.
 pub fn stats() -> AllocStats {
     AllocStats {
         total: TOTAL.with(|t| t.get()),

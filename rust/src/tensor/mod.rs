@@ -38,20 +38,24 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), data }
     }
 
+    /// A `[1]` tensor holding `x`.
     pub fn scalar(x: f64) -> Tensor {
         Tensor::from_vec(vec![x], &[1])
     }
 
+    /// All-zeros tensor.
     pub fn zeros(shape: &[usize]) -> Tensor {
         let numel: usize = shape.iter().product();
         alloc::record(numel);
         Tensor { shape: shape.to_vec(), data: vec![0.0; numel] }
     }
 
+    /// All-ones tensor.
     pub fn ones(shape: &[usize]) -> Tensor {
         Tensor::full(shape, 1.0)
     }
 
+    /// Tensor filled with `value`.
     pub fn full(shape: &[usize], value: f64) -> Tensor {
         let numel: usize = shape.iter().product();
         alloc::record(numel);
@@ -65,11 +69,13 @@ impl Tensor {
         Tensor::from_vec((0..n).map(|i| lo + step * i as f64).collect(), &[n])
     }
 
+    /// Uniform random entries on `[lo, hi)`.
     pub fn rand_uniform(shape: &[usize], lo: f64, hi: f64, rng: &mut Prng) -> Tensor {
         let numel: usize = shape.iter().product();
         Tensor::from_vec(rng.uniform_vec(numel, lo, hi), shape)
     }
 
+    /// Normal random entries.
     pub fn rand_normal(shape: &[usize], mean: f64, std: f64, rng: &mut Prng) -> Tensor {
         let numel: usize = shape.iter().product();
         Tensor::from_vec(rng.normal_vec(numel, mean, std), shape)
@@ -77,26 +83,32 @@ impl Tensor {
 
     // ------------------------------------------------------------- queries
 
+    /// The shape.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
 
+    /// The elements, row-major.
     pub fn data(&self) -> &[f64] {
         &self.data
     }
 
+    /// Mutable access to the elements, row-major.
     pub fn data_mut(&mut self) -> &mut [f64] {
         &mut self.data
     }
 
+    /// Consume into the raw element vector.
     pub fn into_vec(self) -> Vec<f64> {
         self.data
     }
@@ -113,6 +125,7 @@ impl Tensor {
         self.data[i * self.shape[1] + j]
     }
 
+    /// 2-D element setter.
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         assert_eq!(self.rank(), 2);
         let cols = self.shape[1];

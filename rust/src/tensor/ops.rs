@@ -30,18 +30,22 @@ impl Tensor {
         }
     }
 
+    /// Elementwise sum.
     pub fn add(&self, other: &Tensor) -> Tensor {
         self.zip(other, |a, b| a + b)
     }
 
+    /// Elementwise difference.
     pub fn sub(&self, other: &Tensor) -> Tensor {
         self.zip(other, |a, b| a - b)
     }
 
+    /// Elementwise product.
     pub fn mul(&self, other: &Tensor) -> Tensor {
         self.zip(other, |a, b| a * b)
     }
 
+    /// Elementwise quotient.
     pub fn div(&self, other: &Tensor) -> Tensor {
         self.zip(other, |a, b| a / b)
     }
@@ -59,18 +63,22 @@ impl Tensor {
         }
     }
 
+    /// Elementwise negation.
     pub fn neg(&self) -> Tensor {
         self.map(|x| -x)
     }
 
+    /// Elementwise `alpha · x`.
     pub fn scale(&self, alpha: f64) -> Tensor {
         self.map(|x| alpha * x)
     }
 
+    /// Elementwise `x + c`.
     pub fn add_scalar(&self, c: f64) -> Tensor {
         self.map(|x| x + c)
     }
 
+    /// Elementwise hyperbolic tangent.
     pub fn tanh(&self) -> Tensor {
         self.map(f64::tanh)
     }

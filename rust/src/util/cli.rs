@@ -16,9 +16,13 @@ pub struct Args {
 /// Declarative option spec for usage rendering and validation.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
+    /// Option name (without the `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Whether the option consumes a value.
     pub takes_value: bool,
+    /// Default value filled in when absent.
     pub default: Option<&'static str>,
 }
 
@@ -66,20 +70,24 @@ impl Args {
         Ok(args)
     }
 
+    /// Whether `--name` was passed as a flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of `--name` (default-filled).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// `--name` parsed as an integer.
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
         self.get(name)
             .map(|v| v.parse().map_err(|_| format!("--{name}: expected integer, got '{v}'")))
             .transpose()
     }
 
+    /// `--name` parsed as a float.
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
         self.get(name)
             .map(|v| v.parse().map_err(|_| format!("--{name}: expected number, got '{v}'")))
@@ -102,6 +110,7 @@ impl Args {
         }
     }
 
+    /// Positional (non-option) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

@@ -7,11 +7,14 @@ use std::path::Path;
 /// An in-memory CSV table with a fixed header.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Column names.
     pub header: Vec<String>,
+    /// Data rows (stringified cells).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with the given column names.
     pub fn new(header: &[&str]) -> Table {
         Table {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -36,6 +39,7 @@ impl Table {
         self.push(row.iter().map(|x| format!("{x:.9e}")).collect());
     }
 
+    /// Render as CSV text.
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         out.push_str(&escape_row(&self.header));

@@ -11,18 +11,26 @@ use std::fmt;
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (insertion-ordered key/value pairs).
     Obj(Vec<(String, Json)>),
 }
 
 /// Errors produced by [`Json::parse`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset of the error.
     pub pos: usize,
 }
 
@@ -54,6 +62,7 @@ impl Json {
 
     // ----------------------------------------------------------- accessors
 
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -61,6 +70,7 @@ impl Json {
         }
     }
 
+    /// The number as a non-negative integer, if exact.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 && x <= usize::MAX as f64 {
@@ -71,6 +81,7 @@ impl Json {
         })
     }
 
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -78,6 +89,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -85,6 +97,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),

@@ -9,6 +9,7 @@
 pub mod cli;
 pub mod csv;
 pub mod json;
+pub mod par;
 pub mod prng;
 pub mod ptest;
 pub mod stats;

@@ -1,0 +1,238 @@
+//! Deterministic parallel-execution substrate for the training path.
+//!
+//! Three primitives, shared by the sharded PINN objective
+//! ([`crate::pinn::ParallelObjective`]) and the policy-aware optimizers
+//! in [`crate::opt`]:
+//!
+//! - [`run_indexed`] — map a closure over task indices on scoped worker
+//!   threads, returning results **in task order** regardless of which
+//!   thread ran what.
+//! - [`tree_reduce`] — pairwise reduction whose tree shape depends only
+//!   on the number of items, never on the thread count.
+//! - [`det_dot`] / [`det_sum`] — reductions over fixed-size element
+//!   chunks ([`REDUCE_CHUNK`]) combined with [`tree_reduce`], so the
+//!   floating-point result is **identical for every
+//!   [`ParallelPolicy`]**, serial included.
+//!
+//! The determinism argument is structural: every task/chunk performs the
+//! exact same float operations wherever it runs, and the combination
+//! order is a pure function of the task/chunk count. Threading only
+//! changes scheduling, never arithmetic — which is what lets
+//! `rust/tests/training_determinism.rs` demand *bitwise* equality
+//! between serial and multi-threaded training.
+
+use crate::ntp::ParallelPolicy;
+
+/// Element count per partial-sum chunk in [`det_dot`] / [`det_sum`].
+///
+/// Fixed (not derived from the thread count) so the partials — and hence
+/// the reduced result — are the same no matter how many workers computed
+/// them.
+pub const REDUCE_CHUNK: usize = 1024;
+
+/// Worker count for `tasks` coarse-grained tasks under `policy`.
+///
+/// Unlike [`ParallelPolicy::workers_for`] — which is tuned for per-*row*
+/// work of a few microseconds and keeps small batches serial — each task
+/// here is a whole shard evaluation (typically ≥ 100 µs), so `Auto`
+/// engages whenever more than one task exists.
+pub fn workers_for_tasks(policy: ParallelPolicy, tasks: usize) -> usize {
+    policy.thread_cap().min(tasks.max(1))
+}
+
+/// Run `f(0), f(1), ..., f(n-1)` on up to `workers` scoped threads and
+/// return the results in index order.
+///
+/// Indices are split into contiguous blocks, one per worker; block 0 runs
+/// inline on the calling thread (so `workers` threads use exactly
+/// `workers` cores). Each `f(i)` is a pure function of `i` as far as the
+/// caller can observe, so the returned vector is independent of the
+/// worker count.
+pub fn run_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let w = workers.max(1).min(n.max(1));
+    if w <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let per = n.div_ceil(w);
+    let blocks: Vec<Vec<T>> = std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = (1..w)
+            .filter_map(|k| {
+                let lo = k * per;
+                if lo >= n {
+                    return None;
+                }
+                let hi = ((k + 1) * per).min(n);
+                Some(s.spawn(move || (lo..hi).map(f).collect::<Vec<T>>()))
+            })
+            .collect();
+        let mut blocks = Vec::with_capacity(w);
+        blocks.push((0..per.min(n)).map(f).collect::<Vec<T>>());
+        for h in handles {
+            blocks.push(h.join().expect("par worker panicked"));
+        }
+        blocks
+    });
+    let mut out = Vec::with_capacity(n);
+    for mut b in blocks {
+        out.append(&mut b);
+    }
+    out
+}
+
+/// Deterministic pairwise tree reduction.
+///
+/// Adjacent pairs are combined layer by layer — `(0,1), (2,3), ...` —
+/// until one value remains; a trailing odd item is carried up unchanged.
+/// The tree shape (and therefore the floating-point result for
+/// non-associative `f` like `+`) depends only on `items.len()`.
+/// Returns `None` for an empty input.
+pub fn tree_reduce<T>(items: Vec<T>, mut f: impl FnMut(T, T) -> T) -> Option<T> {
+    let mut layer = items;
+    if layer.is_empty() {
+        return None;
+    }
+    while layer.len() > 1 {
+        let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+        let mut it = layer.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(f(a, b)),
+                None => next.push(a),
+            }
+        }
+        layer = next;
+    }
+    layer.pop()
+}
+
+/// `Σ a[i]·b[i]` with a thread-count-invariant summation order.
+///
+/// Partial sums are taken over fixed [`REDUCE_CHUNK`]-element windows
+/// (computed serially within each window) and combined with
+/// [`tree_reduce`]; `policy` only decides how many threads compute the
+/// windows, so every policy — `Serial` included — returns the same bits.
+/// Threads only engage on large vectors (≥ ~64 chunks); smaller
+/// reductions run inline because spawn cost would dominate — the result
+/// is bit-identical either way.
+pub fn det_dot(a: &[f64], b: &[f64], policy: ParallelPolicy) -> f64 {
+    assert_eq!(a.len(), b.len(), "det_dot: length mismatch");
+    det_chunked(a.len(), policy, |lo, hi| {
+        let mut acc = 0.0;
+        for i in lo..hi {
+            acc += a[i] * b[i];
+        }
+        acc
+    })
+}
+
+/// `Σ a[i]` with the same thread-count-invariant order as [`det_dot`].
+pub fn det_sum(a: &[f64], policy: ParallelPolicy) -> f64 {
+    det_chunked(a.len(), policy, |lo, hi| {
+        let mut acc = 0.0;
+        for &v in &a[lo..hi] {
+            acc += v;
+        }
+        acc
+    })
+}
+
+/// Minimum chunk count before a reduction engages worker threads: below
+/// this, a chunk's ~µs of multiply-adds is dwarfed by thread spawn cost,
+/// so partials are computed inline (the *result* is identical either
+/// way — the fixed chunking alone guarantees policy invariance).
+const PAR_MIN_CHUNKS: usize = 64;
+
+/// Shared chunked-partials skeleton of [`det_dot`] / [`det_sum`].
+fn det_chunked<F>(len: usize, policy: ParallelPolicy, part: F) -> f64
+where
+    F: Fn(usize, usize) -> f64 + Sync,
+{
+    let n_chunks = len.div_ceil(REDUCE_CHUNK).max(1);
+    let workers = if n_chunks >= PAR_MIN_CHUNKS {
+        workers_for_tasks(policy, n_chunks)
+    } else {
+        1
+    };
+    let partials = run_indexed(n_chunks, workers, |c| {
+        let lo = c * REDUCE_CHUNK;
+        let hi = (lo + REDUCE_CHUNK).min(len);
+        part(lo, hi)
+    });
+    tree_reduce(partials, |x, y| x + y).unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn run_indexed_preserves_order() {
+        for workers in [1usize, 2, 3, 8] {
+            for n in [0usize, 1, 2, 7, 20] {
+                let out = run_indexed(n, workers, |i| i * i);
+                assert_eq!(out, (0..n).map(|i| i * i).collect::<Vec<_>>(), "w={workers} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_reduce_shapes() {
+        assert_eq!(tree_reduce(Vec::<i32>::new(), |a, b| a + b), None);
+        assert_eq!(tree_reduce(vec![5], |a, b| a + b), Some(5));
+        // Shape is observable through a non-associative combiner.
+        let concat = |a: String, b: String| format!("({a}{b})");
+        let items = |n: usize| (0..n).map(|i| i.to_string()).collect::<Vec<_>>();
+        assert_eq!(tree_reduce(items(4), concat).unwrap(), "((01)(23))");
+        assert_eq!(tree_reduce(items(5), concat).unwrap(), "(((01)(23))4)");
+    }
+
+    #[test]
+    fn det_dot_is_policy_invariant_bitwise() {
+        let mut rng = Prng::seeded(0x0DD);
+        // 5000 elements stay below the threading threshold, 80_000 are
+        // above it — both sizes must be policy-invariant bit for bit.
+        for len in [5000usize, 80_000] {
+            let a = rng.normal_vec(len, 0.0, 1.0);
+            let b = rng.normal_vec(len, 0.0, 1.0);
+            let want = det_dot(&a, &b, ParallelPolicy::Serial);
+            for policy in [
+                ParallelPolicy::Fixed(2),
+                ParallelPolicy::Fixed(3),
+                ParallelPolicy::Fixed(16),
+                ParallelPolicy::Auto,
+            ] {
+                let got = det_dot(&a, &b, policy);
+                assert_eq!(want.to_bits(), got.to_bits(), "len={len} {policy:?}");
+            }
+            // And it is actually a dot product.
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((want - naive).abs() <= 1e-9 * naive.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn det_sum_handles_edges() {
+        assert_eq!(det_sum(&[], ParallelPolicy::Fixed(4)), 0.0);
+        assert_eq!(det_sum(&[3.5], ParallelPolicy::Auto), 3.5);
+        let v = vec![1.0; 3000];
+        assert_eq!(det_sum(&v, ParallelPolicy::Fixed(2)), 3000.0);
+    }
+
+    #[test]
+    fn workers_for_tasks_clamps() {
+        assert_eq!(workers_for_tasks(ParallelPolicy::Serial, 100), 1);
+        assert_eq!(workers_for_tasks(ParallelPolicy::Fixed(4), 100), 4);
+        assert_eq!(workers_for_tasks(ParallelPolicy::Fixed(4), 2), 2);
+        assert_eq!(workers_for_tasks(ParallelPolicy::Fixed(0), 5), 1);
+        assert_eq!(workers_for_tasks(ParallelPolicy::Fixed(4), 0), 1);
+        // Auto engages for small task counts (coarse tasks), unlike the
+        // per-row heuristic.
+        assert!(workers_for_tasks(ParallelPolicy::Auto, 4) >= 1);
+    }
+}

@@ -9,7 +9,9 @@ use super::prng::Prng;
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct Config {
+    /// Number of random cases to run.
     pub cases: usize,
+    /// Base PRNG seed.
     pub seed: u64,
 }
 

@@ -3,13 +3,21 @@
 /// Summary of a sample of (timing) observations.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std: f64,
+    /// Minimum.
     pub min: f64,
+    /// Maximum.
     pub max: f64,
+    /// Median.
     pub median: f64,
+    /// 5th percentile.
     pub p5: f64,
+    /// 95th percentile.
     pub p95: f64,
 }
 

@@ -36,6 +36,7 @@ pub struct SegmentClock {
 }
 
 impl SegmentClock {
+    /// Fresh clock with no segments.
     pub fn new() -> Self {
         Self::default()
     }
@@ -77,6 +78,7 @@ impl SegmentClock {
         &self.segments
     }
 
+    /// Clear all segments.
     pub fn reset(&mut self) {
         self.segments.clear();
     }

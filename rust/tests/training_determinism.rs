@@ -1,0 +1,219 @@
+//! Determinism harness for the data-parallel training subsystem: the
+//! sharded PINN objective ([`ParallelObjective`]) plus the policy-aware
+//! optimizers must produce **bitwise identical** losses, gradients and
+//! whole optimization trajectories for every [`ParallelPolicy`] —
+//! 2/4/8 worker threads vs serial, including collocation counts that do
+//! not divide the chunk size.
+//!
+//! Why bitwise equality is attainable: the shard layout and the pairwise
+//! reduction tree depend only on the problem (never the thread count),
+//! every shard tape performs the same float ops wherever it runs, and
+//! the optimizers' reductions/updates are chunk-fixed (`util::par`). The
+//! policy is pure scheduling.
+
+use ntangent::nn::{params, Mlp};
+use ntangent::ntp::ParallelPolicy;
+use ntangent::opt::{Adam, Lbfgs, Objective};
+use ntangent::pinn::{
+    train_burgers_parallel, BurgersLossSpec, DerivEngine, ParallelObjective, TrainConfig,
+};
+use ntangent::tensor::Tensor;
+use ntangent::util::prng::Prng;
+
+fn spec_with(n_res: usize, n_org: usize) -> BurgersLossSpec {
+    let mut spec = BurgersLossSpec::for_profile(1);
+    spec.n_res = n_res;
+    spec.n_org = n_org;
+    spec.x_max = 1.5;
+    spec
+}
+
+/// Build the objective with pinned init/cloud seeds so every policy sees
+/// the identical problem, plus its initial θ.
+fn build(
+    policy: ParallelPolicy,
+    chunk: usize,
+    n_res: usize,
+    n_org: usize,
+    engine: DerivEngine,
+) -> (ParallelObjective, Tensor) {
+    let mut rng_init = Prng::seeded(11);
+    let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng_init);
+    let mut rng_cloud = Prng::seeded(23);
+    let obj = ParallelObjective::build(
+        spec_with(n_res, n_org),
+        &mlp,
+        engine,
+        policy,
+        chunk,
+        &mut rng_cloud,
+    );
+    let theta = obj.theta_init(&mlp);
+    (obj, theta)
+}
+
+/// Loss and gradient bitwise-equal to serial for 2/4/8 threads and Auto,
+/// across shard layouts including non-divisible collocation counts,
+/// single-shard (chunk > cloud) and one-point-per-shard extremes.
+#[test]
+fn gradients_are_bitwise_identical_across_thread_counts() {
+    for &(n_res, n_org, chunk) in &[
+        (50usize, 10usize, 16usize), // ragged: 50 = 3*16 + 2
+        (64, 16, 16),                // exact division
+        (7, 3, 4),                   // tiny cloud, ragged
+        (33, 9, 8),                  // ragged both sets
+        (20, 6, 64),                 // chunk > cloud: single shard
+        (12, 5, 1),                  // one point per shard
+    ] {
+        let (mut serial, theta) =
+            build(ParallelPolicy::Serial, chunk, n_res, n_org, DerivEngine::Ntp);
+        let (want_loss, want_grad) = serial.value_grad(&theta);
+        let want_value = serial.value(&theta);
+        assert_eq!(want_value.to_bits(), want_loss.to_bits());
+
+        let mut policies = vec![
+            ParallelPolicy::Fixed(2),
+            ParallelPolicy::Fixed(4),
+            ParallelPolicy::Fixed(8),
+            ParallelPolicy::Auto,
+        ];
+        // More workers than shards must clamp, not panic.
+        policies.push(ParallelPolicy::Fixed(64));
+        for policy in policies {
+            let (mut par, theta2) = build(policy, chunk, n_res, n_org, DerivEngine::Ntp);
+            assert_eq!(theta, theta2, "init must not depend on the policy");
+            let (loss, grad) = par.value_grad(&theta);
+            assert_eq!(
+                want_loss.to_bits(),
+                loss.to_bits(),
+                "{policy:?} n_res={n_res} chunk={chunk}: loss"
+            );
+            assert_eq!(
+                want_grad, grad,
+                "{policy:?} n_res={n_res} chunk={chunk}: gradient"
+            );
+            assert_eq!(want_value.to_bits(), par.value(&theta).to_bits());
+        }
+    }
+}
+
+/// The repeated-autodiff engine's shard tapes are policy-invariant too.
+#[test]
+fn autodiff_engine_gradients_are_bitwise_identical() {
+    let (mut serial, theta) = build(ParallelPolicy::Serial, 8, 18, 6, DerivEngine::Autodiff);
+    let (want_loss, want_grad) = serial.value_grad(&theta);
+    let (mut par, _) = build(ParallelPolicy::Fixed(3), 8, 18, 6, DerivEngine::Autodiff);
+    let (loss, grad) = par.value_grad(&theta);
+    assert_eq!(want_loss.to_bits(), loss.to_bits());
+    assert_eq!(want_grad, grad);
+}
+
+/// 50 Adam steps: θ (and hence the moment state that produced it) is
+/// bitwise identical to serial at *every* step for 2/4/8 threads.
+#[test]
+fn adam_trajectory_is_bitwise_identical_over_50_steps() {
+    let run = |policy: ParallelPolicy| -> Vec<Tensor> {
+        let (mut obj, mut theta) = build(policy, 16, 50, 10, DerivEngine::Ntp);
+        let mut adam = Adam::new(obj.dim(), 2e-3).with_policy(policy);
+        let mut trace = Vec::with_capacity(50);
+        for _ in 0..50 {
+            adam.step(&mut obj, &mut theta);
+            trace.push(theta.clone());
+        }
+        trace
+    };
+    let want = run(ParallelPolicy::Serial);
+    for threads in [2usize, 4, 8] {
+        let got = run(ParallelPolicy::Fixed(threads));
+        for (step, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a, b, "t={threads} diverged at Adam step {step}");
+        }
+    }
+}
+
+/// 50 L-BFGS steps (backtracking line search, curvature history, the
+/// works): θ bitwise identical to serial at every step. This exercises
+/// the deterministic chunked inner products end-to-end.
+#[test]
+fn lbfgs_trajectory_is_bitwise_identical_over_50_steps() {
+    let run = |policy: ParallelPolicy| -> (Vec<Tensor>, Vec<u64>) {
+        let (mut obj, mut theta) = build(policy, 16, 50, 10, DerivEngine::Ntp);
+        let mut lbfgs = Lbfgs::new(obj.dim()).with_policy(policy);
+        let mut trace = Vec::with_capacity(50);
+        let mut losses = Vec::with_capacity(50);
+        for _ in 0..50 {
+            let (loss, _) = lbfgs.step(&mut obj, &mut theta);
+            trace.push(theta.clone());
+            losses.push(loss.to_bits());
+        }
+        (trace, losses)
+    };
+    let (want, want_losses) = run(ParallelPolicy::Serial);
+    for threads in [2usize, 4, 8] {
+        let (got, got_losses) = run(ParallelPolicy::Fixed(threads));
+        assert_eq!(want_losses, got_losses, "t={threads}: loss sequence");
+        for (step, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a, b, "t={threads} diverged at L-BFGS step {step}");
+        }
+    }
+}
+
+/// End-to-end `train_burgers_parallel` (both phases, logging, counters):
+/// final weights, λ and the whole logged loss sequence are bitwise equal
+/// between serial and a 4-thread pool.
+#[test]
+fn trainer_end_to_end_is_bitwise_identical() {
+    let run = |policy: ParallelPolicy| {
+        let cfg = TrainConfig {
+            width: 8,
+            depth: 2,
+            adam_epochs: 15,
+            lbfgs_epochs: 10,
+            adam_lr: 2e-3,
+            seed: 5,
+            log_every: 5,
+            policy,
+            chunk: 16,
+            ..TrainConfig::default()
+        };
+        train_burgers_parallel(spec_with(48, 12), &cfg, DerivEngine::Ntp)
+    };
+    let a = run(ParallelPolicy::Serial);
+    let b = run(ParallelPolicy::Fixed(4));
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+    assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+    assert_eq!(
+        params::flatten(&a.mlp),
+        params::flatten(&b.mlp),
+        "trained weights diverged"
+    );
+    assert_eq!(a.logs.len(), b.logs.len());
+    for (la, lb) in a.logs.iter().zip(&b.logs) {
+        assert_eq!(la.loss.to_bits(), lb.loss.to_bits(), "epoch {}", la.epoch);
+        assert_eq!(la.lambda.to_bits(), lb.lambda.to_bits());
+    }
+    // Same schedule ⇒ same evaluation counts.
+    assert_eq!(a.n_forward, b.n_forward);
+    assert_eq!(a.n_backward, b.n_backward);
+}
+
+/// Concurrent use of one objective's shards from the outside (the shard
+/// tapes are `Sync`): interleaving calls from a wrapper thread must not
+/// perturb results.
+#[test]
+fn repeated_mixed_policy_calls_stay_identical() {
+    let (mut obj, theta) = build(ParallelPolicy::Serial, 16, 50, 10, DerivEngine::Ntp);
+    let (want_loss, want_grad) = obj.value_grad(&theta);
+    for policy in [
+        ParallelPolicy::Fixed(2),
+        ParallelPolicy::Serial,
+        ParallelPolicy::Fixed(8),
+        ParallelPolicy::Auto,
+        ParallelPolicy::Serial,
+    ] {
+        obj.set_policy(policy);
+        let (loss, grad) = obj.value_grad(&theta);
+        assert_eq!(want_loss.to_bits(), loss.to_bits(), "{policy:?}");
+        assert_eq!(want_grad, grad, "{policy:?}");
+    }
+}
