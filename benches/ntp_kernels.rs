@@ -1,8 +1,10 @@
 //! Bench: micro-kernels of the n-TangentProp hot path — tanh tower,
-//! Faà di Bruno combine, channel matmul — the targets of the §Perf pass.
+//! Faà di Bruno combine, channel matmul, and the fused element-tiled
+//! kernel against the pre-fusion reference path.
 //!
 //!     cargo bench --bench ntp_kernels
 
+use ntangent::bench::kernels::{self as bench_kernels, KernelBenchConfig};
 use ntangent::bench::parallel::{self as bench_parallel, ParallelBenchConfig};
 use ntangent::nn::Mlp;
 use ntangent::ntp::{ActivationKind, NtpEngine, SmoothActivation};
@@ -56,6 +58,19 @@ fn main() {
             );
         }
     }
+
+    // Fused element-tiled kernel vs the pre-fusion reference path at the
+    // acceptance shape of the kernel-fusion PR (width 64, depth 4,
+    // B = 4096, n = 4/6/8). Shares the measurement protocol (and the
+    // differential fused-vs-reference check) with `ntangent bench
+    // kernels` via `bench::kernels`.
+    println!("# fused kernel vs reference (4x64 tanh, B=4096)");
+    let kernel_cfg = KernelBenchConfig {
+        warmup: 1,
+        trials: 5,
+        ..KernelBenchConfig::default()
+    };
+    print!("{}", bench_kernels::summarize(&bench_kernels::run(&kernel_cfg, |_| {})));
 
     // Serial vs chunked-parallel forward at the serving shape (the
     // acceptance point of the parallel-execution PR: B >= 4096, n = 4).

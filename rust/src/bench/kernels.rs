@@ -1,0 +1,290 @@
+//! Fused-kernel speedup bench: the fused element-tiled `forward_n`
+//! against the pre-fusion [`NtpEngine::forward_reference`] path, serial
+//! and under `Fixed(t)` batch parallelism — the headline numbers of the
+//! kernel-fusion PR (`ntangent bench kernels`, `results/kernel_speedup.csv`,
+//! and the committed `BENCH_kernels.json` baseline).
+//!
+//! Before timing, every order's fused output is differentially checked
+//! against the reference path (≤ 1e-12 relative) — a speedup measured on
+//! wrong numbers is worthless.
+
+use crate::nn::Mlp;
+use crate::ntp::{ActivationKind, NtpEngine, ParallelPolicy};
+use crate::tensor::Tensor;
+use crate::util::csv::Table;
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use crate::util::stats::Summary;
+use crate::util::timer::time_trials;
+use std::path::Path;
+
+/// Configuration of the fused-vs-reference kernel bench.
+#[derive(Clone, Debug)]
+pub struct KernelBenchConfig {
+    /// Hidden width.
+    pub width: usize,
+    /// Hidden depth.
+    pub depth: usize,
+    /// Hidden activation.
+    pub activation: ActivationKind,
+    /// Batch size of the timed forwards.
+    pub batch: usize,
+    /// Derivative orders to sweep.
+    pub orders: Vec<usize>,
+    /// Worker threads of the parallel fused leg.
+    pub par_threads: usize,
+    /// Untimed warmup trials per leg.
+    pub warmup: usize,
+    /// Timed trials per leg.
+    pub trials: usize,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for KernelBenchConfig {
+    fn default() -> Self {
+        // The acceptance shape of the kernel-fusion PR: B = 4096,
+        // width 64, depth 4, n = 4 / 6 / 8, Fixed(4) for the parallel leg.
+        KernelBenchConfig {
+            width: 64,
+            depth: 4,
+            activation: ActivationKind::Tanh,
+            batch: 4096,
+            orders: vec![4, 6, 8],
+            par_threads: 4,
+            warmup: 2,
+            trials: 10,
+            seed: 23,
+        }
+    }
+}
+
+impl KernelBenchConfig {
+    /// The CI smoke shape: small enough for a minutes-budget job, same
+    /// schema and checks as the full run.
+    pub fn smoke() -> KernelBenchConfig {
+        KernelBenchConfig {
+            batch: 1024,
+            orders: vec![4, 6],
+            warmup: 1,
+            trials: 3,
+            ..KernelBenchConfig::default()
+        }
+    }
+}
+
+/// One measured derivative order.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelCell {
+    /// Batch size.
+    pub batch: usize,
+    /// Derivative order.
+    pub n: usize,
+    /// Hidden width.
+    pub width: usize,
+    /// Hidden depth.
+    pub depth: usize,
+    /// Worker threads of the parallel fused leg.
+    pub par_threads: usize,
+    /// Mean seconds per pre-fusion reference forward (serial).
+    pub reference_s: f64,
+    /// Mean seconds per fused forward (serial).
+    pub fused_s: f64,
+    /// Mean seconds per fused forward under `Fixed(par_threads)`.
+    pub fused_par_s: f64,
+}
+
+impl KernelCell {
+    /// Serial fused speedup over the reference path.
+    pub fn fused_speedup(&self) -> f64 {
+        self.reference_s / self.fused_s
+    }
+
+    /// Parallel fused speedup over the (serial) reference path.
+    pub fn par_speedup(&self) -> f64 {
+        self.reference_s / self.fused_par_s
+    }
+}
+
+fn mean_s(ts: &[f64]) -> f64 {
+    Summary::of(ts).mean
+}
+
+/// Run the order sweep (differentially checking fused vs reference
+/// before each timed cell).
+pub fn run(cfg: &KernelBenchConfig, progress: impl Fn(&str)) -> Vec<KernelCell> {
+    let mut rng = Prng::seeded(cfg.seed);
+    let mlp = Mlp::uniform_with(1, cfg.width, cfg.depth, 1, cfg.activation, &mut rng);
+    let x = Tensor::rand_uniform(&[cfg.batch, 1], -1.0, 1.0, &mut rng);
+    let mut out = Vec::new();
+    for &n in &cfg.orders {
+        progress(&format!("kernel cell n={n} B={}", cfg.batch));
+        let serial = NtpEngine::new(n);
+        let par = NtpEngine::with_policy(n, ParallelPolicy::Fixed(cfg.par_threads));
+        let want = serial.forward_reference(&mlp, &x, n);
+        let got = serial.forward_n(&mlp, &x, n);
+        for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+            for (&ea, &eb) in a.data().iter().zip(b.data()) {
+                assert!(
+                    (ea - eb).abs() <= 1e-12 * (1.0 + ea.abs()),
+                    "fused kernel diverged from reference at n={n} channel {k}"
+                );
+            }
+        }
+        let reference_s = mean_s(&time_trials(cfg.warmup, cfg.trials, || {
+            std::hint::black_box(serial.forward_reference(&mlp, &x, n));
+        }));
+        let fused_s = mean_s(&time_trials(cfg.warmup, cfg.trials, || {
+            std::hint::black_box(serial.forward_n(&mlp, &x, n));
+        }));
+        let fused_par_s = mean_s(&time_trials(cfg.warmup, cfg.trials, || {
+            std::hint::black_box(par.forward_n(&mlp, &x, n));
+        }));
+        out.push(KernelCell {
+            batch: cfg.batch,
+            n,
+            width: cfg.width,
+            depth: cfg.depth,
+            par_threads: cfg.par_threads,
+            reference_s,
+            fused_s,
+            fused_par_s,
+        });
+    }
+    out
+}
+
+/// One row per order, with the speedup columns the acceptance bar reads.
+pub fn table(cells: &[KernelCell]) -> Table {
+    let mut t = Table::new(&[
+        "batch",
+        "n",
+        "width",
+        "depth",
+        "par_threads",
+        "reference_s",
+        "fused_serial_s",
+        "fused_parallel_s",
+        "serial_speedup",
+        "parallel_speedup",
+    ]);
+    for c in cells {
+        t.push(vec![
+            c.batch.to_string(),
+            c.n.to_string(),
+            c.width.to_string(),
+            c.depth.to_string(),
+            c.par_threads.to_string(),
+            format!("{:.6e}", c.reference_s),
+            format!("{:.6e}", c.fused_s),
+            format!("{:.6e}", c.fused_par_s),
+            format!("{:.4}", c.fused_speedup()),
+            format!("{:.4}", c.par_speedup()),
+        ]);
+    }
+    t
+}
+
+/// Write `kernel_speedup.csv`.
+pub fn save(cells: &[KernelCell], dir: &Path) -> std::io::Result<()> {
+    table(cells).save(&dir.join("kernel_speedup.csv"))
+}
+
+/// The `BENCH_kernels.json` document: config + per-order results, the
+/// perf-trajectory format the repo commits a baseline of.
+pub fn to_json(cfg: &KernelBenchConfig, cells: &[KernelCell]) -> Json {
+    let results: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("n", Json::Num(c.n as f64)),
+                ("reference_s", Json::Num(c.reference_s)),
+                ("fused_serial_s", Json::Num(c.fused_s)),
+                ("fused_parallel_s", Json::Num(c.fused_par_s)),
+                ("serial_speedup", Json::Num(c.fused_speedup())),
+                ("parallel_speedup", Json::Num(c.par_speedup())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("kernels".into())),
+        (
+            "config",
+            Json::obj(vec![
+                ("batch", Json::Num(cfg.batch as f64)),
+                ("width", Json::Num(cfg.width as f64)),
+                ("depth", Json::Num(cfg.depth as f64)),
+                ("activation", Json::Str(cfg.activation.name().into())),
+                ("par_threads", Json::Num(cfg.par_threads as f64)),
+                ("trials", Json::Num(cfg.trials as f64)),
+            ]),
+        ),
+        ("results", Json::Arr(results)),
+    ])
+}
+
+/// Write the `BENCH_kernels.json` document to `path`.
+pub fn save_json(
+    cfg: &KernelBenchConfig,
+    cells: &[KernelCell],
+    path: &Path,
+) -> std::io::Result<()> {
+    std::fs::write(path, to_json(cfg, cells).dump() + "\n")
+}
+
+/// Human-readable summary for the CLI.
+pub fn summarize(cells: &[KernelCell]) -> String {
+    let mut out = String::from("fused kernel vs pre-fusion reference (mean seconds)\n");
+    for c in cells {
+        out.push_str(&format!(
+            "  B={:<6} n={}  reference {:>10.1} µs  fused {:>10.1} µs ({:.2}x)  \
+             fused t={} {:>10.1} µs ({:.2}x)\n",
+            c.batch,
+            c.n,
+            c.reference_s * 1e6,
+            c.fused_s * 1e6,
+            c.fused_speedup(),
+            c.par_threads,
+            c.fused_par_s * 1e6,
+            c.par_speedup()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_kernel_bench_produces_grid_csv_and_json() {
+        let cfg = KernelBenchConfig {
+            width: 8,
+            depth: 2,
+            batch: 32,
+            orders: vec![2, 3],
+            par_threads: 2,
+            warmup: 0,
+            trials: 1,
+            ..KernelBenchConfig::default()
+        };
+        let cells = run(&cfg, |_| {});
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert!(c.reference_s > 0.0 && c.fused_s > 0.0 && c.fused_par_s > 0.0);
+        }
+        let t = table(&cells);
+        assert_eq!(t.rows.len(), 2);
+        assert!(summarize(&cells).contains("fused"));
+        let dir = std::env::temp_dir().join("ntangent_test_kernel_bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        save(&cells, &dir).unwrap();
+        assert!(dir.join("kernel_speedup.csv").exists());
+        let jpath = dir.join("BENCH_kernels.json");
+        save_json(&cfg, &cells, &jpath).unwrap();
+        let text = std::fs::read_to_string(&jpath).unwrap();
+        let doc = Json::parse(text.trim()).unwrap();
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("kernels"));
+        assert_eq!(doc.get("results").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+    }
+}

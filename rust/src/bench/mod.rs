@@ -12,6 +12,7 @@
 //! | §IV-B memory note          | [`memory::run`]   | `results/mem_scaling.csv` |
 //! | serial vs parallel forward | [`parallel::run`] | `results/parallel_speedup.csv` |
 //! | serial vs parallel training | [`train_par::run`] | `results/training_speedup.csv` |
+//! | fused vs reference kernel  | [`kernels::run`]  | `results/kernel_speedup.csv` + `BENCH_kernels.json` |
 //!
 //! Absolute times differ from the paper (single CPU host vs A6000 GPU);
 //! the *shapes* — exponential vs quasilinear in `n`, crossover at small
@@ -19,6 +20,7 @@
 //! reproduction targets (see EXPERIMENTS.md).
 
 pub mod grid;
+pub mod kernels;
 pub mod memory;
 pub mod parallel;
 pub mod passes;

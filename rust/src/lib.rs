@@ -19,10 +19,14 @@
 //!   [`ntp::ActivationKind`], so the baseline re-differentiates every
 //!   registered activation exactly.
 //! - [`ntp`] — the paper's contribution: integer partitions, Faà di Bruno /
-//!   Bell coefficient tables, pluggable activation derivative towers
+//!   Bell coefficient tables compiled to flat kernel programs
+//!   ([`ntp::FdbProgram`]), pluggable activation derivative towers
 //!   (tanh, sine, softplus, GELU — each exact), and the n-TangentProp
 //!   forward pass (both a pure fast path and a tape-recorded path that
-//!   supports backprop-through-derivatives for training). The engine is
+//!   supports backprop-through-derivatives for training). The fast path
+//!   is a fused element-tiled kernel — interleaved channel tiles plus a
+//!   stacked-channel GEMM — with the pre-fusion pass retained as
+//!   `forward_reference` (see `docs/ARCHITECTURE.md`). The engine is
 //!   `Send + Sync` and carries a [`ntp::ParallelPolicy`]
 //!   (serial / fixed-threads / auto): the batch axis is embarrassingly
 //!   parallel, so `forward_n` chunks rows across scoped threads with

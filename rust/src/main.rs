@@ -7,7 +7,7 @@
 //!   serve                         run the batching derivative-evaluation service
 //!   info                          tables, op counts and environment info
 
-use ntangent::bench::{grid, memory, parallel, passes, profiles, train_par, training};
+use ntangent::bench::{grid, kernels, memory, parallel, passes, profiles, train_par, training};
 use ntangent::coordinator::{BatcherConfig, NativeBackend, PjrtBackend, Service};
 use ntangent::nn::Checkpoint;
 use ntangent::ntp::{hardy_ramanujan, partition_count, ActivationKind, NtpEngine, ParallelPolicy};
@@ -53,7 +53,7 @@ fn top_usage() -> String {
     "ntangent — n-TangentProp reproduction (quasilinear higher-order derivatives)\n\
      \nUSAGE: ntangent <COMMAND> [OPTIONS]\n\
      \nCOMMANDS:\n\
-     \x20 bench <target>   fig1..fig10|mem|par|train-par|all\n\
+     \x20 bench <target>   fig1..fig10|mem|par|kernels|train-par|all\n\
      \x20 train            train a Burgers-profile PINN\n\
      \x20 eval             evaluate a checkpoint at points\n\
      \x20 validate         check a Burgers checkpoint against the analytic profile\n\
@@ -87,6 +87,10 @@ fn bench_specs() -> Vec<OptSpec> {
         OptSpec { name: "n", help: "derivative order (par)", takes_value: true, default: None },
         OptSpec { name: "chunk", help: "collocation rows per shard (train-par)", takes_value: true, default: None },
         OptSpec { name: "points", help: "residual collocation points (train-par)", takes_value: true, default: None },
+        OptSpec { name: "smoke", help: "CI-sized kernel bench (kernels)", takes_value: false, default: None },
+        OptSpec { name: "batch", help: "batch size (kernels)", takes_value: true, default: None },
+        OptSpec { name: "orders", help: "comma list of derivative orders (kernels)", takes_value: true, default: None },
+        OptSpec { name: "json", help: "also write a BENCH_kernels.json to this path (kernels)", takes_value: true, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ]
 }
@@ -101,16 +105,19 @@ fn cmd_bench(raw: &[String]) -> Result<(), String> {
     let target = args
         .positional()
         .first()
-        .ok_or("bench needs a target (fig1..fig10, mem, all)")?
+        .ok_or("bench needs a target (fig1..fig10, mem, par, kernels, train-par, all)")?
         .clone();
     let out_dir = PathBuf::from(args.get("out-dir").unwrap());
     std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
 
     let targets: Vec<String> = if target == "all" {
-        ["fig1", "fig4", "fig6", "fig8", "fig9", "fig7", "fig10", "mem", "par", "train-par"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect()
+        [
+            "fig1", "fig4", "fig6", "fig8", "fig9", "fig7", "fig10", "mem", "par", "kernels",
+            "train-par",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
     } else {
         vec![target]
     };
@@ -299,6 +306,48 @@ fn run_bench_target(target: &str, args: &Args, out_dir: &Path) -> Result<(), Str
             let cells = parallel::run(&cfg, |msg| eprintln!("[bench] {msg}"));
             parallel::save(&cells, out_dir).map_err(|e| e.to_string())?;
             println!("{}", parallel::summarize(&cells));
+        }
+        "kernels" => {
+            let mut cfg = if args.flag("smoke") {
+                kernels::KernelBenchConfig::smoke()
+            } else {
+                kernels::KernelBenchConfig::default()
+            };
+            if let Some(v) = args.get_usize("batch")? {
+                cfg.batch = v.max(1);
+            }
+            if let Some(v) = args.get_usize_list("orders")? {
+                cfg.orders = v;
+            }
+            if let Some(v) = args.get_usize("width")? {
+                cfg.width = v;
+            }
+            if let Some(v) = args.get_usize("depth")? {
+                cfg.depth = v;
+            }
+            if let Some(v) = args.get("activation") {
+                cfg.activation = parse_activation(v)?;
+            }
+            if let Some(v) = args.get_usize("trials")? {
+                cfg.trials = v;
+            }
+            eprintln!(
+                "[bench] kernels: fused vs reference forward, {}x{} {} net, B={}, n {:?}, \
+                 parallel leg Fixed({})",
+                cfg.depth,
+                cfg.width,
+                cfg.activation.name(),
+                cfg.batch,
+                cfg.orders,
+                cfg.par_threads
+            );
+            let cells = kernels::run(&cfg, |msg| eprintln!("[bench] {msg}"));
+            kernels::save(&cells, out_dir).map_err(|e| e.to_string())?;
+            if let Some(p) = args.get("json") {
+                kernels::save_json(&cfg, &cells, Path::new(p)).map_err(|e| e.to_string())?;
+                eprintln!("[bench] wrote {p}");
+            }
+            println!("{}", kernels::summarize(&cells));
         }
         "train-par" | "train_par" => {
             let mut cfg = train_par::TrainParBenchConfig::default();

@@ -42,7 +42,9 @@ impl Dense {
 
     /// `x: [B, in] -> [B, out]`.
     pub fn apply(&self, x: &Tensor) -> Tensor {
-        x.matmul_nt(&self.w).add_bias(&self.b)
+        let mut out = x.matmul_nt(&self.w);
+        out.add_bias_inplace(&self.b);
+        out
     }
 
     /// Linear part only (no bias) — derivative channels are affine-free.

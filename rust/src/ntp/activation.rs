@@ -47,6 +47,29 @@ pub trait SmoothActivation: Send + Sync {
         }
         outs
     }
+
+    /// Tower into caller-owned strided planes: `σ^{(k)}(xs[e])` is written
+    /// to `out[k·stride + e]` for `k = 0..=n`, `e < xs.len()`.
+    ///
+    /// This is the fused n-TangentProp kernel's entry point: the caller
+    /// hands a tile-local (L1-resident) workspace and the evaluation
+    /// allocates nothing. Every element's value must be a function of that
+    /// element alone (no cross-element coupling), which is what keeps
+    /// row-chunked parallel execution bitwise identical to serial.
+    ///
+    /// The default goes through [`SmoothActivation::tower_scalar`]
+    /// (allocating one small vector per element); the registered
+    /// activations override it with allocation-free sweeps.
+    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize) {
+        assert!(stride >= xs.len(), "tower_into: stride shorter than the tile");
+        assert!(out.len() >= n * stride + xs.len(), "tower_into: output too short");
+        for (e, &v) in xs.iter().enumerate() {
+            let t = self.tower_scalar(v, n);
+            for (k, &tv) in t.iter().enumerate() {
+                out[k * stride + e] = tv;
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------- registry
@@ -180,13 +203,21 @@ thread_local! {
 /// Evaluate a polynomial (low-to-high coefficients) elementwise (Horner).
 fn horner_tensor(t: &Tensor, coeffs: &[f64]) -> Tensor {
     let mut out = Tensor::zeros(t.shape());
-    let od = out.data_mut();
+    horner_into(t.data(), coeffs, out.data_mut());
+    out
+}
+
+/// Horner sweep `out[e] = P(t[e])` into a caller-owned buffer — the
+/// allocation-free core shared by [`horner_tensor`] and the strided
+/// `tower_into` implementations.
+fn horner_into(t: &[f64], coeffs: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(t.len(), out.len());
     match coeffs.len() {
-        0 => {}
-        1 => od.fill(coeffs[0]),
+        0 => out.fill(0.0),
+        1 => out.fill(coeffs[0]),
         _ => {
             let top = coeffs[coeffs.len() - 1];
-            for (o, &ti) in od.iter_mut().zip(t.data()) {
+            for (o, &ti) in out.iter_mut().zip(t) {
                 let mut acc = top;
                 for &ci in coeffs[..coeffs.len() - 1].iter().rev() {
                     acc = acc * ti + ci;
@@ -195,7 +226,26 @@ fn horner_tensor(t: &Tensor, coeffs: &[f64]) -> Tensor {
             }
         }
     }
-    out
+}
+
+/// In-place Horner sweep `t[e] = P(t[e])` (used when a plane doubles as
+/// its own substitution input, e.g. the softplus sigmoid staging plane).
+fn horner_inplace(t: &mut [f64], coeffs: &[f64]) {
+    match coeffs.len() {
+        0 => t.fill(0.0),
+        1 => t.fill(coeffs[0]),
+        _ => {
+            let top = coeffs[coeffs.len() - 1];
+            for v in t.iter_mut() {
+                let ti = *v;
+                let mut acc = top;
+                for &ci in coeffs[..coeffs.len() - 1].iter().rev() {
+                    acc = acc * ti + ci;
+                }
+                *v = acc;
+            }
+        }
+    }
 }
 
 // ------------------------------------------------------- polynomial towers
@@ -303,6 +353,23 @@ impl SmoothActivation for Tanh {
         let t = x.tanh();
         (0..=n).map(|k| horner_tensor(&t, self.table.poly(k))).collect()
     }
+
+    /// Allocation-free strided tower: plane 0 holds `tanh x` (= P₀) and
+    /// doubles as the Horner input for planes 1..=n.
+    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize) {
+        assert!(n <= self.table.n_max(), "tower order {n} > table n_max");
+        assert!(stride >= xs.len(), "tower_into: stride shorter than the tile");
+        assert!(out.len() >= n * stride + xs.len(), "tower_into: output too short");
+        let m = xs.len();
+        for (o, &x) in out[..m].iter_mut().zip(xs) {
+            *o = x.tanh();
+        }
+        for k in 1..=n {
+            let (t_plane, rest) = out.split_at_mut(stride);
+            let off = (k - 1) * stride;
+            horner_into(&t_plane[..m], self.table.poly(k), &mut rest[off..off + m]);
+        }
+    }
 }
 
 /// sin activation: `σ^(k)(x) = sin(x + kπ/2)`. Exact and cheap — the
@@ -338,6 +405,34 @@ impl SmoothActivation for Sine {
                 _ => cos.map(|v| -v),
             })
             .collect()
+    }
+
+    /// Allocation-free strided 4-cycle: `sin`/`cos` into planes 0/1, then
+    /// sign-flipped copies for the higher orders.
+    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize) {
+        assert!(stride >= xs.len(), "tower_into: stride shorter than the tile");
+        assert!(out.len() >= n * stride + xs.len(), "tower_into: output too short");
+        let m = xs.len();
+        for (o, &x) in out[..m].iter_mut().zip(xs) {
+            *o = x.sin();
+        }
+        if n >= 1 {
+            for (e, &x) in xs.iter().enumerate() {
+                out[stride + e] = x.cos();
+            }
+        }
+        for k in 2..=n {
+            let (lo, hi) = out.split_at_mut(k * stride);
+            let src_off = (k % 2) * stride;
+            let src = &lo[src_off..src_off + m];
+            if k % 4 < 2 {
+                hi[..m].copy_from_slice(src);
+            } else {
+                for (d, &s) in hi[..m].iter_mut().zip(src) {
+                    *d = -s;
+                }
+            }
+        }
     }
 }
 
@@ -451,6 +546,30 @@ impl SmoothActivation for Softplus {
             })
             .collect()
     }
+
+    /// Allocation-free strided tower: the sigmoid is staged in the *last*
+    /// plane (consumed in place by its own final Horner sweep), the other
+    /// orders Horner off it, and plane 0 gets the stable softplus.
+    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize) {
+        assert!(n <= self.table.n_max(), "tower order {n} > table n_max");
+        assert!(stride >= xs.len(), "tower_into: stride shorter than the tile");
+        assert!(out.len() >= n * stride + xs.len(), "tower_into: output too short");
+        let m = xs.len();
+        if n >= 1 {
+            for (e, &x) in xs.iter().enumerate() {
+                out[n * stride + e] = sigmoid(x);
+            }
+            for k in 1..n {
+                let (lo, hi) = out.split_at_mut(n * stride);
+                let off = k * stride;
+                horner_into(&hi[..m], self.table.poly(k), &mut lo[off..off + m]);
+            }
+            horner_inplace(&mut out[n * stride..n * stride + m], self.table.poly(n));
+        }
+        for (o, &x) in out[..m].iter_mut().zip(xs) {
+            *o = softplus(x);
+        }
+    }
 }
 
 /// Near-machine-precision `erf` via the cancellation-free confluent
@@ -543,6 +662,33 @@ impl SmoothActivation for Gelu {
             }
         }
         out
+    }
+
+    /// Allocation-free strided tower: per element, the Hermite recurrence
+    /// is rolled with three scalars (`He_{k−2}, He_{k−1}, He_k`) — the
+    /// same arithmetic as [`Gelu::tower_scalar`], no per-element vector.
+    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize) {
+        assert!(stride >= xs.len(), "tower_into: stride shorter than the tile");
+        assert!(out.len() >= n * stride + xs.len(), "tower_into: output too short");
+        let sqrt_2 = std::f64::consts::SQRT_2;
+        let sqrt_2pi = (2.0 * std::f64::consts::PI).sqrt();
+        for (e, &x) in xs.iter().enumerate() {
+            let cdf = 0.5 * (1.0 + erf(x / sqrt_2));
+            out[e] = x * cdf;
+            if n >= 1 {
+                let pdf = (-0.5 * x * x).exp() / sqrt_2pi;
+                out[stride + e] = cdf + x * pdf;
+                let mut h0 = 1.0; // He_{k-2}
+                let mut h1 = x; // He_{k-1}
+                for k in 2..=n {
+                    let hk = x * h1 - (k - 1) as f64 * h0;
+                    let sign = if (k - 1) % 2 == 0 { 1.0 } else { -1.0 };
+                    out[k * stride + e] = sign * pdf * (hk - h0);
+                    h0 = h1;
+                    h1 = hk;
+                }
+            }
+        }
     }
 }
 
@@ -679,6 +825,33 @@ mod tests {
         }
         assert_eq!(ActivationKind::from_name("sine"), Some(ActivationKind::Sine));
         assert_eq!(ActivationKind::from_name("relu"), None);
+    }
+
+    /// The strided `tower_into` planes (fused-kernel entry point) match
+    /// the scalar towers for every registered activation, including
+    /// partial tiles (`xs.len() < stride`) and every order 0..=n_max.
+    #[test]
+    fn strided_tower_into_matches_scalar_for_all_kinds() {
+        let xs: Vec<f64> = (0..11).map(|i| -2.5 + 0.5 * i as f64).collect();
+        let stride = 16; // ragged tile: stride > element count
+        for kind in ActivationKind::ALL {
+            let act = kind.build_tower(8);
+            for n in [0usize, 1, 2, 5, 8] {
+                let mut out = vec![f64::NAN; (n + 1) * stride];
+                act.tower_into(&xs, n, &mut out, stride);
+                for (e, &x) in xs.iter().enumerate() {
+                    let scalar = act.tower_scalar(x, n);
+                    for (k, &want) in scalar.iter().enumerate() {
+                        let got = out[k * stride + e];
+                        assert!(
+                            (got - want).abs() < 1e-12 * (1.0 + want.abs()),
+                            "{} n={n} k={k} e={e}: {got} vs {want}",
+                            kind.name()
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -101,6 +101,136 @@ impl FaaDiBruno {
     }
 }
 
+// ------------------------------------------------------ compiled programs
+
+/// One instruction of a compiled Faà di Bruno program: accumulate
+/// `coeff · σ^{(tower)}(y₀) · Π factors` into its order's output channel.
+///
+/// The factor operands are pre-resolved *plane ids* (see [`FdbProgram`]),
+/// so the fused kernel executes the term with plain indexed loads — no
+/// partition walking, no `(j, c)` decoding, no allocation.
+#[derive(Clone, Copy, Debug)]
+pub struct FdbOp {
+    /// Integer coefficient `C_p`, exact as f64.
+    pub coeff: f64,
+    /// Tower plane index `|p|` — which σ derivative this term multiplies.
+    pub tower: u32,
+    /// Start of this op's operand ids in [`FdbProgram::factor_ids`].
+    pub fstart: u32,
+    /// Number of operand ids (≥ 1 for every partition term).
+    pub flen: u32,
+}
+
+/// A power-plane fill `dst = a · b` (elementwise over a tile): builds
+/// `y_j^c` as `y_j^{c-1} · y_j`. All three fields are operand plane ids.
+#[derive(Clone, Copy, Debug)]
+pub struct PowFill {
+    /// Destination plane (always a power plane, id > both sources).
+    pub dst: u32,
+    /// Left source plane (`y_j^{c-1}`: the channel itself when c = 2).
+    pub a: u32,
+    /// Right source plane (the channel `y_j`).
+    pub b: u32,
+}
+
+/// The [`FaaDiBruno`] term tables compiled into a flat, allocation-free
+/// instruction program — what the fused element-tiled kernel in
+/// [`crate::ntp::forward`] interprets.
+///
+/// Operand *plane ids* index a contiguous tile workspace: ids
+/// `0..=n_max` are the derivative channels `y_j`, ids `n_max+1..` are
+/// power planes `y_j^c` (c ≥ 2) in first-use order. Because orders are
+/// compiled in ascending order, the fills needed for all terms of order
+/// ≤ n form a *prefix* of [`FdbProgram::fills`], so a truncated
+/// `forward_n` executes exactly the fills it needs.
+#[derive(Clone, Debug)]
+pub struct FdbProgram {
+    n_max: usize,
+    n_operands: usize,
+    fills: Vec<PowFill>,
+    /// `fill_counts[i]` = fills required by all orders ≤ i (prefix lengths).
+    fill_counts: Vec<usize>,
+    ops: Vec<FdbOp>,
+    /// `op_ranges[i]` = the `ops` range holding order `i`'s terms.
+    op_ranges: Vec<(usize, usize)>,
+    factor_ids: Vec<u32>,
+}
+
+impl FdbProgram {
+    /// Compile the term tables into the flat program (once per engine).
+    pub fn compile(fdb: &FaaDiBruno) -> FdbProgram {
+        let n_max = fdb.n_max;
+        // slots[j][c-2] = operand id of y_j^c (c >= 2), grown on demand.
+        let mut slots: Vec<Vec<u32>> = vec![Vec::new(); n_max + 1];
+        let mut n_operands = n_max + 1;
+        let mut fills = Vec::new();
+        let mut fill_counts = vec![0usize; n_max + 1];
+        let mut ops = Vec::new();
+        let mut op_ranges = vec![(0usize, 0usize); n_max + 1];
+        let mut factor_ids: Vec<u32> = Vec::new();
+        for i in 1..=n_max {
+            let start = ops.len();
+            for term in fdb.terms(i) {
+                let fstart = factor_ids.len();
+                for &(j, c) in &term.factors {
+                    // Materialize the missing powers y_j^2 ..= y_j^c.
+                    while slots[j].len() + 1 < c {
+                        let cc = slots[j].len() + 2; // next missing multiplicity
+                        let a = if cc == 2 { j as u32 } else { slots[j][cc - 3] };
+                        let dst = n_operands as u32;
+                        n_operands += 1;
+                        fills.push(PowFill { dst, a, b: j as u32 });
+                        slots[j].push(dst);
+                    }
+                    factor_ids.push(if c == 1 { j as u32 } else { slots[j][c - 2] });
+                }
+                ops.push(FdbOp {
+                    coeff: term.coeff,
+                    tower: term.outer_order as u32,
+                    fstart: fstart as u32,
+                    flen: (factor_ids.len() - fstart) as u32,
+                });
+            }
+            op_ranges[i] = (start, ops.len());
+            fill_counts[i] = fills.len();
+        }
+        FdbProgram { n_max, n_operands, fills, fill_counts, ops, op_ranges, factor_ids }
+    }
+
+    /// Highest compiled order.
+    pub fn n_max(&self) -> usize {
+        self.n_max
+    }
+
+    /// Total operand planes: `n_max + 1` channels plus every power plane.
+    pub fn n_operands(&self) -> usize {
+        self.n_operands
+    }
+
+    /// The power fills required by all orders ≤ `n`, in execution order
+    /// (every fill's sources precede its destination).
+    pub fn fills(&self, n: usize) -> &[PowFill] {
+        assert!(n <= self.n_max, "order {n} outside program (n_max={})", self.n_max);
+        &self.fills[..self.fill_counts[n]]
+    }
+
+    /// The compiled terms of order `n` (1 ≤ n ≤ n_max).
+    pub fn ops(&self, n: usize) -> &[FdbOp] {
+        assert!(
+            n >= 1 && n <= self.n_max,
+            "order {n} outside program (n_max={})",
+            self.n_max
+        );
+        let (lo, hi) = self.op_ranges[n];
+        &self.ops[lo..hi]
+    }
+
+    /// An op's operand plane ids.
+    pub fn factor_ids(&self, op: &FdbOp) -> &[u32] {
+        &self.factor_ids[op.fstart as usize..(op.fstart + op.flen) as usize]
+    }
+}
+
 /// Bell numbers B_n (OEIS A000110) — the value of the complete Bell
 /// polynomial at all-ones, used as a table sanity invariant:
 /// `Σ_p C_p = B_n`.
@@ -219,5 +349,84 @@ mod tests {
     #[should_panic(expected = "outside table")]
     fn out_of_range_order_panics() {
         FaaDiBruno::new(3).terms(4);
+    }
+
+    /// Interpret a compiled program on scalar "planes" (one element per
+    /// plane) — an independent executor of the instruction format.
+    fn run_program_scalar(prog: &FdbProgram, n: usize, f: &[f64], g: &[f64]) -> Vec<f64> {
+        let mut planes = vec![0.0; prog.n_operands()];
+        planes[..=prog.n_max()].copy_from_slice(&g[..=prog.n_max()]);
+        for fill in prog.fills(n) {
+            planes[fill.dst as usize] = planes[fill.a as usize] * planes[fill.b as usize];
+        }
+        let mut out = vec![f[0]];
+        for i in 1..=n {
+            let mut acc = 0.0;
+            for op in prog.ops(i) {
+                let mut prod = op.coeff * f[op.tower as usize];
+                for &fid in prog.factor_ids(op) {
+                    prod *= planes[fid as usize];
+                }
+                acc += prod;
+            }
+            out.push(acc);
+        }
+        out
+    }
+
+    /// The compiled program computes the same composition derivatives as
+    /// the reference `compose_scalar`, at full and truncated orders.
+    #[test]
+    fn compiled_program_matches_compose_scalar() {
+        let fdb = FaaDiBruno::new(8);
+        let prog = FdbProgram::compile(&fdb);
+        // exp(sin x): f derivatives all e^{sin x}, g the sine tower.
+        let x: f64 = 0.45;
+        let e = x.sin().exp();
+        let f: Vec<f64> = (0..=8).map(|_| e).collect();
+        let g: Vec<f64> = (0..=8)
+            .map(|k| (x + k as f64 * std::f64::consts::FRAC_PI_2).sin())
+            .collect();
+        for n in [0usize, 1, 3, 5, 8] {
+            let got = run_program_scalar(&prog, n, &f, &g);
+            assert_eq!(got.len(), n + 1);
+            for (i, &v) in got.iter().enumerate() {
+                let want = fdb.compose_scalar(i, &f, &g);
+                assert!(
+                    (v - want).abs() <= 1e-12 * want.abs().max(1.0),
+                    "n={n} order {i}: {v} vs {want}"
+                );
+            }
+        }
+    }
+
+    /// Structural invariants of the compiled format: one op per partition
+    /// term, the exact power-slot count, fill-prefix monotonicity, and
+    /// every fill's sources preceding its destination.
+    #[test]
+    fn compiled_program_structure() {
+        let n_max = 9;
+        let fdb = FaaDiBruno::new(n_max);
+        let prog = FdbProgram::compile(&fdb);
+        assert_eq!(prog.n_max(), n_max);
+        for i in 1..=n_max {
+            assert_eq!(prog.ops(i).len(), fdb.terms(i).len(), "order {i}");
+        }
+        // Power slots: y_j^c for 2 <= c <= n_max/j, nothing else.
+        let expect_slots: usize = (1..=n_max)
+            .map(|j| (n_max / j).saturating_sub(1))
+            .sum();
+        assert_eq!(prog.n_operands(), n_max + 1 + expect_slots);
+        assert_eq!(prog.fills(n_max).len(), expect_slots);
+        let mut prev = 0;
+        for n in 0..=n_max {
+            let cnt = prog.fills(n).len();
+            assert!(cnt >= prev, "fill prefix shrank at order {n}");
+            prev = cnt;
+        }
+        for fill in prog.fills(n_max) {
+            assert!(fill.a < fill.dst && fill.b < fill.dst, "fill ordering");
+            assert!((fill.b as usize) <= n_max, "fill rhs must be a channel");
+        }
     }
 }

@@ -15,6 +15,13 @@
 //! The batch axis is embarrassingly parallel (the bound is per point), so
 //! [`NtpEngine`] carries a [`ParallelPolicy`] that chunks `forward_n`
 //! across scoped threads — bitwise identical to the serial pass.
+//!
+//! The engine's hot path is a *fused element-tiled kernel*: the Faà di
+//! Bruno tables are compiled once into a flat [`FdbProgram`], the combine
+//! runs over L1-resident tiles of an interleaved channel layout, and the
+//! affine step is a single stacked-channel GEMM (see
+//! `docs/ARCHITECTURE.md`, "Kernel layout and memory traffic"). The
+//! pre-fusion pass is kept as [`NtpEngine::forward_reference`].
 
 pub mod activation;
 pub mod bell;
@@ -25,6 +32,6 @@ pub mod tape;
 pub use activation::{
     ActivationKind, Gelu, Sine, SmoothActivation, Softplus, SoftplusTower, Tanh, TanhTower,
 };
-pub use bell::{bell_number, FaaDiBruno, Term};
+pub use bell::{bell_number, FaaDiBruno, FdbOp, FdbProgram, PowFill, Term};
 pub use forward::{NtpEngine, ParallelPolicy};
 pub use partitions::{hardy_ramanujan, partition_count, partitions, Partition};

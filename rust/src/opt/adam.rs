@@ -4,16 +4,14 @@
 //! The moment/parameter update is elementwise, so a [`ParallelPolicy`]
 //! can split it across contiguous blocks on scoped threads with results
 //! that are bitwise identical to the serial update for any worker count
-//! (no cross-element reductions anywhere).
+//! (no cross-element reductions anywhere). The block splitting itself is
+//! the shared [`crate::util::par::update_blocks`] skeleton (same as
+//! [`super::Sgd`]).
 
 use super::Objective;
 use crate::ntp::ParallelPolicy;
 use crate::tensor::Tensor;
 use crate::util::par;
-
-/// Elements per update block when the policy parallelizes [`Adam::apply`]
-/// (the update is memory-bound; smaller blocks would be all overhead).
-const UPDATE_BLOCK: usize = 4096;
 
 /// Adam state over a flat parameter vector.
 #[derive(Clone, Debug)]
@@ -74,46 +72,20 @@ impl Adam {
         let b2t = 1.0 - self.beta2.powi(self.t as i32);
         let lr_t = self.lr * b2t.sqrt() / b1t;
         let (beta1, beta2, eps) = (self.beta1, self.beta2, self.eps);
-        let update = |m: &mut [f64], v: &mut [f64], th: &mut [f64], g: &[f64]| {
-            for i in 0..g.len() {
-                m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
-                v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
-                th[i] -= lr_t * m[i] / (v[i].sqrt() + eps);
-            }
-        };
-
-        let len = grad.numel();
-        let workers = par::workers_for_tasks(self.policy, len.div_ceil(UPDATE_BLOCK));
-        if workers <= 1 {
-            update(
-                self.m.data_mut(),
-                self.v.data_mut(),
-                theta.data_mut(),
-                grad.data(),
-            );
-            return;
-        }
-        let per = len.div_ceil(workers);
-        std::thread::scope(|s| {
-            let update = &update;
-            let mut m_rest = self.m.data_mut();
-            let mut v_rest = self.v.data_mut();
-            let mut t_rest = theta.data_mut();
-            let mut g_rest = grad.data();
-            while g_rest.len() > per {
-                let (m0, m1) = m_rest.split_at_mut(per);
-                let (v0, v1) = v_rest.split_at_mut(per);
-                let (t0, t1) = t_rest.split_at_mut(per);
-                let (g0, g1) = g_rest.split_at(per);
-                m_rest = m1;
-                v_rest = v1;
-                t_rest = t1;
-                g_rest = g1;
-                s.spawn(move || update(m0, v0, t0, g0));
-            }
-            // The remainder runs inline on the calling thread.
-            update(m_rest, v_rest, t_rest, g_rest);
-        });
+        par::update_blocks(
+            self.policy,
+            par::UPDATE_BLOCK,
+            [self.m.data_mut(), self.v.data_mut(), theta.data_mut()],
+            grad.data(),
+            |muts, g| {
+                let [m, v, th] = muts;
+                for i in 0..g.len() {
+                    m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+                    v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+                    th[i] -= lr_t * m[i] / (v[i].sqrt() + eps);
+                }
+            },
+        );
     }
 
     /// Number of updates applied so far.
@@ -186,6 +158,7 @@ mod tests {
     /// around the block boundaries and repeated (stateful) steps.
     #[test]
     fn parallel_apply_is_bitwise_identical_to_serial() {
+        const UPDATE_BLOCK: usize = par::UPDATE_BLOCK;
         for dim in [3usize, UPDATE_BLOCK - 1, UPDATE_BLOCK + 1, 3 * UPDATE_BLOCK + 17] {
             let mut rng = Prng::seeded(0xADA + dim as u64);
             let mut serial = Adam::new(dim, 0.01);

@@ -2,15 +2,13 @@
 //!
 //! Like [`super::Adam`], the update is elementwise, so a
 //! [`ParallelPolicy`] splits it across contiguous blocks with bitwise
-//! serial-identical results.
+//! serial-identical results — through the shared
+//! [`crate::util::par::update_blocks`] skeleton.
 
 use super::Objective;
 use crate::ntp::ParallelPolicy;
 use crate::tensor::Tensor;
 use crate::util::par;
-
-/// Elements per update block when the policy parallelizes [`Sgd::apply`].
-const UPDATE_BLOCK: usize = 4096;
 
 /// SGD(+momentum) state over a flat parameter vector.
 #[derive(Clone, Debug)]
@@ -57,36 +55,19 @@ impl Sgd {
     pub fn apply(&mut self, theta: &mut Tensor, grad: &Tensor) {
         assert_eq!(theta.numel(), grad.numel());
         let (lr, momentum) = (self.lr, self.momentum);
-        let update = |v: &mut [f64], th: &mut [f64], g: &[f64]| {
-            for i in 0..g.len() {
-                v[i] = momentum * v[i] - lr * g[i];
-                th[i] += v[i];
-            }
-        };
-
-        let len = grad.numel();
-        let workers = par::workers_for_tasks(self.policy, len.div_ceil(UPDATE_BLOCK));
-        if workers <= 1 {
-            update(self.velocity.data_mut(), theta.data_mut(), grad.data());
-            return;
-        }
-        let per = len.div_ceil(workers);
-        std::thread::scope(|s| {
-            let update = &update;
-            let mut v_rest = self.velocity.data_mut();
-            let mut t_rest = theta.data_mut();
-            let mut g_rest = grad.data();
-            while g_rest.len() > per {
-                let (v0, v1) = v_rest.split_at_mut(per);
-                let (t0, t1) = t_rest.split_at_mut(per);
-                let (g0, g1) = g_rest.split_at(per);
-                v_rest = v1;
-                t_rest = t1;
-                g_rest = g1;
-                s.spawn(move || update(v0, t0, g0));
-            }
-            update(v_rest, t_rest, g_rest);
-        });
+        par::update_blocks(
+            self.policy,
+            par::UPDATE_BLOCK,
+            [self.velocity.data_mut(), theta.data_mut()],
+            grad.data(),
+            |muts, g| {
+                let [v, th] = muts;
+                for i in 0..g.len() {
+                    v[i] = momentum * v[i] - lr * g[i];
+                    th[i] += v[i];
+                }
+            },
+        );
     }
 }
 
@@ -126,7 +107,7 @@ mod tests {
     /// Parallel updates are bitwise identical to serial ones.
     #[test]
     fn parallel_apply_is_bitwise_identical_to_serial() {
-        let dim = 2 * UPDATE_BLOCK + 13;
+        let dim = 2 * par::UPDATE_BLOCK + 13;
         let mut rng = Prng::seeded(0x56D);
         let mut serial = Sgd::new(dim, 0.05, 0.9);
         let mut parallel = Sgd::new(dim, 0.05, 0.9).with_policy(ParallelPolicy::Fixed(4));

@@ -7,15 +7,28 @@
 
 use super::Tensor;
 
+/// Square tile edge of the cache-blocked [`Tensor::transpose`]: a 32×32
+/// f64 tile is 8 KB read + 8 KB written, so both the row-major reads and
+/// the column-major writes of one tile stay L1-resident.
+const TRANSPOSE_TILE: usize = 32;
+
 impl Tensor {
-    /// 2-D transpose.
+    /// 2-D transpose (cache-blocked: the matrix is walked in 32×32
+    /// tiles so the strided writes hit L1 instead of missing on every
+    /// element once a row of the output exceeds a page).
     pub fn transpose(&self) -> Tensor {
         assert_eq!(self.rank(), 2, "transpose expects rank 2");
         let (r, c) = (self.shape[0], self.shape[1]);
         let mut out = Tensor::zeros(&[c, r]);
-        for i in 0..r {
-            for j in 0..c {
-                out.data[j * r + i] = self.data[i * c + j];
+        for ib in (0..r).step_by(TRANSPOSE_TILE) {
+            let ih = (ib + TRANSPOSE_TILE).min(r);
+            for jb in (0..c).step_by(TRANSPOSE_TILE) {
+                let jh = (jb + TRANSPOSE_TILE).min(c);
+                for i in ib..ih {
+                    for j in jb..jh {
+                        out.data[j * r + i] = self.data[i * c + j];
+                    }
+                }
             }
         }
         out
@@ -102,6 +115,140 @@ pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
         tail += a[i] * b[i];
     }
     (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// Inner-dimension elements per cache block of the blocked NT matmul —
+/// panels of `B` this long stay L1/L2-resident while `A` streams through.
+const GEMM_KC: usize = 256;
+/// Output columns (rows of the NT-form `B`) per cache block.
+const GEMM_NC: usize = 64;
+
+/// Blocked `C = A @ B^T` into a caller-owned buffer, for `A:[m,k]`,
+/// `B:[n,k]`, `C:[m,n]`, all row-major — the fused n-TangentProp
+/// kernel's stacked-channel GEMM (`m = (n_derivs+1)·B_tile` rows share
+/// one weight panel).
+///
+/// kc/nc cache tiling around a 4×4 register microkernel (scalar edges).
+/// `c` need not be zeroed: the first k-block assigns, later ones
+/// accumulate. Determinism contract: every output element's summation
+/// order is a pure function of `k` alone — within each `GEMM_KC` block a
+/// single accumulator runs in ascending-k order, and block sums are
+/// added onto `c` in ascending block order — independent of `m`, of the
+/// row/column blocking, and of whether the interior microkernel or an
+/// edge cell computed it. So splitting the rows of `A` across threads
+/// reproduces the serial bits exactly. (Note this is *not* bitwise equal
+/// to one sequential accumulator over all of `k` once `k > GEMM_KC`, and
+/// retuning `GEMM_KC` changes rounding for such shapes.)
+pub fn matmul_nt_block_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    for kb in (0..k).step_by(GEMM_KC) {
+        let kl = GEMM_KC.min(k - kb);
+        let first = kb == 0;
+        for nb in (0..n).step_by(GEMM_NC) {
+            let nl = GEMM_NC.min(n - nb);
+            let mut i = 0;
+            while i + 4 <= m {
+                let ar = [
+                    &a[i * k + kb..i * k + kb + kl],
+                    &a[(i + 1) * k + kb..(i + 1) * k + kb + kl],
+                    &a[(i + 2) * k + kb..(i + 2) * k + kb + kl],
+                    &a[(i + 3) * k + kb..(i + 3) * k + kb + kl],
+                ];
+                let mut j = 0;
+                while j + 4 <= nl {
+                    let jj = nb + j;
+                    let br = [
+                        &b[jj * k + kb..jj * k + kb + kl],
+                        &b[(jj + 1) * k + kb..(jj + 1) * k + kb + kl],
+                        &b[(jj + 2) * k + kb..(jj + 2) * k + kb + kl],
+                        &b[(jj + 3) * k + kb..(jj + 3) * k + kb + kl],
+                    ];
+                    nt_micro_4x4(ar, br, c, n, i, jj, first);
+                    j += 4;
+                }
+                while j < nl {
+                    let jj = nb + j;
+                    let brow = &b[jj * k + kb..jj * k + kb + kl];
+                    for (r, arow) in ar.iter().enumerate() {
+                        nt_cell(arow, brow, &mut c[(i + r) * n + jj], first);
+                    }
+                    j += 1;
+                }
+                i += 4;
+            }
+            while i < m {
+                let arow = &a[i * k + kb..i * k + kb + kl];
+                for j in 0..nl {
+                    let jj = nb + j;
+                    nt_cell(
+                        arow,
+                        &b[jj * k + kb..jj * k + kb + kl],
+                        &mut c[i * n + jj],
+                        first,
+                    );
+                }
+                i += 1;
+            }
+        }
+    }
+}
+
+/// 4×4 register-blocked microkernel of [`matmul_nt_block_into`]: 16
+/// independent single-accumulator chains over the shared k-slices (8
+/// loads feed 16 multiply-adds per step).
+#[inline]
+fn nt_micro_4x4(
+    ar: [&[f64]; 4],
+    br: [&[f64]; 4],
+    c: &mut [f64],
+    n: usize,
+    i0: usize,
+    j0: usize,
+    first: bool,
+) {
+    let kl = ar[0].len();
+    let mut acc = [[0.0f64; 4]; 4];
+    for p in 0..kl {
+        let av = [ar[0][p], ar[1][p], ar[2][p], ar[3][p]];
+        let bv = [br[0][p], br[1][p], br[2][p], br[3][p]];
+        for (accr, &a) in acc.iter_mut().zip(&av) {
+            for (o, &b) in accr.iter_mut().zip(&bv) {
+                *o += a * b;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + 4];
+        if first {
+            crow.copy_from_slice(accr);
+        } else {
+            for (o, &v) in crow.iter_mut().zip(accr) {
+                *o += v;
+            }
+        }
+    }
+}
+
+/// Scalar edge cell of [`matmul_nt_block_into`]: the same ascending-k,
+/// single-accumulator order as the microkernel, so edge elements are
+/// bitwise identical no matter which kernel shape covered them.
+#[inline]
+fn nt_cell(arow: &[f64], brow: &[f64], out: &mut f64, first: bool) {
+    let mut acc = 0.0;
+    for (&x, &y) in arow.iter().zip(brow) {
+        acc += x * y;
+    }
+    if first {
+        *out = acc;
+    } else {
+        *out += acc;
+    }
 }
 
 /// Row-major `i-k-j` matmul into a preallocated (zeroed) buffer.
@@ -217,5 +364,75 @@ mod tests {
     #[should_panic(expected = "inner dims")]
     fn inner_dim_mismatch_panics() {
         Tensor::zeros(&[2, 3]).matmul(&Tensor::zeros(&[4, 2]));
+    }
+
+    /// The blocked NT kernel matches the reference matmul across shapes
+    /// that exercise both the 4×4 microkernel and every edge path,
+    /// including k past the cache-block boundary.
+    #[test]
+    fn blocked_nt_matmul_matches_reference() {
+        ptest::check(
+            ptest::Config { cases: 24, seed: 0xB10C },
+            |rng: &mut Prng| {
+                let m = 1 + rng.below(19) as usize;
+                let k = 1 + rng.below(300) as usize; // crosses GEMM_KC = 256
+                let n = 1 + rng.below(70) as usize; // crosses GEMM_NC = 64
+                let a = Tensor::rand_normal(&[m, k], 0.0, 1.0, rng);
+                let b = Tensor::rand_normal(&[n, k], 0.0, 1.0, rng);
+                (a, b)
+            },
+            |(a, b)| {
+                let (m, k) = (a.shape()[0], a.shape()[1]);
+                let n = b.shape()[0];
+                // Poisoned output: the kernel must overwrite, not accumulate.
+                let mut c = vec![f64::NAN; m * n];
+                matmul_nt_block_into(a.data(), b.data(), &mut c, m, k, n);
+                let want = a.matmul(&b.transpose());
+                if allclose_slice(&c, want.data(), 1e-11, 1e-11) {
+                    Ok(())
+                } else {
+                    Err("blocked NT matmul != reference".into())
+                }
+            },
+        );
+    }
+
+    /// Row-chunk invariance — the determinism contract the fused kernel's
+    /// parallel path relies on: computing any horizontal slice of `A`
+    /// separately yields bitwise the same rows of `C`.
+    #[test]
+    fn blocked_nt_matmul_is_row_chunk_invariant_bitwise() {
+        let mut rng = Prng::seeded(0xC0C);
+        let (m, k, n) = (23usize, 64usize, 17usize);
+        let a = Tensor::rand_normal(&[m, k], 0.0, 1.0, &mut rng);
+        let b = Tensor::rand_normal(&[n, k], 0.0, 1.0, &mut rng);
+        let mut full = vec![0.0; m * n];
+        matmul_nt_block_into(a.data(), b.data(), &mut full, m, k, n);
+        for split in [1usize, 4, 5, 22] {
+            let mut lo = vec![0.0; split * n];
+            let mut hi = vec![0.0; (m - split) * n];
+            matmul_nt_block_into(&a.data()[..split * k], b.data(), &mut lo, split, k, n);
+            matmul_nt_block_into(&a.data()[split * k..], b.data(), &mut hi, m - split, k, n);
+            let stitched: Vec<f64> = lo.iter().chain(&hi).copied().collect();
+            for (i, (x, y)) in full.iter().zip(&stitched).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "split={split} elem {i}");
+            }
+        }
+    }
+
+    /// Blocked transpose edge shapes: tile-boundary and sub-tile sizes.
+    #[test]
+    fn blocked_transpose_matches_naive_shapes() {
+        let mut rng = Prng::seeded(0x7A);
+        for (r, c) in [(1usize, 1usize), (3, 70), (32, 32), (33, 31), (64, 65), (100, 7)] {
+            let a = Tensor::rand_normal(&[r, c], 0.0, 1.0, &mut rng);
+            let t = a.transpose();
+            assert_eq!(t.shape(), &[c, r]);
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t.at(j, i), a.at(i, j), "({i},{j})");
+                }
+            }
+        }
     }
 }

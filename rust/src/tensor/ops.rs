@@ -92,17 +92,27 @@ impl Tensor {
 
     /// Add a `[F]` bias row to every row of a `[B, F]` tensor.
     pub fn add_bias(&self, bias: &Tensor) -> Tensor {
+        let mut out = self.clone();
+        out.add_bias_inplace(bias);
+        out
+    }
+
+    /// In-place `[B, F] += bias[F]` row broadcast — the affine layers'
+    /// hot path (no clone, same per-element arithmetic as
+    /// [`Tensor::add_bias`]).
+    pub fn add_bias_inplace(&mut self, bias: &Tensor) {
         assert_eq!(self.rank(), 2, "add_bias expects rank-2 lhs");
         assert_eq!(bias.rank(), 1, "add_bias expects rank-1 bias");
-        let (b, f) = (self.shape[0], self.shape[1]);
+        let f = self.shape[1];
         assert_eq!(bias.shape[0], f, "bias width mismatch");
-        let mut out = self.clone();
-        for i in 0..b {
-            for j in 0..f {
-                out.data[i * f + j] += bias.data[j];
+        if f == 0 {
+            return;
+        }
+        for row in self.data.chunks_exact_mut(f) {
+            for (o, &b) in row.iter_mut().zip(&bias.data) {
+                *o += b;
             }
         }
-        out
     }
 
     /// Replicate a `[F]` row into `[B, F]`.
@@ -197,6 +207,9 @@ mod tests {
         let x = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
         let bias = Tensor::from_vec(vec![10.0, 20.0, 30.0], &[3]);
         assert_eq!(x.add_bias(&bias).data(), &[11.0, 22.0, 33.0, 14.0, 25.0, 36.0]);
+        let mut y = x.clone();
+        y.add_bias_inplace(&bias);
+        assert_eq!(y, x.add_bias(&bias));
         let r = bias.broadcast_rows(2);
         assert_eq!(r.shape(), &[2, 3]);
         assert_eq!(r.data(), &[10.0, 20.0, 30.0, 10.0, 20.0, 30.0]);

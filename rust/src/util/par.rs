@@ -1,12 +1,15 @@
 //! Deterministic parallel-execution substrate for the training path.
 //!
-//! Three primitives, shared by the sharded PINN objective
+//! Four primitives, shared by the sharded PINN objective
 //! ([`crate::pinn::ParallelObjective`]) and the policy-aware optimizers
 //! in [`crate::opt`]:
 //!
 //! - [`run_indexed`] — map a closure over task indices on scoped worker
 //!   threads, returning results **in task order** regardless of which
 //!   thread ran what.
+//! - [`update_blocks`] — split several parallel mutable slices plus a
+//!   shared slice into matching contiguous blocks and run an elementwise
+//!   update per block (the Adam/SGD scoped block-split skeleton).
 //! - [`tree_reduce`] — pairwise reduction whose tree shape depends only
 //!   on the number of items, never on the thread count.
 //! - [`det_dot`] / [`det_sum`] — reductions over fixed-size element
@@ -29,6 +32,66 @@ use crate::ntp::ParallelPolicy;
 /// the reduced result — are the same no matter how many workers computed
 /// them.
 pub const REDUCE_CHUNK: usize = 1024;
+
+/// Elements per block when a policy splits an elementwise optimizer
+/// update across threads ([`update_blocks`]) — the update is
+/// memory-bound, so smaller blocks would be all spawn overhead.
+pub const UPDATE_BLOCK: usize = 4096;
+
+/// Split `M` equal-length mutable slices plus one shared read-only slice
+/// into matching contiguous blocks and run `update` once per block —
+/// inline when `policy`/size keep it serial, otherwise on scoped worker
+/// threads (the trailing block runs on the calling thread).
+///
+/// This is the shared skeleton of the Adam/SGD policy updates: block
+/// boundaries depend only on the length and the worker count, and every
+/// block performs the same float ops wherever it runs, so the result is
+/// **bitwise identical to the serial update for any worker count** (no
+/// cross-element reductions exist anywhere in an elementwise update).
+///
+/// `update` receives each block's sub-slices in the same order as
+/// `muts`; destructure with a slice pattern, e.g.
+/// `let [m, v, th] = muts;` for `M = 3`.
+pub fn update_blocks<const M: usize, F>(
+    policy: ParallelPolicy,
+    block: usize,
+    muts: [&mut [f64]; M],
+    shared: &[f64],
+    update: F,
+) where
+    F: Fn(&mut [&mut [f64]; M], &[f64]) + Sync,
+{
+    let len = shared.len();
+    for s in &muts {
+        assert_eq!(s.len(), len, "update_blocks: slice length mismatch");
+    }
+    let workers = workers_for_tasks(policy, len.div_ceil(block.max(1)));
+    if workers <= 1 {
+        let mut all = muts;
+        update(&mut all, shared);
+        return;
+    }
+    let per = len.div_ceil(workers);
+    std::thread::scope(|s| {
+        let update = &update;
+        let mut rest = muts;
+        let mut g_rest = shared;
+        while g_rest.len() > per {
+            let (g0, g1) = g_rest.split_at(per);
+            g_rest = g1;
+            let mut heads: [&mut [f64]; M] = [(); M].map(|_| Default::default());
+            for (h, r) in heads.iter_mut().zip(rest.iter_mut()) {
+                let slice = std::mem::take(r);
+                let (head, tail) = slice.split_at_mut(per);
+                *h = head;
+                *r = tail;
+            }
+            s.spawn(move || update(&mut heads, g0));
+        }
+        // The remainder runs inline on the calling thread.
+        update(&mut rest, g_rest);
+    });
+}
 
 /// Worker count for `tasks` coarse-grained tasks under `policy`.
 ///
@@ -222,6 +285,55 @@ mod tests {
         assert_eq!(det_sum(&[3.5], ParallelPolicy::Auto), 3.5);
         let v = vec![1.0; 3000];
         assert_eq!(det_sum(&v, ParallelPolicy::Fixed(2)), 3000.0);
+    }
+
+    /// `update_blocks` is bitwise identical to the inline update for any
+    /// worker count, including lengths straddling the block boundaries,
+    /// and hands every slice's matching block to the closure.
+    #[test]
+    fn update_blocks_matches_serial_bitwise() {
+        for len in [1usize, 100, 4096, 4097, 3 * 4096 + 17] {
+            let mut rng = Prng::seeded(0xB10 + len as u64);
+            let a0 = rng.normal_vec(len, 0.0, 1.0);
+            let b0 = rng.normal_vec(len, 0.0, 1.0);
+            let g = rng.normal_vec(len, 0.0, 1.0);
+            // Serial oracle.
+            let (mut a_want, mut b_want) = (a0.clone(), b0.clone());
+            for i in 0..len {
+                a_want[i] = 0.9 * a_want[i] + 0.1 * g[i];
+                b_want[i] -= 0.5 * a_want[i];
+            }
+            for policy in [
+                ParallelPolicy::Serial,
+                ParallelPolicy::Fixed(2),
+                ParallelPolicy::Fixed(5),
+                ParallelPolicy::Auto,
+            ] {
+                let (mut a, mut b) = (a0.clone(), b0.clone());
+                update_blocks(policy, UPDATE_BLOCK, [&mut a, &mut b], &g, |muts, gb| {
+                    let [av, bv] = muts;
+                    for i in 0..gb.len() {
+                        av[i] = 0.9 * av[i] + 0.1 * gb[i];
+                        bv[i] -= 0.5 * av[i];
+                    }
+                });
+                assert_eq!(a, a_want, "{policy:?} len={len} first slice");
+                assert_eq!(b, b_want, "{policy:?} len={len} second slice");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn update_blocks_checks_lengths() {
+        let mut a = vec![0.0; 3];
+        update_blocks(
+            ParallelPolicy::Serial,
+            UPDATE_BLOCK,
+            [&mut a],
+            &[0.0; 4],
+            |_, _| {},
+        );
     }
 
     #[test]

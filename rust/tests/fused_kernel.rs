@@ -1,0 +1,134 @@
+//! Differential and allocation harness for the fused element-tiled
+//! n-TangentProp kernel: the fused `forward_n` (compiled Faà di Bruno
+//! program + interleaved channel tiles + stacked-channel GEMM) against
+//! the retained pre-fusion `forward_reference` path, plus the
+//! steady-state allocation contract and the fused path's serial-vs-
+//! parallel bitwise guarantee at tile-straddling shapes.
+
+use ntangent::nn::Mlp;
+use ntangent::ntp::{ActivationKind, NtpEngine, ParallelPolicy};
+use ntangent::tensor::{alloc, Tensor};
+use ntangent::util::prng::Prng;
+use ntangent::util::{allclose_slice, ptest};
+
+/// The tentpole differential property: fused == reference to ≤ 1e-12,
+/// for every registered activation, random architectures, ragged batch
+/// sizes (straddling the 128-element tile on the `[B·width]` plane) and
+/// every truncation `n ≤ n_max`.
+#[test]
+fn fused_forward_matches_reference_for_all_activations() {
+    for kind in ActivationKind::ALL {
+        ptest::check(
+            ptest::Config { cases: 20, seed: 0xF00D + kind.index() as u64 },
+            |rng: &mut Prng| {
+                let width = 2 + rng.below(28) as usize;
+                let depth = 1 + rng.below(4) as usize;
+                // Batches chosen so B·width lands below, at and past the
+                // tile boundary, including remainders.
+                let batch = 1 + rng.below(90) as usize;
+                let n_max = 1 + rng.below(8) as usize;
+                let n = rng.below(n_max as u64 + 1) as usize;
+                let mlp = Mlp::uniform_with(1, width, depth, 1, kind, rng);
+                let x = Tensor::rand_uniform(&[batch, 1], -2.0, 2.0, rng);
+                (mlp, x, n_max, n)
+            },
+            |(mlp, x, n_max, n)| {
+                let engine = NtpEngine::new(*n_max);
+                let fused = engine.forward_n(mlp, x, *n);
+                let reference = engine.forward_reference(mlp, x, *n);
+                if fused.len() != n + 1 {
+                    return Err("channel count".into());
+                }
+                for (k, (a, b)) in fused.iter().zip(&reference).enumerate() {
+                    if a.shape() != b.shape() {
+                        return Err(format!("channel {k} shape mismatch"));
+                    }
+                    if !allclose_slice(a.data(), b.data(), 1e-12, 1e-12) {
+                        return Err(format!(
+                            "{} channel {k} diverged (n={n}, n_max={n_max}, B={})",
+                            mlp.activation.name(),
+                            x.shape()[0]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// The fused kernel's parallel path is bitwise identical to its serial
+/// path at shapes where chunking changes the tile layout (each chunk
+/// tiles its own `[B_chunk·width]` plane) — the determinism contract is
+/// serial-vs-parallel of the *new* kernel.
+#[test]
+fn fused_parallel_is_bitwise_serial_at_tile_straddling_shapes() {
+    for kind in ActivationKind::ALL {
+        let mut rng = Prng::seeded(0x71E + kind.index() as u64);
+        let mlp = Mlp::uniform_with(1, 24, 3, 1, kind, &mut rng);
+        let serial = NtpEngine::new(5);
+        // 24-wide planes: B = 5 puts a chunk below one tile, B = 11/32
+        // straddle tiles unevenly per chunk, B = 129 spans many tiles.
+        for batch in [5usize, 11, 32, 129] {
+            let x = Tensor::rand_uniform(&[batch, 1], -1.5, 1.5, &mut rng);
+            let want = serial.forward(&mlp, &x);
+            for threads in [2usize, 3, 7] {
+                let eng = NtpEngine::with_policy(5, ParallelPolicy::Fixed(threads));
+                let got = eng.forward(&mlp, &x);
+                for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(a, b, "{} B={batch} t={threads} channel {k}", kind.name());
+                }
+            }
+        }
+    }
+}
+
+/// Steady-state allocation contract of the fused path: once the pooled
+/// scratch is grown, a forward call allocates exactly the `n+1` returned
+/// channel tensors — zero per-layer heap allocation goes through the
+/// accounted tensor constructors, for every activation.
+#[test]
+fn fused_steady_state_allocates_only_outputs() {
+    for kind in ActivationKind::ALL {
+        let mut rng = Prng::seeded(0xA110C + kind.index() as u64);
+        let (width, depth, batch, n) = (24usize, 3usize, 100usize, 5usize);
+        let mlp = Mlp::uniform_with(1, width, depth, 1, kind, &mut rng);
+        let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, &mut rng);
+        let engine = NtpEngine::new(n);
+        let cold = engine.forward(&mlp, &x);
+        let (warm, bytes) = alloc::measure(|| engine.forward(&mlp, &x));
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a, b, "{}: scratch reuse changed results", kind.name());
+        }
+        let outputs = ((n + 1) * batch * mlp.output_dim() * 8) as u64;
+        assert_eq!(
+            bytes,
+            outputs,
+            "{}: fused warm forward allocated beyond its outputs",
+            kind.name()
+        );
+    }
+}
+
+/// Truncation consistency on one engine: running `n < n_max` through the
+/// fused kernel (which skips the unused program suffix) agrees with a
+/// fresh engine built at exactly `n`.
+#[test]
+fn truncated_fused_forward_matches_exact_sized_engine() {
+    let mut rng = Prng::seeded(0x7A17);
+    let mlp = Mlp::uniform(1, 16, 2, 1, &mut rng);
+    let x = Tensor::rand_uniform(&[37, 1], -1.2, 1.2, &mut rng);
+    let big = NtpEngine::new(8);
+    for n in 0..=8usize {
+        let exact = NtpEngine::new(n);
+        let a = big.forward_n(&mlp, &x, n);
+        let b = exact.forward_n(&mlp, &x, n);
+        assert_eq!(a.len(), b.len());
+        for (k, (ta, tb)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                allclose_slice(ta.data(), tb.data(), 1e-12, 1e-12),
+                "n={n} channel {k}"
+            );
+        }
+    }
+}
