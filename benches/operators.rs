@@ -1,0 +1,59 @@
+//! Bench: multivariate PDE operators — the directional n-TangentProp
+//! path (direction-stacked fused batches + exact recombination) against
+//! the nested-tape autodiff baseline, plus the raw directional-jet
+//! kernel across orders and direction counts.
+//!
+//!     cargo bench --bench operators
+
+use ntangent::bench::operators::{self as bench_operators, OperatorBenchConfig};
+use ntangent::nn::Mlp;
+use ntangent::ntp::{MultiJetEngine, ParallelPolicy};
+use ntangent::tensor::Tensor;
+use ntangent::util::prng::Prng;
+use ntangent::util::stats::Summary;
+use ntangent::util::timer::time_trials;
+
+fn bench(name: &str, trials: usize, mut f: impl FnMut()) {
+    let ts = time_trials(2, trials, || f());
+    let s = Summary::of(&ts);
+    println!(
+        "{name:<52} mean {:>10.1} µs   p95 {:>10.1} µs",
+        s.mean * 1e6,
+        s.p95 * 1e6
+    );
+}
+
+fn main() {
+    let mut rng = Prng::seeded(17);
+    println!("# directional jets (3x24 tanh net, 2-D input)");
+    let mlp = Mlp::uniform(2, 24, 3, 1, &mut rng);
+    let x = Tensor::rand_uniform(&[1024, 2], -1.0, 1.0, &mut rng);
+
+    // Raw jet cost across orders: D directions × one fused [D·B] batch.
+    for n in [2usize, 3, 4] {
+        let engine = MultiJetEngine::new(2, n);
+        let d = engine.plan().n_directions();
+        bench(
+            &format!("jet n={n} D={d} (B=1024, serial)"),
+            12,
+            || {
+                std::hint::black_box(engine.jet(&mlp, &x));
+            },
+        );
+        let par = MultiJetEngine::with_policy(2, n, ParallelPolicy::Fixed(4));
+        bench(
+            &format!("jet n={n} D={d} (B=1024, Fixed(4))"),
+            12,
+            || {
+                std::hint::black_box(par.jet(&mlp, &x));
+            },
+        );
+    }
+
+    // The operator head-to-head at the CI smoke shape (full-size numbers
+    // come from `ntangent bench operators`).
+    println!("\n# operator head-to-head (smoke shape)");
+    let cfg = OperatorBenchConfig::smoke();
+    let cells = bench_operators::run(&cfg, |msg| eprintln!("[bench] {msg}"));
+    print!("{}", bench_operators::summarize(&cells));
+}

@@ -8,6 +8,7 @@
 //! graph of an already-grown graph: time and memory are exponential in `n`.
 
 use super::{Graph, NodeId};
+use crate::tensor::Tensor;
 
 /// Build nodes for `[u, du/dx, ..., d^n u/dx^n]` by repeated backward.
 ///
@@ -23,6 +24,71 @@ pub fn derivative_stack(g: &mut Graph, u: NodeId, x: NodeId, n: usize) -> Vec<No
     for _ in 0..n {
         let s = g.sum_all(cur);
         cur = g.backward(s, &[x])[0];
+        out.push(cur);
+    }
+    out
+}
+
+/// Build the node for the exact mixed partial `∂^α u` over a
+/// multi-column input (`alpha[i]` = derivative order along input column
+/// `i`) by `|α|` nested backward passes, extracting one gradient column
+/// per differentiation.
+///
+/// This is the multivariate generalization of [`derivative_stack`] and
+/// the nested-tape differential-testing baseline for the
+/// directional-assembly path in [`crate::ntp::multi`]. Like the
+/// univariate baseline, cost and graph size grow exponentially with
+/// `|α|` — each backward re-differentiates an already-grown graph —
+/// which is exactly what `ntangent bench operators` measures against.
+pub fn mixed_partial(g: &mut Graph, u: NodeId, x: NodeId, alpha: &[usize]) -> NodeId {
+    assert_eq!(g.shape(u)[1], 1, "u must have a single output column");
+    let d = g.shape(x)[1];
+    assert_eq!(alpha.len(), d, "multi-index arity must match the input dim");
+    let mut cur = u;
+    for (axis, &count) in alpha.iter().enumerate() {
+        for _ in 0..count {
+            let s = g.sum_all(cur);
+            let grad = g.backward(s, &[x])[0]; // [B, d]
+            cur = select_column(g, grad, axis, d);
+        }
+    }
+    cur
+}
+
+/// Extract column `axis` of a `[B, d]` node as `[B, 1]` via a constant
+/// basis-vector matmul (the tape has no slice op; the matmul keeps the
+/// extraction arbitrarily re-differentiable).
+fn select_column(g: &mut Graph, a: NodeId, axis: usize, d: usize) -> NodeId {
+    let mut e = vec![0.0; d];
+    e[axis] = 1.0;
+    let basis = g.constant(Tensor::from_vec(e, &[d, 1]));
+    g.matmul(a, basis)
+}
+
+/// Build nodes for the directional jet `[u, D_v u, ..., D_v^n u]` along
+/// per-row directions `v: [B, d]` by repeated backward + contraction
+/// with `v` — the nested-tape oracle for
+/// [`crate::ntp::NtpEngine::forward_directional`].
+pub fn directional_stack(
+    g: &mut Graph,
+    u: NodeId,
+    x: NodeId,
+    v: &Tensor,
+    n: usize,
+) -> Vec<NodeId> {
+    assert_eq!(g.shape(u)[1], 1, "u must have a single output column");
+    assert_eq!(v.shape(), g.shape(x), "one direction row per point row");
+    let d = g.shape(x)[1];
+    let vc = g.constant(v.clone());
+    let ones = g.constant(Tensor::ones(&[d, 1]));
+    let mut out = Vec::with_capacity(n + 1);
+    out.push(u);
+    let mut cur = u;
+    for _ in 0..n {
+        let s = g.sum_all(cur);
+        let grad = g.backward(s, &[x])[0]; // [B, d]
+        let prod = g.mul(grad, vc);
+        cur = g.matmul(prod, ones); // per-row ∇u · v
         out.push(cur);
     }
     out
@@ -119,6 +185,68 @@ mod tests {
             1e-9
         ));
         assert!(allclose_slice(vals.get(stack[6]).data(), &[0.0, 0.0, 0.0], 0.0, 1e-9));
+    }
+
+    /// `u(x, y) = x² y³`: every mixed partial is a closed-form monomial,
+    /// including the total-order-5 constant `∂²x ∂³y u = 12` and the
+    /// vanishing `∂³x u = 0`.
+    #[test]
+    fn mixed_partial_on_monomial_is_exact() {
+        let mut g = Graph::new();
+        let x = g.input(&[3, 2]);
+        let e0 = g.constant(Tensor::from_vec(vec![1.0, 0.0], &[2, 1]));
+        let e1 = g.constant(Tensor::from_vec(vec![0.0, 1.0], &[2, 1]));
+        let x0 = g.matmul(x, e0);
+        let x1 = g.matmul(x, e1);
+        let a = g.powi(x0, 2);
+        let b = g.powi(x1, 3);
+        let u = g.mul(a, b);
+        let d11 = mixed_partial(&mut g, u, x, &[1, 1]);
+        let d23 = mixed_partial(&mut g, u, x, &[2, 3]);
+        let d30 = mixed_partial(&mut g, u, x, &[3, 0]);
+        let pts = Tensor::from_vec(vec![0.5, -1.0, 1.5, 2.0, -0.3, 0.7], &[3, 2]);
+        let vals = g.eval(&[pts.clone()], &[d11, d23, d30]);
+        for (i, row) in pts.data().chunks(2).enumerate() {
+            let (xv, yv) = (row[0], row[1]);
+            let want11 = 6.0 * xv * yv * yv; // ∂x∂y x²y³
+            assert!(
+                (vals.get(d11).data()[i] - want11).abs() < 1e-9,
+                "d11 sample {i}"
+            );
+            assert!((vals.get(d23).data()[i] - 12.0).abs() < 1e-9, "d23 sample {i}");
+            assert!(vals.get(d30).data()[i].abs() < 1e-9, "d30 sample {i}");
+        }
+    }
+
+    /// The directional stack obeys the polarization expansion
+    /// `D_v² u = v₀² u_xx + 2 v₀v₁ u_xy + v₁² u_yy` on `u = x² y³`.
+    #[test]
+    fn directional_stack_matches_polarized_mixed_partials() {
+        let mut g = Graph::new();
+        let x = g.input(&[2, 2]);
+        let e0 = g.constant(Tensor::from_vec(vec![1.0, 0.0], &[2, 1]));
+        let e1 = g.constant(Tensor::from_vec(vec![0.0, 1.0], &[2, 1]));
+        let x0 = g.matmul(x, e0);
+        let x1 = g.matmul(x, e1);
+        let a = g.powi(x0, 2);
+        let b = g.powi(x1, 3);
+        let u = g.mul(a, b);
+        let v = Tensor::from_vec(vec![1.0, 2.0, -0.5, 1.5], &[2, 2]);
+        let stack = directional_stack(&mut g, u, x, &v, 2);
+        let pts = Tensor::from_vec(vec![0.8, -0.6, 1.2, 0.4], &[2, 2]);
+        let vals = g.eval(&[pts.clone()], &stack);
+        for i in 0..2 {
+            let (xv, yv) = (pts.data()[2 * i], pts.data()[2 * i + 1]);
+            let (v0, v1) = (v.data()[2 * i], v.data()[2 * i + 1]);
+            let u0 = xv * xv * yv * yv * yv;
+            let d1 = v0 * 2.0 * xv * yv.powi(3) + v1 * 3.0 * xv * xv * yv * yv;
+            let d2 = v0 * v0 * 2.0 * yv.powi(3)
+                + 2.0 * v0 * v1 * 6.0 * xv * yv * yv
+                + v1 * v1 * 6.0 * xv * xv * yv;
+            assert!((vals.get(stack[0]).data()[i] - u0).abs() < 1e-10, "order 0 row {i}");
+            assert!((vals.get(stack[1]).data()[i] - d1).abs() < 1e-9, "order 1 row {i}");
+            assert!((vals.get(stack[2]).data()[i] - d2).abs() < 1e-9, "order 2 row {i}");
+        }
     }
 
     #[test]

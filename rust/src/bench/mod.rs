@@ -13,6 +13,7 @@
 //! | serial vs parallel forward | [`parallel::run`] | `results/parallel_speedup.csv` |
 //! | serial vs parallel training | [`train_par::run`] | `results/training_speedup.csv` |
 //! | fused vs reference kernel  | [`kernels::run`]  | `results/kernel_speedup.csv` + `BENCH_kernels.json` |
+//! | directional vs nested-tape operators | [`operators::run`] | `results/operator_speedup.csv` + `BENCH_operators.json` |
 //!
 //! Absolute times differ from the paper (single CPU host vs A6000 GPU);
 //! the *shapes* — exponential vs quasilinear in `n`, crossover at small
@@ -22,6 +23,7 @@
 pub mod grid;
 pub mod kernels;
 pub mod memory;
+pub mod operators;
 pub mod parallel;
 pub mod passes;
 pub mod profiles;

@@ -1,0 +1,327 @@
+//! Operator bench: multivariate PDE operators (2-D Laplacian,
+//! biharmonic) through the **directional n-TangentProp** path — one
+//! direction-stacked fused batch plus exact recombination — against the
+//! nested-tape autodiff baseline (`ntangent bench operators`,
+//! `results/operator_speedup.csv`; `--json BENCH_operators.json` writes
+//! the machine-readable document CI's `bench-smoke` job exercises).
+//!
+//! The baseline rebuilds its graph per trial (the eager-framework
+//! methodology every other bench in this crate uses: repeated
+//! `backward` re-differentiates an already-grown graph, which is
+//! exactly the exponential cost the paper measures). Before timing,
+//! both paths are differentially checked against each other on a
+//! subsample — a speedup measured on wrong numbers is worthless.
+
+use crate::autodiff::{higher, Graph};
+use crate::nn::Mlp;
+use crate::ntp::{ActivationKind, MultiJetEngine};
+use crate::pde::DiffOperator;
+use crate::tensor::Tensor;
+use crate::util::csv::Table;
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use crate::util::stats::Summary;
+use crate::util::timer::time_trials;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Configuration of the operator bench.
+#[derive(Clone, Debug)]
+pub struct OperatorBenchConfig {
+    /// Hidden width.
+    pub width: usize,
+    /// Hidden depth.
+    pub depth: usize,
+    /// Hidden activation.
+    pub activation: ActivationKind,
+    /// Collocation points per timed evaluation.
+    pub batch: usize,
+    /// Rows of the pre-timing differential check.
+    pub check_rows: usize,
+    /// Untimed warmup trials per leg.
+    pub warmup: usize,
+    /// Timed trials per leg.
+    pub trials: usize,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for OperatorBenchConfig {
+    fn default() -> Self {
+        // The acceptance shape: B = 4096 over the paper's 3x24 net,
+        // Laplacian (n = 2) and biharmonic (n = 4).
+        OperatorBenchConfig {
+            width: 24,
+            depth: 3,
+            activation: ActivationKind::Tanh,
+            batch: 4096,
+            check_rows: 64,
+            warmup: 1,
+            trials: 5,
+            seed: 29,
+        }
+    }
+}
+
+impl OperatorBenchConfig {
+    /// The CI smoke shape: same operators and checks, minutes-budget
+    /// sizes.
+    pub fn smoke() -> OperatorBenchConfig {
+        OperatorBenchConfig {
+            batch: 512,
+            check_rows: 32,
+            trials: 3,
+            ..OperatorBenchConfig::default()
+        }
+    }
+}
+
+/// One measured operator.
+#[derive(Clone, Debug)]
+pub struct OperatorCell {
+    /// Operator name.
+    pub name: &'static str,
+    /// Collocation points per evaluation.
+    pub batch: usize,
+    /// Operator order (highest |α|).
+    pub n: usize,
+    /// Directional passes per evaluation (the `D` of `D·O(n log n)`).
+    pub directions: usize,
+    /// Hidden width.
+    pub width: usize,
+    /// Hidden depth.
+    pub depth: usize,
+    /// Mean seconds per directional-jet evaluation.
+    pub ntp_s: f64,
+    /// Mean seconds per nested-tape evaluation (graph rebuilt per
+    /// trial, eager-style).
+    pub autodiff_s: f64,
+}
+
+impl OperatorCell {
+    /// Directional-path speedup over the nested-tape baseline.
+    pub fn speedup(&self) -> f64 {
+        self.autodiff_s / self.ntp_s
+    }
+}
+
+/// The benched operators: the acceptance pair.
+fn bench_operators() -> Vec<(&'static str, DiffOperator)> {
+    vec![
+        ("laplacian2d", DiffOperator::laplacian(2)),
+        ("biharmonic2d", DiffOperator::biharmonic(2)),
+    ]
+}
+
+/// Evaluate `op[u]` over `x` with the nested-tape baseline: build the
+/// graph (repeated backward per multi-index), evaluate, return the
+/// operator values.
+fn autodiff_operator_eval(mlp: &Mlp, x: &Tensor, op: &DiffOperator) -> Tensor {
+    let mut g = Graph::new();
+    let pn = mlp.const_param_nodes(&mut g);
+    let xn = g.input(x.shape());
+    let u = mlp.forward_graph(&mut g, xn, &pn);
+    let mut partials = HashMap::new();
+    for alpha in op.needed_partials() {
+        let node = if alpha.iter().all(|&a| a == 0) {
+            u
+        } else {
+            higher::mixed_partial(&mut g, u, xn, &alpha)
+        };
+        partials.insert(alpha, node);
+    }
+    let lhs = op.apply_nodes(&mut g, &partials);
+    let vals = g.eval(&[x.clone()], &[lhs]);
+    vals.get(lhs).clone()
+}
+
+fn mean_s(ts: &[f64]) -> f64 {
+    Summary::of(ts).mean
+}
+
+/// Run the operator sweep (differentially checking the two paths on a
+/// subsample before each timed cell).
+pub fn run(cfg: &OperatorBenchConfig, progress: impl Fn(&str)) -> Vec<OperatorCell> {
+    let mut rng = Prng::seeded(cfg.seed);
+    let mlp = Mlp::uniform_with(2, cfg.width, cfg.depth, 1, cfg.activation, &mut rng);
+    let x = Tensor::rand_uniform(&[cfg.batch, 2], -1.0, 1.0, &mut rng);
+    let mut out = Vec::new();
+    for (name, op) in bench_operators() {
+        let n = op.max_order();
+        let engine = MultiJetEngine::new(2, n);
+        progress(&format!(
+            "operator {name}: n={n}, {} directions, B={}",
+            engine.plan().n_directions(),
+            cfg.batch
+        ));
+
+        // Differential check on a subsample: the two exact paths must
+        // agree far below any interesting perf difference.
+        let rows = cfg.check_rows.min(cfg.batch).max(1);
+        let xs = Tensor::from_vec(x.data()[..rows * 2].to_vec(), &[rows, 2]);
+        let jet = engine.jet(&mlp, &xs);
+        let got = op.apply(&jet);
+        let want = autodiff_operator_eval(&mlp, &xs, &op);
+        for (i, (&a, &b)) in got.data().iter().zip(want.data()).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-8 * (1.0 + b.abs()),
+                "{name}: directional {a} vs nested-tape {b} at row {i}"
+            );
+        }
+
+        let ntp_s = mean_s(&time_trials(cfg.warmup, cfg.trials, || {
+            let jet = engine.jet(&mlp, &x);
+            std::hint::black_box(op.apply(&jet));
+        }));
+        let autodiff_s = mean_s(&time_trials(cfg.warmup, cfg.trials, || {
+            std::hint::black_box(autodiff_operator_eval(&mlp, &x, &op));
+        }));
+        out.push(OperatorCell {
+            name,
+            batch: cfg.batch,
+            n,
+            directions: engine.plan().n_directions(),
+            width: cfg.width,
+            depth: cfg.depth,
+            ntp_s,
+            autodiff_s,
+        });
+    }
+    out
+}
+
+/// One row per operator, with the speedup column the acceptance bar
+/// reads.
+pub fn table(cells: &[OperatorCell]) -> Table {
+    let mut t = Table::new(&[
+        "operator",
+        "batch",
+        "n",
+        "directions",
+        "width",
+        "depth",
+        "ntp_s",
+        "autodiff_s",
+        "speedup",
+    ]);
+    for c in cells {
+        t.push(vec![
+            c.name.to_string(),
+            c.batch.to_string(),
+            c.n.to_string(),
+            c.directions.to_string(),
+            c.width.to_string(),
+            c.depth.to_string(),
+            format!("{:.6e}", c.ntp_s),
+            format!("{:.6e}", c.autodiff_s),
+            format!("{:.4}", c.speedup()),
+        ]);
+    }
+    t
+}
+
+/// Write `operator_speedup.csv`.
+pub fn save(cells: &[OperatorCell], dir: &Path) -> std::io::Result<()> {
+    table(cells).save(&dir.join("operator_speedup.csv"))
+}
+
+/// The `BENCH_operators.json` document: config + per-operator results.
+pub fn to_json(cfg: &OperatorBenchConfig, cells: &[OperatorCell]) -> Json {
+    let results: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("operator", Json::Str(c.name.into())),
+                ("n", Json::Num(c.n as f64)),
+                ("directions", Json::Num(c.directions as f64)),
+                ("ntp_s", Json::Num(c.ntp_s)),
+                ("autodiff_s", Json::Num(c.autodiff_s)),
+                ("speedup", Json::Num(c.speedup())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("operators".into())),
+        (
+            "config",
+            Json::obj(vec![
+                ("batch", Json::Num(cfg.batch as f64)),
+                ("width", Json::Num(cfg.width as f64)),
+                ("depth", Json::Num(cfg.depth as f64)),
+                ("activation", Json::Str(cfg.activation.name().into())),
+                ("trials", Json::Num(cfg.trials as f64)),
+            ]),
+        ),
+        ("results", Json::Arr(results)),
+    ])
+}
+
+/// Write the `BENCH_operators.json` document to `path`.
+pub fn save_json(
+    cfg: &OperatorBenchConfig,
+    cells: &[OperatorCell],
+    path: &Path,
+) -> std::io::Result<()> {
+    std::fs::write(path, to_json(cfg, cells).dump() + "\n")
+}
+
+/// Human-readable summary for the CLI.
+pub fn summarize(cells: &[OperatorCell]) -> String {
+    let mut out =
+        String::from("directional n-TangentProp vs nested-tape autodiff (mean seconds)\n");
+    for c in cells {
+        out.push_str(&format!(
+            "  {:<14} B={:<6} n={} D={:<2} directional {:>10.1} µs  \
+             nested-tape {:>12.1} µs ({:.1}x)\n",
+            c.name,
+            c.batch,
+            c.n,
+            c.directions,
+            c.ntp_s * 1e6,
+            c.autodiff_s * 1e6,
+            c.speedup()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_operator_bench_produces_csv_and_json() {
+        let cfg = OperatorBenchConfig {
+            width: 6,
+            depth: 2,
+            batch: 24,
+            check_rows: 8,
+            warmup: 0,
+            trials: 1,
+            ..OperatorBenchConfig::default()
+        };
+        let cells = run(&cfg, |_| {});
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert!(c.ntp_s > 0.0 && c.autodiff_s > 0.0);
+        }
+        assert_eq!(cells[0].n, 2);
+        assert_eq!(cells[1].n, 4);
+        let t = table(&cells);
+        assert_eq!(t.rows.len(), 2);
+        assert!(summarize(&cells).contains("directional"));
+        let dir = std::env::temp_dir().join("ntangent_test_operator_bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        save(&cells, &dir).unwrap();
+        assert!(dir.join("operator_speedup.csv").exists());
+        let jpath = dir.join("BENCH_operators.json");
+        save_json(&cfg, &cells, &jpath).unwrap();
+        let text = std::fs::read_to_string(&jpath).unwrap();
+        let doc = Json::parse(text.trim()).unwrap();
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("operators"));
+        assert_eq!(
+            doc.get("results").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(2)
+        );
+    }
+}

@@ -80,6 +80,14 @@ impl EvalBackend for NativeBackend {
 
     fn eval_batch(&mut self, xs: &[f64]) -> Result<Vec<Vec<f64>>> {
         ensure!(!xs.is_empty() && xs.len() <= self.cap, "bad batch size {}", xs.len());
+        // A multi-input checkpoint can't serve scalar 'points' requests
+        // — surface a protocol error instead of panicking the worker
+        // (multivariate requests go through the operator front).
+        ensure!(
+            self.mlp.input_dim() == 1,
+            "served model has input dim {}; use a points_nd + operator request",
+            self.mlp.input_dim()
+        );
         let x = Tensor::from_vec(xs.to_vec(), &[xs.len(), 1]);
         let channels = self.engine.forward(&self.mlp, &x);
         Ok(channels.into_iter().map(Tensor::into_vec).collect())

@@ -30,4 +30,4 @@ pub mod service;
 pub use backend::{EvalBackend, NativeBackend, PjrtBackend};
 pub use batcher::BatcherConfig;
 pub use metrics::{Metrics, MetricsSnapshot, WorkerSnapshot};
-pub use service::{Service, ServiceHandle};
+pub use service::{OperatorServer, Service, ServiceHandle, MAX_SERVED_OPERATOR_ORDER};

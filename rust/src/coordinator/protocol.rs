@@ -2,8 +2,10 @@
 //!
 //! Request:  `{"points": [0.1, 0.2, ...]}`
 //!           `{"points": [...], "activation": "sin"}`
+//!           `{"points_nd": [[0.1, 0.2], ...], "operator": "d20+d02"}`
 //!           `{"cmd": "stats"}`
 //! Response: `{"channels": [[u...], [u'...], ...]}`
+//!           `{"u": [...], "operator": [...]}`
 //!           `{"error": "..."}`
 //!           `{"stats": {...}}`
 //!
@@ -13,6 +15,13 @@
 //! before the field existed: the backend evaluates with the served
 //! model's own activation (tanh for every pre-existing checkpoint), so
 //! the protocol stays wire-compatible.
+//!
+//! `points_nd` + `operator` is the multivariate request form: each
+//! point is one row of coordinates (arity = the served model's input
+//! dim), and `operator` is a library problem name or a
+//! [`crate::pde::DiffOperator::parse`] spec. The response carries the
+//! field values `u` and the operator values `L[u]` at every point.
+//! Scalar requests are untouched — the extension is wire-compatible.
 
 use super::metrics::MetricsSnapshot;
 use crate::ntp::ActivationKind;
@@ -29,6 +38,13 @@ pub enum WireRequest {
         /// default).
         activation: Option<ActivationKind>,
     },
+    /// Evaluate a differential operator at multi-dimensional points.
+    EvalOperator {
+        /// Points, one coordinate row each (equal arity).
+        points: Vec<Vec<f64>>,
+        /// Operator: a library problem name or a parseable spec.
+        operator: String,
+    },
     /// Return the service metrics snapshot.
     Stats,
 }
@@ -41,6 +57,31 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
             "stats" => Ok(WireRequest::Stats),
             other => Err(format!("unknown cmd '{other}'")),
         };
+    }
+    if let Some(rows) = v.get("points_nd") {
+        let rows = rows
+            .as_arr()
+            .ok_or_else(|| "'points_nd' must be an array of coordinate rows".to_string())?;
+        let points: Vec<Vec<f64>> = rows
+            .iter()
+            .map(|r| {
+                r.as_f64_vec()
+                    .ok_or_else(|| "every 'points_nd' row must be a numeric array".to_string())
+            })
+            .collect::<Result<_, _>>()?;
+        if points.is_empty() {
+            return Err("'points_nd' must be non-empty".to_string());
+        }
+        let dim = points[0].len();
+        if dim == 0 || points.iter().any(|p| p.len() != dim) {
+            return Err("'points_nd' rows must share a non-zero arity".to_string());
+        }
+        let operator = v
+            .get("operator")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "'points_nd' requests need an 'operator' string".to_string())?
+            .to_string();
+        return Ok(WireRequest::EvalOperator { points, operator });
     }
     let points = v
         .get("points")
@@ -71,6 +112,43 @@ pub fn encode_request(points: &[f64], activation: Option<ActivationKind>) -> Str
         fields.push(("activation", Json::Str(kind.name().to_string())));
     }
     Json::obj(fields).dump()
+}
+
+/// Encode an operator-evaluation request (client side).
+pub fn encode_operator_request(points: &[Vec<f64>], operator: &str) -> String {
+    let rows = Json::Arr(points.iter().map(|p| Json::num_arr(p)).collect());
+    Json::obj(vec![
+        ("points_nd", rows),
+        ("operator", Json::Str(operator.to_string())),
+    ])
+    .dump()
+}
+
+/// Encode an operator-evaluation response: the field values `u` and the
+/// operator values `L[u]`, one per requested point.
+pub fn encode_operator_values(u: &[f64], values: &[f64]) -> String {
+    Json::obj(vec![
+        ("u", Json::num_arr(u)),
+        ("operator", Json::num_arr(values)),
+    ])
+    .dump()
+}
+
+/// Decode an operator-evaluation response (client side): `(u, L[u])`.
+pub fn parse_operator_values(line: &str) -> Result<(Vec<f64>, Vec<f64>), String> {
+    let v = Json::parse(line).map_err(|e| e.to_string())?;
+    if let Some(err) = v.get("error").and_then(Json::as_str) {
+        return Err(err.to_string());
+    }
+    let u = v
+        .get("u")
+        .and_then(Json::as_f64_vec)
+        .ok_or_else(|| "missing 'u'".to_string())?;
+    let vals = v
+        .get("operator")
+        .and_then(Json::as_f64_vec)
+        .ok_or_else(|| "missing 'operator'".to_string())?;
+    Ok((u, vals))
 }
 
 /// Encode an evaluation response.
@@ -168,6 +246,47 @@ mod tests {
         }
         // Wire compatibility: no field at all unless requested.
         assert!(!encode_request(&[1.0], None).contains("activation"));
+    }
+
+    #[test]
+    fn parses_operator_request() {
+        let r = parse_request(r#"{"points_nd": [[0.1, 0.2], [0.3, 0.4]], "operator": "d20+d02"}"#)
+            .unwrap();
+        assert_eq!(
+            r,
+            WireRequest::EvalOperator {
+                points: vec![vec![0.1, 0.2], vec![0.3, 0.4]],
+                operator: "d20+d02".to_string()
+            }
+        );
+        // Missing operator, empty rows, ragged arity: rejected.
+        assert!(parse_request(r#"{"points_nd": [[0.1, 0.2]]}"#).is_err());
+        assert!(parse_request(r#"{"points_nd": [], "operator": "d20"}"#).is_err());
+        assert!(parse_request(r#"{"points_nd": [[0.1], [0.2, 0.3]], "operator": "d2"}"#).is_err());
+        assert!(parse_request(r#"{"points_nd": [0.1], "operator": "d2"}"#).is_err());
+    }
+
+    #[test]
+    fn operator_request_roundtrips() {
+        let pts = vec![vec![0.25, -0.5], vec![0.5, 0.75]];
+        let line = encode_operator_request(&pts, "heat2d");
+        let parsed = parse_request(&line).unwrap();
+        assert_eq!(
+            parsed,
+            WireRequest::EvalOperator { points: pts, operator: "heat2d".to_string() }
+        );
+        // Scalar requests never grow the new fields.
+        assert!(!encode_request(&[1.0], None).contains("points_nd"));
+    }
+
+    #[test]
+    fn operator_values_roundtrip() {
+        let line = encode_operator_values(&[1.0, 2.0], &[-0.5, 0.25]);
+        assert_eq!(
+            parse_operator_values(&line).unwrap(),
+            (vec![1.0, 2.0], vec![-0.5, 0.25])
+        );
+        assert!(parse_operator_values(&encode_error("nope")).is_err());
     }
 
     #[test]

@@ -191,21 +191,101 @@ impl ServiceHandle {
     }
 }
 
+/// Direct evaluator behind the wire protocol's multivariate
+/// `points_nd` + `operator` requests: holds the served model and
+/// answers each request with one direction-stacked
+/// [`crate::ntp::MultiJetEngine`] pass.
+///
+/// Operator requests bypass the batcher queues — every request is a
+/// self-contained fused batch already (`D · B` rows), so dynamic
+/// batching would only add latency. Plans are compiled per request
+/// (cheap: a small exact rational solve) because the operator is
+/// client-chosen.
+pub struct OperatorServer {
+    mlp: crate::nn::Mlp,
+    policy: crate::ntp::ParallelPolicy,
+}
+
+/// Highest operator order [`OperatorServer::eval`] accepts — the
+/// documented `JetPlan` envelope. The spec is client-chosen, so without
+/// a bound a parseable-but-extreme request (`"d99"`) would drive
+/// unbounded plan compilation (and eventually an exact-arithmetic
+/// overflow panic) on the connection thread instead of an error reply.
+pub const MAX_SERVED_OPERATOR_ORDER: usize = 8;
+
+impl OperatorServer {
+    /// Serve `mlp` (any input dim) with the given batch-parallel policy.
+    pub fn new(mlp: crate::nn::Mlp, policy: crate::ntp::ParallelPolicy) -> OperatorServer {
+        OperatorServer { mlp, policy }
+    }
+
+    /// Evaluate `(u, L[u])` at the requested points. `operator` is a
+    /// library problem name or a [`crate::pde::DiffOperator::parse`]
+    /// spec over the served model's input dim, of order ≤
+    /// [`MAX_SERVED_OPERATOR_ORDER`].
+    pub fn eval(
+        &self,
+        points: &[Vec<f64>],
+        operator: &str,
+    ) -> std::result::Result<(Vec<f64>, Vec<f64>), String> {
+        let dim = self.mlp.input_dim();
+        if points.iter().any(|p| p.len() != dim) {
+            return Err(format!("served model expects {dim}-dimensional points"));
+        }
+        let op = crate::pde::resolve_operator(operator, dim)?;
+        if op.max_order() > MAX_SERVED_OPERATOR_ORDER {
+            return Err(format!(
+                "operator order {} exceeds the served maximum {MAX_SERVED_OPERATOR_ORDER}",
+                op.max_order()
+            ));
+        }
+        let flat: Vec<f64> = points.iter().flatten().copied().collect();
+        let x = crate::tensor::Tensor::from_vec(flat, &[points.len(), dim]);
+        let engine = crate::ntp::MultiJetEngine::with_policy(dim, op.max_order(), self.policy);
+        let jet = engine.jet(&self.mlp, &x);
+        let u = jet.value();
+        let vals = op.apply(&jet);
+        Ok((u.data().to_vec(), vals.data().to_vec()))
+    }
+}
+
 /// Serve the JSON-lines protocol on `listener`, one thread per connection,
-/// until the process exits. Returns only on accept errors.
+/// until the process exits. Returns only on accept errors. Operator
+/// requests are rejected; use [`serve_tcp_with`] to serve them.
 pub fn serve_tcp(listener: TcpListener, handle: ServiceHandle) -> Result<()> {
+    serve_tcp_with(listener, handle, None)
+}
+
+/// [`serve_tcp`] with an optional [`OperatorServer`] answering the
+/// multivariate `points_nd` + `operator` requests.
+pub fn serve_tcp_with(
+    listener: TcpListener,
+    handle: ServiceHandle,
+    operators: Option<Arc<OperatorServer>>,
+) -> Result<()> {
     for stream in listener.incoming() {
         let stream = stream.context("accept failed")?;
         let handle = handle.clone();
+        let operators = operators.clone();
         std::thread::spawn(move || {
-            let _ = serve_connection(stream, handle);
+            let _ = serve_connection_with(stream, handle, operators.as_deref());
         });
     }
     Ok(())
 }
 
-/// One connection: read request lines, write response lines.
+/// One connection: read request lines, write response lines (no
+/// operator support; see [`serve_connection_with`]).
 pub fn serve_connection(stream: TcpStream, handle: ServiceHandle) -> Result<()> {
+    serve_connection_with(stream, handle, None)
+}
+
+/// One connection with optional operator support.
+pub fn serve_connection_with(
+    stream: TcpStream,
+    handle: ServiceHandle,
+    operators: Option<&OperatorServer>,
+) -> Result<()> {
     let mut writer = stream.try_clone().context("cloning stream")?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -220,6 +300,15 @@ pub fn serve_connection(stream: TcpStream, handle: ServiceHandle) -> Result<()> 
                     Err(e) => protocol::encode_error(&e.to_string()),
                 }
             }
+            Ok(protocol::WireRequest::EvalOperator { points, operator }) => match operators {
+                Some(srv) => match srv.eval(&points, &operator) {
+                    Ok((u, vals)) => protocol::encode_operator_values(&u, &vals),
+                    Err(e) => protocol::encode_error(&e),
+                },
+                None => protocol::encode_error(
+                    "this endpoint serves no operator evaluator (scalar checkpoints only)",
+                ),
+            },
             Ok(protocol::WireRequest::Stats) => protocol::encode_stats(&handle.metrics()),
             Err(e) => protocol::encode_error(&e),
         };
@@ -265,6 +354,22 @@ impl TcpClient {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         protocol::parse_channels(line.trim()).map_err(|e| anyhow!(e))
+    }
+
+    /// Evaluate a differential operator at multi-dimensional points:
+    /// returns `(u, L[u])` (needs a server started with an
+    /// [`OperatorServer`]).
+    pub fn eval_operator(
+        &mut self,
+        points: &[Vec<f64>],
+        operator: &str,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let req = protocol::encode_operator_request(points, operator);
+        self.writer.write_all(req.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        protocol::parse_operator_values(line.trim()).map_err(|e| anyhow!(e))
     }
 
     /// Fetch the stats response line (raw JSON).
@@ -354,6 +459,52 @@ mod tests {
         let stats = client.stats().unwrap();
         assert!(stats.contains("\"requests\""));
         service.shutdown();
+    }
+
+    /// Operator requests over TCP: a 2-D model served with an
+    /// [`OperatorServer`] answers `(u, L[u])` matching the direct jet
+    /// evaluation; endpoints without one reject the request; scalar
+    /// requests on the same connection keep working.
+    #[test]
+    fn tcp_front_serves_operator_requests() {
+        use crate::ntp::{MultiJetEngine, ParallelPolicy};
+        use crate::pde::DiffOperator;
+        let (service, _) = test_service();
+        let mut rng = Prng::seeded(77);
+        let mlp2 = Mlp::uniform(2, 6, 2, 1, &mut rng);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = service.handle();
+        let ops = Arc::new(OperatorServer::new(mlp2.clone(), ParallelPolicy::Serial));
+        std::thread::spawn(move || serve_tcp_with(listener, handle, Some(ops)));
+
+        let mut client = TcpClient::connect(&addr).unwrap();
+        let pts = vec![vec![0.1, 0.2], vec![-0.4, 0.6]];
+        let (u, vals) = client.eval_operator(&pts, "d20+d02").unwrap();
+        let x = Tensor::from_vec(vec![0.1, 0.2, -0.4, 0.6], &[2, 2]);
+        let op = DiffOperator::laplacian(2);
+        let engine = MultiJetEngine::new(2, 2);
+        let jet = engine.jet(&mlp2, &x);
+        assert_eq!(u, jet.value().data().to_vec());
+        assert_eq!(vals, op.apply(&jet).data().to_vec());
+        // Wrong arity, unknown operators and orders beyond the served
+        // cap surface as protocol errors (never connection drops).
+        assert!(client.eval_operator(&[vec![0.1]], "d20+d02").is_err());
+        assert!(client.eval_operator(&pts, "bogus_op").is_err());
+        assert!(client.eval_operator(&pts, "d90").is_err()); // order 9 > cap 8
+        // Scalar requests still work on the same connection.
+        assert_eq!(client.eval(&[0.25]).unwrap().len(), 3);
+        service.shutdown();
+
+        // An endpoint without an OperatorServer rejects operator requests.
+        let (service2, _) = test_service();
+        let listener2 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr2 = listener2.local_addr().unwrap().to_string();
+        let handle2 = service2.handle();
+        std::thread::spawn(move || serve_tcp(listener2, handle2));
+        let mut client2 = TcpClient::connect(&addr2).unwrap();
+        assert!(client2.eval_operator(&pts, "d20+d02").is_err());
+        service2.shutdown();
     }
 
     #[test]

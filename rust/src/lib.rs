@@ -31,6 +31,16 @@
 //!   (serial / fixed-threads / auto): the batch axis is embarrassingly
 //!   parallel, so `forward_n` chunks rows across scoped threads with
 //!   bitwise-identical output (see `rust/tests/parallel_determinism.rs`).
+//!   The same kernel serves multi-dimensional inputs through
+//!   **directional jets** (`forward_directional`): [`ntp::multi`]
+//!   compiles exact integer direction sets with rational recombination
+//!   matrices so arbitrary mixed partials `∂^α u` assemble from one
+//!   direction-stacked fused batch ([`ntp::MultiJetEngine`]).
+//! - [`pde`] — differential-operator descriptions (linear terms plus the
+//!   `u·∂u` nonlinear-term hook, a text spec parser) and a library of
+//!   2-D scenarios (heat, Poisson, wave, KdV, biharmonic) with
+//!   manufactured exact solutions. `ntangent bench operators` measures
+//!   the directional-jet path against the nested-tape baseline.
 //! - [`nn`] — dense MLPs (each carrying its [`ntp::ActivationKind`]) and
 //!   parameter (un)flattening.
 //! - [`opt`] — Adam, SGD and L-BFGS with a strong-Wolfe line search. All
@@ -94,6 +104,7 @@ pub mod coordinator;
 pub mod nn;
 pub mod ntp;
 pub mod opt;
+pub mod pde;
 pub mod pinn;
 pub mod runtime;
 pub mod tensor;

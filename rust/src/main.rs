@@ -7,16 +7,20 @@
 //!   serve                         run the batching derivative-evaluation service
 //!   info                          tables, op counts and environment info
 
-use ntangent::bench::{grid, kernels, memory, parallel, passes, profiles, train_par, training};
-use ntangent::coordinator::{BatcherConfig, NativeBackend, PjrtBackend, Service};
+use ntangent::bench::{
+    grid, kernels, memory, operators, parallel, passes, profiles, train_par, training,
+};
+use ntangent::coordinator::{BatcherConfig, NativeBackend, OperatorServer, PjrtBackend, Service};
 use ntangent::nn::Checkpoint;
 use ntangent::ntp::{hardy_ramanujan, partition_count, ActivationKind, NtpEngine, ParallelPolicy};
-use ntangent::pinn::{BurgersLossSpec, DerivEngine, TrainConfig};
+use ntangent::pde::{resolve_operator, PdeProblem};
+use ntangent::pinn::{BurgersLossSpec, DerivEngine, MultiPinnSpec, TrainConfig};
 use ntangent::runtime::{ArtifactManifest, Runtime};
 use ntangent::tensor::Tensor;
 use ntangent::util::cli::{usage, Args, OptSpec};
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::sync::Arc;
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -53,9 +57,9 @@ fn top_usage() -> String {
     "ntangent — n-TangentProp reproduction (quasilinear higher-order derivatives)\n\
      \nUSAGE: ntangent <COMMAND> [OPTIONS]\n\
      \nCOMMANDS:\n\
-     \x20 bench <target>   fig1..fig10|mem|par|kernels|train-par|all\n\
-     \x20 train            train a Burgers-profile PINN\n\
-     \x20 eval             evaluate a checkpoint at points\n\
+     \x20 bench <target>   fig1..fig10|mem|par|kernels|train-par|operators|all\n\
+     \x20 train            train a PINN (Burgers profile, or --pde heat2d|poisson2d|...)\n\
+     \x20 eval             evaluate a checkpoint at points (--operator for PDE operators)\n\
      \x20 validate         check a Burgers checkpoint against the analytic profile\n\
      \x20 serve            run the derivative-evaluation service (TCP JSON lines)\n\
      \x20 info             show tables / op-count / environment info\n\
@@ -113,7 +117,7 @@ fn cmd_bench(raw: &[String]) -> Result<(), String> {
     let targets: Vec<String> = if target == "all" {
         [
             "fig1", "fig4", "fig6", "fig8", "fig9", "fig7", "fig10", "mem", "par", "kernels",
-            "train-par",
+            "train-par", "operators",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -349,6 +353,42 @@ fn run_bench_target(target: &str, args: &Args, out_dir: &Path) -> Result<(), Str
             }
             println!("{}", kernels::summarize(&cells));
         }
+        "operators" | "ops" => {
+            let mut cfg = if args.flag("smoke") {
+                operators::OperatorBenchConfig::smoke()
+            } else {
+                operators::OperatorBenchConfig::default()
+            };
+            if let Some(v) = args.get_usize("batch")? {
+                cfg.batch = v.max(1);
+            }
+            if let Some(v) = args.get_usize("width")? {
+                cfg.width = v;
+            }
+            if let Some(v) = args.get_usize("depth")? {
+                cfg.depth = v;
+            }
+            if let Some(v) = args.get("activation") {
+                cfg.activation = parse_activation(v)?;
+            }
+            if let Some(v) = args.get_usize("trials")? {
+                cfg.trials = v;
+            }
+            eprintln!(
+                "[bench] operators: directional n-TP vs nested-tape autodiff, {}x{} {} net, B={}",
+                cfg.depth,
+                cfg.width,
+                cfg.activation.name(),
+                cfg.batch
+            );
+            let cells = operators::run(&cfg, |msg| eprintln!("[bench] {msg}"));
+            operators::save(&cells, out_dir).map_err(|e| e.to_string())?;
+            if let Some(p) = args.get("json") {
+                operators::save_json(&cfg, &cells, Path::new(p)).map_err(|e| e.to_string())?;
+                eprintln!("[bench] wrote {p}");
+            }
+            println!("{}", operators::summarize(&cells));
+        }
         "train-par" | "train_par" => {
             let mut cfg = train_par::TrainParBenchConfig::default();
             if let Some(v) = args.get_usize("profile")? {
@@ -397,6 +437,9 @@ fn run_bench_target(target: &str, args: &Args, out_dir: &Path) -> Result<(), Str
 fn cmd_train(raw: &[String]) -> Result<(), String> {
     let specs = vec![
         OptSpec { name: "profile", help: "Burgers profile k (1..4)", takes_value: true, default: Some("1") },
+        OptSpec { name: "pde", help: "train a library PDE instead of Burgers: heat2d | poisson2d | wave2d | kdv | biharmonic2d", takes_value: true, default: None },
+        OptSpec { name: "points", help: "interior collocation points (--pde)", takes_value: true, default: None },
+        OptSpec { name: "bc-points", help: "boundary collocation points (--pde)", takes_value: true, default: None },
         OptSpec { name: "adam-epochs", help: "Adam epochs", takes_value: true, default: Some("300") },
         OptSpec { name: "lbfgs-epochs", help: "L-BFGS epochs", takes_value: true, default: Some("300") },
         OptSpec { name: "width", help: "network width", takes_value: true, default: Some("24") },
@@ -426,6 +469,55 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
     if let Some(v) = args.get_usize("chunk")? {
         cfg.chunk = v.max(1);
     }
+    // --- Multi-dimensional PDE training (--pde) -------------------------
+    if let Some(pde_name) = args.get("pde") {
+        let problem = PdeProblem::from_name(pde_name).ok_or_else(|| {
+            format!(
+                "unknown PDE '{pde_name}' (library: {})",
+                PdeProblem::ALL
+                    .iter()
+                    .map(|p| p.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+        let mut spec = MultiPinnSpec::for_problem(problem);
+        if let Some(v) = args.get_usize("points")? {
+            spec.n_interior = v.max(1);
+        }
+        if let Some(v) = args.get_usize("bc-points")? {
+            spec.n_boundary = v;
+        }
+        let op = problem.operator();
+        eprintln!(
+            "training PDE {} (L = {}, order {}) with {engine:?}, {}x{} {} net, \
+             {} + {} points, {:?} gradient accumulation",
+            problem.name(),
+            op.describe(),
+            op.max_order(),
+            cfg.depth,
+            cfg.width,
+            cfg.activation.name(),
+            spec.n_interior,
+            spec.n_boundary,
+            cfg.policy
+        );
+        let result = ntangent::pinn::train_pde(spec, &cfg, engine);
+        println!(
+            "done in {:.1}s: loss = {:.3e}, residual RMS = {:.3e}, L2(u) = {:.3e}",
+            result.seconds,
+            result.final_loss,
+            result.residual_rms(256, 1),
+            result.solution_l2_error(256, 2),
+        );
+        let mut ck = Checkpoint::from_mlp(&result.mlp);
+        ck.final_loss = Some(result.final_loss);
+        let out = PathBuf::from(args.get("out").unwrap());
+        ck.save(&out).map_err(|e| e.to_string())?;
+        println!("checkpoint -> {}", out.display());
+        return Ok(());
+    }
+
     let spec = BurgersLossSpec::for_profile(k);
     eprintln!(
         "training profile k={k} (λ* = {:.6}, {} derivatives) with {engine:?}, {}x{} {} net, \
@@ -469,8 +561,9 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
 fn cmd_eval(raw: &[String]) -> Result<(), String> {
     let specs = vec![
         OptSpec { name: "checkpoint", help: "checkpoint JSON", takes_value: true, default: Some("results/checkpoint.json") },
-        OptSpec { name: "points", help: "comma list of x values", takes_value: true, default: Some("-1.0,-0.5,0.0,0.5,1.0") },
+        OptSpec { name: "points", help: "comma list of x values (';'-separated coordinate rows with --operator)", takes_value: true, default: Some("-1.0,-0.5,0.0,0.5,1.0") },
         OptSpec { name: "n", help: "derivative order", takes_value: true, default: Some("3") },
+        OptSpec { name: "operator", help: "evaluate a differential operator: library name (heat2d, ...) or spec like 'd20+d02'", takes_value: true, default: None },
         OptSpec { name: "threads", help: "batch parallelism: serial | auto | N", takes_value: true, default: Some("serial") },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
@@ -484,6 +577,53 @@ fn cmd_eval(raw: &[String]) -> Result<(), String> {
     let mlp = ck.to_mlp().map_err(|e| e.to_string())?;
     let n = args.get_usize("n")?.unwrap();
     let policy = parse_policy(args.get("threads").unwrap())?;
+
+    // --- Operator evaluation over multi-dimensional points --------------
+    if let Some(op_spec) = args.get("operator") {
+        let dim = mlp.input_dim();
+        let op = resolve_operator(op_spec, dim)?;
+        let rows: Vec<Vec<f64>> = args
+            .get("points")
+            .unwrap()
+            .split(';')
+            .map(|grp| {
+                grp.split(',')
+                    .map(|s| s.trim().parse().map_err(|_| format!("bad coordinate '{s}'")))
+                    .collect::<Result<Vec<f64>, String>>()
+            })
+            .collect::<Result<_, _>>()?;
+        for p in &rows {
+            if p.len() != dim {
+                return Err(format!(
+                    "point {p:?} has {} coordinates, the model expects {dim} \
+                     (separate points with ';', coordinates with ',')",
+                    p.len()
+                ));
+            }
+        }
+        // Same evaluator the wire protocol's points_nd requests use.
+        let server = OperatorServer::new(mlp, policy);
+        let (u, vals) = server.eval(&rows, op_spec)?;
+        println!("operator {} (order {})", op.describe(), op.max_order());
+        print!("{:>28}", "point");
+        print!("{:>16}{:>16}", "u", "L[u]");
+        println!();
+        for (i, p) in rows.iter().enumerate() {
+            let coords: Vec<String> = p.iter().map(|c| format!("{c:.4}")).collect();
+            print!("{:>28}", format!("({})", coords.join(", ")));
+            print!("{:>16.8}{:>16.8}", u[i], vals[i]);
+            println!();
+        }
+        return Ok(());
+    }
+
+    if mlp.input_dim() != 1 {
+        return Err(format!(
+            "checkpoint has a {}-dimensional input; evaluate it with \
+             --operator (library name or spec like 'd20+d02')",
+            mlp.input_dim()
+        ));
+    }
     let points: Vec<f64> = args
         .get("points")
         .unwrap()
@@ -593,6 +733,9 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
 
     let theta = Tensor::from_vec(ck.theta.clone(), &[ck.theta.len()]);
     let mlp = ck.to_mlp().map_err(|e| e.to_string())?;
+    // The operator front serves multivariate `points_nd` requests
+    // against the same checkpoint (any input dim).
+    let operator_server = Arc::new(OperatorServer::new(mlp.clone(), policy));
 
     let service = match backend_kind.as_str() {
         "native" => Service::start_pool(
@@ -633,10 +776,15 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
     eprintln!(
         "serving {backend_kind} backend on 127.0.0.1:{port} \
          ({workers} worker(s), {policy:?} batch parallelism; \
-         one JSON object per line; {{\"points\":[..]}} or {{\"cmd\":\"stats\"}})"
+         one JSON object per line; {{\"points\":[..]}}, \
+         {{\"points_nd\":[[..],..],\"operator\":\"d20+d02\"}} or {{\"cmd\":\"stats\"}})"
     );
-    ntangent::coordinator::service::serve_tcp(listener, service.handle())
-        .map_err(|e| e.to_string())
+    ntangent::coordinator::service::serve_tcp_with(
+        listener,
+        service.handle(),
+        Some(operator_server),
+    )
+    .map_err(|e| e.to_string())
 }
 
 // ------------------------------------------------------------------- info

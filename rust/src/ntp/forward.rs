@@ -163,6 +163,67 @@ fn ensure_zeroed(buf: &mut Tensor, shape: &[usize]) {
     }
 }
 
+/// Copy rows `lo..hi` of a rank-2 tensor into a fresh tensor.
+fn slice_rows(x: &Tensor, lo: usize, hi: usize) -> Tensor {
+    let d = x.shape()[1];
+    Tensor::from_vec(x.data()[lo * d..hi * d].to_vec(), &[hi - lo, d])
+}
+
+/// Row-chunk `batch` across `workers` scoped threads and stitch the
+/// per-chunk channel blocks back in order. Chunk 0 runs inline on the
+/// calling thread (which would otherwise idle in join), so `Fixed(t)`
+/// spawns t-1 threads and uses exactly t cores. Chunk boundaries are a
+/// pure function of `(batch, workers)` and every per-row value is
+/// independent of its chunk, so the stitched output is bitwise identical
+/// to a serial pass.
+fn parallel_channels<F>(
+    batch: usize,
+    out_dim: usize,
+    n: usize,
+    workers: usize,
+    eval: F,
+) -> Vec<Tensor>
+where
+    F: Fn(usize, usize) -> Vec<Tensor> + Sync,
+{
+    let rows = batch.div_ceil(workers);
+    let ranges: Vec<(usize, usize)> = (0..workers)
+        .filter_map(|w| {
+            let lo = w * rows;
+            if lo >= batch {
+                return None;
+            }
+            Some((lo, (lo + rows).min(batch)))
+        })
+        .collect();
+    let results: Vec<Vec<Tensor>> = std::thread::scope(|s| {
+        let eval = &eval;
+        let handles: Vec<_> = ranges[1..]
+            .iter()
+            .map(|&(lo, hi)| s.spawn(move || eval(lo, hi)))
+            .collect();
+        let mut results = Vec::with_capacity(ranges.len());
+        results.push(eval(ranges[0].0, ranges[0].1));
+        for h in handles {
+            results.push(h.join().expect("ntp worker panicked"));
+        }
+        results
+    });
+    (0..=n)
+        .map(|k| {
+            let mut out = Tensor::zeros(&[batch, out_dim]);
+            let dst = out.data_mut();
+            let mut off = 0;
+            for r in &results {
+                let src = r[k].data();
+                dst[off..off + src.len()].copy_from_slice(src);
+                off += src.len();
+            }
+            out
+        })
+        .collect()
+}
+
 /// The data slice for `y_j^c`: multiplicity 1 borrows the channel itself,
 /// higher multiplicities come from the scratch power cache.
 fn power_slice<'a>(y: &'a [Tensor], powers: &'a [Vec<Tensor>], j: usize, c: usize) -> &'a [f64] {
@@ -234,6 +295,66 @@ impl NtpEngine {
         self.forward_n(mlp, x, self.n_max)
     }
 
+    /// Compute the **directional jet** `[u, D_v u, ..., D_v^n u]` where
+    /// `D_v^k u = d^k/dt^k u(x + t·v) |_{t=0}`, for a multi-input network
+    /// (`x: [B, d]`) with one direction per row (`v: [B, d]`).
+    ///
+    /// The curve `t ↦ f(x + t·v)` is scalar-to-scalar, so the whole
+    /// univariate channel algebra — Faà di Bruno combine, fused tiles,
+    /// stacked GEMM — applies unchanged; only the channel *seeding*
+    /// differs: `y1 = v W0^T` (the chain rule through the first affine
+    /// layer) instead of `y1 = 1 W0^T`. This is the engine primitive
+    /// behind [`crate::ntp::multi::MultiJetEngine`], which batches `D`
+    /// directions into one `[D·B, d]` call and recombines the jets into
+    /// exact mixed partials.
+    ///
+    /// Under a non-serial [`ParallelPolicy`] the rows are chunked across
+    /// scoped threads exactly like [`NtpEngine::forward_n`], with bitwise
+    /// identical output.
+    ///
+    /// ```
+    /// use ntangent::nn::Mlp;
+    /// use ntangent::ntp::NtpEngine;
+    /// use ntangent::tensor::Tensor;
+    /// use ntangent::util::prng::Prng;
+    ///
+    /// let mut rng = Prng::seeded(2);
+    /// let mlp = Mlp::uniform(2, 8, 2, 1, &mut rng); // 2-D input
+    /// let x = Tensor::rand_uniform(&[16, 2], -1.0, 1.0, &mut rng);
+    /// let ex = Tensor::from_vec([1.0, 0.0].repeat(16), &[16, 2]);
+    /// let engine = NtpEngine::new(3);
+    /// let jet = engine.forward_directional(&mlp, &x, &ex, 2);
+    /// assert_eq!(jet.len(), 3); // [u, ∂u/∂x₀, ∂²u/∂x₀²]
+    /// assert_eq!(jet[0].shape(), &[16, 1]);
+    /// ```
+    pub fn forward_directional(&self, mlp: &Mlp, x: &Tensor, v: &Tensor, n: usize) -> Vec<Tensor> {
+        assert!(n <= self.n_max, "n={n} exceeds engine n_max={}", self.n_max);
+        assert_eq!(x.rank(), 2, "x must be [B, d]");
+        assert_eq!(v.shape(), x.shape(), "one direction row per point row");
+        assert_eq!(
+            mlp.input_dim(),
+            x.shape()[1],
+            "network input dim must match the point dim"
+        );
+        let batch = x.shape()[0];
+        let workers = self.policy.workers_for(batch);
+        if workers <= 1 {
+            let mut scratch = self.take_scratch();
+            let out = self.forward_directional_chunk(mlp, x, v, n, &mut scratch);
+            self.put_scratch(scratch);
+            out
+        } else {
+            parallel_channels(batch, mlp.output_dim(), n, workers, |lo, hi| {
+                let xc = slice_rows(x, lo, hi);
+                let vc = slice_rows(v, lo, hi);
+                let mut scratch = self.take_scratch();
+                let out = self.forward_directional_chunk(mlp, &xc, &vc, n, &mut scratch);
+                self.put_scratch(scratch);
+                out
+            })
+        }
+    }
+
     /// Shared argument validation of the forward entry points.
     fn check_forward_args(&self, mlp: &Mlp, x: &Tensor, n: usize) {
         assert!(n <= self.n_max, "n={n} exceeds engine n_max={}", self.n_max);
@@ -291,48 +412,9 @@ impl NtpEngine {
     /// Row-chunk the batch across `workers` scoped threads, each with its
     /// own pooled scratch, and stitch the channel blocks back in order.
     fn forward_parallel(&self, mlp: &Mlp, x: &Tensor, n: usize, workers: usize) -> Vec<Tensor> {
-        let batch = x.shape()[0];
-        let rows = batch.div_ceil(workers);
-        // `x` is [B, 1], so data indices are row indices.
-        let chunks: Vec<Tensor> = (0..workers)
-            .filter_map(|w| {
-                let lo = w * rows;
-                if lo >= batch {
-                    return None;
-                }
-                let hi = (lo + rows).min(batch);
-                Some(Tensor::from_vec(x.data()[lo..hi].to_vec(), &[hi - lo, 1]))
-            })
-            .collect();
-        // Chunk 0 runs inline on the calling thread (which would
-        // otherwise idle in join), so `Fixed(t)` spawns t-1 threads and
-        // uses exactly t cores.
-        let results: Vec<Vec<Tensor>> = std::thread::scope(|s| {
-            let handles: Vec<_> = chunks[1..]
-                .iter()
-                .map(|cx| s.spawn(move || self.forward_chunk_pooled(mlp, cx, n)))
-                .collect();
-            let mut results = Vec::with_capacity(chunks.len());
-            results.push(self.forward_chunk_pooled(mlp, &chunks[0], n));
-            for h in handles {
-                results.push(h.join().expect("ntp worker panicked"));
-            }
-            results
-        });
-        let od = mlp.output_dim();
-        (0..=n)
-            .map(|k| {
-                let mut out = Tensor::zeros(&[batch, od]);
-                let dst = out.data_mut();
-                let mut off = 0;
-                for r in &results {
-                    let src = r[k].data();
-                    dst[off..off + src.len()].copy_from_slice(src);
-                    off += src.len();
-                }
-                out
-            })
-            .collect()
+        parallel_channels(x.shape()[0], mlp.output_dim(), n, workers, |lo, hi| {
+            self.forward_chunk_pooled(mlp, &slice_rows(x, lo, hi), n)
+        })
     }
 
     /// One chunk's forward with a scratch borrowed from the pool.
@@ -358,6 +440,20 @@ impl NtpEngine {
             .push(scratch);
     }
 
+    /// Size the pooled buffers for one `batch`-row call: stacked channel
+    /// planes at the widest layer plus the tile workspace (laid out by
+    /// `n_max` so one scratch serves every call).
+    fn ensure_scratch(&self, mlp: &Mlp, batch: usize, n: usize, scratch: &mut Scratch) {
+        let nch = n + 1;
+        let ch_base = self.n_max + 1;
+        let xi_base = ch_base + self.program.n_operands();
+        let tile_planes = xi_base + self.n_max;
+        let w_max = mlp.layers.iter().map(|l| l.fan_out()).max().unwrap();
+        ensure_len(&mut scratch.stack_cur, nch * batch * w_max);
+        ensure_len(&mut scratch.stack_nxt, nch * batch * w_max);
+        ensure_len(&mut scratch.tile, tile_planes * TILE);
+    }
+
     /// The fused serial pass over one (chunk of a) batch.
     ///
     /// §Perf: the only tensor allocations are the `n+1` returned
@@ -367,27 +463,12 @@ impl NtpEngine {
     /// row-chunked execution bitwise identical to serial.
     fn forward_chunk(&self, mlp: &Mlp, x: &Tensor, n: usize, scratch: &mut Scratch) -> Vec<Tensor> {
         let batch = x.shape()[0];
-        let act = self.act_for(mlp.activation);
-        let prog = &self.program;
-        let nch = n + 1;
-
-        // Tile plane bases: towers first, then the program's operand
-        // planes (channels + powers), then the ξ accumulators. The
-        // layout is sized by `n_max` so one scratch serves every call.
-        let ch_base = self.n_max + 1;
-        let xi_base = ch_base + prog.n_operands();
-        let tile_planes = xi_base + self.n_max;
-
-        let w_max = mlp.layers.iter().map(|l| l.fan_out()).max().unwrap();
-        ensure_len(&mut scratch.stack_cur, nch * batch * w_max);
-        ensure_len(&mut scratch.stack_nxt, nch * batch * w_max);
-        ensure_len(&mut scratch.tile, tile_planes * TILE);
+        self.ensure_scratch(mlp, batch, n, scratch);
 
         // First affine layer seeds the channels:
         //   y0 = x W^T + b, y1 = 1 W^T (d x/dx = 1), y_i = 0 for i >= 2.
         let l0 = &mlp.layers[0];
         let w0 = l0.fan_out();
-        let mut width = w0;
         {
             let cur = &mut scratch.stack_cur;
             let wd = l0.w.data(); // [w0, 1] row-major = one weight per row
@@ -407,7 +488,78 @@ impl NtpEngine {
                 cur[k * plane..(k + 1) * plane].fill(0.0);
             }
         }
+        self.propagate_layers(mlp, batch, n, scratch)
+    }
 
+    /// Directional twin of [`NtpEngine::forward_chunk`]: seed the
+    /// channels for the curve `t ↦ f(x + t·v)` —
+    /// `y0 = x W0^T + b0`, `y1 = v W0^T`, `y_i = 0` for `i ≥ 2` — then
+    /// run the same fused layer propagation.
+    fn forward_directional_chunk(
+        &self,
+        mlp: &Mlp,
+        x: &Tensor,
+        v: &Tensor,
+        n: usize,
+        scratch: &mut Scratch,
+    ) -> Vec<Tensor> {
+        let batch = x.shape()[0];
+        let d = x.shape()[1];
+        self.ensure_scratch(mlp, batch, n, scratch);
+
+        let l0 = &mlp.layers[0];
+        let w0 = l0.fan_out();
+        let plane = batch * w0;
+        {
+            let cur = &mut scratch.stack_cur;
+            // y0 = x W0^T + b0 (bias enters channel 0 only).
+            matmul_nt_block_into(x.data(), l0.w.data(), &mut cur[..plane], batch, d, w0);
+            let bd = l0.b.data();
+            for row in cur[..plane].chunks_exact_mut(w0) {
+                for (o, &b) in row.iter_mut().zip(bd) {
+                    *o += b;
+                }
+            }
+            // y1 = v W0^T: d(x + t·v)/dt = v through the affine layer.
+            if n >= 1 {
+                matmul_nt_block_into(
+                    v.data(),
+                    l0.w.data(),
+                    &mut cur[plane..2 * plane],
+                    batch,
+                    d,
+                    w0,
+                );
+            }
+            for k in 2..=n {
+                cur[k * plane..(k + 1) * plane].fill(0.0);
+            }
+        }
+        self.propagate_layers(mlp, batch, n, scratch)
+    }
+
+    /// Advance pre-seeded stacked channels (channel `k` of the first
+    /// layer's output occupying `stack_cur[k·batch·w0 ..]`) through the
+    /// remaining layers with the fused element-tiled kernel and return
+    /// the `n+1` output channels — shared by the scalar and the
+    /// directional seeds.
+    fn propagate_layers(
+        &self,
+        mlp: &Mlp,
+        batch: usize,
+        n: usize,
+        scratch: &mut Scratch,
+    ) -> Vec<Tensor> {
+        let act = self.act_for(mlp.activation);
+        let prog = &self.program;
+        let nch = n + 1;
+
+        // Tile plane bases: towers first, then the program's operand
+        // planes (channels + powers), then the ξ accumulators.
+        let ch_base = self.n_max + 1;
+        let xi_base = ch_base + prog.n_operands();
+
+        let mut width = mlp.layers[0].fan_out();
         for layer in &mlp.layers[1..] {
             let w_in = width;
             let w_out = layer.fan_out();
@@ -921,6 +1073,83 @@ mod tests {
             for threads in [2usize, 3, 4, 8] {
                 let eng = NtpEngine::with_policy(4, ParallelPolicy::Fixed(threads));
                 let got = eng.forward(&mlp, &x);
+                for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(a, b, "B={batch} t={threads} channel {k}");
+                }
+            }
+        }
+    }
+
+    /// A directional pass along `v = 1` in one input dimension *is*
+    /// `d/dx` — and the directional seed performs the identical float
+    /// ops (`x·w` then `+ b`; `1·w = w` exactly), so the jets are
+    /// bitwise equal to the scalar path.
+    #[test]
+    fn directional_jet_reduces_to_scalar_forward_in_1d() {
+        let mut rng = Prng::seeded(91);
+        for kind in ActivationKind::ALL {
+            let mlp = Mlp::uniform_with(1, 10, 2, 1, kind, &mut rng);
+            let x = Tensor::rand_uniform(&[9, 1], -1.2, 1.2, &mut rng);
+            let v = Tensor::ones(&[9, 1]);
+            let engine = NtpEngine::new(4);
+            let scalar = engine.forward_n(&mlp, &x, 4);
+            let dir = engine.forward_directional(&mlp, &x, &v, 4);
+            for (k, (a, b)) in scalar.iter().zip(&dir).enumerate() {
+                assert_eq!(a, b, "{} channel {k}", kind.name());
+            }
+        }
+    }
+
+    /// Directional jets against the nested-tape directional stack — the
+    /// in-crate differential smoke (the multivariate property sweep and
+    /// the mixed-partial assembly live in
+    /// `rust/tests/operator_exactness.rs`).
+    #[test]
+    fn directional_jet_matches_nested_tape() {
+        for kind in ActivationKind::ALL {
+            let mut rng = Prng::seeded(0xD12 + kind.index() as u64);
+            let mlp = Mlp::uniform_with(2, 8, 2, 1, kind, &mut rng);
+            let x = Tensor::rand_uniform(&[6, 2], -1.0, 1.0, &mut rng);
+            let v = Tensor::rand_uniform(&[6, 2], -1.0, 1.0, &mut rng);
+            let n = 3;
+            let engine = NtpEngine::new(n);
+            let jet = engine.forward_directional(&mlp, &x, &v, n);
+
+            let mut g = Graph::new();
+            let xn = g.input(x.shape());
+            let pn = mlp.const_param_nodes(&mut g);
+            let u = mlp.forward_graph(&mut g, xn, &pn);
+            let stack = higher::directional_stack(&mut g, u, xn, &v, n);
+            let vals = g.eval(&[x.clone()], &stack);
+            for order in 0..=n {
+                assert!(
+                    allclose_slice(
+                        jet[order].data(),
+                        vals.get(stack[order]).data(),
+                        1e-9,
+                        1e-10
+                    ),
+                    "{} order {order}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    /// Chunked directional execution is bitwise identical to serial,
+    /// including row counts not divisible by the worker count.
+    #[test]
+    fn directional_parallel_bitwise_matches_serial() {
+        let mut rng = Prng::seeded(92);
+        let mlp = Mlp::uniform(3, 10, 2, 1, &mut rng);
+        let serial = NtpEngine::new(3);
+        for batch in [1usize, 5, 17] {
+            let x = Tensor::rand_uniform(&[batch, 3], -1.0, 1.0, &mut rng);
+            let v = Tensor::rand_uniform(&[batch, 3], -1.0, 1.0, &mut rng);
+            let want = serial.forward_directional(&mlp, &x, &v, 3);
+            for threads in [2usize, 3, 8] {
+                let eng = NtpEngine::with_policy(3, ParallelPolicy::Fixed(threads));
+                let got = eng.forward_directional(&mlp, &x, &v, 3);
                 for (k, (a, b)) in want.iter().zip(&got).enumerate() {
                     assert_eq!(a, b, "B={batch} t={threads} channel {k}");
                 }

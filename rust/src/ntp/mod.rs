@@ -22,10 +22,19 @@
 //! affine step is a single stacked-channel GEMM (see
 //! `docs/ARCHITECTURE.md`, "Kernel layout and memory traffic"). The
 //! pre-fusion pass is kept as [`NtpEngine::forward_reference`].
+//!
+//! Multi-dimensional inputs are served by the same kernel through
+//! **directional** jets: [`NtpEngine::forward_directional`] propagates
+//! `d^k/dt^k f(x + t·v)` for per-row directions, and [`multi`] compiles
+//! exact integer direction sets + rational recombination matrices that
+//! assemble arbitrary mixed partials `∂^α u` from direction-stacked
+//! batches ([`MultiJetEngine`]) — the substrate of the `pde` operator
+//! subsystem.
 
 pub mod activation;
 pub mod bell;
 pub mod forward;
+pub mod multi;
 pub mod partitions;
 pub mod tape;
 
@@ -34,4 +43,5 @@ pub use activation::{
 };
 pub use bell::{bell_number, FaaDiBruno, FdbOp, FdbProgram, PowFill, Term};
 pub use forward::{NtpEngine, ParallelPolicy};
+pub use multi::{multi_indices, JetPlan, MultiJet, MultiJetEngine};
 pub use partitions::{hardy_ramanujan, partition_count, partitions, Partition};

@@ -46,7 +46,6 @@ impl NtpEngine {
         assert_eq!(g.shape(x)[1], 1, "x must be [B, 1]");
         assert_eq!(param_nodes.len(), 2 * mlp.layers.len());
         let batch = g.shape(x)[0];
-        let kind = mlp.activation;
 
         // Seed channels from the first affine layer.
         let w0 = param_nodes[0];
@@ -63,6 +62,69 @@ impl NtpEngine {
             y.push(z);
         }
 
+        self.propagate_graph(g, mlp, param_nodes, &mut y, n);
+        y
+    }
+
+    /// Record the **directional** jet `[u, D_v u, ..., D_v^n u]` along
+    /// per-row directions on `g`, for a multi-input network
+    /// (`x: [B, d]`, `v: [B, d]` — typically a constant node).
+    ///
+    /// Training-path twin of [`NtpEngine::forward_directional`]: the
+    /// curve `t ↦ f(x + t·v)` is a scalar restriction, so the recorded
+    /// channel algebra is identical to [`NtpEngine::forward_graph`] —
+    /// only the seeding changes (`y1 = v W0^T`, the chain rule through
+    /// the first affine layer). The multivariate PINN objective
+    /// ([`crate::pinn::MultiObjective`]) records one such pass per
+    /// compiled direction and recombines the order-`m` channels into
+    /// exact mixed-partial nodes.
+    pub fn forward_graph_directional(
+        &self,
+        g: &mut Graph,
+        mlp: &Mlp,
+        x: NodeId,
+        v: NodeId,
+        param_nodes: &[NodeId],
+        n: usize,
+    ) -> Vec<NodeId> {
+        assert!(n <= self.n_max(), "n={n} exceeds engine n_max={}", self.n_max());
+        assert_eq!(
+            g.shape(x)[1],
+            mlp.input_dim(),
+            "x dim must match the network input dim"
+        );
+        assert_eq!(g.shape(v), g.shape(x), "one direction row per point row");
+        assert_eq!(param_nodes.len(), 2 * mlp.layers.len());
+
+        let w0 = param_nodes[0];
+        let b0 = param_nodes[1];
+        let mut y: Vec<NodeId> = Vec::with_capacity(n + 1);
+        let lin0 = g.matmul_nt(x, w0);
+        y.push(g.add_bias(lin0, b0));
+        if n >= 1 {
+            y.push(g.matmul_nt(v, w0));
+        }
+        for _ in 2..=n {
+            let z = g.zeros_like(y[0]);
+            y.push(z);
+        }
+        self.propagate_graph(g, mlp, param_nodes, &mut y, n);
+        y
+    }
+
+    /// Advance seeded channel nodes through the hidden/output layers
+    /// (towers, shared power nodes, Faà di Bruno combine, affine) — the
+    /// shared middle of [`NtpEngine::forward_graph`] and
+    /// [`NtpEngine::forward_graph_directional`].
+    fn propagate_graph(
+        &self,
+        g: &mut Graph,
+        mlp: &Mlp,
+        param_nodes: &[NodeId],
+        y: &mut [NodeId],
+        n: usize,
+    ) {
+        let kind = mlp.activation;
         for li in 1..mlp.layers.len() {
             let w = param_nodes[2 * li];
             let b = param_nodes[2 * li + 1];
@@ -73,7 +135,7 @@ impl NtpEngine {
             // §Perf: share the channel-power nodes y_j^c across all the
             // partition terms of this layer (mirrors the pure-forward
             // powers cache; shrinks both tape size and backward work).
-            let powers = self.channel_power_nodes(g, &y, n);
+            let powers = self.channel_power_nodes(g, y, n);
             for i in (1..=n).rev() {
                 y[i] = self.combine_channel_nodes(g, i, &towers, &powers);
             }
@@ -84,7 +146,6 @@ impl NtpEngine {
             }
             y[0] = h0;
         }
-        y
     }
 
     /// `powers[j][c-1] = y_j^c` as shared tape nodes (c ≤ n/j).
@@ -177,6 +238,41 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// The recorded directional jet must match the pure directional
+    /// forward pass for every registered activation (multi-input
+    /// networks, per-row directions).
+    #[test]
+    fn directional_tape_matches_pure_directional_forward() {
+        for kind in ActivationKind::ALL {
+            let mut rng = Prng::seeded(0xD1 + kind.index() as u64);
+            let mlp = Mlp::uniform_with(2, 6, 2, 1, kind, &mut rng);
+            let x = Tensor::rand_uniform(&[5, 2], -1.0, 1.0, &mut rng);
+            let v = Tensor::rand_uniform(&[5, 2], -1.0, 1.0, &mut rng);
+            let n = 3;
+            let engine = NtpEngine::new(n);
+            let pure = engine.forward_directional(&mlp, &x, &v, n);
+
+            let mut g = Graph::new();
+            let pn = mlp.const_param_nodes(&mut g);
+            let xn = g.constant(x.clone());
+            let vn = g.constant(v.clone());
+            let nodes = engine.forward_graph_directional(&mut g, &mlp, xn, vn, &pn, n);
+            let vals = g.eval(&[], &nodes);
+            for order in 0..=n {
+                assert!(
+                    allclose_slice(
+                        pure[order].data(),
+                        vals.get(nodes[order]).data(),
+                        1e-11,
+                        1e-11
+                    ),
+                    "{} order {order}",
+                    kind.name()
+                );
+            }
+        }
     }
 
     /// Backprop through the recorded channels must match backprop through

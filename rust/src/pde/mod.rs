@@ -1,0 +1,31 @@
+//! Multi-dimensional differential operators and a PDE scenario library.
+//!
+//! [`DiffOperator`] describes an operator as a sum of *product terms* —
+//! each term a coefficient times a product of mixed partials `∂^α u` —
+//! which covers linear operators (heat `∂_t − κ∂_xx`, Poisson
+//! `∂_xx + ∂_yy`, biharmonic `Δ²`) and the quadratic nonlinearities PINN
+//! practice needs (KdV's `u·∂_x u`) through the same hook. Operators are
+//! built programmatically or parsed from a compact text spec
+//! (`"d20+d02"`, `"d10-0.1*d02"`, `"d10+u*d01+d03"`).
+//!
+//! Evaluation has two routes, both exact:
+//!
+//! - **inference**: [`DiffOperator::apply`] consumes a
+//!   [`crate::ntp::MultiJet`] — one direction-stacked fused n-TangentProp
+//!   batch — and recombines the jets into every needed `∂^α u`
+//!   (`D · O(n log n)` cost; `ntangent bench operators` measures it
+//!   against the nested-tape baseline);
+//! - **training**: [`DiffOperator::apply_nodes`] assembles the same sum
+//!   from mixed-partial *tape nodes* so residual losses backprop through
+//!   the operator (see [`crate::pinn::MultiObjective`]).
+//!
+//! [`PdeProblem`] is the scenario library: named 2-D problems with
+//! manufactured exact solutions, source terms and box domains, used by
+//! `ntangent train --pde <name>`, the wire protocol's operator requests
+//! and the operator benches.
+
+pub mod operator;
+pub mod problems;
+
+pub use operator::{DiffOperator, OpTerm};
+pub use problems::{resolve_operator, PdeProblem, HEAT_KAPPA, KDV_SPEED, WAVE_SPEED};

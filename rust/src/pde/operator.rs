@@ -1,0 +1,371 @@
+//! Differential-operator descriptions: linear combinations of
+//! mixed-partial products, with a text spec parser and exact evaluation
+//! through directional jets (inference) or tape nodes (training).
+
+use crate::autodiff::{Graph, NodeId};
+use crate::ntp::MultiJet;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// One term `coeff · Π_f ∂^{α_f} u` of a [`DiffOperator`].
+///
+/// A single factor makes the term linear in `u`; several factors encode
+/// polynomial nonlinearities (KdV's advection `u·∂_x u` is
+/// `coeff = 1, factors = [[0,0], [0,1]]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpTerm {
+    /// Scalar coefficient of the term.
+    pub coeff: f64,
+    /// Multi-indices of the factors (`[0; dim]` is `u` itself).
+    pub factors: Vec<Vec<usize>>,
+}
+
+/// A differential operator `L[u] = Σ_t coeff_t · Π_f ∂^{α_{t,f}} u` over
+/// `dim` input axes.
+///
+/// ```
+/// use ntangent::pde::DiffOperator;
+///
+/// // Heat operator ∂_t − κ·∂_xx over (t, x), κ = 0.1:
+/// let heat = DiffOperator::new(2)
+///     .with_term(1.0, vec![1, 0])
+///     .with_term(-0.1, vec![0, 2]);
+/// assert_eq!(heat.max_order(), 2);
+/// assert!(heat.is_linear());
+/// assert_eq!(heat, DiffOperator::parse("d10-0.1*d02", 2).unwrap());
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiffOperator {
+    dim: usize,
+    terms: Vec<OpTerm>,
+}
+
+impl DiffOperator {
+    /// An empty operator over `dim` axes (add terms with
+    /// [`DiffOperator::with_term`] / [`DiffOperator::with_product`]).
+    pub fn new(dim: usize) -> DiffOperator {
+        assert!((1..=9).contains(&dim), "operator dim must be 1..=9");
+        DiffOperator { dim, terms: Vec::new() }
+    }
+
+    /// Append a linear term `coeff · ∂^α u`.
+    pub fn with_term(self, coeff: f64, alpha: Vec<usize>) -> DiffOperator {
+        self.with_product(coeff, vec![alpha])
+    }
+
+    /// Append a product term `coeff · Π_f ∂^{α_f} u` (the nonlinear-term
+    /// hook).
+    pub fn with_product(mut self, coeff: f64, factors: Vec<Vec<usize>>) -> DiffOperator {
+        assert!(!factors.is_empty(), "a term needs at least one factor");
+        for f in &factors {
+            assert_eq!(f.len(), self.dim, "factor arity must match the operator dim");
+        }
+        self.terms.push(OpTerm { coeff, factors });
+        self
+    }
+
+    /// The Laplacian `Σ_i ∂²/∂x_i²` over `dim` axes.
+    pub fn laplacian(dim: usize) -> DiffOperator {
+        let mut op = DiffOperator::new(dim);
+        for i in 0..dim {
+            let mut alpha = vec![0; dim];
+            alpha[i] = 2;
+            op = op.with_term(1.0, alpha);
+        }
+        op
+    }
+
+    /// The biharmonic operator `Δ² = Σ_i Σ_j ∂²_i ∂²_j` over `dim` axes
+    /// (in 2-D: `∂_xxxx + 2·∂_xxyy + ∂_yyyy`).
+    pub fn biharmonic(dim: usize) -> DiffOperator {
+        let mut op = DiffOperator::new(dim);
+        for i in 0..dim {
+            for j in i..dim {
+                let mut alpha = vec![0; dim];
+                alpha[i] += 2;
+                alpha[j] += 2;
+                op = op.with_term(if i == j { 1.0 } else { 2.0 }, alpha);
+            }
+        }
+        op
+    }
+
+    /// Number of input axes.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The terms, in insertion order.
+    pub fn terms(&self) -> &[OpTerm] {
+        &self.terms
+    }
+
+    /// Highest derivative order any factor requests (0 for the empty
+    /// operator).
+    pub fn max_order(&self) -> usize {
+        self.terms
+            .iter()
+            .flat_map(|t| t.factors.iter())
+            .map(|f| f.iter().sum())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// `true` when every term has a single factor (no `u`-products).
+    pub fn is_linear(&self) -> bool {
+        self.terms.iter().all(|t| t.factors.len() == 1)
+    }
+
+    /// The distinct multi-indices the operator needs, in first-use order.
+    pub fn needed_partials(&self) -> Vec<Vec<usize>> {
+        let mut out: Vec<Vec<usize>> = Vec::new();
+        for term in &self.terms {
+            for f in &term.factors {
+                if !out.contains(f) {
+                    out.push(f.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse a compact operator spec over `dim` axes.
+    ///
+    /// Grammar: terms joined by `+`/`-`; each term is `*`-separated
+    /// factors, where a factor is a plain decimal coefficient, `u` (the
+    /// function itself), or `d` followed by exactly `dim` digits — the
+    /// per-axis derivative orders. Examples (2-D):
+    /// `"d20+d02"` (Laplacian), `"d10-0.1*d02"` (heat, κ = 0.1),
+    /// `"d10+u*d01+d03"` (KdV with the nonlinear advection product).
+    pub fn parse(spec: &str, dim: usize) -> Result<DiffOperator, String> {
+        let mut op = DiffOperator::new(dim);
+        let s: Vec<char> = spec.chars().collect();
+        let mut i = 0;
+        let skip_ws = |i: &mut usize| {
+            while *i < s.len() && s[*i].is_whitespace() {
+                *i += 1;
+            }
+        };
+        skip_ws(&mut i);
+        if i == s.len() {
+            return Err("empty operator spec".into());
+        }
+        let mut first = true;
+        while i < s.len() {
+            // Term sign ('+'/'-' separator; optional on the first term).
+            let mut sign = 1.0;
+            match s[i] {
+                '+' => i += 1,
+                '-' => {
+                    sign = -1.0;
+                    i += 1;
+                }
+                _ if first => {}
+                other => return Err(format!("expected '+' or '-' before '{other}'")),
+            }
+            first = false;
+            // Factors separated by '*'.
+            let mut coeff = sign;
+            let mut factors: Vec<Vec<usize>> = Vec::new();
+            loop {
+                skip_ws(&mut i);
+                if i == s.len() {
+                    return Err("operator spec ends inside a term".into());
+                }
+                match s[i] {
+                    'd' => {
+                        i += 1;
+                        let mut alpha = Vec::with_capacity(dim);
+                        for _ in 0..dim {
+                            let c = *s
+                                .get(i)
+                                .ok_or_else(|| format!("'d' needs {dim} digits (one per axis)"))?;
+                            let v = c
+                                .to_digit(10)
+                                .ok_or_else(|| format!("'d' needs {dim} digits, found '{c}'"))?;
+                            alpha.push(v as usize);
+                            i += 1;
+                        }
+                        factors.push(alpha);
+                    }
+                    'u' => {
+                        i += 1;
+                        factors.push(vec![0; dim]);
+                    }
+                    c if c.is_ascii_digit() || c == '.' => {
+                        let start = i;
+                        while i < s.len() && (s[i].is_ascii_digit() || s[i] == '.') {
+                            i += 1;
+                        }
+                        let text: String = s[start..i].iter().collect();
+                        let v: f64 = text
+                            .parse()
+                            .map_err(|_| format!("bad coefficient '{text}'"))?;
+                        coeff *= v;
+                    }
+                    other => return Err(format!("unexpected '{other}' in operator spec")),
+                }
+                skip_ws(&mut i);
+                if i < s.len() && s[i] == '*' {
+                    i += 1;
+                    continue;
+                }
+                break;
+            }
+            if factors.is_empty() {
+                return Err("a term needs at least one 'd...' or 'u' factor".into());
+            }
+            op = op.with_product(coeff, factors);
+            skip_ws(&mut i);
+        }
+        Ok(op)
+    }
+
+    /// Render the operator back into the [`DiffOperator::parse`] spec
+    /// format.
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        for (t, term) in self.terms.iter().enumerate() {
+            let mag = term.coeff.abs();
+            if t == 0 {
+                if term.coeff < 0.0 {
+                    out.push('-');
+                }
+            } else {
+                out.push(if term.coeff < 0.0 { '-' } else { '+' });
+            }
+            if (mag - 1.0).abs() > 1e-12 {
+                out.push_str(&format!("{mag}*"));
+            }
+            let fs: Vec<String> = term
+                .factors
+                .iter()
+                .map(|f| {
+                    if f.iter().all(|&a| a == 0) {
+                        "u".to_string()
+                    } else {
+                        let digits: String = f.iter().map(|a| a.to_string()).collect();
+                        format!("d{digits}")
+                    }
+                })
+                .collect();
+            out.push_str(&fs.join("*"));
+        }
+        out
+    }
+
+    /// Evaluate the operator over a directional jet set:
+    /// `L[u](x) : [B, out]`, every `∂^α` assembled exactly from the jets.
+    pub fn apply(&self, jet: &MultiJet<'_>) -> Tensor {
+        let mut acc: Option<Tensor> = None;
+        for term in &self.terms {
+            let mut prod: Option<Tensor> = None;
+            for f in &term.factors {
+                let p = jet.partial(f);
+                prod = Some(match prod {
+                    None => p,
+                    Some(q) => q.mul(&p),
+                });
+            }
+            let t = prod.expect("term has at least one factor").scale(term.coeff);
+            acc = Some(match acc {
+                None => t,
+                Some(a) => a.add(&t),
+            });
+        }
+        acc.expect("operator has at least one term")
+    }
+
+    /// Record the operator on a tape from prebuilt mixed-partial nodes
+    /// (one entry per [`DiffOperator::needed_partials`] multi-index) —
+    /// the training route: the returned node backprops through every
+    /// factor.
+    pub fn apply_nodes(&self, g: &mut Graph, partials: &HashMap<Vec<usize>, NodeId>) -> NodeId {
+        let mut acc: Option<NodeId> = None;
+        for term in &self.terms {
+            let mut prod: Option<NodeId> = None;
+            for f in &term.factors {
+                let p = *partials
+                    .get(f)
+                    .expect("a partial node for every needed multi-index");
+                prod = Some(match prod {
+                    None => p,
+                    Some(q) => g.mul(q, p),
+                });
+            }
+            let t = g.scale(prod.expect("term has at least one factor"), term.coeff);
+            acc = Some(match acc {
+                None => t,
+                Some(a) => g.add(a, t),
+            });
+        }
+        acc.expect("operator has at least one term")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Mlp;
+    use crate::ntp::MultiJetEngine;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn parse_linear_operators() {
+        let lap = DiffOperator::parse("d20+d02", 2).unwrap();
+        assert_eq!(lap, DiffOperator::laplacian(2));
+        let heat = DiffOperator::parse(" d10 - 0.1 * d02 ", 2).unwrap();
+        assert_eq!(heat.terms().len(), 2);
+        assert_eq!(heat.terms()[1].coeff, -0.1);
+        assert_eq!(heat.terms()[1].factors, vec![vec![0, 2]]);
+        assert_eq!(heat.max_order(), 2);
+        let bih = DiffOperator::parse("d40+2*d22+d04", 2).unwrap();
+        assert_eq!(bih, DiffOperator::biharmonic(2));
+        assert_eq!(bih.max_order(), 4);
+    }
+
+    #[test]
+    fn parse_nonlinear_and_roundtrip() {
+        let kdv = DiffOperator::parse("d10+u*d01+d03", 2).unwrap();
+        assert!(!kdv.is_linear());
+        assert_eq!(kdv.terms()[1].factors, vec![vec![0, 0], vec![0, 1]]);
+        assert_eq!(kdv.needed_partials().len(), 4);
+        // describe() → parse() is the identity on structure.
+        for spec in ["d20+d02", "d10-0.1*d02", "d10+u*d01+d03", "-2.5*d11+u*u"] {
+            let op = DiffOperator::parse(spec, 2).unwrap();
+            let back = DiffOperator::parse(&op.describe(), 2).unwrap();
+            assert_eq!(op, back, "spec '{spec}' → '{}'", op.describe());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(DiffOperator::parse("", 2).is_err());
+        assert!(DiffOperator::parse("   ", 2).is_err());
+        assert!(DiffOperator::parse("d2", 2).is_err()); // needs dim digits
+        assert!(DiffOperator::parse("d20+", 2).is_err());
+        assert!(DiffOperator::parse("q20", 2).is_err());
+        assert!(DiffOperator::parse("d20*", 2).is_err());
+        assert!(DiffOperator::parse("1.2.3*d20", 2).is_err());
+        // A bare coefficient is not a term: every term needs a u/d factor.
+        assert!(DiffOperator::parse("2.0+d02", 2).is_err());
+    }
+
+    /// `apply` on jets equals the hand-assembled combination of
+    /// `jet.partial` calls, including the nonlinear product.
+    #[test]
+    fn apply_matches_manual_assembly() {
+        let mut rng = Prng::seeded(21);
+        let mlp = Mlp::uniform(2, 8, 2, 1, &mut rng);
+        let x = Tensor::rand_uniform(&[9, 2], -1.0, 1.0, &mut rng);
+        let engine = MultiJetEngine::new(2, 3);
+        let jet = engine.jet(&mlp, &x);
+        let kdv = DiffOperator::parse("d10+u*d01+d03", 2).unwrap();
+        let got = kdv.apply(&jet);
+        let want = jet
+            .partial(&[1, 0])
+            .add(&jet.partial(&[0, 0]).mul(&jet.partial(&[0, 1])))
+            .add(&jet.partial(&[0, 3]));
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,409 @@
+//! The PDE scenario library: named multi-dimensional problems with
+//! manufactured exact solutions, source terms and box domains.
+//!
+//! Every problem is posed in *residual* form `L[u] = f` with Dirichlet
+//! data from the exact solution on the full box boundary (for the
+//! time-dependent problems that includes the initial face — the usual
+//! manufactured-solution PINN setup). The exact solutions make every
+//! scenario self-validating: training reports a true L2 error, the wire
+//! protocol can serve residuals of known fields, and the golden tests
+//! pin the operators against closed forms.
+
+use super::operator::DiffOperator;
+use crate::tensor::Tensor;
+use crate::util::prng::Prng;
+use std::f64::consts::PI;
+
+/// Diffusivity κ of [`PdeProblem::Heat2d`].
+pub const HEAT_KAPPA: f64 = 0.1;
+/// Wave speed c of [`PdeProblem::Wave2d`].
+pub const WAVE_SPEED: f64 = 1.0;
+/// Soliton speed c of [`PdeProblem::Kdv`].
+pub const KDV_SPEED: f64 = 0.8;
+
+/// A named PDE scenario over a box domain.
+///
+/// ```
+/// use ntangent::pde::PdeProblem;
+///
+/// let heat = PdeProblem::from_name("heat2d").unwrap();
+/// assert_eq!(heat.dim(), 2);
+/// assert_eq!(heat.operator().describe(), "d10-0.1*d02");
+/// // The exact solution satisfies L[u*] = f (here f = 0).
+/// assert_eq!(heat.source(&[0.3, 0.7]), 0.0);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PdeProblem {
+    /// 1+1-D heat equation `u_t − κ·u_xx = 0` over `(t, x) ∈ [0,1]²`,
+    /// `u* = exp(−κπ²t)·sin(πx)`.
+    Heat2d,
+    /// 2-D Poisson `Δu = f` over `(x, y) ∈ [0,1]²`,
+    /// `u* = sin(πx)·sin(πy)`, `f = −2π²·u*`.
+    Poisson2d,
+    /// 1+1-D wave equation `u_tt − c²·u_xx = 0` over `(t, x) ∈ [0,1]²`,
+    /// `u* = cos(πct)·sin(πx)`.
+    Wave2d,
+    /// Korteweg-de Vries `u_t + u·u_x + u_xxx = 0` over
+    /// `t ∈ [0,1], x ∈ [−6,6]`, single soliton
+    /// `u* = 3c·sech²(√c·(x − ct)/2)` — the nonlinear-term showcase.
+    Kdv,
+    /// 2-D biharmonic `Δ²u = f` over `(x, y) ∈ [0,1]²`,
+    /// `u* = sin(πx)·sin(πy)`, `f = 4π⁴·u*` — the order-4 stress test.
+    Biharmonic2d,
+}
+
+impl PdeProblem {
+    /// Every library problem, in CLI listing order.
+    pub const ALL: [PdeProblem; 5] = [
+        PdeProblem::Heat2d,
+        PdeProblem::Poisson2d,
+        PdeProblem::Wave2d,
+        PdeProblem::Kdv,
+        PdeProblem::Biharmonic2d,
+    ];
+
+    /// CLI / wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            PdeProblem::Heat2d => "heat2d",
+            PdeProblem::Poisson2d => "poisson2d",
+            PdeProblem::Wave2d => "wave2d",
+            PdeProblem::Kdv => "kdv",
+            PdeProblem::Biharmonic2d => "biharmonic2d",
+        }
+    }
+
+    /// Look a problem up by its [`PdeProblem::name`].
+    pub fn from_name(name: &str) -> Option<PdeProblem> {
+        PdeProblem::ALL.iter().copied().find(|p| p.name() == name)
+    }
+
+    /// Number of input axes (all library problems are 2-D: one time-like
+    /// plus one space-like axis, or two space axes).
+    pub fn dim(self) -> usize {
+        2
+    }
+
+    /// The differential operator `L` of the residual `L[u] − f`.
+    pub fn operator(self) -> DiffOperator {
+        match self {
+            PdeProblem::Heat2d => DiffOperator::new(2)
+                .with_term(1.0, vec![1, 0])
+                .with_term(-HEAT_KAPPA, vec![0, 2]),
+            PdeProblem::Poisson2d => DiffOperator::laplacian(2),
+            PdeProblem::Wave2d => DiffOperator::new(2)
+                .with_term(1.0, vec![2, 0])
+                .with_term(-WAVE_SPEED * WAVE_SPEED, vec![0, 2]),
+            PdeProblem::Kdv => DiffOperator::new(2)
+                .with_term(1.0, vec![1, 0])
+                .with_product(1.0, vec![vec![0, 0], vec![0, 1]])
+                .with_term(1.0, vec![0, 3]),
+            PdeProblem::Biharmonic2d => DiffOperator::biharmonic(2),
+        }
+    }
+
+    /// Per-axis bounds of the box domain.
+    pub fn domain(self) -> Vec<(f64, f64)> {
+        match self {
+            PdeProblem::Kdv => vec![(0.0, 1.0), (-6.0, 6.0)],
+            _ => vec![(0.0, 1.0), (0.0, 1.0)],
+        }
+    }
+
+    /// The manufactured exact solution `u*` at point `p` (length
+    /// [`PdeProblem::dim`]).
+    pub fn u_exact(self, p: &[f64]) -> f64 {
+        match self {
+            PdeProblem::Heat2d => {
+                let (t, x) = (p[0], p[1]);
+                (-HEAT_KAPPA * PI * PI * t).exp() * (PI * x).sin()
+            }
+            PdeProblem::Poisson2d | PdeProblem::Biharmonic2d => {
+                (PI * p[0]).sin() * (PI * p[1]).sin()
+            }
+            PdeProblem::Wave2d => {
+                let (t, x) = (p[0], p[1]);
+                (PI * WAVE_SPEED * t).cos() * (PI * x).sin()
+            }
+            PdeProblem::Kdv => {
+                let (t, x) = (p[0], p[1]);
+                let arg = KDV_SPEED.sqrt() * (x - KDV_SPEED * t) / 2.0;
+                let sech = 1.0 / arg.cosh();
+                3.0 * KDV_SPEED * sech * sech
+            }
+        }
+    }
+
+    /// The source `f` with `L[u*] = f` at point `p` (zero for the
+    /// evolution equations, analytic for Poisson/biharmonic).
+    pub fn source(self, p: &[f64]) -> f64 {
+        match self {
+            PdeProblem::Heat2d | PdeProblem::Wave2d | PdeProblem::Kdv => 0.0,
+            PdeProblem::Poisson2d => -2.0 * PI * PI * self.u_exact(p),
+            PdeProblem::Biharmonic2d => 4.0 * PI.powi(4) * self.u_exact(p),
+        }
+    }
+
+    /// Second boundary operator for problems whose order exceeds 2:
+    /// prescribing `u` alone does not determine a 4th-order field (any
+    /// `h` with `Δ²h = 0`, `h|∂Ω = 0` could be added), so the
+    /// biharmonic problem additionally pins `Δu` on the boundary — the
+    /// standard `(u, Δu)` Navier pair, whose exact trace is analytic
+    /// for the manufactured solution. `None` for the order-≤3 problems.
+    pub fn boundary_operator(self) -> Option<DiffOperator> {
+        match self {
+            PdeProblem::Biharmonic2d => Some(DiffOperator::laplacian(2)),
+            _ => None,
+        }
+    }
+
+    /// Exact trace of [`PdeProblem::boundary_operator`] at point `p`
+    /// (panics for problems without one).
+    pub fn boundary_operator_exact(self, p: &[f64]) -> f64 {
+        match self {
+            // Δ(sin πx · sin πy) = −2π²·u*.
+            PdeProblem::Biharmonic2d => -2.0 * PI * PI * self.u_exact(p),
+            _ => panic!("{} has no secondary boundary operator", self.name()),
+        }
+    }
+
+    /// `n` interior collocation points, uniform in the box, `[n, dim]`.
+    pub fn sample_interior(self, n: usize, rng: &mut Prng) -> Tensor {
+        let domain = self.domain();
+        let d = domain.len();
+        let mut data = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            for &(lo, hi) in &domain {
+                data.push(lo + (hi - lo) * rng.uniform());
+            }
+        }
+        Tensor::from_vec(data, &[n, d])
+    }
+
+    /// `n` boundary points, cycling over the box faces (axis 0 low, axis
+    /// 0 high, axis 1 low, ...), uniform over each face, `[n, dim]`.
+    pub fn sample_boundary(self, n: usize, rng: &mut Prng) -> Tensor {
+        let domain = self.domain();
+        let d = domain.len();
+        let mut data = Vec::with_capacity(n * d);
+        for i in 0..n {
+            let face = i % (2 * d);
+            let axis = face / 2;
+            let hi_side = face % 2 == 1;
+            for (a, &(lo, hi)) in domain.iter().enumerate() {
+                if a == axis {
+                    data.push(if hi_side { hi } else { lo });
+                } else {
+                    data.push(lo + (hi - lo) * rng.uniform());
+                }
+            }
+        }
+        Tensor::from_vec(data, &[n, d])
+    }
+
+    /// Exact-solution values at the rows of `x: [B, dim]`, shaped
+    /// `[B, 1]` (Dirichlet targets / validation truth).
+    pub fn u_exact_rows(self, x: &Tensor) -> Tensor {
+        let d = self.dim();
+        let b = x.shape()[0];
+        let data: Vec<f64> = x.data().chunks_exact(d).map(|p| self.u_exact(p)).collect();
+        Tensor::from_vec(data, &[b, 1])
+    }
+
+    /// Source values at the rows of `x: [B, dim]`, shaped `[B, 1]`.
+    pub fn source_rows(self, x: &Tensor) -> Tensor {
+        let d = self.dim();
+        let b = x.shape()[0];
+        let data: Vec<f64> = x.data().chunks_exact(d).map(|p| self.source(p)).collect();
+        Tensor::from_vec(data, &[b, 1])
+    }
+
+    /// [`PdeProblem::boundary_operator_exact`] values at the rows of
+    /// `x: [B, dim]`, shaped `[B, 1]`.
+    pub fn boundary_operator_rows(self, x: &Tensor) -> Tensor {
+        let d = self.dim();
+        let b = x.shape()[0];
+        let data: Vec<f64> = x
+            .data()
+            .chunks_exact(d)
+            .map(|p| self.boundary_operator_exact(p))
+            .collect();
+        Tensor::from_vec(data, &[b, 1])
+    }
+}
+
+/// Resolve an operator argument: a library problem name (`"poisson2d"`)
+/// or a [`DiffOperator::parse`] spec (`"d20+d02"`), checked against
+/// `dim`.
+pub fn resolve_operator(spec: &str, dim: usize) -> Result<DiffOperator, String> {
+    if let Some(p) = PdeProblem::from_name(spec) {
+        if p.dim() != dim {
+            return Err(format!(
+                "operator '{spec}' is {}-dimensional but the model input is {dim}-dimensional",
+                p.dim()
+            ));
+        }
+        return Ok(p.operator());
+    }
+    DiffOperator::parse(spec, dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Nested central finite difference of `f` at `p` for multi-index
+    /// `alpha` — an operator-independent oracle for the library's
+    /// exact-solution/source pairs.
+    fn fd_partial(f: &dyn Fn(&[f64]) -> f64, p: &[f64], alpha: &[usize], h: f64) -> f64 {
+        match alpha.iter().position(|&a| a > 0) {
+            None => f(p),
+            Some(axis) => {
+                let mut lower = alpha.to_vec();
+                lower[axis] -= 1;
+                let mut pp = p.to_vec();
+                pp[axis] += h;
+                let hi = fd_partial(f, &pp, &lower, h);
+                pp[axis] = p[axis] - h;
+                let lo = fd_partial(f, &pp, &lower, h);
+                (hi - lo) / (2.0 * h)
+            }
+        }
+    }
+
+    /// Every library problem's exact solution satisfies its PDE:
+    /// `L[u*](p) ≈ f(p)` under a finite-difference evaluation of the
+    /// operator (tolerance scaled to the FD truncation error of the
+    /// operator's order).
+    #[test]
+    fn exact_solutions_satisfy_their_pdes() {
+        let pts = [[0.31, 0.42], [0.57, 0.23], [0.11, 0.77]];
+        for problem in PdeProblem::ALL {
+            let op = problem.operator();
+            // Absolute FD truncation budget: h²·(next derivative scale)
+            // per nested difference, growing with the operator order.
+            let tol = match op.max_order() {
+                0..=2 => 0.05,
+                3 => 0.2,
+                _ => 3.0,
+            };
+            for base in &pts {
+                // Map the unit square into the problem's own domain.
+                let dom = problem.domain();
+                let p: Vec<f64> = base
+                    .iter()
+                    .zip(&dom)
+                    .map(|(&u, &(lo, hi))| lo + (hi - lo) * u)
+                    .collect();
+                let f = |q: &[f64]| problem.u_exact(q);
+                let mut lhs = 0.0;
+                for term in op.terms() {
+                    let mut prod = term.coeff;
+                    for alpha in &term.factors {
+                        prod *= fd_partial(&f, &p, alpha, 0.02);
+                    }
+                    lhs += prod;
+                }
+                let rhs = problem.source(&p);
+                assert!(
+                    (lhs - rhs).abs() < tol,
+                    "{}: L[u*]({p:?}) = {lhs} vs f = {rhs}",
+                    problem.name()
+                );
+            }
+        }
+    }
+
+    /// The biharmonic second boundary condition is the exact Laplacian
+    /// trace of the manufactured solution (FD oracle), and only the
+    /// order-4 problem carries one.
+    #[test]
+    fn secondary_boundary_operator_matches_exact_trace() {
+        for p in PdeProblem::ALL {
+            match p.boundary_operator() {
+                None => assert!(p.operator().max_order() <= 3, "{}", p.name()),
+                Some(bop) => {
+                    assert_eq!(bop, DiffOperator::laplacian(2));
+                    let f = |q: &[f64]| p.u_exact(q);
+                    for pt in [[0.0, 0.37], [1.0, 0.21], [0.64, 0.0]] {
+                        let mut lhs = 0.0;
+                        for term in bop.terms() {
+                            let mut prod = term.coeff;
+                            for alpha in &term.factors {
+                                prod *= fd_partial(&f, &pt, alpha, 0.01);
+                            }
+                            lhs += prod;
+                        }
+                        let want = p.boundary_operator_exact(&pt);
+                        assert!(
+                            (lhs - want).abs() < 0.05,
+                            "{} at {pt:?}: Δu* = {lhs} vs exact {want}",
+                            p.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn names_roundtrip_and_dims_match() {
+        for p in PdeProblem::ALL {
+            assert_eq!(PdeProblem::from_name(p.name()), Some(p));
+            assert_eq!(p.operator().dim(), p.dim());
+            assert_eq!(p.domain().len(), p.dim());
+        }
+        assert_eq!(PdeProblem::from_name("burgers9d"), None);
+    }
+
+    #[test]
+    fn samplers_respect_the_domain() {
+        let mut rng = Prng::seeded(11);
+        for p in PdeProblem::ALL {
+            let interior = p.sample_interior(40, &mut rng);
+            assert_eq!(interior.shape(), &[40, 2]);
+            let dom = p.domain();
+            for row in interior.data().chunks_exact(2) {
+                for (x, &(lo, hi)) in row.iter().zip(&dom) {
+                    assert!(*x >= lo && *x <= hi, "{} interior {row:?}", p.name());
+                }
+            }
+            let boundary = p.sample_boundary(17, &mut rng);
+            for row in boundary.data().chunks_exact(2) {
+                let on_face = row
+                    .iter()
+                    .zip(&dom)
+                    .any(|(x, &(lo, hi))| *x == lo || *x == hi);
+                assert!(on_face, "{} boundary point {row:?} not on a face", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_operator_accepts_names_and_specs() {
+        assert_eq!(
+            resolve_operator("poisson2d", 2).unwrap(),
+            DiffOperator::laplacian(2)
+        );
+        assert_eq!(
+            resolve_operator("d20+d02", 2).unwrap(),
+            DiffOperator::laplacian(2)
+        );
+        assert!(resolve_operator("poisson2d", 3).is_err());
+        assert!(resolve_operator("nonsense", 2).is_err());
+    }
+
+    #[test]
+    fn exact_rows_match_pointwise_eval() {
+        let mut rng = Prng::seeded(3);
+        let p = PdeProblem::Poisson2d;
+        let x = p.sample_interior(9, &mut rng);
+        let u = p.u_exact_rows(&x);
+        let f = p.source_rows(&x);
+        assert_eq!(u.shape(), &[9, 1]);
+        for (i, row) in x.data().chunks_exact(2).enumerate() {
+            assert_eq!(u.data()[i], p.u_exact(row));
+            assert_eq!(f.data()[i], p.source(row));
+        }
+    }
+}

@@ -24,8 +24,9 @@
 //! head-to-head of Fig. 6.
 
 use super::burgers::BurgersProfile;
-use crate::autodiff::{higher, Graph, NodeId};
-use crate::nn::{params, Mlp};
+use super::terms::{build_burgers_shard, BcData, BurgersSlices, LossScaling, Shard, ThetaLayout};
+use crate::autodiff::{Graph, NodeId};
+use crate::nn::Mlp;
 use crate::ntp::NtpEngine;
 use crate::opt::Objective;
 use crate::tensor::Tensor;
@@ -88,13 +89,14 @@ impl BurgersLossSpec {
 /// Flat parameter layout: `[mlp params (W0,b0,...), λ_raw]`, so
 /// `dim() = M + 1`. λ is re-parameterized as
 /// `λ = lo + (hi-lo)·sigmoid(λ_raw)` to stay inside the profile's bracket.
+///
+/// The loss recipe itself lives in the shared term builder
+/// (`pinn::terms::build_burgers_shard`, `MeanWeighted` scaling) — the
+/// same code path the sharded [`super::ParallelObjective`] compiles per
+/// shard, so the two can never drift apart.
 pub struct PinnObjective {
-    graph: Graph,
-    loss_node: NodeId,
-    grad_nodes: Vec<NodeId>,
-    template: Mlp,
-    lambda_range: (f64, f64),
-    n_params: usize,
+    shard: Shard,
+    layout: ThetaLayout,
     /// The loss hyper-parameters this objective was built from.
     pub spec: BurgersLossSpec,
     /// Which derivative engine computes the channels.
@@ -207,92 +209,36 @@ impl PinnObjective {
         rng: &mut Prng,
     ) -> PinnObjective {
         let n = spec.profile.n_derivs(); // 2k+1 channels
-        let k2 = 2 * spec.profile.k; // order of the L* residual derivative
         let lambda_range = spec.profile.lambda_range();
 
         // Collocation sets.
         let x_res = super::collocation::stratified_points(-spec.x_max, spec.x_max, spec.n_res, rng);
         let x_org = super::collocation::cluster_points(0.0, spec.origin_radius, spec.n_org, rng);
-        // Anchors: origin + both ends (pins the C = 1 family member).
-        let bc_xs = vec![0.0, -spec.x_max, spec.x_max];
-        let x_bc = Tensor::from_vec(bc_xs.clone(), &[3, 1]);
-        let bc_u: Vec<f64> = bc_xs.iter().map(|&x| spec.profile.u_true(x)).collect();
-        let bc_du: Vec<f64> = bc_xs
-            .iter()
-            .map(|&x| spec.profile.derivatives_true(x, 1)[1])
-            .collect();
-
-        let mut g = Graph::new();
-        let param_nodes = mlp.input_param_nodes(&mut g);
-        let lambda_raw = g.input(&[1]);
-        let lambda = lambda_node(&mut g, lambda_raw, lambda_range);
+        let bc = BcData::for_spec(&spec);
 
         let ntp = NtpEngine::new(n);
-        let channels_at = |g: &mut Graph, x_const: &Tensor, order: usize| -> Vec<NodeId> {
-            let xn = g.constant(x_const.clone());
-            match engine {
-                DerivEngine::Ntp => ntp.forward_graph(g, mlp, xn, &param_nodes, order),
-                DerivEngine::Autodiff => {
-                    let u = mlp.forward_graph(g, xn, &param_nodes);
-                    higher::derivative_stack(g, u, xn, order)
-                }
-            }
-        };
-
-        // --- Sobolev residual terms over the domain -------------------
-        let u_res = channels_at(&mut g, &x_res, spec.m_sobolev + 1);
-        let x_res_node = g.constant(x_res.clone());
-        let r_nodes = residual_derivative_nodes(&mut g, &u_res, x_res_node, lambda, spec.m_sobolev);
-        let mut loss: Option<NodeId> = None;
-        for (j, &r) in r_nodes.iter().enumerate() {
-            let ms = g.mean_square(r);
-            let term = g.scale(ms, spec.q_weights[j]);
-            loss = Some(match loss {
-                None => term,
-                Some(acc) => g.add(acc, term),
-            });
-        }
-
-        // --- High-order smoothness near the origin (L*) ---------------
-        let u_org = channels_at(&mut g, &x_org, n);
-        let x_org_node = g.constant(x_org.clone());
-        let r_org = residual_derivative_nodes(&mut g, &u_org, x_org_node, lambda, k2);
-        let ms_high = g.mean_square(r_org[k2]);
-        // Normalize by the term's natural magnitude so one weight works
-        // across profiles (the (2k)-th residual derivative scales ~ (2k+1)!).
-        let fact: f64 = (1..=(k2 + 1)).map(|i| i as f64).product();
-        let high = g.scale(ms_high, spec.w_high / (fact * fact));
-        loss = Some(g.add(loss.unwrap(), high));
-
-        // --- Anchor terms ---------------------------------------------
-        let u_bc = channels_at(&mut g, &x_bc, 1);
-        let target_u = g.constant(Tensor::from_vec(bc_u, &[3, 1]));
-        let target_du = g.constant(Tensor::from_vec(bc_du, &[3, 1]));
-        let du0 = g.sub(u_bc[0], target_u);
-        let ms_u = g.mean_square(du0);
-        let du1 = g.sub(u_bc[1], target_du);
-        let ms_du = g.mean_square(du1);
-        let bc_sum = g.add(ms_u, ms_du);
-        let bc = g.scale(bc_sum, spec.w_bc);
-        let loss_node = g.add(loss.unwrap(), bc);
-
-        // Gradients wrt every parameter and λ_raw.
-        let mut wrt = param_nodes.clone();
-        wrt.push(lambda_raw);
-        let grad_nodes = g.backward(loss_node, &wrt);
+        let shard = build_burgers_shard(
+            &spec,
+            mlp,
+            engine,
+            &ntp,
+            lambda_range,
+            BurgersSlices {
+                res: Some(&x_res),
+                org: Some(&x_org),
+                bc: Some(&bc),
+            },
+            LossScaling::MeanWeighted,
+        );
 
         PinnObjective {
-            graph: g,
-            loss_node,
-            grad_nodes,
-            template: mlp.clone(),
-            lambda_range,
-            n_params: mlp.n_params(),
+            shard,
+            layout: ThetaLayout::new(mlp, Some(lambda_range)),
             spec,
             engine,
             x_res,
             x_org,
-            x_bc,
+            x_bc: bc.x,
             n_forward: 0,
             n_backward: 0,
         }
@@ -301,66 +247,40 @@ impl PinnObjective {
     /// Initial flat parameter vector: current MLP weights + λ_raw = 0
     /// (i.e. λ starts mid-bracket).
     pub fn theta_init(&self, mlp: &Mlp) -> Tensor {
-        let flat = params::flatten(mlp);
-        let mut data = flat.into_vec();
-        data.push(0.0);
-        Tensor::from_vec(data, &[self.n_params + 1])
+        self.layout.theta_init(mlp)
     }
 
     /// Extract λ from the flat vector.
     pub fn lambda_of(&self, theta: &Tensor) -> f64 {
-        lambda_from_raw(theta.data()[self.n_params], self.lambda_range)
+        self.layout.lambda_of(theta)
     }
 
     /// Write the network part of `theta` into an MLP for evaluation.
     pub fn mlp_of(&self, theta: &Tensor) -> Mlp {
-        let mut mlp = self.template.clone();
-        let flat = Tensor::from_vec(theta.data()[..self.n_params].to_vec(), &[self.n_params]);
-        params::unflatten_into(&mut mlp, &flat);
-        mlp
+        self.layout.mlp_of(theta)
     }
 
     /// Graph size (node count) — reported by the training benchmarks.
     pub fn graph_len(&self) -> usize {
-        self.graph.len()
-    }
-
-    fn inputs_of(&self, theta: &Tensor) -> Vec<Tensor> {
-        assert_eq!(theta.numel(), self.n_params + 1, "theta length");
-        let flat = Tensor::from_vec(theta.data()[..self.n_params].to_vec(), &[self.n_params]);
-        let mut inputs = params::split_like(&self.template, &flat);
-        inputs.push(Tensor::from_vec(vec![theta.data()[self.n_params]], &[1]));
-        inputs
+        self.shard.graph.len()
     }
 }
 
 impl Objective for PinnObjective {
     fn value_grad(&mut self, theta: &Tensor) -> (f64, Tensor) {
         self.n_backward += 1;
-        let inputs = self.inputs_of(theta);
-        let mut targets = self.grad_nodes.clone();
-        targets.push(self.loss_node);
-        let vals = self.graph.eval(&inputs, &targets);
-        let loss = vals.get(self.loss_node).item();
-        let grads: Vec<Tensor> = self
-            .grad_nodes
-            .iter()
-            .map(|&id| vals.get(id).clone())
-            .collect();
-        (loss, params::flatten_tensors(&grads))
+        self.shard.eval_grad(&self.layout.inputs_of(theta))
     }
 
     fn value(&mut self, theta: &Tensor) -> f64 {
         // Forward-only evaluation — the cheap path the L-BFGS line search
         // exploits (no gradient subgraph is touched).
         self.n_forward += 1;
-        let inputs = self.inputs_of(theta);
-        let vals = self.graph.eval(&inputs, &[self.loss_node]);
-        vals.get(self.loss_node).item()
+        self.shard.eval_value(&self.layout.inputs_of(theta))
     }
 
     fn dim(&self) -> usize {
-        self.n_params + 1
+        self.layout.dim()
     }
 }
 

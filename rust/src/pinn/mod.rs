@@ -19,12 +19,27 @@
 //!   [`crate::ntp::ParallelPolicy`]-sized worker pool and combined with a
 //!   deterministic pairwise tree reduction: **bitwise identical for every
 //!   thread count** (`rust/tests/training_determinism.rs`).
+//!
+//! Multi-dimensional PDE problems train through the same sharded
+//! machinery: [`MultiObjective`] / [`train_pde`] fit a scalar field to a
+//! [`crate::pde::PdeProblem`] with operator residuals whose mixed
+//! partials come from batched directional n-TangentProp passes (or the
+//! nested-tape baseline for differential testing) — see
+//! [`crate::ntp::multi`] and `rust/tests/operator_exactness.rs`.
+//!
+//! The loss recipes themselves live in one shared term-builder
+//! (`terms`): the monolithic and sharded Burgers objectives compile the
+//! identical term list (with their historical scaling sequences
+//! preserved bit for bit), and the multivariate objective composes the
+//! same shard/θ-layout/term pieces instead of copying them.
 
 pub mod burgers;
 pub mod collocation;
 pub mod loss;
+pub mod multi;
 pub mod parallel;
 pub mod series;
+pub(crate) mod terms;
 pub mod trainer;
 
 pub use burgers::BurgersProfile;
@@ -32,7 +47,9 @@ pub use collocation::{
     cluster_points, eval_channels, grid_points, random_points, stratified_points,
 };
 pub use loss::{residual_derivative_nodes, BurgersLossSpec, DerivEngine, PinnObjective};
+pub use multi::{residual_values, MultiObjective, MultiPinnSpec};
 pub use parallel::{ParallelObjective, DEFAULT_CHUNK_ROWS};
 pub use trainer::{
-    train_burgers, train_burgers_parallel, EpochLog, TrainConfig, TrainableObjective, TrainResult,
+    train_burgers, train_burgers_parallel, train_pde, EpochLog, PdeTrainResult, TrainConfig,
+    TrainableObjective, TrainResult,
 };

@@ -27,22 +27,22 @@
 //!   evaluated purely (`Graph::eval` is `&self`), so a shard performs
 //!   the exact same float operations wherever it runs.
 //! - Per-shard losses and gradients are combined with
-//!   [`par::tree_reduce`], whose shape is a pure function of the shard
+//!   [`crate::util::par::tree_reduce`], whose shape is a pure function of the shard
 //!   count.
 //!
 //! `rust/tests/training_determinism.rs` locks this down (2/4/8 threads
 //! vs serial, including non-divisible collocation counts and 50-step
 //! optimizer trajectories).
 
-use super::loss::{
-    lambda_from_raw, lambda_node, residual_derivative_nodes, BurgersLossSpec, DerivEngine,
+use super::loss::{BurgersLossSpec, DerivEngine};
+use super::terms::{
+    build_burgers_shard, chunk_rows, eval_shards_grad, eval_shards_value, BcData, BurgersSlices,
+    LossScaling, Shard, ThetaLayout,
 };
-use crate::autodiff::{higher, Graph, NodeId};
-use crate::nn::{params, Mlp};
+use crate::nn::Mlp;
 use crate::ntp::{NtpEngine, ParallelPolicy};
 use crate::opt::Objective;
 use crate::tensor::Tensor;
-use crate::util::par;
 use crate::util::prng::Prng;
 
 /// Default collocation rows per shard (see [`ParallelObjective::build`]).
@@ -51,53 +51,6 @@ use crate::util::prng::Prng;
 /// into several shards per core, large enough that one shard's tape
 /// evaluation amortizes the scheduling overhead.
 pub const DEFAULT_CHUNK_ROWS: usize = 32;
-
-/// One shard: a compiled loss/gradient tape over its slice of the
-/// collocation sets. Evaluation is pure (`&self`), so shards are shared
-/// by reference across the worker threads.
-struct Shard {
-    graph: Graph,
-    loss: NodeId,
-    grads: Vec<NodeId>,
-}
-
-impl Shard {
-    /// `(loss_s, ∇loss_s)` — one forward + one backward over this tape.
-    fn eval_grad(&self, inputs: &[Tensor]) -> (f64, Tensor) {
-        let mut targets = self.grads.clone();
-        targets.push(self.loss);
-        let mut vals = self.graph.eval(inputs, &targets);
-        let loss = vals.get(self.loss).item();
-        // Move (don't clone) the gradients out of the value store; they
-        // are copied exactly once, into the flat vector.
-        let gts: Vec<Tensor> = self.grads.iter().map(|&id| vals.take(id)).collect();
-        (loss, params::flatten_tensors(&gts))
-    }
-
-    /// Loss only — the cheap forward-only path (L-BFGS line searches).
-    fn eval_value(&self, inputs: &[Tensor]) -> f64 {
-        self.graph.eval(inputs, &[self.loss]).get(self.loss).item()
-    }
-}
-
-/// The three anchor points and their target values (shard 0 only).
-struct BcData {
-    x: Tensor,
-    u: Vec<f64>,
-    du: Vec<f64>,
-}
-
-/// Slice a `[B, 1]` collocation tensor into `ceil(B/chunk)` row chunks.
-fn chunk_rows(x: &Tensor, chunk: usize) -> Vec<Tensor> {
-    let b = x.shape()[0];
-    (0..b.div_ceil(chunk))
-        .map(|c| {
-            let lo = c * chunk;
-            let hi = (lo + chunk).min(b);
-            Tensor::from_vec(x.data()[lo..hi].to_vec(), &[hi - lo, 1])
-        })
-        .collect()
-}
 
 /// The sharded, data-parallel PINN objective.
 ///
@@ -136,9 +89,7 @@ fn chunk_rows(x: &Tensor, chunk: usize) -> Vec<Tensor> {
 /// ```
 pub struct ParallelObjective {
     shards: Vec<Shard>,
-    template: Mlp,
-    lambda_range: (f64, f64),
-    n_params: usize,
+    layout: ThetaLayout,
     policy: ParallelPolicy,
     chunk: usize,
     /// The loss hyper-parameters this objective was built from.
@@ -182,15 +133,7 @@ impl ParallelObjective {
         // Collocation sets — identical sampling to the monolithic build.
         let x_res = super::collocation::stratified_points(-spec.x_max, spec.x_max, spec.n_res, rng);
         let x_org = super::collocation::cluster_points(0.0, spec.origin_radius, spec.n_org, rng);
-        let bc_xs = vec![0.0, -spec.x_max, spec.x_max];
-        let bc = BcData {
-            x: Tensor::from_vec(bc_xs.clone(), &[3, 1]),
-            u: bc_xs.iter().map(|&x| spec.profile.u_true(x)).collect(),
-            du: bc_xs
-                .iter()
-                .map(|&x| spec.profile.derivatives_true(x, 1)[1])
-                .collect(),
-        };
+        let bc = BcData::for_spec(&spec);
 
         let res_chunks = chunk_rows(&x_res, chunk);
         let org_chunks = chunk_rows(&x_org, chunk);
@@ -204,24 +147,25 @@ impl ParallelObjective {
         let ntp = NtpEngine::new(n);
         let shards: Vec<Shard> = (0..n_shards)
             .map(|s| {
-                build_shard(
+                build_burgers_shard(
                     &spec,
                     mlp,
                     engine,
                     &ntp,
                     lambda_range,
-                    res_chunks.get(s),
-                    org_chunks.get(s.wrapping_sub(org_offset)),
-                    if s == 0 { Some(&bc) } else { None },
+                    BurgersSlices {
+                        res: res_chunks.get(s),
+                        org: org_chunks.get(s.wrapping_sub(org_offset)),
+                        bc: if s == 0 { Some(&bc) } else { None },
+                    },
+                    LossScaling::GlobalPrescaled,
                 )
             })
             .collect();
 
         ParallelObjective {
             shards,
-            template: mlp.clone(),
-            lambda_range,
-            n_params: mlp.n_params(),
+            layout: ThetaLayout::new(mlp, Some(lambda_range)),
             policy,
             chunk,
             spec,
@@ -264,165 +208,34 @@ impl ParallelObjective {
     /// Initial flat parameter vector: current MLP weights + `λ_raw = 0`
     /// (λ starts mid-bracket).
     pub fn theta_init(&self, mlp: &Mlp) -> Tensor {
-        let flat = params::flatten(mlp);
-        let mut data = flat.into_vec();
-        data.push(0.0);
-        Tensor::from_vec(data, &[self.n_params + 1])
+        self.layout.theta_init(mlp)
     }
 
     /// Extract λ from the flat vector.
     pub fn lambda_of(&self, theta: &Tensor) -> f64 {
-        lambda_from_raw(theta.data()[self.n_params], self.lambda_range)
+        self.layout.lambda_of(theta)
     }
 
     /// Write the network part of `theta` into an MLP for evaluation.
     pub fn mlp_of(&self, theta: &Tensor) -> Mlp {
-        let mut mlp = self.template.clone();
-        let flat = Tensor::from_vec(theta.data()[..self.n_params].to_vec(), &[self.n_params]);
-        params::unflatten_into(&mut mlp, &flat);
-        mlp
-    }
-
-    /// Per-slot input tensors (every shard declares the same slot layout:
-    /// `W0, b0, W1, b1, ..., λ_raw`).
-    fn inputs_of(&self, theta: &Tensor) -> Vec<Tensor> {
-        assert_eq!(theta.numel(), self.n_params + 1, "theta length");
-        let flat = Tensor::from_vec(theta.data()[..self.n_params].to_vec(), &[self.n_params]);
-        let mut inputs = params::split_like(&self.template, &flat);
-        inputs.push(Tensor::from_vec(vec![theta.data()[self.n_params]], &[1]));
-        inputs
+        self.layout.mlp_of(theta)
     }
 }
 
 impl Objective for ParallelObjective {
     fn value_grad(&mut self, theta: &Tensor) -> (f64, Tensor) {
         self.n_backward += 1;
-        let inputs = self.inputs_of(theta);
-        let shards = &self.shards;
-        let workers = par::workers_for_tasks(self.policy, shards.len());
-        let results = par::run_indexed(shards.len(), workers, |s| shards[s].eval_grad(&inputs));
-        let loss = par::tree_reduce(results.iter().map(|(l, _)| *l).collect(), |a, b| a + b)
-            .expect("objective has at least one shard");
-        let grad = par::tree_reduce(
-            results.into_iter().map(|(_, g)| g).collect::<Vec<_>>(),
-            |mut a, b| {
-                for (x, &y) in a.data_mut().iter_mut().zip(b.data()) {
-                    *x += y;
-                }
-                a
-            },
-        )
-        .expect("objective has at least one shard");
-        (loss, grad)
+        eval_shards_grad(&self.shards, &self.layout.inputs_of(theta), self.policy)
     }
 
     fn value(&mut self, theta: &Tensor) -> f64 {
         self.n_forward += 1;
-        let inputs = self.inputs_of(theta);
-        let shards = &self.shards;
-        let workers = par::workers_for_tasks(self.policy, shards.len());
-        let losses = par::run_indexed(shards.len(), workers, |s| shards[s].eval_value(&inputs));
-        par::tree_reduce(losses, |a, b| a + b).expect("objective has at least one shard")
+        eval_shards_value(&self.shards, &self.layout.inputs_of(theta), self.policy)
     }
 
     fn dim(&self) -> usize {
-        self.n_params + 1
+        self.layout.dim()
     }
-}
-
-/// Build one shard's tape: sum-of-squares residual terms over its slices,
-/// pre-scaled by the global point counts (see the module docs), plus the
-/// anchor terms on shard 0, then a single `backward`.
-#[allow(clippy::too_many_arguments)]
-fn build_shard(
-    spec: &BurgersLossSpec,
-    mlp: &Mlp,
-    engine: DerivEngine,
-    ntp: &NtpEngine,
-    lambda_range: (f64, f64),
-    res: Option<&Tensor>,
-    org: Option<&Tensor>,
-    bc: Option<&BcData>,
-) -> Shard {
-    let n = spec.profile.n_derivs();
-    let k2 = 2 * spec.profile.k;
-
-    let mut g = Graph::new();
-    let param_nodes = mlp.input_param_nodes(&mut g);
-    let lambda_raw = g.input(&[1]);
-    let lambda = lambda_node(&mut g, lambda_raw, lambda_range);
-
-    let channels_at = |g: &mut Graph, x_const: &Tensor, order: usize| -> Vec<NodeId> {
-        let xn = g.constant(x_const.clone());
-        match engine {
-            DerivEngine::Ntp => ntp.forward_graph(g, mlp, xn, &param_nodes, order),
-            DerivEngine::Autodiff => {
-                let u = mlp.forward_graph(g, xn, &param_nodes);
-                higher::derivative_stack(g, u, xn, order)
-            }
-        }
-    };
-    // Scaled sum of squares: `coeff · Σ r²` (the sharded counterpart of
-    // the monolithic mean-square terms).
-    let sum_sq = |g: &mut Graph, r: NodeId, coeff: f64| -> NodeId {
-        let sq = g.mul(r, r);
-        let sum = g.sum_all(sq);
-        g.scale(sum, coeff)
-    };
-
-    let mut loss: Option<NodeId> = None;
-    let push = |g: &mut Graph, term: NodeId, loss: &mut Option<NodeId>| {
-        *loss = Some(match *loss {
-            None => term,
-            Some(acc) => g.add(acc, term),
-        });
-    };
-
-    // --- Sobolev residual terms over this shard's domain slice ---------
-    if let Some(x) = res {
-        let u = channels_at(&mut g, x, spec.m_sobolev + 1);
-        let xn = g.constant(x.clone());
-        let r_nodes = residual_derivative_nodes(&mut g, &u, xn, lambda, spec.m_sobolev);
-        for (j, &r) in r_nodes.iter().enumerate() {
-            let term = sum_sq(&mut g, r, spec.q_weights[j] / spec.n_res as f64);
-            push(&mut g, term, &mut loss);
-        }
-    }
-
-    // --- High-order smoothness near the origin (L*) --------------------
-    if let Some(x) = org {
-        let u = channels_at(&mut g, x, n);
-        let xn = g.constant(x.clone());
-        let r_org = residual_derivative_nodes(&mut g, &u, xn, lambda, k2);
-        let fact: f64 = (1..=(k2 + 1)).map(|i| i as f64).product();
-        let term = sum_sq(
-            &mut g,
-            r_org[k2],
-            spec.w_high / (fact * fact * spec.n_org as f64),
-        );
-        push(&mut g, term, &mut loss);
-    }
-
-    // --- Anchor terms (shard 0 only) ------------------------------------
-    if let Some(bc) = bc {
-        let u_bc = channels_at(&mut g, &bc.x, 1);
-        let target_u = g.constant(Tensor::from_vec(bc.u.clone(), &[3, 1]));
-        let target_du = g.constant(Tensor::from_vec(bc.du.clone(), &[3, 1]));
-        let du0 = g.sub(u_bc[0], target_u);
-        let ms_u = g.mean_square(du0);
-        let du1 = g.sub(u_bc[1], target_du);
-        let ms_du = g.mean_square(du1);
-        let bc_sum = g.add(ms_u, ms_du);
-        let term = g.scale(bc_sum, spec.w_bc);
-        push(&mut g, term, &mut loss);
-    }
-
-    let loss = loss.expect("shard has at least one loss term");
-    let mut wrt = param_nodes.clone();
-    wrt.push(lambda_raw);
-    let grads = g.backward(loss, &wrt);
-
-    Shard { graph: g, loss, grads }
 }
 
 #[cfg(test)]

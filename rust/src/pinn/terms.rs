@@ -1,0 +1,366 @@
+//! Shared loss-tape machinery for every PINN objective: the compiled
+//! shard (graph + loss + gradient nodes), the deterministic shard-set
+//! evaluators, the loss-term builders, the flat-θ layout, and the single
+//! Burgers loss recipe.
+//!
+//! Before this module, the monolithic [`super::PinnObjective`] and the
+//! sharded [`super::ParallelObjective`] each carried their own copy of
+//! the Burgers term list and the θ accessors, kept in sync by a
+//! cross-check test (the hand-sync debt flagged in the PR 3 notes). Now
+//! both call [`build_burgers_shard`] with a [`LossScaling`] that
+//! reproduces their historical op sequences *exactly* — `mean(r²)·w` for
+//! the monolithic tape, `(Σr²)·(w/N_global)` for shards — so the
+//! numerics (and the bitwise determinism contracts) are unchanged, and
+//! the multivariate [`super::MultiObjective`] composes the same pieces
+//! instead of adding a third copy.
+
+use super::loss::{lambda_from_raw, lambda_node, residual_derivative_nodes, BurgersLossSpec};
+use super::DerivEngine;
+use crate::autodiff::{higher, Graph, NodeId};
+use crate::nn::{params, Mlp};
+use crate::ntp::{NtpEngine, ParallelPolicy};
+use crate::tensor::Tensor;
+use crate::util::par;
+
+/// One compiled loss/gradient tape over a slice of the collocation
+/// data. Evaluation is pure (`&self`), so shards are shared by reference
+/// across worker threads.
+pub(crate) struct Shard {
+    /// The recorded tape.
+    pub graph: Graph,
+    /// The scalar loss node.
+    pub loss: NodeId,
+    /// Gradient nodes, one per input slot in flat-θ order.
+    pub grads: Vec<NodeId>,
+}
+
+impl Shard {
+    /// `(loss_s, ∇loss_s)` — one forward + one backward over this tape.
+    pub fn eval_grad(&self, inputs: &[Tensor]) -> (f64, Tensor) {
+        let mut targets = self.grads.clone();
+        targets.push(self.loss);
+        let mut vals = self.graph.eval(inputs, &targets);
+        let loss = vals.get(self.loss).item();
+        // Move (don't clone) the gradients out of the value store; they
+        // are copied exactly once, into the flat vector.
+        let gts: Vec<Tensor> = self.grads.iter().map(|&id| vals.take(id)).collect();
+        (loss, params::flatten_tensors(&gts))
+    }
+
+    /// Loss only — the cheap forward-only path (L-BFGS line searches).
+    pub fn eval_value(&self, inputs: &[Tensor]) -> f64 {
+        self.graph.eval(inputs, &[self.loss]).get(self.loss).item()
+    }
+}
+
+/// Evaluate every shard's loss+gradient on a `policy`-sized worker pool
+/// and combine with the deterministic pairwise tree — bitwise identical
+/// for every policy (the shard layout and the tree shape depend only on
+/// the shard count).
+pub(crate) fn eval_shards_grad(
+    shards: &[Shard],
+    inputs: &[Tensor],
+    policy: ParallelPolicy,
+) -> (f64, Tensor) {
+    let workers = par::workers_for_tasks(policy, shards.len());
+    let results = par::run_indexed(shards.len(), workers, |s| shards[s].eval_grad(inputs));
+    let loss = par::tree_reduce(results.iter().map(|(l, _)| *l).collect(), |a, b| a + b)
+        .expect("objective has at least one shard");
+    let grad = par::tree_reduce(
+        results.into_iter().map(|(_, g)| g).collect::<Vec<_>>(),
+        |mut a, b| {
+            for (x, &y) in a.data_mut().iter_mut().zip(b.data()) {
+                *x += y;
+            }
+            a
+        },
+    )
+    .expect("objective has at least one shard");
+    (loss, grad)
+}
+
+/// Forward-only twin of [`eval_shards_grad`].
+pub(crate) fn eval_shards_value(
+    shards: &[Shard],
+    inputs: &[Tensor],
+    policy: ParallelPolicy,
+) -> f64 {
+    let workers = par::workers_for_tasks(policy, shards.len());
+    let losses = par::run_indexed(shards.len(), workers, |s| shards[s].eval_value(inputs));
+    par::tree_reduce(losses, |a, b| a + b).expect("objective has at least one shard")
+}
+
+/// Slice a `[B, d]` collocation tensor into `ceil(B/chunk)` row chunks
+/// (any column count — 1-D Burgers clouds and d-D PDE clouds alike).
+pub(crate) fn chunk_rows(x: &Tensor, chunk: usize) -> Vec<Tensor> {
+    let b = x.shape()[0];
+    let d = x.shape()[1];
+    (0..b.div_ceil(chunk))
+        .map(|c| {
+            let lo = c * chunk;
+            let hi = (lo + chunk).min(b);
+            Tensor::from_vec(x.data()[lo * d..hi * d].to_vec(), &[hi - lo, d])
+        })
+        .collect()
+}
+
+/// Running sum of loss-term nodes.
+pub(crate) struct TermAccumulator {
+    acc: Option<NodeId>,
+}
+
+impl TermAccumulator {
+    pub fn new() -> TermAccumulator {
+        TermAccumulator { acc: None }
+    }
+
+    /// Add `term` onto the running loss.
+    pub fn push(&mut self, g: &mut Graph, term: NodeId) {
+        self.acc = Some(match self.acc {
+            None => term,
+            Some(a) => g.add(a, term),
+        });
+    }
+
+    /// The accumulated loss node (`None` when no terms were pushed).
+    pub fn finish(self) -> Option<NodeId> {
+        self.acc
+    }
+}
+
+/// How a squared-residual term is normalized — each variant reproduces
+/// one historical op sequence bit for bit.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum TermScale {
+    /// `mean(r²) · weight` — the monolithic objective's sequence.
+    Mean {
+        /// Term weight applied after the mean.
+        weight: f64,
+    },
+    /// `(Σ r²) · coeff` with the global point count pre-folded into
+    /// `coeff` — the sharded sequence (`Σ_s L_s` sums to the full loss).
+    ScaledSum {
+        /// Combined `weight / N_global` coefficient.
+        coeff: f64,
+    },
+}
+
+impl TermScale {
+    /// Record the scaled square of `r` on `g`.
+    pub fn square_term(self, g: &mut Graph, r: NodeId) -> NodeId {
+        match self {
+            TermScale::Mean { weight } => {
+                let ms = g.mean_square(r);
+                g.scale(ms, weight)
+            }
+            TermScale::ScaledSum { coeff } => {
+                let sq = g.mul(r, r);
+                let sum = g.sum_all(sq);
+                g.scale(sum, coeff)
+            }
+        }
+    }
+}
+
+/// Flat parameter-vector layout shared by every objective:
+/// `[mlp params (W0, b0, ...)] (+ λ_raw when an inverse parameter
+/// exists)`, with the λ re-parameterization and the per-slot input
+/// splitting in one place.
+pub(crate) struct ThetaLayout {
+    template: Mlp,
+    n_params: usize,
+    lambda_range: Option<(f64, f64)>,
+}
+
+impl ThetaLayout {
+    pub fn new(mlp: &Mlp, lambda_range: Option<(f64, f64)>) -> ThetaLayout {
+        ThetaLayout {
+            template: mlp.clone(),
+            n_params: mlp.n_params(),
+            lambda_range,
+        }
+    }
+
+    /// Flat dimension (`M` params, plus the λ_raw slot when present).
+    pub fn dim(&self) -> usize {
+        self.n_params + usize::from(self.lambda_range.is_some())
+    }
+
+    /// Initial flat vector: current MLP weights (+ `λ_raw = 0`, i.e. λ
+    /// mid-bracket, when an inverse parameter exists).
+    pub fn theta_init(&self, mlp: &Mlp) -> Tensor {
+        let flat = params::flatten(mlp);
+        let mut data = flat.into_vec();
+        if self.lambda_range.is_some() {
+            data.push(0.0);
+        }
+        Tensor::from_vec(data, &[self.dim()])
+    }
+
+    /// λ from the flat vector (0 for objectives without an inverse
+    /// parameter).
+    pub fn lambda_of(&self, theta: &Tensor) -> f64 {
+        match self.lambda_range {
+            Some(range) => lambda_from_raw(theta.data()[self.n_params], range),
+            None => 0.0,
+        }
+    }
+
+    /// The network part of `theta` as an [`Mlp`].
+    pub fn mlp_of(&self, theta: &Tensor) -> Mlp {
+        let mut mlp = self.template.clone();
+        let flat = Tensor::from_vec(theta.data()[..self.n_params].to_vec(), &[self.n_params]);
+        params::unflatten_into(&mut mlp, &flat);
+        mlp
+    }
+
+    /// Per-slot input tensors in tape order (`W0, b0, W1, b1, ...`
+    /// + λ_raw when present).
+    pub fn inputs_of(&self, theta: &Tensor) -> Vec<Tensor> {
+        assert_eq!(theta.numel(), self.dim(), "theta length");
+        let flat = Tensor::from_vec(theta.data()[..self.n_params].to_vec(), &[self.n_params]);
+        let mut inputs = params::split_like(&self.template, &flat);
+        if self.lambda_range.is_some() {
+            inputs.push(Tensor::from_vec(vec![theta.data()[self.n_params]], &[1]));
+        }
+        inputs
+    }
+}
+
+/// The three anchor points and their target values.
+pub(crate) struct BcData {
+    /// Anchor points `[3, 1]`.
+    pub x: Tensor,
+    /// `u` targets.
+    pub u: Vec<f64>,
+    /// `u'` targets.
+    pub du: Vec<f64>,
+}
+
+impl BcData {
+    /// The spec's anchors: origin plus both domain ends (pins the
+    /// `C = 1` family member).
+    pub fn for_spec(spec: &BurgersLossSpec) -> BcData {
+        let bc_xs = vec![0.0, -spec.x_max, spec.x_max];
+        BcData {
+            x: Tensor::from_vec(bc_xs.clone(), &[3, 1]),
+            u: bc_xs.iter().map(|&x| spec.profile.u_true(x)).collect(),
+            du: bc_xs
+                .iter()
+                .map(|&x| spec.profile.derivatives_true(x, 1)[1])
+                .collect(),
+        }
+    }
+}
+
+/// The collocation slices one Burgers tape covers (`None` = not on this
+/// shard; the monolithic objective passes all three).
+pub(crate) struct BurgersSlices<'a> {
+    /// Residual (Sobolev) collocation slice.
+    pub res: Option<&'a Tensor>,
+    /// Near-origin (L*) slice.
+    pub org: Option<&'a Tensor>,
+    /// Anchor data (shard 0 / monolithic only).
+    pub bc: Option<&'a BcData>,
+}
+
+/// Which historical op sequence the loss terms use.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum LossScaling {
+    /// Monolithic: `mean(r²)·weight` per term.
+    MeanWeighted,
+    /// Sharded: `(Σr²)·(weight/N_global)` per term, so shard losses and
+    /// gradients sum exactly to the full objective.
+    GlobalPrescaled,
+}
+
+/// Build one Burgers loss tape — **the** Burgers recipe, shared by the
+/// monolithic and the sharded objective. Term order: Sobolev residual
+/// terms, the high-order origin term L*, then the anchors; a single
+/// `backward` wrt `[params..., λ_raw]`.
+pub(crate) fn build_burgers_shard(
+    spec: &BurgersLossSpec,
+    mlp: &Mlp,
+    engine: DerivEngine,
+    ntp: &NtpEngine,
+    lambda_range: (f64, f64),
+    slices: BurgersSlices<'_>,
+    scaling: LossScaling,
+) -> Shard {
+    let n = spec.profile.n_derivs();
+    let k2 = 2 * spec.profile.k;
+
+    let mut g = Graph::new();
+    let param_nodes = mlp.input_param_nodes(&mut g);
+    let lambda_raw = g.input(&[1]);
+    let lambda = lambda_node(&mut g, lambda_raw, lambda_range);
+
+    let channels_at = |g: &mut Graph, x_const: &Tensor, order: usize| -> Vec<NodeId> {
+        let xn = g.constant(x_const.clone());
+        match engine {
+            DerivEngine::Ntp => ntp.forward_graph(g, mlp, xn, &param_nodes, order),
+            DerivEngine::Autodiff => {
+                let u = mlp.forward_graph(g, xn, &param_nodes);
+                higher::derivative_stack(g, u, xn, order)
+            }
+        }
+    };
+
+    let mut acc = TermAccumulator::new();
+
+    // --- Sobolev residual terms over the domain slice -------------------
+    if let Some(x) = slices.res {
+        let u = channels_at(&mut g, x, spec.m_sobolev + 1);
+        let xn = g.constant(x.clone());
+        let r_nodes = residual_derivative_nodes(&mut g, &u, xn, lambda, spec.m_sobolev);
+        for (j, &r) in r_nodes.iter().enumerate() {
+            let scale = match scaling {
+                LossScaling::MeanWeighted => TermScale::Mean { weight: spec.q_weights[j] },
+                LossScaling::GlobalPrescaled => TermScale::ScaledSum {
+                    coeff: spec.q_weights[j] / spec.n_res as f64,
+                },
+            };
+            let term = scale.square_term(&mut g, r);
+            acc.push(&mut g, term);
+        }
+    }
+
+    // --- High-order smoothness near the origin (L*) ---------------------
+    if let Some(x) = slices.org {
+        let u = channels_at(&mut g, x, n);
+        let xn = g.constant(x.clone());
+        let r_org = residual_derivative_nodes(&mut g, &u, xn, lambda, k2);
+        // Normalize by the term's natural magnitude so one weight works
+        // across profiles (the (2k)-th residual derivative ~ (2k+1)!).
+        let fact: f64 = (1..=(k2 + 1)).map(|i| i as f64).product();
+        let scale = match scaling {
+            LossScaling::MeanWeighted => TermScale::Mean { weight: spec.w_high / (fact * fact) },
+            LossScaling::GlobalPrescaled => TermScale::ScaledSum {
+                coeff: spec.w_high / (fact * fact * spec.n_org as f64),
+            },
+        };
+        let term = scale.square_term(&mut g, r_org[k2]);
+        acc.push(&mut g, term);
+    }
+
+    // --- Anchor terms ---------------------------------------------------
+    if let Some(bc) = slices.bc {
+        let u_bc = channels_at(&mut g, &bc.x, 1);
+        let target_u = g.constant(Tensor::from_vec(bc.u.clone(), &[3, 1]));
+        let target_du = g.constant(Tensor::from_vec(bc.du.clone(), &[3, 1]));
+        let du0 = g.sub(u_bc[0], target_u);
+        let ms_u = g.mean_square(du0);
+        let du1 = g.sub(u_bc[1], target_du);
+        let ms_du = g.mean_square(du1);
+        let bc_sum = g.add(ms_u, ms_du);
+        let term = g.scale(bc_sum, spec.w_bc);
+        acc.push(&mut g, term);
+    }
+
+    let loss = acc.finish().expect("shard has at least one loss term");
+    let mut wrt = param_nodes.clone();
+    wrt.push(lambda_raw);
+    let grads = g.backward(loss, &wrt);
+
+    Shard { graph: g, loss, grads }
+}

@@ -13,10 +13,12 @@
 
 use super::burgers::BurgersProfile;
 use super::loss::{BurgersLossSpec, DerivEngine, PinnObjective};
+use super::multi::{MultiObjective, MultiPinnSpec};
 use super::parallel::ParallelObjective;
 use crate::nn::Mlp;
 use crate::ntp::{ActivationKind, ParallelPolicy};
 use crate::opt::{Adam, Lbfgs, LbfgsStatus, Objective};
+use crate::pde::PdeProblem;
 use crate::tensor::Tensor;
 use crate::util::prng::Prng;
 use std::time::Instant;
@@ -172,6 +174,23 @@ impl TrainableObjective for ParallelObjective {
     }
 }
 
+impl TrainableObjective for MultiObjective {
+    /// Multivariate PDE objectives carry no inverse parameter; λ reads
+    /// as 0 in the epoch logs.
+    fn lambda_at(&self, _theta: &Tensor) -> f64 {
+        0.0
+    }
+    fn network_at(&self, theta: &Tensor) -> Mlp {
+        self.mlp_of(theta)
+    }
+    fn init_theta(&self, mlp: &Mlp) -> Tensor {
+        self.theta_init(mlp)
+    }
+    fn eval_counts(&self) -> (u64, u64) {
+        (self.n_forward, self.n_backward)
+    }
+}
+
 /// Train a PINN for the k-th Burgers profile with the chosen derivative
 /// engine on the monolithic single-tape objective. This is the end-to-end
 /// driver behind Figs 6-10.
@@ -227,16 +246,131 @@ pub fn train_burgers_parallel(
     run_schedule(obj, &mlp, cfg, engine, profile)
 }
 
-/// The shared two-phase schedule: Adam exploration, then L-BFGS with a
-/// forward-only backtracking line search. Both optimizers run with
-/// `cfg.policy` so their reductions/updates stay thread-count-invariant.
+/// Result of a multi-dimensional PDE training run (see [`train_pde`]).
+pub struct PdeTrainResult {
+    /// The trained network (`problem.dim()` inputs, one output).
+    pub mlp: Mlp,
+    /// Final loss.
+    pub final_loss: f64,
+    /// Per-epoch log entries (λ reads as 0 — no inverse parameter).
+    pub logs: Vec<EpochLog>,
+    /// Total wall-clock seconds.
+    pub seconds: f64,
+    /// Forward-only evaluation count.
+    pub n_forward: u64,
+    /// Forward+backward evaluation count.
+    pub n_backward: u64,
+    /// The derivative engine that computed the mixed partials.
+    pub engine: DerivEngine,
+    /// The library problem trained against.
+    pub problem: PdeProblem,
+}
+
+impl PdeTrainResult {
+    /// RMS PDE residual `|L[u] − f|` over a fresh interior cloud,
+    /// evaluated through the fused directional-jet engine.
+    pub fn residual_rms(&self, n_pts: usize, seed: u64) -> f64 {
+        let mut rng = Prng::seeded(seed);
+        let x = self.problem.sample_interior(n_pts, &mut rng);
+        let r = super::multi::residual_values(self.problem, &self.mlp, &x, ParallelPolicy::Serial);
+        (r.data().iter().map(|v| v * v).sum::<f64>() / n_pts as f64).sqrt()
+    }
+
+    /// L2 error of `u` against the exact solution over a fresh interior
+    /// cloud.
+    pub fn solution_l2_error(&self, n_pts: usize, seed: u64) -> f64 {
+        let mut rng = Prng::seeded(seed);
+        let x = self.problem.sample_interior(n_pts, &mut rng);
+        let u = self.mlp.forward(&x);
+        let truth = self.problem.u_exact_rows(&x);
+        let acc: f64 = u
+            .data()
+            .iter()
+            .zip(truth.data())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        (acc / n_pts as f64).sqrt()
+    }
+}
+
+/// Train a PINN against a library PDE problem on the sharded
+/// multivariate objective ([`MultiObjective`]) with the same two-phase
+/// Adam → L-BFGS schedule as the Burgers drivers
+/// (`ntangent train --pde <name>`). Bitwise reproducible for every
+/// `cfg.policy`, like every sharded trainer in this module.
+pub fn train_pde(spec: MultiPinnSpec, cfg: &TrainConfig, engine: DerivEngine) -> PdeTrainResult {
+    let problem = spec.problem;
+    let mut rng = Prng::seeded(cfg.seed);
+    let mlp = Mlp::uniform_with(
+        problem.dim(),
+        cfg.width,
+        cfg.depth,
+        1,
+        cfg.activation,
+        &mut rng,
+    );
+    let obj = MultiObjective::build(spec, &mlp, engine, cfg.policy, cfg.chunk, &mut rng);
+    let mut run = schedule(obj, &mlp, cfg);
+    let final_loss = if run.last_loss.is_finite() {
+        run.last_loss
+    } else {
+        run.obj.value(&run.theta)
+    };
+    let (n_forward, n_backward) = run.obj.eval_counts();
+    PdeTrainResult {
+        mlp: run.obj.network_at(&run.theta),
+        final_loss,
+        logs: run.logs,
+        seconds: run.seconds,
+        n_forward,
+        n_backward,
+        engine,
+        problem,
+    }
+}
+
+/// Everything the two-phase schedule produces, before it is wrapped
+/// into a problem-specific result.
+struct ScheduleRun<O> {
+    obj: O,
+    theta: Tensor,
+    logs: Vec<EpochLog>,
+    seconds: f64,
+    last_loss: f64,
+}
+
+/// Wrap a finished schedule into the Burgers [`TrainResult`].
 fn run_schedule<O: TrainableObjective>(
-    mut obj: O,
+    obj: O,
     mlp: &Mlp,
     cfg: &TrainConfig,
     engine: DerivEngine,
     profile: BurgersProfile,
 ) -> TrainResult {
+    let mut run = schedule(obj, mlp, cfg);
+    let final_loss = if run.last_loss.is_finite() {
+        run.last_loss
+    } else {
+        run.obj.value(&run.theta)
+    };
+    let (n_forward, n_backward) = run.obj.eval_counts();
+    TrainResult {
+        mlp: run.obj.network_at(&run.theta),
+        lambda: run.obj.lambda_at(&run.theta),
+        final_loss,
+        logs: run.logs,
+        seconds: run.seconds,
+        n_forward,
+        n_backward,
+        engine,
+        profile,
+    }
+}
+
+/// The shared two-phase schedule: Adam exploration, then L-BFGS with a
+/// forward-only backtracking line search. Both optimizers run with
+/// `cfg.policy` so their reductions/updates stay thread-count-invariant.
+fn schedule<O: TrainableObjective>(mut obj: O, mlp: &Mlp, cfg: &TrainConfig) -> ScheduleRun<O> {
     let mut theta = obj.init_theta(mlp);
 
     let mut logs = Vec::new();
@@ -280,22 +414,7 @@ fn run_schedule<O: TrainableObjective>(
     }
 
     let seconds = start.elapsed().as_secs_f64();
-    let (n_forward, n_backward) = obj.eval_counts();
-    TrainResult {
-        mlp: obj.network_at(&theta),
-        lambda: obj.lambda_at(&theta),
-        final_loss: if last_loss.is_finite() {
-            last_loss
-        } else {
-            obj.value(&theta)
-        },
-        logs,
-        seconds,
-        n_forward,
-        n_backward,
-        engine,
-        profile,
-    }
+    ScheduleRun { obj, theta, logs, seconds, last_loss }
 }
 
 #[cfg(test)]
@@ -402,6 +521,41 @@ mod tests {
             "weights diverged: max {}",
             crate::util::max_abs_diff(wa.data(), wb.data())
         );
+    }
+
+    /// Short end-to-end multivariate run: the PDE trainer drives the
+    /// same schedule and makes progress on a 2-D problem.
+    #[test]
+    fn pde_training_reduces_loss() {
+        let spec = MultiPinnSpec {
+            problem: PdeProblem::Poisson2d,
+            n_interior: 48,
+            n_boundary: 16,
+            w_residual: 1.0,
+            w_bc: 10.0,
+        };
+        let cfg = TrainConfig {
+            width: 10,
+            depth: 2,
+            adam_epochs: 120,
+            lbfgs_epochs: 60,
+            adam_lr: 2e-3,
+            seed: 4,
+            ..TrainConfig::default()
+        };
+        let result = train_pde(spec, &cfg, DerivEngine::Ntp);
+        let first = result.logs.first().unwrap();
+        let last = result.logs.last().unwrap();
+        assert!(
+            last.loss < first.loss * 0.5,
+            "loss {} -> {}",
+            first.loss,
+            last.loss
+        );
+        assert!(result.residual_rms(64, 1).is_finite());
+        assert!(result.solution_l2_error(64, 2).is_finite());
+        assert!(result.n_forward > 0 && result.n_backward > 0);
+        assert_eq!(result.problem, PdeProblem::Poisson2d);
     }
 
     /// Short end-to-end parallel run: loss decreases and the logs carry

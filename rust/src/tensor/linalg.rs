@@ -122,23 +122,32 @@ pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
 const GEMM_KC: usize = 256;
 /// Output columns (rows of the NT-form `B`) per cache block.
 const GEMM_NC: usize = 64;
+/// Output columns per packed `B` panel / microkernel invocation.
+const GEMM_NR: usize = 8;
 
 /// Blocked `C = A @ B^T` into a caller-owned buffer, for `A:[m,k]`,
 /// `B:[n,k]`, `C:[m,n]`, all row-major — the fused n-TangentProp
 /// kernel's stacked-channel GEMM (`m = (n_derivs+1)·B_tile` rows share
 /// one weight panel).
 ///
-/// kc/nc cache tiling around a 4×4 register microkernel (scalar edges).
+/// kc/nc cache tiling around a 4×8 register microkernel fed by *packed*
+/// `B` panels: the 8 weight rows of one column group are repacked
+/// k-major into a stack-resident panel once per (k-block, column group)
+/// and then streamed contiguously for **every** row of `A`, so the
+/// microkernel's inner step is 12 contiguous loads feeding 32
+/// multiply-adds. Scalar cells cover the row/column edges.
+///
 /// `c` need not be zeroed: the first k-block assigns, later ones
 /// accumulate. Determinism contract: every output element's summation
 /// order is a pure function of `k` alone — within each `GEMM_KC` block a
 /// single accumulator runs in ascending-k order, and block sums are
 /// added onto `c` in ascending block order — independent of `m`, of the
-/// row/column blocking, and of whether the interior microkernel or an
-/// edge cell computed it. So splitting the rows of `A` across threads
-/// reproduces the serial bits exactly. (Note this is *not* bitwise equal
-/// to one sequential accumulator over all of `k` once `k > GEMM_KC`, and
-/// retuning `GEMM_KC` changes rounding for such shapes.)
+/// row/column blocking, of the panel packing, and of whether the
+/// interior microkernel or an edge cell computed it. So splitting the
+/// rows of `A` across threads reproduces the serial bits exactly. (Note
+/// this is *not* bitwise equal to one sequential accumulator over all of
+/// `k` once `k > GEMM_KC`, and retuning `GEMM_KC` changes rounding for
+/// such shapes.)
 pub fn matmul_nt_block_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
@@ -147,65 +156,75 @@ pub fn matmul_nt_block_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: us
         c.fill(0.0);
         return;
     }
+    // Packed B panel for one column group: GEMM_NR columns × GEMM_KC
+    // k-steps, k-major (16 KB — stack-resident, no heap traffic).
+    let mut panel = [0.0f64; GEMM_NR * GEMM_KC];
     for kb in (0..k).step_by(GEMM_KC) {
         let kl = GEMM_KC.min(k - kb);
         let first = kb == 0;
         for nb in (0..n).step_by(GEMM_NC) {
             let nl = GEMM_NC.min(n - nb);
-            let mut i = 0;
-            while i + 4 <= m {
-                let ar = [
-                    &a[i * k + kb..i * k + kb + kl],
-                    &a[(i + 1) * k + kb..(i + 1) * k + kb + kl],
-                    &a[(i + 2) * k + kb..(i + 2) * k + kb + kl],
-                    &a[(i + 3) * k + kb..(i + 3) * k + kb + kl],
-                ];
-                let mut j = 0;
-                while j + 4 <= nl {
-                    let jj = nb + j;
-                    let br = [
-                        &b[jj * k + kb..jj * k + kb + kl],
-                        &b[(jj + 1) * k + kb..(jj + 1) * k + kb + kl],
-                        &b[(jj + 2) * k + kb..(jj + 2) * k + kb + kl],
-                        &b[(jj + 3) * k + kb..(jj + 3) * k + kb + kl],
-                    ];
-                    nt_micro_4x4(ar, br, c, n, i, jj, first);
-                    j += 4;
-                }
-                while j < nl {
-                    let jj = nb + j;
-                    let brow = &b[jj * k + kb..jj * k + kb + kl];
-                    for (r, arow) in ar.iter().enumerate() {
-                        nt_cell(arow, brow, &mut c[(i + r) * n + jj], first);
+            let mut j = 0;
+            while j + GEMM_NR <= nl {
+                let jj = nb + j;
+                // Pack the group's B rows k-major: panel[p*8 + q] =
+                // B[jj+q][kb+p]. Packed once, reused for all m rows.
+                for (p, slot) in panel.chunks_exact_mut(GEMM_NR).take(kl).enumerate() {
+                    for (q, o) in slot.iter_mut().enumerate() {
+                        *o = b[(jj + q) * k + kb + p];
                     }
-                    j += 1;
                 }
-                i += 4;
+                let mut i = 0;
+                while i + 4 <= m {
+                    let ar = [
+                        &a[i * k + kb..i * k + kb + kl],
+                        &a[(i + 1) * k + kb..(i + 1) * k + kb + kl],
+                        &a[(i + 2) * k + kb..(i + 2) * k + kb + kl],
+                        &a[(i + 3) * k + kb..(i + 3) * k + kb + kl],
+                    ];
+                    nt_micro_4x8(ar, &panel[..GEMM_NR * kl], c, n, i, jj, first);
+                    i += 4;
+                }
+                while i < m {
+                    let arow = &a[i * k + kb..i * k + kb + kl];
+                    for q in 0..GEMM_NR {
+                        nt_cell(
+                            arow,
+                            &b[(jj + q) * k + kb..(jj + q) * k + kb + kl],
+                            &mut c[i * n + jj + q],
+                            first,
+                        );
+                    }
+                    i += 1;
+                }
+                j += GEMM_NR;
             }
-            while i < m {
-                let arow = &a[i * k + kb..i * k + kb + kl];
-                for j in 0..nl {
-                    let jj = nb + j;
+            // Column edge (< GEMM_NR remaining): scalar cells, same
+            // ascending-k single-accumulator order as the microkernel.
+            while j < nl {
+                let jj = nb + j;
+                for i in 0..m {
                     nt_cell(
-                        arow,
+                        &a[i * k + kb..i * k + kb + kl],
                         &b[jj * k + kb..jj * k + kb + kl],
                         &mut c[i * n + jj],
                         first,
                     );
                 }
-                i += 1;
+                j += 1;
             }
         }
     }
 }
 
-/// 4×4 register-blocked microkernel of [`matmul_nt_block_into`]: 16
-/// independent single-accumulator chains over the shared k-slices (8
-/// loads feed 16 multiply-adds per step).
+/// 4×8 register-blocked microkernel of [`matmul_nt_block_into`]: 32
+/// independent single-accumulator chains over the shared k-slices. The
+/// `B` operand arrives as a packed k-major panel (`panel[p*8 + q]` =
+/// column `q` at k-step `p`), so every inner-loop load is contiguous.
 #[inline]
-fn nt_micro_4x4(
+fn nt_micro_4x8(
     ar: [&[f64]; 4],
-    br: [&[f64]; 4],
+    panel: &[f64],
     c: &mut [f64],
     n: usize,
     i0: usize,
@@ -213,18 +232,18 @@ fn nt_micro_4x4(
     first: bool,
 ) {
     let kl = ar[0].len();
-    let mut acc = [[0.0f64; 4]; 4];
-    for p in 0..kl {
+    debug_assert_eq!(panel.len(), GEMM_NR * kl);
+    let mut acc = [[0.0f64; GEMM_NR]; 4];
+    for (p, bv) in panel.chunks_exact(GEMM_NR).enumerate() {
         let av = [ar[0][p], ar[1][p], ar[2][p], ar[3][p]];
-        let bv = [br[0][p], br[1][p], br[2][p], br[3][p]];
         for (accr, &a) in acc.iter_mut().zip(&av) {
-            for (o, &b) in accr.iter_mut().zip(&bv) {
+            for (o, &b) in accr.iter_mut().zip(bv) {
                 *o += a * b;
             }
         }
     }
     for (r, accr) in acc.iter().enumerate() {
-        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + 4];
+        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + GEMM_NR];
         if first {
             crow.copy_from_slice(accr);
         } else {
@@ -395,6 +414,32 @@ mod tests {
                 }
             },
         );
+    }
+
+    /// For `k ≤ GEMM_KC` the determinism contract pins every output
+    /// element to one ascending-k accumulator — exactly a sequential dot
+    /// product, bit for bit. Shapes cross the 8-column packed-panel
+    /// boundary and the 4-row microkernel edge, so packed, microkernel
+    /// and scalar-edge paths all face the same oracle.
+    #[test]
+    fn blocked_nt_matmul_single_kblock_matches_sequential_accumulator_bitwise() {
+        let mut rng = Prng::seeded(0x48);
+        for (m, k, n) in [(1usize, 7usize, 1usize), (5, 64, 9), (12, 200, 19), (4, 256, 8)] {
+            let a = Tensor::rand_normal(&[m, k], 0.0, 1.0, &mut rng);
+            let b = Tensor::rand_normal(&[n, k], 0.0, 1.0, &mut rng);
+            let mut c = vec![f64::NAN; m * n];
+            matmul_nt_block_into(a.data(), b.data(), &mut c, m, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0;
+                    for p in 0..k {
+                        acc += a.data()[i * k + p] * b.data()[j * k + p];
+                    }
+                    let got = c[i * n + j];
+                    assert_eq!(got.to_bits(), acc.to_bits(), "m={m} k={k} n={n} ({i},{j})");
+                }
+            }
+        }
     }
 
     /// Row-chunk invariance — the determinism contract the fused kernel's

@@ -1,14 +1,19 @@
 #!/usr/bin/env python3
-"""Regenerate `fixture.rs` for the golden-tower regression test.
+"""Regenerate `fixture.rs` and `fixture_multi.rs` for the golden tests.
 
-Builds a fixed 1 -> 6 -> 6 -> 1 MLP (weights drawn once from a pinned
-numpy seed, embedded verbatim in the fixture) and computes the reference
+`fixture.rs` (univariate towers): a fixed 1 -> 6 -> 6 -> 1 MLP (weights
+drawn once from a pinned numpy seed, embedded verbatim) and the reference
 derivative channels u^(n), n = 0..=6, at pinned inputs for every
 registered activation with mpmath at 60 decimal digits — an oracle fully
 independent of the Rust engine (Taylor coefficients, not Faa di Bruno).
 
-The Rust test rebuilds the same network via `params::unflatten_into` and
-asserts the n-TangentProp channels against these values to 1e-10.
+`fixture_multi.rs` (multivariate mixed partials): fixed 2-D and 3-D
+networks with every mixed partial `∂^α u`, |α| <= 4, at pinned points —
+computed with `mpmath.diff` partial orders, an oracle independent of both
+the directional-jet assembly under test and the nested-tape baseline.
+
+The Rust tests rebuild the same networks via `params::unflatten_into`
+and assert the engines against these values to 1e-10.
 
 Run from the repo root:  python3 rust/tests/golden/generate.py
 """
@@ -17,7 +22,7 @@ import math
 import os
 
 import numpy as np
-from mpmath import mp, mpf, erf, exp, log, sin, sqrt, tanh, taylor
+from mpmath import mp, mpf, diff, erf, exp, log, sin, sqrt, tanh, taylor
 
 mp.dps = 60
 
@@ -27,12 +32,19 @@ X_PINNED = [-1.2, -0.4, 0.0, 0.5, 1.3]
 N_MAX = 6
 KINDS = ["tanh", "sin", "softplus", "gelu"]  # ActivationKind::ALL order
 
+# Multivariate fixtures: (tag, sizes, seed, pinned points), |alpha| <= MULTI_ORDER.
+MULTI_ORDER = 4
+MULTI_NETS = [
+    ("MULTI2", [2, 5, 5, 1], SEED + 1, [[-0.8, 0.3], [0.2, -0.5], [0.6, 0.9], [-0.1, -1.1]]),
+    ("MULTI3", [3, 4, 4, 1], SEED + 2, [[0.4, -0.6, 0.2], [-0.9, 0.1, 0.7], [0.3, 0.8, -0.4]]),
+]
 
-def make_weights():
+
+def make_weights(sizes=SIZES, seed=SEED):
     """Per-layer (W, b) f64 arrays, modest magnitudes (xavier-flavoured)."""
-    rng = np.random.default_rng(SEED)
+    rng = np.random.default_rng(seed)
     layers = []
-    for fan_in, fan_out in zip(SIZES, SIZES[1:]):
+    for fan_in, fan_out in zip(sizes, sizes[1:]):
         bound = math.sqrt(6.0 / (fan_in + fan_out))
         w = rng.uniform(-bound, bound, size=(fan_out, fan_in))
         b = rng.uniform(-0.3, 0.3, size=(fan_out,))
@@ -85,6 +97,106 @@ def fmt(values, per_line=4, indent="    "):
         chunk = ", ".join(f"{v!r}f64" for v in values[i : i + per_line])
         lines.append(indent + chunk + ",")
     return "\n".join(lines)
+
+
+def forward_nd(layers, kind, xs):
+    """Scalar network output at mpf coordinates xs (any input dim)."""
+    h = [mpf(x) for x in xs]
+    for li, (w, b) in enumerate(layers):
+        z = [
+            sum(mpf(w[j, k]) * h[k] for k in range(w.shape[1])) + mpf(b[j])
+            for j in range(w.shape[0])
+        ]
+        h = z if li == len(layers) - 1 else [act_fn(kind, zj) for zj in z]
+    assert len(h) == 1
+    return h[0]
+
+
+def multi_indices(dim, order):
+    """All |alpha| = order compositions, first axis most significant
+    descending — mirrors ntangent::ntp::multi::multi_indices."""
+    if dim == 1:
+        return [(order,)]
+    out = []
+    for v in range(order, -1, -1):
+        for rest in multi_indices(dim - 1, order - v):
+            out.append((v,) + rest)
+    return out
+
+
+def mixed_partial(layers, kind, point, alpha):
+    """f64 value of ∂^alpha u at the point (mpmath.diff partial orders)."""
+    if all(a == 0 for a in alpha):
+        return float(forward_nd(layers, kind, point))
+    f = lambda *xs: forward_nd(layers, kind, xs)
+    return float(diff(f, tuple(point), tuple(alpha)))
+
+
+def emit_multi(out, tag, sizes, seed, points):
+    dim = sizes[0]
+    layers = make_weights(sizes, seed)
+    theta = flatten(layers)
+    alphas = [a for m in range(MULTI_ORDER + 1) for a in multi_indices(dim, m)]
+    out.append(f"pub const {tag}_SIZES: [usize; {len(sizes)}] = {sizes!r};".replace("'", ""))
+    out.append("")
+    out.append("/// Flat parameters in `params::flatten` order (W0, b0, W1, b1, ...).")
+    out.append(f"pub const {tag}_THETA: [f64; {len(theta)}] = [")
+    out.append(fmt(theta))
+    out.append("];")
+    out.append("")
+    out.append("/// Pinned evaluation points (one coordinate row each).")
+    out.append(f"pub const {tag}_X: [[f64; {dim}]; {len(points)}] = [")
+    for p in points:
+        out.append(f"    {list(p)!r},".replace("'", ""))
+    out.append("];")
+    out.append("")
+    out.append(f"/// Every multi-index with |α| ≤ {MULTI_ORDER}, ascending order.")
+    out.append(f"pub const {tag}_ALPHAS: [[usize; {dim}]; {len(alphas)}] = [")
+    for a in alphas:
+        out.append(f"    {list(a)!r},".replace("'", ""))
+    out.append("];")
+    out.append("")
+    out.append(f"/// `EXPECTED[kind][alpha][point]`, kinds in `ActivationKind::ALL` order.")
+    out.append(
+        f"pub const {tag}_EXPECTED: [[[f64; {len(points)}]; {len(alphas)}]; {len(KINDS)}] = ["
+    )
+    values = []
+    for kind in KINDS:
+        out.append(f"    // {kind}")
+        out.append("    [")
+        for alpha in alphas:
+            row = [mixed_partial(layers, kind, p, alpha) for p in points]
+            values.extend(row)
+            out.append("        [")
+            out.append(fmt(row, per_line=2, indent="            "))
+            out.append("        ],")
+        out.append("    ],")
+    out.append("];")
+    out.append("")
+    mags = [abs(v) for v in values if v != 0.0]
+    return len(values), (min(mags), max(mags))
+
+
+def write_multi_fixture():
+    out = []
+    out.append("// Generated by rust/tests/golden/generate.py — do not edit by hand.")
+    out.append("// Reference values: mpmath (60 digits) partial derivatives of fixed")
+    out.append("// 2-D and 3-D networks — an oracle independent of both the")
+    out.append("// directional-jet assembly under test and the nested-tape baseline.")
+    out.append("#![allow(clippy::excessive_precision)]")
+    out.append("#![allow(clippy::approx_constant)]")
+    out.append("")
+    total = 0
+    for tag, sizes, seed, points in MULTI_NETS:
+        count, (lo, hi) = emit_multi(out, tag, sizes, seed, points)
+        total += count
+        print(f"  {tag}: {count} expected values, |expected| range {lo:.3e} .. {hi:.3e}")
+    dest = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "fixture_multi.rs"
+    )
+    with open(dest, "w") as fh:
+        fh.write("\n".join(out))
+    print(f"wrote {dest} ({total} expected values)")
 
 
 def main():
@@ -143,6 +255,7 @@ def main():
         if v != 0.0
     ]
     print(f"|expected| range: {min(mags):.3e} .. {max(mags):.3e}")
+    write_multi_fixture()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,207 @@
+//! Multivariate operator lockdown: directional-jet assembly against the
+//! nested-tape baseline, exact recombination-matrix identities, and
+//! bitwise thread-count determinism for the multivariate PINN objective
+//! and trainer.
+//!
+//! The committed mpmath mixed-partial goldens live in
+//! `golden_towers.rs` (`fixture_multi.rs`); this file holds the
+//! engine-vs-engine and determinism contracts.
+
+use ntangent::autodiff::{higher, Graph};
+use ntangent::nn::{params, Mlp};
+use ntangent::ntp::{
+    multi_indices, ActivationKind, JetPlan, MultiJetEngine, ParallelPolicy,
+};
+use ntangent::pde::{DiffOperator, PdeProblem};
+use ntangent::pinn::{train_pde, DerivEngine, MultiObjective, MultiPinnSpec, TrainConfig};
+use ntangent::tensor::Tensor;
+use ntangent::util::prng::Prng;
+use ntangent::util::{allclose_slice, max_abs_diff};
+use std::collections::HashMap;
+
+/// Directional assembly equals the nested-tape mixed partials to 1e-10
+/// for every multi-index (|α| ≤ 4 in 2-D, ≤ 3 in 3-D) and every
+/// registered activation — two completely different exact algorithms.
+#[test]
+fn mixed_partials_match_nested_tape() {
+    for (dim, n_max) in [(2usize, 4usize), (3, 3)] {
+        for kind in ActivationKind::ALL {
+            let mut rng = Prng::seeded(0xA1F + dim as u64 * 31 + kind.index() as u64);
+            let mlp = Mlp::uniform_with(dim, 6, 2, 1, kind, &mut rng);
+            let x = Tensor::rand_uniform(&[5, dim], -0.9, 0.9, &mut rng);
+            let engine = MultiJetEngine::new(dim, n_max);
+            let jet = engine.jet(&mlp, &x);
+
+            let mut g = Graph::new();
+            let pn = mlp.const_param_nodes(&mut g);
+            let xn = g.input(x.shape());
+            let u = mlp.forward_graph(&mut g, xn, &pn);
+            for m in 1..=n_max {
+                for alpha in multi_indices(dim, m) {
+                    let node = higher::mixed_partial(&mut g, u, xn, &alpha);
+                    let vals = g.eval(&[x.clone()], &[node]);
+                    let got = jet.partial(&alpha);
+                    assert!(
+                        allclose_slice(got.data(), vals.get(node).data(), 1e-10, 1e-10),
+                        "dim {dim} {} ∂^{alpha:?}: max diff {}",
+                        kind.name(),
+                        max_abs_diff(got.data(), vals.get(node).data())
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The recombination rows are an exact inverse of the direction moment
+/// matrix: `Σ_k w_k · (m!/β!) v_k^β = δ_{αβ}`, recomputed in plain f64
+/// from the public plan API alone.
+#[test]
+fn recombination_matrices_are_exact_inverses() {
+    fn multinom(alpha: &[usize]) -> f64 {
+        let m: usize = alpha.iter().sum();
+        let mut r: f64 = (1..=m).map(|i| i as f64).product();
+        for &a in alpha {
+            let fa: f64 = (1..=a).map(|i| i as f64).product();
+            r /= fa;
+        }
+        r
+    }
+    for (dim, n) in [(1usize, 6usize), (2, 4), (2, 6), (3, 4)] {
+        let plan = JetPlan::new(dim, n);
+        for m in 1..=n {
+            let multis = plan.multis(m);
+            for (a, alpha) in multis.iter().enumerate() {
+                let (ids, w) = plan.weights_for(alpha);
+                for (b, beta) in multis.iter().enumerate() {
+                    let mut acc = 0.0;
+                    for (&id, &wk) in ids.iter().zip(w) {
+                        let mut mom = multinom(beta);
+                        for (&vi, &bi) in plan.directions()[id].iter().zip(beta.iter()) {
+                            mom *= (vi as f64).powi(bi as i32);
+                        }
+                        acc += wk * mom;
+                    }
+                    let want = if a == b { 1.0 } else { 0.0 };
+                    assert!(
+                        (acc - want).abs() < 1e-9,
+                        "dim={dim} n={n} m={m} α={alpha:?} β={beta:?}: {acc}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The bench acceptance pair at a test-sized shape: the full operator
+/// evaluation (including the order-4 biharmonic) assembled from jets
+/// equals the nested-tape evaluation.
+#[test]
+fn operator_apply_matches_nested_tape() {
+    for op in [DiffOperator::laplacian(2), DiffOperator::biharmonic(2)] {
+        let mut rng = Prng::seeded(9);
+        let mlp = Mlp::uniform(2, 7, 2, 1, &mut rng);
+        let x = Tensor::rand_uniform(&[6, 2], -0.8, 0.8, &mut rng);
+        let engine = MultiJetEngine::new(2, op.max_order());
+        let jet = engine.jet(&mlp, &x);
+        let got = op.apply(&jet);
+
+        let mut g = Graph::new();
+        let pn = mlp.const_param_nodes(&mut g);
+        let xn = g.input(x.shape());
+        let u = mlp.forward_graph(&mut g, xn, &pn);
+        let mut partials = HashMap::new();
+        for alpha in op.needed_partials() {
+            let node = higher::mixed_partial(&mut g, u, xn, &alpha);
+            partials.insert(alpha, node);
+        }
+        let lhs = op.apply_nodes(&mut g, &partials);
+        let vals = g.eval(&[x.clone()], &[lhs]);
+        assert!(
+            allclose_slice(got.data(), vals.get(lhs).data(), 1e-10, 1e-10),
+            "{}: max diff {}",
+            op.describe(),
+            max_abs_diff(got.data(), vals.get(lhs).data())
+        );
+    }
+}
+
+/// One loss/gradient evaluation of the multivariate objective is
+/// bitwise identical across thread counts (ragged chunk layouts
+/// included).
+#[test]
+fn multi_objective_is_bitwise_thread_invariant() {
+    let mut rng_m = Prng::seeded(2);
+    let mlp = Mlp::uniform(2, 8, 2, 1, &mut rng_m);
+    let mut spec = MultiPinnSpec::for_problem(PdeProblem::Heat2d);
+    spec.n_interior = 26; // 26/8 → ragged chunks
+    spec.n_boundary = 10;
+    let build = |threads: usize| {
+        let policy = if threads <= 1 {
+            ParallelPolicy::Serial
+        } else {
+            ParallelPolicy::Fixed(threads)
+        };
+        MultiObjective::build(
+            spec,
+            &mlp,
+            DerivEngine::Ntp,
+            policy,
+            8,
+            &mut Prng::seeded(5),
+        )
+    };
+    let mut baseline = build(1);
+    let theta = baseline.theta_init(&mlp);
+    use ntangent::opt::Objective;
+    let (l0, g0) = baseline.value_grad(&theta);
+    for threads in [2usize, 4, 8] {
+        let mut obj = build(threads);
+        let (l, g) = obj.value_grad(&theta);
+        assert_eq!(l0.to_bits(), l.to_bits(), "{threads} threads");
+        assert_eq!(g0, g, "{threads} threads");
+        assert_eq!(
+            baseline.value(&theta).to_bits(),
+            obj.value(&theta).to_bits(),
+            "{threads} threads (value)"
+        );
+    }
+}
+
+/// The acceptance bar: whole short PDE training trajectories (Adam then
+/// L-BFGS — sharded tapes, deterministic reductions, policy-split
+/// optimizer updates) are **bitwise identical across 1/2/4/8 threads**.
+#[test]
+fn pde_training_trajectories_bitwise_identical_across_thread_counts() {
+    let run = |threads: usize| {
+        let mut spec = MultiPinnSpec::for_problem(PdeProblem::Poisson2d);
+        spec.n_interior = 30;
+        spec.n_boundary = 12;
+        let cfg = TrainConfig {
+            width: 8,
+            depth: 2,
+            adam_epochs: 8,
+            lbfgs_epochs: 4,
+            seed: 11,
+            chunk: 8,
+            policy: if threads <= 1 {
+                ParallelPolicy::Serial
+            } else {
+                ParallelPolicy::Fixed(threads)
+            },
+            ..TrainConfig::default()
+        };
+        train_pde(spec, &cfg, DerivEngine::Ntp)
+    };
+    let want = run(1);
+    let want_theta = params::flatten(&want.mlp);
+    for threads in [2usize, 4, 8] {
+        let got = run(threads);
+        assert_eq!(
+            want.final_loss.to_bits(),
+            got.final_loss.to_bits(),
+            "{threads} threads"
+        );
+        assert_eq!(want_theta, params::flatten(&got.mlp), "{threads} threads");
+    }
+}
