@@ -4,6 +4,7 @@
 //!
 //!     cargo bench --bench ntp_kernels
 
+#[cfg(feature = "reference-oracle")]
 use ntangent::bench::kernels::{self as bench_kernels, KernelBenchConfig};
 use ntangent::bench::parallel::{self as bench_parallel, ParallelBenchConfig};
 use ntangent::nn::Mlp;
@@ -63,14 +64,20 @@ fn main() {
     // acceptance shape of the kernel-fusion PR (width 64, depth 4,
     // B = 4096, n = 4/6/8). Shares the measurement protocol (and the
     // differential fused-vs-reference check) with `ntangent bench
-    // kernels` via `bench::kernels`.
-    println!("# fused kernel vs reference (4x64 tanh, B=4096)");
-    let kernel_cfg = KernelBenchConfig {
-        warmup: 1,
-        trials: 5,
-        ..KernelBenchConfig::default()
-    };
-    print!("{}", bench_kernels::summarize(&bench_kernels::run(&kernel_cfg, |_| {})));
+    // kernels` via `bench::kernels`. The reference oracle is
+    // feature-gated, so this leg needs `--features reference-oracle`.
+    #[cfg(feature = "reference-oracle")]
+    {
+        println!("# fused kernel vs reference (4x64 tanh, B=4096)");
+        let kernel_cfg = KernelBenchConfig {
+            warmup: 1,
+            trials: 5,
+            ..KernelBenchConfig::default()
+        };
+        print!("{}", bench_kernels::summarize(&bench_kernels::run(&kernel_cfg, |_| {})));
+    }
+    #[cfg(not(feature = "reference-oracle"))]
+    println!("# fused kernel vs reference: skipped (needs --features reference-oracle)");
 
     // Serial vs chunked-parallel forward at the serving shape (the
     // acceptance point of the parallel-execution PR: B >= 4096, n = 4).

@@ -12,7 +12,7 @@
 //! | §IV-B memory note          | [`memory::run`]   | `results/mem_scaling.csv` |
 //! | serial vs parallel forward | [`parallel::run`] | `results/parallel_speedup.csv` |
 //! | serial vs parallel training | [`train_par::run`] | `results/training_speedup.csv` |
-//! | fused vs reference kernel  | [`kernels::run`]  | `results/kernel_speedup.csv` + `BENCH_kernels.json` |
+//! | fused vs reference kernel  | `kernels::run` (needs `--features reference-oracle`) | `results/kernel_speedup.csv` + `BENCH_kernels.json` |
 //! | directional vs nested-tape operators | [`operators::run`] | `results/operator_speedup.csv` + `BENCH_operators.json` |
 //!
 //! Absolute times differ from the paper (single CPU host vs A6000 GPU);
@@ -21,6 +21,7 @@
 //! reproduction targets (see EXPERIMENTS.md).
 
 pub mod grid;
+#[cfg(feature = "reference-oracle")]
 pub mod kernels;
 pub mod memory;
 pub mod operators;

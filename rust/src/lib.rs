@@ -25,8 +25,10 @@
 //!   forward pass (both a pure fast path and a tape-recorded path that
 //!   supports backprop-through-derivatives for training). The fast path
 //!   is a fused element-tiled kernel — interleaved channel tiles plus a
-//!   stacked-channel GEMM — with the pre-fusion pass retained as
-//!   `forward_reference` (see `docs/ARCHITECTURE.md`). The engine is
+//!   stacked-channel GEMM, with its hot loops running on the
+//!   runtime-dispatched [`simd`] kernels — and the pre-fusion pass is
+//!   retained as `forward_reference` behind the `reference-oracle` cargo
+//!   feature (see `docs/ARCHITECTURE.md`). The engine is
 //!   `Send + Sync` and carries a [`ntp::ParallelPolicy`]
 //!   (serial / fixed-threads / auto): the batch axis is embarrassingly
 //!   parallel, so `forward_n` chunks rows across scoped threads with
@@ -66,6 +68,10 @@
 //!   speedups with `cargo bench --bench ntp_kernels` (serial vs parallel
 //!   forward), `cargo bench --bench coordinator` (1/2/4-worker pool), or
 //!   `ntangent bench par` (writes `parallel_speedup.csv`).
+//! - [`simd`] — runtime-dispatched vector kernels (AVX2 / NEON with an
+//!   always-compiled scalar fallback, `NTANGENT_SIMD` override) behind a
+//!   bitwise scalar≡vector contract; every hot loop above dispatches
+//!   through it.
 //! - [`bench`] — the harness that regenerates every figure of the paper.
 //! - [`util`] — substrates built from scratch for offline use: PRNG, JSON,
 //!   CLI parsing, stats, timers and a mini property-testing helper.
@@ -107,5 +113,6 @@ pub mod opt;
 pub mod pde;
 pub mod pinn;
 pub mod runtime;
+pub mod simd;
 pub mod tensor;
 pub mod util;

@@ -7,8 +7,10 @@
 //!   serve                         run the batching derivative-evaluation service
 //!   info                          tables, op counts and environment info
 
+#[cfg(feature = "reference-oracle")]
+use ntangent::bench::kernels;
 use ntangent::bench::{
-    grid, kernels, memory, operators, parallel, passes, profiles, train_par, training,
+    grid, memory, operators, parallel, passes, profiles, train_par, training,
 };
 use ntangent::coordinator::{BatcherConfig, NativeBackend, OperatorServer, PjrtBackend, Service};
 use ntangent::nn::Checkpoint;
@@ -311,6 +313,14 @@ fn run_bench_target(target: &str, args: &Args, out_dir: &Path) -> Result<(), Str
             parallel::save(&cells, out_dir).map_err(|e| e.to_string())?;
             println!("{}", parallel::summarize(&cells));
         }
+        #[cfg(not(feature = "reference-oracle"))]
+        "kernels" => {
+            eprintln!(
+                "[bench] kernels needs the pre-fusion oracle; rebuild with \
+                 `--features reference-oracle`"
+            );
+        }
+        #[cfg(feature = "reference-oracle")]
         "kernels" => {
             let mut cfg = if args.flag("smoke") {
                 kernels::KernelBenchConfig::smoke()

@@ -20,6 +20,7 @@
 //! | `softplus` | logistic polynomials `Q_1 = s`, `Q_{k+1} = Q_k'·(s−s²)` in `s = σ_logistic(x)` |
 //! | `gelu` | Hermite tower from the Gaussian pdf: `gelu^{(k)} = (−1)^{k−1} φ(x)(He_k − He_{k−2})`, k ≥ 2 |
 
+use crate::simd::Isa;
 use crate::tensor::Tensor;
 
 /// A smooth (C^∞), parameter-free activation with computable derivative
@@ -55,12 +56,15 @@ pub trait SmoothActivation: Send + Sync {
     /// hands a tile-local (L1-resident) workspace and the evaluation
     /// allocates nothing. Every element's value must be a function of that
     /// element alone (no cross-element coupling), which is what keeps
-    /// row-chunked parallel execution bitwise identical to serial.
+    /// row-chunked parallel execution bitwise identical to serial. The
+    /// caller also picks the [`Isa`] for the polynomial/elementwise
+    /// algebra of the sweep (the transcendental seeds stay scalar libm
+    /// calls under every ISA) — results are bitwise ISA-independent.
     ///
     /// The default goes through [`SmoothActivation::tower_scalar`]
     /// (allocating one small vector per element); the registered
     /// activations override it with allocation-free sweeps.
-    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize) {
+    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize, _isa: Isa) {
         assert!(stride >= xs.len(), "tower_into: stride shorter than the tile");
         assert!(out.len() >= n * stride + xs.len(), "tower_into: output too short");
         for (e, &v) in xs.iter().enumerate() {
@@ -200,52 +204,12 @@ thread_local! {
         std::cell::RefCell::new(SoftplusTower::new(1));
 }
 
-/// Evaluate a polynomial (low-to-high coefficients) elementwise (Horner).
+/// Evaluate a polynomial (low-to-high coefficients) elementwise (Horner,
+/// dispatched through the process-wide [`Isa`]).
 fn horner_tensor(t: &Tensor, coeffs: &[f64]) -> Tensor {
     let mut out = Tensor::zeros(t.shape());
-    horner_into(t.data(), coeffs, out.data_mut());
+    Isa::active().horner_into(t.data(), coeffs, out.data_mut());
     out
-}
-
-/// Horner sweep `out[e] = P(t[e])` into a caller-owned buffer — the
-/// allocation-free core shared by [`horner_tensor`] and the strided
-/// `tower_into` implementations.
-fn horner_into(t: &[f64], coeffs: &[f64], out: &mut [f64]) {
-    debug_assert_eq!(t.len(), out.len());
-    match coeffs.len() {
-        0 => out.fill(0.0),
-        1 => out.fill(coeffs[0]),
-        _ => {
-            let top = coeffs[coeffs.len() - 1];
-            for (o, &ti) in out.iter_mut().zip(t) {
-                let mut acc = top;
-                for &ci in coeffs[..coeffs.len() - 1].iter().rev() {
-                    acc = acc * ti + ci;
-                }
-                *o = acc;
-            }
-        }
-    }
-}
-
-/// In-place Horner sweep `t[e] = P(t[e])` (used when a plane doubles as
-/// its own substitution input, e.g. the softplus sigmoid staging plane).
-fn horner_inplace(t: &mut [f64], coeffs: &[f64]) {
-    match coeffs.len() {
-        0 => t.fill(0.0),
-        1 => t.fill(coeffs[0]),
-        _ => {
-            let top = coeffs[coeffs.len() - 1];
-            for v in t.iter_mut() {
-                let ti = *v;
-                let mut acc = top;
-                for &ci in coeffs[..coeffs.len() - 1].iter().rev() {
-                    acc = acc * ti + ci;
-                }
-                *v = acc;
-            }
-        }
-    }
 }
 
 // ------------------------------------------------------- polynomial towers
@@ -356,7 +320,7 @@ impl SmoothActivation for Tanh {
 
     /// Allocation-free strided tower: plane 0 holds `tanh x` (= P₀) and
     /// doubles as the Horner input for planes 1..=n.
-    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize) {
+    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize, isa: Isa) {
         assert!(n <= self.table.n_max(), "tower order {n} > table n_max");
         assert!(stride >= xs.len(), "tower_into: stride shorter than the tile");
         assert!(out.len() >= n * stride + xs.len(), "tower_into: output too short");
@@ -367,7 +331,7 @@ impl SmoothActivation for Tanh {
         for k in 1..=n {
             let (t_plane, rest) = out.split_at_mut(stride);
             let off = (k - 1) * stride;
-            horner_into(&t_plane[..m], self.table.poly(k), &mut rest[off..off + m]);
+            isa.horner_into(&t_plane[..m], self.table.poly(k), &mut rest[off..off + m]);
         }
     }
 }
@@ -409,7 +373,7 @@ impl SmoothActivation for Sine {
 
     /// Allocation-free strided 4-cycle: `sin`/`cos` into planes 0/1, then
     /// sign-flipped copies for the higher orders.
-    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize) {
+    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize, isa: Isa) {
         assert!(stride >= xs.len(), "tower_into: stride shorter than the tile");
         assert!(out.len() >= n * stride + xs.len(), "tower_into: output too short");
         let m = xs.len();
@@ -428,9 +392,7 @@ impl SmoothActivation for Sine {
             if k % 4 < 2 {
                 hi[..m].copy_from_slice(src);
             } else {
-                for (d, &s) in hi[..m].iter_mut().zip(src) {
-                    *d = -s;
-                }
+                isa.neg_into(&mut hi[..m], src);
             }
         }
     }
@@ -550,7 +512,7 @@ impl SmoothActivation for Softplus {
     /// Allocation-free strided tower: the sigmoid is staged in the *last*
     /// plane (consumed in place by its own final Horner sweep), the other
     /// orders Horner off it, and plane 0 gets the stable softplus.
-    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize) {
+    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize, isa: Isa) {
         assert!(n <= self.table.n_max(), "tower order {n} > table n_max");
         assert!(stride >= xs.len(), "tower_into: stride shorter than the tile");
         assert!(out.len() >= n * stride + xs.len(), "tower_into: output too short");
@@ -562,9 +524,9 @@ impl SmoothActivation for Softplus {
             for k in 1..n {
                 let (lo, hi) = out.split_at_mut(n * stride);
                 let off = k * stride;
-                horner_into(&hi[..m], self.table.poly(k), &mut lo[off..off + m]);
+                isa.horner_into(&hi[..m], self.table.poly(k), &mut lo[off..off + m]);
             }
-            horner_inplace(&mut out[n * stride..n * stride + m], self.table.poly(n));
+            isa.horner_inplace(&mut out[n * stride..n * stride + m], self.table.poly(n));
         }
         for (o, &x) in out[..m].iter_mut().zip(xs) {
             *o = softplus(x);
@@ -626,6 +588,11 @@ fn gelu_deriv_scalar(x: f64, k: usize) -> f64 {
     }
 }
 
+/// Elements per stack-resident `cdf`/`pdf` staging block of the strided
+/// GELU tower — matches the fused kernel's 128-element tile, so the hot
+/// path runs exactly one block per call.
+const GELU_BLOCK: usize = 128;
+
 /// Exact (erf-based) GELU `x·Φ(x)` with the Hermite-polynomial tower.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Gelu;
@@ -664,30 +631,35 @@ impl SmoothActivation for Gelu {
         out
     }
 
-    /// Allocation-free strided tower: per element, the Hermite recurrence
-    /// is rolled with three scalars (`He_{k−2}, He_{k−1}, He_k`) — the
-    /// same arithmetic as [`Gelu::tower_scalar`], no per-element vector.
-    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize) {
+    /// Allocation-free strided tower: the transcendental seeds (`Φ` via
+    /// `erf`, `φ` via `exp`) are computed scalar into small stack blocks,
+    /// then the Hermite recurrence is rolled across elements by the
+    /// dispatched [`Isa::gelu_tail`] kernel (three registers `He_{k−2},
+    /// He_{k−1}, He_k` per lane) — the same arithmetic as
+    /// [`Gelu::tower_scalar`], no per-element vector.
+    fn tower_into(&self, xs: &[f64], n: usize, out: &mut [f64], stride: usize, isa: Isa) {
         assert!(stride >= xs.len(), "tower_into: stride shorter than the tile");
         assert!(out.len() >= n * stride + xs.len(), "tower_into: output too short");
         let sqrt_2 = std::f64::consts::SQRT_2;
         let sqrt_2pi = (2.0 * std::f64::consts::PI).sqrt();
-        for (e, &x) in xs.iter().enumerate() {
-            let cdf = 0.5 * (1.0 + erf(x / sqrt_2));
-            out[e] = x * cdf;
+        let mut cdf = [0.0f64; GELU_BLOCK];
+        let mut pdf = [0.0f64; GELU_BLOCK];
+        let mut base = 0;
+        while base < xs.len() {
+            let len = GELU_BLOCK.min(xs.len() - base);
+            let xb = &xs[base..base + len];
+            for (o, &x) in cdf[..len].iter_mut().zip(xb) {
+                *o = 0.5 * (1.0 + erf(x / sqrt_2));
+            }
             if n >= 1 {
-                let pdf = (-0.5 * x * x).exp() / sqrt_2pi;
-                out[stride + e] = cdf + x * pdf;
-                let mut h0 = 1.0; // He_{k-2}
-                let mut h1 = x; // He_{k-1}
-                for k in 2..=n {
-                    let hk = x * h1 - (k - 1) as f64 * h0;
-                    let sign = if (k - 1) % 2 == 0 { 1.0 } else { -1.0 };
-                    out[k * stride + e] = sign * pdf * (hk - h0);
-                    h0 = h1;
-                    h1 = hk;
+                for (o, &x) in pdf[..len].iter_mut().zip(xb) {
+                    *o = (-0.5 * x * x).exp() / sqrt_2pi;
                 }
             }
+            // out[base..]: plane k of block element e sits at
+            // k·stride + (base + e), i.e. k·stride + e of the offset view.
+            isa.gelu_tail(xb, &cdf[..len], &pdf[..len], n, &mut out[base..], stride);
+            base += len;
         }
     }
 }
@@ -830,6 +802,8 @@ mod tests {
     /// The strided `tower_into` planes (fused-kernel entry point) match
     /// the scalar towers for every registered activation, including
     /// partial tiles (`xs.len() < stride`) and every order 0..=n_max.
+    /// (Scalar ISA here; the scalar≡vector contract is covered by
+    /// `rust/tests/simd_dispatch.rs`.)
     #[test]
     fn strided_tower_into_matches_scalar_for_all_kinds() {
         let xs: Vec<f64> = (0..11).map(|i| -2.5 + 0.5 * i as f64).collect();
@@ -838,7 +812,7 @@ mod tests {
             let act = kind.build_tower(8);
             for n in [0usize, 1, 2, 5, 8] {
                 let mut out = vec![f64::NAN; (n + 1) * stride];
-                act.tower_into(&xs, n, &mut out, stride);
+                act.tower_into(&xs, n, &mut out, stride, Isa::Scalar);
                 for (e, &x) in xs.iter().enumerate() {
                     let scalar = act.tower_scalar(x, n);
                     for (k, &want) in scalar.iter().enumerate() {

@@ -26,10 +26,18 @@
 //!   channel `k` a contiguous plane), so the affine step is a **single
 //!   stacked-channel GEMM** through the blocked kernel in
 //!   [`crate::tensor::linalg::matmul_nt_block_into`], with the bias
-//!   added to channel 0's rows only.
+//!   added to channel 0's rows only;
+//! - every hot loop of the sweep — the seed rows, the power fills, the
+//!   interpreter's 1/2/k-factor paths, the tower algebra, the GEMM
+//!   microkernel and the bias rows — dispatches through the runtime-
+//!   selected [`crate::simd::Isa`] vector kernels, captured once at
+//!   engine construction. Scalar and vector kernels are bitwise
+//!   identical (see the `simd` module docs), so the choice of ISA never
+//!   changes results.
 //!
-//! The pre-fusion pass survives as [`NtpEngine::forward_reference`] for
-//! differential testing and as the benchmark baseline.
+//! The pre-fusion pass survives as `NtpEngine::forward_reference` behind
+//! the `reference-oracle` cargo feature, for differential testing and as
+//! the benchmark baseline.
 //!
 //! The batch dimension is embarrassingly parallel — every output row
 //! depends only on its input row, with no cross-row reductions — so
@@ -45,7 +53,8 @@
 use super::activation::{ActivationKind, SmoothActivation};
 use super::bell::{FaaDiBruno, FdbProgram};
 use crate::nn::Mlp;
-use crate::tensor::linalg::matmul_nt_block_into;
+use crate::simd::Isa;
+use crate::tensor::linalg::matmul_nt_block_into_with;
 use crate::tensor::Tensor;
 use std::sync::Mutex;
 
@@ -117,6 +126,10 @@ pub struct NtpEngine {
     acts: Vec<Box<dyn SmoothActivation>>,
     /// How `forward_n` splits the batch across threads.
     policy: ParallelPolicy,
+    /// The SIMD kernel set the fused sweeps dispatch to — resolved once
+    /// at construction from [`Isa::active`] (results are bitwise
+    /// ISA-independent, so this only affects speed).
+    isa: Isa,
     /// §Perf: pool of reusable hot-loop buffers (stacked channel planes,
     /// the tile workspace, and the reference path's power/ξ tensors), so
     /// repeated forward calls allocate only the tensors they return.
@@ -126,7 +139,7 @@ pub struct NtpEngine {
 }
 
 /// Reusable buffers for [`NtpEngine::forward_n`] (fused path) and
-/// [`NtpEngine::forward_reference`] (pre-fusion path).
+/// `NtpEngine::forward_reference` (pre-fusion path, feature-gated).
 #[derive(Default)]
 struct Scratch {
     /// Fused path: stacked channel state, channel `k` of the current
@@ -135,13 +148,19 @@ struct Scratch {
     /// Fused path: combine output (pre-GEMM) stacked buffer.
     stack_nxt: Vec<f64>,
     /// Fused path: tile workspace — tower planes, then the program's
-    /// operand planes (channels + powers), then the ξ accumulators, each
+    /// operand planes (channels + powers), then the ξ accumulators, then
+    /// one spare product plane for the k-factor interpreter path, each
     /// [`TILE`] elements.
     tile: Vec<f64>,
+    /// Directional path: the `[x; v]` row-stacked seed operand, so both
+    /// seed products run as one GEMM launch.
+    dir_seed: Vec<f64>,
     /// Reference path: `powers[j][c-2] = y_j^c` for multiplicities
     /// `c ≥ 2` (the power-1 "entry" borrows `y_j` directly).
+    #[cfg(feature = "reference-oracle")]
     powers: Vec<Vec<Tensor>>,
     /// Reference path: `xi[i]` accumulates the combine for channel `i`.
+    #[cfg(feature = "reference-oracle")]
     xi: Vec<Tensor>,
 }
 
@@ -155,6 +174,7 @@ fn ensure_len(buf: &mut Vec<f64>, len: usize) {
 
 /// Make `buf` a zeroed tensor of `shape`, reusing its allocation when the
 /// shape already matches.
+#[cfg(feature = "reference-oracle")]
 fn ensure_zeroed(buf: &mut Tensor, shape: &[usize]) {
     if buf.shape() == shape {
         buf.data_mut().fill(0.0);
@@ -226,6 +246,7 @@ where
 
 /// The data slice for `y_j^c`: multiplicity 1 borrows the channel itself,
 /// higher multiplicities come from the scratch power cache.
+#[cfg(feature = "reference-oracle")]
 fn power_slice<'a>(y: &'a [Tensor], powers: &'a [Vec<Tensor>], j: usize, c: usize) -> &'a [f64] {
     if c == 1 {
         y[j].data()
@@ -242,8 +263,17 @@ impl NtpEngine {
     }
 
     /// Build tables for up to `n_max` derivatives with an explicit
-    /// batch-parallelism policy.
+    /// batch-parallelism policy. The SIMD kernel set is resolved once
+    /// here from [`Isa::active`] (`NTANGENT_SIMD` / CPU detection).
     pub fn with_policy(n_max: usize, policy: ParallelPolicy) -> NtpEngine {
+        NtpEngine::with_isa(n_max, policy, Isa::active())
+    }
+
+    /// [`NtpEngine::with_policy`] with an explicitly pinned [`Isa`]
+    /// instead of the process-wide one — lets tests compare the scalar
+    /// and vector kernel sets in one process. Results are bitwise
+    /// identical across ISAs; only throughput differs.
+    pub fn with_isa(n_max: usize, policy: ParallelPolicy, isa: Isa) -> NtpEngine {
         let fdb = FaaDiBruno::new(n_max);
         let program = FdbProgram::compile(&fdb);
         NtpEngine {
@@ -255,8 +285,14 @@ impl NtpEngine {
                 .map(|k| k.build_tower(n_max))
                 .collect(),
             policy,
+            isa,
             scratch_pool: Mutex::new(Vec::new()),
         }
+    }
+
+    /// The SIMD kernel set this engine dispatches to.
+    pub fn isa(&self) -> Isa {
+        self.isa
     }
 
     /// Highest derivative order the tables cover.
@@ -400,7 +436,10 @@ impl NtpEngine {
     /// The pre-fusion n-TangentProp pass — term-major full-plane sweeps
     /// with materialized channel powers and one affine matmul per channel
     /// — kept as the fused kernel's differential-testing oracle and as
-    /// the benchmark baseline (`ntangent bench kernels`). Always serial.
+    /// the benchmark baseline (`ntangent bench kernels`). Always serial,
+    /// always on the scalar kernels, and compiled only under the
+    /// `reference-oracle` cargo feature (it is not a production path).
+    #[cfg(feature = "reference-oracle")]
     pub fn forward_reference(&self, mlp: &Mlp, x: &Tensor, n: usize) -> Vec<Tensor> {
         self.check_forward_args(mlp, x, n);
         let mut scratch = self.take_scratch();
@@ -442,12 +481,13 @@ impl NtpEngine {
 
     /// Size the pooled buffers for one `batch`-row call: stacked channel
     /// planes at the widest layer plus the tile workspace (laid out by
-    /// `n_max` so one scratch serves every call).
+    /// `n_max` so one scratch serves every call; the `+ 1` is the spare
+    /// product plane of the interpreter's k-factor path).
     fn ensure_scratch(&self, mlp: &Mlp, batch: usize, n: usize, scratch: &mut Scratch) {
         let nch = n + 1;
         let ch_base = self.n_max + 1;
         let xi_base = ch_base + self.program.n_operands();
-        let tile_planes = xi_base + self.n_max;
+        let tile_planes = xi_base + self.n_max + 1;
         let w_max = mlp.layers.iter().map(|l| l.fan_out()).max().unwrap();
         ensure_len(&mut scratch.stack_cur, nch * batch * w_max);
         ensure_len(&mut scratch.stack_nxt, nch * batch * w_max);
@@ -470,14 +510,13 @@ impl NtpEngine {
         let l0 = &mlp.layers[0];
         let w0 = l0.fan_out();
         {
+            let isa = self.isa;
             let cur = &mut scratch.stack_cur;
             let wd = l0.w.data(); // [w0, 1] row-major = one weight per row
             let bd = l0.b.data();
             let plane = batch * w0;
             for (row, &xv) in cur[..plane].chunks_exact_mut(w0).zip(x.data()) {
-                for (o, (&w, &b)) in row.iter_mut().zip(wd.iter().zip(bd)) {
-                    *o = xv * w + b;
-                }
+                isa.axpb_into(row, xv, wd, bd);
             }
             if n >= 1 {
                 for row in cur[plane..2 * plane].chunks_exact_mut(w0) {
@@ -494,7 +533,9 @@ impl NtpEngine {
     /// Directional twin of [`NtpEngine::forward_chunk`]: seed the
     /// channels for the curve `t ↦ f(x + t·v)` —
     /// `y0 = x W0^T + b0`, `y1 = v W0^T`, `y_i = 0` for `i ≥ 2` — then
-    /// run the same fused layer propagation.
+    /// run the same fused layer propagation. The two seed products run
+    /// as a single `[x; v]`-stacked GEMM launch (bitwise identical to
+    /// two launches by the blocked kernel's row-chunk invariance).
     fn forward_directional_chunk(
         &self,
         mlp: &Mlp,
@@ -511,25 +552,35 @@ impl NtpEngine {
         let w0 = l0.fan_out();
         let plane = batch * w0;
         {
+            let isa = self.isa;
+            // Both seed products — y0 = x W0^T and y1 = v W0^T — share
+            // the weight operand, so stack `[x; v]` row-wise and launch
+            // ONE GEMM writing channels 0 and 1 back to back. The
+            // blocked kernel is row-chunk invariant bitwise (see
+            // `blocked_nt_matmul_is_row_chunk_invariant_bitwise`), so
+            // the fold reproduces the two separate launches exactly.
             let cur = &mut scratch.stack_cur;
-            // y0 = x W0^T + b0 (bias enters channel 0 only).
-            matmul_nt_block_into(x.data(), l0.w.data(), &mut cur[..plane], batch, d, w0);
-            let bd = l0.b.data();
-            for row in cur[..plane].chunks_exact_mut(w0) {
-                for (o, &b) in row.iter_mut().zip(bd) {
-                    *o += b;
-                }
-            }
-            // y1 = v W0^T: d(x + t·v)/dt = v through the affine layer.
             if n >= 1 {
-                matmul_nt_block_into(
-                    v.data(),
+                let seed = &mut scratch.dir_seed;
+                ensure_len(seed, 2 * batch * d);
+                seed[..batch * d].copy_from_slice(x.data());
+                seed[batch * d..2 * batch * d].copy_from_slice(v.data());
+                matmul_nt_block_into_with(
+                    isa,
+                    &seed[..2 * batch * d],
                     l0.w.data(),
-                    &mut cur[plane..2 * plane],
-                    batch,
+                    &mut cur[..2 * plane],
+                    2 * batch,
                     d,
                     w0,
                 );
+            } else {
+                matmul_nt_block_into_with(isa, x.data(), l0.w.data(), &mut cur[..plane], batch, d, w0);
+            }
+            // Bias enters channel 0's rows only.
+            let bd = l0.b.data();
+            for row in cur[..plane].chunks_exact_mut(w0) {
+                isa.add_assign(row, bd);
             }
             for k in 2..=n {
                 cur[k * plane..(k + 1) * plane].fill(0.0);
@@ -552,10 +603,12 @@ impl NtpEngine {
     ) -> Vec<Tensor> {
         let act = self.act_for(mlp.activation);
         let prog = &self.program;
+        let isa = self.isa;
         let nch = n + 1;
 
         // Tile plane bases: towers first, then the program's operand
-        // planes (channels + powers), then the ξ accumulators.
+        // planes (channels + powers), then the ξ accumulators (a spare
+        // product plane for the k-factor path sits past those).
         let ch_base = self.n_max + 1;
         let xi_base = ch_base + prog.n_operands();
 
@@ -582,7 +635,7 @@ impl NtpEngine {
                     // Activation tower σ^{(0..=n)}(y0) into the tower planes.
                     {
                         let (towers, operands) = tile.split_at_mut(ch_base * TILE);
-                        act.tower_into(&operands[..len], n, towers, TILE);
+                        act.tower_into(&operands[..len], n, towers, TILE, isa);
                     }
                     // Channel powers y_j^c, built plane-by-plane in L1.
                     {
@@ -592,17 +645,17 @@ impl NtpEngine {
                             let ao = f.a as usize * TILE;
                             let bo = f.b as usize * TILE;
                             let (a, b) = (&lo[ao..ao + len], &lo[bo..bo + len]);
-                            for ((d, &av), &bv) in hi[..len].iter_mut().zip(a).zip(b) {
-                                *d = av * bv;
-                            }
+                            isa.mul_into(&mut hi[..len], a, b);
                         }
                     }
                     // ξ_i = Σ_{p∈P(i)} C_p σ^{(|p|)}(y0) Π_j y_j^{p_j}
                     // (eq. 5b), interpreted from the compiled program with
                     // everything tile-resident.
                     {
-                        let (head_mut, xi_region) = tile.split_at_mut(xi_base * TILE);
+                        let (head_mut, rest) = tile.split_at_mut(xi_base * TILE);
                         let head: &[f64] = head_mut;
+                        let (xi_region, tmp_plane) = rest.split_at_mut(self.n_max * TILE);
+                        let tmp = &mut tmp_plane[..len];
                         for i in 1..=n {
                             let xi = &mut xi_region[(i - 1) * TILE..(i - 1) * TILE + len];
                             xi.fill(0.0);
@@ -614,32 +667,29 @@ impl NtpEngine {
                                 match fids {
                                     [a] => {
                                         let ao = (ch_base + *a as usize) * TILE;
-                                        let pa = &head[ao..ao + len];
-                                        for (o, (&t, &av)) in
-                                            xi.iter_mut().zip(tw.iter().zip(pa))
-                                        {
-                                            *o += coeff * t * av;
-                                        }
+                                        isa.xi_acc1(xi, coeff, tw, &head[ao..ao + len]);
                                     }
                                     [a, b] => {
                                         let ao = (ch_base + *a as usize) * TILE;
                                         let bo = (ch_base + *b as usize) * TILE;
-                                        let pa = &head[ao..ao + len];
-                                        let pb = &head[bo..bo + len];
-                                        for (o, ((&t, &av), &bv)) in
-                                            xi.iter_mut().zip(tw.iter().zip(pa).zip(pb))
-                                        {
-                                            *o += coeff * t * av * bv;
-                                        }
+                                        isa.xi_acc2(
+                                            xi,
+                                            coeff,
+                                            tw,
+                                            &head[ao..ao + len],
+                                            &head[bo..bo + len],
+                                        );
                                     }
                                     _ => {
-                                        for (e, (o, &t)) in xi.iter_mut().zip(tw).enumerate() {
-                                            let mut p = coeff * t;
-                                            for &fid in fids {
-                                                p *= head[(ch_base + fid as usize) * TILE + e];
-                                            }
-                                            *o += p;
+                                        // Same left-to-right product order
+                                        // as the historical scalar loop:
+                                        // p = coeff·t, then p *= factor.
+                                        isa.scale_into(tmp, coeff, tw);
+                                        for &fid in fids {
+                                            let fo = (ch_base + fid as usize) * TILE;
+                                            isa.mul_assign(tmp, &head[fo..fo + len]);
                                         }
+                                        isa.add_assign(xi, tmp);
                                     }
                                 }
                             }
@@ -661,13 +711,11 @@ impl NtpEngine {
             {
                 let a = &scratch.stack_nxt[..nch * plane];
                 let c = &mut scratch.stack_cur[..nch * batch * w_out];
-                matmul_nt_block_into(a, layer.w.data(), c, nch * batch, w_in, w_out);
+                matmul_nt_block_into_with(isa, a, layer.w.data(), c, nch * batch, w_in, w_out);
                 let bd = layer.b.data();
                 if w_out > 0 {
                     for row in c[..batch * w_out].chunks_exact_mut(w_out) {
-                        for (o, &b) in row.iter_mut().zip(bd) {
-                            *o += b;
-                        }
+                        isa.add_assign(row, bd);
                     }
                 }
             }
@@ -683,7 +731,8 @@ impl NtpEngine {
     }
 
     /// The pre-fusion serial pass over one batch (see
-    /// [`NtpEngine::forward_reference`]).
+    /// `NtpEngine::forward_reference`).
+    #[cfg(feature = "reference-oracle")]
     fn forward_reference_chunk(
         &self,
         mlp: &Mlp,
@@ -741,6 +790,7 @@ impl NtpEngine {
     /// Fill `powers[j][c-2] = y_j^c` for every multiplicity `c ≥ 2` any
     /// partition term of order ≤ n can request (`c ≤ n/j`), reusing the
     /// scratch tensors across layers and calls.
+    #[cfg(feature = "reference-oracle")]
     fn fill_powers(powers: &mut Vec<Vec<Tensor>>, y: &[Tensor], n: usize) {
         if powers.len() < n + 1 {
             powers.resize_with(n + 1, Vec::new);
@@ -773,6 +823,7 @@ impl NtpEngine {
     /// ξ_i = Σ_{p∈P(i)} C_p σ^{(|p|)}(y0) Π_j y_j^{p_j}   (eq. 5b),
     /// accumulated into `out` (already zeroed) — the reference path's
     /// term-major, full-plane combine.
+    #[cfg(feature = "reference-oracle")]
     fn combine_channel(
         fdb: &FaaDiBruno,
         i: usize,
@@ -891,7 +942,9 @@ mod tests {
 
     /// The fused kernel against the pre-fusion reference path — the
     /// in-crate differential smoke (the full property sweep lives in
-    /// `rust/tests/fused_kernel.rs`).
+    /// `rust/tests/fused_kernel.rs`). Rides the `reference-oracle`
+    /// feature with the oracle it exercises.
+    #[cfg(feature = "reference-oracle")]
     #[test]
     fn fused_matches_reference_path() {
         for kind in ActivationKind::ALL {
@@ -1010,11 +1063,14 @@ mod tests {
         assert_eq!(warm, outputs, "fused warm path allocated beyond its outputs");
         // The reference path still materializes towers/affine outputs per
         // layer — strictly more accounted bytes than the fused kernel.
-        let (_, ref_warm) = alloc::measure(|| engine.forward_reference(&mlp, &x, n));
-        assert!(
-            ref_warm > warm,
-            "reference warm {ref_warm} should exceed fused warm {warm}"
-        );
+        #[cfg(feature = "reference-oracle")]
+        {
+            let (_, ref_warm) = alloc::measure(|| engine.forward_reference(&mlp, &x, n));
+            assert!(
+                ref_warm > warm,
+                "reference warm {ref_warm} should exceed fused warm {warm}"
+            );
+        }
     }
 
     #[test]

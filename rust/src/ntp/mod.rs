@@ -20,8 +20,10 @@
 //! Bruno tables are compiled once into a flat [`FdbProgram`], the combine
 //! runs over L1-resident tiles of an interleaved channel layout, and the
 //! affine step is a single stacked-channel GEMM (see
-//! `docs/ARCHITECTURE.md`, "Kernel layout and memory traffic"). The
-//! pre-fusion pass is kept as [`NtpEngine::forward_reference`].
+//! `docs/ARCHITECTURE.md`, "Kernel layout and memory traffic"); its hot
+//! loops dispatch through the runtime-selected [`crate::simd`] kernels.
+//! The pre-fusion pass is kept as `NtpEngine::forward_reference` behind
+//! the `reference-oracle` cargo feature (differential oracle only).
 //!
 //! Multi-dimensional inputs are served by the same kernel through
 //! **directional** jets: [`NtpEngine::forward_directional`] propagates

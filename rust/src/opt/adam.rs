@@ -10,6 +10,7 @@
 
 use super::Objective;
 use crate::ntp::ParallelPolicy;
+use crate::simd::{AdamCoeffs, Isa};
 use crate::tensor::Tensor;
 use crate::util::par;
 
@@ -71,7 +72,8 @@ impl Adam {
         let b1t = 1.0 - self.beta1.powi(self.t as i32);
         let b2t = 1.0 - self.beta2.powi(self.t as i32);
         let lr_t = self.lr * b2t.sqrt() / b1t;
-        let (beta1, beta2, eps) = (self.beta1, self.beta2, self.eps);
+        let co = AdamCoeffs { beta1: self.beta1, beta2: self.beta2, lr_t, eps: self.eps };
+        let isa = Isa::active();
         par::update_blocks(
             self.policy,
             par::UPDATE_BLOCK,
@@ -79,11 +81,7 @@ impl Adam {
             grad.data(),
             |muts, g| {
                 let [m, v, th] = muts;
-                for i in 0..g.len() {
-                    m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
-                    v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
-                    th[i] -= lr_t * m[i] / (v[i].sqrt() + eps);
-                }
+                isa.adam_block(m, v, th, g, co);
             },
         );
     }

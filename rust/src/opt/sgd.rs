@@ -7,6 +7,7 @@
 
 use super::Objective;
 use crate::ntp::ParallelPolicy;
+use crate::simd::Isa;
 use crate::tensor::Tensor;
 use crate::util::par;
 
@@ -55,6 +56,7 @@ impl Sgd {
     pub fn apply(&mut self, theta: &mut Tensor, grad: &Tensor) {
         assert_eq!(theta.numel(), grad.numel());
         let (lr, momentum) = (self.lr, self.momentum);
+        let isa = Isa::active();
         par::update_blocks(
             self.policy,
             par::UPDATE_BLOCK,
@@ -62,10 +64,7 @@ impl Sgd {
             grad.data(),
             |muts, g| {
                 let [v, th] = muts;
-                for i in 0..g.len() {
-                    v[i] = momentum * v[i] - lr * g[i];
-                    th[i] += v[i];
-                }
+                isa.sgd_block(v, th, g, lr, momentum);
             },
         );
     }

@@ -1,0 +1,1476 @@
+//! Runtime-dispatched SIMD kernels for the fused n-TangentProp hot loops.
+//!
+//! Every hot elementwise/reduction loop in the crate — the fused kernel's
+//! power fills and compiled-op interpreter, the activation towers' Horner
+//! and Hermite sweeps, the 4×8 stacked-channel GEMM microkernel, and the
+//! optimizer update/reduction helpers — has exactly **one scalar body and
+//! one vector body per ISA**, owned by this module and selected through
+//! [`Isa`]. The vector bodies use explicit `std::arch` intrinsics (AVX2
+//! on x86_64, NEON on aarch64); the scalar bodies are always compiled and
+//! are the portable fallback.
+//!
+//! # The bitwise contract
+//!
+//! Vector selection must never change results: for every kernel here the
+//! scalar and vector bodies are **bitwise identical**, which keeps the
+//! crate's serial-vs-parallel and golden-fixture guarantees independent
+//! of the host CPU. Two rules make that possible:
+//!
+//! - **No FMA contraction.** Vector bodies use separate `mul` and `add`
+//!   (exactly the two roundings the scalar code performs); `sqrt`/`div`
+//!   are correctly rounded per IEEE-754 and therefore lane-exact too.
+//!   The `fma` CPU feature is *detected* (it travels with AVX2 on every
+//!   x86-64-v3 part) but fused intrinsics are deliberately not used.
+//! - **Lane-stable reductions.** Reducing kernels ([`Isa::dot`],
+//!   [`Isa::sum`], the GEMM microkernel) fix a 4-lane accumulation
+//!   pattern: lane `j` accumulates elements `4c + j` and the lanes
+//!   combine as `(l0 + l2) + (l1 + l3) + tail` — the same convention as
+//!   [`crate::tensor::linalg::dot_unrolled`]. One AVX2 register (or an
+//!   aarch64 pair of 128-bit registers) performs exactly those four
+//!   chains, so the vector reduction reproduces the scalar bits.
+//!
+//! # Dispatch
+//!
+//! [`Isa::active`] resolves the process-wide choice **once** (a
+//! [`OnceLock`]): the `NTANGENT_SIMD` environment variable is consulted
+//! first (`scalar`, `avx2`, `neon`, or `auto`), then CPU feature
+//! detection. An explicitly requested vector ISA that the host cannot run
+//! falls back to `scalar`, never to a crash. Engines capture the resolved
+//! [`Isa`] at construction; tests construct engines with explicit ISAs
+//! (`NtpEngine::with_isa`) to compare both paths in one process.
+
+use std::sync::OnceLock;
+
+/// Coefficient bundle of one Adam update step, shared by the scalar and
+/// vector bodies of [`Isa::adam_block`].
+#[derive(Clone, Copy, Debug)]
+pub struct AdamCoeffs {
+    /// First-moment decay.
+    pub beta1: f64,
+    /// Second-moment decay.
+    pub beta2: f64,
+    /// Bias-corrected learning rate of this step.
+    pub lr_t: f64,
+    /// Denominator fuzz.
+    pub eps: f64,
+}
+
+/// An instruction-set choice for the vectorized kernels.
+///
+/// Carries no data — the variant *is* the dispatch decision, resolved
+/// once per process by [`Isa::active`] (or pinned explicitly in tests).
+/// Every kernel produces bitwise identical results under every variant;
+/// see the module docs for why.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar bodies — always available, the fallback.
+    Scalar,
+    /// 256-bit AVX2 bodies (x86_64; requires `avx2` + `fma` detection).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 128-bit NEON bodies (aarch64 baseline).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Isa {
+    /// The process-wide ISA, resolved exactly once: `NTANGENT_SIMD`
+    /// (`scalar` | `avx2` | `neon` | `auto`) first, CPU detection
+    /// otherwise. Unknown values mean `auto`.
+    pub fn active() -> Isa {
+        static ACTIVE: OnceLock<Isa> = OnceLock::new();
+        *ACTIVE.get_or_init(|| Isa::resolve(std::env::var("NTANGENT_SIMD").ok().as_deref()))
+    }
+
+    /// Resolve an explicit request (the parsed `NTANGENT_SIMD` value) to
+    /// a runnable ISA: `scalar` is always honored, a vector request is
+    /// honored only when the host supports it (falling back to
+    /// [`Isa::Scalar`] otherwise), and `None`/`auto`/anything else means
+    /// [`Isa::detect`].
+    pub fn resolve(request: Option<&str>) -> Isa {
+        let req = request.map(|s| s.trim().to_ascii_lowercase());
+        match req.as_deref() {
+            Some("scalar") => Isa::Scalar,
+            Some("avx2") => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                        Isa::Avx2
+                    } else {
+                        Isa::Scalar
+                    }
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    Isa::Scalar
+                }
+            }
+            Some("neon") => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    Isa::Neon
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    Isa::Scalar
+                }
+            }
+            _ => Isa::detect(),
+        }
+    }
+
+    /// CPU feature detection alone (no environment override): AVX2+FMA
+    /// on x86_64, NEON on aarch64 (baseline), scalar elsewhere.
+    pub fn detect() -> Isa {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                Isa::Avx2
+            } else {
+                Isa::Scalar
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            Isa::Neon
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            Isa::Scalar
+        }
+    }
+
+    /// The best *vector* ISA this host can run, if any — what tests use
+    /// to pit a vector engine against a scalar one (and to skip cleanly
+    /// on scalar-only hosts).
+    pub fn vector() -> Option<Isa> {
+        let isa = Isa::detect();
+        if isa == Isa::Scalar {
+            None
+        } else {
+            Some(isa)
+        }
+    }
+
+    /// Canonical lowercase name (the accepted `NTANGENT_SIMD` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+// ------------------------------------------------------------- kernels
+//
+// Each method asserts the slice-length contract once, then dispatches.
+// The vector bodies are `#[target_feature]` functions; constructing a
+// vector variant requires the matching CPU detection (see `resolve` /
+// `detect`), which is what makes the `unsafe` calls sound.
+
+impl Isa {
+    /// `Σ a[i]·b[i]` in the fixed 4-lane accumulation pattern of
+    /// [`crate::tensor::linalg::dot_unrolled`] — bitwise identical under
+    /// every ISA.
+    #[inline]
+    pub fn dot(self, a: &[f64], b: &[f64]) -> f64 {
+        assert_eq!(a.len(), b.len(), "dot: length mismatch");
+        match self {
+            Isa::Scalar => crate::tensor::linalg::dot_unrolled(a, b),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::dot(a, b) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::dot(a, b) },
+        }
+    }
+
+    /// `Σ a[i]` in the same fixed 4-lane pattern as [`Isa::dot`].
+    #[inline]
+    pub fn sum(self, a: &[f64]) -> f64 {
+        match self {
+            Isa::Scalar => scalar::sum(a),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::sum(a) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::sum(a) },
+        }
+    }
+
+    /// `dst[i] = a[i]·b[i]` (the fused kernel's channel-power fills).
+    #[inline]
+    pub fn mul_into(self, dst: &mut [f64], a: &[f64], b: &[f64]) {
+        assert_eq!(dst.len(), a.len(), "mul_into: length mismatch");
+        assert_eq!(dst.len(), b.len(), "mul_into: length mismatch");
+        match self {
+            Isa::Scalar => scalar::mul_into(dst, a, b),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::mul_into(dst, a, b) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::mul_into(dst, a, b) },
+        }
+    }
+
+    /// `dst[i] = c·a[i]` (seeds the interpreter's k-factor product).
+    #[inline]
+    pub fn scale_into(self, dst: &mut [f64], c: f64, a: &[f64]) {
+        assert_eq!(dst.len(), a.len(), "scale_into: length mismatch");
+        match self {
+            Isa::Scalar => scalar::scale_into(dst, c, a),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::scale_into(dst, c, a) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::scale_into(dst, c, a) },
+        }
+    }
+
+    /// `dst[i] *= a[i]`.
+    #[inline]
+    pub fn mul_assign(self, dst: &mut [f64], a: &[f64]) {
+        assert_eq!(dst.len(), a.len(), "mul_assign: length mismatch");
+        match self {
+            Isa::Scalar => scalar::mul_assign(dst, a),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::mul_assign(dst, a) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::mul_assign(dst, a) },
+        }
+    }
+
+    /// `dst[i] += a[i]` (bias rows, ξ accumulation of k-factor terms).
+    #[inline]
+    pub fn add_assign(self, dst: &mut [f64], a: &[f64]) {
+        assert_eq!(dst.len(), a.len(), "add_assign: length mismatch");
+        match self {
+            Isa::Scalar => scalar::add_assign(dst, a),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::add_assign(dst, a) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::add_assign(dst, a) },
+        }
+    }
+
+    /// `dst[i] = -a[i]` (the sine tower's sign flips; a pure sign-bit
+    /// XOR in the vector bodies — exact under IEEE-754).
+    #[inline]
+    pub fn neg_into(self, dst: &mut [f64], a: &[f64]) {
+        assert_eq!(dst.len(), a.len(), "neg_into: length mismatch");
+        match self {
+            Isa::Scalar => scalar::neg_into(dst, a),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::neg_into(dst, a) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::neg_into(dst, a) },
+        }
+    }
+
+    /// `dst[i] = x·w[i] + b[i]` — the scalar-input seed rows of the
+    /// fused forward (`y0 = x·W0ᵀ + b0` one batch row at a time).
+    #[inline]
+    pub fn axpb_into(self, dst: &mut [f64], x: f64, w: &[f64], b: &[f64]) {
+        assert_eq!(dst.len(), w.len(), "axpb_into: length mismatch");
+        assert_eq!(dst.len(), b.len(), "axpb_into: length mismatch");
+        match self {
+            Isa::Scalar => scalar::axpb_into(dst, x, w, b),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::axpb_into(dst, x, w, b) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::axpb_into(dst, x, w, b) },
+        }
+    }
+
+    /// `xi[i] += coeff·ts[i]·a[i]` — the compiled-op interpreter's
+    /// single-factor partition terms.
+    #[inline]
+    pub fn xi_acc1(self, xi: &mut [f64], coeff: f64, ts: &[f64], a: &[f64]) {
+        assert_eq!(xi.len(), ts.len(), "xi_acc1: length mismatch");
+        assert_eq!(xi.len(), a.len(), "xi_acc1: length mismatch");
+        match self {
+            Isa::Scalar => scalar::xi_acc1(xi, coeff, ts, a),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::xi_acc1(xi, coeff, ts, a) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::xi_acc1(xi, coeff, ts, a) },
+        }
+    }
+
+    /// `xi[i] += coeff·ts[i]·a[i]·b[i]` — the two-factor partition terms.
+    #[inline]
+    pub fn xi_acc2(self, xi: &mut [f64], coeff: f64, ts: &[f64], a: &[f64], b: &[f64]) {
+        assert_eq!(xi.len(), ts.len(), "xi_acc2: length mismatch");
+        assert_eq!(xi.len(), a.len(), "xi_acc2: length mismatch");
+        assert_eq!(xi.len(), b.len(), "xi_acc2: length mismatch");
+        match self {
+            Isa::Scalar => scalar::xi_acc2(xi, coeff, ts, a, b),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::xi_acc2(xi, coeff, ts, a, b) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::xi_acc2(xi, coeff, ts, a, b) },
+        }
+    }
+
+    /// Horner sweep `out[e] = P(t[e])` (low-to-high `coeffs`) — the tanh
+    /// and softplus tower planes.
+    #[inline]
+    pub fn horner_into(self, t: &[f64], coeffs: &[f64], out: &mut [f64]) {
+        assert_eq!(t.len(), out.len(), "horner_into: length mismatch");
+        match coeffs.len() {
+            0 => out.fill(0.0),
+            1 => out.fill(coeffs[0]),
+            _ => match self {
+                Isa::Scalar => scalar::horner_into(t, coeffs, out),
+                #[cfg(target_arch = "x86_64")]
+                Isa::Avx2 => unsafe { avx2::horner_into(t, coeffs, out) },
+                #[cfg(target_arch = "aarch64")]
+                Isa::Neon => unsafe { neon::horner_into(t, coeffs, out) },
+            },
+        }
+    }
+
+    /// In-place Horner sweep `vals[e] = P(vals[e])` (the softplus sigmoid
+    /// staging plane consuming itself).
+    #[inline]
+    pub fn horner_inplace(self, vals: &mut [f64], coeffs: &[f64]) {
+        match coeffs.len() {
+            0 => vals.fill(0.0),
+            1 => vals.fill(coeffs[0]),
+            _ => match self {
+                Isa::Scalar => scalar::horner_inplace(vals, coeffs),
+                #[cfg(target_arch = "x86_64")]
+                Isa::Avx2 => unsafe { avx2::horner_inplace(vals, coeffs) },
+                #[cfg(target_arch = "aarch64")]
+                Isa::Neon => unsafe { neon::horner_inplace(vals, coeffs) },
+            },
+        }
+    }
+
+    /// The GELU tower's strided tail from precomputed `cdf`/`pdf` blocks:
+    /// plane 0 gets `x·Φ(x)`, plane 1 `Φ + x·φ`, planes `k ≥ 2` the
+    /// rolled Hermite recurrence — written to `out[k·stride + e]`.
+    /// `pdf` is only read when `n ≥ 1`.
+    #[inline]
+    pub fn gelu_tail(self, xs: &[f64], cdf: &[f64], pdf: &[f64], n: usize, out: &mut [f64], stride: usize) {
+        assert_eq!(xs.len(), cdf.len(), "gelu_tail: length mismatch");
+        assert_eq!(xs.len(), pdf.len(), "gelu_tail: length mismatch");
+        assert!(stride >= xs.len(), "gelu_tail: stride shorter than the block");
+        assert!(out.len() >= n * stride + xs.len(), "gelu_tail: output too short");
+        match self {
+            Isa::Scalar => scalar::gelu_tail(xs, cdf, pdf, n, out, stride),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::gelu_tail(xs, cdf, pdf, n, out, stride) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::gelu_tail(xs, cdf, pdf, n, out, stride) },
+        }
+    }
+
+    /// The 4×8 register microkernel of the blocked NT GEMM: 32
+    /// single-accumulator chains over the packed k-major `panel`
+    /// (`panel[p·8 + q]` = column `q` at k-step `p`), written to `c`
+    /// (pre-offset at the tile's top-left element) with rows
+    /// `row_stride` apart. `first` assigns instead of accumulating.
+    #[inline]
+    pub fn gemm_micro_4x8(self, ar: [&[f64]; 4], panel: &[f64], c: &mut [f64], row_stride: usize, first: bool) {
+        let kl = ar[0].len();
+        for row in &ar {
+            assert_eq!(row.len(), kl, "gemm_micro_4x8: ragged A rows");
+        }
+        assert_eq!(panel.len(), GEMM_NR * kl, "gemm_micro_4x8: panel size");
+        assert!(row_stride >= GEMM_NR, "gemm_micro_4x8: row stride too small");
+        assert!(c.len() >= 3 * row_stride + GEMM_NR, "gemm_micro_4x8: output too short");
+        match self {
+            Isa::Scalar => scalar::gemm_micro_4x8(ar, panel, c, row_stride, first),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::gemm_micro_4x8(ar, panel, c, row_stride, first) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::gemm_micro_4x8(ar, panel, c, row_stride, first) },
+        }
+    }
+
+    /// One Adam block update (`m`, `v`, `θ` in place from `g`): the exact
+    /// per-element op sequence of the historical serial update.
+    #[inline]
+    pub fn adam_block(self, m: &mut [f64], v: &mut [f64], th: &mut [f64], g: &[f64], co: AdamCoeffs) {
+        assert_eq!(m.len(), g.len(), "adam_block: length mismatch");
+        assert_eq!(v.len(), g.len(), "adam_block: length mismatch");
+        assert_eq!(th.len(), g.len(), "adam_block: length mismatch");
+        match self {
+            Isa::Scalar => scalar::adam_block(m, v, th, g, co),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::adam_block(m, v, th, g, co) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::adam_block(m, v, th, g, co) },
+        }
+    }
+
+    /// One SGD(+momentum) block update (`v`, `θ` in place from `g`).
+    #[inline]
+    pub fn sgd_block(self, v: &mut [f64], th: &mut [f64], g: &[f64], lr: f64, momentum: f64) {
+        assert_eq!(v.len(), g.len(), "sgd_block: length mismatch");
+        assert_eq!(th.len(), g.len(), "sgd_block: length mismatch");
+        match self {
+            Isa::Scalar => scalar::sgd_block(v, th, g, lr, momentum),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::sgd_block(v, th, g, lr, momentum) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::sgd_block(v, th, g, lr, momentum) },
+        }
+    }
+}
+
+use crate::tensor::linalg::GEMM_NR;
+
+/// Portable scalar bodies — the dispatch fallback and the bitwise
+/// specification the vector bodies are held to.
+mod scalar {
+    use super::{AdamCoeffs, GEMM_NR};
+
+    /// 4-lane sum: lane `j` accumulates elements `4c + j`, lanes combine
+    /// as `(l0 + l2) + (l1 + l3) + tail` (the `dot_unrolled` convention).
+    pub fn sum(a: &[f64]) -> f64 {
+        let mut acc = [0.0f64; 4];
+        let chunks = a.len() / 4;
+        for c in 0..chunks {
+            let i = 4 * c;
+            acc[0] += a[i];
+            acc[1] += a[i + 1];
+            acc[2] += a[i + 2];
+            acc[3] += a[i + 3];
+        }
+        let mut tail = 0.0;
+        for &v in &a[4 * chunks..] {
+            tail += v;
+        }
+        (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+    }
+
+    pub fn mul_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+        for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+            *d = x * y;
+        }
+    }
+
+    pub fn scale_into(dst: &mut [f64], c: f64, a: &[f64]) {
+        for (d, &x) in dst.iter_mut().zip(a) {
+            *d = c * x;
+        }
+    }
+
+    pub fn mul_assign(dst: &mut [f64], a: &[f64]) {
+        for (d, &x) in dst.iter_mut().zip(a) {
+            *d *= x;
+        }
+    }
+
+    pub fn add_assign(dst: &mut [f64], a: &[f64]) {
+        for (d, &x) in dst.iter_mut().zip(a) {
+            *d += x;
+        }
+    }
+
+    pub fn neg_into(dst: &mut [f64], a: &[f64]) {
+        for (d, &x) in dst.iter_mut().zip(a) {
+            *d = -x;
+        }
+    }
+
+    pub fn axpb_into(dst: &mut [f64], x: f64, w: &[f64], b: &[f64]) {
+        for (d, (&wv, &bv)) in dst.iter_mut().zip(w.iter().zip(b)) {
+            *d = x * wv + bv;
+        }
+    }
+
+    pub fn xi_acc1(xi: &mut [f64], coeff: f64, ts: &[f64], a: &[f64]) {
+        for (o, (&tv, &av)) in xi.iter_mut().zip(ts.iter().zip(a)) {
+            *o += coeff * tv * av;
+        }
+    }
+
+    pub fn xi_acc2(xi: &mut [f64], coeff: f64, ts: &[f64], a: &[f64], b: &[f64]) {
+        for (o, ((&tv, &av), &bv)) in xi.iter_mut().zip(ts.iter().zip(a).zip(b)) {
+            *o += coeff * tv * av * bv;
+        }
+    }
+
+    /// Caller guarantees `coeffs.len() >= 2` (the dispatch method handles
+    /// the degenerate polynomials).
+    pub fn horner_into(t: &[f64], coeffs: &[f64], out: &mut [f64]) {
+        let top = coeffs[coeffs.len() - 1];
+        let low = &coeffs[..coeffs.len() - 1];
+        for (o, &ti) in out.iter_mut().zip(t) {
+            let mut acc = top;
+            for &ci in low.iter().rev() {
+                acc = acc * ti + ci;
+            }
+            *o = acc;
+        }
+    }
+
+    /// Caller guarantees `coeffs.len() >= 2`.
+    pub fn horner_inplace(vals: &mut [f64], coeffs: &[f64]) {
+        let top = coeffs[coeffs.len() - 1];
+        let low = &coeffs[..coeffs.len() - 1];
+        for v in vals.iter_mut() {
+            let ti = *v;
+            let mut acc = top;
+            for &ci in low.iter().rev() {
+                acc = acc * ti + ci;
+            }
+            *v = acc;
+        }
+    }
+
+    pub fn gelu_tail(xs: &[f64], cdf: &[f64], pdf: &[f64], n: usize, out: &mut [f64], stride: usize) {
+        for (e, &x) in xs.iter().enumerate() {
+            let c = cdf[e];
+            out[e] = x * c;
+            if n >= 1 {
+                let p = pdf[e];
+                out[stride + e] = c + x * p;
+                let mut h0 = 1.0; // He_{k-2}
+                let mut h1 = x; // He_{k-1}
+                for k in 2..=n {
+                    let hk = x * h1 - (k - 1) as f64 * h0;
+                    let sign = if (k - 1) % 2 == 0 { 1.0 } else { -1.0 };
+                    out[k * stride + e] = sign * p * (hk - h0);
+                    h0 = h1;
+                    h1 = hk;
+                }
+            }
+        }
+    }
+
+    /// 32 single-accumulator chains in ascending-k order; `c` is
+    /// pre-offset at the tile's top-left element.
+    pub fn gemm_micro_4x8(ar: [&[f64]; 4], panel: &[f64], c: &mut [f64], row_stride: usize, first: bool) {
+        let mut acc = [[0.0f64; GEMM_NR]; 4];
+        for (p, bv) in panel.chunks_exact(GEMM_NR).enumerate() {
+            let av = [ar[0][p], ar[1][p], ar[2][p], ar[3][p]];
+            for (accr, &a) in acc.iter_mut().zip(&av) {
+                for (o, &b) in accr.iter_mut().zip(bv) {
+                    *o += a * b;
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let crow = &mut c[r * row_stride..r * row_stride + GEMM_NR];
+            if first {
+                crow.copy_from_slice(accr);
+            } else {
+                for (o, &v) in crow.iter_mut().zip(accr) {
+                    *o += v;
+                }
+            }
+        }
+    }
+
+    pub fn adam_block(m: &mut [f64], v: &mut [f64], th: &mut [f64], g: &[f64], co: AdamCoeffs) {
+        let omb1 = 1.0 - co.beta1;
+        let omb2 = 1.0 - co.beta2;
+        for i in 0..g.len() {
+            m[i] = co.beta1 * m[i] + omb1 * g[i];
+            v[i] = co.beta2 * v[i] + omb2 * g[i] * g[i];
+            th[i] -= co.lr_t * m[i] / (v[i].sqrt() + co.eps);
+        }
+    }
+
+    pub fn sgd_block(v: &mut [f64], th: &mut [f64], g: &[f64], lr: f64, momentum: f64) {
+        for i in 0..g.len() {
+            v[i] = momentum * v[i] - lr * g[i];
+            th[i] += v[i];
+        }
+    }
+}
+
+/// AVX2 bodies. Every function is `#[target_feature(enable = "avx2")]`
+/// and only reached through an [`Isa::Avx2`] value, which is only
+/// constructed after `is_x86_feature_detected!("avx2")` succeeded. No
+/// FMA intrinsics — separate `mul`/`add` keep every lane bitwise equal
+/// to the scalar bodies.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    #![allow(clippy::missing_safety_doc)]
+
+    use super::{AdamCoeffs, GEMM_NR};
+    use core::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 4 <= n {
+            acc = _mm256_add_pd(
+                acc,
+                _mm256_mul_pd(_mm256_loadu_pd(ap.add(i)), _mm256_loadu_pd(bp.add(i))),
+            );
+            i += 4;
+        }
+        let mut tail = 0.0;
+        while i < n {
+            tail += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        let mut l = [0.0f64; 4];
+        _mm256_storeu_pd(l.as_mut_ptr(), acc);
+        (l[0] + l[2]) + (l[1] + l[3]) + tail
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum(a: &[f64]) -> f64 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 4 <= n {
+            acc = _mm256_add_pd(acc, _mm256_loadu_pd(ap.add(i)));
+            i += 4;
+        }
+        let mut tail = 0.0;
+        while i < n {
+            tail += *ap.add(i);
+            i += 1;
+        }
+        let mut l = [0.0f64; 4];
+        _mm256_storeu_pd(l.as_mut_ptr(), acc);
+        (l[0] + l[2]) + (l[1] + l[3]) + tail
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+        let n = dst.len();
+        let (dp, ap, bp) = (dst.as_mut_ptr(), a.as_ptr(), b.as_ptr());
+        let mut i = 0;
+        while i + 4 <= n {
+            _mm256_storeu_pd(
+                dp.add(i),
+                _mm256_mul_pd(_mm256_loadu_pd(ap.add(i)), _mm256_loadu_pd(bp.add(i))),
+            );
+            i += 4;
+        }
+        while i < n {
+            *dp.add(i) = *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_into(dst: &mut [f64], c: f64, a: &[f64]) {
+        let n = dst.len();
+        let (dp, ap) = (dst.as_mut_ptr(), a.as_ptr());
+        let cv = _mm256_set1_pd(c);
+        let mut i = 0;
+        while i + 4 <= n {
+            _mm256_storeu_pd(dp.add(i), _mm256_mul_pd(cv, _mm256_loadu_pd(ap.add(i))));
+            i += 4;
+        }
+        while i < n {
+            *dp.add(i) = c * *ap.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mul_assign(dst: &mut [f64], a: &[f64]) {
+        let n = dst.len();
+        let (dp, ap) = (dst.as_mut_ptr(), a.as_ptr());
+        let mut i = 0;
+        while i + 4 <= n {
+            _mm256_storeu_pd(
+                dp.add(i),
+                _mm256_mul_pd(_mm256_loadu_pd(dp.add(i)), _mm256_loadu_pd(ap.add(i))),
+            );
+            i += 4;
+        }
+        while i < n {
+            *dp.add(i) *= *ap.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign(dst: &mut [f64], a: &[f64]) {
+        let n = dst.len();
+        let (dp, ap) = (dst.as_mut_ptr(), a.as_ptr());
+        let mut i = 0;
+        while i + 4 <= n {
+            _mm256_storeu_pd(
+                dp.add(i),
+                _mm256_add_pd(_mm256_loadu_pd(dp.add(i)), _mm256_loadu_pd(ap.add(i))),
+            );
+            i += 4;
+        }
+        while i < n {
+            *dp.add(i) += *ap.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn neg_into(dst: &mut [f64], a: &[f64]) {
+        let n = dst.len();
+        let (dp, ap) = (dst.as_mut_ptr(), a.as_ptr());
+        let sign = _mm256_set1_pd(-0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            _mm256_storeu_pd(dp.add(i), _mm256_xor_pd(_mm256_loadu_pd(ap.add(i)), sign));
+            i += 4;
+        }
+        while i < n {
+            *dp.add(i) = -*ap.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpb_into(dst: &mut [f64], x: f64, w: &[f64], b: &[f64]) {
+        let n = dst.len();
+        let (dp, wp, bp) = (dst.as_mut_ptr(), w.as_ptr(), b.as_ptr());
+        let xv = _mm256_set1_pd(x);
+        let mut i = 0;
+        while i + 4 <= n {
+            _mm256_storeu_pd(
+                dp.add(i),
+                _mm256_add_pd(
+                    _mm256_mul_pd(xv, _mm256_loadu_pd(wp.add(i))),
+                    _mm256_loadu_pd(bp.add(i)),
+                ),
+            );
+            i += 4;
+        }
+        while i < n {
+            *dp.add(i) = x * *wp.add(i) + *bp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xi_acc1(xi: &mut [f64], coeff: f64, ts: &[f64], a: &[f64]) {
+        let n = xi.len();
+        let (xp, tp, ap) = (xi.as_mut_ptr(), ts.as_ptr(), a.as_ptr());
+        let cv = _mm256_set1_pd(coeff);
+        let mut i = 0;
+        while i + 4 <= n {
+            let prod = _mm256_mul_pd(
+                _mm256_mul_pd(cv, _mm256_loadu_pd(tp.add(i))),
+                _mm256_loadu_pd(ap.add(i)),
+            );
+            _mm256_storeu_pd(xp.add(i), _mm256_add_pd(_mm256_loadu_pd(xp.add(i)), prod));
+            i += 4;
+        }
+        while i < n {
+            *xp.add(i) += coeff * *tp.add(i) * *ap.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xi_acc2(xi: &mut [f64], coeff: f64, ts: &[f64], a: &[f64], b: &[f64]) {
+        let n = xi.len();
+        let (xp, tp, ap, bp) = (xi.as_mut_ptr(), ts.as_ptr(), a.as_ptr(), b.as_ptr());
+        let cv = _mm256_set1_pd(coeff);
+        let mut i = 0;
+        while i + 4 <= n {
+            let prod = _mm256_mul_pd(
+                _mm256_mul_pd(
+                    _mm256_mul_pd(cv, _mm256_loadu_pd(tp.add(i))),
+                    _mm256_loadu_pd(ap.add(i)),
+                ),
+                _mm256_loadu_pd(bp.add(i)),
+            );
+            _mm256_storeu_pd(xp.add(i), _mm256_add_pd(_mm256_loadu_pd(xp.add(i)), prod));
+            i += 4;
+        }
+        while i < n {
+            *xp.add(i) += coeff * *tp.add(i) * *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn horner_into(t: &[f64], coeffs: &[f64], out: &mut [f64]) {
+        let n = t.len();
+        let top = coeffs[coeffs.len() - 1];
+        let low = &coeffs[..coeffs.len() - 1];
+        let (tp, op) = (t.as_ptr(), out.as_mut_ptr());
+        let mut i = 0;
+        while i + 4 <= n {
+            let tv = _mm256_loadu_pd(tp.add(i));
+            let mut acc = _mm256_set1_pd(top);
+            for &ci in low.iter().rev() {
+                acc = _mm256_add_pd(_mm256_mul_pd(acc, tv), _mm256_set1_pd(ci));
+            }
+            _mm256_storeu_pd(op.add(i), acc);
+            i += 4;
+        }
+        while i < n {
+            let ti = *tp.add(i);
+            let mut acc = top;
+            for &ci in low.iter().rev() {
+                acc = acc * ti + ci;
+            }
+            *op.add(i) = acc;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn horner_inplace(vals: &mut [f64], coeffs: &[f64]) {
+        let n = vals.len();
+        let top = coeffs[coeffs.len() - 1];
+        let low = &coeffs[..coeffs.len() - 1];
+        let vp = vals.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let tv = _mm256_loadu_pd(vp.add(i));
+            let mut acc = _mm256_set1_pd(top);
+            for &ci in low.iter().rev() {
+                acc = _mm256_add_pd(_mm256_mul_pd(acc, tv), _mm256_set1_pd(ci));
+            }
+            _mm256_storeu_pd(vp.add(i), acc);
+            i += 4;
+        }
+        while i < n {
+            let ti = *vp.add(i);
+            let mut acc = top;
+            for &ci in low.iter().rev() {
+                acc = acc * ti + ci;
+            }
+            *vp.add(i) = acc;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gelu_tail(xs: &[f64], cdf: &[f64], pdf: &[f64], n: usize, out: &mut [f64], stride: usize) {
+        let m = xs.len();
+        let (xp, cp, pp, op) = (xs.as_ptr(), cdf.as_ptr(), pdf.as_ptr(), out.as_mut_ptr());
+        let mut e = 0;
+        while e + 4 <= m {
+            let x = _mm256_loadu_pd(xp.add(e));
+            let c = _mm256_loadu_pd(cp.add(e));
+            _mm256_storeu_pd(op.add(e), _mm256_mul_pd(x, c));
+            if n >= 1 {
+                let p = _mm256_loadu_pd(pp.add(e));
+                _mm256_storeu_pd(op.add(stride + e), _mm256_add_pd(c, _mm256_mul_pd(x, p)));
+                let mut h0 = _mm256_set1_pd(1.0);
+                let mut h1 = x;
+                for k in 2..=n {
+                    let hk = _mm256_sub_pd(
+                        _mm256_mul_pd(x, h1),
+                        _mm256_mul_pd(_mm256_set1_pd((k - 1) as f64), h0),
+                    );
+                    let sign = if (k - 1) % 2 == 0 { 1.0 } else { -1.0 };
+                    _mm256_storeu_pd(
+                        op.add(k * stride + e),
+                        _mm256_mul_pd(
+                            _mm256_mul_pd(_mm256_set1_pd(sign), p),
+                            _mm256_sub_pd(hk, h0),
+                        ),
+                    );
+                    h0 = h1;
+                    h1 = hk;
+                }
+            }
+            e += 4;
+        }
+        while e < m {
+            let x = *xp.add(e);
+            let c = *cp.add(e);
+            *op.add(e) = x * c;
+            if n >= 1 {
+                let p = *pp.add(e);
+                *op.add(stride + e) = c + x * p;
+                let mut h0 = 1.0;
+                let mut h1 = x;
+                for k in 2..=n {
+                    let hk = x * h1 - (k - 1) as f64 * h0;
+                    let sign = if (k - 1) % 2 == 0 { 1.0 } else { -1.0 };
+                    *op.add(k * stride + e) = sign * p * (hk - h0);
+                    h0 = h1;
+                    h1 = hk;
+                }
+            }
+            e += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_micro_4x8(
+        ar: [&[f64]; 4],
+        panel: &[f64],
+        c: &mut [f64],
+        row_stride: usize,
+        first: bool,
+    ) {
+        let mut acc = [[_mm256_setzero_pd(); 2]; 4];
+        for (p, bv) in panel.chunks_exact(GEMM_NR).enumerate() {
+            let b0 = _mm256_loadu_pd(bv.as_ptr());
+            let b1 = _mm256_loadu_pd(bv.as_ptr().add(4));
+            for (accr, row) in acc.iter_mut().zip(&ar) {
+                let a = _mm256_set1_pd(*row.get_unchecked(p));
+                accr[0] = _mm256_add_pd(accr[0], _mm256_mul_pd(a, b0));
+                accr[1] = _mm256_add_pd(accr[1], _mm256_mul_pd(a, b1));
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let co = c.as_mut_ptr().add(r * row_stride);
+            if first {
+                _mm256_storeu_pd(co, accr[0]);
+                _mm256_storeu_pd(co.add(4), accr[1]);
+            } else {
+                _mm256_storeu_pd(co, _mm256_add_pd(_mm256_loadu_pd(co), accr[0]));
+                _mm256_storeu_pd(co.add(4), _mm256_add_pd(_mm256_loadu_pd(co.add(4)), accr[1]));
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn adam_block(m: &mut [f64], v: &mut [f64], th: &mut [f64], g: &[f64], co: AdamCoeffs) {
+        let n = g.len();
+        let (mp, vp, tp, gp) = (m.as_mut_ptr(), v.as_mut_ptr(), th.as_mut_ptr(), g.as_ptr());
+        let b1 = _mm256_set1_pd(co.beta1);
+        let b2 = _mm256_set1_pd(co.beta2);
+        let omb1 = _mm256_set1_pd(1.0 - co.beta1);
+        let omb2 = _mm256_set1_pd(1.0 - co.beta2);
+        let lrt = _mm256_set1_pd(co.lr_t);
+        let eps = _mm256_set1_pd(co.eps);
+        let mut i = 0;
+        while i + 4 <= n {
+            let gv = _mm256_loadu_pd(gp.add(i));
+            let mv = _mm256_add_pd(
+                _mm256_mul_pd(b1, _mm256_loadu_pd(mp.add(i))),
+                _mm256_mul_pd(omb1, gv),
+            );
+            _mm256_storeu_pd(mp.add(i), mv);
+            let vv = _mm256_add_pd(
+                _mm256_mul_pd(b2, _mm256_loadu_pd(vp.add(i))),
+                _mm256_mul_pd(_mm256_mul_pd(omb2, gv), gv),
+            );
+            _mm256_storeu_pd(vp.add(i), vv);
+            let step = _mm256_div_pd(
+                _mm256_mul_pd(lrt, mv),
+                _mm256_add_pd(_mm256_sqrt_pd(vv), eps),
+            );
+            _mm256_storeu_pd(tp.add(i), _mm256_sub_pd(_mm256_loadu_pd(tp.add(i)), step));
+            i += 4;
+        }
+        while i < n {
+            let gi = *gp.add(i);
+            let mi = co.beta1 * *mp.add(i) + (1.0 - co.beta1) * gi;
+            *mp.add(i) = mi;
+            let vi = co.beta2 * *vp.add(i) + (1.0 - co.beta2) * gi * gi;
+            *vp.add(i) = vi;
+            *tp.add(i) -= co.lr_t * mi / (vi.sqrt() + co.eps);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sgd_block(v: &mut [f64], th: &mut [f64], g: &[f64], lr: f64, momentum: f64) {
+        let n = g.len();
+        let (vp, tp, gp) = (v.as_mut_ptr(), th.as_mut_ptr(), g.as_ptr());
+        let mo = _mm256_set1_pd(momentum);
+        let lrv = _mm256_set1_pd(lr);
+        let mut i = 0;
+        while i + 4 <= n {
+            let vv = _mm256_sub_pd(
+                _mm256_mul_pd(mo, _mm256_loadu_pd(vp.add(i))),
+                _mm256_mul_pd(lrv, _mm256_loadu_pd(gp.add(i))),
+            );
+            _mm256_storeu_pd(vp.add(i), vv);
+            _mm256_storeu_pd(tp.add(i), _mm256_add_pd(_mm256_loadu_pd(tp.add(i)), vv));
+            i += 4;
+        }
+        while i < n {
+            let vi = momentum * *vp.add(i) - lr * *gp.add(i);
+            *vp.add(i) = vi;
+            *tp.add(i) += vi;
+            i += 1;
+        }
+    }
+}
+
+/// NEON bodies (aarch64 — NEON is baseline, so detection always
+/// succeeds there). 128-bit registers hold two lanes, so the 4-lane
+/// reduction convention uses a register pair; elementwise kernels step
+/// two lanes at a time. Same no-FMA rule as the AVX2 bodies.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    #![allow(clippy::missing_safety_doc)]
+
+    use super::{AdamCoeffs, GEMM_NR};
+    use core::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        // acc01 carries lanes 0/1, acc23 lanes 2/3 of the 4-lane pattern.
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            acc01 = vaddq_f64(acc01, vmulq_f64(vld1q_f64(ap.add(i)), vld1q_f64(bp.add(i))));
+            acc23 = vaddq_f64(
+                acc23,
+                vmulq_f64(vld1q_f64(ap.add(i + 2)), vld1q_f64(bp.add(i + 2))),
+            );
+            i += 4;
+        }
+        let mut tail = 0.0;
+        while i < n {
+            tail += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        let l = [
+            vgetq_lane_f64::<0>(acc01),
+            vgetq_lane_f64::<1>(acc01),
+            vgetq_lane_f64::<0>(acc23),
+            vgetq_lane_f64::<1>(acc23),
+        ];
+        (l[0] + l[2]) + (l[1] + l[3]) + tail
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sum(a: &[f64]) -> f64 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            acc01 = vaddq_f64(acc01, vld1q_f64(ap.add(i)));
+            acc23 = vaddq_f64(acc23, vld1q_f64(ap.add(i + 2)));
+            i += 4;
+        }
+        let mut tail = 0.0;
+        while i < n {
+            tail += *ap.add(i);
+            i += 1;
+        }
+        let l = [
+            vgetq_lane_f64::<0>(acc01),
+            vgetq_lane_f64::<1>(acc01),
+            vgetq_lane_f64::<0>(acc23),
+            vgetq_lane_f64::<1>(acc23),
+        ];
+        (l[0] + l[2]) + (l[1] + l[3]) + tail
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mul_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+        let n = dst.len();
+        let (dp, ap, bp) = (dst.as_mut_ptr(), a.as_ptr(), b.as_ptr());
+        let mut i = 0;
+        while i + 2 <= n {
+            vst1q_f64(dp.add(i), vmulq_f64(vld1q_f64(ap.add(i)), vld1q_f64(bp.add(i))));
+            i += 2;
+        }
+        while i < n {
+            *dp.add(i) = *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_into(dst: &mut [f64], c: f64, a: &[f64]) {
+        let n = dst.len();
+        let (dp, ap) = (dst.as_mut_ptr(), a.as_ptr());
+        let cv = vdupq_n_f64(c);
+        let mut i = 0;
+        while i + 2 <= n {
+            vst1q_f64(dp.add(i), vmulq_f64(cv, vld1q_f64(ap.add(i))));
+            i += 2;
+        }
+        while i < n {
+            *dp.add(i) = c * *ap.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mul_assign(dst: &mut [f64], a: &[f64]) {
+        let n = dst.len();
+        let (dp, ap) = (dst.as_mut_ptr(), a.as_ptr());
+        let mut i = 0;
+        while i + 2 <= n {
+            vst1q_f64(dp.add(i), vmulq_f64(vld1q_f64(dp.add(i)), vld1q_f64(ap.add(i))));
+            i += 2;
+        }
+        while i < n {
+            *dp.add(i) *= *ap.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn add_assign(dst: &mut [f64], a: &[f64]) {
+        let n = dst.len();
+        let (dp, ap) = (dst.as_mut_ptr(), a.as_ptr());
+        let mut i = 0;
+        while i + 2 <= n {
+            vst1q_f64(dp.add(i), vaddq_f64(vld1q_f64(dp.add(i)), vld1q_f64(ap.add(i))));
+            i += 2;
+        }
+        while i < n {
+            *dp.add(i) += *ap.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn neg_into(dst: &mut [f64], a: &[f64]) {
+        let n = dst.len();
+        let (dp, ap) = (dst.as_mut_ptr(), a.as_ptr());
+        let mut i = 0;
+        while i + 2 <= n {
+            vst1q_f64(dp.add(i), vnegq_f64(vld1q_f64(ap.add(i))));
+            i += 2;
+        }
+        while i < n {
+            *dp.add(i) = -*ap.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpb_into(dst: &mut [f64], x: f64, w: &[f64], b: &[f64]) {
+        let n = dst.len();
+        let (dp, wp, bp) = (dst.as_mut_ptr(), w.as_ptr(), b.as_ptr());
+        let xv = vdupq_n_f64(x);
+        let mut i = 0;
+        while i + 2 <= n {
+            vst1q_f64(
+                dp.add(i),
+                vaddq_f64(vmulq_f64(xv, vld1q_f64(wp.add(i))), vld1q_f64(bp.add(i))),
+            );
+            i += 2;
+        }
+        while i < n {
+            *dp.add(i) = x * *wp.add(i) + *bp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn xi_acc1(xi: &mut [f64], coeff: f64, ts: &[f64], a: &[f64]) {
+        let n = xi.len();
+        let (xp, tp, ap) = (xi.as_mut_ptr(), ts.as_ptr(), a.as_ptr());
+        let cv = vdupq_n_f64(coeff);
+        let mut i = 0;
+        while i + 2 <= n {
+            let prod = vmulq_f64(vmulq_f64(cv, vld1q_f64(tp.add(i))), vld1q_f64(ap.add(i)));
+            vst1q_f64(xp.add(i), vaddq_f64(vld1q_f64(xp.add(i)), prod));
+            i += 2;
+        }
+        while i < n {
+            *xp.add(i) += coeff * *tp.add(i) * *ap.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn xi_acc2(xi: &mut [f64], coeff: f64, ts: &[f64], a: &[f64], b: &[f64]) {
+        let n = xi.len();
+        let (xp, tp, ap, bp) = (xi.as_mut_ptr(), ts.as_ptr(), a.as_ptr(), b.as_ptr());
+        let cv = vdupq_n_f64(coeff);
+        let mut i = 0;
+        while i + 2 <= n {
+            let prod = vmulq_f64(
+                vmulq_f64(vmulq_f64(cv, vld1q_f64(tp.add(i))), vld1q_f64(ap.add(i))),
+                vld1q_f64(bp.add(i)),
+            );
+            vst1q_f64(xp.add(i), vaddq_f64(vld1q_f64(xp.add(i)), prod));
+            i += 2;
+        }
+        while i < n {
+            *xp.add(i) += coeff * *tp.add(i) * *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn horner_into(t: &[f64], coeffs: &[f64], out: &mut [f64]) {
+        let n = t.len();
+        let top = coeffs[coeffs.len() - 1];
+        let low = &coeffs[..coeffs.len() - 1];
+        let (tp, op) = (t.as_ptr(), out.as_mut_ptr());
+        let mut i = 0;
+        while i + 2 <= n {
+            let tv = vld1q_f64(tp.add(i));
+            let mut acc = vdupq_n_f64(top);
+            for &ci in low.iter().rev() {
+                acc = vaddq_f64(vmulq_f64(acc, tv), vdupq_n_f64(ci));
+            }
+            vst1q_f64(op.add(i), acc);
+            i += 2;
+        }
+        while i < n {
+            let ti = *tp.add(i);
+            let mut acc = top;
+            for &ci in low.iter().rev() {
+                acc = acc * ti + ci;
+            }
+            *op.add(i) = acc;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn horner_inplace(vals: &mut [f64], coeffs: &[f64]) {
+        let n = vals.len();
+        let top = coeffs[coeffs.len() - 1];
+        let low = &coeffs[..coeffs.len() - 1];
+        let vp = vals.as_mut_ptr();
+        let mut i = 0;
+        while i + 2 <= n {
+            let tv = vld1q_f64(vp.add(i));
+            let mut acc = vdupq_n_f64(top);
+            for &ci in low.iter().rev() {
+                acc = vaddq_f64(vmulq_f64(acc, tv), vdupq_n_f64(ci));
+            }
+            vst1q_f64(vp.add(i), acc);
+            i += 2;
+        }
+        while i < n {
+            let ti = *vp.add(i);
+            let mut acc = top;
+            for &ci in low.iter().rev() {
+                acc = acc * ti + ci;
+            }
+            *vp.add(i) = acc;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gelu_tail(xs: &[f64], cdf: &[f64], pdf: &[f64], n: usize, out: &mut [f64], stride: usize) {
+        let m = xs.len();
+        let (xp, cp, pp, op) = (xs.as_ptr(), cdf.as_ptr(), pdf.as_ptr(), out.as_mut_ptr());
+        let mut e = 0;
+        while e + 2 <= m {
+            let x = vld1q_f64(xp.add(e));
+            let c = vld1q_f64(cp.add(e));
+            vst1q_f64(op.add(e), vmulq_f64(x, c));
+            if n >= 1 {
+                let p = vld1q_f64(pp.add(e));
+                vst1q_f64(op.add(stride + e), vaddq_f64(c, vmulq_f64(x, p)));
+                let mut h0 = vdupq_n_f64(1.0);
+                let mut h1 = x;
+                for k in 2..=n {
+                    let hk = vsubq_f64(
+                        vmulq_f64(x, h1),
+                        vmulq_f64(vdupq_n_f64((k - 1) as f64), h0),
+                    );
+                    let sign = if (k - 1) % 2 == 0 { 1.0 } else { -1.0 };
+                    vst1q_f64(
+                        op.add(k * stride + e),
+                        vmulq_f64(vmulq_f64(vdupq_n_f64(sign), p), vsubq_f64(hk, h0)),
+                    );
+                    h0 = h1;
+                    h1 = hk;
+                }
+            }
+            e += 2;
+        }
+        while e < m {
+            let x = *xp.add(e);
+            let c = *cp.add(e);
+            *op.add(e) = x * c;
+            if n >= 1 {
+                let p = *pp.add(e);
+                *op.add(stride + e) = c + x * p;
+                let mut h0 = 1.0;
+                let mut h1 = x;
+                for k in 2..=n {
+                    let hk = x * h1 - (k - 1) as f64 * h0;
+                    let sign = if (k - 1) % 2 == 0 { 1.0 } else { -1.0 };
+                    *op.add(k * stride + e) = sign * p * (hk - h0);
+                    h0 = h1;
+                    h1 = hk;
+                }
+            }
+            e += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_micro_4x8(
+        ar: [&[f64]; 4],
+        panel: &[f64],
+        c: &mut [f64],
+        row_stride: usize,
+        first: bool,
+    ) {
+        let mut acc = [[vdupq_n_f64(0.0); 4]; 4];
+        for (p, bv) in panel.chunks_exact(GEMM_NR).enumerate() {
+            let b = [
+                vld1q_f64(bv.as_ptr()),
+                vld1q_f64(bv.as_ptr().add(2)),
+                vld1q_f64(bv.as_ptr().add(4)),
+                vld1q_f64(bv.as_ptr().add(6)),
+            ];
+            for (accr, row) in acc.iter_mut().zip(&ar) {
+                let a = vdupq_n_f64(*row.get_unchecked(p));
+                for (o, &bb) in accr.iter_mut().zip(&b) {
+                    *o = vaddq_f64(*o, vmulq_f64(a, bb));
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let co = c.as_mut_ptr().add(r * row_stride);
+            if first {
+                for (q, &v) in accr.iter().enumerate() {
+                    vst1q_f64(co.add(2 * q), v);
+                }
+            } else {
+                for (q, &v) in accr.iter().enumerate() {
+                    let pq = co.add(2 * q);
+                    vst1q_f64(pq, vaddq_f64(vld1q_f64(pq), v));
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn adam_block(m: &mut [f64], v: &mut [f64], th: &mut [f64], g: &[f64], co: AdamCoeffs) {
+        let n = g.len();
+        let (mp, vp, tp, gp) = (m.as_mut_ptr(), v.as_mut_ptr(), th.as_mut_ptr(), g.as_ptr());
+        let b1 = vdupq_n_f64(co.beta1);
+        let b2 = vdupq_n_f64(co.beta2);
+        let omb1 = vdupq_n_f64(1.0 - co.beta1);
+        let omb2 = vdupq_n_f64(1.0 - co.beta2);
+        let lrt = vdupq_n_f64(co.lr_t);
+        let eps = vdupq_n_f64(co.eps);
+        let mut i = 0;
+        while i + 2 <= n {
+            let gv = vld1q_f64(gp.add(i));
+            let mv = vaddq_f64(vmulq_f64(b1, vld1q_f64(mp.add(i))), vmulq_f64(omb1, gv));
+            vst1q_f64(mp.add(i), mv);
+            let vv = vaddq_f64(
+                vmulq_f64(b2, vld1q_f64(vp.add(i))),
+                vmulq_f64(vmulq_f64(omb2, gv), gv),
+            );
+            vst1q_f64(vp.add(i), vv);
+            let step = vdivq_f64(vmulq_f64(lrt, mv), vaddq_f64(vsqrtq_f64(vv), eps));
+            vst1q_f64(tp.add(i), vsubq_f64(vld1q_f64(tp.add(i)), step));
+            i += 2;
+        }
+        while i < n {
+            let gi = *gp.add(i);
+            let mi = co.beta1 * *mp.add(i) + (1.0 - co.beta1) * gi;
+            *mp.add(i) = mi;
+            let vi = co.beta2 * *vp.add(i) + (1.0 - co.beta2) * gi * gi;
+            *vp.add(i) = vi;
+            *tp.add(i) -= co.lr_t * mi / (vi.sqrt() + co.eps);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sgd_block(v: &mut [f64], th: &mut [f64], g: &[f64], lr: f64, momentum: f64) {
+        let n = g.len();
+        let (vp, tp, gp) = (v.as_mut_ptr(), th.as_mut_ptr(), g.as_ptr());
+        let mo = vdupq_n_f64(momentum);
+        let lrv = vdupq_n_f64(lr);
+        let mut i = 0;
+        while i + 2 <= n {
+            let vv = vsubq_f64(
+                vmulq_f64(mo, vld1q_f64(vp.add(i))),
+                vmulq_f64(lrv, vld1q_f64(gp.add(i))),
+            );
+            vst1q_f64(vp.add(i), vv);
+            vst1q_f64(tp.add(i), vaddq_f64(vld1q_f64(tp.add(i)), vv));
+            i += 2;
+        }
+        while i < n {
+            let vi = momentum * *vp.add(i) - lr * *gp.add(i);
+            *vp.add(i) = vi;
+            *tp.add(i) += vi;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn resolve_honors_explicit_requests() {
+        assert_eq!(Isa::resolve(Some("scalar")), Isa::Scalar);
+        assert_eq!(Isa::resolve(Some(" Scalar ")), Isa::Scalar);
+        assert_eq!(Isa::resolve(None), Isa::detect());
+        assert_eq!(Isa::resolve(Some("auto")), Isa::detect());
+        assert_eq!(Isa::resolve(Some("definitely-not-an-isa")), Isa::detect());
+        if let Some(v) = Isa::vector() {
+            assert_eq!(Isa::resolve(Some(v.name())), v);
+        }
+        // An explicitly requested vector ISA the host cannot run falls
+        // back to scalar instead of crashing.
+        #[cfg(not(target_arch = "aarch64"))]
+        assert_eq!(Isa::resolve(Some("neon")), Isa::Scalar);
+        #[cfg(not(target_arch = "x86_64"))]
+        assert_eq!(Isa::resolve(Some("avx2")), Isa::Scalar);
+    }
+
+    #[test]
+    fn names_roundtrip_through_resolve() {
+        assert_eq!(Isa::resolve(Some(Isa::Scalar.name())), Isa::Scalar);
+        assert_eq!(Isa::active(), Isa::active(), "active() is stable");
+    }
+
+    /// Every elementwise kernel is bitwise scalar == vector at lengths
+    /// that exercise both the vector body and its scalar tail.
+    #[test]
+    fn elementwise_kernels_match_scalar_bitwise() {
+        let Some(v) = Isa::vector() else {
+            eprintln!("skipping: no vector ISA on this host");
+            return;
+        };
+        let mut rng = Prng::seeded(0x51D);
+        for len in [1usize, 2, 3, 4, 5, 7, 8, 31, 128, 1001] {
+            let a = rng.normal_vec(len, 0.0, 1.0);
+            let b = rng.normal_vec(len, 0.0, 1.0);
+            let base = rng.normal_vec(len, 0.0, 1.0);
+
+            let pairs: [(&str, fn(Isa, &mut [f64], &[f64], &[f64]) -> ()); 4] = [
+                ("mul_into", |isa, d, x, y| isa.mul_into(d, x, y)),
+                ("add_assign", |isa, d, x, _| isa.add_assign(d, x)),
+                ("mul_assign", |isa, d, x, _| isa.mul_assign(d, x)),
+                ("neg_into", |isa, d, x, _| isa.neg_into(d, x)),
+            ];
+            for (name, k) in pairs {
+                let mut ds = base.clone();
+                let mut dv = base.clone();
+                k(Isa::Scalar, &mut ds, &a, &b);
+                k(v, &mut dv, &a, &b);
+                assert_eq!(ds, dv, "{name} len={len}");
+            }
+
+            assert_eq!(
+                Isa::Scalar.dot(&a, &b).to_bits(),
+                v.dot(&a, &b).to_bits(),
+                "dot len={len}"
+            );
+            assert_eq!(Isa::Scalar.sum(&a).to_bits(), v.sum(&a).to_bits(), "sum len={len}");
+
+            let mut xs = base.clone();
+            let mut xv = base.clone();
+            Isa::Scalar.xi_acc2(&mut xs, 1.75, &a, &b, &base.clone());
+            v.xi_acc2(&mut xv, 1.75, &a, &b, &base.clone());
+            assert_eq!(xs, xv, "xi_acc2 len={len}");
+
+            let coeffs = [0.5, -1.25, 2.0, 0.125, -0.75];
+            let mut hs = vec![0.0; len];
+            let mut hv = vec![0.0; len];
+            Isa::Scalar.horner_into(&a, &coeffs, &mut hs);
+            v.horner_into(&a, &coeffs, &mut hv);
+            assert_eq!(hs, hv, "horner len={len}");
+        }
+    }
+}

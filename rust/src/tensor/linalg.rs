@@ -6,6 +6,7 @@
 //! no explicit transposed copies are materialized on the training hot path.
 
 use super::Tensor;
+use crate::simd::Isa;
 
 /// Square tile edge of the cache-blocked [`Tensor::transpose`]: a 32×32
 /// f64 tile is 8 KB read + 8 KB written, so both the row-major reads and
@@ -122,8 +123,9 @@ pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
 const GEMM_KC: usize = 256;
 /// Output columns (rows of the NT-form `B`) per cache block.
 const GEMM_NC: usize = 64;
-/// Output columns per packed `B` panel / microkernel invocation.
-const GEMM_NR: usize = 8;
+/// Output columns per packed `B` panel / microkernel invocation (also
+/// the panel width the `simd` microkernel bodies are written against).
+pub(crate) const GEMM_NR: usize = 8;
 
 /// Blocked `C = A @ B^T` into a caller-owned buffer, for `A:[m,k]`,
 /// `B:[n,k]`, `C:[m,n]`, all row-major — the fused n-TangentProp
@@ -149,6 +151,26 @@ const GEMM_NR: usize = 8;
 /// `k` once `k > GEMM_KC`, and retuning `GEMM_KC` changes rounding for
 /// such shapes.)
 pub fn matmul_nt_block_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    matmul_nt_block_into_with(Isa::active(), a, b, c, m, k, n);
+}
+
+/// [`matmul_nt_block_into`] with an explicit [`Isa`] instead of the
+/// process-wide one — the fused engine threads its construction-time ISA
+/// through here, and the dispatch tests pit scalar against vector
+/// microkernels in one process. The determinism contract above holds
+/// *per element and per ISA by construction of the microkernels*: every
+/// vector body keeps one ascending-k accumulator chain per output
+/// element (vectorizing across the 8 output columns, never across k), so
+/// scalar and vector results are bitwise identical.
+pub fn matmul_nt_block_into_with(
+    isa: Isa,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
@@ -182,7 +204,7 @@ pub fn matmul_nt_block_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: us
                         &a[(i + 2) * k + kb..(i + 2) * k + kb + kl],
                         &a[(i + 3) * k + kb..(i + 3) * k + kb + kl],
                     ];
-                    nt_micro_4x8(ar, &panel[..GEMM_NR * kl], c, n, i, jj, first);
+                    isa.gemm_micro_4x8(ar, &panel[..GEMM_NR * kl], &mut c[i * n + jj..], n, first);
                     i += 4;
                 }
                 while i < m {
@@ -212,43 +234,6 @@ pub fn matmul_nt_block_into(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: us
                     );
                 }
                 j += 1;
-            }
-        }
-    }
-}
-
-/// 4×8 register-blocked microkernel of [`matmul_nt_block_into`]: 32
-/// independent single-accumulator chains over the shared k-slices. The
-/// `B` operand arrives as a packed k-major panel (`panel[p*8 + q]` =
-/// column `q` at k-step `p`), so every inner-loop load is contiguous.
-#[inline]
-fn nt_micro_4x8(
-    ar: [&[f64]; 4],
-    panel: &[f64],
-    c: &mut [f64],
-    n: usize,
-    i0: usize,
-    j0: usize,
-    first: bool,
-) {
-    let kl = ar[0].len();
-    debug_assert_eq!(panel.len(), GEMM_NR * kl);
-    let mut acc = [[0.0f64; GEMM_NR]; 4];
-    for (p, bv) in panel.chunks_exact(GEMM_NR).enumerate() {
-        let av = [ar[0][p], ar[1][p], ar[2][p], ar[3][p]];
-        for (accr, &a) in acc.iter_mut().zip(&av) {
-            for (o, &b) in accr.iter_mut().zip(bv) {
-                *o += a * b;
-            }
-        }
-    }
-    for (r, accr) in acc.iter().enumerate() {
-        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + GEMM_NR];
-        if first {
-            crow.copy_from_slice(accr);
-        } else {
-            for (o, &v) in crow.iter_mut().zip(accr) {
-                *o += v;
             }
         }
     }

@@ -25,6 +25,7 @@
 //! between serial and multi-threaded training.
 
 use crate::ntp::ParallelPolicy;
+use crate::simd::Isa;
 
 /// Element count per partial-sum chunk in [`det_dot`] / [`det_sum`].
 ///
@@ -176,7 +177,9 @@ pub fn tree_reduce<T>(items: Vec<T>, mut f: impl FnMut(T, T) -> T) -> Option<T> 
 /// `Σ a[i]·b[i]` with a thread-count-invariant summation order.
 ///
 /// Partial sums are taken over fixed [`REDUCE_CHUNK`]-element windows
-/// (computed serially within each window) and combined with
+/// (each window runs the dispatched fixed 4-lane reduction kernel,
+/// [`Isa::dot`] — the lane pattern is part of the bitwise contract, so
+/// every ISA produces the same partials) and combined with
 /// [`tree_reduce`]; `policy` only decides how many threads compute the
 /// windows, so every policy — `Serial` included — returns the same bits.
 /// Threads only engage on large vectors (≥ ~64 chunks); smaller
@@ -184,24 +187,14 @@ pub fn tree_reduce<T>(items: Vec<T>, mut f: impl FnMut(T, T) -> T) -> Option<T> 
 /// is bit-identical either way.
 pub fn det_dot(a: &[f64], b: &[f64], policy: ParallelPolicy) -> f64 {
     assert_eq!(a.len(), b.len(), "det_dot: length mismatch");
-    det_chunked(a.len(), policy, |lo, hi| {
-        let mut acc = 0.0;
-        for i in lo..hi {
-            acc += a[i] * b[i];
-        }
-        acc
-    })
+    let isa = Isa::active();
+    det_chunked(a.len(), policy, |lo, hi| isa.dot(&a[lo..hi], &b[lo..hi]))
 }
 
 /// `Σ a[i]` with the same thread-count-invariant order as [`det_dot`].
 pub fn det_sum(a: &[f64], policy: ParallelPolicy) -> f64 {
-    det_chunked(a.len(), policy, |lo, hi| {
-        let mut acc = 0.0;
-        for &v in &a[lo..hi] {
-            acc += v;
-        }
-        acc
-    })
+    let isa = Isa::active();
+    det_chunked(a.len(), policy, |lo, hi| isa.sum(&a[lo..hi]))
 }
 
 /// Minimum chunk count before a reduction engages worker threads: below

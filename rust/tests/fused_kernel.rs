@@ -8,13 +8,17 @@
 use ntangent::nn::Mlp;
 use ntangent::ntp::{ActivationKind, NtpEngine, ParallelPolicy};
 use ntangent::tensor::{alloc, Tensor};
+use ntangent::util::allclose_slice;
 use ntangent::util::prng::Prng;
-use ntangent::util::{allclose_slice, ptest};
+#[cfg(feature = "reference-oracle")]
+use ntangent::util::ptest;
 
 /// The tentpole differential property: fused == reference to ≤ 1e-12,
 /// for every registered activation, random architectures, ragged batch
 /// sizes (straddling the 128-element tile on the `[B·width]` plane) and
-/// every truncation `n ≤ n_max`.
+/// every truncation `n ≤ n_max`. The oracle lives behind the
+/// `reference-oracle` feature; CI runs this sweep in the featured job.
+#[cfg(feature = "reference-oracle")]
 #[test]
 fn fused_forward_matches_reference_for_all_activations() {
     for kind in ActivationKind::ALL {

@@ -1,0 +1,243 @@
+//! Bitwise scalar-vs-SIMD identity for the runtime-dispatched kernels.
+//!
+//! The SIMD contract (see `docs/ARCHITECTURE.md`, "SIMD dispatch and the
+//! bitwise contract") is that every vector body performs the exact same
+//! IEEE-754 roundings in the exact same order as its scalar fallback, so
+//! `NTANGENT_SIMD=scalar` and any vector ISA produce identical bits.
+//! These tests pin a scalar engine and a vector engine in one process
+//! (via `NtpEngine::with_isa`) and demand `to_bits` equality at
+//! tile-straddling shapes, for all four activations, and through the
+//! public GEMM / reduction / optimizer entry points.
+//!
+//! On hosts without a vector ISA (or under `NTANGENT_SIMD=scalar` builds
+//! of CI's forced-scalar job) the vector half is skipped — `Isa::vector`
+//! returns `None` — and only the dispatch-plumbing assertions run.
+
+use ntangent::nn::Mlp;
+use ntangent::ntp::{ActivationKind, NtpEngine, ParallelPolicy, SmoothActivation};
+use ntangent::simd::{AdamCoeffs, Isa};
+use ntangent::tensor::{linalg, Tensor};
+use ntangent::util::prng::Prng;
+
+/// `eprintln` + return when the host can only run scalar code: the CI
+/// matrix covers a vector host, so skipping locally costs no coverage.
+macro_rules! vector_or_skip {
+    () => {
+        match Isa::vector() {
+            Some(v) => v,
+            None => {
+                eprintln!("skipping: no vector ISA on this host");
+                return;
+            }
+        }
+    };
+}
+
+/// The whole fused engine path — towers, power fills, the compiled
+/// Faà di Bruno interpreter and the stacked GEMM — is bitwise
+/// ISA-invariant for every activation, at batches straddling the
+/// 128-element tile, including truncated orders. A parallel vector
+/// engine rides along: SIMD must not perturb chunked determinism.
+#[test]
+fn engine_forward_is_bitwise_isa_invariant() {
+    let vec_isa = vector_or_skip!();
+    for kind in ActivationKind::ALL {
+        let mut rng = Prng::seeded(0x51D0 + kind.index() as u64);
+        let mlp = Mlp::uniform_with(1, 24, 3, 1, kind, &mut rng);
+        let scalar = NtpEngine::with_isa(8, ParallelPolicy::Serial, Isa::Scalar);
+        let vector = NtpEngine::with_isa(8, ParallelPolicy::Serial, vec_isa);
+        let vector_par = NtpEngine::with_isa(8, ParallelPolicy::Fixed(3), vec_isa);
+        assert_eq!(scalar.isa(), Isa::Scalar);
+        assert_eq!(vector.isa(), vec_isa);
+        for batch in [1usize, 5, 6, 32, 129] {
+            let x = Tensor::rand_uniform(&[batch, 1], -1.5, 1.5, &mut rng);
+            for n in [0usize, 1, 4, 8] {
+                let want = scalar.forward_n(&mlp, &x, n);
+                let got = vector.forward_n(&mlp, &x, n);
+                let got_par = vector_par.forward_n(&mlp, &x, n);
+                for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(a, b, "{} B={batch} n={n} channel {k}", kind.name());
+                }
+                for (k, (a, b)) in want.iter().zip(&got_par).enumerate() {
+                    assert_eq!(a, b, "{} B={batch} n={n} channel {k} (par)", kind.name());
+                }
+            }
+        }
+    }
+}
+
+/// The directional-jet path (stacked `[x; v]` seed GEMM + the same fused
+/// kernel) is bitwise ISA-invariant for multi-input networks.
+#[test]
+fn directional_jets_are_bitwise_isa_invariant() {
+    let vec_isa = vector_or_skip!();
+    for kind in ActivationKind::ALL {
+        let mut rng = Prng::seeded(0xD19 + kind.index() as u64);
+        let mlp = Mlp::uniform_with(3, 16, 2, 1, kind, &mut rng);
+        let scalar = NtpEngine::with_isa(6, ParallelPolicy::Serial, Isa::Scalar);
+        let vector = NtpEngine::with_isa(6, ParallelPolicy::Serial, vec_isa);
+        for batch in [1usize, 7, 40] {
+            let x = Tensor::rand_uniform(&[batch, 3], -1.0, 1.0, &mut rng);
+            let v = Tensor::rand_uniform(&[batch, 3], -1.0, 1.0, &mut rng);
+            for n in [0usize, 1, 3, 6] {
+                let want = scalar.forward_directional(&mlp, &x, &v, n);
+                let got = vector.forward_directional(&mlp, &x, &v, n);
+                for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(a, b, "{} B={batch} n={n} channel {k}", kind.name());
+                }
+            }
+        }
+    }
+}
+
+/// The blocked GEMM through its ISA-pinned entry point: every shape —
+/// micro-tile remainders in m and n, KC-straddling k — produces the
+/// same bits under the vector micro-kernel as under the scalar one.
+#[test]
+fn blocked_gemm_is_bitwise_isa_invariant() {
+    let vec_isa = vector_or_skip!();
+    let mut rng = Prng::seeded(0x6E33);
+    for (m, k, n) in [
+        (1usize, 7usize, 1usize),
+        (3, 9, 8),
+        (5, 64, 9),
+        (12, 200, 19),
+        (4, 256, 8),
+        (23, 300, 70),
+    ] {
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(n * k, 0.0, 1.0);
+        // Different poison values so any cell left unwritten by either
+        // path shows up as a mismatch (NAN would compare bit-equal).
+        let mut c_scalar = vec![1.25f64; m * n];
+        let mut c_vector = vec![-9.5f64; m * n];
+        linalg::matmul_nt_block_into_with(Isa::Scalar, &a, &b, &mut c_scalar, m, k, n);
+        linalg::matmul_nt_block_into_with(vec_isa, &a, &b, &mut c_vector, m, k, n);
+        for (i, (x, y)) in c_scalar.iter().zip(&c_vector).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "[{m}x{k}]x[{n}x{k}] cell {i}: scalar {x} vs vector {y}"
+            );
+        }
+    }
+}
+
+/// Reductions: the vector `dot`/`sum` reproduce the fixed 4-lane scalar
+/// pattern exactly, at lengths around the unroll and tail boundaries.
+#[test]
+fn reductions_are_bitwise_isa_invariant() {
+    let vec_isa = vector_or_skip!();
+    let mut rng = Prng::seeded(0x0D07);
+    for len in [0usize, 1, 3, 4, 5, 1023, 1024, 1025, 4096] {
+        let a = rng.normal_vec(len, 0.0, 1.0);
+        let b = rng.normal_vec(len, 0.0, 1.0);
+        let want_dot = Isa::Scalar.dot(&a, &b);
+        // The scalar arm is the historical `dot_unrolled` — the lane
+        // convention every ISA must reproduce.
+        assert_eq!(want_dot.to_bits(), linalg::dot_unrolled(&a, &b).to_bits(), "len={len}");
+        assert_eq!(want_dot.to_bits(), vec_isa.dot(&a, &b).to_bits(), "dot len={len}");
+        assert_eq!(
+            Isa::Scalar.sum(&a).to_bits(),
+            vec_isa.sum(&a).to_bits(),
+            "sum len={len}"
+        );
+    }
+}
+
+/// Optimizer block updates (Adam moments + parameter step, SGD momentum)
+/// are bitwise ISA-invariant on cloned state, across tail lengths.
+#[test]
+fn optimizer_blocks_are_bitwise_isa_invariant() {
+    let vec_isa = vector_or_skip!();
+    let co = AdamCoeffs { beta1: 0.9, beta2: 0.999, lr_t: 0.01, eps: 1e-8 };
+    for len in [1usize, 3, 4, 127, 1024, 4097] {
+        let mut rng = Prng::seeded(0xADA0 + len as u64);
+        let g = rng.normal_vec(len, 0.0, 1.0);
+        let m0 = rng.normal_vec(len, 0.0, 0.1);
+        let v0: Vec<f64> = rng.normal_vec(len, 0.0, 0.1).iter().map(|x| x * x).collect();
+        let th0 = rng.normal_vec(len, 0.0, 1.0);
+
+        let (mut ms, mut vs, mut ths) = (m0.clone(), v0.clone(), th0.clone());
+        let (mut mv, mut vv, mut thv) = (m0.clone(), v0.clone(), th0.clone());
+        Isa::Scalar.adam_block(&mut ms, &mut vs, &mut ths, &g, co);
+        vec_isa.adam_block(&mut mv, &mut vv, &mut thv, &g, co);
+        for i in 0..len {
+            assert_eq!(ms[i].to_bits(), mv[i].to_bits(), "adam m len={len} i={i}");
+            assert_eq!(vs[i].to_bits(), vv[i].to_bits(), "adam v len={len} i={i}");
+            assert_eq!(ths[i].to_bits(), thv[i].to_bits(), "adam th len={len} i={i}");
+        }
+
+        let (mut vel_s, mut th_s) = (m0.clone(), th0.clone());
+        let (mut vel_v, mut th_v) = (m0.clone(), th0.clone());
+        Isa::Scalar.sgd_block(&mut vel_s, &mut th_s, &g, 0.05, 0.9);
+        vec_isa.sgd_block(&mut vel_v, &mut th_v, &g, 0.05, 0.9);
+        for i in 0..len {
+            assert_eq!(vel_s[i].to_bits(), vel_v[i].to_bits(), "sgd v len={len} i={i}");
+            assert_eq!(th_s[i].to_bits(), th_v[i].to_bits(), "sgd th len={len} i={i}");
+        }
+    }
+}
+
+/// Activation derivative towers through the strided `tower_into` entry
+/// point: every activation's tower planes are bitwise ISA-invariant at
+/// partial-tile lengths (only the written cells are compared — the rest
+/// of the out buffer is poisoned differently per run).
+#[test]
+fn activation_towers_are_bitwise_isa_invariant() {
+    let vec_isa = vector_or_skip!();
+    const STRIDE: usize = 128;
+    for kind in ActivationKind::ALL {
+        let act = kind.build_tower(8);
+        let mut rng = Prng::seeded(0x70E + kind.index() as u64);
+        for n in [0usize, 1, 2, 5, 8] {
+            for len in [1usize, 3, 4, 11, 128] {
+                let xs = rng.normal_vec(len, 0.0, 1.5);
+                let mut out_s = vec![7.5f64; (n + 1) * STRIDE];
+                let mut out_v = vec![-2.5f64; (n + 1) * STRIDE];
+                act.tower_into(&xs, n, &mut out_s, STRIDE, Isa::Scalar);
+                act.tower_into(&xs, n, &mut out_v, STRIDE, vec_isa);
+                for k in 0..=n {
+                    for e in 0..len {
+                        let (a, b) = (out_s[k * STRIDE + e], out_v[k * STRIDE + e]);
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{} n={n} len={len} plane {k} elem {e}: {a} vs {b}",
+                            kind.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch plumbing: `resolve` honors explicit requests, falls back to
+/// detection for `auto`/unknown, and the process-wide `Isa::active` is
+/// exactly `resolve` applied to the `NTANGENT_SIMD` the process was
+/// started with — which is what lets CI force scalar or vector runs of
+/// this whole suite through the environment. Runs on every host.
+#[test]
+fn env_override_reaches_the_dispatcher() {
+    assert_eq!(Isa::resolve(Some("scalar")), Isa::Scalar);
+    assert_eq!(Isa::resolve(Some(" SCALAR ")), Isa::Scalar);
+    assert_eq!(Isa::resolve(None), Isa::detect());
+    assert_eq!(Isa::resolve(Some("auto")), Isa::detect());
+    assert_eq!(Isa::resolve(Some("definitely-not-an-isa")), Isa::detect());
+    // A vector request is honored iff the host can run it; the name
+    // round-trips through resolve either way.
+    if let Some(v) = Isa::vector() {
+        assert_eq!(Isa::resolve(Some(v.name())), v);
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    assert_eq!(Isa::resolve(Some("neon")), Isa::Scalar);
+    #[cfg(not(target_arch = "x86_64"))]
+    assert_eq!(Isa::resolve(Some("avx2")), Isa::Scalar);
+    // No test in this binary mutates NTANGENT_SIMD, so the cached
+    // process-wide choice must agree with re-resolving the environment.
+    assert_eq!(
+        Isa::active(),
+        Isa::resolve(std::env::var("NTANGENT_SIMD").ok().as_deref())
+    );
+}
