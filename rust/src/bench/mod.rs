@@ -14,6 +14,7 @@
 //! | serial vs parallel training | [`train_par::run`] | `results/training_speedup.csv` |
 //! | fused vs reference kernel  | `kernels::run` (needs `--features reference-oracle`) | `results/kernel_speedup.csv` + `BENCH_kernels.json` |
 //! | directional vs nested-tape operators | [`operators::run`] | `results/operator_speedup.csv` + `BENCH_operators.json` |
+//! | TCP serving load (pipelining + plan cache) | [`serve::run`] | `results/serve_load.csv` + `BENCH_serve.json` |
 //!
 //! Absolute times differ from the paper (single CPU host vs A6000 GPU);
 //! the *shapes* — exponential vs quasilinear in `n`, crossover at small
@@ -28,6 +29,7 @@ pub mod operators;
 pub mod parallel;
 pub mod passes;
 pub mod profiles;
+pub mod serve;
 pub mod train_par;
 pub mod training;
 

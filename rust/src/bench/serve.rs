@@ -1,0 +1,583 @@
+//! `bench serve`: closed-loop load benchmark of the TCP serving stack
+//! (`ntangent bench serve`, `results/serve_load.csv`; `--json
+//! BENCH_serve.json` writes the machine-readable document CI's
+//! `bench-smoke` job exercises).
+//!
+//! Three legs, all over real TCP loopback with the production
+//! [`crate::coordinator::serve_tcp_with`] stack:
+//!
+//! - **mixed**: `requests` pipelined requests across `connections`
+//!   persistent connections, each keeping `window` requests in flight —
+//!   ~70% scalar derivative-stack requests with randomized activation
+//!   overrides, ~30% one-dimensional operator requests, and a stats
+//!   probe sprinkled in — reporting throughput and p50/p95/p99 latency;
+//! - **operator_cached**: pipelined 2-D Laplacian operator requests
+//!   against the default (plan/operator-cached) [`OperatorServer`];
+//! - **operator_uncached**: the pre-cache baseline — a fresh connection
+//!   *and* a fresh operator + engine compile per request
+//!   ([`OperatorServer::uncached`], no pipelining).
+//!
+//! The ratio of the two operator throughputs
+//! ([`operator_speedup`]) is the serving-cache acceptance number
+//! (`BENCH_serve.json` / `operator_speedup`, expected ≥ 2).
+
+use crate::coordinator::{
+    protocol, serve_tcp_with, BatcherConfig, EvalBackend, NativeBackend, OperatorServer, Service,
+    ServiceHandle, TcpClient,
+};
+use crate::nn::Mlp;
+use crate::ntp::{ActivationKind, ParallelPolicy};
+use crate::util::csv::Table;
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use std::collections::VecDeque;
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Configuration of the serving load benchmark.
+#[derive(Clone, Debug)]
+pub struct ServeBenchConfig {
+    /// Total requests of the mixed pipelined leg.
+    pub requests: usize,
+    /// Persistent connections (client threads) for the pipelined legs.
+    pub connections: usize,
+    /// Requests each connection keeps in flight.
+    pub window: usize,
+    /// Points per scalar request.
+    pub points: usize,
+    /// Requests of the cached-operator pipelined leg.
+    pub operator_requests: usize,
+    /// Requests of the uncached one-shot baseline leg.
+    pub baseline_requests: usize,
+    /// Hidden width of the served models.
+    pub width: usize,
+    /// Hidden depth of the served models.
+    pub depth: usize,
+    /// Batcher workers behind the mixed endpoint.
+    pub workers: usize,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> Self {
+        // The acceptance shape: O(10^5) pipelined requests end to end.
+        ServeBenchConfig {
+            requests: 100_000,
+            connections: 4,
+            window: 64,
+            points: 8,
+            operator_requests: 4_000,
+            baseline_requests: 300,
+            width: 24,
+            depth: 3,
+            workers: 2,
+            seed: 31,
+        }
+    }
+}
+
+impl ServeBenchConfig {
+    /// The CI smoke shape: same legs and protocol path, seconds-budget
+    /// sizes.
+    pub fn smoke() -> ServeBenchConfig {
+        ServeBenchConfig {
+            requests: 2_000,
+            connections: 2,
+            window: 32,
+            operator_requests: 300,
+            baseline_requests: 30,
+            ..ServeBenchConfig::default()
+        }
+    }
+}
+
+/// One measured serving leg.
+#[derive(Clone, Debug)]
+pub struct ServeCell {
+    /// Leg name (`mixed`, `operator_cached`, `operator_uncached`).
+    pub leg: &'static str,
+    /// Requests completed.
+    pub requests: usize,
+    /// Concurrent connections used.
+    pub connections: usize,
+    /// Pipeline window per connection (1 = one-shot).
+    pub window: usize,
+    /// Wall-clock seconds for the whole leg.
+    pub elapsed_s: f64,
+    /// Median request latency (µs).
+    pub p50_us: f64,
+    /// 95th-percentile request latency (µs).
+    pub p95_us: f64,
+    /// 99th-percentile request latency (µs).
+    pub p99_us: f64,
+    /// Requests answered with an error payload (shed replies included).
+    pub errors: usize,
+    /// Server-side shed count over the leg.
+    pub shed: u64,
+    /// Serving-cache hits over the leg.
+    pub plan_hits: u64,
+    /// Serving-cache misses over the leg.
+    pub plan_misses: u64,
+}
+
+impl ServeCell {
+    /// Completed requests per wall-clock second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.requests as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Cached-over-uncached operator throughput ratio (the acceptance
+/// number); `None` until both operator legs are present.
+pub fn operator_speedup(cells: &[ServeCell]) -> Option<f64> {
+    let cached = cells.iter().find(|c| c.leg == "operator_cached")?;
+    let uncached = cells.iter().find(|c| c.leg == "operator_uncached")?;
+    Some(cached.throughput_rps() / uncached.throughput_rps())
+}
+
+fn percentile(sorted_us: &[f64], q: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * q).round() as usize;
+    sorted_us[idx]
+}
+
+/// Spin up a loopback endpoint: a native-backend service pool plus an
+/// operator front over `op_mlp`. The accept loop thread is detached
+/// (it lives until process exit; each leg uses its own endpoint).
+fn spawn_endpoint(
+    scalar_mlp: &Mlp,
+    op_mlp: &Mlp,
+    workers: usize,
+    cached: bool,
+) -> (String, Service, ServiceHandle) {
+    let backend_mlp = scalar_mlp.clone();
+    let service = Service::start_pool(
+        move |_w| {
+            Ok(Box::new(NativeBackend::new(backend_mlp.clone(), 3, 256)) as Box<dyn EvalBackend>)
+        },
+        workers,
+        BatcherConfig::default(),
+    );
+    let handle = service.handle();
+    let ops = if cached {
+        OperatorServer::new(op_mlp.clone(), ParallelPolicy::Serial)
+    } else {
+        OperatorServer::uncached(op_mlp.clone(), ParallelPolicy::Serial)
+    };
+    let ops = Arc::new(ops.with_metrics(handle.metrics_handle()));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("binding loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let serve_handle = handle.clone();
+    std::thread::spawn(move || serve_tcp_with(listener, serve_handle, Some(ops)));
+    (addr, service, handle)
+}
+
+/// What one pipelined client thread submits next.
+enum NextRequest {
+    Scalar(Vec<f64>, Option<ActivationKind>),
+    Operator(Vec<Vec<f64>>, &'static str),
+    Stats,
+}
+
+/// Drive `quota` pipelined requests over one persistent connection,
+/// keeping up to `window` in flight; returns (latencies µs, errors).
+fn drive_connection(
+    addr: &str,
+    quota: usize,
+    window: usize,
+    mut gen: impl FnMut(&mut Prng) -> NextRequest,
+    seed: u64,
+) -> (Vec<f64>, usize) {
+    let mut rng = Prng::seeded(seed);
+    let mut client = match TcpClient::connect(addr) {
+        Ok(c) => c,
+        Err(_) => return (Vec::new(), quota),
+    };
+    let mut latencies = Vec::with_capacity(quota);
+    let mut errors = 0usize;
+    let mut inflight: VecDeque<Instant> = VecDeque::with_capacity(window);
+    let mut submitted = 0usize;
+    let mut done = 0usize;
+    while done < quota {
+        if submitted < quota && inflight.len() < window {
+            let sent = match gen(&mut rng) {
+                NextRequest::Scalar(points, act) => client.submit_eval(&points, act),
+                NextRequest::Operator(points, op) => client.submit_operator(&points, op, None),
+                NextRequest::Stats => client.submit_raw("{\"cmd\":\"stats\"}"),
+            };
+            if sent.is_err() {
+                errors += quota - done;
+                break;
+            }
+            inflight.push_back(Instant::now());
+            submitted += 1;
+            continue;
+        }
+        match client.recv_raw() {
+            Ok(payload) => {
+                let t0 = inflight.pop_front().expect("response without a request");
+                latencies.push(t0.elapsed().as_secs_f64() * 1e6);
+                if protocol::parse_error(&payload).is_some() {
+                    errors += 1;
+                }
+                done += 1;
+            }
+            Err(_) => {
+                errors += quota - done;
+                break;
+            }
+        }
+    }
+    (latencies, errors)
+}
+
+/// Run one pipelined leg: `requests` split across `connections`
+/// threads, each generated by `gen` (a fresh closure per thread).
+fn run_pipelined_leg(
+    leg: &'static str,
+    addr: &str,
+    handle: &ServiceHandle,
+    requests: usize,
+    connections: usize,
+    window: usize,
+    seed: u64,
+    gen: impl Fn(usize) -> Box<dyn FnMut(&mut Prng) -> NextRequest + Send> + Sync,
+) -> ServeCell {
+    let before = handle.metrics();
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for c in 0..connections {
+        let quota = requests / connections + usize::from(c < requests % connections);
+        let addr = addr.to_string();
+        let mut g = gen(c);
+        threads.push(std::thread::spawn(move || {
+            drive_connection(&addr, quota, window, &mut g, seed + 1000 + c as u64)
+        }));
+    }
+    let mut latencies = Vec::with_capacity(requests);
+    let mut errors = 0usize;
+    for th in threads {
+        let (mut l, e) = th.join().expect("client thread panicked");
+        latencies.append(&mut l);
+        errors += e;
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let after = handle.metrics();
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    ServeCell {
+        leg,
+        requests,
+        connections,
+        window,
+        elapsed_s,
+        p50_us: percentile(&latencies, 0.50),
+        p95_us: percentile(&latencies, 0.95),
+        p99_us: percentile(&latencies, 0.99),
+        errors,
+        shed: after.shed - before.shed,
+        plan_hits: after.plan_hits - before.plan_hits,
+        plan_misses: after.plan_misses - before.plan_misses,
+    }
+}
+
+/// Run the three legs and return one [`ServeCell`] per leg.
+pub fn run(cfg: &ServeBenchConfig, progress: impl Fn(&str)) -> Vec<ServeCell> {
+    let mut rng = Prng::seeded(cfg.seed);
+    let scalar_mlp = Mlp::uniform(1, cfg.width, cfg.depth, 1, &mut rng);
+    let op_mlp = Mlp::uniform(2, cfg.width, cfg.depth, 1, &mut rng);
+    let mut cells = Vec::new();
+
+    // --- Leg 1: mixed pipelined traffic -----------------------------
+    progress(&format!(
+        "mixed: {} requests, {} connections, window {}",
+        cfg.requests, cfg.connections, cfg.window
+    ));
+    {
+        // The mixed endpoint serves the 1-D checkpoint on both fronts
+        // (scalar stacks and dim-1 operator specs), like `ntangent
+        // serve` does with one checkpoint.
+        let (addr, service, handle) = spawn_endpoint(&scalar_mlp, &scalar_mlp, cfg.workers, true);
+        let points = cfg.points;
+        cells.push(run_pipelined_leg(
+            "mixed",
+            &addr,
+            &handle,
+            cfg.requests,
+            cfg.connections,
+            cfg.window,
+            cfg.seed,
+            |_c| {
+                let mut count = 0usize;
+                Box::new(move |rng: &mut Prng| {
+                    count += 1;
+                    if count % 512 == 0 {
+                        return NextRequest::Stats;
+                    }
+                    if rng.below(10) < 7 {
+                        let pts: Vec<f64> =
+                            (0..points).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+                        let act = match rng.below(5) {
+                            0 => None,
+                            i => Some(ActivationKind::ALL[(i - 1) as usize]),
+                        };
+                        NextRequest::Scalar(pts, act)
+                    } else {
+                        let pts: Vec<Vec<f64>> = (0..points)
+                            .map(|_| vec![rng.uniform_in(-1.0, 1.0)])
+                            .collect();
+                        NextRequest::Operator(pts, if rng.below(2) == 0 { "d2" } else { "d3" })
+                    }
+                })
+            },
+        ));
+        service.shutdown();
+    }
+
+    // --- Leg 2: cached operator pipelined ---------------------------
+    progress(&format!(
+        "operator_cached: {} Laplacian requests, {} connections, window {}",
+        cfg.operator_requests, cfg.connections, cfg.window
+    ));
+    {
+        let (addr, service, handle) = spawn_endpoint(&scalar_mlp, &op_mlp, 1, true);
+        let points = cfg.points;
+        cells.push(run_pipelined_leg(
+            "operator_cached",
+            &addr,
+            &handle,
+            cfg.operator_requests,
+            cfg.connections,
+            cfg.window,
+            cfg.seed + 1,
+            |_c| {
+                Box::new(move |rng: &mut Prng| {
+                    let pts: Vec<Vec<f64>> = (0..points)
+                        .map(|_| vec![rng.uniform_in(-1.0, 1.0), rng.uniform_in(-1.0, 1.0)])
+                        .collect();
+                    NextRequest::Operator(pts, "d20+d02")
+                })
+            },
+        ));
+        service.shutdown();
+    }
+
+    // --- Leg 3: uncached one-shot baseline --------------------------
+    progress(&format!(
+        "operator_uncached: {} one-shot requests (fresh connection + compile each)",
+        cfg.baseline_requests
+    ));
+    {
+        let (addr, service, handle) = spawn_endpoint(&scalar_mlp, &op_mlp, 1, false);
+        let before = handle.metrics();
+        let mut latencies = Vec::with_capacity(cfg.baseline_requests);
+        let mut errors = 0usize;
+        let t0 = Instant::now();
+        for _ in 0..cfg.baseline_requests {
+            let pts: Vec<Vec<f64>> = (0..cfg.points)
+                .map(|_| vec![rng.uniform_in(-1.0, 1.0), rng.uniform_in(-1.0, 1.0)])
+                .collect();
+            let r0 = Instant::now();
+            match TcpClient::connect(&addr).and_then(|mut c| c.eval_operator(&pts, "d20+d02")) {
+                Ok(_) => latencies.push(r0.elapsed().as_secs_f64() * 1e6),
+                Err(_) => errors += 1,
+            }
+        }
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        let after = handle.metrics();
+        latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        cells.push(ServeCell {
+            leg: "operator_uncached",
+            requests: cfg.baseline_requests,
+            connections: 1,
+            window: 1,
+            elapsed_s,
+            p50_us: percentile(&latencies, 0.50),
+            p95_us: percentile(&latencies, 0.95),
+            p99_us: percentile(&latencies, 0.99),
+            errors,
+            shed: after.shed - before.shed,
+            plan_hits: after.plan_hits - before.plan_hits,
+            plan_misses: after.plan_misses - before.plan_misses,
+        });
+        service.shutdown();
+    }
+
+    cells
+}
+
+/// One row per leg, with the throughput and percentile columns.
+pub fn table(cells: &[ServeCell]) -> Table {
+    let mut t = Table::new(&[
+        "leg",
+        "requests",
+        "connections",
+        "window",
+        "elapsed_s",
+        "throughput_rps",
+        "p50_us",
+        "p95_us",
+        "p99_us",
+        "errors",
+        "shed",
+        "plan_hits",
+        "plan_misses",
+    ]);
+    for c in cells {
+        t.push(vec![
+            c.leg.to_string(),
+            c.requests.to_string(),
+            c.connections.to_string(),
+            c.window.to_string(),
+            format!("{:.4}", c.elapsed_s),
+            format!("{:.1}", c.throughput_rps()),
+            format!("{:.1}", c.p50_us),
+            format!("{:.1}", c.p95_us),
+            format!("{:.1}", c.p99_us),
+            c.errors.to_string(),
+            c.shed.to_string(),
+            c.plan_hits.to_string(),
+            c.plan_misses.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Write `serve_load.csv`.
+pub fn save(cells: &[ServeCell], dir: &Path) -> std::io::Result<()> {
+    table(cells).save(&dir.join("serve_load.csv"))
+}
+
+/// The `BENCH_serve.json` document: config + per-leg results + the
+/// cached/uncached operator throughput ratio.
+pub fn to_json(cfg: &ServeBenchConfig, cells: &[ServeCell]) -> Json {
+    let results: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("leg", Json::Str(c.leg.into())),
+                ("requests", Json::Num(c.requests as f64)),
+                ("connections", Json::Num(c.connections as f64)),
+                ("window", Json::Num(c.window as f64)),
+                ("elapsed_s", Json::Num(c.elapsed_s)),
+                ("throughput_rps", Json::Num(c.throughput_rps())),
+                ("p50_us", Json::Num(c.p50_us)),
+                ("p95_us", Json::Num(c.p95_us)),
+                ("p99_us", Json::Num(c.p99_us)),
+                ("errors", Json::Num(c.errors as f64)),
+                ("shed", Json::Num(c.shed as f64)),
+                ("plan_hits", Json::Num(c.plan_hits as f64)),
+                ("plan_misses", Json::Num(c.plan_misses as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("serve".into())),
+        (
+            "config",
+            Json::obj(vec![
+                ("requests", Json::Num(cfg.requests as f64)),
+                ("connections", Json::Num(cfg.connections as f64)),
+                ("window", Json::Num(cfg.window as f64)),
+                ("points", Json::Num(cfg.points as f64)),
+                ("operator_requests", Json::Num(cfg.operator_requests as f64)),
+                ("baseline_requests", Json::Num(cfg.baseline_requests as f64)),
+                ("width", Json::Num(cfg.width as f64)),
+                ("depth", Json::Num(cfg.depth as f64)),
+                ("workers", Json::Num(cfg.workers as f64)),
+            ]),
+        ),
+        ("results", Json::Arr(results)),
+        (
+            "operator_speedup",
+            Json::Num(operator_speedup(cells).unwrap_or(0.0)),
+        ),
+    ])
+}
+
+/// Write the `BENCH_serve.json` document to `path`.
+pub fn save_json(cfg: &ServeBenchConfig, cells: &[ServeCell], path: &Path) -> std::io::Result<()> {
+    std::fs::write(path, to_json(cfg, cells).dump() + "\n")
+}
+
+/// Human-readable summary for the CLI.
+pub fn summarize(cells: &[ServeCell]) -> String {
+    let mut out = String::from("serving load (closed-loop TCP loopback)\n");
+    for c in cells {
+        out.push_str(&format!(
+            "  {:<18} {:>7} req  {:>9.1} req/s  p50 {:>8.1} µs  p95 {:>8.1} µs  \
+             p99 {:>8.1} µs  errors {} shed {}\n",
+            c.leg,
+            c.requests,
+            c.throughput_rps(),
+            c.p50_us,
+            c.p95_us,
+            c.p99_us,
+            c.errors,
+            c.shed
+        ));
+    }
+    if let Some(s) = operator_speedup(cells) {
+        out.push_str(&format!(
+            "  operator cache+pipelining speedup over one-shot uncached: {s:.1}x\n"
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_serve_bench_produces_csv_and_json() {
+        let cfg = ServeBenchConfig {
+            requests: 60,
+            connections: 2,
+            window: 8,
+            points: 3,
+            operator_requests: 16,
+            baseline_requests: 4,
+            width: 6,
+            depth: 2,
+            workers: 1,
+            ..ServeBenchConfig::default()
+        };
+        let cells = run(&cfg, |_| {});
+        assert_eq!(cells.len(), 3);
+        for c in &cells {
+            assert_eq!(c.errors, 0, "leg {} had errors", c.leg);
+            assert!(c.elapsed_s > 0.0 && c.throughput_rps() > 0.0, "leg {}", c.leg);
+            assert!(c.p50_us <= c.p95_us && c.p95_us <= c.p99_us, "leg {}", c.leg);
+        }
+        assert!(operator_speedup(&cells).unwrap() > 0.0);
+        // The cached leg compiles at most once per (operator, engine);
+        // later requests hit.
+        let cached = cells.iter().find(|c| c.leg == "operator_cached").unwrap();
+        assert!(cached.plan_hits > cached.plan_misses);
+        let t = table(&cells);
+        assert_eq!(t.rows.len(), 3);
+        let dir = std::env::temp_dir().join("ntangent_test_serve_bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        save(&cells, &dir).unwrap();
+        assert!(dir.join("serve_load.csv").exists());
+        let jpath = dir.join("BENCH_serve.json");
+        save_json(&cfg, &cells, &jpath).unwrap();
+        let doc = Json::parse(std::fs::read_to_string(&jpath).unwrap().trim()).unwrap();
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("serve"));
+        assert_eq!(
+            doc.get("results").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(3)
+        );
+        assert!(doc.get("operator_speedup").and_then(Json::as_f64).is_some());
+        assert!(summarize(&cells).contains("serving load"));
+    }
+}

@@ -43,9 +43,13 @@ pub trait EvalBackend {
 }
 
 /// Native backend: the pure-Rust n-TangentProp engine (no artifacts
-/// required).
+/// required). The engine comes from the process-wide
+/// [`crate::pde::cache`], so a pool of `W` workers serving the same
+/// `(n, policy)` compiles the Faà di Bruno program and activation
+/// towers once and shares one engine (scratch buffers are pooled
+/// internally per engine, so sharing is contention-free).
 pub struct NativeBackend {
-    engine: NtpEngine,
+    engine: std::sync::Arc<NtpEngine>,
     mlp: Mlp,
     n: usize,
     cap: usize,
@@ -60,12 +64,8 @@ impl NativeBackend {
     /// Native backend whose engine chunks each batch across threads
     /// according to `policy` (bitwise identical to the serial engine).
     pub fn new_parallel(mlp: Mlp, n: usize, cap: usize, policy: ParallelPolicy) -> NativeBackend {
-        NativeBackend {
-            engine: NtpEngine::with_policy(n, policy),
-            mlp,
-            n,
-            cap,
-        }
+        let (engine, _hit) = crate::pde::cache::shared_scalar_engine(n, policy);
+        NativeBackend { engine, mlp, n, cap }
     }
 }
 

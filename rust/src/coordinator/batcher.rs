@@ -23,12 +23,21 @@ use std::time::{Duration, Instant};
 pub struct BatcherConfig {
     /// How long to wait for additional requests once one is pending.
     pub max_wait: Duration,
+    /// Bound of each worker's ingress queue (in messages). Submissions
+    /// beyond it are shed on the wire path with an
+    /// `{"error":"overloaded","retry_ms":…}` response (in-process
+    /// callers block instead — natural backpressure).
+    pub queue_depth: usize,
+    /// Retry hint (milliseconds) carried by shed responses.
+    pub shed_retry_ms: u64,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
         BatcherConfig {
             max_wait: Duration::from_micros(200),
+            queue_depth: 1024,
+            shed_retry_ms: 50,
         }
     }
 }

@@ -23,6 +23,13 @@ pub struct Metrics {
     pub latency_ns: AtomicU64,
     /// Max single-request latency in nanoseconds.
     pub latency_max_ns: AtomicU64,
+    /// Requests shed with an `overloaded` response because the target
+    /// worker's ingress queue was full.
+    pub shed: AtomicU64,
+    /// Serving-cache lookups (plans, engines, operators) that hit.
+    pub plan_hits: AtomicU64,
+    /// Serving-cache lookups that missed and compiled.
+    pub plan_misses: AtomicU64,
     /// Per-worker counters (empty for metrics built with `default()`,
     /// e.g. in unit tests that drive `serve_batch` directly).
     workers: Vec<WorkerCounters>,
@@ -54,6 +61,12 @@ pub struct MetricsSnapshot {
     pub batched_points: u64,
     /// Requests answered with an error.
     pub errors: u64,
+    /// Requests shed with an `overloaded` response.
+    pub shed: u64,
+    /// Serving-cache lookups that hit.
+    pub plan_hits: u64,
+    /// Serving-cache lookups that missed and compiled.
+    pub plan_misses: u64,
     /// Mean enqueue-to-response latency in microseconds.
     pub mean_latency_us: f64,
     /// Max enqueue-to-response latency in microseconds.
@@ -125,6 +138,20 @@ impl Metrics {
         self.latency_max_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
+    /// Count one request shed with an `overloaded` response.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one serving-cache lookup (plan/engine/operator).
+    pub fn record_plan_lookup(&self, hit: bool) {
+        if hit {
+            self.plan_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.plan_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// A point-in-time copy of all counters with derived ratios.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let requests = self.requests.load(Ordering::Relaxed);
@@ -135,6 +162,9 @@ impl Metrics {
             batches,
             batched_points: self.batched_points.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.plan_misses.load(Ordering::Relaxed),
             mean_latency_us: if requests > 0 {
                 self.latency_ns.load(Ordering::Relaxed) as f64 / requests as f64 / 1e3
             } else {
@@ -172,7 +202,14 @@ mod tests {
         m.record_batch(0, 15);
         m.record_latency(2_000);
         m.record_latency(4_000);
+        m.record_shed();
+        m.record_plan_lookup(true);
+        m.record_plan_lookup(true);
+        m.record_plan_lookup(false);
         let s = m.snapshot();
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.plan_hits, 2);
+        assert_eq!(s.plan_misses, 1);
         assert_eq!(s.requests, 2);
         assert_eq!(s.points, 15);
         assert_eq!(s.batches, 1);

@@ -30,4 +30,8 @@ pub mod service;
 pub use backend::{EvalBackend, NativeBackend, PjrtBackend};
 pub use batcher::BatcherConfig;
 pub use metrics::{Metrics, MetricsSnapshot, WorkerSnapshot};
-pub use service::{OperatorServer, Service, ServiceHandle, MAX_SERVED_OPERATOR_ORDER};
+pub use service::{
+    serve_connection, serve_connection_with, serve_tcp, serve_tcp_with, OperatorServer,
+    PendingEval, Service, ServiceHandle, SubmitError, TcpClient, MAX_SERVED_OPERATOR_ORDER,
+    PIPELINE_WINDOW,
+};

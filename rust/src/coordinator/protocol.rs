@@ -1,13 +1,36 @@
-//! Wire protocol for the TCP front: one JSON object per line.
+//! Wire protocol for the TCP front: JSON messages, length-framed or
+//! newline-delimited.
 //!
 //! Request:  `{"points": [0.1, 0.2, ...]}`
 //!           `{"points": [...], "activation": "sin"}`
 //!           `{"points_nd": [[0.1, 0.2], ...], "operator": "d20+d02"}`
+//!           `{"points_nd": [...], "operator": "...", "activation": "sin"}`
 //!           `{"cmd": "stats"}`
 //! Response: `{"channels": [[u...], [u'...], ...]}`
 //!           `{"u": [...], "operator": [...]}`
 //!           `{"error": "..."}`
+//!           `{"error": "overloaded", "retry_ms": 50}`
 //!           `{"stats": {...}}`
+//!
+//! # Transport: frames and lines
+//!
+//! Each message travels in one of two interchangeable transports,
+//! chosen per message by its first byte:
+//!
+//! - **Framed** (the persistent-connection transport): a
+//!   [`FRAME_MAGIC`] byte, a big-endian `u32` payload length, then that
+//!   many bytes of UTF-8 JSON. Frames carry no trailing newline and may
+//!   be pipelined back-to-back; replies to framed requests are framed.
+//!   Payloads above [`MAX_FRAME_LEN`] are rejected.
+//! - **Line** (the legacy transport): one JSON object terminated by
+//!   `\n`. Replies to line requests are newline-terminated, keeping
+//!   every pre-existing client wire-compatible. Lines are capped at
+//!   [`MAX_FRAME_LEN`] bytes so an unterminated stream cannot buffer
+//!   unboundedly.
+//!
+//! [`read_message`] dispatches between the two on the server and client
+//! alike (`0x9E` is never the first byte of JSON text, so the
+//! discrimination is unambiguous).
 //!
 //! The `activation` field is optional and selects the derivative tower
 //! applied to the served weights (any registered
@@ -26,6 +49,130 @@
 use super::metrics::MetricsSnapshot;
 use crate::ntp::ActivationKind;
 use crate::util::json::Json;
+use std::io::{BufRead, Read, Write};
+
+/// First byte of a length-framed message (never the first byte of
+/// JSON text, so framed and line transports coexist on one stream).
+pub const FRAME_MAGIC: u8 = 0x9E;
+
+/// Largest accepted frame payload (and line length) in bytes. Bounds
+/// per-connection buffering against malicious or broken clients.
+pub const MAX_FRAME_LEN: usize = 4 << 20;
+
+/// One message read off the stream, tagged with its transport.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Incoming {
+    /// A length-framed payload; the reply must be framed.
+    Frame(String),
+    /// A newline-terminated line; the reply must be a line.
+    Line(String),
+    /// Clean end of stream (no partial message pending).
+    Eof,
+}
+
+/// Why [`read_message`] failed.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Declared frame length (or accumulated line length) exceeds
+    /// [`MAX_FRAME_LEN`]. `framed` tags the transport so the server can
+    /// shape its final error reply before closing.
+    TooLarge {
+        /// Whether the oversized message was a frame (vs a line).
+        framed: bool,
+        /// The declared or accumulated length in bytes.
+        len: usize,
+    },
+    /// Frame payload was not valid UTF-8.
+    BadUtf8,
+    /// The stream failed or ended mid-message (truncated frame,
+    /// disconnect); nothing can be replied.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::TooLarge { framed, len } => write!(
+                f,
+                "message of {len} bytes exceeds the {MAX_FRAME_LEN}-byte limit ({})",
+                if *framed { "framed" } else { "line" }
+            ),
+            ReadError::BadUtf8 => write!(f, "frame payload is not valid UTF-8"),
+            ReadError::Io(e) => write!(f, "reading message: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ReadError {}
+
+impl From<std::io::Error> for ReadError {
+    fn from(e: std::io::Error) -> ReadError {
+        ReadError::Io(e)
+    }
+}
+
+/// Write one framed message: [`FRAME_MAGIC`], big-endian `u32` length,
+/// payload. The caller flushes (framed writers batch pipelined replies).
+pub fn write_frame(w: &mut impl Write, payload: &str) -> std::io::Result<()> {
+    w.write_all(&[FRAME_MAGIC])?;
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload.as_bytes())
+}
+
+/// Read the next message, framed or line, off `r` (see the module docs
+/// for the transport rules). Interstitial `\r`/`\n`/space bytes between
+/// messages are skipped, so framed and line traffic can interleave.
+pub fn read_message(r: &mut impl BufRead) -> Result<Incoming, ReadError> {
+    // Skip inter-message whitespace and find the discriminating byte.
+    let first = loop {
+        let buf = r.fill_buf()?;
+        if buf.is_empty() {
+            return Ok(Incoming::Eof);
+        }
+        match buf[0] {
+            b'\n' | b'\r' | b' ' | b'\t' => r.consume(1),
+            b => break b,
+        }
+    };
+    if first == FRAME_MAGIC {
+        r.consume(1);
+        let mut len_bytes = [0u8; 4];
+        r.read_exact(&mut len_bytes)?;
+        let len = u32::from_be_bytes(len_bytes) as usize;
+        if len > MAX_FRAME_LEN {
+            return Err(ReadError::TooLarge { framed: true, len });
+        }
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload)?;
+        let text = String::from_utf8(payload).map_err(|_| ReadError::BadUtf8)?;
+        return Ok(Incoming::Frame(text));
+    }
+    // Line transport: accumulate up to the newline, capped.
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let buf = r.fill_buf()?;
+        if buf.is_empty() {
+            // EOF with a partial line: serve it (matches the legacy
+            // `BufRead::lines` behaviour for unterminated final lines).
+            break;
+        }
+        let nl = buf.iter().position(|&b| b == b'\n');
+        let take = nl.map(|i| i + 1).unwrap_or(buf.len());
+        if line.len() + take > MAX_FRAME_LEN {
+            return Err(ReadError::TooLarge {
+                framed: false,
+                len: line.len() + take,
+            });
+        }
+        line.extend_from_slice(&buf[..take]);
+        r.consume(take);
+        if nl.is_some() {
+            break;
+        }
+    }
+    let text = String::from_utf8(line).map_err(|_| ReadError::BadUtf8)?;
+    Ok(Incoming::Line(text.trim_end_matches(['\n', '\r']).to_string()))
+}
 
 /// A parsed client request.
 #[derive(Clone, Debug, PartialEq)]
@@ -44,12 +191,31 @@ pub enum WireRequest {
         points: Vec<Vec<f64>>,
         /// Operator: a library problem name or a parseable spec.
         operator: String,
+        /// `None` = the served model's own activation (wire-compatible
+        /// default, as for scalar requests).
+        activation: Option<ActivationKind>,
     },
     /// Return the service metrics snapshot.
     Stats,
 }
 
-/// Parse one request line.
+/// Parse the optional `activation` field of a request object.
+fn parse_activation(v: &Json) -> Result<Option<ActivationKind>, String> {
+    match v.get("activation") {
+        None => Ok(None),
+        Some(a) => {
+            let name = a
+                .as_str()
+                .ok_or_else(|| "'activation' must be a string".to_string())?;
+            Ok(Some(
+                ActivationKind::from_name(name)
+                    .ok_or_else(|| format!("unknown activation '{name}'"))?,
+            ))
+        }
+    }
+}
+
+/// Parse one request message (a framed payload or a line).
 pub fn parse_request(line: &str) -> Result<WireRequest, String> {
     let v = Json::parse(line).map_err(|e| e.to_string())?;
     if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
@@ -81,7 +247,12 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
             .and_then(Json::as_str)
             .ok_or_else(|| "'points_nd' requests need an 'operator' string".to_string())?
             .to_string();
-        return Ok(WireRequest::EvalOperator { points, operator });
+        let activation = parse_activation(&v)?;
+        return Ok(WireRequest::EvalOperator {
+            points,
+            operator,
+            activation,
+        });
     }
     let points = v
         .get("points")
@@ -90,18 +261,7 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
     if points.is_empty() {
         return Err("'points' must be non-empty".to_string());
     }
-    let activation = match v.get("activation") {
-        None => None,
-        Some(a) => {
-            let name = a
-                .as_str()
-                .ok_or_else(|| "'activation' must be a string".to_string())?;
-            Some(
-                ActivationKind::from_name(name)
-                    .ok_or_else(|| format!("unknown activation '{name}'"))?,
-            )
-        }
-    };
+    let activation = parse_activation(&v)?;
     Ok(WireRequest::Eval { points, activation })
 }
 
@@ -114,14 +274,23 @@ pub fn encode_request(points: &[f64], activation: Option<ActivationKind>) -> Str
     Json::obj(fields).dump()
 }
 
-/// Encode an operator-evaluation request (client side).
-pub fn encode_operator_request(points: &[Vec<f64>], operator: &str) -> String {
+/// Encode an operator-evaluation request (client side); `activation`
+/// optionally overrides the served model's tower, exactly as for scalar
+/// requests (`None` emits no field — wire-compatible with old servers).
+pub fn encode_operator_request(
+    points: &[Vec<f64>],
+    operator: &str,
+    activation: Option<ActivationKind>,
+) -> String {
     let rows = Json::Arr(points.iter().map(|p| Json::num_arr(p)).collect());
-    Json::obj(vec![
+    let mut fields = vec![
         ("points_nd", rows),
         ("operator", Json::Str(operator.to_string())),
-    ])
-    .dump()
+    ];
+    if let Some(kind) = activation {
+        fields.push(("activation", Json::Str(kind.name().to_string())));
+    }
+    Json::obj(fields).dump()
 }
 
 /// Encode an operator-evaluation response: the field values `u` and the
@@ -162,6 +331,27 @@ pub fn encode_error(msg: &str) -> String {
     Json::obj(vec![("error", Json::Str(msg.to_string()))]).dump()
 }
 
+/// Encode the backpressure shed response: the target worker's ingress
+/// queue is full, retry after `retry_ms` milliseconds.
+pub fn encode_shed(retry_ms: u64) -> String {
+    Json::obj(vec![
+        ("error", Json::Str("overloaded".to_string())),
+        ("retry_ms", Json::Num(retry_ms as f64)),
+    ])
+    .dump()
+}
+
+/// Decode an error response (client side): `Some((message, retry_ms))`
+/// if the payload is an error, `None` otherwise. `retry_ms` is set on
+/// shed responses — the retry contract is: back off that long, then
+/// resubmit the identical request.
+pub fn parse_error(line: &str) -> Option<(String, Option<u64>)> {
+    let v = Json::parse(line).ok()?;
+    let msg = v.get("error").and_then(Json::as_str)?.to_string();
+    let retry_ms = v.get("retry_ms").and_then(Json::as_f64).map(|ms| ms as u64);
+    Some((msg, retry_ms))
+}
+
 /// Encode a stats response (includes one object per batcher worker).
 pub fn encode_stats(s: &MetricsSnapshot) -> String {
     let workers = Json::Arr(
@@ -184,6 +374,9 @@ pub fn encode_stats(s: &MetricsSnapshot) -> String {
             ("points", Json::Num(s.points as f64)),
             ("batches", Json::Num(s.batches as f64)),
             ("errors", Json::Num(s.errors as f64)),
+            ("shed", Json::Num(s.shed as f64)),
+            ("plan_hits", Json::Num(s.plan_hits as f64)),
+            ("plan_misses", Json::Num(s.plan_misses as f64)),
             ("mean_latency_us", Json::Num(s.mean_latency_us)),
             ("max_latency_us", Json::Num(s.max_latency_us)),
             ("mean_batch_fill", Json::Num(s.mean_batch_fill)),
@@ -256,7 +449,8 @@ mod tests {
             r,
             WireRequest::EvalOperator {
                 points: vec![vec![0.1, 0.2], vec![0.3, 0.4]],
-                operator: "d20+d02".to_string()
+                operator: "d20+d02".to_string(),
+                activation: None
             }
         );
         // Missing operator, empty rows, ragged arity: rejected.
@@ -269,14 +463,26 @@ mod tests {
     #[test]
     fn operator_request_roundtrips() {
         let pts = vec![vec![0.25, -0.5], vec![0.5, 0.75]];
-        let line = encode_operator_request(&pts, "heat2d");
-        let parsed = parse_request(&line).unwrap();
-        assert_eq!(
-            parsed,
-            WireRequest::EvalOperator { points: pts, operator: "heat2d".to_string() }
-        );
-        // Scalar requests never grow the new fields.
+        for activation in [None, Some(ActivationKind::Sine)] {
+            let line = encode_operator_request(&pts, "heat2d", activation);
+            let parsed = parse_request(&line).unwrap();
+            assert_eq!(
+                parsed,
+                WireRequest::EvalOperator {
+                    points: pts.clone(),
+                    operator: "heat2d".to_string(),
+                    activation
+                }
+            );
+        }
+        // Scalar requests never grow the new fields, and the activation
+        // field stays absent unless requested.
         assert!(!encode_request(&[1.0], None).contains("points_nd"));
+        assert!(!encode_operator_request(&pts, "heat2d", None).contains("activation"));
+        assert!(
+            parse_request(r#"{"points_nd": [[0.1, 0.2]], "operator": "d20", "activation": "relu"}"#)
+                .is_err()
+        );
     }
 
     #[test]
@@ -325,6 +531,9 @@ mod tests {
             batches: 2,
             batched_points: 10,
             errors: 0,
+            shed: 1,
+            plan_hits: 5,
+            plan_misses: 2,
             mean_latency_us: 12.5,
             max_latency_us: 20.0,
             mean_batch_fill: 1.5,
@@ -340,5 +549,241 @@ mod tests {
         assert!(line.contains("mean_batch_fill"));
         assert!(line.contains("\"workers\""));
         assert!(line.contains("\"batched_points\":10"));
+        assert!(line.contains("\"shed\":1"));
+        assert!(line.contains("\"plan_hits\":5"));
+        assert!(line.contains("\"plan_misses\":2"));
+    }
+
+    #[test]
+    fn shed_response_roundtrips() {
+        let line = encode_shed(50);
+        let (msg, retry) = parse_error(&line).unwrap();
+        assert_eq!(msg, "overloaded");
+        assert_eq!(retry, Some(50));
+        // Plain errors carry no retry hint; non-errors parse to None.
+        assert_eq!(parse_error(&encode_error("boom")), Some(("boom".into(), None)));
+        assert_eq!(parse_error(&encode_channels(&[vec![1.0]])), None);
+        // A shed response fails the typed decoders with the message.
+        assert_eq!(parse_channels(&line).unwrap_err(), "overloaded");
+        assert_eq!(parse_operator_values(&line).unwrap_err(), "overloaded");
+    }
+
+    // ---------------------------------------------- transport framing
+
+    #[test]
+    fn frame_roundtrips_and_pipelines() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, r#"{"cmd":"stats"}"#).unwrap();
+        write_frame(&mut buf, r#"{"points":[1.0]}"#).unwrap();
+        let mut r = std::io::BufReader::new(buf.as_slice());
+        assert_eq!(
+            read_message(&mut r).unwrap(),
+            Incoming::Frame(r#"{"cmd":"stats"}"#.to_string())
+        );
+        assert_eq!(
+            read_message(&mut r).unwrap(),
+            Incoming::Frame(r#"{"points":[1.0]}"#.to_string())
+        );
+        assert_eq!(read_message(&mut r).unwrap(), Incoming::Eof);
+    }
+
+    #[test]
+    fn frames_and_lines_interleave_on_one_stream() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"{\"cmd\":\"stats\"}\n");
+        write_frame(&mut buf, r#"{"points":[0.5]}"#).unwrap();
+        buf.extend_from_slice(b"\n  {\"a\":1}\n");
+        let mut r = std::io::BufReader::new(buf.as_slice());
+        assert_eq!(
+            read_message(&mut r).unwrap(),
+            Incoming::Line("{\"cmd\":\"stats\"}".to_string())
+        );
+        assert_eq!(
+            read_message(&mut r).unwrap(),
+            Incoming::Frame(r#"{"points":[0.5]}"#.to_string())
+        );
+        assert_eq!(
+            read_message(&mut r).unwrap(),
+            Incoming::Line("{\"a\":1}".to_string())
+        );
+        assert_eq!(read_message(&mut r).unwrap(), Incoming::Eof);
+    }
+
+    #[test]
+    fn unterminated_final_line_is_served() {
+        let mut r = std::io::BufReader::new(&b"{\"cmd\":\"stats\"}"[..]);
+        assert_eq!(
+            read_message(&mut r).unwrap(),
+            Incoming::Line("{\"cmd\":\"stats\"}".to_string())
+        );
+        assert_eq!(read_message(&mut r).unwrap(), Incoming::Eof);
+    }
+
+    #[test]
+    fn oversized_frame_declaration_is_rejected_unread() {
+        let mut buf = vec![FRAME_MAGIC];
+        buf.extend_from_slice(&(MAX_FRAME_LEN as u32 + 1).to_be_bytes());
+        let mut r = std::io::BufReader::new(buf.as_slice());
+        match read_message(&mut r) {
+            Err(ReadError::TooLarge { framed: true, len }) => {
+                assert_eq!(len, MAX_FRAME_LEN + 1)
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frame_is_an_io_error() {
+        let mut buf = vec![FRAME_MAGIC];
+        buf.extend_from_slice(&100u32.to_be_bytes());
+        buf.extend_from_slice(b"only a few bytes");
+        let mut r = std::io::BufReader::new(buf.as_slice());
+        assert!(matches!(read_message(&mut r), Err(ReadError::Io(_))));
+        // So is a frame cut inside the length header.
+        let mut r = std::io::BufReader::new(&[FRAME_MAGIC, 0, 0][..]);
+        assert!(matches!(read_message(&mut r), Err(ReadError::Io(_))));
+    }
+
+    #[test]
+    fn non_utf8_frame_payload_is_rejected() {
+        let mut buf = vec![FRAME_MAGIC];
+        buf.extend_from_slice(&2u32.to_be_bytes());
+        buf.extend_from_slice(&[0xff, 0xfe]);
+        let mut r = std::io::BufReader::new(buf.as_slice());
+        assert!(matches!(read_message(&mut r), Err(ReadError::BadUtf8)));
+    }
+
+    // ------------------------------- property-style randomized round-trips
+
+    /// A deterministic value grid covering the numeric shapes the JSON
+    /// layer must preserve exactly: signs, zero, subnormal-ish, large
+    /// magnitudes, and long fractions.
+    fn value_grid(seed: u64, len: usize) -> Vec<f64> {
+        let mut rng = crate::util::prng::Prng::seeded(seed);
+        let specials = [0.0, -0.0, 1.0, -1.0, 1e-12, -1e300, 1e300, 0.1 + 0.2];
+        (0..len)
+            .map(|i| {
+                if i < specials.len() {
+                    specials[i]
+                } else {
+                    rng.uniform_in(-0.5, 0.5) * 10f64.powi(rng.below(13) as i32 - 6)
+                }
+            })
+            .collect()
+    }
+
+    /// Every request variant survives encode → parse across a
+    /// randomized value grid, through both transports.
+    #[test]
+    fn randomized_requests_roundtrip_exactly() {
+        let activations: Vec<Option<ActivationKind>> = std::iter::once(None)
+            .chain(ActivationKind::ALL.iter().map(|&k| Some(k)))
+            .collect();
+        for trial in 0..32 {
+            let vals = value_grid(1000 + trial, 9 + (trial as usize % 7));
+            let activation = activations[trial as usize % activations.len()];
+
+            let line = encode_request(&vals, activation);
+            assert_eq!(
+                parse_request(&line).unwrap(),
+                WireRequest::Eval { points: vals.clone(), activation },
+                "eval trial {trial}"
+            );
+
+            let dim = 1 + (trial as usize % 3);
+            let rows: Vec<Vec<f64>> = vals.chunks(dim).filter(|c| c.len() == dim).map(<[f64]>::to_vec).collect();
+            let spec = ["d20+d02", "heat2d", "d10-0.1*d02", "d10+u*d01+d03"][trial as usize % 4];
+            let line = encode_operator_request(&rows, spec, activation);
+            assert_eq!(
+                parse_request(&line).unwrap(),
+                WireRequest::EvalOperator {
+                    points: rows,
+                    operator: spec.to_string(),
+                    activation
+                },
+                "operator trial {trial}"
+            );
+
+            // Both transports deliver the identical payload.
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &line).unwrap();
+            let mut r = std::io::BufReader::new(buf.as_slice());
+            assert_eq!(read_message(&mut r).unwrap(), Incoming::Frame(line.clone()));
+            let terminated = [line.as_bytes(), b"\n"].concat();
+            let mut r = std::io::BufReader::new(terminated.as_slice());
+            assert_eq!(read_message(&mut r).unwrap(), Incoming::Line(line));
+        }
+    }
+
+    /// Every response variant survives encode → parse across the same
+    /// grid.
+    #[test]
+    fn randomized_responses_roundtrip_exactly() {
+        for trial in 0..32 {
+            let vals = value_grid(2000 + trial, 8);
+            let channels: Vec<Vec<f64>> = vals.chunks(4).map(<[f64]>::to_vec).collect();
+            assert_eq!(
+                parse_channels(&encode_channels(&channels)).unwrap(),
+                channels,
+                "channels trial {trial}"
+            );
+            let (u, lu) = (vals[..4].to_vec(), vals[4..].to_vec());
+            assert_eq!(
+                parse_operator_values(&encode_operator_values(&u, &lu)).unwrap(),
+                (u, lu),
+                "operator values trial {trial}"
+            );
+            let msg = format!("error #{trial} with \"quotes\" and \\ slashes");
+            assert_eq!(parse_channels(&encode_error(&msg)).unwrap_err(), msg);
+            assert_eq!(parse_error(&encode_error(&msg)), Some((msg, None)));
+            let retry = 1 + trial * 7;
+            assert_eq!(
+                parse_error(&encode_shed(retry)),
+                Some(("overloaded".to_string(), Some(retry)))
+            );
+        }
+    }
+
+    /// Malformed and adversarial inputs: every decoder returns a clean
+    /// error (or `None`), never panics.
+    #[test]
+    fn malformed_inputs_never_panic() {
+        let cases = [
+            "",
+            "   ",
+            "not json",
+            "{",
+            "}{",
+            "[]",
+            "42",
+            "\"str\"",
+            "{\"points\": {}}",
+            "{\"points\": [1.0, \"x\"]}",
+            "{\"points\": [1.0], \"activation\": []}",
+            "{\"points_nd\": [[1.0], []], \"operator\": \"d2\"}",
+            "{\"points_nd\": \"x\", \"operator\": \"d2\"}",
+            "{\"points_nd\": [[1.0]], \"operator\": 3}",
+            "{\"channels\": 7}",
+            "{\"channels\": [7]}",
+            "{\"u\": \"x\", \"operator\": []}",
+            "{\"cmd\": 12}",
+            "{\"error\": 5}",
+            "\u{0}\u{1}\u{2}",
+        ];
+        for c in cases {
+            let _ = parse_request(c);
+            let _ = parse_channels(c);
+            let _ = parse_operator_values(c);
+            let _ = parse_error(c);
+        }
+        // Truncations of a valid request must parse or error, never panic.
+        let full = encode_operator_request(
+            &[vec![0.1, 0.2]],
+            "d20+d02",
+            Some(ActivationKind::Gelu),
+        );
+        for cut in 0..full.len() {
+            let _ = parse_request(&full[..cut]);
+        }
     }
 }

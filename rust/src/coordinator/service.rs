@@ -1,25 +1,46 @@
-//! Service assembly: sharded request queues + a batcher worker pool +
-//! optional TCP front.
+//! Service assembly: sharded bounded request queues + a batcher worker
+//! pool + a pipelined TCP front.
 //!
 //! A service runs `W ≥ 1` batcher workers, each with its own backend and
-//! its own queue. The handle shards requests across the queues by their
-//! (optional) activation override — `kind.index() % W`, default traffic
-//! on shard 0 — so batches for different activation towers run
-//! concurrently while same-activation requests still coalesce into full
-//! backend batches on their shard.
+//! its own **bounded** queue. The handle shards requests across the
+//! queues by their (optional) activation override — `kind.index() % W`,
+//! default traffic on shard 0 — so batches for different activation
+//! towers run concurrently while same-activation requests still coalesce
+//! into full backend batches on their shard.
+//!
+//! Backpressure: wire-path submissions ([`ServiceHandle::submit_with`])
+//! never block — a full shard queue sheds the request with
+//! [`SubmitError::Overloaded`], which the connection loop answers with
+//! `{"error":"overloaded","retry_ms":…}`. In-process callers
+//! ([`ServiceHandle::eval_with`]) block on the bounded queue instead,
+//! which is the natural backpressure for code that would otherwise just
+//! spin resubmitting.
+//!
+//! Connections are persistent and **pipelined**: the per-connection
+//! reader parses length-framed (or legacy newline) requests and hands
+//! each reply slot to a writer thread that answers strictly in request
+//! order, so a client may keep up to [`PIPELINE_WINDOW`] requests in
+//! flight on one connection and batcher evals from *different* requests
+//! overlap. See `docs/PROTOCOL.md` for the framing and shed contract.
 
 use super::backend::EvalBackend;
 use super::batcher::{run_loop, BatcherConfig, Msg, Request, Response};
 use super::metrics::Metrics;
-use super::protocol;
+use super::protocol::{self, Incoming, ReadError};
 use crate::ntp::ActivationKind;
 use anyhow::{anyhow, Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Most replies a connection keeps in flight (reader-to-writer slots).
+/// When the window is full the reader stops pulling requests off the
+/// socket, so a client that floods faster than it reads stalls itself
+/// without buffering unboundedly on the server.
+pub const PIPELINE_WINDOW: usize = 256;
 
 /// A running evaluation service (a pool of batcher workers).
 pub struct Service {
@@ -31,8 +52,43 @@ pub struct Service {
 /// across the worker queues.
 #[derive(Clone)]
 pub struct ServiceHandle {
-    txs: Vec<Sender<Msg>>,
+    txs: Vec<SyncSender<Msg>>,
     metrics: Arc<Metrics>,
+    shed_retry_ms: u64,
+}
+
+/// Why a non-blocking submission was rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The target shard's bounded queue is full; retry after the hinted
+    /// back-off (the wire path turns this into a shed response).
+    Overloaded {
+        /// Suggested client back-off in milliseconds.
+        retry_ms: u64,
+    },
+    /// The service has shut down; the request can never be served.
+    Closed,
+}
+
+/// An accepted, not-yet-answered evaluation (from
+/// [`ServiceHandle::submit_with`]).
+pub struct PendingEval {
+    rx: Receiver<Response>,
+}
+
+impl PendingEval {
+    /// Block until the batcher answers. A worker that exits before
+    /// answering (shutdown race) surfaces as a clean error.
+    pub fn wait(self) -> Result<Vec<Vec<f64>>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("service is shut down"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    fn into_receiver(self) -> Receiver<Response> {
+        self.rx
+    }
 }
 
 impl Service {
@@ -91,7 +147,7 @@ impl Service {
         let mut txs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
-            let (tx, rx) = channel::<Msg>();
+            let (tx, rx) = sync_channel::<Msg>(cfg.queue_depth.max(1));
             txs.push(tx);
             let metrics = metrics.clone();
             let factory = factory.clone();
@@ -109,7 +165,11 @@ impl Service {
             );
         }
         Service {
-            handle: ServiceHandle { txs, metrics },
+            handle: ServiceHandle {
+                txs,
+                metrics,
+                shed_retry_ms: cfg.shed_retry_ms,
+            },
             workers: handles,
         }
     }
@@ -121,7 +181,9 @@ impl Service {
 
     /// Shut down: signal every worker (handle clones may still exist —
     /// their subsequent `eval` calls error out), let each drain its
-    /// queue, and join them all.
+    /// queue, and join them all. In-flight pipelined TCP requests get
+    /// their drained responses (or a clean shutdown error from the
+    /// connection writer) — never a silent drop.
     pub fn shutdown(mut self) {
         self.stop();
     }
@@ -165,7 +227,9 @@ impl ServiceHandle {
     }
 
     /// Evaluate points with an optional per-request activation override
-    /// (`None` = the served model's own activation).
+    /// (`None` = the served model's own activation). Blocks while the
+    /// shard queue is full (in-process backpressure) — the wire path
+    /// uses [`ServiceHandle::submit_with`] and sheds instead.
     pub fn eval_with(
         &self,
         points: &[f64],
@@ -185,9 +249,43 @@ impl ServiceHandle {
             .map_err(|e| anyhow!(e))
     }
 
+    /// Submit without blocking: enqueue on the target shard if it has
+    /// room, else shed. The returned [`PendingEval`] resolves on
+    /// [`PendingEval::wait`] (or feeds the pipelined connection writer).
+    pub fn submit_with(
+        &self,
+        points: &[f64],
+        activation: Option<ActivationKind>,
+    ) -> std::result::Result<PendingEval, SubmitError> {
+        let (tx, rx) = channel::<Response>();
+        let msg = Msg::Eval(Request {
+            points: points.to_vec(),
+            activation,
+            enqueued: Instant::now(),
+            resp: tx,
+        });
+        match self.txs[self.shard_of(activation)].try_send(msg) {
+            Ok(()) => Ok(PendingEval { rx }),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_shed();
+                Err(SubmitError::Overloaded {
+                    retry_ms: self.shed_retry_ms,
+                })
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
     /// Snapshot of the global + per-worker metrics.
     pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// The shared live counters (e.g. to attach to an
+    /// [`OperatorServer`], so operator-path cache hits and errors land
+    /// in the same stats document).
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        self.metrics.clone()
     }
 }
 
@@ -198,12 +296,18 @@ impl ServiceHandle {
 ///
 /// Operator requests bypass the batcher queues — every request is a
 /// self-contained fused batch already (`D · B` rows), so dynamic
-/// batching would only add latency. Plans are compiled per request
-/// (cheap: a small exact rational solve) because the operator is
-/// client-chosen.
+/// batching would only add latency. Compiled operators and engines come
+/// from the process-wide [`crate::pde::cache`] keyed on
+/// `(dim, spec)` / `(dim, n, policy)`, so across requests, connections
+/// and servers each distinct operator compiles exactly once; per-request
+/// activation overrides retag the served weights exactly as on the
+/// scalar path (plans are activation-independent — see the cache keying
+/// rules in `docs/ARCHITECTURE.md`).
 pub struct OperatorServer {
     mlp: crate::nn::Mlp,
     policy: crate::ntp::ParallelPolicy,
+    metrics: Option<Arc<Metrics>>,
+    cached: bool,
 }
 
 /// Highest operator order [`OperatorServer::eval`] accepts — the
@@ -214,42 +318,98 @@ pub struct OperatorServer {
 pub const MAX_SERVED_OPERATOR_ORDER: usize = 8;
 
 impl OperatorServer {
-    /// Serve `mlp` (any input dim) with the given batch-parallel policy.
+    /// Serve `mlp` (any input dim) with the given batch-parallel policy,
+    /// using the shared compile cache.
     pub fn new(mlp: crate::nn::Mlp, policy: crate::ntp::ParallelPolicy) -> OperatorServer {
-        OperatorServer { mlp, policy }
+        OperatorServer {
+            mlp,
+            policy,
+            metrics: None,
+            cached: true,
+        }
+    }
+
+    /// [`OperatorServer::new`] with the compile cache disabled: every
+    /// request recompiles its operator and engine. The pre-cache
+    /// behaviour, kept as the `bench serve` baseline leg.
+    pub fn uncached(mlp: crate::nn::Mlp, policy: crate::ntp::ParallelPolicy) -> OperatorServer {
+        OperatorServer {
+            cached: false,
+            ..OperatorServer::new(mlp, policy)
+        }
+    }
+
+    /// Attach shared metrics: cache hits/misses (and errors) recorded
+    /// per request land in the service's stats document.
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> OperatorServer {
+        self.metrics = Some(metrics);
+        self
     }
 
     /// Evaluate `(u, L[u])` at the requested points. `operator` is a
     /// library problem name or a [`crate::pde::DiffOperator::parse`]
     /// spec over the served model's input dim, of order ≤
-    /// [`MAX_SERVED_OPERATOR_ORDER`].
+    /// [`MAX_SERVED_OPERATOR_ORDER`]; `activation` optionally retags
+    /// the served weights for this request.
     pub fn eval(
         &self,
         points: &[Vec<f64>],
         operator: &str,
+        activation: Option<ActivationKind>,
     ) -> std::result::Result<(Vec<f64>, Vec<f64>), String> {
         let dim = self.mlp.input_dim();
         if points.iter().any(|p| p.len() != dim) {
             return Err(format!("served model expects {dim}-dimensional points"));
         }
-        let op = crate::pde::resolve_operator(operator, dim)?;
+        let (op, op_hit) = if self.cached {
+            crate::pde::cache::shared_operator(operator, dim)?
+        } else {
+            (Arc::new(crate::pde::resolve_operator(operator, dim)?), false)
+        };
+        if let Some(m) = &self.metrics {
+            m.record_plan_lookup(op_hit);
+        }
         if op.max_order() > MAX_SERVED_OPERATOR_ORDER {
             return Err(format!(
                 "operator order {} exceeds the served maximum {MAX_SERVED_OPERATOR_ORDER}",
                 op.max_order()
             ));
         }
+        let (engine, engine_hit) = if self.cached {
+            crate::pde::cache::shared_engine(dim, op.max_order(), self.policy)
+        } else {
+            (
+                Arc::new(crate::ntp::MultiJetEngine::with_policy(
+                    dim,
+                    op.max_order(),
+                    self.policy,
+                )),
+                false,
+            )
+        };
+        if let Some(m) = &self.metrics {
+            m.record_plan_lookup(engine_hit);
+        }
         let flat: Vec<f64> = points.iter().flatten().copied().collect();
         let x = crate::tensor::Tensor::from_vec(flat, &[points.len(), dim]);
-        let engine = crate::ntp::MultiJetEngine::with_policy(dim, op.max_order(), self.policy);
-        let jet = engine.jet(&self.mlp, &x);
+        let retagged;
+        let model = match activation {
+            Some(kind) if kind != self.mlp.activation => {
+                let mut m = self.mlp.clone();
+                m.activation = kind;
+                retagged = m;
+                &retagged
+            }
+            _ => &self.mlp,
+        };
+        let jet = engine.jet(model, &x);
         let u = jet.value();
         let vals = op.apply(&jet);
         Ok((u.data().to_vec(), vals.data().to_vec()))
     }
 }
 
-/// Serve the JSON-lines protocol on `listener`, one thread per connection,
+/// Serve the wire protocol on `listener`, one thread per connection,
 /// until the process exits. Returns only on accept errors. Operator
 /// requests are rejected; use [`serve_tcp_with`] to serve them.
 pub fn serve_tcp(listener: TcpListener, handle: ServiceHandle) -> Result<()> {
@@ -274,66 +434,258 @@ pub fn serve_tcp_with(
     Ok(())
 }
 
-/// One connection: read request lines, write response lines (no
+/// One connection: read requests, write responses in order (no
 /// operator support; see [`serve_connection_with`]).
 pub fn serve_connection(stream: TcpStream, handle: ServiceHandle) -> Result<()> {
     serve_connection_with(stream, handle, None)
 }
 
-/// One connection with optional operator support.
+/// One reply slot handed from the connection reader to its writer.
+enum PendingReply {
+    /// Computed inline on the reader thread (errors, stats, shed,
+    /// operator results).
+    Ready {
+        /// Reply with framing (vs a newline-terminated line).
+        framed: bool,
+        /// The encoded JSON payload.
+        payload: String,
+    },
+    /// A batcher eval still in flight; the writer blocks on it when its
+    /// turn comes, preserving request order while later requests keep
+    /// being parsed and enqueued (that overlap *is* the pipelining).
+    Waiting {
+        /// Reply with framing (vs a newline-terminated line).
+        framed: bool,
+        /// The batcher's response channel.
+        rx: Receiver<Response>,
+    },
+}
+
+/// One connection with optional operator support: a reader loop (this
+/// thread) plus an in-order writer thread, pipelined up to
+/// [`PIPELINE_WINDOW`] requests.
 pub fn serve_connection_with(
     stream: TcpStream,
     handle: ServiceHandle,
     operators: Option<&OperatorServer>,
 ) -> Result<()> {
-    let mut writer = stream.try_clone().context("cloning stream")?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line.context("reading request line")?;
-        if line.trim().is_empty() {
+    let writer_stream = stream.try_clone().context("cloning stream")?;
+    let (tx, rx) = sync_channel::<PendingReply>(PIPELINE_WINDOW);
+    let writer = std::thread::Builder::new()
+        .name("ntangent-conn-writer".to_string())
+        .spawn(move || write_replies(writer_stream, rx))
+        .expect("spawning connection writer");
+
+    let mut reader = BufReader::new(stream);
+    loop {
+        let (framed, text) = match protocol::read_message(&mut reader) {
+            Ok(Incoming::Frame(s)) => (true, s),
+            Ok(Incoming::Line(s)) => (false, s),
+            Ok(Incoming::Eof) => break,
+            Err(e @ (ReadError::TooLarge { .. } | ReadError::BadUtf8)) => {
+                // Protocol violation: answer once, then close — the
+                // stream position is no longer trustworthy. Reply
+                // framed iff the offending message was framed (BadUtf8
+                // only arises from frames; lines are checked per byte).
+                let framed = !matches!(e, ReadError::TooLarge { framed: false, .. });
+                let _ = tx.send(PendingReply::Ready {
+                    framed,
+                    payload: protocol::encode_error(&e.to_string()),
+                });
+                break;
+            }
+            Err(ReadError::Io(_)) => break, // disconnect / truncated frame
+        };
+        if text.trim().is_empty() {
             continue;
         }
-        let reply = match protocol::parse_request(&line) {
+        let reply = match protocol::parse_request(&text) {
             Ok(protocol::WireRequest::Eval { points, activation }) => {
-                match handle.eval_with(&points, activation) {
-                    Ok(channels) => protocol::encode_channels(&channels),
-                    Err(e) => protocol::encode_error(&e.to_string()),
+                match handle.submit_with(&points, activation) {
+                    Ok(pending) => PendingReply::Waiting {
+                        framed,
+                        rx: pending.into_receiver(),
+                    },
+                    Err(SubmitError::Overloaded { retry_ms }) => PendingReply::Ready {
+                        framed,
+                        payload: protocol::encode_shed(retry_ms),
+                    },
+                    Err(SubmitError::Closed) => PendingReply::Ready {
+                        framed,
+                        payload: protocol::encode_error("service is shut down"),
+                    },
                 }
             }
-            Ok(protocol::WireRequest::EvalOperator { points, operator }) => match operators {
-                Some(srv) => match srv.eval(&points, &operator) {
-                    Ok((u, vals)) => protocol::encode_operator_values(&u, &vals),
-                    Err(e) => protocol::encode_error(&e),
+            Ok(protocol::WireRequest::EvalOperator {
+                points,
+                operator,
+                activation,
+            }) => PendingReply::Ready {
+                framed,
+                payload: match operators {
+                    Some(srv) => match srv.eval(&points, &operator, activation) {
+                        Ok((u, vals)) => protocol::encode_operator_values(&u, &vals),
+                        Err(e) => protocol::encode_error(&e),
+                    },
+                    None => protocol::encode_error(
+                        "this endpoint serves no operator evaluator (scalar checkpoints only)",
+                    ),
                 },
-                None => protocol::encode_error(
-                    "this endpoint serves no operator evaluator (scalar checkpoints only)",
-                ),
             },
-            Ok(protocol::WireRequest::Stats) => protocol::encode_stats(&handle.metrics()),
-            Err(e) => protocol::encode_error(&e),
+            Ok(protocol::WireRequest::Stats) => PendingReply::Ready {
+                framed,
+                payload: protocol::encode_stats(&handle.metrics()),
+            },
+            Err(e) => PendingReply::Ready {
+                framed,
+                payload: protocol::encode_error(&e),
+            },
         };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
+        if tx.send(reply).is_err() {
+            break; // writer exited (client stopped reading / disconnected)
+        }
     }
+    drop(tx); // writer drains the in-flight window, then exits
+    let _ = writer.join();
     Ok(())
 }
 
-/// A minimal blocking TCP client for the JSON-lines protocol (used by the
-/// examples, tests and the benchmark harness).
+/// The connection writer: answer reply slots strictly in order,
+/// buffering while more replies are immediately available and flushing
+/// before any blocking wait (so no completed reply is ever stuck behind
+/// an incomplete one).
+fn write_replies(stream: TcpStream, rx: Receiver<PendingReply>) {
+    let mut w = BufWriter::new(stream);
+    loop {
+        let next = match rx.try_recv() {
+            Ok(p) => p,
+            Err(TryRecvError::Empty) => {
+                if w.flush().is_err() {
+                    return;
+                }
+                match rx.recv() {
+                    Ok(p) => p,
+                    Err(_) => return, // reader closed; window fully drained
+                }
+            }
+            Err(TryRecvError::Disconnected) => break,
+        };
+        let (framed, payload) = match next {
+            PendingReply::Ready { framed, payload } => (framed, payload),
+            PendingReply::Waiting { framed, rx: resp } => {
+                let r = match resp.try_recv() {
+                    Ok(r) => r,
+                    Err(TryRecvError::Empty) => {
+                        if w.flush().is_err() {
+                            return;
+                        }
+                        // Worker gone before answering = shutdown race:
+                        // the client gets a clean error, not silence.
+                        resp.recv()
+                            .unwrap_or_else(|_| Err("service is shut down".to_string()))
+                    }
+                    Err(TryRecvError::Disconnected) => Err("service is shut down".to_string()),
+                };
+                let payload = match r {
+                    Ok(channels) => protocol::encode_channels(&channels),
+                    Err(e) => protocol::encode_error(&e),
+                };
+                (framed, payload)
+            }
+        };
+        let io = if framed {
+            protocol::write_frame(&mut w, &payload)
+        } else {
+            w.write_all(payload.as_bytes())
+                .and_then(|()| w.write_all(b"\n"))
+        };
+        if io.is_err() {
+            return; // client gone; reader unblocks on its next send
+        }
+    }
+    let _ = w.flush();
+}
+
+/// A minimal blocking TCP client for the wire protocol (used by the
+/// examples, tests and the benchmark harness). Requests are
+/// length-framed; the stream is reused across requests, and the
+/// `submit_*`/`recv_*` pairs pipeline many requests over it (responses
+/// arrive strictly in submission order).
 pub struct TcpClient {
     reader: BufReader<TcpStream>,
-    writer: TcpStream,
+    writer: BufWriter<TcpStream>,
 }
 
 impl TcpClient {
     /// Connect to a serving `ntangent serve` endpoint.
     pub fn connect(addr: &str) -> Result<TcpClient> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-        let writer = stream.try_clone()?;
+        let writer = BufWriter::new(stream.try_clone()?);
         Ok(TcpClient {
             reader: BufReader::new(stream),
             writer,
         })
+    }
+
+    /// Bound every subsequent `recv_*` by a socket read timeout
+    /// (`None` = block forever). Lets harnesses turn a hung server into
+    /// a test failure instead of a hang.
+    pub fn set_read_timeout(&self, timeout: Option<std::time::Duration>) -> Result<()> {
+        self.reader
+            .get_ref()
+            .set_read_timeout(timeout)
+            .context("setting read timeout")
+    }
+
+    /// Queue one scalar evaluation request (pipelined; pair with
+    /// [`TcpClient::recv_channels`] in submission order).
+    pub fn submit_eval(
+        &mut self,
+        points: &[f64],
+        activation: Option<ActivationKind>,
+    ) -> Result<()> {
+        let req = protocol::encode_request(points, activation);
+        self.submit_raw(&req)
+    }
+
+    /// Queue one operator evaluation request (pair with
+    /// [`TcpClient::recv_operator`]).
+    pub fn submit_operator(
+        &mut self,
+        points: &[Vec<f64>],
+        operator: &str,
+        activation: Option<ActivationKind>,
+    ) -> Result<()> {
+        let req = protocol::encode_operator_request(points, operator, activation);
+        self.submit_raw(&req)
+    }
+
+    /// Queue one raw JSON payload as a framed request.
+    pub fn submit_raw(&mut self, payload: &str) -> Result<()> {
+        protocol::write_frame(&mut self.writer, payload).context("writing request frame")
+    }
+
+    /// Receive the next response payload (framed or line — flushes any
+    /// queued requests first).
+    pub fn recv_raw(&mut self) -> Result<String> {
+        self.writer.flush().context("flushing requests")?;
+        match protocol::read_message(&mut self.reader) {
+            Ok(Incoming::Frame(s) | Incoming::Line(s)) => Ok(s),
+            Ok(Incoming::Eof) => Err(anyhow!("server closed the connection")),
+            Err(e) => Err(anyhow!("reading response: {e}")),
+        }
+    }
+
+    /// Receive and decode the next `channels` response.
+    pub fn recv_channels(&mut self) -> Result<Vec<Vec<f64>>> {
+        let line = self.recv_raw()?;
+        protocol::parse_channels(&line).map_err(|e| anyhow!(e))
+    }
+
+    /// Receive and decode the next operator response `(u, L[u])`.
+    pub fn recv_operator(&mut self) -> Result<(Vec<f64>, Vec<f64>)> {
+        let line = self.recv_raw()?;
+        protocol::parse_operator_values(&line).map_err(|e| anyhow!(e))
     }
 
     /// Evaluate points with the served model's own activation.
@@ -348,12 +700,8 @@ impl TcpClient {
         points: &[f64],
         activation: Option<ActivationKind>,
     ) -> Result<Vec<Vec<f64>>> {
-        let req = protocol::encode_request(points, activation);
-        self.writer.write_all(req.as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        protocol::parse_channels(line.trim()).map_err(|e| anyhow!(e))
+        self.submit_eval(points, activation)?;
+        self.recv_channels()
     }
 
     /// Evaluate a differential operator at multi-dimensional points:
@@ -364,20 +712,14 @@ impl TcpClient {
         points: &[Vec<f64>],
         operator: &str,
     ) -> Result<(Vec<f64>, Vec<f64>)> {
-        let req = protocol::encode_operator_request(points, operator);
-        self.writer.write_all(req.as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        protocol::parse_operator_values(line.trim()).map_err(|e| anyhow!(e))
+        self.submit_operator(points, operator, None)?;
+        self.recv_operator()
     }
 
-    /// Fetch the stats response line (raw JSON).
+    /// Fetch the stats response (raw JSON).
     pub fn stats(&mut self) -> Result<String> {
-        self.writer.write_all(b"{\"cmd\":\"stats\"}\n")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Ok(line.trim().to_string())
+        self.submit_raw("{\"cmd\":\"stats\"}")?;
+        self.recv_raw()
     }
 }
 
@@ -412,6 +754,20 @@ mod tests {
             assert_eq!(channels[k].as_slice(), direct[k].data(), "channel {k}");
         }
         assert_eq!(handle.metrics().requests, 1);
+        service.shutdown();
+    }
+
+    #[test]
+    fn submit_wait_matches_blocking_eval() {
+        let (service, mlp) = test_service();
+        let handle = service.handle();
+        let pending = handle.submit_with(&[0.2, -0.4], None).unwrap();
+        let channels = pending.wait().unwrap();
+        let direct =
+            NtpEngine::new(2).forward(&mlp, &Tensor::from_vec(vec![0.2, -0.4], &[2, 1]));
+        for k in 0..3 {
+            assert_eq!(channels[k].as_slice(), direct[k].data(), "channel {k}");
+        }
         service.shutdown();
     }
 
@@ -461,6 +817,32 @@ mod tests {
         service.shutdown();
     }
 
+    /// The same TCP connection answers many pipelined requests strictly
+    /// in submission order.
+    #[test]
+    fn tcp_pipelining_preserves_order() {
+        let (service, mlp) = test_service();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = service.handle();
+        std::thread::spawn(move || serve_tcp(listener, handle));
+
+        let mut client = TcpClient::connect(&addr).unwrap();
+        let engine = NtpEngine::new(2);
+        let n = 64;
+        for i in 0..n {
+            client.submit_eval(&[i as f64 * 0.01], None).unwrap();
+        }
+        for i in 0..n {
+            let channels = client.recv_channels().unwrap();
+            let direct =
+                engine.forward(&mlp, &Tensor::from_vec(vec![i as f64 * 0.01], &[1, 1]));
+            assert_eq!(channels[0].as_slice(), direct[0].data(), "request {i}");
+        }
+        assert_eq!(service.handle().metrics().requests, n as u64);
+        service.shutdown();
+    }
+
     /// Operator requests over TCP: a 2-D model served with an
     /// [`OperatorServer`] answers `(u, L[u])` matching the direct jet
     /// evaluation; endpoints without one reject the request; scalar
@@ -475,7 +857,10 @@ mod tests {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let handle = service.handle();
-        let ops = Arc::new(OperatorServer::new(mlp2.clone(), ParallelPolicy::Serial));
+        let ops = Arc::new(
+            OperatorServer::new(mlp2.clone(), ParallelPolicy::Serial)
+                .with_metrics(handle.metrics_handle()),
+        );
         std::thread::spawn(move || serve_tcp_with(listener, handle, Some(ops)));
 
         let mut client = TcpClient::connect(&addr).unwrap();
@@ -487,6 +872,13 @@ mod tests {
         let jet = engine.jet(&mlp2, &x);
         assert_eq!(u, jet.value().data().to_vec());
         assert_eq!(vals, op.apply(&jet).data().to_vec());
+        // A repeat of the same operator hits the compile cache and is
+        // bitwise identical.
+        let (u2, vals2) = client.eval_operator(&pts, "d20+d02").unwrap();
+        assert_eq!(u2, u);
+        assert_eq!(vals2, vals);
+        let m = service.handle().metrics();
+        assert!(m.plan_hits >= 2, "second request should hit: {m:?}");
         // Wrong arity, unknown operators and orders beyond the served
         // cap surface as protocol errors (never connection drops).
         assert!(client.eval_operator(&[vec![0.1]], "d20+d02").is_err());
@@ -507,17 +899,50 @@ mod tests {
         service2.shutdown();
     }
 
+    /// Per-request activation overrides on the operator path retag the
+    /// served weights exactly like the scalar path does.
+    #[test]
+    fn operator_server_applies_activation_overrides() {
+        use crate::ntp::{MultiJetEngine, ParallelPolicy};
+        let mut rng = Prng::seeded(78);
+        let mlp2 = Mlp::uniform(2, 6, 2, 1, &mut rng);
+        let srv = OperatorServer::new(mlp2.clone(), ParallelPolicy::Serial);
+        let pts = vec![vec![0.15, -0.3], vec![0.4, 0.2]];
+        for kind in ActivationKind::ALL {
+            let (u, vals) = srv.eval(&pts, "d20+d02", Some(kind)).unwrap();
+            let mut retagged = mlp2.clone();
+            retagged.activation = kind;
+            let engine = MultiJetEngine::new(2, 2);
+            let x = Tensor::from_vec(vec![0.15, -0.3, 0.4, 0.2], &[2, 2]);
+            let jet = engine.jet(&retagged, &x);
+            assert_eq!(u, jet.value().data().to_vec(), "{}", kind.name());
+            assert_eq!(
+                vals,
+                crate::pde::DiffOperator::laplacian(2).apply(&jet).data().to_vec(),
+                "{}",
+                kind.name()
+            );
+        }
+        // Cached and uncached servers agree bitwise.
+        let unc = OperatorServer::uncached(mlp2, ParallelPolicy::Serial);
+        assert_eq!(
+            srv.eval(&pts, "d20+d02", None).unwrap(),
+            unc.eval(&pts, "d20+d02", None).unwrap()
+        );
+    }
+
     #[test]
     fn eval_after_shutdown_errors() {
         let (service, _) = test_service();
         let handle = service.handle();
         service.shutdown();
         assert!(handle.eval(&[0.0]).is_err());
+        assert_eq!(handle.submit_with(&[0.0], None).unwrap_err(), SubmitError::Closed);
     }
 
     /// Wire compatibility: a raw request line *without* an `activation`
     /// field must behave exactly as before the field existed — the served
-    /// (tanh) model answers.
+    /// (tanh) model answers, newline-terminated.
     #[test]
     fn legacy_requests_without_activation_field_serve_tanh() {
         let (service, mlp) = test_service();

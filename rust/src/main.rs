@@ -10,7 +10,7 @@
 #[cfg(feature = "reference-oracle")]
 use ntangent::bench::kernels;
 use ntangent::bench::{
-    grid, memory, operators, parallel, passes, profiles, train_par, training,
+    grid, memory, operators, parallel, passes, profiles, serve, train_par, training,
 };
 use ntangent::coordinator::{BatcherConfig, NativeBackend, OperatorServer, PjrtBackend, Service};
 use ntangent::nn::Checkpoint;
@@ -59,7 +59,7 @@ fn top_usage() -> String {
     "ntangent — n-TangentProp reproduction (quasilinear higher-order derivatives)\n\
      \nUSAGE: ntangent <COMMAND> [OPTIONS]\n\
      \nCOMMANDS:\n\
-     \x20 bench <target>   fig1..fig10|mem|par|kernels|train-par|operators|all\n\
+     \x20 bench <target>   fig1..fig10|mem|par|kernels|train-par|operators|serve|all\n\
      \x20 train            train a PINN (Burgers profile, or --pde heat2d|poisson2d|...)\n\
      \x20 eval             evaluate a checkpoint at points (--operator for PDE operators)\n\
      \x20 validate         check a Burgers checkpoint against the analytic profile\n\
@@ -96,7 +96,10 @@ fn bench_specs() -> Vec<OptSpec> {
         OptSpec { name: "smoke", help: "CI-sized kernel bench (kernels)", takes_value: false, default: None },
         OptSpec { name: "batch", help: "batch size (kernels)", takes_value: true, default: None },
         OptSpec { name: "orders", help: "comma list of derivative orders (kernels)", takes_value: true, default: None },
-        OptSpec { name: "json", help: "also write a BENCH_kernels.json to this path (kernels)", takes_value: true, default: None },
+        OptSpec { name: "json", help: "also write a BENCH_*.json to this path (kernels, operators, serve)", takes_value: true, default: None },
+        OptSpec { name: "requests", help: "mixed-leg request count (serve)", takes_value: true, default: None },
+        OptSpec { name: "connections", help: "concurrent pipelined connections (serve)", takes_value: true, default: None },
+        OptSpec { name: "window", help: "in-flight requests per connection (serve)", takes_value: true, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ]
 }
@@ -111,7 +114,7 @@ fn cmd_bench(raw: &[String]) -> Result<(), String> {
     let target = args
         .positional()
         .first()
-        .ok_or("bench needs a target (fig1..fig10, mem, par, kernels, train-par, all)")?
+        .ok_or("bench needs a target (fig1..fig10, mem, par, kernels, train-par, operators, serve, all)")?
         .clone();
     let out_dir = PathBuf::from(args.get("out-dir").unwrap());
     std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
@@ -119,7 +122,7 @@ fn cmd_bench(raw: &[String]) -> Result<(), String> {
     let targets: Vec<String> = if target == "all" {
         [
             "fig1", "fig4", "fig6", "fig8", "fig9", "fig7", "fig10", "mem", "par", "kernels",
-            "train-par", "operators",
+            "train-par", "operators", "serve",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -399,6 +402,47 @@ fn run_bench_target(target: &str, args: &Args, out_dir: &Path) -> Result<(), Str
             }
             println!("{}", operators::summarize(&cells));
         }
+        "serve" => {
+            let mut cfg = if args.flag("smoke") {
+                serve::ServeBenchConfig::smoke()
+            } else {
+                serve::ServeBenchConfig::default()
+            };
+            if let Some(v) = args.get_usize("requests")? {
+                cfg.requests = v.max(1);
+            }
+            if let Some(v) = args.get_usize("connections")? {
+                cfg.connections = v.max(1);
+            }
+            if let Some(v) = args.get_usize("window")? {
+                cfg.window = v.max(1);
+            }
+            if let Some(v) = args.get_usize("width")? {
+                cfg.width = v;
+            }
+            if let Some(v) = args.get_usize("depth")? {
+                cfg.depth = v;
+            }
+            if let Some(v) = args.get_usize("seed")? {
+                cfg.seed = v as u64;
+            }
+            eprintln!(
+                "[bench] serve: {} mixed + {} cached-operator pipelined requests \
+                 ({} connections, window {}), {} uncached one-shot baseline",
+                cfg.requests,
+                cfg.operator_requests,
+                cfg.connections,
+                cfg.window,
+                cfg.baseline_requests
+            );
+            let cells = serve::run(&cfg, |msg| eprintln!("[bench] {msg}"));
+            serve::save(&cells, out_dir).map_err(|e| e.to_string())?;
+            if let Some(p) = args.get("json") {
+                serve::save_json(&cfg, &cells, Path::new(p)).map_err(|e| e.to_string())?;
+                eprintln!("[bench] wrote {p}");
+            }
+            println!("{}", serve::summarize(&cells));
+        }
         "train-par" | "train_par" => {
             let mut cfg = train_par::TrainParBenchConfig::default();
             if let Some(v) = args.get_usize("profile")? {
@@ -613,7 +657,7 @@ fn cmd_eval(raw: &[String]) -> Result<(), String> {
         }
         // Same evaluator the wire protocol's points_nd requests use.
         let server = OperatorServer::new(mlp, policy);
-        let (u, vals) = server.eval(&rows, op_spec)?;
+        let (u, vals) = server.eval(&rows, op_spec, None)?;
         println!("operator {} (order {})", op.describe(), op.max_order());
         print!("{:>28}", "point");
         print!("{:>16}{:>16}", "u", "L[u]");
@@ -723,6 +767,7 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "artifact", help: "artifact name (pjrt backend)", takes_value: true, default: Some("ntp_fwd_d3") },
         OptSpec { name: "batch-cap", help: "native backend batch cap", takes_value: true, default: Some("256") },
         OptSpec { name: "workers", help: "batcher workers (activation shards)", takes_value: true, default: Some("1") },
+        OptSpec { name: "queue-depth", help: "bounded ingress queue per worker (full = shed with retry_ms)", takes_value: true, default: Some("1024") },
         OptSpec { name: "threads", help: "per-batch parallelism: serial | auto | N", takes_value: true, default: Some("serial") },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
@@ -743,15 +788,17 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
 
     let theta = Tensor::from_vec(ck.theta.clone(), &[ck.theta.len()]);
     let mlp = ck.to_mlp().map_err(|e| e.to_string())?;
-    // The operator front serves multivariate `points_nd` requests
-    // against the same checkpoint (any input dim).
-    let operator_server = Arc::new(OperatorServer::new(mlp.clone(), policy));
+    let op_mlp = mlp.clone();
+    let cfg = BatcherConfig {
+        queue_depth: args.get_usize("queue-depth")?.unwrap().max(1),
+        ..BatcherConfig::default()
+    };
 
     let service = match backend_kind.as_str() {
         "native" => Service::start_pool(
             move |_w| Ok(Box::new(NativeBackend::new_parallel(mlp.clone(), n, cap, policy)) as _),
             workers,
-            BatcherConfig::default(),
+            cfg,
         ),
         "pjrt" => {
             if workers > 1 {
@@ -774,20 +821,28 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
                     let nd = spec.n_derivs.unwrap_or(n);
                     Ok(Box::new(PjrtBackend::new(exe, theta, batch, nd)) as _)
                 },
-                BatcherConfig::default(),
+                cfg,
             )
         }
         other => return Err(format!("unknown backend '{other}'")),
     };
+    // The operator front serves multivariate `points_nd` requests
+    // against the same checkpoint (any input dim), sharing the compile
+    // cache and the service's metrics.
+    let operator_server = Arc::new(
+        OperatorServer::new(op_mlp, policy).with_metrics(service.handle().metrics_handle()),
+    );
 
     let port = args.get_usize("port")?.unwrap();
     let listener =
         std::net::TcpListener::bind(("127.0.0.1", port as u16)).map_err(|e| e.to_string())?;
     eprintln!(
         "serving {backend_kind} backend on 127.0.0.1:{port} \
-         ({workers} worker(s), {policy:?} batch parallelism; \
-         one JSON object per line; {{\"points\":[..]}}, \
-         {{\"points_nd\":[[..],..],\"operator\":\"d20+d02\"}} or {{\"cmd\":\"stats\"}})"
+         ({workers} worker(s), {policy:?} batch parallelism, \
+         queue depth {} per worker; framed or line-delimited JSON, pipelined; \
+         {{\"points\":[..]}}, \
+         {{\"points_nd\":[[..],..],\"operator\":\"d20+d02\"}} or {{\"cmd\":\"stats\"}})",
+        cfg.queue_depth
     );
     ntangent::coordinator::service::serve_tcp_with(
         listener,

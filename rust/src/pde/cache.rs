@@ -1,0 +1,200 @@
+//! Process-wide compile caches for the serving path.
+//!
+//! Every operator request needs a compiled [`DiffOperator`] and a
+//! [`MultiJetEngine`] (whose [`crate::ntp::JetPlan`] solves an exact
+//! rational moment system), and every pool worker needs a scalar
+//! [`NtpEngine`] (Faà di Bruno program + activation towers). All three
+//! are pure functions of a small key — `(dim, spec)`, `(dim, n, policy)`
+//! and `(n, policy)` respectively — so the serving layer shares one
+//! compiled instance per key across all `OperatorServer`s, connection
+//! threads and pool workers instead of recompiling per request.
+//!
+//! The caches are `OnceLock`-initialized `RwLock<HashMap>`s: lookups
+//! take a read lock, misses compile *outside* any lock and then
+//! insert under a write lock (first inserter wins, so concurrent
+//! misses still converge on one shared instance). Engines and plans
+//! are deterministic, so a cached instance is bitwise interchangeable
+//! with a fresh compile — asserted by the tests below and consumed by
+//! the serving-layer hit/miss counters in
+//! [`crate::coordinator::Metrics`].
+//!
+//! The operator map is the only client-influenced key space (specs are
+//! client-chosen strings), so it is capped at
+//! [`MAX_CACHED_OPERATORS`]: once full, further distinct specs are
+//! compiled per request but not inserted, bounding memory under
+//! adversarial traffic.
+
+use crate::ntp::{MultiJetEngine, NtpEngine, ParallelPolicy};
+use crate::pde::{resolve_operator, DiffOperator};
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Hard cap on distinct cached operator specs (client-chosen keys).
+pub const MAX_CACHED_OPERATORS: usize = 512;
+
+/// Hashable mirror of [`ParallelPolicy`] (which deliberately carries no
+/// `Hash` derive on its public surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum PolicyKey {
+    Serial,
+    Fixed(usize),
+    Auto,
+}
+
+fn policy_key(policy: ParallelPolicy) -> PolicyKey {
+    match policy {
+        ParallelPolicy::Serial => PolicyKey::Serial,
+        ParallelPolicy::Fixed(t) => PolicyKey::Fixed(t),
+        ParallelPolicy::Auto => PolicyKey::Auto,
+    }
+}
+
+type EngineMap = HashMap<(usize, usize, PolicyKey), Arc<MultiJetEngine>>;
+type ScalarMap = HashMap<(usize, PolicyKey), Arc<NtpEngine>>;
+type OperatorMap = HashMap<(usize, String), Arc<DiffOperator>>;
+
+fn engines() -> &'static RwLock<EngineMap> {
+    static CELL: OnceLock<RwLock<EngineMap>> = OnceLock::new();
+    CELL.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+fn scalar_engines() -> &'static RwLock<ScalarMap> {
+    static CELL: OnceLock<RwLock<ScalarMap>> = OnceLock::new();
+    CELL.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+fn operators() -> &'static RwLock<OperatorMap> {
+    static CELL: OnceLock<RwLock<OperatorMap>> = OnceLock::new();
+    CELL.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+/// The shared [`MultiJetEngine`] for `(dim, n, policy)`; the `bool` is
+/// `true` on a cache hit. Misses compile outside the lock; the first
+/// inserter wins, so every caller ends up holding the same `Arc`.
+pub fn shared_engine(dim: usize, n: usize, policy: ParallelPolicy) -> (Arc<MultiJetEngine>, bool) {
+    let key = (dim, n, policy_key(policy));
+    if let Some(e) = engines().read().expect("engine cache poisoned").get(&key) {
+        return (e.clone(), true);
+    }
+    let fresh = Arc::new(MultiJetEngine::with_policy(dim, n, policy));
+    let mut map = engines().write().expect("engine cache poisoned");
+    (map.entry(key).or_insert(fresh).clone(), false)
+}
+
+/// The shared scalar [`NtpEngine`] for `(n, policy)` — pool workers
+/// serving the same derivative order reuse one compiled Faà di Bruno
+/// program and activation-tower set. The `bool` is `true` on a hit.
+pub fn shared_scalar_engine(n: usize, policy: ParallelPolicy) -> (Arc<NtpEngine>, bool) {
+    let key = (n, policy_key(policy));
+    if let Some(e) = scalar_engines().read().expect("scalar engine cache poisoned").get(&key) {
+        return (e.clone(), true);
+    }
+    let fresh = Arc::new(NtpEngine::with_policy(n, policy));
+    let mut map = scalar_engines().write().expect("scalar engine cache poisoned");
+    (map.entry(key).or_insert(fresh).clone(), false)
+}
+
+/// The shared compiled [`DiffOperator`] for `(spec, dim)`; the `bool`
+/// is `true` on a hit. Parse errors are returned (never cached), and
+/// once the map holds [`MAX_CACHED_OPERATORS`] distinct specs further
+/// new specs are compiled per call without being inserted.
+pub fn shared_operator(spec: &str, dim: usize) -> Result<(Arc<DiffOperator>, bool), String> {
+    let key = (dim, spec.to_string());
+    if let Some(op) = operators().read().expect("operator cache poisoned").get(&key) {
+        return Ok((op.clone(), true));
+    }
+    let fresh = Arc::new(resolve_operator(spec, dim)?);
+    let mut map = operators().write().expect("operator cache poisoned");
+    if let Some(op) = map.get(&key) {
+        return Ok((op.clone(), true));
+    }
+    if map.len() >= MAX_CACHED_OPERATORS {
+        return Ok((fresh, false));
+    }
+    map.insert(key, fresh.clone());
+    Ok((fresh, false))
+}
+
+/// Current entry counts `(engines, scalar_engines, operators)` —
+/// observability for tests and the stats endpoint.
+pub fn cache_sizes() -> (usize, usize, usize) {
+    (
+        engines().read().expect("engine cache poisoned").len(),
+        scalar_engines().read().expect("scalar engine cache poisoned").len(),
+        operators().read().expect("operator cache poisoned").len(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Mlp;
+    use crate::tensor::Tensor;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn shared_engine_hits_after_first_lookup() {
+        let (a, _) = shared_engine(2, 3, ParallelPolicy::Serial);
+        let (b, hit) = shared_engine(2, 3, ParallelPolicy::Serial);
+        assert!(hit);
+        assert!(Arc::ptr_eq(&a, &b));
+        // A different key is a distinct engine.
+        let (c, _) = shared_engine(2, 2, ParallelPolicy::Serial);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn shared_scalar_engine_hits_after_first_lookup() {
+        let (a, _) = shared_scalar_engine(5, ParallelPolicy::Serial);
+        let (b, hit) = shared_scalar_engine(5, ParallelPolicy::Serial);
+        assert!(hit);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn shared_operator_hits_and_rejects_bad_specs() {
+        let (a, _) = shared_operator("d20+d02", 2).unwrap();
+        let (b, hit) = shared_operator("d20+d02", 2).unwrap();
+        assert!(hit);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(shared_operator("not an operator", 2).is_err());
+        // Library names resolve through the same cache.
+        let (h, _) = shared_operator("heat2d", 2).unwrap();
+        let (h2, hit2) = shared_operator("heat2d", 2).unwrap();
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&h, &h2));
+    }
+
+    /// Cache correctness: evaluating through the cached engine/operator
+    /// pair is bitwise identical to a freshly compiled pair.
+    #[test]
+    fn cached_evaluation_is_bitwise_identical_to_fresh() {
+        let mut rng = Prng::seeded(404);
+        let mlp = Mlp::uniform(2, 6, 2, 1, &mut rng);
+        let x = Tensor::rand_uniform(&[9, 2], -1.0, 1.0, &mut rng);
+
+        let (engine, _) = shared_engine(2, 4, ParallelPolicy::Serial);
+        let (op, _) = shared_operator("d40+d04+d20*d02", 2).unwrap();
+        let jet = engine.jet(&mlp, &x);
+        let cached_u = jet.value();
+        let cached_vals = op.apply(&jet);
+
+        let fresh_engine = MultiJetEngine::new(2, 4);
+        let fresh_op = resolve_operator("d40+d04+d20*d02", 2).unwrap();
+        let fresh_jet = fresh_engine.jet(&mlp, &x);
+        assert_eq!(cached_u.data(), fresh_jet.value().data());
+        assert_eq!(cached_vals.data(), fresh_op.apply(&fresh_jet).data());
+    }
+
+    #[test]
+    fn cache_sizes_are_monotone_observables() {
+        shared_engine(2, 2, ParallelPolicy::Serial);
+        shared_operator("d20+d02", 2).unwrap();
+        let (e, s, o) = cache_sizes();
+        assert!(e >= 1);
+        // The scalar map may or may not have been touched by other
+        // tests in this process; it only ever grows.
+        assert_eq!(cache_sizes(), (e, s, o));
+        assert!(o >= 1);
+    }
+}

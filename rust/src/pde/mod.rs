@@ -24,6 +24,7 @@
 //! `ntangent train --pde <name>`, the wire protocol's operator requests
 //! and the operator benches.
 
+pub mod cache;
 pub mod operator;
 pub mod problems;
 

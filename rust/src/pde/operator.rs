@@ -351,6 +351,38 @@ mod tests {
         assert!(DiffOperator::parse("2.0+d02", 2).is_err());
     }
 
+    /// Error paths return messages that name the actual problem — the
+    /// serving front forwards them verbatim to wire clients.
+    #[test]
+    fn parse_error_messages_name_the_problem() {
+        let err = |spec: &str, dim: usize| DiffOperator::parse(spec, dim).unwrap_err();
+        assert_eq!(err("", 2), "empty operator spec");
+        assert_eq!(err("  \t ", 3), "empty operator spec");
+        // Unknown term/factor: the offending character is quoted.
+        assert!(err("q20", 2).contains("'q'"));
+        assert!(err("d20+foo", 2).contains("'f'"));
+        // Bad exponent digits: 'd' must be followed by exactly dim digits.
+        assert!(err("dx0", 2).contains("2 digits"));
+        assert!(err("d2", 2).contains("2 digits"));
+        assert!(err("d2z1", 3).contains("3 digits"));
+        // Trailing garbage after a complete term.
+        assert!(err("d20 d02", 2).contains("expected '+' or '-'"));
+        assert!(err("d20+d02!", 2).contains("'!'"));
+        // Dangling separators end inside a term.
+        assert_eq!(err("d20+", 2), "operator spec ends inside a term");
+        assert_eq!(err("d20*", 2), "operator spec ends inside a term");
+        // Malformed coefficient literals.
+        assert!(err("1.2.3*d20", 2).contains("bad coefficient '1.2.3'"));
+        // Terms of nothing but coefficients.
+        assert!(err("2.0+d02", 2).contains("at least one"));
+        // Parse failures never cache: the same bad spec keeps erroring
+        // and valid lookups still work (see `pde::cache` tests for the
+        // cached-vs-fresh bitwise check).
+        assert!(crate::pde::cache::shared_operator("q20", 2).is_err());
+        assert!(crate::pde::cache::shared_operator("q20", 2).is_err());
+        assert!(crate::pde::cache::shared_operator("d20+d02", 2).is_ok());
+    }
+
     /// `apply` on jets equals the hand-assembled combination of
     /// `jet.partial` calls, including the nonlinear product.
     #[test]

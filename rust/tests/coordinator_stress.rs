@@ -24,6 +24,7 @@ fn fixture() -> (Mlp, Service) {
         move || Ok(Box::new(NativeBackend::new(backend_mlp, 3, 32)) as _),
         BatcherConfig {
             max_wait: Duration::from_micros(500),
+            ..BatcherConfig::default()
         },
     );
     (mlp, service)
@@ -93,6 +94,7 @@ fn multi_worker_pool_survives_mixed_activation_hammering() {
         4,
         BatcherConfig {
             max_wait: Duration::from_micros(500),
+            ..BatcherConfig::default()
         },
     );
     let engine = NtpEngine::new(3);

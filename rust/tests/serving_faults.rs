@@ -1,0 +1,430 @@
+//! Fault injection for the serving stack: misbehaving clients, protocol
+//! violations, overload shedding, and shutdown under pipelined load.
+//!
+//! Every test drives the production `serve_tcp_with` stack over real
+//! loopback TCP. The invariant under attack: a hostile or unlucky
+//! client may get an error reply or a closed connection, but never a
+//! hang, a panic, or a silently dropped in-flight request — and never
+//! degraded service for *other* connections.
+
+use ntangent::coordinator::{
+    protocol, serve_tcp_with, BatcherConfig, EvalBackend, NativeBackend, OperatorServer, Service,
+    ServiceHandle, TcpClient,
+};
+use ntangent::nn::Mlp;
+use ntangent::ntp::{ActivationKind, ParallelPolicy};
+use ntangent::util::json::Json;
+use ntangent::util::prng::Prng;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A backend that sleeps per batch — makes queue-full windows and
+/// shutdown races deterministic enough to provoke on one core.
+struct SlowBackend {
+    delay: Duration,
+}
+
+impl EvalBackend for SlowBackend {
+    fn max_batch(&self) -> usize {
+        4
+    }
+    fn n_channels(&self) -> usize {
+        2
+    }
+    fn eval_batch(&mut self, xs: &[f64]) -> anyhow::Result<Vec<Vec<f64>>> {
+        std::thread::sleep(self.delay);
+        Ok(vec![xs.to_vec(), xs.iter().map(|x| 2.0 * x).collect()])
+    }
+}
+
+fn native_service() -> (Service, Mlp) {
+    let mut rng = Prng::seeded(41);
+    let mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+    let backend = mlp.clone();
+    let service = Service::start(
+        move || Ok(Box::new(NativeBackend::new(backend, 2, 32)) as Box<dyn EvalBackend>),
+        BatcherConfig::default(),
+    );
+    (service, mlp)
+}
+
+fn slow_service(delay_ms: u64, queue_depth: usize) -> Service {
+    Service::start(
+        move || {
+            Ok(Box::new(SlowBackend {
+                delay: Duration::from_millis(delay_ms),
+            }) as Box<dyn EvalBackend>)
+        },
+        BatcherConfig {
+            queue_depth,
+            shed_retry_ms: 5,
+            ..BatcherConfig::default()
+        },
+    )
+}
+
+/// Bind a loopback endpoint serving `handle` (operator front optional).
+fn spawn_server(handle: ServiceHandle, ops: Option<Arc<OperatorServer>>) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || serve_tcp_with(listener, handle, ops));
+    addr
+}
+
+fn timed_client(addr: &str) -> TcpClient {
+    let client = TcpClient::connect(addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    client
+}
+
+/// Raw framed write: magic byte + u32 BE length + payload bytes.
+fn raw_frame(payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(5 + payload.len());
+    buf.push(protocol::FRAME_MAGIC);
+    buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// A client that disconnects mid-frame must not disturb the service:
+/// later connections (and concurrent ones) are served normally.
+#[test]
+fn mid_request_disconnect_leaves_server_healthy() {
+    let (service, _) = native_service();
+    let addr = spawn_server(service.handle(), None);
+
+    for cut in [1usize, 3, 7] {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let frame = raw_frame(b"{\"points\": [0.25]}");
+        s.write_all(&frame[..cut.min(frame.len() - 1)]).unwrap();
+        drop(s); // disconnect with a partial frame on the wire
+    }
+    // Also: a full request whose connection dies before reading the
+    // reply (the response write hits a closed socket).
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(&raw_frame(b"{\"points\": [0.5]}")).unwrap();
+    drop(s);
+
+    std::thread::sleep(Duration::from_millis(50));
+    let mut client = timed_client(&addr);
+    let channels = client.eval(&[0.1, 0.2]).unwrap();
+    assert_eq!(channels.len(), 3);
+    assert_eq!(channels[0].len(), 2);
+    service.shutdown();
+}
+
+/// A stalled client (floods requests, never reads) only stalls itself:
+/// a concurrent well-behaved connection keeps getting answers.
+#[test]
+fn stalled_client_does_not_block_others() {
+    let (service, _) = native_service();
+    let addr = spawn_server(service.handle(), None);
+
+    // The stalled client: pipeline a pile of requests, read nothing.
+    let mut stalled = TcpClient::connect(&addr).unwrap();
+    for i in 0..200 {
+        stalled.submit_eval(&[i as f64 * 0.01], None).unwrap();
+    }
+    // (Never recv; the connection writer may block on its socket
+    // buffer, which must not affect anyone else.)
+
+    let mut client = timed_client(&addr);
+    let t0 = Instant::now();
+    for i in 0..20 {
+        let channels = client.eval(&[i as f64 * 0.05]).unwrap();
+        assert_eq!(channels.len(), 3);
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(15),
+        "well-behaved client starved behind a stalled one"
+    );
+    drop(stalled);
+    service.shutdown();
+}
+
+/// An oversized frame declaration is answered with a protocol error
+/// (without reading the payload) and the connection is closed.
+#[test]
+fn oversized_frame_is_rejected_with_an_error() {
+    let (service, _) = native_service();
+    let addr = spawn_server(service.handle(), None);
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut header = vec![protocol::FRAME_MAGIC];
+    header.extend_from_slice(&((protocol::MAX_FRAME_LEN as u32) + 1).to_be_bytes());
+    s.write_all(&header).unwrap();
+
+    let mut reply = Vec::new();
+    s.read_to_end(&mut reply).unwrap(); // reply then EOF (server closes)
+    let text = String::from_utf8_lossy(&reply);
+    let body = text
+        .trim_start_matches(|c: char| c as u32 == protocol::FRAME_MAGIC as u32)
+        .to_string();
+    // Strip the reply's own frame header (magic + 4 length bytes).
+    let json_start = body.find('{').expect("an error reply before close");
+    let (msg, retry) = protocol::parse_error(&body[json_start..]).expect("an error payload");
+    assert!(msg.contains("frame"), "unexpected error: {msg}");
+    assert!(retry.is_none());
+    service.shutdown();
+}
+
+/// A truncated frame (length promises more bytes than ever arrive)
+/// ends in a clean close, and the endpoint stays healthy.
+#[test]
+fn truncated_frame_closes_cleanly() {
+    let (service, _) = native_service();
+    let addr = spawn_server(service.handle(), None);
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let mut msg = vec![protocol::FRAME_MAGIC];
+    msg.extend_from_slice(&200u32.to_be_bytes());
+    msg.extend_from_slice(b"{\"points\""); // 9 of the promised 200 bytes
+    s.write_all(&msg).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut reply = Vec::new();
+    s.read_to_end(&mut reply).unwrap();
+    assert!(reply.is_empty(), "truncated frame should close silently");
+
+    let mut client = timed_client(&addr);
+    assert_eq!(client.eval(&[0.3]).unwrap().len(), 3);
+    service.shutdown();
+}
+
+/// Garbage JSON (framed or line-delimited) gets an error reply and the
+/// connection keeps working for subsequent valid requests.
+#[test]
+fn garbage_json_gets_error_and_connection_survives() {
+    let (service, _) = native_service();
+    let addr = spawn_server(service.handle(), None);
+    let mut client = timed_client(&addr);
+
+    for garbage in ["{not json", "[1,2,3]", "{\"points\": \"nope\"}", "{}"] {
+        client.submit_raw(garbage).unwrap();
+        let reply = client.recv_raw().unwrap();
+        assert!(
+            protocol::parse_error(&reply).is_some(),
+            "expected an error for {garbage:?}, got {reply}"
+        );
+    }
+    // The same connection still serves valid traffic.
+    assert_eq!(client.eval(&[0.4]).unwrap().len(), 3);
+    service.shutdown();
+}
+
+/// Overload: a slow backend behind a depth-1 queue sheds the excess
+/// with `{"error":"overloaded","retry_ms":…}`, the shed counter moves,
+/// and honoring retry_ms eventually lands every request.
+#[test]
+fn shed_and_retry_roundtrip() {
+    let service = slow_service(60, 1);
+    let handle = service.handle();
+    let addr = spawn_server(handle.clone(), None);
+    let mut client = timed_client(&addr);
+
+    let n = 16;
+    for i in 0..n {
+        client.submit_eval(&[i as f64], None).unwrap();
+    }
+    let mut served = 0usize;
+    let mut shed_retry = Vec::new();
+    for _ in 0..n {
+        let reply = client.recv_raw().unwrap();
+        match protocol::parse_error(&reply) {
+            None => served += 1,
+            Some((msg, retry)) => {
+                assert_eq!(msg, "overloaded");
+                shed_retry.push(retry.expect("shed replies carry retry_ms"));
+            }
+        }
+    }
+    assert!(served >= 1, "at least the queued request must be served");
+    assert!(
+        !shed_retry.is_empty(),
+        "a depth-1 queue behind a 60ms backend must shed a 16-deep burst"
+    );
+    assert!(handle.metrics().shed >= shed_retry.len() as u64);
+
+    // Retrying after the advertised back-off eventually succeeds.
+    for &retry_ms in &shed_retry {
+        let mut ok = false;
+        for _ in 0..200 {
+            std::thread::sleep(Duration::from_millis(retry_ms.max(1)));
+            client.submit_eval(&[0.5], None).unwrap();
+            if protocol::parse_error(&client.recv_raw().unwrap()).is_none() {
+                ok = true;
+                break;
+            }
+        }
+        assert!(ok, "retry never succeeded");
+    }
+    service.shutdown();
+}
+
+/// The satellite-fix regression: shutting down with a window of
+/// pipelined requests in flight answers every one of them — drained
+/// results or clean shutdown errors, never silence or a hang.
+#[test]
+fn shutdown_under_pipelined_load_answers_every_request() {
+    let service = slow_service(10, 64);
+    let addr = spawn_server(service.handle(), None);
+    let mut client = timed_client(&addr);
+
+    let n = 48;
+    for i in 0..n {
+        client.submit_eval(&[i as f64 * 0.1], None).unwrap();
+    }
+    // Shut down while the window is in flight.
+    let shutdown = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(25));
+        service.shutdown();
+    });
+    let mut answered = 0usize;
+    let mut served = 0usize;
+    let mut shutdown_errors = 0usize;
+    for _ in 0..n {
+        let reply = client.recv_raw().expect("every pipelined request gets a reply");
+        answered += 1;
+        match protocol::parse_error(&reply) {
+            None => served += 1,
+            Some((msg, _)) => {
+                assert!(
+                    msg.contains("shut down") || msg == "overloaded",
+                    "unexpected error under shutdown: {msg}"
+                );
+                shutdown_errors += 1;
+            }
+        }
+    }
+    shutdown.join().unwrap();
+    assert_eq!(answered, n);
+    assert_eq!(served + shutdown_errors, n);
+    assert!(served >= 1, "drain-on-shutdown should serve the queued prefix");
+}
+
+/// Requests racing a completed shutdown get clean errors (wire path).
+#[test]
+fn requests_after_shutdown_get_clean_errors() {
+    let (service, _) = native_service();
+    let addr = spawn_server(service.handle(), None);
+    let mut client = timed_client(&addr);
+    assert_eq!(client.eval(&[0.2]).unwrap().len(), 3);
+    service.shutdown();
+    client.submit_eval(&[0.3], None).unwrap();
+    let reply = client.recv_raw().unwrap();
+    let (msg, _) = protocol::parse_error(&reply).expect("an error after shutdown");
+    assert!(msg.contains("shut down"), "got: {msg}");
+}
+
+/// 30-second mixed-traffic soak (run via `--ignored` in CI's stress
+/// job): pipelined clients with random disconnects, all four
+/// activation towers, dim-1 operator requests and stats probes; on
+/// every gracefully drained connection received == sent, and metrics
+/// counters are monotone throughout.
+#[test]
+#[ignore]
+fn soak_mixed_traffic_for_30s() {
+    let (service, _) = native_service();
+    let handle = service.handle();
+    let mut rng = Prng::seeded(4242);
+    let op_mlp = Mlp::uniform(1, 8, 2, 1, &mut rng);
+    let ops = Arc::new(
+        OperatorServer::new(op_mlp, ParallelPolicy::Serial)
+            .with_metrics(handle.metrics_handle()),
+    );
+    let addr = spawn_server(handle.clone(), Some(ops));
+    let deadline = Instant::now() + Duration::from_secs(30);
+
+    let mut workers = Vec::new();
+    for t in 0..2u64 {
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut rng = Prng::seeded(900 + t);
+            let mut sent_total = 0u64;
+            let mut received_total = 0u64;
+            let mut errors = 0u64;
+            while Instant::now() < deadline {
+                // One connection "segment": pipeline a random burst,
+                // drain it fully, then (randomly) reconnect.
+                let mut client = timed_client(&addr);
+                let burst = 20 + rng.below(60) as usize;
+                let mut sent = 0usize;
+                for _ in 0..burst {
+                    let kind = rng.below(10);
+                    let ok = if kind < 6 {
+                        let pts: Vec<f64> = (0..4).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+                        let act = match rng.below(5) {
+                            0 => None,
+                            i => Some(ActivationKind::ALL[(i - 1) as usize]),
+                        };
+                        client.submit_eval(&pts, act).is_ok()
+                    } else if kind < 9 {
+                        let pts: Vec<Vec<f64>> =
+                            (0..3).map(|_| vec![rng.uniform_in(-1.0, 1.0)]).collect();
+                        client.submit_operator(&pts, "d2", None).is_ok()
+                    } else {
+                        client.submit_raw("{\"cmd\":\"stats\"}").is_ok()
+                    };
+                    if ok {
+                        sent += 1;
+                    }
+                }
+                for _ in 0..sent {
+                    match client.recv_raw() {
+                        Ok(reply) => {
+                            received_total += 1;
+                            if protocol::parse_error(&reply).is_some() {
+                                errors += 1;
+                            }
+                        }
+                        Err(e) => panic!("pipelined reply dropped: {e}"),
+                    }
+                }
+                sent_total += sent as u64;
+                // Every segment tears its connection down after
+                // draining, exercising reconnect churn under load.
+                drop(client);
+            }
+            (sent_total, received_total, errors)
+        }));
+    }
+
+    // Metrics monotonicity probe alongside the load.
+    let mut last = (0u64, 0u64, 0u64, 0u64);
+    while Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1500));
+        let s = handle.metrics();
+        let now = (s.requests, s.errors, s.plan_hits + s.plan_misses, s.shed);
+        assert!(
+            now.0 >= last.0 && now.1 >= last.1 && now.2 >= last.2 && now.3 >= last.3,
+            "metrics went backwards: {last:?} -> {now:?}"
+        );
+        last = now;
+    }
+
+    let mut grand_sent = 0u64;
+    let mut grand_received = 0u64;
+    for w in workers {
+        let (sent, received, errors) = w.join().expect("soak worker panicked");
+        assert_eq!(sent, received, "dropped responses under soak");
+        assert_eq!(errors, 0, "unexpected error replies under soak");
+        grand_sent += sent;
+        grand_received += received;
+    }
+    assert!(grand_sent > 0 && grand_sent == grand_received);
+
+    // Final stats sanity: the counters parse and cover the traffic.
+    let mut client = timed_client(&addr);
+    let stats = client.stats().unwrap();
+    let doc = Json::parse(&stats).unwrap();
+    let served = doc
+        .get("stats")
+        .and_then(|s| s.get("requests"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    assert!(served > 0.0);
+    service.shutdown();
+}
