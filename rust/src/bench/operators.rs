@@ -14,8 +14,10 @@
 
 use crate::autodiff::{higher, Graph};
 use crate::nn::Mlp;
-use crate::ntp::{ActivationKind, MultiJetEngine};
-use crate::pde::DiffOperator;
+use crate::ntp::stde::exact_direction_count;
+use crate::ntp::{ActivationKind, MultiJetEngine, StdeConfig, StdeEngine};
+use crate::pde::{DiffOperator, PdeProblem};
+use crate::pinn::{train_pde_with_estimator, EstimatorMode, MultiPinnSpec, TrainConfig};
 use crate::tensor::Tensor;
 use crate::util::csv::Table;
 use crate::util::json::Json;
@@ -44,6 +46,18 @@ pub struct OperatorBenchConfig {
     pub trials: usize,
     /// PRNG seed.
     pub seed: u64,
+    /// High-dim leg: interior collocation points.
+    pub hd_points: usize,
+    /// High-dim leg: boundary collocation points.
+    pub hd_bc_points: usize,
+    /// High-dim leg: Adam epochs of the fixed training budget.
+    pub hd_adam: usize,
+    /// High-dim leg: L-BFGS epochs of the fixed training budget.
+    pub hd_lbfgs: usize,
+    /// High-dim leg: STDE term samples per step (K).
+    pub hd_samples: usize,
+    /// High-dim leg: counter steps per variance probe.
+    pub hd_var_steps: usize,
 }
 
 impl Default for OperatorBenchConfig {
@@ -59,6 +73,12 @@ impl Default for OperatorBenchConfig {
             warmup: 1,
             trials: 5,
             seed: 29,
+            hd_points: 512,
+            hd_bc_points: 128,
+            hd_adam: 400,
+            hd_lbfgs: 150,
+            hd_samples: 4,
+            hd_var_steps: 64,
         }
     }
 }
@@ -71,6 +91,11 @@ impl OperatorBenchConfig {
             batch: 512,
             check_rows: 32,
             trials: 3,
+            hd_points: 96,
+            hd_bc_points: 32,
+            hd_adam: 60,
+            hd_lbfgs: 25,
+            hd_var_steps: 16,
             ..OperatorBenchConfig::default()
         }
     }
@@ -103,6 +128,65 @@ impl OperatorCell {
     pub fn speedup(&self) -> f64 {
         self.autodiff_s / self.ntp_s
     }
+}
+
+/// One high-dimensional training leg: a fixed Adam → L-BFGS budget on a
+/// library problem, exact plan vs STDE.
+#[derive(Clone, Debug)]
+pub struct HighDimCell {
+    /// Problem name.
+    pub problem: &'static str,
+    /// Input dimension.
+    pub dim: usize,
+    /// "exact" or "stde".
+    pub estimator: &'static str,
+    /// STDE term samples per step (0 for the exact leg).
+    pub samples: usize,
+    /// Mean directional passes launched per interior evaluation.
+    pub directions_per_step: f64,
+    /// Direction count of the exact `|α| ≤ n` plan (the denominator of
+    /// the pass-ratio metric).
+    pub exact_directions: f64,
+    /// Relative L2 error of `u` after the budget (Monte-Carlo interior
+    /// cloud, error RMS over truth RMS).
+    pub rel_l2: f64,
+    /// Training wall-clock seconds.
+    pub seconds: f64,
+}
+
+impl HighDimCell {
+    /// How many times fewer directional passes per step than the exact
+    /// plan (1.0 for the exact leg itself).
+    pub fn pass_ratio(&self) -> f64 {
+        self.exact_directions / self.directions_per_step
+    }
+}
+
+/// One point of the variance-vs-K probe: MSE of the STDE estimate
+/// against the exact d=10 oracle, averaged over counter steps and rows.
+#[derive(Clone, Debug)]
+pub struct VarianceCell {
+    /// Term samples per step (K).
+    pub samples: usize,
+    /// Antithetic pairing on?
+    pub antithetic: bool,
+    /// Mean squared estimation error.
+    pub mse: f64,
+}
+
+impl VarianceCell {
+    /// `MSE·K` — flat across K when the variance decays like 1/K.
+    pub fn mse_times_k(&self) -> f64 {
+        self.mse * self.samples as f64
+    }
+}
+
+/// The high-dim section of the bench document.
+pub struct HighDimReport {
+    /// Training legs (exact vs STDE on the same problem and budget).
+    pub training: Vec<HighDimCell>,
+    /// Variance-vs-K probe cells.
+    pub variance: Vec<VarianceCell>,
 }
 
 /// The benched operators: the acceptance pair.
@@ -190,6 +274,134 @@ pub fn run(cfg: &OperatorBenchConfig, progress: impl Fn(&str)) -> Vec<OperatorCe
     out
 }
 
+/// Relative L2 error of `mlp` against the manufactured solution over a
+/// fresh Monte-Carlo interior cloud (error RMS over truth RMS).
+fn rel_l2(problem: PdeProblem, mlp: &Mlp, n_pts: usize, seed: u64) -> f64 {
+    let mut rng = Prng::seeded(seed);
+    let x = problem.sample_interior(n_pts, &mut rng);
+    let u = mlp.forward(&x);
+    let truth = problem.u_exact_rows(&x);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (&a, &b) in u.data().iter().zip(truth.data()) {
+        num += (a - b) * (a - b);
+        den += b * b;
+    }
+    (num / den).sqrt()
+}
+
+/// The high-dim leg: exact-plan vs STDE training on `poisson10d` under
+/// one fixed budget (the pass-ratio acceptance metric), plus a
+/// variance-vs-K probe against the exact d=10 oracle. `poisson10d` is
+/// the one library problem where both sides exist: its exact plan is
+/// still tractable (55 directions), so exactness and cost can be
+/// compared head-on; `heat100d` has no exact side to compare against.
+pub fn run_highdim(cfg: &OperatorBenchConfig, progress: impl Fn(&str)) -> HighDimReport {
+    let problem = PdeProblem::Poisson10d;
+    let op = problem.operator();
+    let dim = problem.dim();
+    let exact_dirs = exact_direction_count(dim, op.max_order()) as f64;
+
+    // --- Variance-vs-K probe: STDE estimates on a frozen random net
+    // against the exact 55-direction oracle. -------------------------
+    let mut rng = Prng::seeded(cfg.seed);
+    let mlp = Mlp::uniform_with(dim, cfg.width, cfg.depth, 1, cfg.activation, &mut rng);
+    let x = problem.sample_interior(cfg.check_rows.max(1), &mut rng);
+    let oracle = MultiJetEngine::new(dim, op.max_order());
+    let exact = op.apply(&oracle.jet(&mlp, &x));
+    let mut variance = Vec::new();
+    for &(k, anti) in &[(1, false), (2, false), (4, false), (8, false), (4, true)] {
+        let est = StdeEngine::new(
+            op.clone(),
+            StdeConfig { seed: cfg.seed, samples: k, antithetic: anti },
+        );
+        let mut acc = 0.0;
+        let mut count = 0usize;
+        for step in 0..cfg.hd_var_steps.max(1) {
+            let e = est.estimate(&mlp, &x, step as u64);
+            for (&a, &b) in e.values.data().iter().zip(exact.data()) {
+                acc += (a - b) * (a - b);
+                count += 1;
+            }
+        }
+        let cell = VarianceCell { samples: k, antithetic: anti, mse: acc / count as f64 };
+        progress(&format!(
+            "stde variance: K={k}{} mse={:.3e} mse*K={:.3e}",
+            if anti { " antithetic" } else { "" },
+            cell.mse,
+            cell.mse_times_k()
+        ));
+        variance.push(cell);
+    }
+
+    // Mean directional passes an STDE step actually launches (pure
+    // function of the counter stream — measured on the sampler itself).
+    let est = StdeEngine::new(
+        op.clone(),
+        StdeConfig { seed: cfg.seed, samples: cfg.hd_samples, antithetic: false },
+    );
+    let probe_x = problem.sample_interior(1, &mut rng);
+    let mean_dirs = (0..cfg.hd_var_steps.max(1))
+        .map(|s| est.estimate(&mlp, &probe_x, s as u64).n_directions as f64)
+        .sum::<f64>()
+        / cfg.hd_var_steps.max(1) as f64;
+
+    // --- Fixed-budget training: exact plan vs STDE. ------------------
+    let train_cfg = TrainConfig {
+        width: cfg.width,
+        depth: cfg.depth,
+        activation: cfg.activation,
+        adam_epochs: cfg.hd_adam,
+        lbfgs_epochs: cfg.hd_lbfgs,
+        seed: cfg.seed,
+        log_every: usize::MAX,
+        ..TrainConfig::default()
+    };
+    let mut training = Vec::new();
+    let legs = [
+        (EstimatorMode::Exact, "exact", 0usize, exact_dirs),
+        (
+            EstimatorMode::Stde { seed: cfg.seed, samples: cfg.hd_samples, antithetic: false },
+            "stde",
+            cfg.hd_samples,
+            mean_dirs,
+        ),
+    ];
+    for (mode, label, samples, dirs) in legs {
+        let mut spec = MultiPinnSpec::for_problem(problem);
+        spec.n_interior = cfg.hd_points;
+        spec.n_boundary = cfg.hd_bc_points;
+        progress(&format!(
+            "training {} [{label}]: {} + {} points, {} + {} epochs, {dirs:.1} dirs/step",
+            problem.name(),
+            cfg.hd_points,
+            cfg.hd_bc_points,
+            cfg.hd_adam,
+            cfg.hd_lbfgs
+        ));
+        let result =
+            train_pde_with_estimator(spec, &train_cfg, crate::pinn::DerivEngine::Ntp, mode);
+        let cell = HighDimCell {
+            problem: problem.name(),
+            dim,
+            estimator: label,
+            samples,
+            directions_per_step: dirs,
+            exact_directions: exact_dirs,
+            rel_l2: rel_l2(problem, &result.mlp, 512, cfg.seed + 1),
+            seconds: result.seconds,
+        };
+        progress(&format!(
+            "  -> rel L2 {:.3e} in {:.1}s ({:.1}x fewer passes/step than exact)",
+            cell.rel_l2,
+            cell.seconds,
+            cell.pass_ratio()
+        ));
+        training.push(cell);
+    }
+    HighDimReport { training, variance }
+}
+
 /// One row per operator, with the speedup column the acceptance bar
 /// reads.
 pub fn table(cells: &[OperatorCell]) -> Table {
@@ -225,8 +437,43 @@ pub fn save(cells: &[OperatorCell], dir: &Path) -> std::io::Result<()> {
     table(cells).save(&dir.join("operator_speedup.csv"))
 }
 
-/// The `BENCH_operators.json` document: config + per-operator results.
-pub fn to_json(cfg: &OperatorBenchConfig, cells: &[OperatorCell]) -> Json {
+/// The high-dim training legs as a table (one row per leg).
+pub fn highdim_table(report: &HighDimReport) -> Table {
+    let mut t = Table::new(&[
+        "problem",
+        "dim",
+        "estimator",
+        "samples",
+        "dirs_per_step",
+        "exact_dirs",
+        "pass_ratio",
+        "rel_l2",
+        "seconds",
+    ]);
+    for c in &report.training {
+        t.push(vec![
+            c.problem.to_string(),
+            c.dim.to_string(),
+            c.estimator.to_string(),
+            c.samples.to_string(),
+            format!("{:.2}", c.directions_per_step),
+            format!("{:.0}", c.exact_directions),
+            format!("{:.2}", c.pass_ratio()),
+            format!("{:.6e}", c.rel_l2),
+            format!("{:.3}", c.seconds),
+        ]);
+    }
+    t
+}
+
+/// Write `stde_highdim.csv`.
+pub fn save_highdim(report: &HighDimReport, dir: &Path) -> std::io::Result<()> {
+    highdim_table(report).save(&dir.join("stde_highdim.csv"))
+}
+
+/// The `BENCH_operators.json` document: config + per-operator results +
+/// the high-dim STDE section.
+pub fn to_json(cfg: &OperatorBenchConfig, cells: &[OperatorCell], hd: &HighDimReport) -> Json {
     let results: Vec<Json> = cells
         .iter()
         .map(|c| {
@@ -240,6 +487,35 @@ pub fn to_json(cfg: &OperatorBenchConfig, cells: &[OperatorCell]) -> Json {
             ])
         })
         .collect();
+    let training: Vec<Json> = hd
+        .training
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("problem", Json::Str(c.problem.into())),
+                ("dim", Json::Num(c.dim as f64)),
+                ("estimator", Json::Str(c.estimator.into())),
+                ("samples", Json::Num(c.samples as f64)),
+                ("dirs_per_step", Json::Num(c.directions_per_step)),
+                ("exact_dirs", Json::Num(c.exact_directions)),
+                ("pass_ratio", Json::Num(c.pass_ratio())),
+                ("rel_l2", Json::Num(c.rel_l2)),
+                ("seconds", Json::Num(c.seconds)),
+            ])
+        })
+        .collect();
+    let variance: Vec<Json> = hd
+        .variance
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("samples", Json::Num(c.samples as f64)),
+                ("antithetic", Json::Bool(c.antithetic)),
+                ("mse", Json::Num(c.mse)),
+                ("mse_times_k", Json::Num(c.mse_times_k())),
+            ])
+        })
+        .collect();
     Json::obj(vec![
         ("bench", Json::Str("operators".into())),
         (
@@ -250,9 +526,19 @@ pub fn to_json(cfg: &OperatorBenchConfig, cells: &[OperatorCell]) -> Json {
                 ("depth", Json::Num(cfg.depth as f64)),
                 ("activation", Json::Str(cfg.activation.name().into())),
                 ("trials", Json::Num(cfg.trials as f64)),
+                ("hd_points", Json::Num(cfg.hd_points as f64)),
+                ("hd_epochs", Json::Num((cfg.hd_adam + cfg.hd_lbfgs) as f64)),
+                ("hd_samples", Json::Num(cfg.hd_samples as f64)),
             ]),
         ),
         ("results", Json::Arr(results)),
+        (
+            "highdim",
+            Json::obj(vec![
+                ("training", Json::Arr(training)),
+                ("variance", Json::Arr(variance)),
+            ]),
+        ),
     ])
 }
 
@@ -260,9 +546,10 @@ pub fn to_json(cfg: &OperatorBenchConfig, cells: &[OperatorCell]) -> Json {
 pub fn save_json(
     cfg: &OperatorBenchConfig,
     cells: &[OperatorCell],
+    hd: &HighDimReport,
     path: &Path,
 ) -> std::io::Result<()> {
-    std::fs::write(path, to_json(cfg, cells).dump() + "\n")
+    std::fs::write(path, to_json(cfg, cells, hd).dump() + "\n")
 }
 
 /// Human-readable summary for the CLI.
@@ -285,21 +572,60 @@ pub fn summarize(cells: &[OperatorCell]) -> String {
     out
 }
 
+/// Human-readable summary of the high-dim section.
+pub fn summarize_highdim(report: &HighDimReport) -> String {
+    let mut out = String::from("high-dim STDE vs exact plan (fixed training budget)\n");
+    for c in &report.training {
+        out.push_str(&format!(
+            "  {:<12} d={:<4} {:<6} {:>6.1} dirs/step (exact {:>4.0})  \
+             rel L2 {:>10.3e}  {:>7.1}s  {:>5.1}x fewer passes\n",
+            c.problem,
+            c.dim,
+            c.estimator,
+            c.directions_per_step,
+            c.exact_directions,
+            c.rel_l2,
+            c.seconds,
+            c.pass_ratio()
+        ));
+    }
+    out.push_str("variance vs K (MSE against the exact d=10 oracle)\n");
+    for v in &report.variance {
+        out.push_str(&format!(
+            "  K={:<3}{} mse {:>10.3e}  mse*K {:>10.3e}\n",
+            v.samples,
+            if v.antithetic { " anti" } else { "     " },
+            v.mse,
+            v.mse_times_k()
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn tiny_operator_bench_produces_csv_and_json() {
-        let cfg = OperatorBenchConfig {
+    fn tiny_cfg() -> OperatorBenchConfig {
+        OperatorBenchConfig {
             width: 6,
             depth: 2,
             batch: 24,
             check_rows: 8,
             warmup: 0,
             trials: 1,
+            hd_points: 24,
+            hd_bc_points: 8,
+            hd_adam: 3,
+            hd_lbfgs: 2,
+            hd_var_steps: 4,
             ..OperatorBenchConfig::default()
-        };
+        }
+    }
+
+    #[test]
+    fn tiny_operator_bench_produces_csv_and_json() {
+        let cfg = tiny_cfg();
         let cells = run(&cfg, |_| {});
         assert_eq!(cells.len(), 2);
         for c in &cells {
@@ -310,12 +636,15 @@ mod tests {
         let t = table(&cells);
         assert_eq!(t.rows.len(), 2);
         assert!(summarize(&cells).contains("directional"));
+        let hd = run_highdim(&cfg, |_| {});
         let dir = std::env::temp_dir().join("ntangent_test_operator_bench");
         std::fs::create_dir_all(&dir).unwrap();
         save(&cells, &dir).unwrap();
+        save_highdim(&hd, &dir).unwrap();
         assert!(dir.join("operator_speedup.csv").exists());
+        assert!(dir.join("stde_highdim.csv").exists());
         let jpath = dir.join("BENCH_operators.json");
-        save_json(&cfg, &cells, &jpath).unwrap();
+        save_json(&cfg, &cells, &hd, &jpath).unwrap();
         let text = std::fs::read_to_string(&jpath).unwrap();
         let doc = Json::parse(text.trim()).unwrap();
         assert_eq!(doc.get("bench").and_then(Json::as_str), Some("operators"));
@@ -323,5 +652,38 @@ mod tests {
             doc.get("results").and_then(Json::as_arr).map(<[Json]>::len),
             Some(2)
         );
+        let highdim = doc.get("highdim").expect("high-dim section present");
+        assert_eq!(
+            highdim.get("training").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(2)
+        );
+        assert_eq!(
+            highdim.get("variance").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(5)
+        );
+    }
+
+    #[test]
+    fn highdim_report_is_structurally_sound() {
+        let hd = run_highdim(&tiny_cfg(), |_| {});
+        let [exact, stde] = &hd.training[..] else {
+            panic!("expected the exact and stde legs")
+        };
+        assert_eq!(exact.estimator, "exact");
+        assert_eq!(stde.estimator, "stde");
+        assert_eq!(exact.exact_directions, 55.0);
+        assert!((exact.pass_ratio() - 1.0).abs() < 1e-12);
+        // K=4 samples of a pure-axis operator launch at most 4
+        // directions — the >=10x pass-ratio acceptance metric.
+        assert!(stde.directions_per_step <= 4.0 + 1e-12);
+        assert!(stde.pass_ratio() >= 10.0);
+        assert!(hd.training.iter().all(|c| c.rel_l2.is_finite() && c.seconds >= 0.0));
+        // Variance cells carry finite MSE; the probe stream is a pure
+        // function of (seed, step), so a rerun reproduces it bitwise.
+        assert!(hd.variance.iter().all(|v| v.mse.is_finite()));
+        let again = run_highdim(&tiny_cfg(), |_| {});
+        for (a, b) in hd.variance.iter().zip(&again.variance) {
+            assert_eq!(a.mse.to_bits(), b.mse.to_bits());
+        }
     }
 }

@@ -15,8 +15,11 @@ use ntangent::bench::{
 use ntangent::coordinator::{BatcherConfig, NativeBackend, OperatorServer, PjrtBackend, Service};
 use ntangent::nn::Checkpoint;
 use ntangent::ntp::{hardy_ramanujan, partition_count, ActivationKind, NtpEngine, ParallelPolicy};
+use ntangent::ntp::stde::exact_direction_count;
 use ntangent::pde::{resolve_operator, PdeProblem};
-use ntangent::pinn::{BurgersLossSpec, DerivEngine, MultiPinnSpec, TrainConfig};
+use ntangent::pinn::{
+    BurgersLossSpec, DerivEngine, EstimatorMode, MultiPinnSpec, StdeConfig, TrainConfig,
+};
 use ntangent::runtime::{ArtifactManifest, Runtime};
 use ntangent::tensor::Tensor;
 use ntangent::util::cli::{usage, Args, OptSpec};
@@ -395,12 +398,16 @@ fn run_bench_target(target: &str, args: &Args, out_dir: &Path) -> Result<(), Str
                 cfg.batch
             );
             let cells = operators::run(&cfg, |msg| eprintln!("[bench] {msg}"));
+            let hd = operators::run_highdim(&cfg, |msg| eprintln!("[bench] {msg}"));
             operators::save(&cells, out_dir).map_err(|e| e.to_string())?;
+            operators::save_highdim(&hd, out_dir).map_err(|e| e.to_string())?;
             if let Some(p) = args.get("json") {
-                operators::save_json(&cfg, &cells, Path::new(p)).map_err(|e| e.to_string())?;
+                operators::save_json(&cfg, &cells, &hd, Path::new(p))
+                    .map_err(|e| e.to_string())?;
                 eprintln!("[bench] wrote {p}");
             }
             println!("{}", operators::summarize(&cells));
+            println!("{}", operators::summarize_highdim(&hd));
         }
         "serve" => {
             let mut cfg = if args.flag("smoke") {
@@ -491,9 +498,12 @@ fn run_bench_target(target: &str, args: &Args, out_dir: &Path) -> Result<(), Str
 fn cmd_train(raw: &[String]) -> Result<(), String> {
     let specs = vec![
         OptSpec { name: "profile", help: "Burgers profile k (1..4)", takes_value: true, default: Some("1") },
-        OptSpec { name: "pde", help: "train a library PDE instead of Burgers: heat2d | poisson2d | wave2d | kdv | biharmonic2d", takes_value: true, default: None },
+        OptSpec { name: "pde", help: "train a library PDE instead of Burgers: heat2d | poisson2d | wave2d | kdv | biharmonic2d | poisson10d | heat100d | hjb10d", takes_value: true, default: None },
         OptSpec { name: "points", help: "interior collocation points (--pde)", takes_value: true, default: None },
         OptSpec { name: "bc-points", help: "boundary collocation points (--pde)", takes_value: true, default: None },
+        OptSpec { name: "estimator", help: "operator residual estimator (--pde): exact | stde", takes_value: true, default: Some("exact") },
+        OptSpec { name: "samples", help: "STDE term samples per step and shard", takes_value: true, default: Some("4") },
+        OptSpec { name: "antithetic", help: "STDE antithetic pairing (needs an even --samples)", takes_value: false, default: None },
         OptSpec { name: "adam-epochs", help: "Adam epochs", takes_value: true, default: Some("300") },
         OptSpec { name: "lbfgs-epochs", help: "L-BFGS epochs", takes_value: true, default: Some("300") },
         OptSpec { name: "width", help: "network width", takes_value: true, default: Some("24") },
@@ -542,12 +552,40 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
         if let Some(v) = args.get_usize("bc-points")? {
             spec.n_boundary = v;
         }
+        let estimator = match args.get("estimator").unwrap() {
+            "exact" => EstimatorMode::Exact,
+            "stde" => EstimatorMode::Stde {
+                seed: cfg.seed,
+                samples: args.get_usize("samples")?.unwrap().max(1),
+                antithetic: args.flag("antithetic"),
+            },
+            other => return Err(format!("unknown estimator '{other}' (exact | stde)")),
+        };
+        if problem.needs_stde() && estimator == EstimatorMode::Exact {
+            return Err(format!(
+                "{}'s exact direction plan is combinatorially intractable; \
+                 pass --estimator stde",
+                problem.name()
+            ));
+        }
         let op = problem.operator();
+        // High-dimensional operators have O(dim) terms; keep the banner short.
+        let op_desc = if op.terms().len() <= 8 {
+            op.describe()
+        } else {
+            format!("{} terms over {} axes", op.terms().len(), problem.dim())
+        };
+        let est_desc = match estimator {
+            EstimatorMode::Exact => "exact plan".to_string(),
+            EstimatorMode::Stde { samples, antithetic, .. } => format!(
+                "STDE, K={samples}{}",
+                if antithetic { ", antithetic" } else { "" }
+            ),
+        };
         eprintln!(
-            "training PDE {} (L = {}, order {}) with {engine:?}, {}x{} {} net, \
-             {} + {} points, {:?} gradient accumulation",
+            "training PDE {} (L = {op_desc}, order {}) with {engine:?} ({est_desc}), \
+             {}x{} {} net, {} + {} points, {:?} gradient accumulation",
             problem.name(),
-            op.describe(),
             op.max_order(),
             cfg.depth,
             cfg.width,
@@ -556,7 +594,7 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
             spec.n_boundary,
             cfg.policy
         );
-        let result = ntangent::pinn::train_pde(spec, &cfg, engine);
+        let result = ntangent::pinn::train_pde_with_estimator(spec, &cfg, engine, estimator);
         println!(
             "done in {:.1}s: loss = {:.3e}, residual RMS = {:.3e}, L2(u) = {:.3e}",
             result.seconds,
@@ -618,6 +656,10 @@ fn cmd_eval(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "points", help: "comma list of x values (';'-separated coordinate rows with --operator)", takes_value: true, default: Some("-1.0,-0.5,0.0,0.5,1.0") },
         OptSpec { name: "n", help: "derivative order", takes_value: true, default: Some("3") },
         OptSpec { name: "operator", help: "evaluate a differential operator: library name (heat2d, ...) or spec like 'd20+d02'", takes_value: true, default: None },
+        OptSpec { name: "estimator", help: "operator evaluation (--operator): exact | stde", takes_value: true, default: Some("exact") },
+        OptSpec { name: "samples", help: "STDE term samples", takes_value: true, default: Some("4") },
+        OptSpec { name: "seed", help: "STDE stream seed", takes_value: true, default: Some("0") },
+        OptSpec { name: "antithetic", help: "STDE antithetic pairing (needs an even --samples)", takes_value: false, default: None },
         OptSpec { name: "threads", help: "batch parallelism: serial | auto | N", takes_value: true, default: Some("serial") },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
@@ -655,9 +697,36 @@ fn cmd_eval(raw: &[String]) -> Result<(), String> {
                 ));
             }
         }
-        // Same evaluator the wire protocol's points_nd requests use.
-        let server = OperatorServer::new(mlp, policy);
-        let (u, vals) = server.eval(&rows, op_spec, None)?;
+        let (u, vals) = match args.get("estimator").unwrap() {
+            "exact" => {
+                // Same evaluator the wire protocol's points_nd requests use.
+                let server = OperatorServer::new(mlp, policy);
+                server.eval(&rows, op_spec, None)?
+            }
+            "stde" => {
+                let cfg = StdeConfig {
+                    seed: args.get_usize("seed")?.unwrap() as u64,
+                    samples: args.get_usize("samples")?.unwrap().max(1),
+                    antithetic: args.flag("antithetic"),
+                };
+                let flat: Vec<f64> = rows.iter().flat_map(|p| p.iter().copied()).collect();
+                let x = Tensor::from_vec(flat, &[rows.len(), dim]);
+                let u = mlp.forward(&x).data().to_vec();
+                let est = ntangent::ntp::StdeEngine::with_policy(op.clone(), cfg, policy)
+                    .estimate(&mlp, &x, 0);
+                eprintln!(
+                    "STDE estimate: seed {}, K = {}{}, {} directional passes \
+                     (exact plan: {})",
+                    cfg.seed,
+                    cfg.samples,
+                    if cfg.antithetic { " antithetic" } else { "" },
+                    est.n_directions,
+                    exact_direction_count(dim, op.max_order()),
+                );
+                (u, est.values.data().to_vec())
+            }
+            other => return Err(format!("unknown estimator '{other}' (exact | stde)")),
+        };
         println!("operator {} (order {})", op.describe(), op.max_order());
         print!("{:>28}", "point");
         print!("{:>16}{:>16}", "u", "L[u]");

@@ -31,13 +31,17 @@
 //! exact integer direction sets + rational recombination matrices that
 //! assemble arbitrary mixed partials `∂^α u` from direction-stacked
 //! batches ([`MultiJetEngine`]) — the substrate of the `pde` operator
-//! subsystem.
+//! subsystem. Beyond the exact plan's combinatorial envelope, [`stde`]
+//! estimates operators *stochastically*: sparse random direction sets
+//! sampled per step from a counter-based RNG, recombined into unbiased
+//! Horvitz–Thompson estimates — the d=10–100 path.
 
 pub mod activation;
 pub mod bell;
 pub mod forward;
 pub mod multi;
 pub mod partitions;
+pub mod stde;
 pub mod tape;
 
 pub use activation::{
@@ -45,5 +49,6 @@ pub use activation::{
 };
 pub use bell::{bell_number, FaaDiBruno, FdbOp, FdbProgram, PowFill, Term};
 pub use forward::{NtpEngine, ParallelPolicy};
-pub use multi::{multi_indices, JetPlan, MultiJet, MultiJetEngine};
+pub use multi::{multi_indices, JetPlan, MultiJet, MultiJetEngine, RecombinationPlan};
 pub use partitions::{hardy_ramanujan, partition_count, partitions, Partition};
+pub use stde::{CounterRng, EstimatorMode, StdeConfig, StdeEngine, StdePlan};

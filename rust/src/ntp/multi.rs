@@ -260,6 +260,34 @@ fn candidate_directions(dim: usize, max_entry: i64) -> Vec<Vec<i64>> {
     out
 }
 
+// --------------------------------------------------- RecombinationPlan
+
+/// What a direction/recombination plan exposes to the partial-assembly
+/// paths: a pool of integer directions and, per multi-index, the weight
+/// row recombining directional jets into `∂^α u`.
+///
+/// Two implementations exist: the exact [`JetPlan`] (every `|α| ≤ n`
+/// recombinable, direction count combinatorial in `dim`) and the
+/// stochastic [`crate::ntp::stde::StdePlan`] (only the operator's own
+/// factors recombinable, direction count bounded by the factor
+/// supports) — the training tape builder is generic over the two.
+pub trait RecombinationPlan {
+    /// Number of input axes.
+    fn dim(&self) -> usize;
+
+    /// The union direction pool (integer vectors, one jet pass each).
+    fn directions(&self) -> &[Vec<i64>];
+
+    /// Recombination row for `∂^α`: `(dir_ids, weights)` with
+    /// `∂^α u = Σ_k weights[k] · D_{directions()[dir_ids[k]]}^{|α|} u`.
+    fn weights_for(&self, alpha: &[usize]) -> (&[usize], &[f64]);
+
+    /// Number of directions in the pool.
+    fn n_directions(&self) -> usize {
+        self.directions().len()
+    }
+}
+
 // -------------------------------------------------------------- JetPlan
 
 /// Recombination weights for one derivative order: the selected
@@ -395,6 +423,24 @@ impl JetPlan {
             .position(|x| x.as_slice() == alpha)
             .expect("every |α| = m multi-index is tabulated");
         (&plan.dir_ids, &plan.weights[a])
+    }
+}
+
+impl RecombinationPlan for JetPlan {
+    fn dim(&self) -> usize {
+        JetPlan::dim(self)
+    }
+
+    fn directions(&self) -> &[Vec<i64>] {
+        JetPlan::directions(self)
+    }
+
+    fn weights_for(&self, alpha: &[usize]) -> (&[usize], &[f64]) {
+        JetPlan::weights_for(self, alpha)
+    }
+
+    fn n_directions(&self) -> usize {
+        JetPlan::n_directions(self)
     }
 }
 

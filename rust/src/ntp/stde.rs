@@ -1,0 +1,527 @@
+//! Stochastic Taylor derivative estimation (STDE): unbiased
+//! high-dimensional operator estimates from **sparse random direction
+//! sets**, following Shi et al. (arxiv 2412.00088) and DOF (arxiv
+//! 2402.09730).
+//!
+//! The exact [`JetPlan`] recombines *every* `|α| ≤ n` partial, so its
+//! direction count grows like `C(d+n−1, d−1)` — 55 directions for a
+//! 10-D Laplacian, 5050 for a 100-D one. But a PDE residual never needs
+//! every partial: it needs the operator's *own* factors. STDE therefore
+//! subsamples the operator's term list each step and evaluates only the
+//! sampled factors, each **exactly**, from a handful of directions
+//! supported on that factor's axes:
+//!
+//! 1. [`StdePlan::new`] analyses the operator's
+//!    [`crate::pde::DiffOperator::sparsity`]: each factor `∂^α` with
+//!    axis support `S` gets a mini moment system over `|S|` axes (a
+//!    [`JetPlan`] on the support, solved in exact rational arithmetic),
+//!    whose directions embed sparsely into `ℝ^d`. A pure-axis factor
+//!    like `∂²/∂x_i²` costs exactly one direction `e_i`; a 2-axis mixed
+//!    factor costs the 3-direction polarization set.
+//! 2. [`sample_terms`] draws `K` term indices per `(step, shard)` from
+//!    the counter-based [`CounterRng`] — every draw is a pure function
+//!    of `(seed, step, shard, index)`, so the sample is bitwise
+//!    identical for any thread count or evaluation order.
+//! 3. [`sampled_operator`] turns the draws into a small
+//!    Horvitz–Thompson reweighted operator: term `t` sampled `μ_t`
+//!    times contributes `μ_t·(T/K)·c_t·Π_f ∂^{α_f} u`, an **unbiased**
+//!    estimator of `L[u]` (each factor is exact, only the term
+//!    selection is random — products need no independence correction).
+//! 4. The sampled directions run as one direction-stacked fused batch
+//!    (`[D·B, d]`, the [`MultiJetEngine`]-style launch) through
+//!    [`NtpEngine::forward_directional`].
+//!
+//! Variance is controlled three ways: the sample count `K` (variance
+//! decays ~1/K), optional **antithetic pairing** (paired draws select
+//! index-reflected terms, anticorrelating the picked coefficients), and
+//! the operator-adapted sparsity above (a pure-axis operator like
+//! 100-D heat never pays for mixed-partial direction sets). The exact
+//! path remains the differential oracle at low `d`; the statistical
+//! contract lives in `rust/tests/stde_statistics.rs` and the
+//! determinism contract in `rust/tests/stde_determinism.rs`.
+//!
+//! [`MultiJetEngine`]: crate::ntp::MultiJetEngine
+
+use super::forward::{NtpEngine, ParallelPolicy};
+use super::multi::{JetPlan, RecombinationPlan};
+use crate::nn::Mlp;
+use crate::pde::DiffOperator;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+// ---------------------------------------------------------- counter RNG
+
+/// SplitMix64 finalizer: a full-avalanche 64-bit mix.
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// A splittable **counter-based** generator: every output is a pure
+/// function of `(seed, step, shard, index)` — no mutable stream state —
+/// so parallel consumers can draw their own coordinates in any order
+/// and still agree bitwise with a serial run. The stream is pinned by
+/// committed golden draws in `rust/tests/stde_determinism.rs`; changing
+/// the mixing chain is a breaking change to every seeded STDE run.
+#[derive(Clone, Copy, Debug)]
+pub struct CounterRng {
+    seed: u64,
+}
+
+impl CounterRng {
+    /// A generator for one 64-bit seed.
+    pub fn new(seed: u64) -> CounterRng {
+        CounterRng { seed }
+    }
+
+    /// The seed this generator was built with.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn draw_at(seed: u64, step: u64, shard: u64, index: u64, attempt: u64) -> u64 {
+        // Chain one avalanche round per coordinate (Weyl-offset seed
+        // first), so neighbouring tuples decorrelate fully.
+        let mut h = mix(seed ^ 0x9E3779B97F4A7C15);
+        h = mix(h ^ step);
+        h = mix(h ^ shard);
+        h = mix(h ^ index);
+        mix(h ^ attempt)
+    }
+
+    /// The raw 64-bit draw at a counter coordinate.
+    pub fn draw(&self, step: u64, shard: u64, index: u64) -> u64 {
+        CounterRng::draw_at(self.seed, step, shard, index, 0)
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    pub fn uniform(&self, step: u64, shard: u64, index: u64) -> f64 {
+        (self.draw(step, shard, index) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Exact uniform integer in `[0, n)` — zone rejection over an
+    /// attempt counter folded into the same coordinate (still a pure
+    /// function of the tuple, still platform-independent).
+    pub fn below(&self, step: u64, shard: u64, index: u64, n: u64) -> u64 {
+        assert!(n > 0, "CounterRng::below(0)");
+        // Accept x < 2^64 − (2^64 mod n), i.e. x ≤ u64::MAX − rem.
+        let rem = (u64::MAX % n + 1) % n;
+        let limit = u64::MAX - rem;
+        let mut attempt = 0u64;
+        loop {
+            let x = CounterRng::draw_at(self.seed, step, shard, index, attempt);
+            if x <= limit {
+                return x % n;
+            }
+            attempt += 1;
+        }
+    }
+}
+
+// ------------------------------------------------------- configuration
+
+/// Knobs of one stochastic estimation stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StdeConfig {
+    /// Seed of the counter-based stream.
+    pub seed: u64,
+    /// Term samples per `(step, shard)` — variance decays ~1/K.
+    pub samples: usize,
+    /// Pair draws antithetically (index-reflected term selection);
+    /// requires an even sample count.
+    pub antithetic: bool,
+}
+
+/// How a PDE objective evaluates its operator residual.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EstimatorMode {
+    /// The exact [`JetPlan`] path — every partial recombined, direction
+    /// count combinatorial in `dim` (the low-`d` oracle).
+    Exact,
+    /// Stochastic Taylor derivative estimation (this module): term
+    /// subsampling with exact per-factor recombination.
+    Stde {
+        /// Seed of the counter-based stream.
+        seed: u64,
+        /// Term samples per `(step, shard)`.
+        samples: usize,
+        /// Antithetic pairing (even sample count required).
+        antithetic: bool,
+    },
+}
+
+impl EstimatorMode {
+    /// The [`StdeConfig`] of a stochastic mode (`None` when exact).
+    pub fn stde_config(&self) -> Option<StdeConfig> {
+        match *self {
+            EstimatorMode::Exact => None,
+            EstimatorMode::Stde { seed, samples, antithetic } => {
+                Some(StdeConfig { seed, samples, antithetic })
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- StdePlan
+
+/// The compiled sparse direction pool of one operator: for every factor
+/// `∂^α` the operator can ask for, an **exact** recombination row over
+/// directions supported on `α`'s axes (mini rational moment systems on
+/// the support — see the module docs). Plain data, `Send + Sync`.
+pub struct StdePlan {
+    dim: usize,
+    directions: Vec<Vec<i64>>,
+    /// `(α, dir_ids, weights)` per distinct operator factor with
+    /// `|α| ≥ 1`, in [`DiffOperator::needed_partials`] order.
+    rows: Vec<(Vec<usize>, Vec<usize>, Vec<f64>)>,
+    max_order: usize,
+}
+
+impl StdePlan {
+    /// Compile the factor-wise direction pool of `op`.
+    ///
+    /// Panics if a single factor couples more than 4 axes (the exact
+    /// mini moment systems inherit the [`JetPlan`] support envelope) —
+    /// the operator *dimension* is unbounded, only per-factor coupling
+    /// is limited.
+    pub fn new(op: &DiffOperator) -> StdePlan {
+        let dim = op.dim();
+        let sp = op.sparsity();
+        assert!(
+            sp.max_support <= 4,
+            "a factor couples {} axes; exact per-factor moment systems support at most 4",
+            sp.max_support
+        );
+        let mut directions: Vec<Vec<i64>> = Vec::new();
+        let mut rows = Vec::new();
+        let mut minis: HashMap<(Vec<usize>, usize), JetPlan> = HashMap::new();
+        for alpha in op.needed_partials() {
+            let m: usize = alpha.iter().sum();
+            if m == 0 {
+                continue;
+            }
+            let support: Vec<usize> = (0..dim).filter(|&i| alpha[i] > 0).collect();
+            let local_alpha: Vec<usize> = support.iter().map(|&i| alpha[i]).collect();
+            let mini = minis
+                .entry((support.clone(), m))
+                .or_insert_with(|| JetPlan::new(support.len(), m));
+            let (local_ids, w) = mini.weights_for(&local_alpha);
+            let mut dir_ids = Vec::with_capacity(local_ids.len());
+            for &lid in local_ids {
+                let local = &JetPlan::directions(mini)[lid];
+                let mut v = vec![0i64; dim];
+                for (slot, &axis) in support.iter().enumerate() {
+                    v[axis] = local[slot];
+                }
+                let gid = match directions.iter().position(|d| d == &v) {
+                    Some(g) => g,
+                    None => {
+                        directions.push(v);
+                        directions.len() - 1
+                    }
+                };
+                dir_ids.push(gid);
+            }
+            rows.push((alpha, dir_ids, w.to_vec()));
+        }
+        let max_order = op.max_order();
+        StdePlan { dim, directions, rows, max_order }
+    }
+
+    /// Highest derivative order any factor requests.
+    pub fn max_order(&self) -> usize {
+        self.max_order
+    }
+
+    /// The tabulated factors, in [`DiffOperator::needed_partials`]
+    /// order (order-0 factors are served by the jet value directly and
+    /// carry no row).
+    pub fn factors(&self) -> impl Iterator<Item = &[usize]> {
+        self.rows.iter().map(|(a, _, _)| a.as_slice())
+    }
+}
+
+impl RecombinationPlan for StdePlan {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn directions(&self) -> &[Vec<i64>] {
+        &self.directions
+    }
+
+    fn weights_for(&self, alpha: &[usize]) -> (&[usize], &[f64]) {
+        assert_eq!(alpha.len(), self.dim, "multi-index arity must match the plan dim");
+        let row = self
+            .rows
+            .iter()
+            .find(|(a, _, _)| a.as_slice() == alpha)
+            .unwrap_or_else(|| {
+                panic!("∂^{alpha:?} is not a factor of the planned operator")
+            });
+        (&row.1, &row.2)
+    }
+}
+
+// ------------------------------------------------------------- sampling
+
+/// Draw `cfg.samples` term indices (into a `n_terms`-long term list)
+/// for one `(step, shard)` coordinate. Plain draws are exact-uniform;
+/// antithetic mode reflects each pair's index (`j` and `T−1−j`, both
+/// marginally uniform, perfectly anticorrelated), which cuts variance
+/// whenever term magnitudes vary monotonically along the term list.
+pub fn sample_terms(cfg: &StdeConfig, n_terms: usize, step: u64, shard: u64) -> Vec<usize> {
+    assert!(n_terms >= 1, "sampling needs at least one term");
+    assert!(cfg.samples >= 1, "sampling needs at least one draw");
+    let rng = CounterRng::new(cfg.seed);
+    let t = n_terms as u64;
+    if cfg.antithetic {
+        assert!(
+            cfg.samples % 2 == 0,
+            "antithetic pairing needs an even sample count (got {})",
+            cfg.samples
+        );
+        (0..cfg.samples)
+            .map(|k| {
+                let j = rng.below(step, shard, (k / 2) as u64, t);
+                (if k % 2 == 0 { j } else { t - 1 - j }) as usize
+            })
+            .collect()
+    } else {
+        (0..cfg.samples)
+            .map(|k| rng.below(step, shard, k as u64, t) as usize)
+            .collect()
+    }
+}
+
+/// The Horvitz–Thompson reweighted operator of one draw: term `t`
+/// sampled `μ_t` times keeps its factors with coefficient
+/// `μ_t·(T/K)·c_t` (distinct terms in ascending id order, so downstream
+/// accumulation order is a pure function of the draw). Its expectation
+/// over draws is the full operator — the unbiasedness workhorse.
+pub fn sampled_operator(op: &DiffOperator, samples: &[usize]) -> DiffOperator {
+    assert!(!samples.is_empty(), "sampled_operator needs at least one draw");
+    let t = op.terms().len();
+    let mut mult = vec![0usize; t];
+    for &s in samples {
+        assert!(s < t, "sample {s} outside the {t}-term operator");
+        mult[s] += 1;
+    }
+    let scale = t as f64 / samples.len() as f64;
+    let mut out = DiffOperator::new(op.dim());
+    for (id, term) in op.terms().iter().enumerate() {
+        if mult[id] == 0 {
+            continue;
+        }
+        out = out.with_product(term.coeff * scale * mult[id] as f64, term.factors.clone());
+    }
+    out
+}
+
+/// Direction count of the exact `|α| ≤ n` plan over `dim` axes:
+/// `C(dim+n−1, dim−1)` (the order-`n` moment rows; lower orders share
+/// directions) — the denominator of the bench's pass-ratio metric,
+/// computable without building the combinatorial plan.
+pub fn exact_direction_count(dim: usize, n: usize) -> u128 {
+    if n == 0 {
+        return 0;
+    }
+    // C(dim + n − 1, n), multiplicative form.
+    let mut num: u128 = 1;
+    for i in 0..n {
+        num = num
+            .checked_mul((dim + n - 1 - i) as u128)
+            .expect("direction count overflows u128")
+            / (i as u128 + 1);
+    }
+    num
+}
+
+// ----------------------------------------------------------- StdeEngine
+
+/// One evaluated estimate: the values and the cost that produced them.
+pub struct StdeEstimate {
+    /// `L[u](x)` estimate, `[B, out]`.
+    pub values: Tensor,
+    /// Directional passes this step actually launched (the numerator of
+    /// the bench's pass-ratio metric).
+    pub n_directions: usize,
+}
+
+/// The inference-side estimator: a [`StdePlan`] driving the fused
+/// directional kernel with per-step sampled sparse direction stacks.
+///
+/// ```
+/// use ntangent::nn::Mlp;
+/// use ntangent::ntp::stde::{StdeConfig, StdeEngine};
+/// use ntangent::pde::PdeProblem;
+/// use ntangent::util::prng::Prng;
+///
+/// let problem = PdeProblem::Poisson10d;
+/// let mut rng = Prng::seeded(4);
+/// let mlp = Mlp::uniform(10, 8, 2, 1, &mut rng);
+/// let x = problem.sample_interior(16, &mut rng);
+/// let cfg = StdeConfig { seed: 7, samples: 4, antithetic: false };
+/// let est = StdeEngine::new(problem.operator(), cfg);
+/// let e = est.estimate(&mlp, &x, 0);
+/// assert_eq!(e.values.shape(), &[16, 1]);
+/// // 4 samples of a pure-axis operator cost at most 4 directions —
+/// // the exact 10-D plan would need 55.
+/// assert!(e.n_directions <= 4);
+/// ```
+pub struct StdeEngine {
+    op: DiffOperator,
+    plan: StdePlan,
+    cfg: StdeConfig,
+    engine: NtpEngine,
+}
+
+impl StdeEngine {
+    /// Serial estimator for `op` under `cfg`.
+    pub fn new(op: DiffOperator, cfg: StdeConfig) -> StdeEngine {
+        StdeEngine::with_policy(op, cfg, ParallelPolicy::Serial)
+    }
+
+    /// Estimator with an explicit batch-parallel policy (scheduling
+    /// only — estimates are bitwise policy-invariant like every fused
+    /// forward).
+    pub fn with_policy(op: DiffOperator, cfg: StdeConfig, policy: ParallelPolicy) -> StdeEngine {
+        let plan = StdePlan::new(&op);
+        let n = op.max_order().max(1);
+        StdeEngine {
+            engine: NtpEngine::with_policy(n, policy),
+            op,
+            plan,
+            cfg,
+        }
+    }
+
+    /// The operator being estimated.
+    pub fn operator(&self) -> &DiffOperator {
+        &self.op
+    }
+
+    /// The compiled sparse direction pool.
+    pub fn plan(&self) -> &StdePlan {
+        &self.plan
+    }
+
+    /// The estimation config.
+    pub fn config(&self) -> &StdeConfig {
+        &self.cfg
+    }
+
+    /// Unbiased estimate of `L[u](x)` at counter step `step` over
+    /// `x: [B, dim]` — sample terms, launch one `[D·B, d]`
+    /// direction-stacked fused batch over the union of the sampled
+    /// factors' directions, recombine each factor exactly, assemble the
+    /// Horvitz–Thompson sum. Bitwise deterministic in `(seed, step)`.
+    pub fn estimate(&self, mlp: &Mlp, x: &Tensor, step: u64) -> StdeEstimate {
+        assert_eq!(x.rank(), 2, "x must be [B, dim]");
+        assert_eq!(x.shape()[1], self.plan.dim, "point dim must match the plan");
+        assert_eq!(mlp.input_dim(), self.plan.dim, "network input dim must match the plan");
+        let samples = sample_terms(&self.cfg, self.op.terms().len(), step, 0);
+        let sop = sampled_operator(&self.op, &samples);
+        self.apply_sampled(mlp, x, &sop)
+    }
+
+    /// Evaluate an already-sampled (reweighted) operator — the shared
+    /// back half of [`StdeEngine::estimate`], also used by the bench's
+    /// variance probes.
+    pub fn apply_sampled(&self, mlp: &Mlp, x: &Tensor, sop: &DiffOperator) -> StdeEstimate {
+        let batch = x.shape()[0];
+        let dim = self.plan.dim;
+        let out_dim = mlp.output_dim();
+        let plane = batch * out_dim;
+
+        // Which pool directions this draw needs, and to what order
+        // (order-0 factors ride on channel 0 of any launched block).
+        let mut need_order = vec![0usize; self.plan.directions.len()];
+        for alpha in sop.needed_partials() {
+            let m: usize = alpha.iter().sum();
+            if m == 0 {
+                continue;
+            }
+            let (ids, _) = self.plan.weights_for(&alpha);
+            for &id in ids {
+                need_order[id] = need_order[id].max(m);
+            }
+        }
+        // Launch slots in ascending pool id — a pure function of the
+        // draw, independent of term iteration order.
+        let launched: Vec<usize> = (0..need_order.len())
+            .filter(|&id| need_order[id] > 0)
+            .collect();
+        let n_launch = need_order.iter().copied().max().unwrap_or(0);
+        let mut slot_of = vec![usize::MAX; self.plan.directions.len()];
+        for (slot, &id) in launched.iter().enumerate() {
+            slot_of[id] = slot;
+        }
+
+        // One stacked fused batch over the launched directions (or a
+        // single zero-direction block when the draw is derivative-free).
+        let blocks = launched.len().max(1);
+        let mut xs = Vec::with_capacity(blocks * batch * dim);
+        let mut vs = Vec::with_capacity(blocks * batch * dim);
+        if launched.is_empty() {
+            xs.extend_from_slice(x.data());
+            vs.resize(batch * dim, 0.0);
+        } else {
+            for &id in &launched {
+                xs.extend_from_slice(x.data());
+                let dir = &self.plan.directions[id];
+                for _ in 0..batch {
+                    vs.extend(dir.iter().map(|&c| c as f64));
+                }
+            }
+        }
+        let xs = Tensor::from_vec(xs, &[blocks * batch, dim]);
+        let vs = Tensor::from_vec(vs, &[blocks * batch, dim]);
+        let channels = self.engine.forward_directional(mlp, &xs, &vs, n_launch);
+
+        // Exact per-factor recombination: ∂^α = Σ_k w_k · channel_m[slot_k].
+        let partial = |alpha: &[usize]| -> Vec<f64> {
+            let m: usize = alpha.iter().sum();
+            if m == 0 {
+                return channels[0].data()[..plane].to_vec();
+            }
+            let (ids, w) = self.plan.weights_for(alpha);
+            let mut out = vec![0.0; plane];
+            for (&id, &wk) in ids.iter().zip(w) {
+                let slot = slot_of[id];
+                let src = &channels[m].data()[slot * plane..(slot + 1) * plane];
+                for (o, &s) in out.iter_mut().zip(src) {
+                    *o += wk * s;
+                }
+            }
+            out
+        };
+
+        // Horvitz–Thompson assembly in (ascending) term order.
+        let mut acc = vec![0.0; plane];
+        for term in sop.terms() {
+            let mut prod: Option<Vec<f64>> = None;
+            for f in &term.factors {
+                let p = partial(f);
+                prod = Some(match prod {
+                    None => p,
+                    Some(mut q) => {
+                        for (a, b) in q.iter_mut().zip(&p) {
+                            *a *= b;
+                        }
+                        q
+                    }
+                });
+            }
+            let p = prod.expect("term has at least one factor");
+            for (a, &b) in acc.iter_mut().zip(&p) {
+                *a += term.coeff * b;
+            }
+        }
+        StdeEstimate {
+            values: Tensor::from_vec(acc, &[batch, out_dim]),
+            n_directions: launched.len(),
+        }
+    }
+}

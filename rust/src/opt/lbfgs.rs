@@ -6,7 +6,11 @@
 //!   values only**. This mirrors the open-source PyTorch-LBFGS the paper
 //!   uses: each trial point costs one *forward* pass and the step costs a
 //!   single backward pass, which is exactly why the paper's forward-pass
-//!   speedups compound during the L-BFGS phase (Fig. 6).
+//!   speedups compound during the L-BFGS phase (Fig. 6). Trial points
+//!   past the interpolation candidate form a data-independent halving
+//!   ladder, so they pipeline through [`Objective::value_batch`] — on a
+//!   sharded objective one pool sweep evaluates `trials × shards` tapes
+//!   instead of serializing a sweep per trial.
 //! - [`LineSearch::StrongWolfe`] — bracketing + zoom enforcing the strong
 //!   Wolfe conditions (needs gradients at trial points; more robust).
 //!
@@ -115,6 +119,11 @@ impl Lbfgs {
         obj.value(theta)
     }
 
+    fn value_batch(&mut self, obj: &mut dyn Objective, trials: &[Tensor]) -> Vec<f64> {
+        self.n_value_evals += trials.len() as u64;
+        obj.value_batch(trials)
+    }
+
     fn value_grad(&mut self, obj: &mut dyn Objective, theta: &Tensor) -> (f64, Tensor) {
         self.n_grad_evals += 1;
         obj.value_grad(theta)
@@ -209,7 +218,15 @@ impl Lbfgs {
     }
 
     /// Armijo backtracking: values only, gradient deferred to the accepted
-    /// point. Returns `(alpha, f(alpha), None)`.
+    /// point. The unit step is probed alone (the common accept — one
+    /// forward pass), then the quadratic-interpolation candidate alone;
+    /// past that the ladder is pure halving, **data-independent**, so its
+    /// trials go through [`Objective::value_batch`] in waves — a sharded
+    /// objective evaluates `trials × shards` tapes in one pool sweep.
+    /// Acceptance is the first Armijo-satisfying trial in ladder order and
+    /// `value_batch` is bitwise-equal to sequential `value` calls, so the
+    /// trajectory is a pure function of the objective, never the policy.
+    /// Returns `(alpha, f(alpha), None)`.
     fn backtracking(
         &mut self,
         obj: &mut dyn Objective,
@@ -218,22 +235,39 @@ impl Lbfgs {
         f0: f64,
         dg0: f64,
     ) -> Option<(f64, f64, Option<Tensor>)> {
-        let mut alpha = 1.0;
-        for _ in 0..self.max_ls {
-            let trial = theta.axpy(alpha, dir);
-            let f = self.value(obj, &trial);
-            if f.is_finite() && f <= f0 + self.c1 * alpha * dg0 {
-                return Some((alpha, f, None));
+        const WAVE: usize = 4;
+        let c1 = self.c1;
+
+        // Wave 0: the unit step alone.
+        let f1 = self.value_batch(obj, &[theta.axpy(1.0, dir)])[0];
+        if f1.is_finite() && f1 <= f0 + c1 * dg0 {
+            return Some((1.0, f1, None));
+        }
+        // Quadratic interpolation on φ(α) using φ(0)=f0, φ'(0)=dg0,
+        // φ(1)=f1 seeds the ladder (halving fallback when degenerate).
+        let denom = 2.0 * (f1 - f0 - dg0);
+        let seed = if f1.is_finite() && denom > 0.0 {
+            (-dg0 / denom).clamp(0.1, 0.5)
+        } else {
+            0.5
+        };
+
+        let mut alpha = seed;
+        let mut used = 1;
+        let mut wave_len = 1; // interp candidate alone, then full waves
+        while used < self.max_ls {
+            let wave = wave_len.min(self.max_ls - used);
+            let alphas: Vec<f64> = (0..wave).map(|i| alpha * 0.5f64.powi(i as i32)).collect();
+            let trials: Vec<Tensor> = alphas.iter().map(|&a| theta.axpy(a, dir)).collect();
+            let fs = self.value_batch(obj, &trials);
+            for (&a, &f) in alphas.iter().zip(&fs) {
+                if f.is_finite() && f <= f0 + c1 * a * dg0 {
+                    return Some((a, f, None));
+                }
             }
-            // Quadratic interpolation on φ(α) using φ(0)=f0, φ'(0)=dg0,
-            // φ(α)=f; fall back to halving when the model is degenerate.
-            let denom = 2.0 * (f - f0 - dg0 * alpha);
-            let quad = if f.is_finite() && denom > 0.0 {
-                -dg0 * alpha * alpha / denom
-            } else {
-                0.5 * alpha
-            };
-            alpha = quad.clamp(0.1 * alpha, 0.5 * alpha);
+            used += wave;
+            alpha *= 0.5f64.powi(wave as i32);
+            wave_len = WAVE;
         }
         None
     }
@@ -475,6 +509,46 @@ mod tests {
                 assert_eq!(a, b, "{policy:?} step {i}");
             }
         }
+    }
+
+    /// Deep backtracking pipelines its trials: the whole `max_ls` budget
+    /// is spent through a handful of `value_batch` waves, never one call
+    /// per trial point.
+    #[test]
+    fn backtracking_batches_line_search_trials() {
+        struct Cliff {
+            batch_calls: u64,
+            points: u64,
+        }
+        impl Objective for Cliff {
+            fn value_grad(&mut self, t: &Tensor) -> (f64, Tensor) {
+                if t.norm() == 0.0 {
+                    (1.0, Tensor::ones(&[2]))
+                } else {
+                    (f64::INFINITY, Tensor::ones(&[2]))
+                }
+            }
+            fn value_batch(&mut self, ts: &[Tensor]) -> Vec<f64> {
+                self.batch_calls += 1;
+                self.points += ts.len() as u64;
+                ts.iter()
+                    .map(|t| if t.norm() == 0.0 { 1.0 } else { f64::INFINITY })
+                    .collect()
+            }
+            fn dim(&self) -> usize {
+                2
+            }
+        }
+        let mut obj = Cliff { batch_calls: 0, points: 0 };
+        let mut theta = Tensor::zeros(&[2]);
+        let mut opt = Lbfgs::new(2);
+        let (_, status) = opt.step(&mut obj, &mut theta);
+        assert_eq!(status, LbfgsStatus::LineSearchFailed);
+        assert_eq!(opt.n_value_evals, 25, "the full trial budget is spent");
+        assert_eq!(obj.points, 25);
+        // unit + interp + ceil(23/4) halving waves = 8 pool sweeps.
+        assert!(obj.batch_calls <= 8, "got {} waves", obj.batch_calls);
+        assert_eq!(theta.data(), &[0.0, 0.0]);
     }
 
     #[test]

@@ -36,6 +36,16 @@ pub trait Objective {
         self.value_grad(theta).0
     }
 
+    /// Losses at several parameter vectors at once — the line-search
+    /// batch hook. The default evaluates sequentially; sharded
+    /// objectives override it to fan `trials × shards` tasks through
+    /// one worker-pool sweep. Implementations must return exactly what
+    /// per-trial [`Objective::value`] calls would (bitwise), so
+    /// optimizers may batch freely without perturbing trajectories.
+    fn value_batch(&mut self, thetas: &[Tensor]) -> Vec<f64> {
+        thetas.iter().map(|t| self.value(t)).collect()
+    }
+
     /// Number of parameters.
     fn dim(&self) -> usize;
 }

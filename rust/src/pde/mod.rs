@@ -19,14 +19,20 @@
 //!   from mixed-partial *tape nodes* so residual losses backprop through
 //!   the operator (see [`crate::pinn::MultiObjective`]).
 //!
-//! [`PdeProblem`] is the scenario library: named 2-D problems with
+//! [`PdeProblem`] is the scenario library: named problems with
 //! manufactured exact solutions, source terms and box domains, used by
 //! `ntangent train --pde <name>`, the wire protocol's operator requests
-//! and the operator benches.
+//! and the operator benches. The classics are 2-D; the
+//! stochastic-estimator workloads (`poisson10d`, `heat100d`, `hjb10d`)
+//! go to 10 and 100 axes, where only the sampled path
+//! ([`crate::ntp::stde`]) is tractable — [`DiffOperator::sparsity`]
+//! feeds its operator-adapted sampler.
 
 pub mod cache;
 pub mod operator;
 pub mod problems;
 
-pub use operator::{DiffOperator, OpTerm};
-pub use problems::{resolve_operator, PdeProblem, HEAT_KAPPA, KDV_SPEED, WAVE_SPEED};
+pub use operator::{DiffOperator, OpSparsity, OpTerm};
+pub use problems::{
+    resolve_operator, PdeProblem, HEAT_KAPPA, HJB_MU, HJB_SIGMA, KDV_SPEED, WAVE_SPEED,
+};

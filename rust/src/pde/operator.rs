@@ -20,6 +20,24 @@ pub struct OpTerm {
     pub factors: Vec<Vec<usize>>,
 }
 
+/// Structural sparsity of a [`DiffOperator`] (see
+/// [`DiffOperator::sparsity`]): the raw material for operator-adapted
+/// stochastic sampling.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OpSparsity {
+    /// Sorted axes that appear with a nonzero derivative order in any
+    /// factor (axes the operator never differentiates along are absent).
+    pub axes: Vec<usize>,
+    /// Number of terms available to the term subsampler.
+    pub n_terms: usize,
+    /// Largest per-factor axis support (how many axes a single `∂^α`
+    /// factor couples; 0 for a derivative-free operator).
+    pub max_support: usize,
+    /// `true` when every factor differentiates along at most one axis —
+    /// the cheap case where each sampled term costs a single direction.
+    pub pure_axis: bool,
+}
+
 /// A differential operator `L[u] = Σ_t coeff_t · Π_f ∂^{α_{t,f}} u` over
 /// `dim` input axes.
 ///
@@ -43,8 +61,13 @@ pub struct DiffOperator {
 impl DiffOperator {
     /// An empty operator over `dim` axes (add terms with
     /// [`DiffOperator::with_term`] / [`DiffOperator::with_product`]).
+    ///
+    /// Any `dim ≥ 1` is accepted for programmatic construction — the
+    /// high-dimensional library problems build 10-D and 100-D operators
+    /// this way. The *text* grammar ([`DiffOperator::parse`]) stays
+    /// one-digit-per-axis and therefore caps at `dim ≤ 9`.
     pub fn new(dim: usize) -> DiffOperator {
-        assert!((1..=9).contains(&dim), "operator dim must be 1..=9");
+        assert!(dim >= 1, "operator needs at least one input axis");
         DiffOperator { dim, terms: Vec::new() }
     }
 
@@ -127,6 +150,40 @@ impl DiffOperator {
             }
         }
         out
+    }
+
+    /// Structural sparsity analysis — what the stochastic estimator's
+    /// operator-adapted sampler keys on (see [`crate::ntp::stde`]): how
+    /// many terms there are to subsample, which axes the operator
+    /// touches at all, and how *coupled* each derivative factor is (a
+    /// pure-axis factor like `∂²/∂x_i²` recombines from a single
+    /// direction, while a `k`-axis mixed factor needs a `k`-dimensional
+    /// moment system).
+    pub fn sparsity(&self) -> OpSparsity {
+        let mut axes: Vec<usize> = Vec::new();
+        let mut max_support = 0usize;
+        let mut pure_axis = true;
+        for term in &self.terms {
+            for f in &term.factors {
+                let support = f.iter().filter(|&&a| a > 0).count();
+                max_support = max_support.max(support);
+                if support > 1 {
+                    pure_axis = false;
+                }
+                for (axis, &a) in f.iter().enumerate() {
+                    if a > 0 && !axes.contains(&axis) {
+                        axes.push(axis);
+                    }
+                }
+            }
+        }
+        axes.sort_unstable();
+        OpSparsity {
+            axes,
+            n_terms: self.terms.len(),
+            max_support,
+            pure_axis,
+        }
     }
 
     /// Parse a compact operator spec over `dim` axes.
@@ -381,6 +438,72 @@ mod tests {
         assert!(crate::pde::cache::shared_operator("q20", 2).is_err());
         assert!(crate::pde::cache::shared_operator("q20", 2).is_err());
         assert!(crate::pde::cache::shared_operator("d20+d02", 2).is_ok());
+    }
+
+    /// The sparsity analysis agrees with a brute-force scan of the term
+    /// list for every library problem — the operator-adapted sampler
+    /// keys on these fields, so they must stay honest as the zoo grows.
+    #[test]
+    fn sparsity_analysis_over_the_problem_library() {
+        use crate::pde::PdeProblem;
+        for p in PdeProblem::ALL {
+            let op = p.operator();
+            let sp = op.sparsity();
+            assert_eq!(sp.n_terms, op.terms().len(), "{}", p.name());
+            for axis in 0..op.dim() {
+                let touched = op
+                    .terms()
+                    .iter()
+                    .flat_map(|t| t.factors.iter())
+                    .any(|f| f[axis] > 0);
+                assert_eq!(
+                    sp.axes.contains(&axis),
+                    touched,
+                    "{} axis {axis}",
+                    p.name()
+                );
+            }
+            let max_support = op
+                .terms()
+                .iter()
+                .flat_map(|t| t.factors.iter())
+                .map(|f| f.iter().filter(|&&a| a > 0).count())
+                .max()
+                .unwrap_or(0);
+            assert_eq!(sp.max_support, max_support, "{}", p.name());
+            assert_eq!(sp.pure_axis, max_support <= 1, "{}", p.name());
+        }
+    }
+
+    /// Spot checks of the sparsity fields on known shapes, including
+    /// the coupled biharmonic cross term and an axis left untouched.
+    #[test]
+    fn sparsity_known_values() {
+        let heat = DiffOperator::parse("d10-0.1*d02", 2).unwrap();
+        let sp = heat.sparsity();
+        assert_eq!(sp.axes, vec![0, 1]);
+        assert_eq!(sp.n_terms, 2);
+        assert!(sp.pure_axis);
+        assert_eq!(sp.max_support, 1);
+
+        let bih = DiffOperator::biharmonic(2).sparsity();
+        assert!(!bih.pure_axis); // the d22 cross term couples both axes
+        assert_eq!(bih.max_support, 2);
+
+        // An operator that never differentiates along axis 1.
+        let skewed = DiffOperator::new(3)
+            .with_term(1.0, vec![2, 0, 0])
+            .with_product(1.0, vec![vec![0, 0, 0], vec![0, 0, 1]]);
+        let sp = skewed.sparsity();
+        assert_eq!(sp.axes, vec![0, 2]);
+        assert!(sp.pure_axis); // u·∂_z u is single-axis per factor
+        assert_eq!(sp.n_terms, 2);
+
+        // Derivative-free operator: no axes, support 0.
+        let plain = DiffOperator::parse("u*u", 2).unwrap().sparsity();
+        assert!(plain.axes.is_empty());
+        assert_eq!(plain.max_support, 0);
+        assert!(plain.pure_axis);
     }
 
     /// `apply` on jets equals the hand-assembled combination of

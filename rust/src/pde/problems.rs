@@ -14,12 +14,16 @@ use crate::tensor::Tensor;
 use crate::util::prng::Prng;
 use std::f64::consts::PI;
 
-/// Diffusivity κ of [`PdeProblem::Heat2d`].
+/// Diffusivity κ of [`PdeProblem::Heat2d`] and [`PdeProblem::Heat100d`].
 pub const HEAT_KAPPA: f64 = 0.1;
 /// Wave speed c of [`PdeProblem::Wave2d`].
 pub const WAVE_SPEED: f64 = 1.0;
 /// Soliton speed c of [`PdeProblem::Kdv`].
 pub const KDV_SPEED: f64 = 0.8;
+/// Diffusion coefficient σ of [`PdeProblem::Hjb10d`].
+pub const HJB_SIGMA: f64 = 0.5;
+/// Control-cost coefficient μ of [`PdeProblem::Hjb10d`]'s `|∇u|²` term.
+pub const HJB_MU: f64 = 0.25;
 
 /// A named PDE scenario over a box domain.
 ///
@@ -50,16 +54,33 @@ pub enum PdeProblem {
     /// 2-D biharmonic `Δ²u = f` over `(x, y) ∈ [0,1]²`,
     /// `u* = sin(πx)·sin(πy)`, `f = 4π⁴·u*` — the order-4 stress test.
     Biharmonic2d,
+    /// 10-D Poisson `Δu = f` over `[0,1]^10`,
+    /// `u* = (1/10)·Σᵢ sin(πxᵢ)`, `f = −π²·u*` — the exact plan needs
+    /// 55 directions here; the STDE path samples a handful of axes.
+    Poisson10d,
+    /// 100-D heat equation `u_t − κ·Δ_x u = 0` over
+    /// `t ∈ [0,1], x ∈ [0,1]^99`,
+    /// `u* = exp(−κπ²t)·(1/99)·Σᵢ sin(πxᵢ)` — 100 pure-axis terms,
+    /// far beyond any exact plan (5050 directions), the STDE showcase.
+    Heat100d,
+    /// 10-D Hamilton–Jacobi–Bellman example
+    /// `u_t + σ·Δ_x u − μ·|∇_x u|² = f` over `t ∈ [0,1], x ∈ [0,1]^9`,
+    /// `u* = exp(−t)·(1/9)·Σᵢ sin(πxᵢ)` — the high-dim *nonlinear*
+    /// stress test (9 quadratic gradient terms).
+    Hjb10d,
 }
 
 impl PdeProblem {
     /// Every library problem, in CLI listing order.
-    pub const ALL: [PdeProblem; 5] = [
+    pub const ALL: [PdeProblem; 8] = [
         PdeProblem::Heat2d,
         PdeProblem::Poisson2d,
         PdeProblem::Wave2d,
         PdeProblem::Kdv,
         PdeProblem::Biharmonic2d,
+        PdeProblem::Poisson10d,
+        PdeProblem::Heat100d,
+        PdeProblem::Hjb10d,
     ];
 
     /// CLI / wire name.
@@ -70,6 +91,9 @@ impl PdeProblem {
             PdeProblem::Wave2d => "wave2d",
             PdeProblem::Kdv => "kdv",
             PdeProblem::Biharmonic2d => "biharmonic2d",
+            PdeProblem::Poisson10d => "poisson10d",
+            PdeProblem::Heat100d => "heat100d",
+            PdeProblem::Hjb10d => "hjb10d",
         }
     }
 
@@ -78,10 +102,22 @@ impl PdeProblem {
         PdeProblem::ALL.iter().copied().find(|p| p.name() == name)
     }
 
-    /// Number of input axes (all library problems are 2-D: one time-like
-    /// plus one space-like axis, or two space axes).
+    /// Number of input axes (time-like axes count; the classic library
+    /// is 2-D, the stochastic-estimator workloads go to 10 and 100).
     pub fn dim(self) -> usize {
-        2
+        match self {
+            PdeProblem::Poisson10d | PdeProblem::Hjb10d => 10,
+            PdeProblem::Heat100d => 100,
+            _ => 2,
+        }
+    }
+
+    /// `true` for the problems whose dimension puts the *exact*
+    /// `JetPlan` out of reach (its direction count is combinatorial in
+    /// [`PdeProblem::dim`]) — these train and validate through the
+    /// stochastic estimator ([`crate::ntp::stde`]).
+    pub fn needs_stde(self) -> bool {
+        self.dim() > 10
     }
 
     /// The differential operator `L` of the residual `L[u] − f`.
@@ -99,6 +135,38 @@ impl PdeProblem {
                 .with_product(1.0, vec![vec![0, 0], vec![0, 1]])
                 .with_term(1.0, vec![0, 3]),
             PdeProblem::Biharmonic2d => DiffOperator::biharmonic(2),
+            PdeProblem::Poisson10d => DiffOperator::laplacian(10),
+            PdeProblem::Heat100d => {
+                // ∂_t − κ·Σ_{i=1..99} ∂²_i over (t, x₁..x₉₉).
+                let d = 100;
+                let mut time = vec![0; d];
+                time[0] = 1;
+                let mut op = DiffOperator::new(d).with_term(1.0, time);
+                for i in 1..d {
+                    let mut alpha = vec![0; d];
+                    alpha[i] = 2;
+                    op = op.with_term(-HEAT_KAPPA, alpha);
+                }
+                op
+            }
+            PdeProblem::Hjb10d => {
+                // ∂_t + σ·Δ_x − μ·Σ_{i=1..9} (∂_i u)² over (t, x₁..x₉).
+                let d = 10;
+                let mut time = vec![0; d];
+                time[0] = 1;
+                let mut op = DiffOperator::new(d).with_term(1.0, time);
+                for i in 1..d {
+                    let mut alpha = vec![0; d];
+                    alpha[i] = 2;
+                    op = op.with_term(HJB_SIGMA, alpha);
+                }
+                for i in 1..d {
+                    let mut grad = vec![0; d];
+                    grad[i] = 1;
+                    op = op.with_product(-HJB_MU, vec![grad.clone(), grad]);
+                }
+                op
+            }
         }
     }
 
@@ -106,7 +174,7 @@ impl PdeProblem {
     pub fn domain(self) -> Vec<(f64, f64)> {
         match self {
             PdeProblem::Kdv => vec![(0.0, 1.0), (-6.0, 6.0)],
-            _ => vec![(0.0, 1.0), (0.0, 1.0)],
+            _ => vec![(0.0, 1.0); self.dim()],
         }
     }
 
@@ -131,6 +199,22 @@ impl PdeProblem {
                 let sech = 1.0 / arg.cosh();
                 3.0 * KDV_SPEED * sech * sech
             }
+            PdeProblem::Poisson10d => {
+                let d = p.len() as f64;
+                p.iter().map(|&x| (PI * x).sin()).sum::<f64>() / d
+            }
+            PdeProblem::Heat100d => {
+                let spatial = &p[1..];
+                let mean =
+                    spatial.iter().map(|&x| (PI * x).sin()).sum::<f64>() / spatial.len() as f64;
+                (-HEAT_KAPPA * PI * PI * p[0]).exp() * mean
+            }
+            PdeProblem::Hjb10d => {
+                let spatial = &p[1..];
+                let mean =
+                    spatial.iter().map(|&x| (PI * x).sin()).sum::<f64>() / spatial.len() as f64;
+                (-p[0]).exp() * mean
+            }
         }
     }
 
@@ -138,9 +222,27 @@ impl PdeProblem {
     /// evolution equations, analytic for Poisson/biharmonic).
     pub fn source(self, p: &[f64]) -> f64 {
         match self {
-            PdeProblem::Heat2d | PdeProblem::Wave2d | PdeProblem::Kdv => 0.0,
+            PdeProblem::Heat2d
+            | PdeProblem::Wave2d
+            | PdeProblem::Kdv
+            | PdeProblem::Heat100d => 0.0,
             PdeProblem::Poisson2d => -2.0 * PI * PI * self.u_exact(p),
             PdeProblem::Biharmonic2d => 4.0 * PI.powi(4) * self.u_exact(p),
+            PdeProblem::Poisson10d => -PI * PI * self.u_exact(p),
+            PdeProblem::Hjb10d => {
+                // f = u*_t + σ·Δ_x u* − μ·|∇_x u*|²
+                //   = −(1 + σπ²)·u* − μ·(π·e^{−t}/9)²·Σ cos²(πxᵢ).
+                let u = self.u_exact(p);
+                let scale = PI * (-p[0]).exp() / 9.0;
+                let grad_sq: f64 = p[1..]
+                    .iter()
+                    .map(|&x| {
+                        let c = scale * (PI * x).cos();
+                        c * c
+                    })
+                    .sum();
+                -(1.0 + HJB_SIGMA * PI * PI) * u - HJB_MU * grad_sq
+            }
         }
     }
 
@@ -277,7 +379,6 @@ mod tests {
     /// operator's order).
     #[test]
     fn exact_solutions_satisfy_their_pdes() {
-        let pts = [[0.31, 0.42], [0.57, 0.23], [0.11, 0.77]];
         for problem in PdeProblem::ALL {
             let op = problem.operator();
             // Absolute FD truncation budget: h²·(next derivative scale)
@@ -287,13 +388,18 @@ mod tests {
                 3 => 0.2,
                 _ => 3.0,
             };
-            for base in &pts {
-                // Map the unit square into the problem's own domain.
+            for trial in 0..3usize {
+                // Deterministic interior fractions of the right arity,
+                // mapped into the problem's own domain (works for the
+                // 2-D classics and the 10/100-D estimator workloads).
                 let dom = problem.domain();
-                let p: Vec<f64> = base
+                let p: Vec<f64> = dom
                     .iter()
-                    .zip(&dom)
-                    .map(|(&u, &(lo, hi))| lo + (hi - lo) * u)
+                    .enumerate()
+                    .map(|(axis, &(lo, hi))| {
+                        let frac = (0.17 + 0.61 * (axis + 3 * trial) as f64).fract() * 0.8 + 0.1;
+                        lo + (hi - lo) * frac
+                    })
                     .collect();
                 let f = |q: &[f64]| problem.u_exact(q);
                 let mut lhs = 0.0;
@@ -360,16 +466,17 @@ mod tests {
     fn samplers_respect_the_domain() {
         let mut rng = Prng::seeded(11);
         for p in PdeProblem::ALL {
+            let d = p.dim();
             let interior = p.sample_interior(40, &mut rng);
-            assert_eq!(interior.shape(), &[40, 2]);
+            assert_eq!(interior.shape(), &[40, d]);
             let dom = p.domain();
-            for row in interior.data().chunks_exact(2) {
+            for row in interior.data().chunks_exact(d) {
                 for (x, &(lo, hi)) in row.iter().zip(&dom) {
                     assert!(*x >= lo && *x <= hi, "{} interior {row:?}", p.name());
                 }
             }
             let boundary = p.sample_boundary(17, &mut rng);
-            for row in boundary.data().chunks_exact(2) {
+            for row in boundary.data().chunks_exact(d) {
                 let on_face = row
                     .iter()
                     .zip(&dom)

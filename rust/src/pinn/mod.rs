@@ -25,7 +25,13 @@
 //! [`crate::pde::PdeProblem`] with operator residuals whose mixed
 //! partials come from batched directional n-TangentProp passes (or the
 //! nested-tape baseline for differential testing) — see
-//! [`crate::ntp::multi`] and `rust/tests/operator_exactness.rs`.
+//! [`crate::ntp::multi`] and `rust/tests/operator_exactness.rs`. High-
+//! dimensional problems (`poisson10d`, `heat100d`, `hjb10d`) swap the
+//! exact plan for stochastic Taylor derivative estimation
+//! ([`EstimatorMode::Stde`], [`crate::ntp::stde`]): the operator's term
+//! set is resampled every gradient step from a counter-based stream, so
+//! even the stochastic trajectories stay bitwise thread-count-invariant
+//! (`rust/tests/stde_determinism.rs`).
 //!
 //! The loss recipes themselves live in one shared term-builder
 //! (`terms`): the monolithic and sharded Burgers objectives compile the
@@ -46,10 +52,11 @@ pub use burgers::BurgersProfile;
 pub use collocation::{
     cluster_points, eval_channels, grid_points, random_points, stratified_points,
 };
+pub use crate::ntp::{EstimatorMode, StdeConfig};
 pub use loss::{residual_derivative_nodes, BurgersLossSpec, DerivEngine, PinnObjective};
-pub use multi::{residual_values, MultiObjective, MultiPinnSpec};
+pub use multi::{residual_values, residual_values_estimated, MultiObjective, MultiPinnSpec};
 pub use parallel::{ParallelObjective, DEFAULT_CHUNK_ROWS};
 pub use trainer::{
-    train_burgers, train_burgers_parallel, train_pde, EpochLog, PdeTrainResult, TrainConfig,
-    TrainableObjective, TrainResult,
+    train_burgers, train_burgers_parallel, train_pde, train_pde_with_estimator, EpochLog,
+    PdeTrainResult, TrainConfig, TrainableObjective, TrainResult,
 };

@@ -28,19 +28,31 @@
 //! so — exactly like the Burgers trainer — **training trajectories are
 //! bitwise identical for every thread count**
 //! (`rust/tests/operator_exactness.rs`).
+//!
+//! Beyond the exact plan's envelope, [`EstimatorMode::Stde`] swaps the
+//! [`JetPlan`] for the sparse [`StdePlan`] pool and **resamples the
+//! operator's term set every gradient step** from the counter-based
+//! stream ([`crate::ntp::stde`]): shard `s` at step `t` draws at
+//! counter `(seed, t, s)`, a pure function of the coordinates, so the
+//! stochastic trajectories keep the same bitwise thread-count
+//! invariance (`rust/tests/stde_determinism.rs`).
 
 use super::loss::DerivEngine;
 use super::terms::{
-    chunk_rows, eval_shards_grad, eval_shards_value, Shard, TermAccumulator, TermScale,
-    ThetaLayout,
+    chunk_rows, eval_shards_grad, eval_shards_value, eval_shards_value_batch, Shard,
+    TermAccumulator, TermScale, ThetaLayout,
 };
 use crate::autodiff::{higher, Graph, NodeId};
 use crate::nn::Mlp;
-use crate::ntp::{JetPlan, MultiJetEngine, NtpEngine, ParallelPolicy};
+use crate::ntp::stde::{sample_terms, sampled_operator};
+use crate::ntp::{
+    EstimatorMode, JetPlan, MultiJetEngine, NtpEngine, ParallelPolicy, RecombinationPlan,
+    StdeConfig, StdeEngine, StdePlan,
+};
 use crate::opt::Objective;
 use crate::pde::{DiffOperator, PdeProblem};
 use crate::tensor::Tensor;
-use crate::util::prng::Prng;
+use crate::util::{par, prng::Prng};
 use std::collections::HashMap;
 
 /// Hyper-parameters of a multi-dimensional PDE objective.
@@ -112,6 +124,9 @@ pub struct MultiObjective {
     pub spec: MultiPinnSpec,
     /// Which engine computes the mixed partials on every shard tape.
     pub engine: DerivEngine,
+    /// How the operator residual is evaluated (exact plan vs STDE).
+    pub estimator: EstimatorMode,
+    stde: Option<StdeState>,
     /// Full interior collocation cloud (kept for inspection/reporting).
     pub x_int: Tensor,
     /// Full boundary cloud.
@@ -136,6 +151,37 @@ impl MultiObjective {
         chunk: usize,
         rng: &mut Prng,
     ) -> MultiObjective {
+        MultiObjective::build_with_estimator(
+            spec,
+            mlp,
+            engine,
+            policy,
+            chunk,
+            rng,
+            EstimatorMode::Exact,
+        )
+    }
+
+    /// [`MultiObjective::build`] with an explicit [`EstimatorMode`].
+    ///
+    /// `Exact` compiles the combinatorial [`JetPlan`] (the low-`d`
+    /// oracle). `Stde` compiles the operator's sparse [`StdePlan`]
+    /// pool once and **resamples the operator term set every gradient
+    /// step**: shard `s` at step `t` draws terms at counter
+    /// `(seed, t, s)`, so stochastic trajectories stay bitwise
+    /// identical for every thread count. Forward-only `value` calls
+    /// between gradient steps reuse the current draw — the L-BFGS line
+    /// search must probe the same sampled objective it is descending.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_with_estimator(
+        spec: MultiPinnSpec,
+        mlp: &Mlp,
+        engine: DerivEngine,
+        policy: ParallelPolicy,
+        chunk: usize,
+        rng: &mut Prng,
+        estimator: EstimatorMode,
+    ) -> MultiObjective {
         assert!(chunk >= 1, "chunk must be >= 1");
         assert!(spec.n_interior >= 1, "need at least one interior point");
         let dim = spec.problem.dim();
@@ -151,7 +197,6 @@ impl MultiObjective {
 
         let op = spec.problem.operator();
         let n = op.max_order();
-        let plan = JetPlan::new(dim, n);
         let ntp = NtpEngine::new(n);
 
         let int_chunks = chunk_rows(&x_int, chunk);
@@ -161,20 +206,55 @@ impl MultiObjective {
         // residual chunks lead). A pure function of (spec, chunk).
         let bc_offset = n_shards - bc_chunks.len();
 
-        let shards: Vec<Shard> = (0..n_shards)
-            .map(|s| {
-                build_multi_shard(
-                    &spec,
-                    mlp,
-                    engine,
-                    &ntp,
-                    &plan,
-                    &op,
-                    int_chunks.get(s),
-                    bc_chunks.get(s.wrapping_sub(bc_offset)),
-                )
-            })
-            .collect();
+        let (shards, stde) = match estimator.stde_config() {
+            None => {
+                assert!(
+                    !spec.problem.needs_stde(),
+                    "{}'s exact plan is combinatorially intractable — train with EstimatorMode::Stde",
+                    spec.problem.name()
+                );
+                let plan = JetPlan::new(dim, n);
+                let shards: Vec<Shard> = (0..n_shards)
+                    .map(|s| {
+                        build_multi_shard(
+                            &spec,
+                            mlp,
+                            engine,
+                            &ntp,
+                            &plan,
+                            &op,
+                            int_chunks.get(s),
+                            bc_chunks.get(s.wrapping_sub(bc_offset)),
+                        )
+                    })
+                    .collect();
+                (shards, None)
+            }
+            Some(cfg) => {
+                assert!(
+                    matches!(engine, DerivEngine::Ntp),
+                    "STDE estimation runs on the directional n-TangentProp engine"
+                );
+                assert!(
+                    spec.problem.boundary_operator().is_none(),
+                    "STDE mode supports first-trace boundary conditions only"
+                );
+                let plan = StdePlan::new(&op);
+                let state = StdeState {
+                    op,
+                    plan,
+                    ntp,
+                    mlp: mlp.clone(),
+                    cfg,
+                    int_chunks,
+                    bc_chunks,
+                    bc_offset,
+                    step: 0,
+                };
+                let shards = state.build_shards(&spec, engine, policy);
+                (shards, Some(state))
+            }
+        };
 
         MultiObjective {
             shards,
@@ -183,6 +263,8 @@ impl MultiObjective {
             chunk,
             spec,
             engine,
+            estimator,
+            stde,
             x_int,
             x_bc,
             n_forward: 0,
@@ -216,6 +298,12 @@ impl MultiObjective {
         self.shards.iter().map(|s| s.graph.len()).sum()
     }
 
+    /// Counter step of the current STDE draw (0 until the first
+    /// gradient evaluation; always 0 in exact mode).
+    pub fn stde_step(&self) -> u64 {
+        self.stde.as_ref().map_or(0, |s| s.step)
+    }
+
     /// Initial flat parameter vector (the MLP weights).
     pub fn theta_init(&self, mlp: &Mlp) -> Tensor {
         self.layout.theta_init(mlp)
@@ -229,6 +317,13 @@ impl MultiObjective {
 
 impl Objective for MultiObjective {
     fn value_grad(&mut self, theta: &Tensor) -> (f64, Tensor) {
+        // STDE mode: a fresh term draw per gradient step. Resampling
+        // happens *here* (never in `value`) so forward-only line-search
+        // probes descend the same sampled objective.
+        if let Some(state) = self.stde.as_mut() {
+            state.step += 1;
+            self.shards = state.build_shards(&self.spec, self.engine, self.policy);
+        }
         self.n_backward += 1;
         eval_shards_grad(&self.shards, &self.layout.inputs_of(theta), self.policy)
     }
@@ -238,8 +333,68 @@ impl Objective for MultiObjective {
         eval_shards_value(&self.shards, &self.layout.inputs_of(theta), self.policy)
     }
 
+    fn value_batch(&mut self, thetas: &[Tensor]) -> Vec<f64> {
+        self.n_forward += thetas.len() as u64;
+        let inputs: Vec<Vec<Tensor>> = thetas.iter().map(|t| self.layout.inputs_of(t)).collect();
+        eval_shards_value_batch(&self.shards, &inputs, self.policy)
+    }
+
     fn dim(&self) -> usize {
         self.layout.dim()
+    }
+}
+
+/// The frozen STDE machinery of one objective: the full operator, its
+/// compiled sparse direction pool, the collocation chunk layout and the
+/// current counter step. Shard tapes are *derived* state — rebuilt from
+/// here on every gradient step with a fresh term draw.
+struct StdeState {
+    op: DiffOperator,
+    plan: StdePlan,
+    ntp: NtpEngine,
+    /// Shape template only — parameter values enter each tape through
+    /// its input slots at eval time, so tapes rebuilt mid-training see
+    /// the current θ like any other shard.
+    mlp: Mlp,
+    cfg: StdeConfig,
+    int_chunks: Vec<Tensor>,
+    bc_chunks: Vec<Tensor>,
+    bc_offset: usize,
+    step: u64,
+}
+
+impl StdeState {
+    /// One tape per shard for the current counter step: shard `s` draws
+    /// its own terms at `(seed, step, s)` and compiles the reweighted
+    /// sampled operator over its interior slice (boundary terms keep
+    /// exact forward values). Tape construction runs on the worker pool
+    /// — each tape is a pure function of `(state, s)`, so the layout
+    /// stays policy-invariant.
+    fn build_shards(
+        &self,
+        spec: &MultiPinnSpec,
+        engine: DerivEngine,
+        policy: ParallelPolicy,
+    ) -> Vec<Shard> {
+        let n_shards = self.int_chunks.len().max(self.bc_chunks.len()).max(1);
+        let workers = par::workers_for_tasks(policy, n_shards);
+        par::run_indexed(n_shards, workers, |s| {
+            let interior = self.int_chunks.get(s);
+            let sampled = interior.map(|_| {
+                let draws = sample_terms(&self.cfg, self.op.terms().len(), self.step, s as u64);
+                sampled_operator(&self.op, &draws)
+            });
+            build_multi_shard(
+                spec,
+                &self.mlp,
+                engine,
+                &self.ntp,
+                &self.plan,
+                sampled.as_ref().unwrap_or(&self.op),
+                interior,
+                self.bc_chunks.get(s.wrapping_sub(self.bc_offset)),
+            )
+        })
     }
 }
 
@@ -250,7 +405,7 @@ fn partial_nodes(
     mlp: &Mlp,
     engine: DerivEngine,
     ntp: &NtpEngine,
-    plan: &JetPlan,
+    plan: &dyn RecombinationPlan,
     op: &DiffOperator,
     param_nodes: &[NodeId],
     xn: NodeId,
@@ -343,7 +498,7 @@ fn build_multi_shard(
     mlp: &Mlp,
     engine: DerivEngine,
     ntp: &NtpEngine,
-    plan: &JetPlan,
+    plan: &dyn RecombinationPlan,
     op: &DiffOperator,
     interior: Option<&Tensor>,
     boundary: Option<&Tensor>,
@@ -433,6 +588,25 @@ pub fn residual_values(
     let jet = engine.jet(mlp, x);
     let lhs = op.apply(&jet);
     lhs.sub(&problem.source_rows(x))
+}
+
+/// Stochastic counterpart of [`residual_values`]: the Horvitz–Thompson
+/// operator estimate at counter `step` minus the source term — unbiased
+/// in expectation over the draw, and the only tractable validation path
+/// for problems whose exact plan is combinatorial (`heat100d`).
+/// Bitwise deterministic in `(cfg.seed, step)`.
+pub fn residual_values_estimated(
+    problem: PdeProblem,
+    mlp: &Mlp,
+    x: &Tensor,
+    cfg: StdeConfig,
+    step: u64,
+    policy: ParallelPolicy,
+) -> Tensor {
+    let est = StdeEngine::with_policy(problem.operator(), cfg, policy);
+    est.estimate(mlp, x, step)
+        .values
+        .sub(&problem.source_rows(x))
 }
 
 #[cfg(test)]
@@ -609,5 +783,83 @@ mod tests {
         assert_eq!(v, vg);
         assert_eq!(obj.n_forward, 1);
         assert_eq!(obj.n_backward, 1);
+    }
+
+    fn build_stde(policy: ParallelPolicy) -> (MultiObjective, Tensor) {
+        let mut rng_m = Prng::seeded(1);
+        let mlp = Mlp::uniform(10, 6, 2, 1, &mut rng_m);
+        let mut rng = Prng::seeded(9);
+        let mut spec = MultiPinnSpec::for_problem(PdeProblem::Poisson10d);
+        spec.n_interior = 12;
+        spec.n_boundary = 6;
+        let obj = MultiObjective::build_with_estimator(
+            spec,
+            &mlp,
+            DerivEngine::Ntp,
+            policy,
+            4,
+            &mut rng,
+            EstimatorMode::Stde { seed: 11, samples: 2, antithetic: false },
+        );
+        let theta = obj.theta_init(&mlp);
+        (obj, theta)
+    }
+
+    /// STDE mode: the sampled objective is bitwise policy-invariant
+    /// (draws are counter-keyed by `(step, shard)`, never by thread),
+    /// gradient steps advance the draw, and forward-only probes do not.
+    #[test]
+    fn stde_objective_is_deterministic_and_resamples_per_step() {
+        let (mut serial, theta) = build_stde(ParallelPolicy::Serial);
+        let (mut fixed, theta2) = build_stde(ParallelPolicy::Fixed(4));
+        assert_eq!(theta, theta2);
+        let (l1, g1) = serial.value_grad(&theta);
+        let (l2, g2) = fixed.value_grad(&theta);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(g1, g2);
+        assert_eq!(serial.stde_step(), 1);
+        // Forward-only probes reuse the step-1 draw...
+        assert_eq!(serial.value(&theta).to_bits(), l1.to_bits());
+        assert_eq!(serial.stde_step(), 1);
+        // ...and the next gradient step draws afresh.
+        let (l3, _) = serial.value_grad(&theta);
+        assert_eq!(serial.stde_step(), 2);
+        assert!(l3.is_finite());
+    }
+
+    /// `value_batch` must return exactly what per-trial `value` calls
+    /// would — bitwise, for every policy — so the batched line search
+    /// cannot perturb trajectories.
+    #[test]
+    fn value_batch_matches_sequential_values_bitwise() {
+        let mut rng_m = Prng::seeded(2);
+        let mlp = Mlp::uniform(2, 6, 2, 1, &mut rng_m);
+        let mut rng = Prng::seeded(4);
+        let mut obj = MultiObjective::build(
+            tiny_spec(PdeProblem::Poisson2d),
+            &mlp,
+            DerivEngine::Ntp,
+            ParallelPolicy::Fixed(3),
+            4,
+            &mut rng,
+        );
+        let theta = obj.theta_init(&mlp);
+        let trials: Vec<Tensor> = (0..5)
+            .map(|k| {
+                let mut t = theta.clone();
+                for v in t.data_mut() {
+                    *v *= 1.0 + 0.01 * k as f64;
+                }
+                t
+            })
+            .collect();
+        let want: Vec<u64> = trials.iter().map(|t| obj.value(t).to_bits()).collect();
+        let got: Vec<u64> = obj
+            .value_batch(&trials)
+            .into_iter()
+            .map(f64::to_bits)
+            .collect();
+        assert_eq!(want, got);
+        assert_eq!(obj.n_forward, 10);
     }
 }

@@ -36,8 +36,8 @@
 
 use super::loss::{BurgersLossSpec, DerivEngine};
 use super::terms::{
-    build_burgers_shard, chunk_rows, eval_shards_grad, eval_shards_value, BcData, BurgersSlices,
-    LossScaling, Shard, ThetaLayout,
+    build_burgers_shard, chunk_rows, eval_shards_grad, eval_shards_value,
+    eval_shards_value_batch, BcData, BurgersSlices, LossScaling, Shard, ThetaLayout,
 };
 use crate::nn::Mlp;
 use crate::ntp::{NtpEngine, ParallelPolicy};
@@ -231,6 +231,12 @@ impl Objective for ParallelObjective {
     fn value(&mut self, theta: &Tensor) -> f64 {
         self.n_forward += 1;
         eval_shards_value(&self.shards, &self.layout.inputs_of(theta), self.policy)
+    }
+
+    fn value_batch(&mut self, thetas: &[Tensor]) -> Vec<f64> {
+        self.n_forward += thetas.len() as u64;
+        let inputs: Vec<Vec<Tensor>> = thetas.iter().map(|t| self.layout.inputs_of(t)).collect();
+        eval_shards_value_batch(&self.shards, &inputs, self.policy)
     }
 
     fn dim(&self) -> usize {

@@ -90,6 +90,33 @@ pub(crate) fn eval_shards_value(
     par::tree_reduce(losses, |a, b| a + b).expect("objective has at least one shard")
 }
 
+/// Batched forward-only evaluation: several trial parameter vectors
+/// (`inputs[t]` is trial `t`'s per-slot input list) fanned through one
+/// `trials × shards` task grid, each trial's shard losses combined with
+/// the **same** pairwise tree as [`eval_shards_value`] — so every entry
+/// is bitwise equal to a standalone `eval_shards_value` call on that
+/// trial, for every policy. This is the line-search fast path: α-trials
+/// are data-independent, so they pipeline through the shard pool
+/// together instead of serializing one pool sweep per trial.
+pub(crate) fn eval_shards_value_batch(
+    shards: &[Shard],
+    inputs: &[Vec<Tensor>],
+    policy: ParallelPolicy,
+) -> Vec<f64> {
+    let tasks = shards.len() * inputs.len();
+    let workers = par::workers_for_tasks(policy, tasks);
+    let losses = par::run_indexed(tasks, workers, |t| {
+        shards[t % shards.len()].eval_value(&inputs[t / shards.len()])
+    });
+    losses
+        .chunks(shards.len())
+        .map(|trial| {
+            par::tree_reduce(trial.to_vec(), |a, b| a + b)
+                .expect("objective has at least one shard")
+        })
+        .collect()
+}
+
 /// Slice a `[B, d]` collocation tensor into `ceil(B/chunk)` row chunks
 /// (any column count — 1-D Burgers clouds and d-D PDE clouds alike).
 pub(crate) fn chunk_rows(x: &Tensor, chunk: usize) -> Vec<Tensor> {

@@ -16,7 +16,7 @@ use super::loss::{BurgersLossSpec, DerivEngine, PinnObjective};
 use super::multi::{MultiObjective, MultiPinnSpec};
 use super::parallel::ParallelObjective;
 use crate::nn::Mlp;
-use crate::ntp::{ActivationKind, ParallelPolicy};
+use crate::ntp::{ActivationKind, EstimatorMode, ParallelPolicy};
 use crate::opt::{Adam, Lbfgs, LbfgsStatus, Objective};
 use crate::pde::PdeProblem;
 use crate::tensor::Tensor;
@@ -262,17 +262,33 @@ pub struct PdeTrainResult {
     pub n_backward: u64,
     /// The derivative engine that computed the mixed partials.
     pub engine: DerivEngine,
+    /// The estimator the objective evaluated its residual with.
+    pub estimator: EstimatorMode,
     /// The library problem trained against.
     pub problem: PdeProblem,
 }
 
 impl PdeTrainResult {
-    /// RMS PDE residual `|L[u] − f|` over a fresh interior cloud,
-    /// evaluated through the fused directional-jet engine.
+    /// RMS PDE residual `|L[u] − f|` over a fresh interior cloud. Exact
+    /// runs go through the fused directional-jet engine; STDE runs use
+    /// the sampled estimator at counter step 0 (the exact plan can be
+    /// combinatorially intractable at the run's dimension).
     pub fn residual_rms(&self, n_pts: usize, seed: u64) -> f64 {
         let mut rng = Prng::seeded(seed);
         let x = self.problem.sample_interior(n_pts, &mut rng);
-        let r = super::multi::residual_values(self.problem, &self.mlp, &x, ParallelPolicy::Serial);
+        let r = match self.estimator.stde_config() {
+            None => {
+                super::multi::residual_values(self.problem, &self.mlp, &x, ParallelPolicy::Serial)
+            }
+            Some(cfg) => super::multi::residual_values_estimated(
+                self.problem,
+                &self.mlp,
+                &x,
+                cfg,
+                0,
+                ParallelPolicy::Serial,
+            ),
+        };
         (r.data().iter().map(|v| v * v).sum::<f64>() / n_pts as f64).sqrt()
     }
 
@@ -299,6 +315,21 @@ impl PdeTrainResult {
 /// (`ntangent train --pde <name>`). Bitwise reproducible for every
 /// `cfg.policy`, like every sharded trainer in this module.
 pub fn train_pde(spec: MultiPinnSpec, cfg: &TrainConfig, engine: DerivEngine) -> PdeTrainResult {
+    train_pde_with_estimator(spec, cfg, engine, EstimatorMode::Exact)
+}
+
+/// [`train_pde`] with an explicit [`EstimatorMode`] — the entry point of
+/// the high-dimensional STDE runs (`ntangent train --pde heat100d
+/// --estimator stde`). Stochastic runs resample the operator term set
+/// every gradient step from the counter-based stream; trajectories stay
+/// bitwise identical for every `cfg.policy`
+/// (`rust/tests/stde_determinism.rs`).
+pub fn train_pde_with_estimator(
+    spec: MultiPinnSpec,
+    cfg: &TrainConfig,
+    engine: DerivEngine,
+    estimator: EstimatorMode,
+) -> PdeTrainResult {
     let problem = spec.problem;
     let mut rng = Prng::seeded(cfg.seed);
     let mlp = Mlp::uniform_with(
@@ -309,7 +340,9 @@ pub fn train_pde(spec: MultiPinnSpec, cfg: &TrainConfig, engine: DerivEngine) ->
         cfg.activation,
         &mut rng,
     );
-    let obj = MultiObjective::build(spec, &mlp, engine, cfg.policy, cfg.chunk, &mut rng);
+    let obj = MultiObjective::build_with_estimator(
+        spec, &mlp, engine, cfg.policy, cfg.chunk, &mut rng, estimator,
+    );
     let mut run = schedule(obj, &mlp, cfg);
     let final_loss = if run.last_loss.is_finite() {
         run.last_loss
@@ -325,6 +358,7 @@ pub fn train_pde(spec: MultiPinnSpec, cfg: &TrainConfig, engine: DerivEngine) ->
         n_forward,
         n_backward,
         engine,
+        estimator,
         problem,
     }
 }

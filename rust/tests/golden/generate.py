@@ -11,6 +11,9 @@ independent of the Rust engine (Taylor coefficients, not Faa di Bruno).
 networks with every mixed partial `∂^α u`, |α| <= 4, at pinned points —
 computed with `mpmath.diff` partial orders, an oracle independent of both
 the directional-jet assembly under test and the nested-tape baseline.
+Also carries the OP4 block: the 4-D Laplacian (one pure-axis operator)
+on a fixed 4-D net, the golden target for the STDE factor-wise plans
+(`rust/tests/stde_statistics.rs`).
 
 The Rust tests rebuild the same networks via `params::unflatten_into`
 and assert the engines against these values to 1e-10.
@@ -38,6 +41,16 @@ MULTI_NETS = [
     ("MULTI2", [2, 5, 5, 1], SEED + 1, [[-0.8, 0.3], [0.2, -0.5], [0.6, 0.9], [-0.1, -1.1]]),
     ("MULTI3", [3, 4, 4, 1], SEED + 2, [[0.4, -0.6, 0.2], [-0.9, 0.1, 0.7], [0.3, 0.8, -0.4]]),
 ]
+
+# Pure-axis operator fixture: the 4-D Laplacian L[u] = sum_i d2u/dx_i^2 on
+# a fixed 4-D net — the golden target the STDE factor-wise mini plans must
+# reproduce exactly (rust/tests/stde_statistics.rs).
+OP4 = (
+    "OP4",
+    [4, 4, 4, 1],
+    SEED + 3,
+    [[0.3, -0.7, 0.1, 0.5], [-0.2, 0.4, -0.9, 0.6], [0.8, 0.2, 0.5, -0.3]],
+)
 
 
 def make_weights(sizes=SIZES, seed=SEED):
@@ -177,12 +190,57 @@ def emit_multi(out, tag, sizes, seed, points):
     return len(values), (min(mags), max(mags))
 
 
+def emit_op4(out):
+    """The 4-D pure-axis operator block: net + exact Laplacian values."""
+    tag, sizes, seed, points = OP4
+    dim = sizes[0]
+    layers = make_weights(sizes, seed)
+    theta = flatten(layers)
+    out.append(f"pub const {tag}_SIZES: [usize; {len(sizes)}] = {sizes!r};".replace("'", ""))
+    out.append("")
+    out.append("/// Flat parameters in `params::flatten` order (W0, b0, W1, b1, ...).")
+    out.append(f"pub const {tag}_THETA: [f64; {len(theta)}] = [")
+    out.append(fmt(theta))
+    out.append("];")
+    out.append("")
+    out.append("/// Pinned evaluation points (one coordinate row each).")
+    out.append(f"pub const {tag}_X: [[f64; {dim}]; {len(points)}] = [")
+    for p in points:
+        out.append(f"    {list(p)!r},".replace("'", ""))
+    out.append("];")
+    out.append("")
+    out.append("/// `LAPLACIAN[kind][point]`: the 4-D pure-axis operator")
+    out.append("/// Σᵢ ∂²u/∂xᵢ², kinds in `ActivationKind::ALL` order (summed in")
+    out.append("/// 60-digit precision, rounded once).")
+    out.append(f"pub const {tag}_LAPLACIAN: [[f64; {len(points)}]; {len(KINDS)}] = [")
+    values = []
+    for kind in KINDS:
+        f = lambda *xs: forward_nd(layers, kind, xs)
+        row = []
+        for p in points:
+            acc = mpf(0)
+            for i in range(dim):
+                alpha = tuple(2 if j == i else 0 for j in range(dim))
+                acc += diff(f, tuple(p), alpha)
+            row.append(float(acc))
+        values.extend(row)
+        out.append(f"    // {kind}")
+        out.append("    [")
+        out.append(fmt(row, per_line=2, indent="        "))
+        out.append("    ],")
+    out.append("];")
+    out.append("")
+    mags = [abs(v) for v in values if v != 0.0]
+    return len(values), (min(mags), max(mags))
+
+
 def write_multi_fixture():
     out = []
     out.append("// Generated by rust/tests/golden/generate.py — do not edit by hand.")
     out.append("// Reference values: mpmath (60 digits) partial derivatives of fixed")
     out.append("// 2-D and 3-D networks — an oracle independent of both the")
-    out.append("// directional-jet assembly under test and the nested-tape baseline.")
+    out.append("// directional-jet assembly under test and the nested-tape baseline —")
+    out.append("// plus the OP4 4-D pure-axis operator block for the STDE plans.")
     out.append("#![allow(clippy::excessive_precision)]")
     out.append("#![allow(clippy::approx_constant)]")
     out.append("")
@@ -191,6 +249,9 @@ def write_multi_fixture():
         count, (lo, hi) = emit_multi(out, tag, sizes, seed, points)
         total += count
         print(f"  {tag}: {count} expected values, |expected| range {lo:.3e} .. {hi:.3e}")
+    count, (lo, hi) = emit_op4(out)
+    total += count
+    print(f"  OP4: {count} expected values, |expected| range {lo:.3e} .. {hi:.3e}")
     dest = os.path.join(
         os.path.dirname(os.path.abspath(__file__)), "fixture_multi.rs"
     )

@@ -1,0 +1,183 @@
+//! Determinism harness for STDE mode: stochastic estimation must stay
+//! **bitwise reproducible** — the counter-based stream is a pure
+//! function of `(seed, step, shard, index)`, so operator estimates and
+//! whole training trajectories are identical for 1/2/4/8 worker
+//! threads, and the stream itself is pinned by committed golden draws
+//! (changing the mixing chain is a breaking change to every seeded
+//! STDE run).
+
+use ntangent::nn::{params, Mlp};
+use ntangent::ntp::stde::sample_terms;
+use ntangent::ntp::{CounterRng, ParallelPolicy, StdeConfig, StdeEngine};
+use ntangent::pde::PdeProblem;
+use ntangent::pinn::{
+    train_pde_with_estimator, DerivEngine, EstimatorMode, MultiPinnSpec, TrainConfig,
+};
+use ntangent::util::prng::Prng;
+
+// ------------------------------------------------------- golden stream
+
+/// The committed golden draws: raw 64-bit outputs of the splitmix64
+/// avalanche chain at hand-picked counter coordinates, cross-checked
+/// against an independent implementation of the finalizer. Any change
+/// to the chain shows up here before it silently reshuffles every
+/// seeded run.
+#[test]
+fn counter_rng_stream_matches_committed_golden_draws() {
+    let golden: &[((u64, u64, u64, u64), u64)] = &[
+        ((0, 0, 0, 0), 0x552D_806A_62B9_7855),
+        ((0, 0, 0, 1), 0x73A3_EE95_AACE_0D70),
+        ((0, 1, 0, 0), 0x1D6E_5EEB_F56E_EE60),
+        ((0, 0, 1, 0), 0x6AF8_A94F_C9C4_25F5),
+        ((1, 0, 0, 0), 0x98F0_EF56_1B7B_1390),
+        ((42, 7, 3, 9), 0xFB73_9183_2180_F4E4),
+        ((0xDEAD_BEEF, 1000, 12, 34), 0x0ABF_74EB_D81A_DFF0),
+    ];
+    for &((seed, step, shard, index), want) in golden {
+        let rng = CounterRng::new(seed);
+        assert_eq!(
+            rng.draw(step, shard, index),
+            want,
+            "draw({seed}, {step}, {shard}, {index})"
+        );
+        // uniform() is a fixed projection of the same draw.
+        let u = rng.uniform(step, shard, index);
+        let expect = (want >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        assert_eq!(u.to_bits(), expect.to_bits());
+    }
+
+    // Zone-rejected integer draws at the same coordinates.
+    let rng = CounterRng::new(5);
+    let got = [
+        rng.below(0, 0, 0, 7),
+        rng.below(0, 0, 1, 7),
+        rng.below(1, 0, 0, 7),
+        rng.below(1, 2, 3, 7),
+    ];
+    assert_eq!(got, [3, 3, 0, 2]);
+
+    // Term sampling over a 10-term operator: the draws poisson10d
+    // training at seed 11, K=2 actually consumes at steps 1..=3.
+    let cfg = StdeConfig { seed: 11, samples: 2, antithetic: false };
+    assert_eq!(sample_terms(&cfg, 10, 1, 0), vec![7, 9]);
+    assert_eq!(sample_terms(&cfg, 10, 2, 0), vec![4, 6]);
+    assert_eq!(sample_terms(&cfg, 10, 3, 0), vec![1, 2]);
+    // Different shards draw different coordinates of the same stream.
+    assert_ne!(sample_terms(&cfg, 10, 1, 0), sample_terms(&cfg, 10, 1, 1));
+}
+
+// -------------------------------------------------- estimate invariance
+
+/// One STDE estimate is bitwise identical for every worker policy (the
+/// policy only schedules the direction-stacked fused batch) and
+/// bitwise reproducible across engine rebuilds.
+#[test]
+fn stde_estimates_are_bitwise_identical_across_thread_counts() {
+    let problem = PdeProblem::Poisson10d;
+    let mut rng = Prng::seeded(2);
+    let mlp = Mlp::uniform(10, 8, 2, 1, &mut rng);
+    let x = problem.sample_interior(12, &mut rng);
+    let cfg = StdeConfig { seed: 77, samples: 4, antithetic: false };
+
+    let want: Vec<Vec<u64>> = {
+        let est = StdeEngine::new(problem.operator(), cfg);
+        (0..4u64)
+            .map(|s| est.estimate(&mlp, &x, s).values.data().iter().map(|v| v.to_bits()).collect())
+            .collect()
+    };
+    // Consecutive steps resample — the stream moves.
+    assert_ne!(want[0], want[1]);
+
+    for threads in [1usize, 2, 4, 8] {
+        let est = StdeEngine::with_policy(problem.operator(), cfg, ParallelPolicy::Fixed(threads));
+        for (s, want_step) in want.iter().enumerate() {
+            let got: Vec<u64> = est
+                .estimate(&mlp, &x, s as u64)
+                .values
+                .data()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            assert_eq!(want_step, &got, "t={threads} diverged at step {s}");
+        }
+    }
+}
+
+// ------------------------------------------------- trajectory invariance
+
+fn train(policy: ParallelPolicy, chunk: usize, stde_seed: u64) -> ntangent::pinn::PdeTrainResult {
+    let cfg = TrainConfig {
+        width: 6,
+        depth: 2,
+        adam_epochs: 6,
+        lbfgs_epochs: 4,
+        adam_lr: 2e-3,
+        seed: 3,
+        log_every: 2,
+        policy,
+        chunk,
+        ..TrainConfig::default()
+    };
+    let mut spec = MultiPinnSpec::for_problem(PdeProblem::Poisson10d);
+    spec.n_interior = 24;
+    spec.n_boundary = 12;
+    train_pde_with_estimator(
+        spec,
+        &cfg,
+        DerivEngine::Ntp,
+        EstimatorMode::Stde { seed: stde_seed, samples: 2, antithetic: false },
+    )
+}
+
+/// A full stochastic training run (Adam + L-BFGS with its batched line
+/// search, per-step operator resampling) is bitwise identical for
+/// 1/2/4/8 threads, across shard layouts including ragged and
+/// single-shard chunkings. Per-shard draws are keyed by the *shard
+/// index*, which is layout state, not scheduling state.
+#[test]
+fn stde_training_trajectories_are_bitwise_identical_across_thread_counts() {
+    for &chunk in &[4usize, 9, 64] {
+        let want = train(ParallelPolicy::Serial, chunk, 11);
+        assert!(want.final_loss.is_finite());
+        for threads in [1usize, 2, 4, 8] {
+            let got = train(ParallelPolicy::Fixed(threads), chunk, 11);
+            assert_eq!(
+                want.final_loss.to_bits(),
+                got.final_loss.to_bits(),
+                "t={threads} chunk={chunk}: final loss"
+            );
+            assert_eq!(
+                params::flatten(&want.mlp),
+                params::flatten(&got.mlp),
+                "t={threads} chunk={chunk}: trained weights"
+            );
+            assert_eq!(want.logs.len(), got.logs.len());
+            for (la, lb) in want.logs.iter().zip(&got.logs) {
+                assert_eq!(
+                    la.loss.to_bits(),
+                    lb.loss.to_bits(),
+                    "t={threads} chunk={chunk}: epoch {}",
+                    la.epoch
+                );
+            }
+            assert_eq!(want.n_forward, got.n_forward);
+            assert_eq!(want.n_backward, got.n_backward);
+        }
+    }
+}
+
+/// The stochastic stream is *engaged*: a different STDE seed sees
+/// different draws and lands on a different trajectory (while each seed
+/// remains reproducible on its own).
+#[test]
+fn stde_seed_changes_the_trajectory_reproducibly() {
+    let a = train(ParallelPolicy::Fixed(2), 8, 11);
+    let b = train(ParallelPolicy::Fixed(2), 8, 12);
+    assert_ne!(
+        params::flatten(&a.mlp),
+        params::flatten(&b.mlp),
+        "different STDE seeds must sample different term sequences"
+    );
+    let a2 = train(ParallelPolicy::Fixed(4), 8, 11);
+    assert_eq!(params::flatten(&a.mlp), params::flatten(&a2.mlp));
+}

@@ -1,0 +1,292 @@
+//! Statistical lockdown of the STDE estimator (`ntp::stde`): every
+//! probabilistic claim the module's docs make is asserted here against
+//! the exact multivariate oracle ([`MultiJetEngine`]) at low dimension,
+//! where the full plan is cheap enough to serve as ground truth.
+//!
+//! The estimator is a pure function of `(seed, step)`, so each of these
+//! tests is bitwise reproducible — the statistical bounds are generous
+//! (6σ CLT envelopes, 2x variance brackets), but a pass is a pass
+//! forever, not a coin flip.
+
+#[rustfmt::skip]
+#[path = "golden/fixture_multi.rs"]
+#[allow(dead_code)]
+mod fixture_multi;
+
+use fixture_multi::{OP4_LAPLACIAN, OP4_SIZES, OP4_THETA, OP4_X};
+use ntangent::nn::{params, Mlp};
+use ntangent::ntp::stde::{sample_terms, sampled_operator};
+use ntangent::ntp::{ActivationKind, MultiJetEngine, StdeConfig, StdeEngine};
+use ntangent::pde::DiffOperator;
+use ntangent::tensor::Tensor;
+use ntangent::util::prng::Prng;
+
+/// A frozen net and cloud for `dim` inputs.
+fn net_and_cloud(dim: usize, rows: usize, seed: u64) -> (Mlp, Tensor) {
+    let mut rng = Prng::seeded(seed);
+    let mlp = Mlp::uniform(dim, 6, 2, 1, &mut rng);
+    let x = Tensor::rand_uniform(&[rows, dim], -0.9, 0.9, &mut rng);
+    (mlp, x)
+}
+
+/// Batch-mean of the exact `L[u]` over `x` — the scalar the estimates
+/// are compared against.
+fn exact_mean(op: &DiffOperator, mlp: &Mlp, x: &Tensor) -> f64 {
+    let engine = MultiJetEngine::new(op.dim(), op.max_order());
+    let vals = op.apply(&engine.jet(mlp, x));
+    vals.data().iter().sum::<f64>() / vals.data().len() as f64
+}
+
+/// Batch-mean STDE estimates at steps `0..n_steps`.
+fn estimate_means(
+    op: &DiffOperator,
+    mlp: &Mlp,
+    x: &Tensor,
+    cfg: StdeConfig,
+    n_steps: usize,
+) -> Vec<f64> {
+    let est = StdeEngine::new(op.clone(), cfg);
+    (0..n_steps)
+        .map(|s| {
+            let e = est.estimate(mlp, x, s as u64);
+            e.values.data().iter().sum::<f64>() / e.values.data().len() as f64
+        })
+        .collect()
+}
+
+fn mean(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>() / v.len() as f64
+}
+
+fn variance(v: &[f64]) -> f64 {
+    let m = mean(v);
+    v.iter().map(|s| (s - m) * (s - m)).sum::<f64>() / (v.len() - 1) as f64
+}
+
+// ------------------------------------------------------- unbiasedness
+
+/// E[estimate] = exact operator value: the empirical mean over many
+/// counter steps lands inside a 6σ CLT envelope around the exact value,
+/// for both a d=2 operator with a mixed term and a d=3 one.
+#[test]
+fn stde_is_unbiased_against_the_exact_oracle() {
+    let cases: Vec<(usize, DiffOperator)> = vec![
+        (
+            2,
+            DiffOperator::new(2)
+                .with_term(1.0, vec![2, 0])
+                .with_term(1.0, vec![0, 2])
+                .with_term(2.0, vec![1, 1]),
+        ),
+        (
+            3,
+            DiffOperator::new(3)
+                .with_term(1.0, vec![2, 0, 0])
+                .with_term(-3.0, vec![0, 2, 0])
+                .with_term(0.5, vec![0, 1, 1])
+                .with_term(2.0, vec![0, 0, 1]),
+        ),
+    ];
+    for (dim, op) in cases {
+        let (mlp, x) = net_and_cloud(dim, 8, 17 + dim as u64);
+        let truth = exact_mean(&op, &mlp, &x);
+        let n = 2000;
+        let cfg = StdeConfig { seed: 101, samples: 1, antithetic: false };
+        let means = estimate_means(&op, &mlp, &x, cfg, n);
+        let m = mean(&means);
+        let stderr = (variance(&means) / n as f64).sqrt();
+        assert!(
+            (m - truth).abs() <= 6.0 * stderr + 1e-12,
+            "d={dim}: empirical mean {m} vs exact {truth} exceeds 6 standard errors ({stderr})"
+        );
+    }
+}
+
+// ----------------------------------------------------- variance decay
+
+/// Var[estimate] ~ 1/K: independent-draw term subsampling halves the
+/// variance when K doubles. `K·Var_K` stays inside a 2x bracket of the
+/// K=1 variance across K = 1, 2, 4, 8.
+#[test]
+fn stde_variance_decays_like_one_over_k() {
+    let op = DiffOperator::new(2)
+        .with_term(1.0, vec![2, 0])
+        .with_term(4.0, vec![0, 2])
+        .with_term(-2.0, vec![1, 1]);
+    let (mlp, x) = net_and_cloud(2, 4, 23);
+    let n = 1500;
+    let var_of = |k: usize| {
+        let cfg = StdeConfig { seed: 7, samples: k, antithetic: false };
+        variance(&estimate_means(&op, &mlp, &x, cfg, n))
+    };
+    let v1 = var_of(1);
+    assert!(v1 > 0.0, "a 3-term operator subsampled at K=1 must fluctuate");
+    for k in [2usize, 4, 8] {
+        let scaled = k as f64 * var_of(k);
+        let ratio = v1 / scaled;
+        assert!(
+            (0.5..=2.0).contains(&ratio),
+            "K={k}: K*Var_K = {scaled} vs Var_1 = {v1} breaks the 1/K law (ratio {ratio})"
+        );
+    }
+}
+
+// -------------------------------------------------------- antithetics
+
+/// Antithetic index reflection strictly cuts variance on an asymmetric
+/// operator. The T=2, K=2 corner is exact by construction (each pair
+/// covers both terms, so every step reproduces the full operator);
+/// plain K=2 sampling keeps a strictly positive variance.
+#[test]
+fn antithetic_pairing_strictly_reduces_variance() {
+    let op = DiffOperator::new(2)
+        .with_term(1.0, vec![2, 0])
+        .with_term(9.0, vec![0, 2]);
+    let (mlp, x) = net_and_cloud(2, 4, 31);
+    let n = 200;
+    let plain = variance(&estimate_means(
+        &op,
+        &mlp,
+        &x,
+        StdeConfig { seed: 13, samples: 2, antithetic: false },
+        n,
+    ));
+    let anti = variance(&estimate_means(
+        &op,
+        &mlp,
+        &x,
+        StdeConfig { seed: 13, samples: 2, antithetic: true },
+        n,
+    ));
+    assert!(plain > 0.0, "plain K=2 on an asymmetric 2-term operator must fluctuate");
+    assert!(
+        anti < plain,
+        "antithetic variance {anti} not below plain {plain}"
+    );
+    // With T=2 every antithetic pair is {t, 1-t}: the reweighted
+    // operator equals the full operator and the estimator is exact.
+    assert!(anti <= 1e-20, "T=2, K=2 antithetic pairs must be exact (variance {anti})");
+
+    // A 3-term asymmetric operator exercises the non-degenerate case:
+    // reflection still anticorrelates the draws, variance still drops.
+    let op3 = DiffOperator::new(2)
+        .with_term(1.0, vec![2, 0])
+        .with_term(5.0, vec![1, 1])
+        .with_term(25.0, vec![0, 2]);
+    let plain3 = variance(&estimate_means(
+        &op3,
+        &mlp,
+        &x,
+        StdeConfig { seed: 19, samples: 2, antithetic: false },
+        n,
+    ));
+    let anti3 = variance(&estimate_means(
+        &op3,
+        &mlp,
+        &x,
+        StdeConfig { seed: 19, samples: 2, antithetic: true },
+        n,
+    ));
+    assert!(
+        anti3 < plain3,
+        "3-term antithetic variance {anti3} not below plain {plain3}"
+    );
+}
+
+// ------------------------------------------------- per-sample corners
+
+/// Per-sample exactness: only term *selection* is random — each
+/// sampled term's factors recombine exactly. A single-term operator is
+/// therefore reproduced to 1e-10 by every draw, including a nonlinear
+/// product term, and a Horvitz–Thompson reweighting that happens to
+/// cover every term once equals the exact operator.
+#[test]
+fn every_sample_is_exact_on_its_terms() {
+    // One linear mixed term: every K=1 draw must be exact.
+    let op = DiffOperator::new(2).with_term(3.0, vec![1, 1]);
+    let (mlp, x) = net_and_cloud(2, 6, 41);
+    let engine = MultiJetEngine::new(2, 2);
+    let exact = op.apply(&engine.jet(&mlp, &x));
+    let est = StdeEngine::new(op.clone(), StdeConfig { seed: 3, samples: 1, antithetic: false });
+    for step in 0..5u64 {
+        let e = est.estimate(&mlp, &x, step);
+        for (i, (&a, &b)) in e.values.data().iter().zip(exact.data()).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-10 * (1.0 + b.abs()),
+                "step {step}, row {i}: estimate {a} vs exact {b}"
+            );
+        }
+    }
+
+    // A nonlinear product term (u_x · u_y): factor products are exact too.
+    let op = DiffOperator::new(2).with_product(2.0, vec![vec![1, 0], vec![0, 1]]);
+    let exact = op.apply(&engine.jet(&mlp, &x));
+    let est = StdeEngine::new(op.clone(), StdeConfig { seed: 5, samples: 2, antithetic: false });
+    let e = est.estimate(&mlp, &x, 0);
+    for (i, (&a, &b)) in e.values.data().iter().zip(exact.data()).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-10 * (1.0 + b.abs()),
+            "row {i}: nonlinear estimate {a} vs exact {b}"
+        );
+    }
+
+    // A draw covering every term once reweights back to the exact
+    // operator (mult = 1, scale = T/K = 1).
+    let op = DiffOperator::new(2)
+        .with_term(1.0, vec![2, 0])
+        .with_term(-2.0, vec![0, 2]);
+    let sop = sampled_operator(&op, &[0, 1]);
+    assert_eq!(sop, op);
+
+    // sample_terms itself: K draws, all in range, antithetic pairs
+    // reflected.
+    let cfg = StdeConfig { seed: 9, samples: 6, antithetic: true };
+    let draws = sample_terms(&cfg, 5, 0, 0);
+    assert_eq!(draws.len(), 6);
+    for pair in draws.chunks(2) {
+        assert!(pair[0] < 5 && pair[1] < 5);
+        assert_eq!(pair[1], 4 - pair[0], "antithetic partner must be index-reflected");
+    }
+}
+
+/// The committed mpmath golden (`fixture_multi.rs`, OP4 block): the 4-D
+/// Laplacian on the pinned net and points, reproduced to 1e-10 by both
+/// the exact directional oracle and a full-coverage STDE draw pushed
+/// through the factor-wise sparse plan — for every registered
+/// activation tower.
+#[test]
+fn four_d_pure_axis_operator_matches_the_mpmath_golden() {
+    let dim = OP4_SIZES[0];
+    let op = DiffOperator::laplacian(dim);
+    let x = Tensor::from_vec(
+        OP4_X.iter().flat_map(|p| p.iter().copied()).collect(),
+        &[OP4_X.len(), dim],
+    );
+    let theta = Tensor::from_vec(OP4_THETA.to_vec(), &[OP4_THETA.len()]);
+    let oracle = MultiJetEngine::new(dim, op.max_order());
+    for kind in ActivationKind::ALL {
+        let mut mlp = Mlp::with_activation(&OP4_SIZES, kind, &mut Prng::seeded(0));
+        params::unflatten_into(&mut mlp, &theta);
+        let exact = op.apply(&oracle.jet(&mlp, &x));
+        // A draw covering each of the 4 terms once reweights to the full
+        // operator; apply_sampled routes it through the sparse pool.
+        let est =
+            StdeEngine::new(op.clone(), StdeConfig { seed: 1, samples: 4, antithetic: false });
+        let stde = est.apply_sampled(&mlp, &x, &sampled_operator(&op, &[0, 1, 2, 3]));
+        assert_eq!(stde.n_directions, 4, "one direction per pure axis");
+        for (p, &want) in OP4_LAPLACIAN[kind.index()].iter().enumerate() {
+            let tol = 1e-10 * (1.0 + want.abs());
+            let (e, s) = (exact.data()[p], stde.values.data()[p]);
+            assert!(
+                (e - want).abs() <= tol,
+                "{}: exact {e:.17e} vs golden {want:.17e} at point {p}",
+                kind.name()
+            );
+            assert!(
+                (s - want).abs() <= tol,
+                "{}: stde {s:.17e} vs golden {want:.17e} at point {p}",
+                kind.name()
+            );
+        }
+    }
+}

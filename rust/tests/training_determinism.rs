@@ -197,6 +197,28 @@ fn trainer_end_to_end_is_bitwise_identical() {
     assert_eq!(a.n_backward, b.n_backward);
 }
 
+/// The batched line-search path: `value_batch` fans the α-trials of one
+/// wave through the shard pool as trials×shards tasks, but each trial's
+/// per-shard losses still reduce over the same pairwise tree as a lone
+/// `value` call — so batching is bitwise invisible, for every policy.
+#[test]
+fn value_batch_is_bitwise_identical_to_sequential_values() {
+    let (mut serial, theta) = build(ParallelPolicy::Serial, 16, 50, 10, DerivEngine::Ntp);
+    let trials: Vec<Tensor> = (0..5).map(|i| theta.scale(1.0 + 0.01 * i as f64)).collect();
+    let want: Vec<u64> = trials.iter().map(|t| serial.value(t).to_bits()).collect();
+    for policy in [
+        ParallelPolicy::Serial,
+        ParallelPolicy::Fixed(2),
+        ParallelPolicy::Fixed(4),
+        ParallelPolicy::Fixed(8),
+        ParallelPolicy::Auto,
+    ] {
+        let (mut obj, _) = build(policy, 16, 50, 10, DerivEngine::Ntp);
+        let got: Vec<u64> = obj.value_batch(&trials).iter().map(|v| v.to_bits()).collect();
+        assert_eq!(want, got, "{policy:?}: batched losses");
+    }
+}
+
 /// Concurrent use of one objective's shards from the outside (the shard
 /// tapes are `Sync`): interleaving calls from a wrapper thread must not
 /// perturb results.
