@@ -5,12 +5,14 @@
 //! the learned `u^(j)` (j = 0..=k) against the truth plus the loss and λ
 //! histories. We emit one curves CSV and one history CSV per profile.
 
+use crate::nn::Mlp;
 use crate::ntp::ParallelPolicy;
 use crate::pinn::{
-    eval_channels, grid_points, train_burgers, BurgersLossSpec, DerivEngine, TrainConfig,
-    TrainResult,
+    eval_channels, grid_points, train_burgers, train_burgers_sharded, BurgersLossSpec,
+    DerivEngine, ParallelObjective, ResilienceConfig, TrainConfig, TrainResult,
 };
 use crate::util::csv::Table;
+use crate::util::prng::Prng;
 use std::path::Path;
 
 /// Configuration of one Burgers-profile reproduction run (figs 7-10).
@@ -63,7 +65,107 @@ pub fn run(cfg: &ProfilesConfig) -> ProfileRun {
         .unwrap_or_else(|| BurgersLossSpec::for_profile(cfg.k));
     let x_max = spec.x_max;
     let result = train_burgers(spec, &cfg.train, DerivEngine::Ntp);
+    export_run(cfg, x_max, result)
+}
 
+/// Shard-pool identity for [`run_sweep`]: two runs reuse one pool iff
+/// the loss spec, network geometry, init/collocation seed and shard
+/// chunking all match. Schedule knobs (epochs, learning rate, thread
+/// policy) are free to differ — they never touch the tapes.
+fn build_key(spec: &BurgersLossSpec, train: &TrainConfig) -> String {
+    format!(
+        "{spec:?}|{}x{}|{}|seed{}|chunk{}",
+        train.depth,
+        train.width,
+        train.activation.name(),
+        train.seed,
+        train.chunk
+    )
+}
+
+/// Train several profile configs as one sweep, reusing the shard pool
+/// (the [`ParallelObjective`]'s per-chunk compiled tapes) across
+/// consecutive runs with the same problem build instead of rebuilding
+/// it per run — the ROADMAP's carried sweep debt. Reuse is bitwise
+/// invisible: the pool is rebuilt whenever the build key changes, and a
+/// policy change is pure scheduling, so every run matches a fresh
+/// [`crate::pinn::train_burgers_parallel`] of the same config bit for
+/// bit.
+pub fn run_sweep(cfgs: &[ProfilesConfig], mut progress: impl FnMut(&str)) -> Vec<ProfileRun> {
+    let mut out = Vec::with_capacity(cfgs.len());
+    let mut pool: Option<(String, ParallelObjective, Mlp)> = None;
+    for cfg in cfgs {
+        let spec = cfg
+            .spec_overrides
+            .clone()
+            .unwrap_or_else(|| BurgersLossSpec::for_profile(cfg.k));
+        let x_max = spec.x_max;
+        let key = build_key(&spec, &cfg.train);
+        let (obj, mlp) = match pool.take() {
+            Some((have, obj, mlp)) if have == key => {
+                progress(&format!(
+                    "profile k={}: reusing the shard pool ({} tapes)",
+                    cfg.k,
+                    obj.n_shards()
+                ));
+                (obj, mlp)
+            }
+            _ => {
+                let mut rng = Prng::seeded(cfg.train.seed);
+                let mlp = Mlp::uniform_with(
+                    1,
+                    cfg.train.width,
+                    cfg.train.depth,
+                    1,
+                    cfg.train.activation,
+                    &mut rng,
+                );
+                let obj = ParallelObjective::build(
+                    spec,
+                    &mlp,
+                    DerivEngine::Ntp,
+                    cfg.train.policy,
+                    cfg.train.chunk,
+                    &mut rng,
+                );
+                progress(&format!(
+                    "profile k={}: built {} shard tapes",
+                    cfg.k,
+                    obj.n_shards()
+                ));
+                (obj, mlp)
+            }
+        };
+        let (result, obj) = train_burgers_sharded(
+            obj,
+            &mlp,
+            &cfg.train,
+            &ResilienceConfig::default(),
+            None,
+        );
+        pool = Some((key, obj, mlp));
+        out.push(export_run(cfg, x_max, result));
+    }
+    out
+}
+
+/// Save the sweep comparison table (`profiles_sweep.csv`): one row per
+/// run with its label (e.g. the thread count swept by `bench profiles`).
+pub fn save_sweep(runs: &[ProfileRun], labels: &[String], dir: &Path) -> std::io::Result<()> {
+    let mut t = Table::new(&["run", "lambda", "final_loss", "seconds"]);
+    for (r, label) in runs.iter().zip(labels) {
+        t.push(vec![
+            label.clone(),
+            format!("{:.8}", r.result.lambda),
+            format!("{:.6e}", r.result.final_loss),
+            format!("{:.3}", r.result.seconds),
+        ]);
+    }
+    t.save(&dir.join("profiles_sweep.csv"))
+}
+
+/// Evaluate the learned curves against the truth and package the run.
+fn export_run(cfg: &ProfilesConfig, x_max: f64, result: TrainResult) -> ProfileRun {
     let order_max = cfg.order_max.unwrap_or(cfg.k);
     let xs = grid_points(-x_max, x_max, cfg.n_plot);
     let learned = eval_channels(&result.mlp, &xs, order_max, cfg.parallel);
@@ -176,5 +278,62 @@ mod tests {
         assert!(dir.join("fig8_profile1_curves.csv").exists());
         assert!(dir.join("fig8_profile1_history.csv").exists());
         assert!(summarize(&pr).contains("RMS"));
+    }
+
+    /// The carried-debt fix: a sweep over schedule knobs reuses one
+    /// shard pool, and the reuse is bitwise invisible — every swept run
+    /// matches a fresh `train_burgers_parallel` of the same config.
+    #[test]
+    fn sweep_reuses_pool_and_stays_bitwise_identical() {
+        let mut spec = BurgersLossSpec::for_profile(1);
+        spec.n_res = 24;
+        spec.n_org = 8;
+        let base = TrainConfig {
+            width: 8,
+            depth: 2,
+            adam_epochs: 20,
+            lbfgs_epochs: 10,
+            adam_lr: 2e-3,
+            seed: 6,
+            log_every: 5,
+            chunk: 8,
+            ..TrainConfig::default()
+        };
+        let mk = |policy| ProfilesConfig {
+            k: 1,
+            train: TrainConfig { policy, ..base.clone() },
+            spec_overrides: Some(spec.clone()),
+            n_plot: 11,
+            order_max: Some(1),
+            parallel: ParallelPolicy::Serial,
+        };
+        let cfgs = [mk(ParallelPolicy::Serial), mk(ParallelPolicy::Fixed(2))];
+        let mut msgs: Vec<String> = Vec::new();
+        let runs = run_sweep(&cfgs, |m| msgs.push(m.to_string()));
+        assert_eq!(runs.len(), 2);
+        assert_eq!(
+            msgs.iter().filter(|m| m.contains("built")).count(),
+            1,
+            "second run must reuse the pool: {msgs:?}"
+        );
+        assert_eq!(msgs.iter().filter(|m| m.contains("reusing")).count(), 1);
+        // Thread-policy invariance holds across the reuse boundary.
+        assert_eq!(
+            runs[0].result.final_loss.to_bits(),
+            runs[1].result.final_loss.to_bits()
+        );
+        assert_eq!(runs[0].result.lambda.to_bits(), runs[1].result.lambda.to_bits());
+        // And each swept run matches a fresh sharded build bit for bit.
+        let fresh =
+            crate::pinn::train_burgers_parallel(spec.clone(), &cfgs[1].train, DerivEngine::Ntp);
+        assert_eq!(runs[1].result.final_loss.to_bits(), fresh.final_loss.to_bits());
+        assert_eq!(runs[1].result.lambda.to_bits(), fresh.lambda.to_bits());
+        assert!(runs[1].result.n_backward > 0, "per-run counters must be baselined");
+        assert_eq!(runs[1].result.n_backward, fresh.n_backward);
+
+        let dir = std::env::temp_dir().join("ntangent_test_profiles_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        save_sweep(&runs, &["serial".into(), "fixed2".into()], &dir).unwrap();
+        assert!(dir.join("profiles_sweep.csv").exists());
     }
 }

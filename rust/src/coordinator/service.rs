@@ -614,6 +614,7 @@ fn write_replies(stream: TcpStream, rx: Receiver<PendingReply>) {
 pub struct TcpClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    shed_retries: u64,
 }
 
 impl TcpClient {
@@ -624,6 +625,7 @@ impl TcpClient {
         Ok(TcpClient {
             reader: BufReader::new(stream),
             writer,
+            shed_retries: 0,
         })
     }
 
@@ -702,6 +704,42 @@ impl TcpClient {
     ) -> Result<Vec<Vec<f64>>> {
         self.submit_eval(points, activation)?;
         self.recv_channels()
+    }
+
+    /// [`TcpClient::eval_with`] honoring the shed contract
+    /// (`docs/PROTOCOL.md`): an `{"error":"overloaded","retry_ms":…}`
+    /// reply makes the client back off `retry_ms · attempt` milliseconds
+    /// — jitterless, so harnesses replay identical schedules — and
+    /// resubmit the identical request, up to `max_retries` times before
+    /// surfacing the shed as an error. Absorbed sheds are counted in
+    /// [`TcpClient::shed_retries`].
+    pub fn eval_with_retry(
+        &mut self,
+        points: &[f64],
+        activation: Option<ActivationKind>,
+        max_retries: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        let mut attempt = 0usize;
+        loop {
+            self.submit_eval(points, activation)?;
+            let line = self.recv_raw()?;
+            match protocol::parse_error(&line) {
+                Some((msg, Some(retry_ms))) if msg == "overloaded" && attempt < max_retries => {
+                    attempt += 1;
+                    self.shed_retries += 1;
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        retry_ms.saturating_mul(attempt as u64),
+                    ));
+                }
+                _ => return protocol::parse_channels(&line).map_err(|e| anyhow!(e)),
+            }
+        }
+    }
+
+    /// Cumulative count of shed replies this client has absorbed by
+    /// backing off and resubmitting ([`TcpClient::eval_with_retry`]).
+    pub fn shed_retries(&self) -> u64 {
+        self.shed_retries
     }
 
     /// Evaluate a differential operator at multi-dimensional points:

@@ -18,7 +18,8 @@ use ntangent::ntp::{hardy_ramanujan, partition_count, ActivationKind, NtpEngine,
 use ntangent::ntp::stde::exact_direction_count;
 use ntangent::pde::{resolve_operator, PdeProblem};
 use ntangent::pinn::{
-    BurgersLossSpec, DerivEngine, EstimatorMode, MultiPinnSpec, StdeConfig, TrainConfig,
+    BurgersLossSpec, DerivEngine, EstimatorMode, MultiPinnSpec, ResilienceConfig, RunHealth,
+    StdeConfig, TrainConfig,
 };
 use ntangent::runtime::{ArtifactManifest, Runtime};
 use ntangent::tensor::Tensor;
@@ -62,7 +63,7 @@ fn top_usage() -> String {
     "ntangent — n-TangentProp reproduction (quasilinear higher-order derivatives)\n\
      \nUSAGE: ntangent <COMMAND> [OPTIONS]\n\
      \nCOMMANDS:\n\
-     \x20 bench <target>   fig1..fig10|mem|par|kernels|train-par|operators|serve|all\n\
+     \x20 bench <target>   fig1..fig10|mem|par|kernels|train-par|profiles|operators|serve|all\n\
      \x20 train            train a PINN (Burgers profile, or --pde heat2d|poisson2d|...)\n\
      \x20 eval             evaluate a checkpoint at points (--operator for PDE operators)\n\
      \x20 validate         check a Burgers checkpoint against the analytic profile\n\
@@ -92,7 +93,7 @@ fn bench_specs() -> Vec<OptSpec> {
         OptSpec { name: "seed", help: "rng seed", takes_value: true, default: None },
         OptSpec { name: "profile", help: "Burgers profile k (fig6)", takes_value: true, default: None },
         OptSpec { name: "no-autodiff", help: "skip the autodiff leg (fig6)", takes_value: false, default: None },
-        OptSpec { name: "threads", help: "comma list of worker counts (par, train-par)", takes_value: true, default: None },
+        OptSpec { name: "threads", help: "comma list of worker counts (par, train-par, profiles)", takes_value: true, default: None },
         OptSpec { name: "n", help: "derivative order (par)", takes_value: true, default: None },
         OptSpec { name: "chunk", help: "collocation rows per shard (train-par)", takes_value: true, default: None },
         OptSpec { name: "points", help: "residual collocation points (train-par)", takes_value: true, default: None },
@@ -117,7 +118,7 @@ fn cmd_bench(raw: &[String]) -> Result<(), String> {
     let target = args
         .positional()
         .first()
-        .ok_or("bench needs a target (fig1..fig10, mem, par, kernels, train-par, operators, serve, all)")?
+        .ok_or("bench needs a target (fig1..fig10, mem, par, kernels, train-par, profiles, operators, serve, all)")?
         .clone();
     let out_dir = PathBuf::from(args.get("out-dir").unwrap());
     std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
@@ -450,6 +451,36 @@ fn run_bench_target(target: &str, args: &Args, out_dir: &Path) -> Result<(), Str
             }
             println!("{}", serve::summarize(&cells));
         }
+        "profiles" => {
+            let k = args.get_usize("profile")?.unwrap_or(2);
+            let threads = args
+                .get_usize_list("threads")?
+                .unwrap_or_else(|| vec![1, 2, 4]);
+            let mut base = profiles::ProfilesConfig::for_profile(k);
+            base.train = train_cfg_from(args, (300, 300))?;
+            let cfgs: Vec<profiles::ProfilesConfig> = threads
+                .iter()
+                .map(|&t| {
+                    let mut c = base.clone();
+                    c.train.policy = if t <= 1 {
+                        ParallelPolicy::Serial
+                    } else {
+                        ParallelPolicy::Fixed(t)
+                    };
+                    c
+                })
+                .collect();
+            eprintln!(
+                "[bench] profiles: k={k} full-training sweep over threads {threads:?}, \
+                 one shard pool reused across runs"
+            );
+            let runs = profiles::run_sweep(&cfgs, |msg| eprintln!("[bench] {msg}"));
+            let labels: Vec<String> = threads.iter().map(|t| format!("threads-{t}")).collect();
+            profiles::save_sweep(&runs, &labels, out_dir).map_err(|e| e.to_string())?;
+            for (r, label) in runs.iter().zip(&labels) {
+                println!("[{label}] {}", profiles::summarize(r));
+            }
+        }
         "train-par" | "train_par" => {
             let mut cfg = train_par::TrainParBenchConfig::default();
             if let Some(v) = args.get_usize("profile")? {
@@ -514,6 +545,10 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "threads", help: "serial = monolithic tape; auto | N = sharded data-parallel", takes_value: true, default: Some("serial") },
         OptSpec { name: "chunk", help: "collocation rows per shard (parallel training)", takes_value: true, default: Some("32") },
         OptSpec { name: "out", help: "checkpoint path", takes_value: true, default: Some("results/checkpoint.json") },
+        OptSpec { name: "checkpoint-every", help: "write a crash-safe resume checkpoint to --out every N epochs (0 = only the final artifact)", takes_value: true, default: Some("0") },
+        OptSpec { name: "resume", help: "resume a checkpoint written with --checkpoint-every (needs the original profile/config/seed flags)", takes_value: true, default: None },
+        OptSpec { name: "max-retries", help: "bounded divergence rollbacks before a clean abort", takes_value: true, default: Some("3") },
+        OptSpec { name: "no-guard", help: "disable the per-step numeric-health guards", takes_value: false, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &specs)?;
@@ -533,6 +568,38 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
     if let Some(v) = args.get_usize("chunk")? {
         cfg.chunk = v.max(1);
     }
+    let out = PathBuf::from(args.get("out").unwrap());
+    let checkpoint_every = args.get_usize("checkpoint-every")?.unwrap();
+    let res = ResilienceConfig {
+        guard: !args.flag("no-guard"),
+        max_retries: args.get_usize("max-retries")?.unwrap() as u64,
+        checkpoint_every,
+        checkpoint_path: (checkpoint_every > 0).then(|| out.clone()),
+        ..ResilienceConfig::default()
+    };
+    // `Checkpoint::load` validates shapes and finiteness, so a truncated
+    // or corrupted resume file fails here with its taxonomy error instead
+    // of poisoning the restarted trajectory.
+    let resume_ck = match args.get("resume") {
+        Some(p) => Some(Checkpoint::load(Path::new(p)).map_err(|e| format!("--resume: {e:#}"))?),
+        None => None,
+    };
+    let resume = match &resume_ck {
+        Some(ck) => {
+            let state = ck.resume.as_ref().ok_or(
+                "--resume checkpoint carries no mid-run state; \
+                 train with --checkpoint-every to produce one",
+            )?;
+            eprintln!(
+                "resuming from {} ({} phase, epoch {})",
+                args.get("resume").unwrap(),
+                state.phase.name(),
+                state.epoch
+            );
+            Some(state)
+        }
+        None => None,
+    };
     // --- Multi-dimensional PDE training (--pde) -------------------------
     if let Some(pde_name) = args.get("pde") {
         let problem = PdeProblem::from_name(pde_name).ok_or_else(|| {
@@ -594,7 +661,9 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
             spec.n_boundary,
             cfg.policy
         );
-        let result = ntangent::pinn::train_pde_with_estimator(spec, &cfg, engine, estimator);
+        let result =
+            ntangent::pinn::train_pde_resilient(spec, &cfg, engine, estimator, &res, resume);
+        report_health(&result.health, &res)?;
         println!(
             "done in {:.1}s: loss = {:.3e}, residual RMS = {:.3e}, L2(u) = {:.3e}",
             result.seconds,
@@ -604,7 +673,6 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
         );
         let mut ck = Checkpoint::from_mlp(&result.mlp);
         ck.final_loss = Some(result.final_loss);
-        let out = PathBuf::from(args.get("out").unwrap());
         ck.save(&out).map_err(|e| e.to_string())?;
         println!("checkpoint -> {}", out.display());
         return Ok(());
@@ -626,10 +694,11 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
     // count (docs/ARCHITECTURE.md). Only the literal "serial" default keeps
     // the monolithic single-tape path, which sums in a different order.
     let result = if threads_arg == "serial" {
-        ntangent::pinn::train_burgers(spec, &cfg, engine)
+        ntangent::pinn::train_burgers_resilient(spec, &cfg, engine, &res, resume)
     } else {
-        ntangent::pinn::train_burgers_parallel(spec, &cfg, engine)
+        ntangent::pinn::train_burgers_parallel_resilient(spec, &cfg, engine, &res, resume)
     };
+    report_health(&result.health, &res)?;
     println!(
         "done in {:.1}s: λ = {:.6} (err {:.2e}), loss = {:.3e}, L2(u) = {:.3e}",
         result.seconds,
@@ -642,9 +711,38 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
     ck.lambda = Some(result.lambda);
     ck.profile_k = Some(k);
     ck.final_loss = Some(result.final_loss);
-    let out = PathBuf::from(args.get("out").unwrap());
     ck.save(&out).map_err(|e| e.to_string())?;
     println!("checkpoint -> {}", out.display());
+    Ok(())
+}
+
+/// Surface a run's [`RunHealth`] on the CLI: warn about degraded
+/// durability and survived rollbacks, and turn an interruption or a
+/// bounded-retry abort into a non-zero exit (the last-good checkpoint, if
+/// one was configured, is already on disk).
+fn report_health(health: &RunHealth, res: &ResilienceConfig) -> Result<(), String> {
+    if let Some(e) = &health.checkpoint_error {
+        eprintln!("warning: checkpoint write failed mid-run: {e}");
+    }
+    if health.interrupted {
+        return Err("training interrupted (injected kill); restart with --resume".into());
+    }
+    if let Some(err) = health.aborted {
+        let hint = match &res.checkpoint_path {
+            Some(p) => format!("; last-good checkpoint at {}", p.display()),
+            None => String::new(),
+        };
+        return Err(format!(
+            "training aborted after {} rollback(s): {err}{hint}",
+            health.retries
+        ));
+    }
+    if health.retries > 0 {
+        eprintln!(
+            "recovered from {} divergence rollback(s); trajectory completed",
+            health.retries
+        );
+    }
     Ok(())
 }
 

@@ -1,18 +1,352 @@
 //! Checkpoints: JSON serialization of trained networks (+ metadata such
 //! as the inferred λ), shared by the CLI trainer, the serving coordinator
 //! and the examples.
+//!
+//! Since the resilient-training work this layer is also the crash-safety
+//! boundary of a run:
+//!
+//! - [`Checkpoint::save`] is **atomic**: the payload is written to a
+//!   sibling temp file, fsynced, then renamed over the target — a kill at
+//!   any instant leaves either the previous checkpoint or the new one on
+//!   disk, never a half-written hybrid.
+//! - [`Checkpoint::load`] is **hardened**: truncated or corrupted files,
+//!   schema violations, non-finite parameters and architecture/parameter
+//!   count mismatches each fail with a classified [`CheckpointError`] —
+//!   never a panic, never a silently-wrong model.
+//! - An optional [`ResumeState`] carries the full mid-trajectory
+//!   optimizer state (Adam moments, L-BFGS curvature memory, the STDE
+//!   draw counter, the divergence-recovery schedule position) so
+//!   `train --resume` can restart **bitwise identical** to the
+//!   uninterrupted run (`rust/tests/training_resilience.rs`).
 
 use super::{params, Mlp};
 use crate::ntp::activation::ActivationKind;
+use crate::simd::Isa;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::prng::Prng;
 use anyhow::{Context, Result};
+use std::fmt;
+use std::fs::File;
+use std::io::Write;
 use std::path::Path;
+
+/// Classified checkpoint-load failures — the taxonomy callers (CLI,
+/// server, resume) report instead of raw parse errors. The `Display`
+/// form always starts with `checkpoint <kind>:` so the class survives
+/// through `anyhow` context chains.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// The file could not be read at all (missing, permissions, I/O).
+    Io(String),
+    /// The bytes are not a valid JSON document — the signature of a
+    /// truncated or corrupted write.
+    Corrupted(String),
+    /// Valid JSON that is not a checkpoint: missing or mistyped fields.
+    Schema(String),
+    /// A parameter or optimizer value is NaN/±∞ — the artifact of a
+    /// diverged run and unusable for serving or resume.
+    NonFinite(String),
+    /// The declared architecture and the stored parameter counts
+    /// disagree.
+    ShapeMismatch(String),
+}
+
+impl CheckpointError {
+    /// The stable taxonomy tag (`io`, `corrupted`, `schema`,
+    /// `non-finite`, `shape-mismatch`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            CheckpointError::Io(_) => "io",
+            CheckpointError::Corrupted(_) => "corrupted",
+            CheckpointError::Schema(_) => "schema",
+            CheckpointError::NonFinite(_) => "non-finite",
+            CheckpointError::ShapeMismatch(_) => "shape-mismatch",
+        }
+    }
+
+    fn detail(&self) -> &str {
+        match self {
+            CheckpointError::Io(s)
+            | CheckpointError::Corrupted(s)
+            | CheckpointError::Schema(s)
+            | CheckpointError::NonFinite(s)
+            | CheckpointError::ShapeMismatch(s) => s,
+        }
+    }
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "checkpoint {}: {}", self.kind(), self.detail())
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+/// Which phase of the two-phase Adam → L-BFGS schedule a resume snapshot
+/// was taken in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResumePhase {
+    /// The Adam exploration phase.
+    Adam,
+    /// The L-BFGS refinement phase.
+    Lbfgs,
+}
+
+impl ResumePhase {
+    /// Canonical lowercase name used in the JSON encoding.
+    pub fn name(self) -> &'static str {
+        match self {
+            ResumePhase::Adam => "adam",
+            ResumePhase::Lbfgs => "lbfgs",
+        }
+    }
+
+    /// Parse the JSON encoding back.
+    pub fn from_name(name: &str) -> Option<ResumePhase> {
+        match name {
+            "adam" => Some(ResumePhase::Adam),
+            "lbfgs" => Some(ResumePhase::Lbfgs),
+            _ => None,
+        }
+    }
+}
+
+/// Adam moment state at snapshot time (see [`crate::opt::Adam`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdamResume {
+    /// First moments, one per optimizer coordinate.
+    pub m: Vec<f64>,
+    /// Second moments, one per optimizer coordinate.
+    pub v: Vec<f64>,
+    /// Bias-correction step counter (steps taken so far).
+    pub t: u64,
+}
+
+/// L-BFGS curvature memory at snapshot time (see [`crate::opt::Lbfgs`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LbfgsResume {
+    /// Stored `s = θ_{k+1} − θ_k` displacement vectors, oldest first.
+    pub s: Vec<Vec<f64>>,
+    /// Stored `y = ∇f_{k+1} − ∇f_k` vectors, paired with `s`.
+    pub y: Vec<Vec<f64>>,
+    /// The gradient the optimizer carried over from its last successful
+    /// step (reused instead of a fresh `value_grad` call — serializing
+    /// it is what keeps resumed trajectories bitwise identical).
+    pub last_grad: Option<Vec<f64>>,
+}
+
+/// The full mid-trajectory training state: everything beyond the network
+/// weights that the next optimizer step reads. A checkpoint carrying one
+/// of these can restart the run bitwise-identically to never having
+/// stopped.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResumeState {
+    /// Schedule phase of the snapshot.
+    pub phase: ResumePhase,
+    /// Epochs already completed **within that phase**.
+    pub epoch: usize,
+    /// The full optimizer parameter vector — network weights plus any
+    /// trailing inverse parameter (λ), i.e. `Objective::dim()` long,
+    /// which can exceed `Checkpoint::theta` (the weights alone).
+    pub theta: Vec<f64>,
+    /// Adam moments, when the snapshot falls in (or after) the Adam
+    /// phase.
+    pub adam: Option<AdamResume>,
+    /// L-BFGS memory, when the snapshot falls in the L-BFGS phase.
+    pub lbfgs: Option<LbfgsResume>,
+    /// STDE draw counter of the objective at snapshot time (0 for exact
+    /// runs); the resumed objective rebuilds its shards at this counter
+    /// so forward-only line-search probes see the identical draw.
+    pub stde_step: u64,
+    /// Divergence-recovery retries consumed so far (positions the
+    /// deterministic intervention schedule).
+    pub retries: u64,
+    /// Consecutive line-search failures at snapshot time (the stall
+    /// detector's counter — serialized so a kill between two failures
+    /// still resumes bitwise).
+    pub ls_failures: u64,
+    /// Current deterministic learning-rate backoff factor (1.0 until a
+    /// recovery intervened).
+    pub lr_scale: f64,
+}
+
+impl ResumeState {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("phase", Json::Str(self.phase.name().to_string())),
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("theta", Json::num_arr(&self.theta)),
+            ("stde_step", Json::Num(self.stde_step as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("ls_failures", Json::Num(self.ls_failures as f64)),
+            ("lr_scale", Json::Num(self.lr_scale)),
+        ];
+        if let Some(a) = &self.adam {
+            fields.push((
+                "adam",
+                Json::obj(vec![
+                    ("m", Json::num_arr(&a.m)),
+                    ("v", Json::num_arr(&a.v)),
+                    ("t", Json::Num(a.t as f64)),
+                ]),
+            ));
+        }
+        if let Some(l) = &self.lbfgs {
+            let pairs = |vecs: &[Vec<f64>]| {
+                Json::Arr(vecs.iter().map(|v| Json::num_arr(v)).collect())
+            };
+            let mut lf = vec![("s", pairs(&l.s)), ("y", pairs(&l.y))];
+            if let Some(g) = &l.last_grad {
+                lf.push(("last_grad", Json::num_arr(g)));
+            }
+            fields.push(("lbfgs", Json::obj(lf)));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(v: &Json) -> Result<ResumeState> {
+        let phase_name = v
+            .get("phase")
+            .and_then(Json::as_str)
+            .context("resume state missing phase")?;
+        let phase = ResumePhase::from_name(phase_name)
+            .with_context(|| format!("unknown resume phase '{phase_name}'"))?;
+        let epoch = v
+            .get("epoch")
+            .and_then(Json::as_usize)
+            .context("resume state missing epoch")?;
+        let theta = v
+            .get("theta")
+            .and_then(Json::as_f64_vec)
+            .context("resume state missing theta")?;
+        let adam = match v.get("adam") {
+            None => None,
+            Some(a) => Some(AdamResume {
+                m: a.get("m")
+                    .and_then(Json::as_f64_vec)
+                    .context("adam state missing m")?,
+                v: a.get("v")
+                    .and_then(Json::as_f64_vec)
+                    .context("adam state missing v")?,
+                t: a.get("t")
+                    .and_then(Json::as_usize)
+                    .context("adam state missing t")? as u64,
+            }),
+        };
+        let lbfgs = match v.get("lbfgs") {
+            None => None,
+            Some(l) => {
+                let pairs = |key: &str| -> Result<Vec<Vec<f64>>> {
+                    l.get(key)
+                        .and_then(Json::as_arr)
+                        .with_context(|| format!("lbfgs state missing {key}"))?
+                        .iter()
+                        .map(|e| {
+                            e.as_f64_vec()
+                                .with_context(|| format!("lbfgs {key} entry is not numeric"))
+                        })
+                        .collect()
+                };
+                let last_grad = match l.get("last_grad") {
+                    None => None,
+                    Some(g) => {
+                        Some(g.as_f64_vec().context("lbfgs last_grad is not numeric")?)
+                    }
+                };
+                Some(LbfgsResume {
+                    s: pairs("s")?,
+                    y: pairs("y")?,
+                    last_grad,
+                })
+            }
+        };
+        let stde_step = v
+            .get("stde_step")
+            .and_then(Json::as_usize)
+            .unwrap_or(0) as u64;
+        let retries = v.get("retries").and_then(Json::as_usize).unwrap_or(0) as u64;
+        let ls_failures = v.get("ls_failures").and_then(Json::as_usize).unwrap_or(0) as u64;
+        let lr_scale = v.get("lr_scale").and_then(Json::as_f64).unwrap_or(1.0);
+        Ok(ResumeState {
+            phase,
+            epoch,
+            theta,
+            adam,
+            lbfgs,
+            stde_step,
+            retries,
+            ls_failures,
+            lr_scale,
+        })
+    }
+
+    /// Structural validation against the optimizer dimension `dim`
+    /// (network parameters + any inverse parameter). Every stored vector
+    /// must be `dim` long and finite.
+    fn validate(&self, dim_weights: usize) -> Result<(), CheckpointError> {
+        let dim = self.theta.len();
+        if dim != dim_weights && dim != dim_weights + 1 {
+            return Err(CheckpointError::ShapeMismatch(format!(
+                "resume theta has {dim} values, architecture wants {dim_weights} (+1 for λ)"
+            )));
+        }
+        let finite = |name: &str, xs: &[f64]| -> Result<(), CheckpointError> {
+            if Isa::active().all_finite(xs) {
+                Ok(())
+            } else {
+                Err(CheckpointError::NonFinite(format!(
+                    "resume {name} contains NaN/Inf"
+                )))
+            }
+        };
+        let sized = |name: &str, xs: &[f64]| -> Result<(), CheckpointError> {
+            if xs.len() == dim {
+                finite(name, xs)
+            } else {
+                Err(CheckpointError::ShapeMismatch(format!(
+                    "resume {name} has {} values, theta has {dim}",
+                    xs.len()
+                )))
+            }
+        };
+        finite("theta", &self.theta)?;
+        if let Some(a) = &self.adam {
+            sized("adam.m", &a.m)?;
+            sized("adam.v", &a.v)?;
+        }
+        if let Some(l) = &self.lbfgs {
+            if l.s.len() != l.y.len() {
+                return Err(CheckpointError::ShapeMismatch(format!(
+                    "lbfgs history has {} s vectors but {} y vectors",
+                    l.s.len(),
+                    l.y.len()
+                )));
+            }
+            for (i, (s, y)) in l.s.iter().zip(&l.y).enumerate() {
+                sized(&format!("lbfgs.s[{i}]"), s)?;
+                sized(&format!("lbfgs.y[{i}]"), y)?;
+            }
+            if let Some(g) = &l.last_grad {
+                sized("lbfgs.last_grad", g)?;
+            }
+        }
+        if !self.lr_scale.is_finite() || self.lr_scale <= 0.0 {
+            return Err(CheckpointError::NonFinite(format!(
+                "resume lr_scale {} is not a positive finite number",
+                self.lr_scale
+            )));
+        }
+        Ok(())
+    }
+}
 
 /// A saved model: architecture, activation, flat parameters and training
 /// metadata. Checkpoints written before the activation field existed load
-/// as tanh (the only activation they could have been trained with).
+/// as tanh (the only activation they could have been trained with);
+/// checkpoints written before the resume field existed load with
+/// `resume: None` and can still be served and evaluated.
 #[derive(Clone, Debug)]
 pub struct Checkpoint {
     /// Layer widths, e.g. `[1, 24, 24, 24, 1]`.
@@ -27,6 +361,17 @@ pub struct Checkpoint {
     pub profile_k: Option<usize>,
     /// Final training loss.
     pub final_loss: Option<f64>,
+    /// Mid-trajectory optimizer state for `train --resume`.
+    pub resume: Option<ResumeState>,
+}
+
+/// Expected flat parameter count of an architecture (`W` + `b` per
+/// layer) without building the network.
+fn param_count(sizes: &[usize]) -> usize {
+    sizes
+        .windows(2)
+        .map(|w| w[0] * w[1] + w[1])
+        .sum()
 }
 
 impl Checkpoint {
@@ -39,6 +384,7 @@ impl Checkpoint {
             lambda: None,
             profile_k: None,
             final_loss: None,
+            resume: None,
         }
     }
 
@@ -79,6 +425,9 @@ impl Checkpoint {
         if let Some(f) = self.final_loss {
             fields.push(("final_loss", Json::Num(f)));
         }
+        if let Some(r) = &self.resume {
+            fields.push(("resume", r.to_json()));
+        }
         Json::obj(fields)
     }
 
@@ -94,7 +443,7 @@ impl Checkpoint {
         let theta = v
             .get("theta")
             .and_then(Json::as_f64_vec)
-            .context("checkpoint missing theta")?;
+            .context("checkpoint missing theta (or theta holds non-numeric entries)")?;
         let activation = match v.get("activation") {
             // Pre-activation-field checkpoints were all tanh.
             None => ActivationKind::Tanh,
@@ -104,6 +453,10 @@ impl Checkpoint {
                     .with_context(|| format!("unknown checkpoint activation '{name}'"))?
             }
         };
+        let resume = match v.get("resume") {
+            None => None,
+            Some(r) => Some(ResumeState::from_json(r).context("bad resume state")?),
+        };
         Ok(Checkpoint {
             sizes,
             activation,
@@ -111,30 +464,134 @@ impl Checkpoint {
             lambda: v.get("lambda").and_then(Json::as_f64),
             profile_k: v.get("profile_k").and_then(Json::as_usize),
             final_loss: v.get("final_loss").and_then(Json::as_f64),
+            resume,
         })
     }
 
-    /// Write the checkpoint JSON to `path`.
-    pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
+    /// Structural + numeric validation — the [`Checkpoint::load`] gate,
+    /// exposed so in-memory checkpoints (e.g. a just-built resume
+    /// snapshot) can be checked without a disk roundtrip.
+    pub fn validate(&self) -> Result<(), CheckpointError> {
+        if self.sizes.len() < 2 {
+            return Err(CheckpointError::Schema(format!(
+                "architecture needs at least input and output sizes, got {:?}",
+                self.sizes
+            )));
         }
-        std::fs::write(path, self.to_json().dump())
-            .with_context(|| format!("writing checkpoint {}", path.display()))
+        if self.sizes.iter().any(|&s| s == 0) {
+            return Err(CheckpointError::Schema(format!(
+                "architecture has a zero-width layer: {:?}",
+                self.sizes
+            )));
+        }
+        let want = param_count(&self.sizes);
+        if self.theta.len() != want {
+            return Err(CheckpointError::ShapeMismatch(format!(
+                "theta has {} values, architecture {:?} wants {want}",
+                self.theta.len(),
+                self.sizes
+            )));
+        }
+        if !Isa::active().all_finite(&self.theta) {
+            let bad = self
+                .theta
+                .iter()
+                .position(|x| !x.is_finite())
+                .unwrap_or(0);
+            return Err(CheckpointError::NonFinite(format!(
+                "theta[{bad}] is {} — refusing to serve or resume a diverged model",
+                self.theta[bad]
+            )));
+        }
+        if let Some(l) = self.lambda {
+            if !l.is_finite() {
+                return Err(CheckpointError::NonFinite(format!("lambda is {l}")));
+            }
+        }
+        if let Some(r) = &self.resume {
+            r.validate(want)?;
+        }
+        Ok(())
     }
 
-    /// Load a checkpoint JSON from `path`.
+    /// Write the checkpoint JSON to `path` **atomically**: the payload
+    /// goes to a sibling `*.tmp` file which is fsynced and then renamed
+    /// over the target. A crash mid-save leaves the previous checkpoint
+    /// intact; the reader can never observe a half-written file under
+    /// the final name.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating checkpoint dir {}", parent.display()))?;
+            }
+        }
+        let mut tmp_name = path
+            .file_name()
+            .map(|n| n.to_os_string())
+            .context("checkpoint path has no file name")?;
+        tmp_name.push(".tmp");
+        let tmp = path.with_file_name(tmp_name);
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("creating checkpoint temp {}", tmp.display()))?;
+            f.write_all(self.to_json().dump().as_bytes())
+                .with_context(|| format!("writing checkpoint temp {}", tmp.display()))?;
+            f.sync_all()
+                .with_context(|| format!("syncing checkpoint temp {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        // Make the rename itself durable where the platform allows
+        // fsyncing a directory; a failure here degrades durability, not
+        // atomicity, so it is not fatal.
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                if let Ok(dir) = File::open(parent) {
+                    let _ = dir.sync_all();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint from `path`, classifying every failure mode as
+    /// a [`CheckpointError`] (I/O, truncated/corrupted JSON, schema,
+    /// non-finite values, shape mismatch).
     pub fn load(path: &Path) -> Result<Checkpoint> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading checkpoint {}", path.display()))?;
-        let v = Json::parse(&text).context("checkpoint is not valid JSON")?;
-        Self::from_json(&v)
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            CheckpointError::Io(format!("reading {}: {e}", path.display()))
+        })?;
+        let v = Json::parse(&text).map_err(|e| {
+            CheckpointError::Corrupted(format!(
+                "{} is not valid JSON ({e}) — truncated or corrupted write?",
+                path.display()
+            ))
+        })?;
+        let ck = Self::from_json(&v).map_err(|e| {
+            CheckpointError::Schema(format!("{}: {e:#}", path.display()))
+        })?;
+        ck.validate()
+            .map_err(|e| anyhow::Error::msg(format!("{}: {e}", path.display())))?;
+        Ok(ck)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn kind_of(err: &anyhow::Error) -> String {
+        // The taxonomy tag survives context chains through the stable
+        // `checkpoint <kind>:` Display prefix.
+        let text = format!("{err:#}");
+        for kind in ["io", "corrupted", "schema", "non-finite", "shape-mismatch"] {
+            if text.contains(&format!("checkpoint {kind}:")) {
+                return kind.to_string();
+            }
+        }
+        format!("unclassified: {text}")
+    }
 
     #[test]
     fn roundtrip_through_json() {
@@ -173,8 +630,14 @@ mod tests {
             lambda: None,
             profile_k: None,
             final_loss: None,
+            resume: None,
         };
         assert!(ck.to_mlp().is_err());
+        assert_eq!(
+            ck.validate().unwrap_err().kind(),
+            "shape-mismatch",
+            "validate classifies the arity mismatch"
+        );
     }
 
     /// Acceptance: a checkpoint saved with any registered activation
@@ -221,5 +684,160 @@ mod tests {
             &Json::parse(&dumped.replace("\"tanh\"", "\"relu\"")).unwrap()
         )
         .is_err());
+    }
+
+    /// The resume state — both optimizers' memory, the STDE counter and
+    /// the recovery schedule position — survives a JSON disk roundtrip
+    /// bitwise (the writer uses shortest-roundtrip float encoding).
+    #[test]
+    fn resume_state_roundtrips_bitwise() {
+        let mut rng = Prng::seeded(77);
+        let mlp = Mlp::uniform(1, 5, 2, 1, &mut rng);
+        let dim = mlp.n_params() + 1; // + λ
+        let noise = |rng: &mut Prng, n: usize| -> Vec<f64> {
+            (0..n).map(|_| rng.normal_with(0.0, 1.0) * 1e-3 + 0.123456789).collect()
+        };
+        let mut ck = Checkpoint::from_mlp(&mlp);
+        ck.lambda = Some(0.987654321);
+        ck.resume = Some(ResumeState {
+            phase: ResumePhase::Lbfgs,
+            epoch: 17,
+            theta: noise(&mut rng, dim),
+            adam: Some(AdamResume {
+                m: noise(&mut rng, dim),
+                v: noise(&mut rng, dim).iter().map(|x| x * x).collect(),
+                t: 300,
+            }),
+            lbfgs: Some(LbfgsResume {
+                s: vec![noise(&mut rng, dim), noise(&mut rng, dim)],
+                y: vec![noise(&mut rng, dim), noise(&mut rng, dim)],
+                last_grad: Some(noise(&mut rng, dim)),
+            }),
+            stde_step: 42,
+            retries: 1,
+            ls_failures: 1,
+            lr_scale: 0.5,
+        });
+        let path = std::env::temp_dir().join("ntangent_ck_resume_test.json");
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.theta, ck.theta);
+        let want = ck.resume.unwrap();
+        let got = loaded.resume.expect("resume state survived");
+        assert_eq!(got, want);
+    }
+
+    /// Simulated mid-write truncation: every prefix of a valid
+    /// checkpoint file fails `load` with the `corrupted` (or, for the
+    /// empty file, still `corrupted`) classification — never a panic.
+    #[test]
+    fn truncated_files_fail_with_corrupted_taxonomy() {
+        let mut rng = Prng::seeded(51);
+        let mlp = Mlp::uniform(1, 4, 1, 1, &mut rng);
+        let ck = Checkpoint::from_mlp(&mlp);
+        let full = ck.to_json().dump();
+        let path = std::env::temp_dir().join("ntangent_ck_trunc_test.json");
+        for cut in [0, 1, full.len() / 4, full.len() / 2, full.len() - 1] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let err = Checkpoint::load(&path).unwrap_err();
+            assert_eq!(kind_of(&err), "corrupted", "cut at {cut}: {err:#}");
+        }
+        // The full file still loads.
+        std::fs::write(&path, &full).unwrap();
+        assert!(Checkpoint::load(&path).is_ok());
+    }
+
+    #[test]
+    fn load_failures_are_classified() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("ntangent_ck_taxonomy_test.json");
+
+        // io: missing file
+        let missing = dir.join("ntangent_ck_does_not_exist.json");
+        let _ = std::fs::remove_file(&missing);
+        assert_eq!(kind_of(&Checkpoint::load(&missing).unwrap_err()), "io");
+
+        // corrupted: not JSON at all
+        std::fs::write(&path, "not json {{{").unwrap();
+        assert_eq!(kind_of(&Checkpoint::load(&path).unwrap_err()), "corrupted");
+
+        // schema: valid JSON, wrong shape of document
+        std::fs::write(&path, "[1,2,3]").unwrap();
+        assert_eq!(kind_of(&Checkpoint::load(&path).unwrap_err()), "schema");
+
+        // schema: theta with a null hole (the writer's encoding of a
+        // non-finite value)
+        std::fs::write(
+            &path,
+            r#"{"sizes":[1,2,1],"activation":"tanh","theta":[0.1,null,0.2]}"#,
+        )
+        .unwrap();
+        assert_eq!(kind_of(&Checkpoint::load(&path).unwrap_err()), "schema");
+
+        // non-finite: an overflowing literal parses to +inf
+        let inf_theta: Vec<String> =
+            (0..7).map(|i| if i == 3 { "1e999".to_string() } else { "0.1".to_string() }).collect();
+        std::fs::write(
+            &path,
+            format!(
+                r#"{{"sizes":[1,2,1],"activation":"tanh","theta":[{}]}}"#,
+                inf_theta.join(",")
+            ),
+        )
+        .unwrap();
+        assert_eq!(kind_of(&Checkpoint::load(&path).unwrap_err()), "non-finite");
+
+        // shape-mismatch: sizes want 7 params, theta has 5
+        std::fs::write(
+            &path,
+            r#"{"sizes":[1,2,1],"activation":"tanh","theta":[0.1,0.1,0.1,0.1,0.1]}"#,
+        )
+        .unwrap();
+        assert_eq!(kind_of(&Checkpoint::load(&path).unwrap_err()), "shape-mismatch");
+    }
+
+    /// The atomic save leaves no `*.tmp` debris and replaces the target
+    /// in one step: after overwriting an existing checkpoint the old
+    /// content is fully gone and the new content fully present.
+    #[test]
+    fn atomic_save_replaces_cleanly() {
+        let mut rng = Prng::seeded(52);
+        let a = Checkpoint::from_mlp(&Mlp::uniform(1, 4, 1, 1, &mut rng));
+        let b = Checkpoint::from_mlp(&Mlp::uniform(1, 4, 1, 1, &mut rng));
+        let path = std::env::temp_dir().join("ntangent_ck_atomic_test.json");
+        a.save(&path).unwrap();
+        b.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.theta, b.theta);
+        assert_ne!(loaded.theta, a.theta);
+        let tmp = path.with_file_name("ntangent_ck_atomic_test.json.tmp");
+        assert!(!tmp.exists(), "temp file must not survive a save");
+    }
+
+    #[test]
+    fn resume_shape_violations_are_rejected() {
+        let mut rng = Prng::seeded(53);
+        let mlp = Mlp::uniform(1, 4, 1, 1, &mut rng);
+        let dim = mlp.n_params();
+        let mut ck = Checkpoint::from_mlp(&mlp);
+        ck.resume = Some(ResumeState {
+            phase: ResumePhase::Adam,
+            epoch: 3,
+            theta: vec![0.1; dim],
+            adam: Some(AdamResume { m: vec![0.0; dim - 1], v: vec![0.0; dim], t: 3 }),
+            lbfgs: None,
+            stde_step: 0,
+            retries: 0,
+            ls_failures: 0,
+            lr_scale: 1.0,
+        });
+        assert_eq!(ck.validate().unwrap_err().kind(), "shape-mismatch");
+
+        let mut nan = ck.clone();
+        if let Some(r) = nan.resume.as_mut() {
+            r.adam = None;
+            r.theta[1] = f64::NAN;
+        }
+        assert_eq!(nan.validate().unwrap_err().kind(), "non-finite");
     }
 }

@@ -4,7 +4,9 @@
 pub mod checkpoint;
 pub mod params;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{
+    AdamResume, Checkpoint, CheckpointError, LbfgsResume, ResumePhase, ResumeState,
+};
 
 use crate::autodiff::{Graph, NodeId};
 use crate::ntp::activation::ActivationKind;

@@ -356,6 +356,43 @@ impl Lbfgs {
         self.history.clear();
         self.last_grad = None;
     }
+
+    /// The gradient carried over from the last successful step (the one
+    /// the next [`Lbfgs::step`] reuses instead of a fresh backward
+    /// pass). Numeric health guards probe it for NaN/Inf between steps.
+    pub fn last_grad(&self) -> Option<&Tensor> {
+        self.last_grad.as_ref()
+    }
+
+    /// Export the curvature memory for a resume checkpoint:
+    /// `(s vectors, y vectors, last_grad)`, oldest pair first.
+    pub fn export_state(&self) -> (Vec<Vec<f64>>, Vec<Vec<f64>>, Option<Vec<f64>>) {
+        let s = self.history.iter().map(|(s, _)| s.data().to_vec()).collect();
+        let y = self.history.iter().map(|(_, y)| y.data().to_vec()).collect();
+        let g = self.last_grad.as_ref().map(|g| g.data().to_vec());
+        (s, y, g)
+    }
+
+    /// Restore state exported by [`Lbfgs::export_state`] — the next
+    /// [`Lbfgs::step`] then walks the bitwise-identical trajectory the
+    /// uninterrupted run would have (the carried-over gradient is what
+    /// makes the first resumed step a `value`-only probe, exactly like
+    /// the original run's next step). `s` and `y` must be paired.
+    pub fn restore_state(&mut self, s: &[Vec<f64>], y: &[Vec<f64>], last_grad: Option<&[f64]>) {
+        assert_eq!(s.len(), y.len(), "lbfgs history pairs mismatch");
+        self.history = s
+            .iter()
+            .zip(y)
+            .map(|(si, yi)| {
+                assert_eq!(si.len(), yi.len(), "lbfgs s/y length mismatch");
+                (
+                    Tensor::from_vec(si.clone(), &[si.len()]),
+                    Tensor::from_vec(yi.clone(), &[yi.len()]),
+                )
+            })
+            .collect();
+        self.last_grad = last_grad.map(|g| Tensor::from_vec(g.to_vec(), &[g.len()]));
+    }
 }
 
 #[cfg(test)]
@@ -549,6 +586,40 @@ mod tests {
         // unit + interp + ceil(23/4) halving waves = 8 pool sweeps.
         assert!(obj.batch_calls <= 8, "got {} waves", obj.batch_calls);
         assert_eq!(theta.data(), &[0.0, 0.0]);
+    }
+
+    /// Export at step k, restore into a fresh optimizer, continue: the
+    /// trajectory (history, carried gradient, theta) is bitwise
+    /// identical to never having stopped.
+    #[test]
+    fn export_restore_resumes_bitwise() {
+        let dim = 6;
+        let center = Tensor::linspace(-1.0, 2.0, dim);
+        let mut obj = Quadratic { center: center.clone() };
+
+        let mut full = Lbfgs::new(dim);
+        let mut tf = Tensor::zeros(&[dim]);
+        for _ in 0..8 {
+            full.step(&mut obj, &mut tf);
+        }
+
+        let mut first = Lbfgs::new(dim);
+        let mut tr = Tensor::zeros(&[dim]);
+        for _ in 0..3 {
+            first.step(&mut obj, &mut tr);
+        }
+        let (s, y, g) = first.export_state();
+        let mut resumed = Lbfgs::new(dim);
+        resumed.restore_state(&s, &y, g.as_deref());
+        for _ in 0..5 {
+            resumed.step(&mut obj, &mut tr);
+        }
+        assert_eq!(tr, tf);
+        let (sf, yf, gf) = full.export_state();
+        let (sr, yr, gr) = resumed.export_state();
+        assert_eq!(sr, sf);
+        assert_eq!(yr, yf);
+        assert_eq!(gr, gf);
     }
 
     #[test]

@@ -44,6 +44,7 @@ pub mod collocation;
 pub mod loss;
 pub mod multi;
 pub mod parallel;
+pub mod resilience;
 pub mod series;
 pub(crate) mod terms;
 pub mod trainer;
@@ -56,7 +57,10 @@ pub use crate::ntp::{EstimatorMode, StdeConfig};
 pub use loss::{residual_derivative_nodes, BurgersLossSpec, DerivEngine, PinnObjective};
 pub use multi::{residual_values, residual_values_estimated, MultiObjective, MultiPinnSpec};
 pub use parallel::{ParallelObjective, DEFAULT_CHUNK_ROWS};
+pub use resilience::{FaultKind, FaultPlan, NumericError, ResilienceConfig, RunHealth};
 pub use trainer::{
-    train_burgers, train_burgers_parallel, train_pde, train_pde_with_estimator, EpochLog,
-    PdeTrainResult, TrainConfig, TrainableObjective, TrainResult,
+    train_burgers, train_burgers_parallel, train_burgers_parallel_resilient,
+    train_burgers_resilient, train_burgers_sharded, train_pde, train_pde_resilient,
+    train_pde_with_estimator, EpochLog, PdeTrainResult, TrainConfig, TrainableObjective,
+    TrainResult,
 };

@@ -304,6 +304,19 @@ impl MultiObjective {
         self.stde.as_ref().map_or(0, |s| s.step)
     }
 
+    /// Pin the STDE draw counter to `step` and rebuild the shard tapes at
+    /// that draw **without** advancing it — the resume hook. A trainer
+    /// restarting from a checkpoint taken at counter `step` calls this so
+    /// forward-only probes see the same sampled objective the
+    /// uninterrupted run had, and the next `value_grad` advances to
+    /// `step + 1` exactly as it would have. No-op in exact mode.
+    pub fn restore_estimator_step(&mut self, step: u64) {
+        if let Some(state) = self.stde.as_mut() {
+            state.step = step;
+            self.shards = state.build_shards(&self.spec, self.engine, self.policy);
+        }
+    }
+
     /// Initial flat parameter vector (the MLP weights).
     pub fn theta_init(&self, mlp: &Mlp) -> Tensor {
         self.layout.theta_init(mlp)

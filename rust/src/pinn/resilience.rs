@@ -1,0 +1,355 @@
+//! Failure model of the trainer: numeric health guards, classified
+//! [`NumericError`]s, deterministic divergence recovery, and
+//! deterministic fault injection.
+//!
+//! A multi-hour derivative-supervised run (the workload the paper's
+//! quasilinear forward passes make affordable) fails in a handful of
+//! stereotyped ways: an activation tower overflows (`softplus`/`gelu`
+//! exponentials), a residual goes NaN, a line search collapses, or the
+//! process is killed mid-write. This module gives the trainer the same
+//! failure model the serving stack got in the fault-suite work:
+//!
+//! - **Guards** ([`probe_step`]): after every optimizer step the loss,
+//!   the gradient and θ are scanned with the SIMD-dispatched
+//!   [`Isa::all_finite`] reduction and failures classified into the
+//!   [`NumericError`] taxonomy. The probes are read-only — a healthy
+//!   trajectory is bit-for-bit unaffected by guarding.
+//! - **Recovery**: on a tripped guard the schedule rolls back to its
+//!   last in-memory snapshot and applies a *deterministic* intervention
+//!   (Adam learning rate scaled by `lr_backoff^retries`; L-BFGS
+//!   curvature memory dropped), bounded by `max_retries` before a clean
+//!   abort that still persists the last-good checkpoint. Because the
+//!   intervention is a pure function of `(snapshot, retries)`, recovery
+//!   itself is reproducible — interrupted-and-resumed runs take the
+//!   identical recovery path.
+//! - **Fault injection** ([`FaultPlan`]): the `NTANGENT_FAULT`
+//!   environment hook (`nan-loss@5;nan-grad@12;kill@20`) injects
+//!   non-finite values or a simulated crash at configured global epochs,
+//!   mirroring the serving fault suite. Faults fire **once** and are
+//!   consumed, so a rolled-back trajectory passes the fault point
+//!   cleanly on the retry — exactly the transient-fault shape the
+//!   recovery path exists for.
+
+use crate::simd::Isa;
+use std::fmt;
+use std::path::PathBuf;
+
+/// Classified numeric-health failures detected by the training guards.
+/// The `epoch` is the global epoch index (Adam epochs from 0, L-BFGS
+/// continuing) at which the probe tripped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NumericError {
+    /// The loss evaluated to ±∞ — the signature of an activation-tower
+    /// overflow (e.g. `softplus`/`gelu` exponentials) blowing up before
+    /// producing a NaN.
+    TowerOverflow {
+        /// Global epoch of the tripped probe.
+        epoch: usize,
+    },
+    /// The loss evaluated to NaN — a non-finite residual somewhere in
+    /// the collocation cloud.
+    NonFiniteResidual {
+        /// Global epoch of the tripped probe.
+        epoch: usize,
+    },
+    /// A gradient block contains NaN/∞.
+    NonFiniteGradient {
+        /// Global epoch of the tripped probe.
+        epoch: usize,
+    },
+    /// The parameter vector itself contains NaN/∞ (a poisoned update).
+    NonFiniteTheta {
+        /// Global epoch of the tripped probe.
+        epoch: usize,
+    },
+    /// The L-BFGS line search failed on consecutive steps — the run is
+    /// stalled and retrying the same direction cannot help.
+    LineSearchFailed {
+        /// Global epoch of the tripped probe.
+        epoch: usize,
+    },
+}
+
+impl NumericError {
+    /// The global epoch the probe tripped at.
+    pub fn epoch(&self) -> usize {
+        match self {
+            NumericError::TowerOverflow { epoch }
+            | NumericError::NonFiniteResidual { epoch }
+            | NumericError::NonFiniteGradient { epoch }
+            | NumericError::NonFiniteTheta { epoch }
+            | NumericError::LineSearchFailed { epoch } => *epoch,
+        }
+    }
+
+    /// Stable taxonomy tag (`tower-overflow`, `non-finite-residual`,
+    /// `non-finite-gradient`, `non-finite-theta`, `line-search-failed`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            NumericError::TowerOverflow { .. } => "tower-overflow",
+            NumericError::NonFiniteResidual { .. } => "non-finite-residual",
+            NumericError::NonFiniteGradient { .. } => "non-finite-gradient",
+            NumericError::NonFiniteTheta { .. } => "non-finite-theta",
+            NumericError::LineSearchFailed { .. } => "line-search-failed",
+        }
+    }
+}
+
+impl fmt::Display for NumericError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "numeric {} at epoch {}", self.kind(), self.epoch())
+    }
+}
+
+impl std::error::Error for NumericError {}
+
+/// Scan one optimizer step's outputs for numeric poison and classify the
+/// first failure found. `loss` is the step's loss (pass a finite
+/// sentinel if the step produced none), `grad` the gradient if one was
+/// materialized this step, `theta` the post-update parameter vector. All
+/// vector scans go through the SIMD-dispatched [`Isa::all_finite`]
+/// reduction; the probe is read-only and cannot perturb the trajectory.
+pub fn probe_step(
+    loss: f64,
+    grad: Option<&[f64]>,
+    theta: &[f64],
+    epoch: usize,
+) -> Option<NumericError> {
+    if loss.is_nan() {
+        return Some(NumericError::NonFiniteResidual { epoch });
+    }
+    if loss.is_infinite() {
+        return Some(NumericError::TowerOverflow { epoch });
+    }
+    let isa = Isa::active();
+    if let Some(g) = grad {
+        if !isa.all_finite(g) {
+            return Some(NumericError::NonFiniteGradient { epoch });
+        }
+    }
+    if !isa.all_finite(theta) {
+        return Some(NumericError::NonFiniteTheta { epoch });
+    }
+    None
+}
+
+/// What a [`FaultPlan`] entry injects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Replace the step's loss with NaN.
+    NanLoss,
+    /// Poison the step's gradient (Adam phase) or θ (L-BFGS phase, where
+    /// the gradient is internal to the step) with NaN.
+    NanGrad,
+    /// Simulate a crash: the schedule stops immediately, writing no
+    /// further checkpoints — resume must work from what is already on
+    /// disk, exactly like a real kill.
+    Kill,
+}
+
+impl FaultKind {
+    fn name(self) -> &'static str {
+        match self {
+            FaultKind::NanLoss => "nan-loss",
+            FaultKind::NanGrad => "nan-grad",
+            FaultKind::Kill => "kill",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<FaultKind> {
+        match name {
+            "nan-loss" => Some(FaultKind::NanLoss),
+            "nan-grad" => Some(FaultKind::NanGrad),
+            "kill" => Some(FaultKind::Kill),
+            _ => None,
+        }
+    }
+}
+
+/// A deterministic fault-injection schedule: `(kind, global epoch)`
+/// pairs, each firing **once**. Parsed from the `NTANGENT_FAULT`
+/// environment variable (`nan-loss@5;nan-grad@12;kill@20`) or built
+/// in-process by tests.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<(FaultKind, usize, bool)>, // (kind, epoch, consumed)
+}
+
+impl FaultPlan {
+    /// The empty plan (no injection).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Build a plan in-process (test harnesses).
+    pub fn new(faults: &[(FaultKind, usize)]) -> FaultPlan {
+        FaultPlan {
+            faults: faults.iter().map(|&(k, e)| (k, e, false)).collect(),
+        }
+    }
+
+    /// Parse a `kind@epoch;kind@epoch` spec.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut faults = Vec::new();
+        for part in spec.split(';').filter(|p| !p.trim().is_empty()) {
+            let (kind, at) = part
+                .trim()
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{part}' is not kind@epoch"))?;
+            let kind = FaultKind::from_name(kind.trim())
+                .ok_or_else(|| format!("unknown fault kind '{kind}'"))?;
+            let epoch: usize = at
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault epoch '{at}' is not a number"))?;
+            faults.push((kind, epoch, false));
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Read the `NTANGENT_FAULT` hook. A malformed spec is reported on
+    /// stderr and ignored (a debug hook must never take a run down on
+    /// its own).
+    pub fn from_env() -> FaultPlan {
+        match std::env::var("NTANGENT_FAULT") {
+            Ok(spec) => match FaultPlan::parse(&spec) {
+                Ok(plan) => plan,
+                Err(e) => {
+                    eprintln!("NTANGENT_FAULT ignored: {e}");
+                    FaultPlan::none()
+                }
+            },
+            Err(_) => FaultPlan::none(),
+        }
+    }
+
+    /// True if the plan holds no (remaining) faults.
+    pub fn is_empty(&self) -> bool {
+        self.faults.iter().all(|&(_, _, consumed)| consumed)
+    }
+
+    /// Fire-once check: returns `true` (and consumes the entry) if an
+    /// unconsumed `kind` fault is scheduled at `epoch`. A rolled-back
+    /// trajectory passing `epoch` again sees nothing — the transient
+    /// fault has already happened.
+    pub fn take(&mut self, kind: FaultKind, epoch: usize) -> bool {
+        for f in &mut self.faults {
+            if f.0 == kind && f.1 == epoch && !f.2 {
+                f.2 = true;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Configuration of the resilient schedule: guarding, snapshot/checkpoint
+/// cadence, the bounded deterministic recovery schedule, and fault
+/// injection.
+#[derive(Clone, Debug)]
+pub struct ResilienceConfig {
+    /// Where periodic + final checkpoints go (`None` = no disk
+    /// checkpoints; in-memory rollback snapshots are still taken).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Write a checkpoint every this many global epochs (`0` = only at
+    /// the end of the run). Ignored without a `checkpoint_path`.
+    pub checkpoint_every: usize,
+    /// Take an in-memory rollback snapshot every this many global epochs
+    /// (phase starts always snapshot). Checkpoint writes snapshot too.
+    pub snapshot_every: usize,
+    /// Recovery attempts before the run aborts cleanly (writing the
+    /// last-good checkpoint).
+    pub max_retries: u64,
+    /// Deterministic Adam learning-rate backoff: after `r` retries the
+    /// rate is `adam_lr * lr_backoff^r`.
+    pub lr_backoff: f64,
+    /// Enable the numeric health guards (read-only probes; disabling
+    /// restores the fail-late seed behaviour).
+    pub guard: bool,
+    /// Fault-injection schedule (defaults to the `NTANGENT_FAULT` hook).
+    pub fault: FaultPlan,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            checkpoint_path: None,
+            checkpoint_every: 0,
+            snapshot_every: 25,
+            max_retries: 3,
+            lr_backoff: 0.5,
+            guard: true,
+            fault: FaultPlan::from_env(),
+        }
+    }
+}
+
+/// Health record of a finished (or stopped) schedule, attached to every
+/// training result.
+#[derive(Clone, Debug, Default)]
+pub struct RunHealth {
+    /// A `kill` fault stopped the run mid-trajectory (resume from the
+    /// last on-disk checkpoint to continue).
+    pub interrupted: bool,
+    /// The run diverged and exhausted its retries; the result carries
+    /// the last-good parameters, and the last-good checkpoint was
+    /// written if a path was configured.
+    pub aborted: Option<NumericError>,
+    /// Recovery interventions consumed over the whole run.
+    pub retries: u64,
+    /// First checkpoint-write failure, if any (the run itself continues;
+    /// durability, not correctness, is what degraded).
+    pub checkpoint_error: Option<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_classifies_in_priority_order() {
+        let ok = [0.0, 1.0, -2.0];
+        let bad = [0.0, f64::NAN, 1.0];
+        assert_eq!(probe_step(1.0, Some(&ok), &ok, 3), None);
+        assert_eq!(
+            probe_step(f64::NAN, Some(&bad), &bad, 3),
+            Some(NumericError::NonFiniteResidual { epoch: 3 })
+        );
+        assert_eq!(
+            probe_step(f64::INFINITY, None, &ok, 4),
+            Some(NumericError::TowerOverflow { epoch: 4 })
+        );
+        assert_eq!(
+            probe_step(1.0, Some(&bad), &bad, 5),
+            Some(NumericError::NonFiniteGradient { epoch: 5 })
+        );
+        assert_eq!(
+            probe_step(1.0, None, &bad, 6),
+            Some(NumericError::NonFiniteTheta { epoch: 6 })
+        );
+    }
+
+    #[test]
+    fn numeric_error_reports_kind_and_epoch() {
+        let e = NumericError::TowerOverflow { epoch: 9 };
+        assert_eq!(e.kind(), "tower-overflow");
+        assert_eq!(e.epoch(), 9);
+        assert_eq!(format!("{e}"), "numeric tower-overflow at epoch 9");
+    }
+
+    #[test]
+    fn fault_plan_parses_and_fires_once() {
+        let mut plan = FaultPlan::parse("nan-loss@5; kill@20 ;nan-grad@5").unwrap();
+        assert!(!plan.take(FaultKind::NanLoss, 4));
+        assert!(plan.take(FaultKind::NanLoss, 5));
+        assert!(!plan.take(FaultKind::NanLoss, 5), "faults are consumed");
+        assert!(plan.take(FaultKind::NanGrad, 5));
+        assert!(plan.take(FaultKind::Kill, 20));
+        assert!(plan.is_empty());
+
+        assert!(FaultPlan::parse("nan-loss").is_err());
+        assert!(FaultPlan::parse("explode@3").is_err());
+        assert!(FaultPlan::parse("kill@x").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+}

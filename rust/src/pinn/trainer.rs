@@ -15,7 +15,8 @@ use super::burgers::BurgersProfile;
 use super::loss::{BurgersLossSpec, DerivEngine, PinnObjective};
 use super::multi::{MultiObjective, MultiPinnSpec};
 use super::parallel::ParallelObjective;
-use crate::nn::Mlp;
+use super::resilience::{probe_step, FaultKind, NumericError, ResilienceConfig, RunHealth};
+use crate::nn::{AdamResume, Checkpoint, LbfgsResume, Mlp, ResumePhase, ResumeState};
 use crate::ntp::{ActivationKind, EstimatorMode, ParallelPolicy};
 use crate::opt::{Adam, Lbfgs, LbfgsStatus, Objective};
 use crate::pde::PdeProblem;
@@ -107,6 +108,8 @@ pub struct TrainResult {
     pub engine: DerivEngine,
     /// The Burgers profile trained against.
     pub profile: BurgersProfile,
+    /// Numeric-health record (guards, recovery, interruption).
+    pub health: RunHealth,
 }
 
 impl TrainResult {
@@ -142,6 +145,14 @@ pub trait TrainableObjective: Objective {
     fn init_theta(&self, mlp: &Mlp) -> Tensor;
     /// `(n_forward, n_backward)` evaluation counts so far.
     fn eval_counts(&self) -> (u64, u64);
+    /// Estimator draw counter for resume checkpoints (always 0 for
+    /// exact objectives).
+    fn estimator_step(&self) -> u64 {
+        0
+    }
+    /// Pin the estimator draw counter without advancing it (resume
+    /// hook; no-op for exact objectives).
+    fn restore_estimator_step(&mut self, _step: u64) {}
 }
 
 impl TrainableObjective for PinnObjective {
@@ -189,6 +200,12 @@ impl TrainableObjective for MultiObjective {
     fn eval_counts(&self) -> (u64, u64) {
         (self.n_forward, self.n_backward)
     }
+    fn estimator_step(&self) -> u64 {
+        self.stde_step()
+    }
+    fn restore_estimator_step(&mut self, step: u64) {
+        MultiObjective::restore_estimator_step(self, step);
+    }
 }
 
 /// Train a PINN for the k-th Burgers profile with the chosen derivative
@@ -199,11 +216,29 @@ pub fn train_burgers(
     cfg: &TrainConfig,
     engine: DerivEngine,
 ) -> TrainResult {
+    train_burgers_resilient(spec, cfg, engine, &ResilienceConfig::default(), None)
+}
+
+/// [`train_burgers`] with an explicit [`ResilienceConfig`] (checkpoint
+/// cadence, guards, recovery, fault injection) and an optional
+/// [`ResumeState`] from a previous run's checkpoint.
+///
+/// Resuming requires the **same** `spec`/`cfg`/`engine` as the original
+/// run: the collocation cloud and network init are re-derived from
+/// `cfg.seed`, and only then is a restart bitwise identical to the
+/// uninterrupted trajectory (`rust/tests/training_resilience.rs`).
+pub fn train_burgers_resilient(
+    spec: BurgersLossSpec,
+    cfg: &TrainConfig,
+    engine: DerivEngine,
+    res: &ResilienceConfig,
+    resume: Option<&ResumeState>,
+) -> TrainResult {
     let profile = spec.profile;
     let mut rng = Prng::seeded(cfg.seed);
     let mlp = Mlp::uniform_with(1, cfg.width, cfg.depth, 1, cfg.activation, &mut rng);
     let obj = PinnObjective::build(spec, &mlp, engine, &mut rng);
-    run_schedule(obj, &mlp, cfg, engine, profile)
+    run_schedule(obj, &mlp, cfg, engine, profile, res, resume)
 }
 
 /// Train a PINN on the **sharded data-parallel objective**: the
@@ -239,11 +274,25 @@ pub fn train_burgers_parallel(
     cfg: &TrainConfig,
     engine: DerivEngine,
 ) -> TrainResult {
+    train_burgers_parallel_resilient(spec, cfg, engine, &ResilienceConfig::default(), None)
+}
+
+/// [`train_burgers_parallel`] with an explicit [`ResilienceConfig`] and
+/// an optional [`ResumeState`] — same resume contract as
+/// [`train_burgers_resilient`], and the restart stays bitwise identical
+/// for **every** `cfg.policy` (the shard layout is policy-invariant).
+pub fn train_burgers_parallel_resilient(
+    spec: BurgersLossSpec,
+    cfg: &TrainConfig,
+    engine: DerivEngine,
+    res: &ResilienceConfig,
+    resume: Option<&ResumeState>,
+) -> TrainResult {
     let profile = spec.profile;
     let mut rng = Prng::seeded(cfg.seed);
     let mlp = Mlp::uniform_with(1, cfg.width, cfg.depth, 1, cfg.activation, &mut rng);
     let obj = ParallelObjective::build(spec, &mlp, engine, cfg.policy, cfg.chunk, &mut rng);
-    run_schedule(obj, &mlp, cfg, engine, profile)
+    run_schedule(obj, &mlp, cfg, engine, profile, res, resume)
 }
 
 /// Result of a multi-dimensional PDE training run (see [`train_pde`]).
@@ -266,6 +315,8 @@ pub struct PdeTrainResult {
     pub estimator: EstimatorMode,
     /// The library problem trained against.
     pub problem: PdeProblem,
+    /// Numeric-health record (guards, recovery, interruption).
+    pub health: RunHealth,
 }
 
 impl PdeTrainResult {
@@ -330,6 +381,22 @@ pub fn train_pde_with_estimator(
     engine: DerivEngine,
     estimator: EstimatorMode,
 ) -> PdeTrainResult {
+    train_pde_resilient(spec, cfg, engine, estimator, &ResilienceConfig::default(), None)
+}
+
+/// [`train_pde_with_estimator`] with an explicit [`ResilienceConfig`]
+/// and an optional [`ResumeState`]. STDE runs serialize their draw
+/// counter in the checkpoint and re-pin it on resume, so even the
+/// stochastic trajectories restart bitwise identical to the
+/// uninterrupted run.
+pub fn train_pde_resilient(
+    spec: MultiPinnSpec,
+    cfg: &TrainConfig,
+    engine: DerivEngine,
+    estimator: EstimatorMode,
+    res: &ResilienceConfig,
+    resume: Option<&ResumeState>,
+) -> PdeTrainResult {
     let problem = spec.problem;
     let mut rng = Prng::seeded(cfg.seed);
     let mlp = Mlp::uniform_with(
@@ -343,7 +410,7 @@ pub fn train_pde_with_estimator(
     let obj = MultiObjective::build_with_estimator(
         spec, &mlp, engine, cfg.policy, cfg.chunk, &mut rng, estimator,
     );
-    let mut run = schedule(obj, &mlp, cfg);
+    let mut run = schedule_resilient(obj, &mlp, cfg, res, resume);
     let final_loss = if run.last_loss.is_finite() {
         run.last_loss
     } else {
@@ -360,6 +427,7 @@ pub fn train_pde_with_estimator(
         engine,
         estimator,
         problem,
+        health: run.health,
     }
 }
 
@@ -371,6 +439,7 @@ struct ScheduleRun<O> {
     logs: Vec<EpochLog>,
     seconds: f64,
     last_loss: f64,
+    health: RunHealth,
 }
 
 /// Wrap a finished schedule into the Burgers [`TrainResult`].
@@ -380,36 +449,181 @@ fn run_schedule<O: TrainableObjective>(
     cfg: &TrainConfig,
     engine: DerivEngine,
     profile: BurgersProfile,
+    res: &ResilienceConfig,
+    resume: Option<&ResumeState>,
 ) -> TrainResult {
-    let mut run = schedule(obj, mlp, cfg);
+    let baseline = obj.eval_counts();
+    let run = schedule_resilient(obj, mlp, cfg, res, resume);
+    finish_burgers_run(run, engine, profile, baseline).0
+}
+
+/// Package a finished schedule as a [`TrainResult`] and hand the
+/// objective back for reuse. `baseline` is the objective's evaluation
+/// counters on entry, so reused objectives report **per-run** counts.
+fn finish_burgers_run<O: TrainableObjective>(
+    mut run: ScheduleRun<O>,
+    engine: DerivEngine,
+    profile: BurgersProfile,
+    baseline: (u64, u64),
+) -> (TrainResult, O) {
     let final_loss = if run.last_loss.is_finite() {
         run.last_loss
     } else {
         run.obj.value(&run.theta)
     };
     let (n_forward, n_backward) = run.obj.eval_counts();
-    TrainResult {
+    let result = TrainResult {
         mlp: run.obj.network_at(&run.theta),
         lambda: run.obj.lambda_at(&run.theta),
         final_loss,
         logs: run.logs,
         seconds: run.seconds,
-        n_forward,
-        n_backward,
+        n_forward: n_forward - baseline.0,
+        n_backward: n_backward - baseline.1,
         engine,
         profile,
+        health: run.health,
+    };
+    (result, run.obj)
+}
+
+/// Drive the schedule on an **already built** sharded objective and
+/// return it alongside the result, so training sweeps reuse one shard
+/// pool (the per-chunk compiled tapes — the dominant per-run build
+/// cost) across runs instead of rebuilding it per run
+/// ([`crate::bench::profiles::run_sweep`]; the ROADMAP carried sweep
+/// debt). `mlp` must be the network the objective was built from. The
+/// objective's policy is aligned to `cfg.policy` — a pure scheduling
+/// change — and the trajectory is bitwise identical to
+/// [`train_burgers_parallel_resilient`] on a fresh build.
+pub fn train_burgers_sharded(
+    mut obj: ParallelObjective,
+    mlp: &Mlp,
+    cfg: &TrainConfig,
+    res: &ResilienceConfig,
+    resume: Option<&ResumeState>,
+) -> (TrainResult, ParallelObjective) {
+    obj.set_policy(cfg.policy);
+    let profile = obj.spec.profile;
+    let engine = obj.engine;
+    let baseline = obj.eval_counts();
+    let run = schedule_resilient(obj, mlp, cfg, res, resume);
+    finish_burgers_run(run, engine, profile, baseline)
+}
+
+/// Capture the full mid-trajectory state as a [`ResumeState`] (the
+/// in-memory rollback snapshot, and the payload of every on-disk
+/// checkpoint).
+#[allow(clippy::too_many_arguments)]
+fn snapshot_of<O: TrainableObjective>(
+    obj: &O,
+    theta: &Tensor,
+    phase: ResumePhase,
+    epoch: usize,
+    adam: Option<&Adam>,
+    lbfgs: Option<&Lbfgs>,
+    retries: u64,
+    ls_failures: u64,
+    lr_scale: f64,
+) -> ResumeState {
+    let adam = adam.map(|a| {
+        let (m, v, t) = a.export_state();
+        AdamResume { m, v, t }
+    });
+    let lbfgs = lbfgs.map(|l| {
+        let (s, y, last_grad) = l.export_state();
+        LbfgsResume { s, y, last_grad }
+    });
+    ResumeState {
+        phase,
+        epoch,
+        theta: theta.data().to_vec(),
+        adam,
+        lbfgs,
+        stde_step: obj.estimator_step(),
+        retries,
+        ls_failures,
+        lr_scale,
+    }
+}
+
+/// Atomically persist a snapshot as a checkpoint (network weights from
+/// the snapshot's θ plus the full resume state). Write failures degrade
+/// durability, not the trajectory: the first one is recorded in the
+/// health report and the run continues.
+fn write_checkpoint<O: TrainableObjective>(
+    obj: &O,
+    snap: &ResumeState,
+    res: &ResilienceConfig,
+    health: &mut RunHealth,
+) {
+    let Some(path) = &res.checkpoint_path else {
+        return;
+    };
+    let theta = Tensor::from_vec(snap.theta.clone(), &[snap.theta.len()]);
+    let mut ck = Checkpoint::from_mlp(&obj.network_at(&theta));
+    ck.resume = Some(snap.clone());
+    if let Err(e) = ck.save(path) {
+        if health.checkpoint_error.is_none() {
+            health.checkpoint_error = Some(format!("{e:#}"));
+        }
     }
 }
 
 /// The shared two-phase schedule: Adam exploration, then L-BFGS with a
 /// forward-only backtracking line search. Both optimizers run with
 /// `cfg.policy` so their reductions/updates stay thread-count-invariant.
-fn schedule<O: TrainableObjective>(mut obj: O, mlp: &Mlp, cfg: &TrainConfig) -> ScheduleRun<O> {
-    let mut theta = obj.init_theta(mlp);
+///
+/// This is the **resilient** schedule:
+///
+/// - every step's loss/gradient/θ are probed with the SIMD
+///   [`crate::simd::Isa::all_finite`] reduction (read-only — healthy
+///   trajectories are bit-for-bit unaffected);
+/// - on a tripped probe it rolls back to the last in-memory snapshot and
+///   applies the deterministic intervention schedule (Adam learning rate
+///   scaled by `lr_backoff^retries`; L-BFGS curvature memory dropped),
+///   aborting cleanly after `max_retries` with the last-good checkpoint
+///   written;
+/// - snapshots are serialized to `checkpoint_path` on the configured
+///   cadence, and a `resume` state restarts the trajectory **bitwise
+///   identical** to never having stopped, for any thread count and
+///   either estimator mode;
+/// - the [`super::resilience::FaultPlan`] hook injects NaNs or a
+///   simulated crash at configured epochs so every one of these paths is
+///   testable.
+fn schedule_resilient<O: TrainableObjective>(
+    mut obj: O,
+    mlp: &Mlp,
+    cfg: &TrainConfig,
+    res: &ResilienceConfig,
+    resume: Option<&ResumeState>,
+) -> ScheduleRun<O> {
+    let mut theta = match resume {
+        Some(r) => Tensor::from_vec(r.theta.clone(), &[r.theta.len()]),
+        None => obj.init_theta(mlp),
+    };
+    assert_eq!(
+        theta.numel(),
+        obj.dim(),
+        "resume state does not match the objective dimension"
+    );
+
+    let mut fault = res.fault.clone();
+    let mut health = RunHealth::default();
+    let mut retries = resume.map_or(0, |r| r.retries);
+    let mut ls_failures = resume.map_or(0, |r| r.ls_failures);
+    let mut lr_scale = resume.map_or(1.0, |r| r.lr_scale);
+    if let Some(r) = resume {
+        obj.restore_estimator_step(r.stde_step);
+    }
+    health.retries = retries;
+
+    let (start_phase, start_epoch) =
+        resume.map_or((ResumePhase::Adam, 0), |r| (r.phase, r.epoch));
 
     let mut logs = Vec::new();
     let start = Instant::now();
-    let mut log = |obj: &O, epoch, phase, loss, theta: &Tensor, force: bool| {
+    let log = |logs: &mut Vec<EpochLog>, obj: &O, epoch, phase, loss, theta: &Tensor, force: bool| {
         if force || epoch % cfg.log_every == 0 {
             logs.push(EpochLog {
                 epoch,
@@ -420,35 +634,199 @@ fn schedule<O: TrainableObjective>(mut obj: O, mlp: &Mlp, cfg: &TrainConfig) -> 
             });
         }
     };
+    let restore_theta = |snap: &ResumeState| Tensor::from_vec(snap.theta.clone(), &[snap.theta.len()]);
+
+    let mut last_loss = f64::INFINITY;
 
     // Phase 1: Adam.
-    let mut adam = Adam::new(obj.dim(), cfg.adam_lr).with_policy(cfg.policy);
-    for epoch in 0..cfg.adam_epochs {
-        let loss = adam.step(&mut obj, &mut theta);
-        log(&obj, epoch, "adam", loss, &theta, epoch + 1 == cfg.adam_epochs);
+    if start_phase == ResumePhase::Adam {
+        let mut adam = Adam::new(obj.dim(), cfg.adam_lr * lr_scale).with_policy(cfg.policy);
+        if let Some(a) = resume.and_then(|r| r.adam.as_ref()) {
+            adam.restore_state(&a.m, &a.v, a.t);
+        }
+        let mut snap = snapshot_of(
+            &obj, &theta, ResumePhase::Adam, start_epoch, Some(&adam), None,
+            retries, ls_failures, lr_scale,
+        );
+        let mut epoch = start_epoch;
+        while epoch < cfg.adam_epochs {
+            if fault.take(FaultKind::Kill, epoch) {
+                // Simulated crash: stop without writing anything further.
+                health.interrupted = true;
+                health.retries = retries;
+                let seconds = start.elapsed().as_secs_f64();
+                return ScheduleRun { obj, theta, logs, seconds, last_loss: f64::NAN, health };
+            }
+            let (mut loss, mut grad) = obj.value_grad(&theta);
+            if fault.take(FaultKind::NanLoss, epoch) {
+                loss = f64::NAN;
+            }
+            if fault.take(FaultKind::NanGrad, epoch) {
+                grad.data_mut()[0] = f64::NAN;
+            }
+            adam.apply(&mut theta, &grad);
+            if res.guard {
+                if let Some(err) = probe_step(loss, Some(grad.data()), theta.data(), epoch) {
+                    retries += 1;
+                    health.retries = retries;
+                    if retries > res.max_retries {
+                        // Clean abort at the last-good state.
+                        theta = restore_theta(&snap);
+                        obj.restore_estimator_step(snap.stde_step);
+                        write_checkpoint(&obj, &snap, res, &mut health);
+                        health.aborted = Some(err);
+                        let seconds = start.elapsed().as_secs_f64();
+                        return ScheduleRun {
+                            obj, theta, logs, seconds, last_loss: f64::NAN, health,
+                        };
+                    }
+                    // Deterministic intervention: roll back to the
+                    // snapshot and back the learning rate off — a pure
+                    // function of (snapshot, retries), so recovery is as
+                    // reproducible as the trajectory itself.
+                    lr_scale = res.lr_backoff.powi(retries as i32);
+                    theta = restore_theta(&snap);
+                    match &snap.adam {
+                        Some(a) => adam.restore_state(&a.m, &a.v, a.t),
+                        None => adam.reset(),
+                    }
+                    adam.lr = cfg.adam_lr * lr_scale;
+                    obj.restore_estimator_step(snap.stde_step);
+                    epoch = snap.epoch;
+                    snap.retries = retries;
+                    snap.lr_scale = lr_scale;
+                    continue;
+                }
+            }
+            log(&mut logs, &obj, epoch, "adam", loss, &theta, epoch + 1 == cfg.adam_epochs);
+            epoch += 1;
+            let take_snap = res.snapshot_every > 0 && epoch % res.snapshot_every == 0;
+            let take_ck = res.checkpoint_path.is_some()
+                && res.checkpoint_every > 0
+                && epoch % res.checkpoint_every == 0;
+            if take_snap || take_ck {
+                snap = snapshot_of(
+                    &obj, &theta, ResumePhase::Adam, epoch, Some(&adam), None,
+                    retries, ls_failures, lr_scale,
+                );
+                if take_ck {
+                    write_checkpoint(&obj, &snap, res, &mut health);
+                }
+            }
+        }
     }
 
     // Phase 2: L-BFGS with (forward-only) backtracking line search.
     let mut lbfgs = Lbfgs::new(obj.dim()).with_policy(cfg.policy);
-    let mut last_loss = f64::INFINITY;
-    for epoch in 0..cfg.lbfgs_epochs {
-        let (loss, status) = lbfgs.step(&mut obj, &mut theta);
+    let lb_start = if start_phase == ResumePhase::Lbfgs {
+        if let Some(l) = resume.and_then(|r| r.lbfgs.as_ref()) {
+            lbfgs.restore_state(&l.s, &l.y, l.last_grad.as_deref());
+        }
+        start_epoch
+    } else {
+        0
+    };
+    let mut snap = snapshot_of(
+        &obj, &theta, ResumePhase::Lbfgs, lb_start, None, Some(&lbfgs),
+        retries, ls_failures, lr_scale,
+    );
+    let mut epoch = lb_start;
+    while epoch < cfg.lbfgs_epochs {
+        let global = cfg.adam_epochs + epoch;
+        if fault.take(FaultKind::Kill, global) {
+            health.interrupted = true;
+            health.retries = retries;
+            let seconds = start.elapsed().as_secs_f64();
+            return ScheduleRun { obj, theta, logs, seconds, last_loss: f64::NAN, health };
+        }
+        let (mut loss, status) = lbfgs.step(&mut obj, &mut theta);
+        if fault.take(FaultKind::NanLoss, global) {
+            loss = f64::NAN;
+        }
+        if fault.take(FaultKind::NanGrad, global) {
+            // The gradient is internal to the L-BFGS step; poison θ —
+            // the same downstream effect a corrupted update would have.
+            theta.data_mut()[0] = f64::NAN;
+        }
+        if res.guard {
+            let mut err =
+                probe_step(loss, lbfgs.last_grad().map(|g| g.data()), theta.data(), global);
+            if err.is_none() {
+                if status == LbfgsStatus::LineSearchFailed {
+                    // One failure is routine (history is dropped and the
+                    // next step restarts from steepest descent); two in a
+                    // row means the run is stalled.
+                    ls_failures += 1;
+                    if ls_failures >= 2 {
+                        err = Some(NumericError::LineSearchFailed { epoch: global });
+                    }
+                } else {
+                    ls_failures = 0;
+                }
+            }
+            if let Some(e) = err {
+                retries += 1;
+                health.retries = retries;
+                if retries > res.max_retries {
+                    theta = restore_theta(&snap);
+                    obj.restore_estimator_step(snap.stde_step);
+                    write_checkpoint(&obj, &snap, res, &mut health);
+                    health.aborted = Some(e);
+                    let seconds = start.elapsed().as_secs_f64();
+                    return ScheduleRun { obj, theta, logs, seconds, last_loss: f64::NAN, health };
+                }
+                // Deterministic intervention: roll back and drop the
+                // curvature memory (a trust-region-style restart from
+                // steepest descent).
+                theta = restore_theta(&snap);
+                lbfgs.reset();
+                obj.restore_estimator_step(snap.stde_step);
+                lr_scale = res.lr_backoff.powi(retries as i32);
+                ls_failures = 0;
+                epoch = snap.epoch;
+                snap.retries = retries;
+                snap.lr_scale = lr_scale;
+                snap.ls_failures = 0;
+                continue;
+            }
+        }
         last_loss = loss;
         log(
-            &obj,
-            cfg.adam_epochs + epoch,
-            "lbfgs",
-            loss,
-            &theta,
+            &mut logs, &obj, global, "lbfgs", loss, &theta,
             epoch + 1 == cfg.lbfgs_epochs,
         );
+        epoch += 1;
         if status == LbfgsStatus::Converged {
             break;
         }
+        let take_snap = res.snapshot_every > 0 && epoch % res.snapshot_every == 0;
+        let take_ck = res.checkpoint_path.is_some()
+            && res.checkpoint_every > 0
+            && epoch % res.checkpoint_every == 0;
+        if take_snap || take_ck {
+            snap = snapshot_of(
+                &obj, &theta, ResumePhase::Lbfgs, epoch, None, Some(&lbfgs),
+                retries, ls_failures, lr_scale,
+            );
+            if take_ck {
+                write_checkpoint(&obj, &snap, res, &mut health);
+            }
+        }
     }
 
+    // Final checkpoint: the completed trajectory (resuming it runs zero
+    // further epochs and returns the identical θ).
+    if res.checkpoint_path.is_some() {
+        let fin = snapshot_of(
+            &obj, &theta, ResumePhase::Lbfgs, epoch.max(cfg.lbfgs_epochs), None, Some(&lbfgs),
+            retries, ls_failures, lr_scale,
+        );
+        write_checkpoint(&obj, &fin, res, &mut health);
+    }
+
+    health.retries = retries;
     let seconds = start.elapsed().as_secs_f64();
-    ScheduleRun { obj, theta, logs, seconds, last_loss }
+    ScheduleRun { obj, theta, logs, seconds, last_loss, health }
 }
 
 #[cfg(test)]

@@ -417,6 +417,23 @@ impl Isa {
             Isa::Neon => unsafe { neon::sgd_block(v, th, g, lr, momentum) },
         }
     }
+
+    /// `true` iff every element is finite (no NaN, no ±∞) — the numeric
+    /// health probe scanned over losses, gradient blocks and activation
+    /// tower tiles each training step. A boolean predicate has no
+    /// rounding at all, so the scalar≡vector contract holds trivially;
+    /// the vector bodies test `|x| < +∞` per lane (NaN compares false)
+    /// and may short-circuit per block, which cannot change the answer.
+    #[inline]
+    pub fn all_finite(self, xs: &[f64]) -> bool {
+        match self {
+            Isa::Scalar => scalar::all_finite(xs),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => unsafe { avx2::all_finite(xs) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { neon::all_finite(xs) },
+        }
+    }
 }
 
 use crate::tensor::linalg::GEMM_NR;
@@ -580,6 +597,10 @@ mod scalar {
             v[i] = momentum * v[i] - lr * g[i];
             th[i] += v[i];
         }
+    }
+
+    pub fn all_finite(xs: &[f64]) -> bool {
+        xs.iter().all(|x| x.is_finite())
     }
 }
 
@@ -991,6 +1012,33 @@ mod avx2 {
             i += 1;
         }
     }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn all_finite(xs: &[f64]) -> bool {
+        let n = xs.len();
+        let xp = xs.as_ptr();
+        // |x| < +inf per lane: clearing the sign bit maps ±inf onto +inf
+        // and NaN stays NaN, and the ordered-quiet compare is false for
+        // both — exactly `f64::is_finite`.
+        let abs_mask = _mm256_set1_pd(f64::from_bits(0x7fff_ffff_ffff_ffff));
+        let inf = _mm256_set1_pd(f64::INFINITY);
+        let mut i = 0;
+        while i + 4 <= n {
+            let a = _mm256_and_pd(_mm256_loadu_pd(xp.add(i)), abs_mask);
+            let ok = _mm256_cmp_pd::<_CMP_LT_OQ>(a, inf);
+            if _mm256_movemask_pd(ok) != 0xF {
+                return false;
+            }
+            i += 4;
+        }
+        while i < n {
+            if !(*xp.add(i)).is_finite() {
+                return false;
+            }
+            i += 1;
+        }
+        true
+    }
 }
 
 /// NEON bodies (aarch64 — NEON is baseline, so detection always
@@ -1393,6 +1441,30 @@ mod neon {
             i += 1;
         }
     }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn all_finite(xs: &[f64]) -> bool {
+        let n = xs.len();
+        let xp = xs.as_ptr();
+        // |x| < +inf per lane (NaN compares false) — exactly
+        // `f64::is_finite`.
+        let inf = vdupq_n_f64(f64::INFINITY);
+        let mut i = 0;
+        while i + 2 <= n {
+            let ok = vcltq_f64(vabsq_f64(vld1q_f64(xp.add(i))), inf);
+            if vgetq_lane_u64::<0>(ok) == 0 || vgetq_lane_u64::<1>(ok) == 0 {
+                return false;
+            }
+            i += 2;
+        }
+        while i < n {
+            if !(*xp.add(i)).is_finite() {
+                return false;
+            }
+            i += 1;
+        }
+        true
+    }
 }
 
 #[cfg(test)]
@@ -1471,6 +1543,39 @@ mod tests {
             Isa::Scalar.horner_into(&a, &coeffs, &mut hs);
             v.horner_into(&a, &coeffs, &mut hv);
             assert_eq!(hs, hv, "horner len={len}");
+        }
+    }
+
+    /// `all_finite` agrees with the scalar specification for every ISA:
+    /// clean blocks, and each poison kind (NaN, ±∞) planted at positions
+    /// covering every vector lane and the scalar tail.
+    #[test]
+    fn all_finite_matches_scalar_for_every_poison_position() {
+        let isas: Vec<Isa> = std::iter::once(Isa::Scalar).chain(Isa::vector()).collect();
+        let mut rng = Prng::seeded(0xF1A7);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 63, 64, 130] {
+            let clean = rng.normal_vec(len, 0.0, 1e3);
+            for &isa in &isas {
+                assert!(isa.all_finite(&clean), "{} len={len} clean", isa.name());
+            }
+            for poison in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+                for pos in 0..len {
+                    let mut xs = clean.clone();
+                    xs[pos] = poison;
+                    for &isa in &isas {
+                        assert!(
+                            !isa.all_finite(&xs),
+                            "{} len={len} pos={pos} poison={poison}",
+                            isa.name()
+                        );
+                    }
+                }
+            }
+        }
+        // Subnormals, zeros and extreme-but-finite magnitudes are finite.
+        let edge = [0.0, -0.0, f64::MIN_POSITIVE / 2.0, f64::MAX, f64::MIN];
+        for &isa in &isas {
+            assert!(isa.all_finite(&edge), "{} edge values", isa.name());
         }
     }
 }

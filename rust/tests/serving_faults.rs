@@ -264,6 +264,74 @@ fn shed_and_retry_roundtrip() {
     service.shutdown();
 }
 
+/// A scripted server for the client-side shed-retry tests: answers the
+/// first `sheds` requests with `{"error":"overloaded","retry_ms":…}`,
+/// then (optionally) a real channels reply, and returns every request
+/// payload it saw so the test can assert resubmissions are identical.
+fn scripted_shed_server(
+    sheds: usize,
+    then_serve: bool,
+) -> (String, std::thread::JoinHandle<Vec<String>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        let total = sheds + usize::from(then_serve);
+        let mut seen = Vec::new();
+        for i in 0..total {
+            let msg = match protocol::read_message(&mut reader).unwrap() {
+                protocol::Incoming::Frame(s) | protocol::Incoming::Line(s) => s,
+                protocol::Incoming::Eof => panic!("client hung up after {i} requests"),
+            };
+            seen.push(msg);
+            let reply = if i < sheds {
+                protocol::encode_shed(2)
+            } else {
+                protocol::encode_channels(&[vec![1.0], vec![2.0]])
+            };
+            protocol::write_frame(&mut writer, &reply).unwrap();
+            writer.flush().unwrap();
+        }
+        seen
+    });
+    (addr, server)
+}
+
+/// `TcpClient::eval_with_retry` absorbs shed replies per the contract:
+/// deterministic `retry_ms · attempt` back-off, identical resubmission,
+/// counted retries, and the eventual real answer.
+#[test]
+fn eval_with_retry_honors_the_shed_contract() {
+    let (addr, server) = scripted_shed_server(3, true);
+    let mut client = timed_client(&addr);
+    let t0 = Instant::now();
+    let channels = client.eval_with_retry(&[0.25], None, 8).unwrap();
+    assert_eq!(channels, vec![vec![1.0], vec![2.0]]);
+    assert_eq!(client.shed_retries(), 3);
+    // Jitterless back-off: 2·1 + 2·2 + 2·3 = 12 ms before the answer.
+    assert!(t0.elapsed() >= Duration::from_millis(12));
+    let seen = server.join().unwrap();
+    assert_eq!(seen.len(), 4);
+    assert!(
+        seen.windows(2).all(|w| w[0] == w[1]),
+        "resubmissions must be byte-identical: {seen:?}"
+    );
+}
+
+/// Bounded retries: once `max_retries` sheds are absorbed, the next
+/// shed surfaces as the error instead of looping forever.
+#[test]
+fn eval_with_retry_gives_up_after_max_retries() {
+    let (addr, server) = scripted_shed_server(3, false);
+    let mut client = timed_client(&addr);
+    let err = client.eval_with_retry(&[0.5], None, 2).unwrap_err();
+    assert!(format!("{err:#}").contains("overloaded"), "got: {err:#}");
+    assert_eq!(client.shed_retries(), 2);
+    assert_eq!(server.join().unwrap().len(), 3);
+}
+
 /// The satellite-fix regression: shutting down with a window of
 /// pipelined requests in flight answers every one of them — drained
 /// results or clean shutdown errors, never silence or a hang.

@@ -213,6 +213,35 @@ fn activation_towers_are_bitwise_isa_invariant() {
     }
 }
 
+/// The numeric-health probe `all_finite` (the resilience subsystem's
+/// per-step scan over loss/gradient/tower tiles) is ISA-invariant: a
+/// pure predicate has no roundings, but the vector bodies still have to
+/// classify every lane position and the scalar tail exactly like
+/// `f64::is_finite` — for NaN, +∞ and −∞ at every offset, at lengths
+/// straddling the 4-lane blocks.
+#[test]
+fn all_finite_is_isa_invariant() {
+    let vec_isa = vector_or_skip!();
+    let mut rng = Prng::seeded(0xF1117E);
+    for len in [1usize, 3, 4, 5, 8, 127, 1024, 1025] {
+        let clean = rng.normal_vec(len, 0.0, 1e6);
+        assert!(Isa::Scalar.all_finite(&clean), "scalar clean len={len}");
+        assert!(vec_isa.all_finite(&clean), "vector clean len={len}");
+        for poison in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            // Positions covering the first block's lanes, a mid block and
+            // the tail.
+            for pos in [0, 1, 2, 3, len / 2, len - 1] {
+                let mut xs = clean.clone();
+                xs[pos] = poison;
+                assert!(!Isa::Scalar.all_finite(&xs), "scalar len={len} pos={pos}");
+                assert!(!vec_isa.all_finite(&xs), "vector len={len} pos={pos}");
+            }
+        }
+    }
+    assert!(Isa::Scalar.all_finite(&[]));
+    assert!(vec_isa.all_finite(&[]));
+}
+
 /// Dispatch plumbing: `resolve` honors explicit requests, falls back to
 /// detection for `auto`/unknown, and the process-wide `Isa::active` is
 /// exactly `resolve` applied to the `NTANGENT_SIMD` the process was

@@ -1,0 +1,389 @@
+//! Interruption matrix for the resilient trainer: kill-and-resume must
+//! be **bitwise identical** to the uninterrupted trajectory (serial and
+//! threaded, Adam and L-BFGS phases, exact and STDE estimators),
+//! NaN-injection must trigger the deterministic recovery path for every
+//! activation, exhausted retries must abort cleanly with a valid
+//! last-good checkpoint, and the atomic checkpoint writer must survive a
+//! simulated mid-write crash.
+//!
+//! Why bitwise resume is attainable: a checkpoint's [`ResumeState`]
+//! carries everything the next optimizer step reads — θ, Adam moments,
+//! L-BFGS curvature pairs *and* the carried-over gradient, the STDE draw
+//! counter, and the recovery bookkeeping (retries / lr backoff / stall
+//! counter). Restoring it replays the identical float ops the
+//! uninterrupted run would have performed, for any thread count.
+
+use std::path::PathBuf;
+
+use ntangent::nn::{params, Checkpoint, ResumePhase};
+use ntangent::ntp::{ActivationKind, ParallelPolicy};
+use ntangent::pde::PdeProblem;
+use ntangent::pinn::{
+    train_burgers_parallel_resilient, train_pde_resilient, BurgersLossSpec, DerivEngine,
+    EstimatorMode, FaultKind, FaultPlan, MultiPinnSpec, NumericError, ResilienceConfig,
+    TrainConfig, TrainResult,
+};
+
+fn spec_with(n_res: usize, n_org: usize) -> BurgersLossSpec {
+    let mut spec = BurgersLossSpec::for_profile(1);
+    spec.n_res = n_res;
+    spec.n_org = n_org;
+    spec.x_max = 1.5;
+    spec
+}
+
+fn cfg_with(policy: ParallelPolicy, activation: ActivationKind) -> TrainConfig {
+    TrainConfig {
+        width: 8,
+        depth: 2,
+        activation,
+        adam_epochs: 12,
+        lbfgs_epochs: 8,
+        adam_lr: 2e-3,
+        seed: 5,
+        log_every: 50,
+        policy,
+        chunk: 16,
+    }
+}
+
+/// A hermetic resilience config: never reads the `NTANGENT_FAULT` hook,
+/// so the matrix cannot be perturbed from outside.
+fn quiet_res() -> ResilienceConfig {
+    ResilienceConfig {
+        fault: FaultPlan::none(),
+        ..ResilienceConfig::default()
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+fn assert_bitwise_equal(a: &TrainResult, b: &TrainResult, what: &str) {
+    assert_eq!(
+        a.final_loss.to_bits(),
+        b.final_loss.to_bits(),
+        "{what}: final loss"
+    );
+    assert_eq!(a.lambda.to_bits(), b.lambda.to_bits(), "{what}: lambda");
+    assert_eq!(
+        params::flatten(&a.mlp),
+        params::flatten(&b.mlp),
+        "{what}: trained weights"
+    );
+}
+
+/// Kill-after-step-k, then resume from the on-disk checkpoint: the
+/// stitched trajectory is bitwise identical to never having stopped —
+/// serial and 4-thread, with the kill landing in the Adam phase
+/// (mid-moment-state) and in the L-BFGS phase (mid-curvature-history,
+/// with a carried-over gradient in flight).
+#[test]
+fn kill_and_resume_matches_the_uninterrupted_run_bitwise() {
+    // (policy, global kill epoch, checkpoint cadence, tag). Global epochs
+    // 0..12 are Adam, 12..20 L-BFGS.
+    let matrix: [(ParallelPolicy, usize, usize, &str); 4] = [
+        (ParallelPolicy::Serial, 7, 3, "serial-adam"),
+        (ParallelPolicy::Fixed(4), 7, 3, "fixed4-adam"),
+        (ParallelPolicy::Serial, 17, 2, "serial-lbfgs"),
+        (ParallelPolicy::Fixed(4), 17, 2, "fixed4-lbfgs"),
+    ];
+    for (policy, kill_at, every, tag) in matrix {
+        let cfg = cfg_with(policy, ActivationKind::Tanh);
+        let baseline = train_burgers_parallel_resilient(
+            spec_with(48, 12),
+            &cfg,
+            DerivEngine::Ntp,
+            &quiet_res(),
+            None,
+        );
+        assert!(!baseline.health.interrupted && baseline.health.aborted.is_none());
+
+        let path = tmp(&format!("ntangent_resilience_kill_{tag}.json"));
+        let interrupted_res = ResilienceConfig {
+            checkpoint_path: Some(path.clone()),
+            checkpoint_every: every,
+            fault: FaultPlan::new(&[(FaultKind::Kill, kill_at)]),
+            ..ResilienceConfig::default()
+        };
+        let interrupted = train_burgers_parallel_resilient(
+            spec_with(48, 12),
+            &cfg,
+            DerivEngine::Ntp,
+            &interrupted_res,
+            None,
+        );
+        assert!(interrupted.health.interrupted, "{tag}: kill must interrupt");
+        assert!(interrupted.health.checkpoint_error.is_none());
+
+        let ck = Checkpoint::load(&path).expect("last-good checkpoint must load");
+        let state = ck.resume.expect("mid-run checkpoint carries resume state");
+        let expect_phase = if kill_at < cfg.adam_epochs {
+            ResumePhase::Adam
+        } else {
+            ResumePhase::Lbfgs
+        };
+        assert_eq!(state.phase, expect_phase, "{tag}: checkpoint phase");
+        assert!(
+            state.epoch > 0 && state.epoch % every == 0,
+            "{tag}: checkpoint must sit on the cadence, got epoch {}",
+            state.epoch
+        );
+        if expect_phase == ResumePhase::Lbfgs {
+            let lb = state.lbfgs.as_ref().expect("L-BFGS snapshot state");
+            assert!(
+                lb.last_grad.is_some(),
+                "{tag}: the carried-over gradient must be serialized"
+            );
+        }
+
+        let resume_res = ResilienceConfig {
+            checkpoint_path: Some(path.clone()),
+            checkpoint_every: every,
+            fault: FaultPlan::none(),
+            ..ResilienceConfig::default()
+        };
+        let resumed = train_burgers_parallel_resilient(
+            spec_with(48, 12),
+            &cfg,
+            DerivEngine::Ntp,
+            &resume_res,
+            Some(&state),
+        );
+        assert_bitwise_equal(&baseline, &resumed, tag);
+        assert_eq!(
+            resumed.health.retries, baseline.health.retries,
+            "{tag}: recovery bookkeeping must survive the resume"
+        );
+
+        // The resumed run's final checkpoint marks the completed
+        // trajectory; resuming *that* runs zero further epochs and
+        // returns the identical θ.
+        let done = Checkpoint::load(&path).expect("final checkpoint");
+        let done_state = done.resume.expect("final resume state");
+        assert_eq!(done_state.phase, ResumePhase::Lbfgs);
+        assert!(done_state.epoch >= cfg.lbfgs_epochs);
+        let replay = train_burgers_parallel_resilient(
+            spec_with(48, 12),
+            &cfg,
+            DerivEngine::Ntp,
+            &quiet_res(),
+            Some(&done_state),
+        );
+        assert_bitwise_equal(&baseline, &replay, tag);
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// The stochastic estimator path: a kill-and-resume STDE run rebuilds
+/// its shards at the serialized draw counter and stays bitwise identical
+/// to the uninterrupted run — the per-step operator resampling is keyed
+/// off restored state, not wall-clock history.
+#[test]
+fn stde_kill_and_resume_matches_the_uninterrupted_run_bitwise() {
+    let stde = EstimatorMode::Stde {
+        seed: 11,
+        samples: 2,
+        antithetic: false,
+    };
+    let mut spec = MultiPinnSpec::for_problem(PdeProblem::Poisson10d);
+    spec.n_interior = 24;
+    spec.n_boundary = 12;
+    // (policy, global kill epoch, checkpoint cadence): Adam is 0..6,
+    // L-BFGS 6..10.
+    for (policy, kill_at, every) in [
+        (ParallelPolicy::Serial, 4, 2),
+        (ParallelPolicy::Fixed(4), 4, 2),
+        (ParallelPolicy::Fixed(2), 8, 1),
+    ] {
+        let cfg = TrainConfig {
+            width: 6,
+            depth: 2,
+            adam_epochs: 6,
+            lbfgs_epochs: 4,
+            adam_lr: 2e-3,
+            seed: 3,
+            log_every: 50,
+            policy,
+            chunk: 9,
+            ..TrainConfig::default()
+        };
+        let baseline = train_pde_resilient(spec, &cfg, DerivEngine::Ntp, stde, &quiet_res(), None);
+
+        let path = tmp(&format!("ntangent_resilience_stde_{kill_at}_{every}.json"));
+        let interrupted_res = ResilienceConfig {
+            checkpoint_path: Some(path.clone()),
+            checkpoint_every: every,
+            fault: FaultPlan::new(&[(FaultKind::Kill, kill_at)]),
+            ..ResilienceConfig::default()
+        };
+        let interrupted = train_pde_resilient(
+            spec,
+            &cfg,
+            DerivEngine::Ntp,
+            stde,
+            &interrupted_res,
+            None,
+        );
+        assert!(interrupted.health.interrupted);
+
+        let state = Checkpoint::load(&path)
+            .expect("STDE checkpoint must load")
+            .resume
+            .expect("resume state");
+        assert!(
+            state.stde_step > 0,
+            "an STDE snapshot must carry the draw counter"
+        );
+        let resumed = train_pde_resilient(
+            spec,
+            &cfg,
+            DerivEngine::Ntp,
+            stde,
+            &quiet_res(),
+            Some(&state),
+        );
+        assert_eq!(
+            baseline.final_loss.to_bits(),
+            resumed.final_loss.to_bits(),
+            "{policy:?} kill@{kill_at}: final loss"
+        );
+        assert_eq!(
+            params::flatten(&baseline.mlp),
+            params::flatten(&resumed.mlp),
+            "{policy:?} kill@{kill_at}: trained weights"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// A transient injected NaN (loss or gradient) trips the guard, rolls
+/// back, and completes with a finite loss for all four activation
+/// towers — and the recovered trajectory is itself deterministic: two
+/// identical faulted runs agree bitwise.
+#[test]
+fn nan_injection_recovers_deterministically_for_every_activation() {
+    for activation in ActivationKind::ALL {
+        for (kind, tag) in [(FaultKind::NanLoss, "nan-loss"), (FaultKind::NanGrad, "nan-grad")] {
+            let cfg = cfg_with(ParallelPolicy::Fixed(2), activation);
+            let run = || {
+                let res = ResilienceConfig {
+                    fault: FaultPlan::new(&[(kind, 4)]),
+                    ..ResilienceConfig::default()
+                };
+                train_burgers_parallel_resilient(
+                    spec_with(32, 8),
+                    &cfg,
+                    DerivEngine::Ntp,
+                    &res,
+                    None,
+                )
+            };
+            let a = run();
+            let name = activation.name();
+            assert_eq!(a.health.retries, 1, "{name}/{tag}: exactly one rollback");
+            assert!(a.health.aborted.is_none(), "{name}/{tag}: must recover");
+            assert!(!a.health.interrupted);
+            assert!(
+                a.final_loss.is_finite(),
+                "{name}/{tag}: recovered loss must be finite"
+            );
+            assert!(
+                params::flatten(&a.mlp).data().iter().all(|v| v.is_finite()),
+                "{name}/{tag}: recovered weights must be finite"
+            );
+            let b = run();
+            assert_bitwise_equal(&a, &b, &format!("{name}/{tag} replay"));
+        }
+    }
+}
+
+/// Persistent divergence (a NaN re-injected on every retry) exhausts the
+/// bounded retry budget and aborts cleanly: classified error, last-good
+/// θ in the result, and a valid last-good checkpoint on disk — never a
+/// panic, never a silent NaN.
+#[test]
+fn exhausted_retries_abort_cleanly_with_a_last_good_checkpoint() {
+    let path = tmp("ntangent_resilience_abort.json");
+    let cfg = cfg_with(ParallelPolicy::Serial, ActivationKind::Tanh);
+    let res = ResilienceConfig {
+        checkpoint_path: Some(path.clone()),
+        checkpoint_every: 0,
+        max_retries: 2,
+        // Faults fire once each, so re-injecting at successive epochs
+        // models a *persistent* fault the deterministic backoff cannot
+        // outrun.
+        fault: FaultPlan::new(&[
+            (FaultKind::NanLoss, 2),
+            (FaultKind::NanLoss, 3),
+            (FaultKind::NanLoss, 4),
+        ]),
+        ..ResilienceConfig::default()
+    };
+    let result =
+        train_burgers_parallel_resilient(spec_with(32, 8), &cfg, DerivEngine::Ntp, &res, None);
+    match result.health.aborted {
+        Some(NumericError::NonFiniteResidual { epoch }) => {
+            assert_eq!(epoch, 4, "the third injection exhausts the budget")
+        }
+        other => panic!("expected a non-finite-residual abort, got {other:?}"),
+    }
+    assert_eq!(result.health.retries, 3, "max_retries + 1 trips");
+    assert!(
+        result.final_loss.is_finite(),
+        "the abort result carries the last-good loss"
+    );
+    assert!(params::flatten(&result.mlp).data().iter().all(|v| v.is_finite()));
+
+    // The last-good checkpoint is on disk, valid, and resumable.
+    let ck = Checkpoint::load(&path).expect("abort must persist the last-good checkpoint");
+    ck.validate().expect("last-good checkpoint validates");
+    let state = ck.resume.expect("resume state");
+    assert_eq!(state.phase, ResumePhase::Adam);
+    assert!(state.theta.iter().all(|v| v.is_finite()));
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Atomic-write semantics under a simulated mid-write crash: a stale
+/// `*.tmp` sibling (the moment before the rename) leaves the published
+/// checkpoint untouched and loadable, while a torn *final* file fails
+/// with the `corrupted` taxonomy instead of panicking.
+#[test]
+fn atomic_checkpoint_survives_a_simulated_midwrite_crash() {
+    let path = tmp("ntangent_resilience_atomic.json");
+    let cfg = TrainConfig {
+        adam_epochs: 4,
+        lbfgs_epochs: 2,
+        ..cfg_with(ParallelPolicy::Serial, ActivationKind::Tanh)
+    };
+    let res = ResilienceConfig {
+        checkpoint_path: Some(path.clone()),
+        checkpoint_every: 2,
+        fault: FaultPlan::none(),
+        ..ResilienceConfig::default()
+    };
+    let trained =
+        train_burgers_parallel_resilient(spec_with(24, 6), &cfg, DerivEngine::Ntp, &res, None);
+    assert!(trained.health.checkpoint_error.is_none());
+    let good = Checkpoint::load(&path).expect("published checkpoint loads");
+
+    // Crash mid-save: the writer dies after producing a partial temp
+    // file, before the rename. The published file must be unaffected.
+    let tmp_sibling = path.with_file_name("ntangent_resilience_atomic.json.tmp");
+    std::fs::write(&tmp_sibling, "{\"version\":1,\"theta\":[0.1,").unwrap();
+    let reread = Checkpoint::load(&path).expect("stale temp file must not shadow the checkpoint");
+    assert_eq!(reread.to_json().dump(), good.to_json().dump());
+
+    // A torn final file (truncated rename target on a non-atomic
+    // filesystem) fails with the clean `corrupted` taxonomy.
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    let err = Checkpoint::load(&path).expect_err("torn file must be rejected");
+    assert!(
+        format!("{err:#}").contains("checkpoint corrupted"),
+        "taxonomy lost: {err:#}"
+    );
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&tmp_sibling);
+}
