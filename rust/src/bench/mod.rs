@@ -15,6 +15,7 @@
 //! | fused vs reference kernel  | `kernels::run` (needs `--features reference-oracle`) | `results/kernel_speedup.csv` + `BENCH_kernels.json` |
 //! | directional vs nested-tape operators | [`operators::run`] | `results/operator_speedup.csv` + `BENCH_operators.json` |
 //! | TCP serving load (pipelining + plan cache) | [`serve::run`] | `results/serve_load.csv` + `BENCH_serve.json` |
+//! | tracing overhead (spans + phase sampling) | [`obs::run`] | `results/obs_overhead.csv` + `BENCH_obs.json` |
 //!
 //! Absolute times differ from the paper (single CPU host vs A6000 GPU);
 //! the *shapes* — exponential vs quasilinear in `n`, crossover at small
@@ -25,6 +26,7 @@ pub mod grid;
 #[cfg(feature = "reference-oracle")]
 pub mod kernels;
 pub mod memory;
+pub mod obs;
 pub mod operators;
 pub mod parallel;
 pub mod passes;

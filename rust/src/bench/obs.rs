@@ -1,0 +1,373 @@
+//! `bench obs`: tracing-overhead bench of the fused forward
+//! (`ntangent bench obs`, `results/obs_overhead.csv`; `--json
+//! BENCH_obs.json` writes the committed baseline document).
+//!
+//! For each derivative order on the `BENCH_kernels.json` reference shape
+//! (B = 4096, width 64, depth 4, tanh) it times the fused `forward_n`
+//! twice — tracing off, then tracing on with kernel-phase sampling at
+//! the configured stride — and reports the relative overhead plus the
+//! per-phase nanosecond breakdown the sampled tiles accumulated
+//! ([`crate::obs::kernel_phase_totals`]).
+//!
+//! Before any timing, the traced output is checked **bitwise** against
+//! the untraced one: the observability contract says instrumentation
+//! never touches the float path, so an overhead number measured on
+//! different numbers would mean the contract is broken, not that the
+//! tracer is slow. The acceptance bar is `max_overhead_pct ≤ 2`.
+
+use crate::nn::Mlp;
+use crate::ntp::{ActivationKind, NtpEngine};
+use crate::obs;
+use crate::tensor::Tensor;
+use crate::util::csv::Table;
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use crate::util::stats::Summary;
+use crate::util::timer::time_trials;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// The overhead budget `bench obs` holds the tracer to (percent).
+pub const OVERHEAD_BUDGET_PCT: f64 = 2.0;
+
+/// Configuration of the tracing-overhead bench.
+#[derive(Clone, Debug)]
+pub struct ObsBenchConfig {
+    /// Hidden width.
+    pub width: usize,
+    /// Hidden depth.
+    pub depth: usize,
+    /// Hidden activation.
+    pub activation: ActivationKind,
+    /// Batch size of the timed forwards.
+    pub batch: usize,
+    /// Derivative orders to sweep.
+    pub orders: Vec<usize>,
+    /// Kernel-phase sampling stride of the traced leg.
+    pub kernel_sample: u32,
+    /// Untimed warmup trials per leg.
+    pub warmup: usize,
+    /// Timed trials per leg.
+    pub trials: usize,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for ObsBenchConfig {
+    fn default() -> Self {
+        // The BENCH_kernels reference shape, so the overhead numbers are
+        // read against the same cells as the kernel-speedup baseline.
+        ObsBenchConfig {
+            width: 64,
+            depth: 4,
+            activation: ActivationKind::Tanh,
+            batch: 4096,
+            orders: vec![4, 6, 8],
+            kernel_sample: 16,
+            warmup: 2,
+            trials: 10,
+            seed: 23,
+        }
+    }
+}
+
+impl ObsBenchConfig {
+    /// The CI smoke shape: same legs, checks and schema, seconds budget.
+    pub fn smoke() -> ObsBenchConfig {
+        ObsBenchConfig {
+            batch: 512,
+            orders: vec![4, 6],
+            warmup: 1,
+            trials: 3,
+            ..ObsBenchConfig::default()
+        }
+    }
+}
+
+/// One measured derivative order.
+#[derive(Clone, Debug)]
+pub struct ObsCell {
+    /// Derivative order.
+    pub n: usize,
+    /// Batch size.
+    pub batch: usize,
+    /// Mean seconds per fused forward, tracing disabled.
+    pub untraced_s: f64,
+    /// Mean seconds per fused forward, tracing + phase sampling enabled.
+    pub traced_s: f64,
+    /// Sampled nanoseconds per kernel phase over the traced trials
+    /// (`(name, ns)`, phases with data only).
+    pub phase_ns: Vec<(&'static str, u64)>,
+    /// Tiles swept by the traced trials.
+    pub tiles: u64,
+    /// Tiles actually sampled (every `kernel_sample`-th).
+    pub samples: u64,
+}
+
+impl ObsCell {
+    /// Traced-over-untraced overhead in percent (can be slightly
+    /// negative in the noise floor).
+    pub fn overhead_pct(&self) -> f64 {
+        if self.untraced_s > 0.0 {
+            (self.traced_s / self.untraced_s - 1.0) * 100.0
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The worst overhead across the sweep — the acceptance number.
+pub fn max_overhead_pct(cells: &[ObsCell]) -> f64 {
+    cells
+        .iter()
+        .map(ObsCell::overhead_pct)
+        .fold(f64::NEG_INFINITY, f64::max)
+}
+
+fn mean_s(ts: &[f64]) -> f64 {
+    Summary::of(ts).mean
+}
+
+/// Snapshot the cumulative kernel-phase counters as a map (the bench
+/// works in before/after deltas so it never resets the global registry).
+fn phase_counters() -> (BTreeMap<&'static str, u64>, u64, u64) {
+    let (phases, tiles, samples) = obs::kernel_phase_totals();
+    (phases.into_iter().collect(), tiles, samples)
+}
+
+/// Run the order sweep (bitwise-checking traced vs untraced output
+/// before each timed cell).
+pub fn run(cfg: &ObsBenchConfig, progress: impl Fn(&str)) -> Vec<ObsCell> {
+    let was_enabled = obs::enabled();
+    let was_sample = obs::kernel_sample();
+    let mut rng = Prng::seeded(cfg.seed);
+    let mlp = Mlp::uniform_with(1, cfg.width, cfg.depth, 1, cfg.activation, &mut rng);
+    let x = Tensor::rand_uniform(&[cfg.batch, 1], -1.0, 1.0, &mut rng);
+    let mut out = Vec::new();
+    for &n in &cfg.orders {
+        progress(&format!("obs cell n={n} B={}", cfg.batch));
+        let eng = NtpEngine::new(n);
+
+        // Bitwise identity first: an overhead measured on different
+        // floats would mean the no-touch contract is broken.
+        obs::set_enabled(false);
+        let want = eng.forward_n(&mlp, &x, n);
+        obs::set_enabled(true);
+        obs::set_kernel_sample(cfg.kernel_sample);
+        let got = eng.forward_n(&mlp, &x, n);
+        for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+            for (&ea, &eb) in a.data().iter().zip(b.data()) {
+                assert!(
+                    ea.to_bits() == eb.to_bits(),
+                    "traced forward diverged bitwise at n={n} channel {k}"
+                );
+            }
+        }
+
+        obs::set_enabled(false);
+        let untraced_s = mean_s(&time_trials(cfg.warmup, cfg.trials, || {
+            std::hint::black_box(eng.forward_n(&mlp, &x, n));
+        }));
+
+        obs::set_enabled(true);
+        let (before, tiles0, samples0) = phase_counters();
+        let traced_s = mean_s(&time_trials(cfg.warmup, cfg.trials, || {
+            std::hint::black_box(eng.forward_n(&mlp, &x, n));
+        }));
+        let (after, tiles1, samples1) = phase_counters();
+        let phase_ns: Vec<(&'static str, u64)> = obs::KERNEL_PHASES
+            .iter()
+            .filter_map(|&name| {
+                let d = after.get(name).copied().unwrap_or(0)
+                    - before.get(name).copied().unwrap_or(0);
+                (d > 0).then_some((name, d))
+            })
+            .collect();
+
+        out.push(ObsCell {
+            n,
+            batch: cfg.batch,
+            untraced_s,
+            traced_s,
+            phase_ns,
+            tiles: tiles1 - tiles0,
+            samples: samples1 - samples0,
+        });
+    }
+    obs::set_enabled(was_enabled);
+    obs::set_kernel_sample(was_sample);
+    out
+}
+
+/// One row per order, phases as fixed columns (0 when unsampled).
+pub fn table(cells: &[ObsCell]) -> Table {
+    let mut cols = vec![
+        "n",
+        "batch",
+        "untraced_s",
+        "traced_s",
+        "overhead_pct",
+        "tiles",
+        "samples",
+    ];
+    cols.extend(obs::KERNEL_PHASES.iter().map(|&p| match p {
+        "pack" => "pack_ns",
+        "tower" => "tower_ns",
+        "powers" => "powers_ns",
+        "interpret" => "interpret_ns",
+        "unpack" => "unpack_ns",
+        _ => "gemm_ns",
+    }));
+    let mut t = Table::new(&cols);
+    for c in cells {
+        let mut row = vec![
+            c.n.to_string(),
+            c.batch.to_string(),
+            format!("{:.6e}", c.untraced_s),
+            format!("{:.6e}", c.traced_s),
+            format!("{:.3}", c.overhead_pct()),
+            c.tiles.to_string(),
+            c.samples.to_string(),
+        ];
+        for &name in &obs::KERNEL_PHASES {
+            let ns = c
+                .phase_ns
+                .iter()
+                .find(|(p, _)| *p == name)
+                .map_or(0, |&(_, ns)| ns);
+            row.push(ns.to_string());
+        }
+        t.push(row);
+    }
+    t
+}
+
+/// Write `obs_overhead.csv`.
+pub fn save(cells: &[ObsCell], dir: &Path) -> std::io::Result<()> {
+    table(cells).save(&dir.join("obs_overhead.csv"))
+}
+
+/// The `BENCH_obs.json` document: config + per-order results + the
+/// worst-case overhead against the committed budget.
+pub fn to_json(cfg: &ObsBenchConfig, cells: &[ObsCell]) -> Json {
+    let results: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            let phases = Json::obj(
+                c.phase_ns
+                    .iter()
+                    .map(|&(name, ns)| (name, Json::Num(ns as f64)))
+                    .collect(),
+            );
+            Json::obj(vec![
+                ("n", Json::Num(c.n as f64)),
+                ("untraced_s", Json::Num(c.untraced_s)),
+                ("traced_s", Json::Num(c.traced_s)),
+                ("overhead_pct", Json::Num(c.overhead_pct())),
+                ("tiles", Json::Num(c.tiles as f64)),
+                ("samples", Json::Num(c.samples as f64)),
+                ("phases_ns", phases),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::Str("obs".into())),
+        (
+            "config",
+            Json::obj(vec![
+                ("batch", Json::Num(cfg.batch as f64)),
+                ("width", Json::Num(cfg.width as f64)),
+                ("depth", Json::Num(cfg.depth as f64)),
+                ("activation", Json::Str(cfg.activation.name().into())),
+                ("kernel_sample", Json::Num(cfg.kernel_sample as f64)),
+                ("trials", Json::Num(cfg.trials as f64)),
+            ]),
+        ),
+        ("results", Json::Arr(results)),
+        ("max_overhead_pct", Json::Num(max_overhead_pct(cells))),
+        ("budget_pct", Json::Num(OVERHEAD_BUDGET_PCT)),
+    ])
+}
+
+/// Write the `BENCH_obs.json` document to `path`.
+pub fn save_json(cfg: &ObsBenchConfig, cells: &[ObsCell], path: &Path) -> std::io::Result<()> {
+    std::fs::write(path, to_json(cfg, cells).dump() + "\n")
+}
+
+/// Human-readable summary for the CLI.
+pub fn summarize(cells: &[ObsCell]) -> String {
+    let mut out = String::from("tracing overhead of the fused forward (mean seconds)\n");
+    for c in cells {
+        out.push_str(&format!(
+            "  B={:<6} n={}  untraced {:>10.1} µs  traced {:>10.1} µs  ({:+.2}%)  \
+             {} tiles, {} sampled\n",
+            c.batch,
+            c.n,
+            c.untraced_s * 1e6,
+            c.traced_s * 1e6,
+            c.overhead_pct(),
+            c.tiles,
+            c.samples
+        ));
+        if !c.phase_ns.is_empty() {
+            let total: u64 = c.phase_ns.iter().map(|&(_, ns)| ns).sum();
+            let shares: Vec<String> = c
+                .phase_ns
+                .iter()
+                .map(|&(name, ns)| {
+                    format!("{name} {:.0}%", ns as f64 / total.max(1) as f64 * 100.0)
+                })
+                .collect();
+            out.push_str(&format!("           phase split: {}\n", shares.join(", ")));
+        }
+    }
+    out.push_str(&format!(
+        "  worst overhead {:+.2}% (budget {:.1}%)\n",
+        max_overhead_pct(cells),
+        OVERHEAD_BUDGET_PCT
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_obs_bench_produces_csv_and_json() {
+        let _g = obs::test_guard();
+        let cfg = ObsBenchConfig {
+            width: 8,
+            depth: 2,
+            batch: 64,
+            orders: vec![2, 3],
+            kernel_sample: 4,
+            warmup: 0,
+            trials: 1,
+            ..ObsBenchConfig::default()
+        };
+        let cells = run(&cfg, |_| {});
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert!(c.untraced_s > 0.0 && c.traced_s > 0.0);
+            assert!(c.overhead_pct().is_finite());
+            assert!(c.tiles > 0 && c.samples > 0, "traced leg must sample tiles");
+        }
+        let t = table(&cells);
+        assert_eq!(t.rows.len(), 2);
+        assert!(summarize(&cells).contains("tracing overhead"));
+        let dir = std::env::temp_dir().join("ntangent_test_obs_bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        save(&cells, &dir).unwrap();
+        assert!(dir.join("obs_overhead.csv").exists());
+        let jpath = dir.join("BENCH_obs.json");
+        save_json(&cfg, &cells, &jpath).unwrap();
+        let doc = Json::parse(std::fs::read_to_string(&jpath).unwrap().trim()).unwrap();
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("obs"));
+        assert_eq!(
+            doc.get("results").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(2)
+        );
+        assert!(doc.get("max_overhead_pct").and_then(Json::as_f64).is_some());
+    }
+}

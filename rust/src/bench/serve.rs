@@ -27,6 +27,7 @@ use crate::coordinator::{
 };
 use crate::nn::Mlp;
 use crate::ntp::{ActivationKind, ParallelPolicy};
+use crate::obs::{ns_since, ns_to_us, Histogram};
 use crate::util::csv::Table;
 use crate::util::json::Json;
 use crate::util::prng::Prng;
@@ -107,11 +108,14 @@ pub struct ServeCell {
     pub window: usize,
     /// Wall-clock seconds for the whole leg.
     pub elapsed_s: f64,
-    /// Median request latency (µs).
+    /// Median request latency (µs), quoted from the same log-scale
+    /// [`crate::obs::Histogram`] the server's stats endpoint uses — so
+    /// client-side and `{"stats":"full"}` quantiles agree to within one
+    /// bucket (~±9.5%) by construction.
     pub p50_us: f64,
-    /// 95th-percentile request latency (µs).
+    /// 95th-percentile request latency (µs, bucketed as above).
     pub p95_us: f64,
-    /// 99th-percentile request latency (µs).
+    /// 99th-percentile request latency (µs, bucketed as above).
     pub p99_us: f64,
     /// Requests answered with an error payload (shed replies included).
     pub errors: usize,
@@ -142,12 +146,11 @@ pub fn operator_speedup(cells: &[ServeCell]) -> Option<f64> {
     Some(cached.throughput_rps() / uncached.throughput_rps())
 }
 
-fn percentile(sorted_us: &[f64], q: f64) -> f64 {
-    if sorted_us.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted_us.len() - 1) as f64 * q).round() as usize;
-    sorted_us[idx]
+/// Quote (p50, p95, p99) in µs from a latency histogram of nanoseconds.
+fn quantiles_us(hist: &Histogram) -> (f64, f64, f64) {
+    let snap = hist.snapshot();
+    let q = |p: f64| ns_to_us(snap.percentile(p).unwrap_or(0.0));
+    (q(0.50), q(0.95), q(0.99))
 }
 
 /// Spin up a loopback endpoint: a native-backend service pool plus an
@@ -189,20 +192,21 @@ enum NextRequest {
 }
 
 /// Drive `quota` pipelined requests over one persistent connection,
-/// keeping up to `window` in flight; returns (latencies µs, errors).
+/// keeping up to `window` in flight; returns (latency histogram in
+/// nanoseconds, errors).
 fn drive_connection(
     addr: &str,
     quota: usize,
     window: usize,
     mut gen: impl FnMut(&mut Prng) -> NextRequest,
     seed: u64,
-) -> (Vec<f64>, usize) {
+) -> (Histogram, usize) {
+    let latencies = Histogram::new();
     let mut rng = Prng::seeded(seed);
     let mut client = match TcpClient::connect(addr) {
         Ok(c) => c,
-        Err(_) => return (Vec::new(), quota),
+        Err(_) => return (latencies, quota),
     };
-    let mut latencies = Vec::with_capacity(quota);
     let mut errors = 0usize;
     let mut inflight: VecDeque<Instant> = VecDeque::with_capacity(window);
     let mut submitted = 0usize;
@@ -225,7 +229,7 @@ fn drive_connection(
         match client.recv_raw() {
             Ok(payload) => {
                 let t0 = inflight.pop_front().expect("response without a request");
-                latencies.push(t0.elapsed().as_secs_f64() * 1e6);
+                latencies.record(ns_since(t0));
                 if protocol::parse_error(&payload).is_some() {
                     errors += 1;
                 }
@@ -263,25 +267,25 @@ fn run_pipelined_leg(
             drive_connection(&addr, quota, window, &mut g, seed + 1000 + c as u64)
         }));
     }
-    let mut latencies = Vec::with_capacity(requests);
+    let latencies = Histogram::new();
     let mut errors = 0usize;
     for th in threads {
-        let (mut l, e) = th.join().expect("client thread panicked");
-        latencies.append(&mut l);
+        let (l, e) = th.join().expect("client thread panicked");
+        l.merge_into(&latencies);
         errors += e;
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
     let after = handle.metrics();
-    latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let (p50_us, p95_us, p99_us) = quantiles_us(&latencies);
     ServeCell {
         leg,
         requests,
         connections,
         window,
         elapsed_s,
-        p50_us: percentile(&latencies, 0.50),
-        p95_us: percentile(&latencies, 0.95),
-        p99_us: percentile(&latencies, 0.99),
+        p50_us,
+        p95_us,
+        p99_us,
         errors,
         shed: after.shed - before.shed,
         plan_hits: after.plan_hits - before.plan_hits,
@@ -378,7 +382,7 @@ pub fn run(cfg: &ServeBenchConfig, progress: impl Fn(&str)) -> Vec<ServeCell> {
     {
         let (addr, service, handle) = spawn_endpoint(&scalar_mlp, &op_mlp, 1, false);
         let before = handle.metrics();
-        let mut latencies = Vec::with_capacity(cfg.baseline_requests);
+        let latencies = Histogram::new();
         let mut errors = 0usize;
         let t0 = Instant::now();
         for _ in 0..cfg.baseline_requests {
@@ -387,22 +391,22 @@ pub fn run(cfg: &ServeBenchConfig, progress: impl Fn(&str)) -> Vec<ServeCell> {
                 .collect();
             let r0 = Instant::now();
             match TcpClient::connect(&addr).and_then(|mut c| c.eval_operator(&pts, "d20+d02")) {
-                Ok(_) => latencies.push(r0.elapsed().as_secs_f64() * 1e6),
+                Ok(_) => latencies.record(ns_since(r0)),
                 Err(_) => errors += 1,
             }
         }
         let elapsed_s = t0.elapsed().as_secs_f64();
         let after = handle.metrics();
-        latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        let (p50_us, p95_us, p99_us) = quantiles_us(&latencies);
         cells.push(ServeCell {
             leg: "operator_uncached",
             requests: cfg.baseline_requests,
             connections: 1,
             window: 1,
             elapsed_s,
-            p50_us: percentile(&latencies, 0.50),
-            p95_us: percentile(&latencies, 0.95),
-            p99_us: percentile(&latencies, 0.99),
+            p50_us,
+            p95_us,
+            p99_us,
             errors,
             shed: after.shed - before.shed,
             plan_hits: after.plan_hits - before.plan_hits,

@@ -191,6 +191,9 @@ fn serve_group(
     }
 
     // Evaluate in capacity-sized chunks, concatenating channel outputs.
+    // `batch_start` splits each request's latency into its queue-wait
+    // segment (enqueue → here) and the shared execute segment below.
+    let batch_start = Instant::now();
     let n_channels = backend.n_channels();
     let mut channels: Vec<Vec<f64>> = vec![Vec::with_capacity(flat.len()); n_channels];
     let mut error: Option<String> = None;
@@ -208,6 +211,7 @@ fn serve_group(
             }
         }
     }
+    let exec_ns = batch_start.elapsed().as_nanos() as u64;
 
     for (req, &(off, len)) in group.iter().zip(&spans) {
         let result = match &error {
@@ -220,8 +224,12 @@ fn serve_group(
                 .map(|c| c[off..off + len].to_vec())
                 .collect()),
         };
+        let queue_ns = batch_start
+            .saturating_duration_since(req.enqueued)
+            .as_nanos() as u64;
         metrics.record_request(worker, len);
-        metrics.record_latency(req.enqueued.elapsed().as_nanos() as u64);
+        metrics.record_latency_on(worker, req.enqueued.elapsed().as_nanos() as u64);
+        metrics.record_segments(queue_ns, exec_ns);
         // Receiver may have hung up; that's fine.
         let _ = req.resp.send(result);
     }

@@ -3,8 +3,19 @@
 //! A service built with [`Metrics::with_workers`] additionally tracks one
 //! [`WorkerCounters`] row per batcher worker, so the sharded pool can
 //! report how traffic distributes across activation shards.
+//!
+//! Latency is tracked as [`crate::obs::Histogram`]s — the crate's single
+//! definition of p50/p95/p99 (`bench serve` and the `{"stats":"full"}`
+//! wire reply quote the same bucketing) — split into the request's
+//! pipeline segments: total enqueue→response latency, queue wait
+//! (enqueue→batch start), execute (backend batch evaluation), and the
+//! response-write segment on the connection's writer thread. Histograms
+//! carry exact sums and maxima, so the mean/max fields of
+//! [`MetricsSnapshot`] are exact, not bucketed.
 
+use crate::obs::{Histogram, HistogramSnapshot};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Shared counters updated by the batcher loop and connection threads.
 #[derive(Default, Debug)]
@@ -19,10 +30,14 @@ pub struct Metrics {
     pub batched_points: AtomicU64,
     /// Requests answered with an error.
     pub errors: AtomicU64,
-    /// Total request latency in nanoseconds (enqueue → response).
-    pub latency_ns: AtomicU64,
-    /// Max single-request latency in nanoseconds.
-    pub latency_max_ns: AtomicU64,
+    /// Enqueue-to-response latency histogram (nanoseconds).
+    pub latency: Arc<Histogram>,
+    /// Enqueue-to-batch-start (queue wait) histogram (nanoseconds).
+    pub queue_wait: Arc<Histogram>,
+    /// Backend batch-execution histogram (nanoseconds).
+    pub execute: Arc<Histogram>,
+    /// Response-write segment histogram (nanoseconds, writer thread).
+    pub write: Arc<Histogram>,
     /// Requests shed with an `overloaded` response because the target
     /// worker's ingress queue was full.
     pub shed: AtomicU64,
@@ -46,6 +61,8 @@ pub struct WorkerCounters {
     pub batched_points: AtomicU64,
     /// Requests this worker answered with an error.
     pub errors: AtomicU64,
+    /// This worker's enqueue-to-response latency histogram (ns).
+    pub latency: Histogram,
 }
 
 /// A point-in-time copy of the counters with derived ratios.
@@ -67,10 +84,24 @@ pub struct MetricsSnapshot {
     pub plan_hits: u64,
     /// Serving-cache lookups that missed and compiled.
     pub plan_misses: u64,
-    /// Mean enqueue-to-response latency in microseconds.
+    /// Mean enqueue-to-response latency in microseconds (exact).
     pub mean_latency_us: f64,
-    /// Max enqueue-to-response latency in microseconds.
+    /// Max enqueue-to-response latency in microseconds (exact).
     pub max_latency_us: f64,
+    /// Median enqueue-to-response latency in microseconds (bucketed).
+    pub p50_latency_us: f64,
+    /// 95th-percentile latency in microseconds (bucketed).
+    pub p95_latency_us: f64,
+    /// 99th-percentile latency in microseconds (bucketed).
+    pub p99_latency_us: f64,
+    /// Full enqueue-to-response latency histogram (nanoseconds).
+    pub latency: HistogramSnapshot,
+    /// Queue-wait segment histogram (nanoseconds).
+    pub queue_wait: HistogramSnapshot,
+    /// Execute segment histogram (nanoseconds).
+    pub execute: HistogramSnapshot,
+    /// Response-write segment histogram (nanoseconds).
+    pub write: HistogramSnapshot,
     /// Average number of requests coalesced per backend call.
     pub mean_batch_fill: f64,
     /// Per-worker counter snapshots, indexed by worker id (empty when the
@@ -79,7 +110,7 @@ pub struct MetricsSnapshot {
 }
 
 /// Snapshot of one worker's counters.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct WorkerSnapshot {
     /// Requests answered by this worker.
     pub requests: u64,
@@ -89,6 +120,17 @@ pub struct WorkerSnapshot {
     pub batched_points: u64,
     /// Requests this worker answered with an error.
     pub errors: u64,
+    /// This worker's median latency in microseconds (bucketed; 0 when
+    /// the worker answered nothing).
+    pub p50_latency_us: f64,
+    /// This worker's 99th-percentile latency in microseconds (bucketed).
+    pub p99_latency_us: f64,
+    /// This worker's max latency in microseconds (exact).
+    pub max_latency_us: f64,
+}
+
+fn us(ns: f64) -> f64 {
+    ns / 1e3
 }
 
 impl Metrics {
@@ -132,10 +174,33 @@ impl Metrics {
         }
     }
 
-    /// Record one request's enqueue-to-response latency.
+    /// Record one request's enqueue-to-response latency (global
+    /// histogram only; use [`record_latency_on`](Self::record_latency_on)
+    /// from the pool to attribute it to a worker too).
     pub fn record_latency(&self, ns: u64) {
-        self.latency_ns.fetch_add(ns, Ordering::Relaxed);
-        self.latency_max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.latency.record(ns);
+    }
+
+    /// Record one request's enqueue-to-response latency against the
+    /// global histogram *and* `worker`'s row.
+    pub fn record_latency_on(&self, worker: usize, ns: u64) {
+        self.latency.record(ns);
+        if let Some(w) = self.workers.get(worker) {
+            w.latency.record(ns);
+        }
+    }
+
+    /// Record one request's queue-wait and execute segments (the batcher
+    /// splits enqueue→response into wait-in-queue and backend-batch
+    /// time).
+    pub fn record_segments(&self, queue_ns: u64, exec_ns: u64) {
+        self.queue_wait.record(queue_ns);
+        self.execute.record(exec_ns);
+    }
+
+    /// Record one response's write segment on the connection writer.
+    pub fn record_write(&self, ns: u64) {
+        self.write.record(ns);
     }
 
     /// Count one request shed with an `overloaded` response.
@@ -156,6 +221,7 @@ impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let requests = self.requests.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
+        let latency = self.latency.snapshot();
         MetricsSnapshot {
             requests,
             points: self.points.load(Ordering::Relaxed),
@@ -165,12 +231,19 @@ impl Metrics {
             shed: self.shed.load(Ordering::Relaxed),
             plan_hits: self.plan_hits.load(Ordering::Relaxed),
             plan_misses: self.plan_misses.load(Ordering::Relaxed),
-            mean_latency_us: if requests > 0 {
-                self.latency_ns.load(Ordering::Relaxed) as f64 / requests as f64 / 1e3
+            mean_latency_us: if latency.count > 0 {
+                us(latency.mean())
             } else {
                 0.0
             },
-            max_latency_us: self.latency_max_ns.load(Ordering::Relaxed) as f64 / 1e3,
+            max_latency_us: us(latency.max as f64),
+            p50_latency_us: us(latency.percentile(0.50).unwrap_or(0.0)),
+            p95_latency_us: us(latency.percentile(0.95).unwrap_or(0.0)),
+            p99_latency_us: us(latency.percentile(0.99).unwrap_or(0.0)),
+            latency,
+            queue_wait: self.queue_wait.snapshot(),
+            execute: self.execute.snapshot(),
+            write: self.write.snapshot(),
             mean_batch_fill: if batches > 0 {
                 requests as f64 / batches as f64
             } else {
@@ -179,11 +252,17 @@ impl Metrics {
             workers: self
                 .workers
                 .iter()
-                .map(|w| WorkerSnapshot {
-                    requests: w.requests.load(Ordering::Relaxed),
-                    batches: w.batches.load(Ordering::Relaxed),
-                    batched_points: w.batched_points.load(Ordering::Relaxed),
-                    errors: w.errors.load(Ordering::Relaxed),
+                .map(|w| {
+                    let lat = w.latency.snapshot();
+                    WorkerSnapshot {
+                        requests: w.requests.load(Ordering::Relaxed),
+                        batches: w.batches.load(Ordering::Relaxed),
+                        batched_points: w.batched_points.load(Ordering::Relaxed),
+                        errors: w.errors.load(Ordering::Relaxed),
+                        p50_latency_us: us(lat.percentile(0.50).unwrap_or(0.0)),
+                        p99_latency_us: us(lat.percentile(0.99).unwrap_or(0.0)),
+                        max_latency_us: us(lat.max as f64),
+                    }
                 })
                 .collect(),
         }
@@ -214,8 +293,13 @@ mod tests {
         assert_eq!(s.points, 15);
         assert_eq!(s.batches, 1);
         assert_eq!(s.mean_batch_fill, 2.0);
+        // Mean and max come from the histogram's exact sum/max.
         assert_eq!(s.mean_latency_us, 3.0);
         assert_eq!(s.max_latency_us, 4.0);
+        assert_eq!(s.latency.count, 2);
+        // Percentiles are bucketed: within ±10% of the true order stats.
+        assert!((s.p50_latency_us - 2.0).abs() / 2.0 < 0.15, "{}", s.p50_latency_us);
+        assert!((s.p99_latency_us - 4.0).abs() / 4.0 < 0.15, "{}", s.p99_latency_us);
         assert_eq!(s.errors, 0);
         // Default metrics track no per-worker rows; out-of-range worker
         // ids are silently absorbed by the totals.
@@ -227,6 +311,23 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.mean_latency_us, 0.0);
         assert_eq!(s.mean_batch_fill, 0.0);
+        assert_eq!(s.p50_latency_us, 0.0);
+        assert_eq!(s.latency.count, 0);
+    }
+
+    #[test]
+    fn segments_and_writes_fill_their_histograms() {
+        let m = Metrics::default();
+        m.record_segments(1_000, 9_000);
+        m.record_segments(2_000, 8_000);
+        m.record_write(500);
+        let s = m.snapshot();
+        assert_eq!(s.queue_wait.count, 2);
+        assert_eq!(s.queue_wait.sum, 3_000);
+        assert_eq!(s.execute.count, 2);
+        assert_eq!(s.execute.sum, 17_000);
+        assert_eq!(s.write.count, 1);
+        assert_eq!(s.write.max, 500);
     }
 
     #[test]
@@ -235,10 +336,12 @@ mod tests {
         assert_eq!(m.n_workers(), 3);
         m.record_request(0, 2);
         m.record_batch(0, 2);
+        m.record_latency_on(0, 1_000);
         m.record_request(2, 7);
         m.record_batch(2, 4);
         m.record_batch(2, 3);
         m.record_error(2);
+        m.record_latency_on(2, 8_000);
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.batches, 3);
@@ -250,6 +353,10 @@ mod tests {
         assert_eq!(s.workers[2].batches, 2);
         assert_eq!(s.workers[2].batched_points, 7);
         assert_eq!(s.workers[2].errors, 1);
+        // Latency attributed per worker: worker 1 saw nothing.
+        assert_eq!(s.workers[1].p50_latency_us, 0.0);
+        assert_eq!(s.workers[2].max_latency_us, 8.0);
+        assert_eq!(s.latency.count, 2);
         // The global rows are the sum of the per-worker rows.
         let sum: u64 = s.workers.iter().map(|w| w.batches).sum();
         assert_eq!(sum, s.batches);

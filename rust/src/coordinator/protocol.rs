@@ -6,6 +6,7 @@
 //!           `{"points_nd": [[0.1, 0.2], ...], "operator": "d20+d02"}`
 //!           `{"points_nd": [...], "operator": "...", "activation": "sin"}`
 //!           `{"cmd": "stats"}`
+//!           `{"stats": "full"}`
 //! Response: `{"channels": [[u...], [u'...], ...]}`
 //!           `{"u": [...], "operator": [...]}`
 //!           `{"error": "..."}`
@@ -197,6 +198,10 @@ pub enum WireRequest {
     },
     /// Return the service metrics snapshot.
     Stats,
+    /// Return the full observability document: the plain stats plus
+    /// latency-segment histograms, per-worker percentiles, compile-cache
+    /// occupancy and the registry counters (`{"stats": "full"}`).
+    StatsFull,
 }
 
 /// Parse the optional `activation` field of a request object.
@@ -222,6 +227,12 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
         return match cmd {
             "stats" => Ok(WireRequest::Stats),
             other => Err(format!("unknown cmd '{other}'")),
+        };
+    }
+    if let Some(detail) = v.get("stats") {
+        return match detail.as_str() {
+            Some("full") => Ok(WireRequest::StatsFull),
+            _ => Err("'stats' requests take the string \"full\"".to_string()),
         };
     }
     if let Some(rows) = v.get("points_nd") {
@@ -352,7 +363,54 @@ pub fn parse_error(line: &str) -> Option<(String, Option<u64>)> {
     Some((msg, retry_ms))
 }
 
-/// Encode a stats response (includes one object per batcher worker).
+/// The compile-cache occupancy object shared by both stats replies:
+/// engine/scalar-engine/operator entry counts from
+/// [`crate::pde::cache::cache_sizes`] plus lifetime operator evictions.
+fn cache_stats_json() -> Json {
+    let (engines, scalar_engines, operators) = crate::pde::cache::cache_sizes();
+    let (_, evictions) = crate::pde::cache::operator_cache_stats();
+    Json::obj(vec![
+        ("engines", Json::Num(engines as f64)),
+        ("scalar_engines", Json::Num(scalar_engines as f64)),
+        ("operators", Json::Num(operators as f64)),
+        ("operator_evictions", Json::Num(evictions as f64)),
+    ])
+}
+
+/// The counter fields shared by both stats replies (everything except
+/// the histogram documents and per-worker percentiles).
+fn stats_fields(s: &MetricsSnapshot, workers: Json) -> Vec<(&'static str, Json)> {
+    let reg = crate::obs::registry();
+    vec![
+        ("requests", Json::Num(s.requests as f64)),
+        ("points", Json::Num(s.points as f64)),
+        ("batches", Json::Num(s.batches as f64)),
+        ("errors", Json::Num(s.errors as f64)),
+        ("shed", Json::Num(s.shed as f64)),
+        ("plan_hits", Json::Num(s.plan_hits as f64)),
+        ("plan_misses", Json::Num(s.plan_misses as f64)),
+        ("mean_latency_us", Json::Num(s.mean_latency_us)),
+        ("max_latency_us", Json::Num(s.max_latency_us)),
+        ("p50_latency_us", Json::Num(s.p50_latency_us)),
+        ("p95_latency_us", Json::Num(s.p95_latency_us)),
+        ("p99_latency_us", Json::Num(s.p99_latency_us)),
+        ("mean_batch_fill", Json::Num(s.mean_batch_fill)),
+        (
+            "operator_requests",
+            Json::Num(reg.counter("serve_operator_requests").get() as f64),
+        ),
+        (
+            "operator_errors",
+            Json::Num(reg.counter("serve_operator_errors").get() as f64),
+        ),
+        ("cache", cache_stats_json()),
+        ("workers", workers),
+    ]
+}
+
+/// Encode a stats response (includes one object per batcher worker,
+/// the bucketed latency percentiles, compile-cache occupancy and the
+/// operator-path request counters).
 pub fn encode_stats(s: &MetricsSnapshot) -> String {
     let workers = Json::Arr(
         s.workers
@@ -367,23 +425,46 @@ pub fn encode_stats(s: &MetricsSnapshot) -> String {
             })
             .collect(),
     );
-    Json::obj(vec![(
-        "stats",
-        Json::obj(vec![
-            ("requests", Json::Num(s.requests as f64)),
-            ("points", Json::Num(s.points as f64)),
-            ("batches", Json::Num(s.batches as f64)),
-            ("errors", Json::Num(s.errors as f64)),
-            ("shed", Json::Num(s.shed as f64)),
-            ("plan_hits", Json::Num(s.plan_hits as f64)),
-            ("plan_misses", Json::Num(s.plan_misses as f64)),
-            ("mean_latency_us", Json::Num(s.mean_latency_us)),
-            ("max_latency_us", Json::Num(s.max_latency_us)),
-            ("mean_batch_fill", Json::Num(s.mean_batch_fill)),
-            ("workers", workers),
-        ]),
-    )])
-    .dump()
+    Json::obj(vec![("stats", Json::obj(stats_fields(s, workers)))]).dump()
+}
+
+/// Encode the `{"stats":"full"}` reply: every plain-stats field plus the
+/// four latency-segment histogram documents (total / queue-wait /
+/// execute / write, each with occupied buckets and p50/p95/p99),
+/// per-worker latency percentiles, and the sorted
+/// [`crate::obs`] registry counters (cache hit/miss families, kernel
+/// phase totals, …).
+pub fn encode_stats_full(s: &MetricsSnapshot) -> String {
+    let workers = Json::Arr(
+        s.workers
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("requests", Json::Num(w.requests as f64)),
+                    ("batches", Json::Num(w.batches as f64)),
+                    ("batched_points", Json::Num(w.batched_points as f64)),
+                    ("errors", Json::Num(w.errors as f64)),
+                    ("p50_latency_us", Json::Num(w.p50_latency_us)),
+                    ("p99_latency_us", Json::Num(w.p99_latency_us)),
+                    ("max_latency_us", Json::Num(w.max_latency_us)),
+                ])
+            })
+            .collect(),
+    );
+    let mut fields = stats_fields(s, workers);
+    fields.push(("latency", s.latency.to_json()));
+    fields.push(("queue_wait", s.queue_wait.to_json()));
+    fields.push(("execute", s.execute.to_json()));
+    fields.push(("write", s.write.to_json()));
+    let counters = Json::Obj(
+        crate::obs::registry()
+            .counters()
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect(),
+    );
+    fields.push(("counters", counters));
+    Json::obj(vec![("stats", Json::obj(fields))]).dump()
 }
 
 /// Decode an evaluation response (client side).
@@ -522,29 +603,32 @@ mod tests {
         assert_eq!(parse_channels(&line).unwrap_err(), "boom");
     }
 
+    /// A populated snapshot for the stats-encoding tests (driving real
+    /// `Metrics` instead of a struct literal keeps the test in sync with
+    /// the snapshot's derived histogram fields).
+    fn sample_snapshot() -> MetricsSnapshot {
+        let m = super::super::metrics::Metrics::with_workers(1);
+        m.record_request(0, 5);
+        m.record_request(0, 5);
+        m.record_request(0, 5);
+        m.record_batch(0, 10);
+        m.record_batch(0, 5);
+        m.record_latency_on(0, 12_000);
+        m.record_latency_on(0, 20_000);
+        m.record_segments(3_000, 9_000);
+        m.record_write(700);
+        m.record_shed();
+        for _ in 0..5 {
+            m.record_plan_lookup(true);
+        }
+        m.record_plan_lookup(false);
+        m.record_plan_lookup(false);
+        m.snapshot()
+    }
+
     #[test]
     fn stats_encode_mentions_fields() {
-        use super::super::metrics::WorkerSnapshot;
-        let s = MetricsSnapshot {
-            requests: 3,
-            points: 10,
-            batches: 2,
-            batched_points: 10,
-            errors: 0,
-            shed: 1,
-            plan_hits: 5,
-            plan_misses: 2,
-            mean_latency_us: 12.5,
-            max_latency_us: 20.0,
-            mean_batch_fill: 1.5,
-            workers: vec![WorkerSnapshot {
-                requests: 3,
-                batches: 2,
-                batched_points: 10,
-                errors: 0,
-            }],
-        };
-        let line = encode_stats(&s);
+        let line = encode_stats(&sample_snapshot());
         assert!(line.contains("\"requests\":3"));
         assert!(line.contains("mean_batch_fill"));
         assert!(line.contains("\"workers\""));
@@ -552,6 +636,48 @@ mod tests {
         assert!(line.contains("\"shed\":1"));
         assert!(line.contains("\"plan_hits\":5"));
         assert!(line.contains("\"plan_misses\":2"));
+        assert!(line.contains("\"p50_latency_us\""));
+        assert!(line.contains("\"cache\""));
+        assert!(line.contains("\"operator_evictions\""));
+        assert!(line.contains("\"operator_requests\""));
+        // The plain reply stays compact: no bucket documents.
+        assert!(!line.contains("\"buckets\""));
+    }
+
+    #[test]
+    fn parses_stats_full_request() {
+        assert_eq!(
+            parse_request(r#"{"stats": "full"}"#).unwrap(),
+            WireRequest::StatsFull
+        );
+        assert!(parse_request(r#"{"stats": "summary"}"#).is_err());
+        assert!(parse_request(r#"{"stats": 1}"#).is_err());
+    }
+
+    #[test]
+    fn stats_full_is_a_parseable_superset() {
+        let s = sample_snapshot();
+        let full = encode_stats_full(&s);
+        let doc = Json::parse(&full).unwrap();
+        let stats = doc.get("stats").expect("stats object");
+        // Every plain field is present…
+        for key in ["requests", "shed", "plan_hits", "mean_batch_fill", "cache"] {
+            assert!(stats.get(key).is_some(), "missing {key}");
+        }
+        // …plus the four segment histograms with self-consistent counts
+        // and percentiles that match the snapshot's quoted values.
+        for key in ["latency", "queue_wait", "execute", "write"] {
+            let h = stats.get(key).unwrap_or_else(|| panic!("missing {key}"));
+            assert!(h.get("count").and_then(Json::as_f64).is_some(), "{key}");
+            assert!(h.get("p99").and_then(Json::as_f64).is_some(), "{key}");
+        }
+        let p50_ns = stats.get("latency").unwrap().get("p50").unwrap().as_f64().unwrap();
+        let p50_us = stats.get("p50_latency_us").unwrap().as_f64().unwrap();
+        assert!((p50_ns / 1e3 - p50_us).abs() < 1e-9);
+        // Worker rows carry their percentiles.
+        let workers = stats.get("workers").and_then(Json::as_arr).unwrap();
+        assert!(workers[0].get("p99_latency_us").is_some());
+        assert!(stats.get("counters").is_some());
     }
 
     #[test]

@@ -351,7 +351,27 @@ impl OperatorServer {
     /// spec over the served model's input dim, of order ≤
     /// [`MAX_SERVED_OPERATOR_ORDER`]; `activation` optionally retags
     /// the served weights for this request.
+    ///
+    /// Every call bumps the `serve_operator_requests` (and, on failure,
+    /// `serve_operator_errors`) [`crate::obs`] registry counters, which
+    /// the stats wire replies surface as `operator_requests` /
+    /// `operator_errors`.
     pub fn eval(
+        &self,
+        points: &[Vec<f64>],
+        operator: &str,
+        activation: Option<ActivationKind>,
+    ) -> std::result::Result<(Vec<f64>, Vec<f64>), String> {
+        crate::obs::registry().counter("serve_operator_requests").inc();
+        let _span = crate::obs::span("serve.operator");
+        let out = self.eval_inner(points, operator, activation);
+        if out.is_err() {
+            crate::obs::registry().counter("serve_operator_errors").inc();
+        }
+        out
+    }
+
+    fn eval_inner(
         &self,
         points: &[Vec<f64>],
         operator: &str,
@@ -471,9 +491,10 @@ pub fn serve_connection_with(
 ) -> Result<()> {
     let writer_stream = stream.try_clone().context("cloning stream")?;
     let (tx, rx) = sync_channel::<PendingReply>(PIPELINE_WINDOW);
+    let writer_metrics = handle.metrics_handle();
     let writer = std::thread::Builder::new()
         .name("ntangent-conn-writer".to_string())
-        .spawn(move || write_replies(writer_stream, rx))
+        .spawn(move || write_replies(writer_stream, rx, writer_metrics))
         .expect("spawning connection writer");
 
     let mut reader = BufReader::new(stream);
@@ -536,6 +557,10 @@ pub fn serve_connection_with(
                 framed,
                 payload: protocol::encode_stats(&handle.metrics()),
             },
+            Ok(protocol::WireRequest::StatsFull) => PendingReply::Ready {
+                framed,
+                payload: protocol::encode_stats_full(&handle.metrics()),
+            },
             Err(e) => PendingReply::Ready {
                 framed,
                 payload: protocol::encode_error(&e),
@@ -554,7 +579,22 @@ pub fn serve_connection_with(
 /// buffering while more replies are immediately available and flushing
 /// before any blocking wait (so no completed reply is ever stuck behind
 /// an incomplete one).
-fn write_replies(stream: TcpStream, rx: Receiver<PendingReply>) {
+///
+/// Each reply's encode-and-buffer segment is recorded into a
+/// connection-local [`crate::obs::Histogram`] that folds into the
+/// service-wide `write` histogram when the connection closes (one merge
+/// per connection instead of one shared-cacheline touch per reply).
+fn write_replies(stream: TcpStream, rx: Receiver<PendingReply>, metrics: Arc<Metrics>) {
+    let conn_write = crate::obs::Histogram::new();
+    write_replies_inner(stream, rx, &conn_write);
+    conn_write.merge_into(&metrics.write);
+}
+
+fn write_replies_inner(
+    stream: TcpStream,
+    rx: Receiver<PendingReply>,
+    conn_write: &crate::obs::Histogram,
+) {
     let mut w = BufWriter::new(stream);
     loop {
         let next = match rx.try_recv() {
@@ -593,12 +633,14 @@ fn write_replies(stream: TcpStream, rx: Receiver<PendingReply>) {
                 (framed, payload)
             }
         };
+        let started = Instant::now();
         let io = if framed {
             protocol::write_frame(&mut w, &payload)
         } else {
             w.write_all(payload.as_bytes())
                 .and_then(|()| w.write_all(b"\n"))
         };
+        conn_write.record(started.elapsed().as_nanos() as u64);
         if io.is_err() {
             return; // client gone; reader unblocks on its next send
         }
@@ -759,6 +801,14 @@ impl TcpClient {
         self.submit_raw("{\"cmd\":\"stats\"}")?;
         self.recv_raw()
     }
+
+    /// Fetch the full observability document (`{"stats":"full"}` — the
+    /// plain stats plus latency-segment histograms, per-worker
+    /// percentiles, cache occupancy and registry counters) as raw JSON.
+    pub fn stats_full(&mut self) -> Result<String> {
+        self.submit_raw("{\"stats\":\"full\"}")?;
+        self.recv_raw()
+    }
 }
 
 #[cfg(test)]
@@ -852,6 +902,20 @@ mod tests {
         }
         let stats = client.stats().unwrap();
         assert!(stats.contains("\"requests\""));
+        // The full document parses and carries the segment histograms
+        // with a latency count matching the served traffic.
+        let full = client.stats_full().unwrap();
+        let doc = crate::util::json::Json::parse(&full).unwrap();
+        let stats = doc.get("stats").expect("stats object");
+        for key in ["latency", "queue_wait", "execute", "write", "cache", "counters"] {
+            assert!(stats.get(key).is_some(), "missing {key}");
+        }
+        let count = stats
+            .get("latency")
+            .and_then(|h| h.get("count"))
+            .and_then(crate::util::json::Json::as_f64)
+            .unwrap();
+        assert_eq!(count, 1.0);
         service.shutdown();
     }
 

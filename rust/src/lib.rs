@@ -72,6 +72,13 @@
 //!   always-compiled scalar fallback, `NTANGENT_SIMD` override) behind a
 //!   bitwise scalar≡vector contract; every hot loop above dispatches
 //!   through it.
+//! - [`obs`] — crate-wide observability: hierarchical tracing spans, a
+//!   unified metrics registry (counters / gauges / log-scale latency
+//!   histograms), sampled kernel-phase profiling hooks, and Prometheus /
+//!   JSON export. Off by default; `NTANGENT_TRACE=1` (or `serve --obs`,
+//!   `train --telemetry`, `ntangent trace`) enables it, and
+//!   instrumented runs stay **bitwise identical** to uninstrumented ones
+//!   (`rust/tests/obs_overhead.rs`).
 //! - [`bench`] — the harness that regenerates every figure of the paper.
 //! - [`util`] — substrates built from scratch for offline use: PRNG, JSON,
 //!   CLI parsing, stats, timers and a mini property-testing helper.
@@ -109,6 +116,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod nn;
 pub mod ntp;
+pub mod obs;
 pub mod opt;
 pub mod pde;
 pub mod pinn;

@@ -5,12 +5,14 @@
 //!   train                         train a Burgers-profile PINN, save a checkpoint
 //!   eval                          evaluate a checkpoint's derivative stack at points
 //!   serve                         run the batching derivative-evaluation service
+//!   trace                         run a traced workload and print the span tree
 //!   info                          tables, op counts and environment info
 
 #[cfg(feature = "reference-oracle")]
 use ntangent::bench::kernels;
 use ntangent::bench::{
-    grid, memory, operators, parallel, passes, profiles, serve, train_par, training,
+    grid, memory, obs as bench_obs, operators, parallel, passes, profiles, serve, train_par,
+    training,
 };
 use ntangent::coordinator::{BatcherConfig, NativeBackend, OperatorServer, PjrtBackend, Service};
 use ntangent::nn::Checkpoint;
@@ -43,6 +45,7 @@ fn main() -> ExitCode {
         "eval" => cmd_eval(&rest),
         "validate" => cmd_validate(&rest),
         "serve" => cmd_serve(&rest),
+        "trace" => cmd_trace(&rest),
         "info" => cmd_info(&rest),
         "help" | "--help" | "-h" => {
             println!("{}", top_usage());
@@ -63,11 +66,12 @@ fn top_usage() -> String {
     "ntangent — n-TangentProp reproduction (quasilinear higher-order derivatives)\n\
      \nUSAGE: ntangent <COMMAND> [OPTIONS]\n\
      \nCOMMANDS:\n\
-     \x20 bench <target>   fig1..fig10|mem|par|kernels|train-par|profiles|operators|serve|all\n\
+     \x20 bench <target>   fig1..fig10|mem|par|kernels|train-par|profiles|operators|serve|obs|all\n\
      \x20 train            train a PINN (Burgers profile, or --pde heat2d|poisson2d|...)\n\
      \x20 eval             evaluate a checkpoint at points (--operator for PDE operators)\n\
      \x20 validate         check a Burgers checkpoint against the analytic profile\n\
      \x20 serve            run the derivative-evaluation service (TCP JSON lines)\n\
+     \x20 trace            run a traced workload (forward | jet | train), print the span tree\n\
      \x20 info             show tables / op-count / environment info\n\
      \nRun `ntangent <COMMAND> --help` for options."
         .to_string()
@@ -97,10 +101,11 @@ fn bench_specs() -> Vec<OptSpec> {
         OptSpec { name: "n", help: "derivative order (par)", takes_value: true, default: None },
         OptSpec { name: "chunk", help: "collocation rows per shard (train-par)", takes_value: true, default: None },
         OptSpec { name: "points", help: "residual collocation points (train-par)", takes_value: true, default: None },
-        OptSpec { name: "smoke", help: "CI-sized kernel bench (kernels)", takes_value: false, default: None },
-        OptSpec { name: "batch", help: "batch size (kernels)", takes_value: true, default: None },
-        OptSpec { name: "orders", help: "comma list of derivative orders (kernels)", takes_value: true, default: None },
-        OptSpec { name: "json", help: "also write a BENCH_*.json to this path (kernels, operators, serve)", takes_value: true, default: None },
+        OptSpec { name: "smoke", help: "CI-sized bench shape (kernels, operators, serve, obs)", takes_value: false, default: None },
+        OptSpec { name: "batch", help: "batch size (kernels, obs)", takes_value: true, default: None },
+        OptSpec { name: "orders", help: "comma list of derivative orders (kernels, obs)", takes_value: true, default: None },
+        OptSpec { name: "sample", help: "kernel-phase sampling stride (obs)", takes_value: true, default: None },
+        OptSpec { name: "json", help: "also write a BENCH_*.json to this path (kernels, operators, serve, obs)", takes_value: true, default: None },
         OptSpec { name: "requests", help: "mixed-leg request count (serve)", takes_value: true, default: None },
         OptSpec { name: "connections", help: "concurrent pipelined connections (serve)", takes_value: true, default: None },
         OptSpec { name: "window", help: "in-flight requests per connection (serve)", takes_value: true, default: None },
@@ -118,7 +123,7 @@ fn cmd_bench(raw: &[String]) -> Result<(), String> {
     let target = args
         .positional()
         .first()
-        .ok_or("bench needs a target (fig1..fig10, mem, par, kernels, train-par, profiles, operators, serve, all)")?
+        .ok_or("bench needs a target (fig1..fig10, mem, par, kernels, train-par, profiles, operators, serve, obs, all)")?
         .clone();
     let out_dir = PathBuf::from(args.get("out-dir").unwrap());
     std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
@@ -126,7 +131,7 @@ fn cmd_bench(raw: &[String]) -> Result<(), String> {
     let targets: Vec<String> = if target == "all" {
         [
             "fig1", "fig4", "fig6", "fig8", "fig9", "fig7", "fig10", "mem", "par", "kernels",
-            "train-par", "operators", "serve",
+            "train-par", "operators", "serve", "obs",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -451,6 +456,51 @@ fn run_bench_target(target: &str, args: &Args, out_dir: &Path) -> Result<(), Str
             }
             println!("{}", serve::summarize(&cells));
         }
+        "obs" => {
+            let mut cfg = if args.flag("smoke") {
+                bench_obs::ObsBenchConfig::smoke()
+            } else {
+                bench_obs::ObsBenchConfig::default()
+            };
+            if let Some(v) = args.get_usize("batch")? {
+                cfg.batch = v.max(1);
+            }
+            if let Some(v) = args.get_usize_list("orders")? {
+                cfg.orders = v;
+            }
+            if let Some(v) = args.get_usize("width")? {
+                cfg.width = v;
+            }
+            if let Some(v) = args.get_usize("depth")? {
+                cfg.depth = v;
+            }
+            if let Some(v) = args.get("activation") {
+                cfg.activation = parse_activation(v)?;
+            }
+            if let Some(v) = args.get_usize("trials")? {
+                cfg.trials = v;
+            }
+            if let Some(v) = args.get_usize("sample")? {
+                cfg.kernel_sample = v.max(1) as u32;
+            }
+            eprintln!(
+                "[bench] obs: traced vs untraced fused forward, {}x{} {} net, B={}, n {:?}, \
+                 sampling every {} tiles",
+                cfg.depth,
+                cfg.width,
+                cfg.activation.name(),
+                cfg.batch,
+                cfg.orders,
+                cfg.kernel_sample
+            );
+            let cells = bench_obs::run(&cfg, |msg| eprintln!("[bench] {msg}"));
+            bench_obs::save(&cells, out_dir).map_err(|e| e.to_string())?;
+            if let Some(p) = args.get("json") {
+                bench_obs::save_json(&cfg, &cells, Path::new(p)).map_err(|e| e.to_string())?;
+                eprintln!("[bench] wrote {p}");
+            }
+            println!("{}", bench_obs::summarize(&cells));
+        }
         "profiles" => {
             let k = args.get_usize("profile")?.unwrap_or(2);
             let threads = args
@@ -549,6 +599,7 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "resume", help: "resume a checkpoint written with --checkpoint-every (needs the original profile/config/seed flags)", takes_value: true, default: None },
         OptSpec { name: "max-retries", help: "bounded divergence rollbacks before a clean abort", takes_value: true, default: Some("3") },
         OptSpec { name: "no-guard", help: "disable the per-step numeric-health guards", takes_value: false, default: None },
+        OptSpec { name: "telemetry", help: "stream one JSON line per optimizer step to this path (loss, grad norm, λ, retries, timings)", takes_value: true, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &specs)?;
@@ -575,6 +626,7 @@ fn cmd_train(raw: &[String]) -> Result<(), String> {
         max_retries: args.get_usize("max-retries")?.unwrap() as u64,
         checkpoint_every,
         checkpoint_path: (checkpoint_every > 0).then(|| out.clone()),
+        telemetry_path: args.get("telemetry").map(PathBuf::from),
         ..ResilienceConfig::default()
     };
     // `Checkpoint::load` validates shapes and finiteness, so a truncated
@@ -936,12 +988,16 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "workers", help: "batcher workers (activation shards)", takes_value: true, default: Some("1") },
         OptSpec { name: "queue-depth", help: "bounded ingress queue per worker (full = shed with retry_ms)", takes_value: true, default: Some("1024") },
         OptSpec { name: "threads", help: "per-batch parallelism: serial | auto | N", takes_value: true, default: Some("serial") },
+        OptSpec { name: "obs", help: "enable tracing spans (also NTANGENT_TRACE=1); inspect via {\"stats\":\"full\"}", takes_value: false, default: None },
         OptSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &specs)?;
     if args.flag("help") {
         println!("{}", usage("serve", "Run the derivative-evaluation service", &specs));
         return Ok(());
+    }
+    if args.flag("obs") {
+        ntangent::obs::set_enabled(true);
     }
     let ck = Checkpoint::load(Path::new(args.get("checkpoint").unwrap()))
         .map_err(|e| e.to_string())?;
@@ -1008,7 +1064,8 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
          ({workers} worker(s), {policy:?} batch parallelism, \
          queue depth {} per worker; framed or line-delimited JSON, pipelined; \
          {{\"points\":[..]}}, \
-         {{\"points_nd\":[[..],..],\"operator\":\"d20+d02\"}} or {{\"cmd\":\"stats\"}})",
+         {{\"points_nd\":[[..],..],\"operator\":\"d20+d02\"}}, \
+         {{\"cmd\":\"stats\"}} or {{\"stats\":\"full\"}})",
         cfg.queue_depth
     );
     ntangent::coordinator::service::serve_tcp_with(
@@ -1017,6 +1074,116 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         Some(operator_server),
     )
     .map_err(|e| e.to_string())
+}
+
+// ------------------------------------------------------------------ trace
+
+/// `ntangent trace <forward|jet|train>`: run a small representative
+/// workload with tracing enabled, then print the hierarchical span tree
+/// and the sampled kernel-phase breakdown (`--json` dumps the full
+/// registry + span snapshot instead).
+fn cmd_trace(raw: &[String]) -> Result<(), String> {
+    let specs = vec![
+        OptSpec { name: "n", help: "derivative order", takes_value: true, default: Some("4") },
+        OptSpec { name: "batch", help: "batch size of the traced forwards", takes_value: true, default: Some("256") },
+        OptSpec { name: "width", help: "network width", takes_value: true, default: Some("24") },
+        OptSpec { name: "depth", help: "hidden layers", takes_value: true, default: Some("3") },
+        OptSpec { name: "repeats", help: "workload repetitions (forward, jet)", takes_value: true, default: Some("8") },
+        OptSpec { name: "adam-epochs", help: "Adam epochs (train)", takes_value: true, default: Some("40") },
+        OptSpec { name: "lbfgs-epochs", help: "L-BFGS epochs (train)", takes_value: true, default: Some("20") },
+        OptSpec { name: "sample", help: "kernel-phase sampling stride", takes_value: true, default: Some("16") },
+        OptSpec { name: "seed", help: "rng seed", takes_value: true, default: Some("0") },
+        OptSpec { name: "json", help: "print the JSON snapshot (registry + spans) instead of the tree", takes_value: false, default: None },
+        OptSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &specs)?;
+    if args.flag("help") {
+        println!("{}", usage("trace <target>", "Trace a workload and print the span tree", &specs));
+        return Ok(());
+    }
+    let target = args
+        .positional()
+        .first()
+        .ok_or("trace needs a target (forward | jet | train)")?
+        .clone();
+    ntangent::obs::ObsConfig {
+        enabled: true,
+        kernel_sample: args.get_usize("sample")?.unwrap().max(1) as u32,
+    }
+    .apply();
+    ntangent::obs::reset_spans();
+
+    let n = args.get_usize("n")?.unwrap().max(1);
+    let batch = args.get_usize("batch")?.unwrap().max(1);
+    let width = args.get_usize("width")?.unwrap().max(1);
+    let depth = args.get_usize("depth")?.unwrap().max(1);
+    let repeats = args.get_usize("repeats")?.unwrap().max(1);
+    let seed = args.get_usize("seed")?.unwrap() as u64;
+    let mut rng = ntangent::util::prng::Prng::seeded(seed);
+    match target.as_str() {
+        "forward" => {
+            let mlp = ntangent::nn::Mlp::uniform(1, width, depth, 1, &mut rng);
+            let x = Tensor::rand_uniform(&[batch, 1], -1.0, 1.0, &mut rng);
+            let engine = NtpEngine::new(n);
+            eprintln!("[trace] {repeats} fused forward_n passes, B={batch}, n={n}");
+            for _ in 0..repeats {
+                std::hint::black_box(engine.forward_n(&mlp, &x, n));
+            }
+        }
+        "jet" => {
+            let dim = 2;
+            let mlp = ntangent::nn::Mlp::uniform(dim, width, depth, 1, &mut rng);
+            let x = Tensor::rand_uniform(&[batch, dim], -1.0, 1.0, &mut rng);
+            let engine = ntangent::ntp::multi::MultiJetEngine::new(dim, n);
+            eprintln!("[trace] {repeats} directional jet sets, B={batch}, dim={dim}, n={n}");
+            for _ in 0..repeats {
+                std::hint::black_box(engine.jet(&mlp, &x).value().data()[0]);
+            }
+        }
+        "train" => {
+            let cfg = TrainConfig {
+                width,
+                depth,
+                seed,
+                adam_epochs: args.get_usize("adam-epochs")?.unwrap(),
+                lbfgs_epochs: args.get_usize("lbfgs-epochs")?.unwrap(),
+                ..TrainConfig::default()
+            };
+            let spec = BurgersLossSpec::for_profile(1);
+            eprintln!(
+                "[trace] profile-1 training, {} + {} epochs",
+                cfg.adam_epochs, cfg.lbfgs_epochs
+            );
+            let result = ntangent::pinn::train_burgers_resilient(
+                spec,
+                &cfg,
+                DerivEngine::Ntp,
+                &ResilienceConfig::default(),
+                None,
+            );
+            eprintln!("[trace] final loss {:.3e}", result.final_loss);
+        }
+        other => return Err(format!("unknown trace target '{other}' (forward | jet | train)")),
+    }
+
+    if args.flag("json") {
+        println!("{}", ntangent::obs::export::json_snapshot().dump());
+        return Ok(());
+    }
+    print!("{}", ntangent::obs::span::render_tree());
+    let (phases, tiles, samples) = ntangent::obs::kernel_phase_totals();
+    if !phases.is_empty() {
+        println!("kernel phases ({samples} of {tiles} tiles sampled):");
+        let total: u64 = phases.iter().map(|&(_, ns)| ns).sum();
+        for (name, ns) in &phases {
+            println!(
+                "  {name:>10}  {:>10.3} ms  ({:>4.1}%)",
+                *ns as f64 / 1e6,
+                *ns as f64 / total.max(1) as f64 * 100.0
+            );
+        }
+    }
+    Ok(())
 }
 
 // ------------------------------------------------------------------- info

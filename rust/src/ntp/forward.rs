@@ -53,6 +53,7 @@
 use super::activation::{ActivationKind, SmoothActivation};
 use super::bell::{FaaDiBruno, FdbProgram};
 use crate::nn::Mlp;
+use crate::obs::{KernelPhase, PhaseAccum};
 use crate::simd::Isa;
 use crate::tensor::linalg::matmul_nt_block_into_with;
 use crate::tensor::Tensor;
@@ -372,6 +373,7 @@ impl NtpEngine {
             x.shape()[1],
             "network input dim must match the point dim"
         );
+        let _span = crate::obs::span("ntp.forward_directional");
         let batch = x.shape()[0];
         let workers = self.policy.workers_for(batch);
         if workers <= 1 {
@@ -425,6 +427,10 @@ impl NtpEngine {
     /// ```
     pub fn forward_n(&self, mlp: &Mlp, x: &Tensor, n: usize) -> Vec<Tensor> {
         self.check_forward_args(mlp, x, n);
+        // Caller-level span only: worker threads spawned below carry no
+        // spans (fresh thread-local stacks per call would allocate in the
+        // warm path); their cost shows up in the kernel-phase counters.
+        let _span = crate::obs::span("ntp.forward_n");
         let workers = self.policy.workers_for(x.shape()[0]);
         if workers <= 1 {
             self.forward_chunk_pooled(mlp, x, n)
@@ -605,6 +611,11 @@ impl NtpEngine {
         let prog = &self.program;
         let isa = self.isa;
         let nch = n + 1;
+        // Sampled kernel-phase profiling (crate::obs). The accumulator
+        // only reads clocks and stack-local integers — it never touches
+        // the float planes — so traced output is bitwise identical to
+        // untraced output; disabled, it costs one branch per tile.
+        let mut acc = PhaseAccum::new();
 
         // Tile plane bases: towers first, then the program's operand
         // planes (channels + powers), then the ξ accumulators (a spare
@@ -626,17 +637,20 @@ impl NtpEngine {
                 let mut t0 = 0;
                 while t0 < plane {
                     let len = TILE.min(plane - t0);
+                    let mut pt = acc.tile();
                     // Pack this tile's channel slices contiguously.
                     for k in 0..nch {
                         let dst = (ch_base + k) * TILE;
                         let src = k * plane + t0;
                         tile[dst..dst + len].copy_from_slice(&cur[src..src + len]);
                     }
+                    acc.lap(&mut pt, KernelPhase::Pack);
                     // Activation tower σ^{(0..=n)}(y0) into the tower planes.
                     {
                         let (towers, operands) = tile.split_at_mut(ch_base * TILE);
                         act.tower_into(&operands[..len], n, towers, TILE, isa);
                     }
+                    acc.lap(&mut pt, KernelPhase::Tower);
                     // Channel powers y_j^c, built plane-by-plane in L1.
                     {
                         let operands = &mut tile[ch_base * TILE..xi_base * TILE];
@@ -648,6 +662,7 @@ impl NtpEngine {
                             isa.mul_into(&mut hi[..len], a, b);
                         }
                     }
+                    acc.lap(&mut pt, KernelPhase::Powers);
                     // ξ_i = Σ_{p∈P(i)} C_p σ^{(|p|)}(y0) Π_j y_j^{p_j}
                     // (eq. 5b), interpreted from the compiled program with
                     // everything tile-resident.
@@ -695,6 +710,7 @@ impl NtpEngine {
                             }
                         }
                     }
+                    acc.lap(&mut pt, KernelPhase::Interpret);
                     // Unpack: σ(y0) becomes channel 0, ξ_i channel i.
                     nxt[t0..t0 + len].copy_from_slice(&tile[..len]);
                     for i in 1..=n {
@@ -702,6 +718,7 @@ impl NtpEngine {
                         nxt[i * plane + t0..i * plane + t0 + len]
                             .copy_from_slice(&tile[so..so + len]);
                     }
+                    acc.lap(&mut pt, KernelPhase::Unpack);
                     t0 += len;
                 }
             }
@@ -709,6 +726,7 @@ impl NtpEngine {
             // ---- stacked-channel GEMM: all n+1 channels in one matmul,
             // bias entering channel 0's rows only ----
             {
+                let mut gt = acc.start();
                 let a = &scratch.stack_nxt[..nch * plane];
                 let c = &mut scratch.stack_cur[..nch * batch * w_out];
                 matmul_nt_block_into_with(isa, a, layer.w.data(), c, nch * batch, w_in, w_out);
@@ -718,9 +736,11 @@ impl NtpEngine {
                         isa.add_assign(row, bd);
                     }
                 }
+                acc.lap(&mut gt, KernelPhase::Gemm);
             }
             width = w_out;
         }
+        acc.flush();
 
         // The stacked planes of the final layer are the output channels.
         let plane = batch * width;

@@ -508,6 +508,7 @@ impl MultiJetEngine {
             self.plan.dim(),
             "network input dim must match the plan"
         );
+        let _span = crate::obs::span("ntp.multi.jet");
         let batch = x.shape()[0];
         let dim = self.plan.dim();
         let dirs = self.plan.directions();

@@ -421,6 +421,7 @@ impl StdeEngine {
         assert_eq!(x.rank(), 2, "x must be [B, dim]");
         assert_eq!(x.shape()[1], self.plan.dim, "point dim must match the plan");
         assert_eq!(mlp.input_dim(), self.plan.dim, "network input dim must match the plan");
+        let _span = crate::obs::span("ntp.stde.estimate");
         let samples = sample_terms(&self.cfg, self.op.terms().len(), step, 0);
         let sop = sampled_operator(&self.op, &samples);
         self.apply_sampled(mlp, x, &sop)

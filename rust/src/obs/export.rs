@@ -1,0 +1,135 @@
+//! Export surfaces for the registry and span tree: Prometheus text
+//! exposition and a JSON snapshot.
+//!
+//! Both render the same data: every registered counter, gauge and
+//! histogram (see [`super::registry`]) plus, in the JSON form, the
+//! hierarchical span tree. The Prometheus form follows the text
+//! exposition format (`# TYPE` lines, cumulative `le` buckets, `_sum` /
+//! `_count`), with every metric prefixed `ntangent_`.
+
+use super::registry::{registry, HistogramSnapshot};
+use super::span::{span_report, SpanNodeReport};
+use crate::util::json::Json;
+
+/// Render every registered metric in the Prometheus text exposition
+/// format. Histogram buckets are emitted cumulatively with their
+/// inclusive upper bounds as `le` labels (occupied buckets only, plus
+/// `+Inf`).
+pub fn prometheus() -> String {
+    let reg = registry();
+    let mut out = String::new();
+    for (name, v) in reg.counters() {
+        out.push_str(&format!("# TYPE ntangent_{name} counter\n"));
+        out.push_str(&format!("ntangent_{name} {v}\n"));
+    }
+    for (name, v) in reg.gauges() {
+        out.push_str(&format!("# TYPE ntangent_{name} gauge\n"));
+        out.push_str(&format!("ntangent_{name} {v}\n"));
+    }
+    for (name, snap) in reg.histograms() {
+        out.push_str(&format!("# TYPE ntangent_{name} histogram\n"));
+        let mut cum = 0u64;
+        for (lower, count) in snap.occupied() {
+            cum += count;
+            // `lower` is the bucket's inclusive lower bound; the next
+            // bucket's lower bound is this one's exclusive upper, so it
+            // serves as the Prometheus `le` boundary.
+            out.push_str(&format!(
+                "ntangent_{name}_bucket{{le=\"{lower}\"}} {cum}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "ntangent_{name}_bucket{{le=\"+Inf\"}} {}\n",
+            snap.count
+        ));
+        out.push_str(&format!("ntangent_{name}_sum {}\n", snap.sum));
+        out.push_str(&format!("ntangent_{name}_count {}\n", snap.count));
+    }
+    out
+}
+
+fn span_json(n: &SpanNodeReport) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(n.name.to_string())),
+        ("count", Json::Num(n.count as f64)),
+        ("total_ns", Json::Num(n.total_ns as f64)),
+        (
+            "children",
+            Json::Arr(n.children.iter().map(span_json).collect()),
+        ),
+    ])
+}
+
+fn hist_json(pairs: Vec<(String, HistogramSnapshot)>) -> Json {
+    Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(name, snap)| (name, snap.to_json()))
+            .collect(),
+    )
+}
+
+/// JSON snapshot of the whole observability state: counters, gauges,
+/// histograms (with p50/p95/p99 and occupied buckets) and the span
+/// tree. The payload behind `ntangent trace … --json`.
+pub fn json_snapshot() -> Json {
+    let reg = registry();
+    let counters = Json::Obj(
+        reg.counters()
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect(),
+    );
+    let gauges = Json::Obj(
+        reg.gauges()
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("counters", counters),
+        ("gauges", gauges),
+        ("histograms", hist_json(reg.histograms())),
+        (
+            "spans",
+            Json::Arr(span_report().iter().map(span_json).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prometheus_renders_all_families() {
+        registry().counter("export_test_counter").add(3);
+        registry().gauge("export_test_gauge").set(7);
+        let h = registry().histogram("export_test_hist");
+        h.record(1000);
+        h.record(2000);
+        let text = prometheus();
+        assert!(text.contains("# TYPE ntangent_export_test_counter counter"));
+        assert!(text.contains("ntangent_export_test_gauge 7"));
+        assert!(text.contains("# TYPE ntangent_export_test_hist histogram"));
+        assert!(text.contains("ntangent_export_test_hist_count 2"));
+        assert!(text.contains("ntangent_export_test_hist_sum 3000"));
+        assert!(text.contains("le=\"+Inf\"} 2"));
+    }
+
+    #[test]
+    fn json_snapshot_parses_back() {
+        registry().counter("export_json_counter").inc();
+        let v = Json::parse(&json_snapshot().dump()).expect("snapshot is valid JSON");
+        assert!(v.get("counters").is_some());
+        assert!(v.get("histograms").is_some());
+        assert!(v.get("spans").is_some());
+        assert!(
+            v.get("counters")
+                .and_then(|c| c.get("export_json_counter"))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0)
+                >= 1.0
+        );
+    }
+}

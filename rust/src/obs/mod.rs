@@ -1,0 +1,356 @@
+//! Crate-wide observability: hierarchical spans, a unified metrics
+//! registry, and kernel-phase profiling hooks.
+//!
+//! Everything in this module obeys one contract, enforced by
+//! `rust/tests/obs_overhead.rs`:
+//!
+//! > **Instrumentation never touches the float path.** Spans and metrics
+//! > only read monotonic clocks and bump `AtomicU64`s; they never read or
+//! > write a numeric buffer that feeds a computation. An instrumented run
+//! > is therefore **bitwise identical** to an uninstrumented one, for
+//! > every [`crate::ntp::ParallelPolicy`] and both estimator modes.
+//!
+//! The subsystem has three pieces:
+//!
+//! - [`span`] — hierarchical scoped timers on thread-local span stacks.
+//!   [`span::span`] returns a RAII guard; nesting builds a global span
+//!   *tree* aggregated by `(parent, name)` with lock-free counters on the
+//!   warm path. Disabled (the default), a span is a single relaxed atomic
+//!   load.
+//! - [`registry`] — process-wide named counters, gauges and fixed-bucket
+//!   log-scale histograms with lock-free `AtomicU64` buckets. One
+//!   histogram type defines p50/p95/p99 everywhere: the serving metrics,
+//!   `bench serve`, and the `{"stats":"full"}` wire reply all quote it.
+//! - [`export`] — Prometheus text exposition and a JSON snapshot of the
+//!   registry plus the span tree.
+//!
+//! Tracing is enabled by `NTANGENT_TRACE=1` (read once per process),
+//! programmatically via [`set_enabled`] / [`ObsConfig`], or by the CLI
+//! flags (`serve --obs`, `ntangent trace …`). Kernel-phase sampling
+//! inside the fused tile loop is bounded by recording only every
+//! [`kernel_sample`]-th tile (`NTANGENT_TRACE_SAMPLE`, default 16), which
+//! keeps the measured overhead of a fully traced fused forward under the
+//! 2% budget pinned by `BENCH_obs.json` (`ntangent bench obs`).
+
+pub mod export;
+pub mod registry;
+pub mod span;
+
+pub use registry::{registry, Counter, Gauge, Histogram, HistogramSnapshot, Registry};
+pub use span::{reset_spans, span, span_depth, span_report, ScopedSpan, SpanNodeReport};
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::Once;
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static KERNEL_SAMPLE: AtomicU32 = AtomicU32::new(16);
+static INIT: Once = Once::new();
+
+fn init_from_env() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("NTANGENT_TRACE") {
+            let on = matches!(v.as_str(), "1" | "true" | "on" | "yes");
+            ENABLED.store(on, Ordering::Relaxed);
+        }
+        if let Ok(v) = std::env::var("NTANGENT_TRACE_SAMPLE") {
+            if let Ok(k) = v.parse::<u32>() {
+                KERNEL_SAMPLE.store(k.max(1), Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+/// Is tracing enabled? One relaxed atomic load on the warm path (the
+/// `NTANGENT_TRACE` environment variable is consulted once per process).
+#[inline]
+pub fn enabled() -> bool {
+    init_from_env();
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable or disable tracing for the whole process (CLI flags and tests;
+/// overrides whatever `NTANGENT_TRACE` said).
+pub fn set_enabled(on: bool) {
+    init_from_env();
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Record a kernel-phase sample every `k`-th tile (≥ 1).
+pub fn set_kernel_sample(k: u32) {
+    init_from_env();
+    KERNEL_SAMPLE.store(k.max(1), Ordering::Relaxed);
+}
+
+/// Current kernel-phase sampling stride.
+#[inline]
+pub fn kernel_sample() -> u32 {
+    init_from_env();
+    KERNEL_SAMPLE.load(Ordering::Relaxed)
+}
+
+/// Programmatic observability configuration (the struct form of the
+/// `NTANGENT_TRACE` / `NTANGENT_TRACE_SAMPLE` environment knobs).
+#[derive(Clone, Copy, Debug)]
+pub struct ObsConfig {
+    /// Master switch: spans, kernel-phase sampling, serving segments.
+    pub enabled: bool,
+    /// Kernel-phase sampling stride (record every k-th tile).
+    pub kernel_sample: u32,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            enabled: false,
+            kernel_sample: 16,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Apply this configuration process-wide.
+    pub fn apply(&self) {
+        set_enabled(self.enabled);
+        set_kernel_sample(self.kernel_sample);
+    }
+}
+
+// --------------------------------------------------------------- kernel
+
+/// The six phases of the fused n-TangentProp tile kernel
+/// (`rust/src/ntp/forward.rs`), in sweep order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum KernelPhase {
+    /// Channel slices copied into the interleaved tile.
+    Pack = 0,
+    /// Activation derivative tower σ⁽⁰˙˙ⁿ⁾(y₀).
+    Tower = 1,
+    /// Channel power planes y_jᶜ.
+    Powers = 2,
+    /// Compiled Faà di Bruno interpreter (the ξ accumulation).
+    Interpret = 3,
+    /// Tile results copied back out to the channel planes.
+    Unpack = 4,
+    /// Stacked-channel GEMM + bias (once per layer, not per tile).
+    Gemm = 5,
+}
+
+/// Phase names, indexed by `KernelPhase as usize`.
+pub const KERNEL_PHASES: [&str; 6] = ["pack", "tower", "powers", "interpret", "unpack", "gemm"];
+
+/// Metric-name table for the per-phase counters, indexed like
+/// [`KERNEL_PHASES`] — registered lazily on first flush.
+const PHASE_METRIC: [&str; 6] = [
+    "kernel_pack_ns",
+    "kernel_tower_ns",
+    "kernel_powers_ns",
+    "kernel_interpret_ns",
+    "kernel_unpack_ns",
+    "kernel_gemm_ns",
+];
+
+fn phase_label(p: usize) -> &'static str {
+    match p {
+        0 => "pack",
+        1 => "tower",
+        2 => "powers",
+        3 => "interpret",
+        4 => "unpack",
+        _ => "gemm",
+    }
+}
+
+/// A per-call accumulator for sampled kernel-phase timings.
+///
+/// Created once per fused forward chunk; the tile loop asks it for a
+/// [`PhaseTimer`] per tile (live on every `kernel_sample()`-th tile, inert
+/// otherwise) and laps it between phases. All state is fixed-size and on
+/// the stack — **no allocation, no float access** — and a single
+/// [`flush`](PhaseAccum::flush) at the end of the chunk folds the sums
+/// into the global registry counters. When tracing is disabled the whole
+/// accumulator is a handful of dead branches.
+#[derive(Debug)]
+pub struct PhaseAccum {
+    ns: [u64; 6],
+    tiles: u64,
+    samples: u64,
+    every: u64,
+    active: bool,
+}
+
+impl PhaseAccum {
+    /// A fresh accumulator; captures the enable flag and sampling stride.
+    #[inline]
+    pub fn new() -> PhaseAccum {
+        let active = enabled();
+        PhaseAccum {
+            ns: [0; 6],
+            tiles: 0,
+            samples: 0,
+            every: if active { kernel_sample() as u64 } else { 1 },
+            active,
+        }
+    }
+
+    /// Start the next tile. Returns a live timer on sampled tiles, an
+    /// inert one otherwise.
+    #[inline]
+    pub fn tile(&mut self) -> PhaseTimer {
+        let idx = self.tiles;
+        self.tiles += 1;
+        if self.active && idx % self.every == 0 {
+            self.samples += 1;
+            PhaseTimer(Some(Instant::now()))
+        } else {
+            PhaseTimer(None)
+        }
+    }
+
+    /// Start a non-tile (per-layer) timer — live whenever tracing is on.
+    #[inline]
+    pub fn start(&self) -> PhaseTimer {
+        if self.active {
+            PhaseTimer(Some(Instant::now()))
+        } else {
+            PhaseTimer(None)
+        }
+    }
+
+    /// Charge the time since the timer's last lap to `phase` and restart
+    /// the timer (no-op for inert timers).
+    #[inline]
+    pub fn lap(&mut self, t: &mut PhaseTimer, phase: KernelPhase) {
+        if let Some(prev) = t.0 {
+            let now = Instant::now();
+            self.ns[phase as usize] += now.duration_since(prev).as_nanos() as u64;
+            t.0 = Some(now);
+        }
+    }
+
+    /// Fold the accumulated phase times into the global registry
+    /// (`kernel_*_ns` counters plus `kernel_tiles` / `kernel_samples`).
+    pub fn flush(self) {
+        if !self.active || self.tiles == 0 {
+            return;
+        }
+        let reg = registry();
+        for (i, &ns) in self.ns.iter().enumerate() {
+            if ns > 0 {
+                reg.counter(PHASE_METRIC[i]).add(ns);
+            }
+        }
+        reg.counter("kernel_tiles").add(self.tiles);
+        reg.counter("kernel_samples").add(self.samples);
+    }
+}
+
+impl Default for PhaseAccum {
+    fn default() -> Self {
+        PhaseAccum::new()
+    }
+}
+
+/// A phase stopwatch handed out by [`PhaseAccum`]; `None` inside means
+/// the tile was not sampled (or tracing is off) and every lap is free.
+#[derive(Debug)]
+pub struct PhaseTimer(Option<Instant>);
+
+/// Snapshot of the accumulated kernel-phase counters:
+/// `(phase name, total ns)` for each phase with data, plus
+/// `(tiles, samples)` totals.
+pub fn kernel_phase_totals() -> (Vec<(&'static str, u64)>, u64, u64) {
+    let reg = registry();
+    let mut phases = Vec::new();
+    for (i, metric) in PHASE_METRIC.iter().enumerate() {
+        let v = reg.counter(metric).get();
+        if v > 0 {
+            phases.push((phase_label(i), v));
+        }
+    }
+    (
+        phases,
+        reg.counter("kernel_tiles").get(),
+        reg.counter("kernel_samples").get(),
+    )
+}
+
+/// A tiny helper for one-shot durations outside the span tree: returns
+/// elapsed nanoseconds since `t0` as `u64` (saturating).
+#[inline]
+pub fn ns_since(t0: Instant) -> u64 {
+    t0.elapsed().as_nanos() as u64
+}
+
+/// Shared latency-unit conversion used by every surface that prints
+/// histogram data (stats wire reply, `bench serve`, `trace`).
+#[inline]
+pub fn ns_to_us(ns: f64) -> f64 {
+    ns / 1_000.0
+}
+
+/// Serializes tests that flip the process-wide enable flag or reset the
+/// registry/span tree (the flag is global, the test harness is
+/// threaded). Not part of the public API.
+#[doc(hidden)]
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static M: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    M.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_round_trips() {
+        let _g = test_guard();
+        let was = enabled();
+        let cfg = ObsConfig {
+            enabled: true,
+            kernel_sample: 7,
+        };
+        cfg.apply();
+        assert!(enabled());
+        assert_eq!(kernel_sample(), 7);
+        ObsConfig {
+            enabled: was,
+            kernel_sample: 16,
+        }
+        .apply();
+    }
+
+    #[test]
+    fn phase_accum_is_inert_when_disabled() {
+        let mut acc = PhaseAccum {
+            ns: [0; 6],
+            tiles: 0,
+            samples: 0,
+            every: 1,
+            active: false,
+        };
+        let mut t = acc.tile();
+        acc.lap(&mut t, KernelPhase::Pack);
+        assert_eq!(acc.samples, 0);
+        assert_eq!(acc.ns, [0; 6]);
+        acc.flush(); // must not register anything
+    }
+
+    #[test]
+    fn phase_accum_samples_every_kth_tile() {
+        let mut acc = PhaseAccum {
+            ns: [0; 6],
+            tiles: 0,
+            samples: 0,
+            every: 4,
+            active: true,
+        };
+        for _ in 0..16 {
+            let mut t = acc.tile();
+            acc.lap(&mut t, KernelPhase::Interpret);
+        }
+        assert_eq!(acc.tiles, 16);
+        assert_eq!(acc.samples, 4);
+    }
+}

@@ -1,0 +1,492 @@
+//! The unified metrics registry: named counters, gauges and fixed-bucket
+//! log-scale histograms, all lock-free on the record path.
+//!
+//! Every family is an `AtomicU64`-backed cell created on first use with
+//! [`Registry::counter`] / [`Registry::gauge`] / [`Registry::histogram`]
+//! and shared as an `Arc` — the registry lock is only taken to *resolve a
+//! name*, never to record. [`Histogram`] is the crate's single definition
+//! of latency percentiles: `coordinator::Metrics`, `bench serve`, and the
+//! `{"stats":"full"}` wire reply all quote the same bucketing, so p50/p95
+//! /p99 agree everywhere by construction (to within one bucket).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+// ------------------------------------------------------------- counters
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// A fresh zeroed counter.
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    /// Increment by 1.
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment by `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// Reset to zero (tests / bench legs).
+    pub fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A last-write-wins gauge (u64 semantics: sizes, depths, flags).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    /// A fresh zeroed gauge.
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    /// Set the gauge.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+// ----------------------------------------------------------- histograms
+
+/// Number of histogram buckets: exact buckets for values `0..=7`, then
+/// 4 log-scale sub-buckets per power of two across the rest of the
+/// `u64` range (≈ ±9.5% relative resolution). `8 + 61·4 = 252`, and
+/// every index is reachable — the layout has no dead buckets, so the
+/// bound functions below are total and strictly monotone.
+pub const HIST_BUCKETS: usize = 252;
+
+/// Bucket index of a recorded value (log scale, 4 buckets per octave).
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < 8 {
+        return v as usize; // exact buckets for 0..=7
+    }
+    let lz = 63 - v.leading_zeros() as usize; // floor(log2 v), ≥ 3
+    let sub = ((v >> (lz - 2)) & 0b11) as usize;
+    8 + (lz - 3) * 4 + sub
+}
+
+/// Inclusive lower bound of bucket `i` (the smallest value it holds).
+fn bucket_lower(i: usize) -> u64 {
+    if i < 8 {
+        return i as u64;
+    }
+    let lz = 3 + (i - 8) / 4; // ≤ 63 for every valid index
+    let sub = ((i - 8) % 4) as u64;
+    (4 + sub) << (lz - 2)
+}
+
+/// Exclusive upper bound of bucket `i`.
+fn bucket_upper(i: usize) -> u64 {
+    if i + 1 >= HIST_BUCKETS {
+        return u64::MAX;
+    }
+    bucket_lower(i + 1)
+}
+
+/// Representative value reported for bucket `i` (its midpoint) — what
+/// percentile queries return, so "within one bucket" is the quantile
+/// error bound.
+fn bucket_mid(i: usize) -> f64 {
+    if i < 8 {
+        return i as f64; // exact buckets
+    }
+    let lo = bucket_lower(i) as f64;
+    let hi = bucket_upper(i).min(bucket_lower(i).saturating_mul(2)) as f64;
+    (lo + hi) / 2.0
+}
+
+/// A fixed-bucket log-scale histogram with lock-free `AtomicU64`
+/// buckets. Records are wait-free (one bucket `fetch_add` plus count /
+/// sum / max updates); snapshots and percentiles read a consistent-enough
+/// relaxed view. Exact `sum` and `max` are carried alongside the buckets,
+/// so mean and max stay *exact* even though quantiles are bucketed.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// A fresh empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Number of recorded observations.
+    #[inline]
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of recorded observations.
+    #[inline]
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Exact maximum recorded observation (0 when empty).
+    #[inline]
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Fold this histogram's contents into `other` (per-connection →
+    /// global aggregation).
+    pub fn merge_into(&self, other: &Histogram) {
+        for (i, b) in self.buckets.iter().enumerate() {
+            let v = b.load(Ordering::Relaxed);
+            if v > 0 {
+                other.buckets[i].fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        other.count.fetch_add(self.count(), Ordering::Relaxed);
+        other.sum.fetch_add(self.sum(), Ordering::Relaxed);
+        other.max.fetch_max(self.max(), Ordering::Relaxed);
+    }
+
+    /// Reset all buckets and totals (tests / bench legs).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+
+    /// Consistent point-in-time copy of the histogram.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(&self.buckets) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        // Derive the count from the copied buckets so quantiles are
+        // self-consistent even if records raced the copy.
+        let count: u64 = buckets.iter().sum();
+        HistogramSnapshot {
+            buckets,
+            count,
+            sum: self.sum(),
+            max: self.max(),
+        }
+    }
+
+    /// Quantile `q ∈ [0, 1]` (bucket midpoint; `None` when empty).
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        self.snapshot().percentile(q)
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket observation counts.
+    pub buckets: [u64; HIST_BUCKETS],
+    /// Total observations (sum of `buckets`).
+    pub count: u64,
+    /// Exact sum of observations.
+    pub sum: u64,
+    /// Exact maximum observation.
+    pub max: u64,
+}
+
+impl HistogramSnapshot {
+    /// Quantile `q ∈ [0, 1]` as the midpoint of the bucket holding the
+    /// `⌈q·count⌉`-th observation (`None` when empty).
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Some(bucket_mid(i));
+            }
+        }
+        Some(bucket_mid(HIST_BUCKETS - 1))
+    }
+
+    /// Index of the bucket holding quantile `q` (`None` when empty) —
+    /// the unit the "within one bucket" acceptance bound is stated in.
+    pub fn percentile_bucket(&self, q: f64) -> Option<usize> {
+        if self.count == 0 {
+            return None;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Some(i);
+            }
+        }
+        Some(HIST_BUCKETS - 1)
+    }
+
+    /// Mean observation (exact, from the carried sum; 0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Occupied buckets as `(lower_bound, count)` pairs — the compact
+    /// wire/JSON form.
+    pub fn occupied(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_lower(i), c))
+            .collect()
+    }
+
+    /// JSON form used by the `{"stats":"full"}` reply and `bench serve`
+    /// (`count`, exact `sum`/`max`, p50/p95/p99, occupied buckets).
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .occupied()
+            .into_iter()
+            .map(|(lo, c)| Json::Arr(vec![Json::Num(lo as f64), Json::Num(c as f64)]))
+            .collect();
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum as f64)),
+            ("max", Json::Num(self.max as f64)),
+            ("p50", Json::Num(self.percentile(0.50).unwrap_or(0.0))),
+            ("p95", Json::Num(self.percentile(0.95).unwrap_or(0.0))),
+            ("p99", Json::Num(self.percentile(0.99).unwrap_or(0.0))),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+// ------------------------------------------------------------- registry
+
+/// The process-wide named-metric registry. Families are created on first
+/// use and live for the process; names are reported in sorted order.
+#[derive(Default)]
+pub struct Registry {
+    counters: RwLock<BTreeMap<String, Arc<Counter>>>,
+    gauges: RwLock<BTreeMap<String, Arc<Gauge>>>,
+    hists: RwLock<BTreeMap<String, Arc<Histogram>>>,
+}
+
+/// The process-wide [`Registry`].
+pub fn registry() -> &'static Registry {
+    static CELL: OnceLock<Registry> = OnceLock::new();
+    CELL.get_or_init(Registry::default)
+}
+
+fn get_or_create<T: Default>(map: &RwLock<BTreeMap<String, Arc<T>>>, name: &str) -> Arc<T> {
+    if let Some(v) = map.read().expect("registry poisoned").get(name) {
+        return v.clone();
+    }
+    let mut w = map.write().expect("registry poisoned");
+    w.entry(name.to_string()).or_default().clone()
+}
+
+impl Registry {
+    /// The counter named `name`, created on first use.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        get_or_create(&self.counters, name)
+    }
+
+    /// The gauge named `name`, created on first use.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        get_or_create(&self.gauges, name)
+    }
+
+    /// The histogram named `name`, created on first use.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        get_or_create(&self.hists, name)
+    }
+
+    /// Register an externally owned histogram under `name` (the
+    /// coordinator's per-worker latency histograms live inside
+    /// `Metrics` but still export through the registry).
+    pub fn register_histogram(&self, name: &str, h: Arc<Histogram>) {
+        self.hists
+            .write()
+            .expect("registry poisoned")
+            .insert(name.to_string(), h);
+    }
+
+    /// Sorted `(name, value)` snapshot of every counter.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        self.counters
+            .read()
+            .expect("registry poisoned")
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect()
+    }
+
+    /// Sorted `(name, value)` snapshot of every gauge.
+    pub fn gauges(&self) -> Vec<(String, u64)> {
+        self.gauges
+            .read()
+            .expect("registry poisoned")
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect()
+    }
+
+    /// Sorted `(name, snapshot)` of every histogram.
+    pub fn histograms(&self) -> Vec<(String, HistogramSnapshot)> {
+        self.hists
+            .read()
+            .expect("registry poisoned")
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot()))
+            .collect()
+    }
+
+    /// Zero every counter and histogram (gauges are left as-is): used
+    /// between bench legs and in tests.
+    pub fn reset(&self) {
+        for (_, c) in self.counters.read().expect("registry poisoned").iter() {
+            c.reset();
+        }
+        for (_, h) in self.hists.read().expect("registry poisoned").iter() {
+            h.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_monotone_and_total() {
+        let mut prev = 0;
+        for i in 1..HIST_BUCKETS {
+            let lo = bucket_lower(i);
+            assert!(lo > prev, "bucket {i} lower {lo} <= {prev}");
+            prev = lo;
+        }
+        // The top value lands in the top bucket — no index is dead.
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        // Every value maps into the bucket whose bounds contain it.
+        for v in [0u64, 1, 2, 3, 4, 5, 7, 8, 100, 1_000, 123_456, u64::MAX / 3, u64::MAX] {
+            let i = bucket_of(v);
+            assert!(bucket_lower(i) <= v, "v={v} i={i}");
+            assert!(v < bucket_upper(i) || i == HIST_BUCKETS - 1, "v={v} i={i}");
+        }
+    }
+
+    #[test]
+    fn histogram_mean_max_are_exact() {
+        let h = Histogram::new();
+        for v in [100u64, 200, 300, 400] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum, 1000);
+        assert_eq!(s.max, 400);
+        assert_eq!(s.mean(), 250.0);
+    }
+
+    #[test]
+    fn percentiles_land_within_one_bucket() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v * 1000); // 1µs .. 1ms in ns
+        }
+        let s = h.snapshot();
+        let p50 = s.percentile(0.50).unwrap();
+        let p99 = s.percentile(0.99).unwrap();
+        // True p50 = 500_000, p99 = 990_000; bucket resolution ≈ ±10%.
+        assert!((p50 - 500_000.0).abs() / 500_000.0 < 0.2, "p50={p50}");
+        assert!((p99 - 990_000.0).abs() / 990_000.0 < 0.2, "p99={p99}");
+        assert!(s.percentile(0.0).unwrap() <= p50);
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn merge_conserves_counts() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in [10u64, 20, 30] {
+            a.record(v);
+        }
+        for v in [40u64, 50] {
+            b.record(v);
+        }
+        a.merge_into(&b);
+        let s = b.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 150);
+        assert_eq!(s.max, 50);
+    }
+
+    #[test]
+    fn registry_names_are_shared() {
+        let c1 = registry().counter("test_registry_shared");
+        let c2 = registry().counter("test_registry_shared");
+        c1.inc();
+        c2.add(2);
+        assert_eq!(c1.get(), 3);
+        assert!(Arc::ptr_eq(&c1, &c2));
+    }
+}

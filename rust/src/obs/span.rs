@@ -1,0 +1,283 @@
+//! Hierarchical scoped spans on thread-local span stacks.
+//!
+//! [`span`] pushes a node onto the calling thread's span stack and
+//! returns a RAII [`ScopedSpan`]; dropping it (normal exit, early return
+//! **or unwind**) pops the stack and charges the elapsed monotonic time
+//! to the node. Nodes are identified by `(parent node, interned name)`,
+//! so nesting builds a process-wide span *tree*:
+//!
+//! ```text
+//! train.epoch                 600 × 1.21s
+//! ├─ pinn.shard_eval          600 × 0.96s
+//! │  └─ ntp.forward          4800 × 0.80s
+//! └─ opt.adam_step            600 × 0.11s
+//! ```
+//!
+//! Names are interned once into a fixed table (call sites pass
+//! `&'static str` literals); the warm path for an existing node is a
+//! read-locked `HashMap` hit plus two relaxed `fetch_add`s. When tracing
+//! is disabled ([`super::enabled`] is false) a span is one relaxed
+//! atomic load and the guard is inert — the float path never changes
+//! either way, so traced and untraced runs are bitwise identical.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{OnceLock, RwLock};
+use std::time::Instant;
+
+/// Sentinel parent of top-level spans.
+const ROOT: usize = usize::MAX;
+
+struct Node {
+    name: &'static str,
+    parent: usize,
+    count: AtomicU64,
+    total_ns: AtomicU64,
+}
+
+struct Tree {
+    nodes: RwLock<Vec<Node>>,
+    index: RwLock<HashMap<(usize, &'static str), usize>>,
+}
+
+fn tree() -> &'static Tree {
+    static CELL: OnceLock<Tree> = OnceLock::new();
+    CELL.get_or_init(|| Tree {
+        nodes: RwLock::new(Vec::new()),
+        index: RwLock::new(HashMap::new()),
+    })
+}
+
+thread_local! {
+    static STACK: RefCell<Vec<usize>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Resolve (or create) the node for `name` under `parent`.
+fn resolve(parent: usize, name: &'static str) -> usize {
+    let t = tree();
+    if let Some(&id) = t.index.read().expect("span index poisoned").get(&(parent, name)) {
+        return id;
+    }
+    let mut index = t.index.write().expect("span index poisoned");
+    if let Some(&id) = index.get(&(parent, name)) {
+        return id;
+    }
+    let mut nodes = t.nodes.write().expect("span nodes poisoned");
+    let id = nodes.len();
+    nodes.push(Node {
+        name,
+        parent,
+        count: AtomicU64::new(0),
+        total_ns: AtomicU64::new(0),
+    });
+    index.insert((parent, name), id);
+    id
+}
+
+/// Open a span named `name` under the calling thread's current span (or
+/// at the tree root). Returns the RAII guard that closes it; keep the
+/// guard alive for the duration of the region:
+///
+/// ```
+/// let _sp = ntangent::obs::span("docs.example");
+/// // … timed region …
+/// ```
+#[inline]
+pub fn span(name: &'static str) -> ScopedSpan {
+    if !super::enabled() {
+        return ScopedSpan { live: None };
+    }
+    let parent = STACK.with(|s| s.borrow().last().copied().unwrap_or(ROOT));
+    let node = resolve(parent, name);
+    STACK.with(|s| s.borrow_mut().push(node));
+    ScopedSpan {
+        live: Some((node, Instant::now())),
+    }
+}
+
+/// RAII guard returned by [`span`]; closes the span on drop (including
+/// during unwinding, so span stacks stay balanced under panics and early
+/// returns — see `rust/tests/obs_overhead.rs`).
+#[must_use = "a span guard times the scope it lives in; bind it to a variable"]
+pub struct ScopedSpan {
+    live: Option<(usize, Instant)>,
+}
+
+impl Drop for ScopedSpan {
+    fn drop(&mut self) {
+        let Some((node, start)) = self.live.take() else {
+            return;
+        };
+        let ns = start.elapsed().as_nanos() as u64;
+        STACK.with(|s| {
+            let mut st = s.borrow_mut();
+            debug_assert_eq!(st.last().copied(), Some(node), "span stack out of balance");
+            st.pop();
+        });
+        let nodes = tree().nodes.read().expect("span nodes poisoned");
+        // `get`, not indexing: a reset_spans() between open and close
+        // invalidates the id, and the closure is then simply dropped.
+        if let Some(n) = nodes.get(node) {
+            n.count.fetch_add(1, Ordering::Relaxed);
+            n.total_ns.fetch_add(ns, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Current depth of the calling thread's span stack (0 outside any
+/// span) — used by the balance tests.
+pub fn span_depth() -> usize {
+    STACK.with(|s| s.borrow().len())
+}
+
+/// One node of a [`span_report`] snapshot.
+#[derive(Clone, Debug)]
+pub struct SpanNodeReport {
+    /// Interned span name.
+    pub name: &'static str,
+    /// Number of times the span closed.
+    pub count: u64,
+    /// Total nanoseconds across all closures.
+    pub total_ns: u64,
+    /// Child spans, in creation order.
+    pub children: Vec<SpanNodeReport>,
+}
+
+impl SpanNodeReport {
+    fn render_into(&self, out: &mut String, prefix: &str, last: bool, top: bool) {
+        if top {
+            out.push_str(&format!(
+                "{}  {} × {:.3} ms\n",
+                self.name,
+                self.count,
+                self.total_ns as f64 / 1e6
+            ));
+        } else {
+            out.push_str(&format!(
+                "{}{}─ {}  {} × {:.3} ms\n",
+                prefix,
+                if last { "└" } else { "├" },
+                self.name,
+                self.count,
+                self.total_ns as f64 / 1e6
+            ));
+        }
+        let child_prefix = if top {
+            String::new()
+        } else {
+            format!("{}{}  ", prefix, if last { " " } else { "│" })
+        };
+        for (i, c) in self.children.iter().enumerate() {
+            c.render_into(out, &child_prefix, i + 1 == self.children.len(), false);
+        }
+    }
+}
+
+/// Snapshot the global span tree as a forest of top-level spans.
+pub fn span_report() -> Vec<SpanNodeReport> {
+    let nodes = tree().nodes.read().expect("span nodes poisoned");
+    fn build(nodes: &[Node], parent: usize) -> Vec<SpanNodeReport> {
+        nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.parent == parent)
+            .map(|(id, n)| SpanNodeReport {
+                name: n.name,
+                count: n.count.load(Ordering::Relaxed),
+                total_ns: n.total_ns.load(Ordering::Relaxed),
+                children: build(nodes, id),
+            })
+            .collect()
+    }
+    build(&nodes, ROOT)
+}
+
+/// Pretty-print the current span tree (the `ntangent trace` renderer).
+pub fn render_tree() -> String {
+    let forest = span_report();
+    if forest.is_empty() {
+        return "(no spans recorded — is tracing enabled?)\n".to_string();
+    }
+    let mut out = String::new();
+    for root in &forest {
+        root.render_into(&mut out, "", true, true);
+    }
+    out
+}
+
+/// Clear the global span tree (counts *and* structure). Only call
+/// between runs — concurrent open spans keep stale node ids, so their
+/// closures are dropped harmlessly against the fresh tree.
+pub fn reset_spans() {
+    let t = tree();
+    let mut index = t.index.write().expect("span index poisoned");
+    let mut nodes = t.nodes.write().expect("span nodes poisoned");
+    index.clear();
+    nodes.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Span tests mutate the global enable flag; serialize them (with
+    // every other flag-flipping test in the crate).
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        super::super::test_guard()
+    }
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _g = lock();
+        let was = super::super::enabled();
+        super::super::set_enabled(false);
+        {
+            let _a = span("test.disabled");
+            assert_eq!(span_depth(), 0);
+        }
+        super::super::set_enabled(was);
+    }
+
+    #[test]
+    fn nesting_builds_a_tree() {
+        let _g = lock();
+        let was = super::super::enabled();
+        super::super::set_enabled(true);
+        {
+            let _a = span("test.outer");
+            assert_eq!(span_depth(), 1);
+            {
+                let _b = span("test.inner");
+                assert_eq!(span_depth(), 2);
+            }
+            assert_eq!(span_depth(), 1);
+        }
+        assert_eq!(span_depth(), 0);
+        let report = span_report();
+        let outer = report
+            .iter()
+            .find(|n| n.name == "test.outer")
+            .expect("outer span recorded");
+        assert!(outer.count >= 1);
+        assert!(outer.children.iter().any(|c| c.name == "test.inner"));
+        let txt = render_tree();
+        assert!(txt.contains("test.outer"));
+        assert!(txt.contains("test.inner"));
+        super::super::set_enabled(was);
+    }
+
+    #[test]
+    fn guard_drop_balances_on_unwind() {
+        let _g = lock();
+        let was = super::super::enabled();
+        super::super::set_enabled(true);
+        let r = std::panic::catch_unwind(|| {
+            let _a = span("test.panic");
+            panic!("boom");
+        });
+        assert!(r.is_err());
+        assert_eq!(span_depth(), 0, "unwind must pop the span stack");
+        super::super::set_enabled(was);
+    }
+}

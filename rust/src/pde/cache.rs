@@ -20,11 +20,19 @@
 //!
 //! The operator map is the only client-influenced key space (specs are
 //! client-chosen strings), so it is capped at
-//! [`MAX_CACHED_OPERATORS`]: once full, further distinct specs are
-//! compiled per request but not inserted, bounding memory under
-//! adversarial traffic.
+//! [`MAX_CACHED_OPERATORS`]: once full, inserting a new spec **evicts**
+//! an arbitrary resident entry (counted by the
+//! `cache_operator_evictions` registry counter), bounding memory under
+//! adversarial traffic while keeping recurring specs cacheable.
+//!
+//! Every lookup also bumps per-cache hit/miss counters in the
+//! [`crate::obs`] registry (`cache_engine_*`, `cache_scalar_*`,
+//! `cache_operator_*`), so cache behaviour shows up in the Prometheus /
+//! `{"stats":"full"}` export alongside the serving-layer
+//! [`crate::coordinator::Metrics`] plan counters.
 
 use crate::ntp::{MultiJetEngine, NtpEngine, ParallelPolicy};
+use crate::obs;
 use crate::pde::{resolve_operator, DiffOperator};
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock, RwLock};
@@ -74,8 +82,10 @@ fn operators() -> &'static RwLock<OperatorMap> {
 pub fn shared_engine(dim: usize, n: usize, policy: ParallelPolicy) -> (Arc<MultiJetEngine>, bool) {
     let key = (dim, n, policy_key(policy));
     if let Some(e) = engines().read().expect("engine cache poisoned").get(&key) {
+        obs::registry().counter("cache_engine_hits").inc();
         return (e.clone(), true);
     }
+    obs::registry().counter("cache_engine_misses").inc();
     let fresh = Arc::new(MultiJetEngine::with_policy(dim, n, policy));
     let mut map = engines().write().expect("engine cache poisoned");
     (map.entry(key).or_insert(fresh).clone(), false)
@@ -87,8 +97,10 @@ pub fn shared_engine(dim: usize, n: usize, policy: ParallelPolicy) -> (Arc<Multi
 pub fn shared_scalar_engine(n: usize, policy: ParallelPolicy) -> (Arc<NtpEngine>, bool) {
     let key = (n, policy_key(policy));
     if let Some(e) = scalar_engines().read().expect("scalar engine cache poisoned").get(&key) {
+        obs::registry().counter("cache_scalar_hits").inc();
         return (e.clone(), true);
     }
+    obs::registry().counter("cache_scalar_misses").inc();
     let fresh = Arc::new(NtpEngine::with_policy(n, policy));
     let mut map = scalar_engines().write().expect("scalar engine cache poisoned");
     (map.entry(key).or_insert(fresh).clone(), false)
@@ -96,23 +108,41 @@ pub fn shared_scalar_engine(n: usize, policy: ParallelPolicy) -> (Arc<NtpEngine>
 
 /// The shared compiled [`DiffOperator`] for `(spec, dim)`; the `bool`
 /// is `true` on a hit. Parse errors are returned (never cached), and
-/// once the map holds [`MAX_CACHED_OPERATORS`] distinct specs further
-/// new specs are compiled per call without being inserted.
+/// once the map holds [`MAX_CACHED_OPERATORS`] distinct specs each new
+/// insert evicts an arbitrary resident entry (counted by the
+/// `cache_operator_evictions` registry counter), so memory stays
+/// bounded under adversarial spec traffic without freezing the cache.
 pub fn shared_operator(spec: &str, dim: usize) -> Result<(Arc<DiffOperator>, bool), String> {
     let key = (dim, spec.to_string());
     if let Some(op) = operators().read().expect("operator cache poisoned").get(&key) {
+        obs::registry().counter("cache_operator_hits").inc();
         return Ok((op.clone(), true));
     }
+    obs::registry().counter("cache_operator_misses").inc();
     let fresh = Arc::new(resolve_operator(spec, dim)?);
     let mut map = operators().write().expect("operator cache poisoned");
     if let Some(op) = map.get(&key) {
         return Ok((op.clone(), true));
     }
     if map.len() >= MAX_CACHED_OPERATORS {
-        return Ok((fresh, false));
+        // Evict an arbitrary resident entry (cheap, no LRU bookkeeping
+        // on the hot path); an Arc still held by in-flight requests
+        // stays alive until they finish.
+        if let Some(victim) = map.keys().next().cloned() {
+            map.remove(&victim);
+            obs::registry().counter("cache_operator_evictions").inc();
+        }
     }
     map.insert(key, fresh.clone());
     Ok((fresh, false))
+}
+
+/// Operator-cache observables for the stats endpoint:
+/// `(resident entries, lifetime evictions)`.
+pub fn operator_cache_stats() -> (usize, u64) {
+    let size = operators().read().expect("operator cache poisoned").len();
+    let evictions = obs::registry().counter("cache_operator_evictions").get();
+    (size, evictions)
 }
 
 /// Current entry counts `(engines, scalar_engines, operators)` —

@@ -46,6 +46,7 @@ pub mod multi;
 pub mod parallel;
 pub mod resilience;
 pub mod series;
+pub mod telemetry;
 pub(crate) mod terms;
 pub mod trainer;
 
@@ -58,6 +59,7 @@ pub use loss::{residual_derivative_nodes, BurgersLossSpec, DerivEngine, PinnObje
 pub use multi::{residual_values, residual_values_estimated, MultiObjective, MultiPinnSpec};
 pub use parallel::{ParallelObjective, DEFAULT_CHUNK_ROWS};
 pub use resilience::{FaultKind, FaultPlan, NumericError, ResilienceConfig, RunHealth};
+pub use telemetry::{StepRecord, TelemetryWriter};
 pub use trainer::{
     train_burgers, train_burgers_parallel, train_burgers_parallel_resilient,
     train_burgers_resilient, train_burgers_sharded, train_pde, train_pde_resilient,

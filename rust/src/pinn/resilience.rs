@@ -268,6 +268,11 @@ pub struct ResilienceConfig {
     pub guard: bool,
     /// Fault-injection schedule (defaults to the `NTANGENT_FAULT` hook).
     pub fault: FaultPlan,
+    /// Write one JSON line of per-step telemetry (loss, gradient norm,
+    /// retries, step timing — see [`crate::pinn::telemetry`]) per global
+    /// epoch to this path (`None` = no telemetry; the trajectory is
+    /// bitwise unaffected either way).
+    pub telemetry_path: Option<PathBuf>,
 }
 
 impl Default for ResilienceConfig {
@@ -280,6 +285,7 @@ impl Default for ResilienceConfig {
             lr_backoff: 0.5,
             guard: true,
             fault: FaultPlan::from_env(),
+            telemetry_path: None,
         }
     }
 }

@@ -1,0 +1,218 @@
+//! Per-step training telemetry: one JSON line per global epoch.
+//!
+//! The resilient schedule ([`crate::pinn::trainer`]) can stream a
+//! [`StepRecord`] per optimizer step to a JSONL file (`ntangent train
+//! --telemetry <path>`, or [`ResilienceConfig::telemetry_path`]). The
+//! writer is strictly an *observer*: it reads values the schedule
+//! already computed (loss, λ, gradient norm, retry count, timings) and
+//! never feeds anything back, so a telemetered trajectory is bitwise
+//! identical to a silent one (`rust/tests/obs_overhead.rs`).
+//!
+//! Each line is a self-contained JSON object, so the file tails cleanly
+//! mid-run and survives crashes at any line boundary (partially written
+//! final lines are skipped by [`read_jsonl`]):
+//!
+//! ```json
+//! {"step":12,"phase":"adam","loss":4.1e-3,"grad_norm":0.82,
+//!  "lambda":0.97,"retries":0,"lr_scale":1.0,"step_ms":6.4,"elapsed_s":0.08}
+//! ```
+//!
+//! Write failures degrade durability, not correctness: the first error
+//! is reported on stderr and the writer goes quiet, exactly like the
+//! checkpoint writer's failure contract.
+//!
+//! [`ResilienceConfig::telemetry_path`]: crate::pinn::ResilienceConfig::telemetry_path
+
+use crate::util::json::Json;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// One optimizer step's observables, serialized as one JSONL line.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    /// Global epoch index (Adam epochs from 0, L-BFGS continuing).
+    pub step: usize,
+    /// Schedule phase (`"adam"` / `"lbfgs"`).
+    pub phase: &'static str,
+    /// The step's loss.
+    pub loss: f64,
+    /// ℓ₂ norm of the step's gradient (for L-BFGS, the last accepted
+    /// gradient from the line search; `None` before one exists).
+    pub grad_norm: Option<f64>,
+    /// Current self-similar λ estimate.
+    pub lambda: f64,
+    /// Recovery interventions consumed so far.
+    pub retries: u64,
+    /// Deterministic learning-rate backoff factor in effect
+    /// (`lr_backoff^retries`; 1.0 on a healthy run).
+    pub lr_scale: f64,
+    /// Wall-clock duration of this step in milliseconds.
+    pub step_ms: f64,
+    /// Wall-clock seconds since the schedule started.
+    pub elapsed_s: f64,
+}
+
+impl StepRecord {
+    /// The record as one JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("step", Json::Num(self.step as f64)),
+            ("phase", Json::Str(self.phase.to_string())),
+            ("loss", Json::Num(self.loss)),
+        ];
+        if let Some(g) = self.grad_norm {
+            fields.push(("grad_norm", Json::Num(g)));
+        }
+        fields.push(("lambda", Json::Num(self.lambda)));
+        fields.push(("retries", Json::Num(self.retries as f64)));
+        fields.push(("lr_scale", Json::Num(self.lr_scale)));
+        fields.push(("step_ms", Json::Num(self.step_ms)));
+        fields.push(("elapsed_s", Json::Num(self.elapsed_s)));
+        Json::obj(fields)
+    }
+}
+
+/// A line-buffered JSONL telemetry sink. `None` path = a no-op writer
+/// (the schedule calls it unconditionally; disabled it is two branches).
+pub struct TelemetryWriter {
+    out: Option<BufWriter<File>>,
+    failed: bool,
+}
+
+impl TelemetryWriter {
+    /// A writer appending to `path`, or a no-op writer for `None`. An
+    /// unopenable path is reported on stderr and disables the writer —
+    /// a telemetry hook must never take the run down.
+    pub fn create(path: Option<&Path>) -> TelemetryWriter {
+        let out = path.and_then(|p| match File::create(p) {
+            Ok(f) => Some(BufWriter::new(f)),
+            Err(e) => {
+                eprintln!("telemetry disabled: cannot create {}: {e}", p.display());
+                None
+            }
+        });
+        TelemetryWriter { out, failed: false }
+    }
+
+    /// The no-op writer.
+    pub fn disabled() -> TelemetryWriter {
+        TelemetryWriter {
+            out: None,
+            failed: false,
+        }
+    }
+
+    /// Is this writer actually writing anywhere?
+    pub fn is_active(&self) -> bool {
+        self.out.is_some() && !self.failed
+    }
+
+    /// Append one record as a JSON line and flush it (each line is a
+    /// durable unit, like the checkpoint writer's rename contract).
+    pub fn record(&mut self, rec: &StepRecord) {
+        if self.failed {
+            return;
+        }
+        if let Some(w) = &mut self.out {
+            let line = rec.to_json().dump();
+            let io = w
+                .write_all(line.as_bytes())
+                .and_then(|()| w.write_all(b"\n"))
+                .and_then(|()| w.flush());
+            if let Err(e) = io {
+                eprintln!("telemetry disabled after write failure: {e}");
+                self.failed = true;
+            }
+        }
+    }
+}
+
+/// Parse a telemetry JSONL file back into JSON objects, skipping blank
+/// and partially-written (non-parsing) lines — the read half of the
+/// crash-safety contract, used by the CLI and CI's telemetry check.
+pub fn read_jsonl(text: &str) -> Vec<Json> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .filter_map(|l| Json::parse(l).ok())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(step: usize) -> StepRecord {
+        StepRecord {
+            step,
+            phase: "adam",
+            loss: 0.5 / (step + 1) as f64,
+            grad_norm: Some(1.25),
+            lambda: 0.96,
+            retries: 0,
+            lr_scale: 1.0,
+            step_ms: 3.5,
+            elapsed_s: 0.01 * step as f64,
+        }
+    }
+
+    #[test]
+    fn record_serializes_all_fields() {
+        let line = sample(7).to_json().dump();
+        for key in [
+            "\"step\":7",
+            "\"phase\":\"adam\"",
+            "\"loss\"",
+            "\"grad_norm\"",
+            "\"lambda\"",
+            "\"retries\"",
+            "\"lr_scale\"",
+            "\"step_ms\"",
+            "\"elapsed_s\"",
+        ] {
+            assert!(line.contains(key), "missing {key} in {line}");
+        }
+        // The gradient norm is omitted (not null) when absent.
+        let mut rec = sample(8);
+        rec.grad_norm = None;
+        assert!(!rec.to_json().dump().contains("grad_norm"));
+    }
+
+    #[test]
+    fn writer_round_trips_through_a_file() {
+        let dir = std::env::temp_dir().join(format!("ntangent-telemetry-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let mut w = TelemetryWriter::create(Some(&path));
+        assert!(w.is_active());
+        for step in 0..5 {
+            w.record(&sample(step));
+        }
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rows = read_jsonl(&text);
+        assert_eq!(rows.len(), 5);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.get("step").and_then(Json::as_usize), Some(i));
+            assert_eq!(row.get("phase").and_then(Json::as_str), Some("adam"));
+            assert!(row.get("loss").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+        // A truncated final line (simulated crash) is skipped, earlier
+        // lines still parse.
+        let truncated = format!("{text}{{\"step\":99,\"pha");
+        assert_eq!(read_jsonl(&truncated).len(), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disabled_writer_is_inert() {
+        let mut w = TelemetryWriter::disabled();
+        assert!(!w.is_active());
+        w.record(&sample(0)); // must not panic
+        let mut bad = TelemetryWriter::create(Some(Path::new(
+            "/nonexistent-ntangent-dir/trace.jsonl",
+        )));
+        assert!(!bad.is_active());
+        bad.record(&sample(0));
+    }
+}

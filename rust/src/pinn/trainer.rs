@@ -16,6 +16,7 @@ use super::loss::{BurgersLossSpec, DerivEngine, PinnObjective};
 use super::multi::{MultiObjective, MultiPinnSpec};
 use super::parallel::ParallelObjective;
 use super::resilience::{probe_step, FaultKind, NumericError, ResilienceConfig, RunHealth};
+use super::telemetry::{StepRecord, TelemetryWriter};
 use crate::nn::{AdamResume, Checkpoint, LbfgsResume, Mlp, ResumePhase, ResumeState};
 use crate::ntp::{ActivationKind, EstimatorMode, ParallelPolicy};
 use crate::opt::{Adam, Lbfgs, LbfgsStatus, Objective};
@@ -623,6 +624,10 @@ fn schedule_resilient<O: TrainableObjective>(
 
     let mut logs = Vec::new();
     let start = Instant::now();
+    // Pure observer: it reads values the schedule already computed and
+    // never feeds anything back, so the trajectory is bitwise identical
+    // with or without a telemetry path (`rust/tests/obs_overhead.rs`).
+    let mut telemetry = TelemetryWriter::create(res.telemetry_path.as_deref());
     let log = |logs: &mut Vec<EpochLog>, obj: &O, epoch, phase, loss, theta: &Tensor, force: bool| {
         if force || epoch % cfg.log_every == 0 {
             logs.push(EpochLog {
@@ -657,6 +662,7 @@ fn schedule_resilient<O: TrainableObjective>(
                 let seconds = start.elapsed().as_secs_f64();
                 return ScheduleRun { obj, theta, logs, seconds, last_loss: f64::NAN, health };
             }
+            let step_start = Instant::now();
             let (mut loss, mut grad) = obj.value_grad(&theta);
             if fault.take(FaultKind::NanLoss, epoch) {
                 loss = f64::NAN;
@@ -697,6 +703,20 @@ fn schedule_resilient<O: TrainableObjective>(
                     snap.lr_scale = lr_scale;
                     continue;
                 }
+            }
+            if telemetry.is_active() {
+                let grad_norm = grad.data().iter().map(|g| g * g).sum::<f64>().sqrt();
+                telemetry.record(&StepRecord {
+                    step: epoch,
+                    phase: "adam",
+                    loss,
+                    grad_norm: Some(grad_norm),
+                    lambda: obj.lambda_at(&theta),
+                    retries,
+                    lr_scale,
+                    step_ms: step_start.elapsed().as_secs_f64() * 1e3,
+                    elapsed_s: start.elapsed().as_secs_f64(),
+                });
             }
             log(&mut logs, &obj, epoch, "adam", loss, &theta, epoch + 1 == cfg.adam_epochs);
             epoch += 1;
@@ -739,6 +759,7 @@ fn schedule_resilient<O: TrainableObjective>(
             let seconds = start.elapsed().as_secs_f64();
             return ScheduleRun { obj, theta, logs, seconds, last_loss: f64::NAN, health };
         }
+        let step_start = Instant::now();
         let (mut loss, status) = lbfgs.step(&mut obj, &mut theta);
         if fault.take(FaultKind::NanLoss, global) {
             loss = f64::NAN;
@@ -791,6 +812,23 @@ fn schedule_resilient<O: TrainableObjective>(
             }
         }
         last_loss = loss;
+        if telemetry.is_active() {
+            telemetry.record(&StepRecord {
+                step: global,
+                phase: "lbfgs",
+                loss,
+                // L-BFGS keeps its gradient internal to the line search;
+                // the last accepted gradient's norm is the honest proxy.
+                grad_norm: lbfgs
+                    .last_grad()
+                    .map(|g| g.data().iter().map(|x| x * x).sum::<f64>().sqrt()),
+                lambda: obj.lambda_at(&theta),
+                retries,
+                lr_scale,
+                step_ms: step_start.elapsed().as_secs_f64() * 1e3,
+                elapsed_s: start.elapsed().as_secs_f64(),
+            });
+        }
         log(
             &mut logs, &obj, global, "lbfgs", loss, &theta,
             epoch + 1 == cfg.lbfgs_epochs,

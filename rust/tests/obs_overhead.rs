@@ -1,0 +1,304 @@
+//! Observability contract suite: instrumentation must never change a
+//! result.
+//!
+//! The contract (`rust/src/obs/mod.rs`): spans, metrics and kernel-phase
+//! sampling only read monotonic clocks and bump `AtomicU64`s — they never
+//! touch a float buffer. So every traced computation here is compared
+//! **bitwise** against its untraced twin: fused forwards under every
+//! [`ParallelPolicy`], whole training trajectories (with and without a
+//! telemetry stream), and stochastic STDE estimates. On top of that: the
+//! histogram must be lossless under concurrent hammering, span stacks
+//! must stay balanced across panics, and the `{"stats":"full"}` wire
+//! quantiles must land in the same log-scale bucket as a client-side
+//! histogram fed the same samples (the `bench serve` agreement bound).
+//!
+//! Tests that flip the process-wide enable flag serialize on
+//! [`obs::test_guard`] — the flag is global and the harness is threaded.
+
+use ntangent::coordinator::{protocol, Metrics};
+use ntangent::nn::Mlp;
+use ntangent::ntp::{NtpEngine, ParallelPolicy, StdeConfig, StdeEngine};
+use ntangent::obs;
+use ntangent::pde::PdeProblem;
+use ntangent::pinn::{
+    telemetry, train_burgers_parallel, train_burgers_resilient, BurgersLossSpec, DerivEngine,
+    ResilienceConfig, TrainConfig,
+};
+use ntangent::tensor::Tensor;
+use ntangent::util::json::Json;
+use ntangent::util::prng::Prng;
+use std::sync::Arc;
+
+fn policies() -> Vec<ParallelPolicy> {
+    vec![
+        ParallelPolicy::Serial,
+        ParallelPolicy::Fixed(2),
+        ParallelPolicy::Fixed(4),
+        ParallelPolicy::Auto,
+    ]
+}
+
+fn assert_bitwise(a: &Tensor, b: &Tensor, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shapes differ");
+    for (i, (&x, &y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}: element {i} differs bitwise ({x:e} vs {y:e})"
+        );
+    }
+}
+
+fn small_spec() -> BurgersLossSpec {
+    let mut spec = BurgersLossSpec::for_profile(1);
+    spec.n_res = 24;
+    spec.n_org = 8;
+    spec.x_max = 1.5;
+    spec
+}
+
+fn small_cfg() -> TrainConfig {
+    TrainConfig {
+        width: 10,
+        depth: 2,
+        adam_epochs: 25,
+        lbfgs_epochs: 8,
+        seed: 5,
+        log_every: 5,
+        ..TrainConfig::default()
+    }
+}
+
+// ------------------------------------------------- bitwise identity
+
+#[test]
+fn traced_forwards_are_bitwise_identical_for_every_policy() {
+    let _g = obs::test_guard();
+    let mut rng = Prng::seeded(11);
+    let mlp = Mlp::uniform(1, 16, 3, 1, &mut rng);
+    let x = Tensor::rand_uniform(&[64, 1], -1.0, 1.0, &mut rng);
+    let was_sample = obs::kernel_sample();
+    for policy in policies() {
+        let engine = NtpEngine::with_policy(4, policy);
+        obs::set_enabled(false);
+        let want = engine.forward_n(&mlp, &x, 4);
+        obs::set_enabled(true);
+        obs::set_kernel_sample(2); // aggressive sampling: worst case
+        let got = engine.forward_n(&mlp, &x, 4);
+        obs::set_enabled(false);
+        assert_eq!(want.len(), got.len());
+        for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_bitwise(a, b, &format!("forward_n {policy:?} channel {k}"));
+        }
+    }
+    obs::set_kernel_sample(was_sample);
+}
+
+#[test]
+fn traced_training_trajectories_are_bitwise_identical() {
+    let _g = obs::test_guard();
+    let cfg = TrainConfig {
+        policy: ParallelPolicy::Fixed(2),
+        ..small_cfg()
+    };
+    obs::set_enabled(false);
+    let plain = train_burgers_parallel(small_spec(), &cfg, DerivEngine::Ntp);
+    obs::set_enabled(true);
+    let traced = train_burgers_parallel(small_spec(), &cfg, DerivEngine::Ntp);
+    obs::set_enabled(false);
+    assert_eq!(plain.final_loss.to_bits(), traced.final_loss.to_bits());
+    assert_eq!(plain.lambda.to_bits(), traced.lambda.to_bits());
+    assert_eq!(plain.logs.len(), traced.logs.len());
+    for (a, b) in plain.logs.iter().zip(&traced.logs) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "epoch {}", a.epoch);
+        assert_eq!(a.lambda.to_bits(), b.lambda.to_bits(), "epoch {}", a.epoch);
+    }
+}
+
+#[test]
+fn traced_stde_estimates_are_bitwise_identical() {
+    let _g = obs::test_guard();
+    let problem = PdeProblem::from_name("poisson10d").expect("library problem");
+    let mut rng = Prng::seeded(7);
+    let mlp = Mlp::uniform(problem.dim(), 12, 2, 1, &mut rng);
+    let x = Tensor::rand_uniform(&[16, problem.dim()], -1.0, 1.0, &mut rng);
+    let cfg = StdeConfig {
+        seed: 3,
+        samples: 4,
+        antithetic: false,
+    };
+    for policy in policies() {
+        let engine = StdeEngine::with_policy(problem.operator(), cfg, policy);
+        obs::set_enabled(false);
+        let want = engine.estimate(&mlp, &x, 0);
+        obs::set_enabled(true);
+        let got = engine.estimate(&mlp, &x, 0);
+        obs::set_enabled(false);
+        assert_eq!(want.n_directions, got.n_directions, "{policy:?}");
+        assert_bitwise(&want.values, &got.values, &format!("stde {policy:?}"));
+    }
+}
+
+// ------------------------------------------------- telemetry observer
+
+#[test]
+fn telemetry_stream_does_not_perturb_the_trajectory() {
+    let _g = obs::test_guard();
+    obs::set_enabled(false);
+    let dir = std::env::temp_dir().join(format!("ntangent-obs-telemetry-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("steps.jsonl");
+    let cfg = small_cfg();
+
+    let silent = train_burgers_resilient(
+        small_spec(),
+        &cfg,
+        DerivEngine::Ntp,
+        &ResilienceConfig::default(),
+        None,
+    );
+    let res = ResilienceConfig {
+        telemetry_path: Some(path.clone()),
+        ..ResilienceConfig::default()
+    };
+    let streamed =
+        train_burgers_resilient(small_spec(), &cfg, DerivEngine::Ntp, &res, None);
+
+    // The trajectory is bitwise unaffected by the side-channel.
+    assert_eq!(silent.final_loss.to_bits(), streamed.final_loss.to_bits());
+    assert_eq!(silent.lambda.to_bits(), streamed.lambda.to_bits());
+    assert_eq!(silent.logs.len(), streamed.logs.len());
+    for (a, b) in silent.logs.iter().zip(&streamed.logs) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "epoch {}", a.epoch);
+    }
+
+    // One record per accepted optimizer step, every line a
+    // self-contained object. Guard retries may re-record a rolled-back
+    // epoch, so the count is bounded below, not pinned.
+    let rows = telemetry::read_jsonl(&std::fs::read_to_string(&path).unwrap());
+    assert!(
+        rows.len() >= cfg.adam_epochs,
+        "{} records for {} adam epochs",
+        rows.len(),
+        cfg.adam_epochs
+    );
+    let first = &rows[0];
+    assert_eq!(first.get("step").and_then(Json::as_usize), Some(0));
+    assert_eq!(first.get("phase").and_then(Json::as_str), Some("adam"));
+    assert!(first.get("grad_norm").and_then(Json::as_f64).unwrap() > 0.0);
+    for row in &rows {
+        assert!(row.get("loss").and_then(Json::as_f64).unwrap().is_finite());
+        assert!(row.get("lambda").and_then(Json::as_f64).is_some());
+        assert!(row.get("retries").and_then(Json::as_f64).is_some());
+        assert!(row.get("lr_scale").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(row.get("step_ms").and_then(Json::as_f64).unwrap() >= 0.0);
+    }
+    // Both phases appear.
+    assert!(rows
+        .iter()
+        .any(|r| r.get("phase").and_then(Json::as_str) == Some("lbfgs")));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------- histogram + spans
+
+#[test]
+fn histogram_is_lossless_under_concurrent_hammering() {
+    let hist = Arc::new(obs::Histogram::new());
+    let threads = 8u64;
+    let per = 10_000u64;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let h = Arc::clone(&hist);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per {
+                h.record(t * per + i + 1);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let n = threads * per;
+    let snap = hist.snapshot();
+    assert_eq!(snap.count, n, "no record lost");
+    assert_eq!(snap.sum, n * (n + 1) / 2, "exact sum conserved");
+    assert_eq!(snap.max, n, "exact max conserved");
+    assert_eq!(snap.buckets.iter().sum::<u64>(), n);
+    let p50 = snap.percentile(0.50).unwrap();
+    let p95 = snap.percentile(0.95).unwrap();
+    let p99 = snap.percentile(0.99).unwrap();
+    assert!(p50 <= p95 && p95 <= p99);
+    // Bucket midpoints approximate the true quantiles to bucket width.
+    assert!((p50 / (n as f64 / 2.0) - 1.0).abs() < 0.2, "p50 {p50}");
+}
+
+#[test]
+fn span_stack_stays_balanced_across_panics() {
+    let _g = obs::test_guard();
+    obs::set_enabled(true);
+    let r = std::panic::catch_unwind(|| {
+        let _outer = obs::span("overhead.outer");
+        let _inner = obs::span("overhead.inner");
+        assert_eq!(obs::span_depth(), 2);
+        panic!("boom");
+    });
+    assert!(r.is_err());
+    assert_eq!(obs::span_depth(), 0, "unwind must pop both spans");
+    // Tracing still works after the unwind.
+    {
+        let _s = obs::span("overhead.after");
+        assert_eq!(obs::span_depth(), 1);
+    }
+    assert!(obs::span_report()
+        .iter()
+        .any(|n| n.name == "overhead.after"));
+    obs::set_enabled(false);
+}
+
+// ------------------------------------------------- wire agreement
+
+#[test]
+fn wire_stats_and_client_histograms_agree_within_one_bucket() {
+    // `bench serve` quotes client-side latencies from the same log-scale
+    // histogram type the server's stats endpoint uses; feed both ends
+    // one latency population and the quoted quantiles must land in the
+    // same bucket (the unit the acceptance bound is stated in).
+    let metrics = Metrics::with_workers(1);
+    let client = obs::Histogram::new();
+    let mut state = 0x9E37_79B9_7F4A_7C15u64;
+    for _ in 0..4096 {
+        state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        let ns = 10_000 + state % 10_000_000; // 10 µs .. 10 ms
+        metrics.record_latency_on(0, ns);
+        client.record(ns);
+    }
+    let server = metrics.snapshot();
+    let client_snap = client.snapshot();
+    for q in [0.50, 0.95, 0.99] {
+        let sb = server.latency.percentile_bucket(q).unwrap();
+        let cb = client_snap.percentile_bucket(q).unwrap();
+        assert!(
+            sb.abs_diff(cb) <= 1,
+            "q={q}: server bucket {sb} vs client bucket {cb}"
+        );
+    }
+
+    // And the `{"stats":"full"}` reply quotes exactly the histogram's
+    // own numbers.
+    let line = protocol::encode_stats_full(&server);
+    let doc = Json::parse(&line).expect("stats_full parses");
+    let stats = doc.get("stats").expect("stats envelope");
+    let p50_wire = stats
+        .get("latency")
+        .and_then(|l| l.get("p50"))
+        .and_then(Json::as_f64)
+        .expect("stats.latency.p50 present");
+    assert_eq!(
+        p50_wire.to_bits(),
+        server.latency.percentile(0.50).unwrap().to_bits()
+    );
+    let p50_us = stats.get("p50_latency_us").and_then(Json::as_f64).unwrap();
+    assert_eq!(p50_us.to_bits(), (p50_wire / 1e3).to_bits());
+}
